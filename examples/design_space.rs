@@ -1,0 +1,38 @@
+//! Design-space exploration example: a reduced Fig. 13 sweep.
+//!
+//! ```bash
+//! cargo run --release --example design_space
+//! ```
+//!
+//! Explores two networks across three architecture classes (single-core,
+//! homogeneous quad-core, heterogeneous quad-core), optimizing EDP with
+//! the GA under both layer-by-layer and layer-fused scheduling, and
+//! prints the EDP matrix with the fused-vs-LBL reduction factors —
+//! the qualitative shape of the paper's Fig. 13 at example scale.
+
+use stream::allocator::GaParams;
+use stream::experiments::{exploration_sweep, SweepConfig};
+use stream::experiments::fig13::{format_fig13, format_fig14, format_fig15};
+
+fn main() {
+    let cfg = SweepConfig {
+        workloads: vec!["resnet18".into(), "squeezenet".into()],
+        archs: vec!["sc-tpu".into(), "hom-tpu".into(), "hetero".into()],
+        ga: GaParams { population: 16, generations: 10, ..Default::default() },
+        lines: vec![1, 4],
+    };
+    println!(
+        "sweeping {} workloads x {} architectures (GA pop {}, {} gens)...\n",
+        cfg.workloads.len(),
+        cfg.archs.len(),
+        cfg.ga.population,
+        cfg.ga.generations
+    );
+    let t = std::time::Instant::now();
+    let cells = exploration_sweep(&cfg);
+    println!("sweep finished in {:.1} s\n", t.elapsed().as_secs_f64());
+
+    println!("-- Fig. 13 (EDP) --\n{}", format_fig13(&cells));
+    println!("-- Fig. 14 (latency at best-EDP) --\n{}", format_fig14(&cells));
+    println!("-- Fig. 15 (energy breakdown) --\n{}", format_fig15(&cells));
+}

@@ -1,0 +1,96 @@
+//! End-to-end driver: Stream schedules the ResNet-18 first segment on
+//! the DIANA-like heterogeneous model, and the PJRT runtime *executes*
+//! the resulting layer-fused schedule numerically from the AOT-compiled
+//! XLA artifacts — verifying that the fused execution order Stream
+//! produced computes exactly the same tensor as the layer-by-layer
+//! baseline and as the Python oracle.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example fused_resnet_segment
+//! ```
+//!
+//! This is the composition proof for the full three-layer stack:
+//! L1 Pallas kernels -> L2 JAX segment -> AOT HLO artifacts ->
+//! L3 Rust scheduler + PJRT execution (Python never on this path).
+
+use stream::arch::presets;
+use stream::cn::CnGranularity;
+use stream::cost::{fmt_bytes, fmt_cycles, fmt_energy};
+use stream::pipeline::{SchedulePriority, Stream, StreamOpts};
+use stream::runtime::{Runtime, SegmentExecutor};
+use stream::workload::models;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1) model + schedule with Stream (cost-model world) ---
+    let workload = models::tiny_segment(); // 112x112 artifact geometry
+    let arch = presets::diana();
+    let s = Stream::new(
+        workload.clone(),
+        arch.clone(),
+        StreamOpts {
+            granularity: CnGranularity::Lines(4),
+            priority: SchedulePriority::Latency,
+            ga: stream::allocator::GaParams {
+                population: 16,
+                generations: 10,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let r = s.run().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let best = r.best_edp().expect("nonempty front");
+    let m = &best.result.metrics;
+    println!(
+        "Stream schedule on {}: latency {} | energy {} | peak mem {}",
+        arch.name,
+        fmt_cycles(m.latency_cc),
+        fmt_energy(m.energy_pj),
+        fmt_bytes(m.peak_mem_bytes)
+    );
+    println!("{}", stream::viz::gantt(&best.result, &workload, &arch, 90));
+
+    // --- 2) translate the schedule into a CN execution order ---
+    // CN ids are deterministic for a (workload, granularity) pair, so
+    // rebuilding the CN set gives the id -> (layer, idx) mapping.
+    let gran = CnGranularity::Lines(4).for_arch(&arch);
+    let cns = stream::cn::CnSet::build(&workload, gran);
+    let mut placed = best.result.cns.clone();
+    placed.sort_by_key(|p| (p.start, p.end));
+    let order: Vec<(usize, usize)> = placed
+        .iter()
+        .map(|p| {
+            let node = cns.node(p.cn);
+            (node.layer.0, node.idx)
+        })
+        .collect();
+
+    // --- 3) execute the order numerically on the PJRT runtime ---
+    let art_dir = std::env::var("STREAM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let mut rt = Runtime::new(&art_dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let exec = SegmentExecutor::new(&rt)?;
+
+    let t = std::time::Instant::now();
+    let lbl = exec.run_layer_by_layer(&mut rt)?;
+    let d_lbl = exec.verify(&lbl, 1e-3)?;
+    println!(
+        "layer-by-layer baseline: max|diff| = {d_lbl:.2e} vs python oracle ({:.0} ms)",
+        t.elapsed().as_secs_f64() * 1e3
+    );
+
+    let t = std::time::Instant::now();
+    let fused = exec.run_fused(&mut rt, &order)?;
+    let d_fused = exec.verify(&fused, 1e-3)?;
+    println!(
+        "Stream fused schedule ({} CNs): max|diff| = {d_fused:.2e} vs python oracle ({:.0} ms)",
+        order.len(),
+        t.elapsed().as_secs_f64() * 1e3
+    );
+
+    let cross = fused.max_abs_diff(&lbl);
+    println!("fused vs layer-by-layer: max|diff| = {cross:.2e}");
+    assert!(cross < 1e-3);
+    println!("\nall three agree: Stream's fused schedule is executable and exact ✓");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: schedule a tiny CNN on a dual-core accelerator.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the whole Stream pipeline on a 5-layer branchy network: CN
+//! splitting, R-tree dependency generation, intra-core cost extraction,
+//! GA allocation, multi-core scheduling — then prints the schedule as an
+//! ASCII Gantt chart next to the layer-by-layer baseline.
+
+use stream::allocator::GaParams;
+use stream::arch::presets;
+use stream::cn::CnGranularity;
+use stream::cost::{fmt_bytes, fmt_cycles, fmt_energy};
+use stream::pipeline::{Stream, StreamOpts};
+use stream::workload::models;
+
+fn main() {
+    let workload = models::tiny_branchy();
+    let arch = presets::test_dual();
+    println!(
+        "workload `{}`: {} layers, {:.2} MMAC",
+        workload.name,
+        workload.len(),
+        workload.total_macs() as f64 / 1e6
+    );
+    println!("architecture `{}`: {} cores\n", arch.name, arch.cores.len());
+
+    let ga = GaParams { population: 16, generations: 10, ..Default::default() };
+
+    for (label, gran) in [
+        ("layer-by-layer", CnGranularity::LayerByLayer),
+        ("layer-fused (2 lines/CN)", CnGranularity::Lines(2)),
+    ] {
+        let s = Stream::new(
+            workload.clone(),
+            arch.clone(),
+            StreamOpts { granularity: gran, ga, ..Default::default() },
+        );
+        let r = s.run().expect("pipeline");
+        let best = r.best_edp().expect("nonempty");
+        let m = &best.result.metrics;
+        println!("== {label}: {} CNs, {} edges ==", r.n_cns, r.n_edges);
+        println!(
+            "   latency {} | energy {} | peak mem {} | EDP {:.3e}",
+            fmt_cycles(m.latency_cc),
+            fmt_energy(m.energy_pj),
+            fmt_bytes(m.peak_mem_bytes),
+            m.edp()
+        );
+        println!("{}", stream::viz::gantt(&best.result, &workload, &arch, 80));
+    }
+}

@@ -1,0 +1,27 @@
+//! Hardware validation example: the paper's Table I as a runnable
+//! program.
+//!
+//! ```bash
+//! cargo run --release --example validate_hw
+//! ```
+//!
+//! Models the three measured SotA accelerators (DepFiN, the 4x4 AiMC
+//! array of Jia et al., and DIANA), schedules the workloads each chip
+//! was measured with (fixed allocation, latency priority) and prints
+//! Stream's modeled latency / peak memory against the paper's published
+//! measurements.
+
+use stream::experiments::{table1, table1::format_table};
+
+fn main() {
+    let t = std::time::Instant::now();
+    let rows = table1();
+    println!("{}", format_table(&rows));
+    for r in &rows {
+        println!(
+            "{:<10} modeled in {:>7.1} ms (paper framework runtime: 2-5 s)",
+            r.arch, r.runtime_ms
+        );
+    }
+    println!("\ntotal validation runtime: {:.1} s", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,167 @@
+"""AOT pipeline: lower every L2 entry point to HLO **text** artifacts.
+
+Python runs exactly once (``make artifacts``); the Rust coordinator then
+loads ``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and
+executes them on the PJRT CPU client.  Python is never on the request
+path.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly.  (See
+/opt/xla-example/README.md.)
+
+Outputs, all under ``--out`` (default ``../artifacts``):
+
+- ``<name>.hlo.txt``  — one per artifact (CN tiles, full layers, oracle)
+- ``weights/<name>.f32`` — raw little-endian f32 dumps of the segment
+  weights, the sample input, and the oracle output, so the Rust runtime
+  is bit-identical to the Python build
+- ``manifest.json`` — artifact registry (input/output shapes) + the
+  segment geometry (:func:`model.segment_spec`) the Rust tile slicer
+  mirrors
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def build_artifact_registry():
+    """name -> (callable, [input shapes]). Single f32 output each."""
+    spec = model.segment_spec()
+    reg: dict[str, tuple] = {}
+
+    # --- CN tile artifacts (layer-fused path) ---
+    for ls in spec:
+        if ls.kind == "conv":
+            fn = functools.partial(
+                model.cn_conv, stride=ls.stride, relu=ls.relu)
+            reg[ls.artifact] = (
+                fn, [ls.tile_in_shape, ls.weight, (ls.weight[0],)])
+        elif ls.kind == "pool":
+            reg[ls.artifact] = (model.cn_maxpool, [ls.tile_in_shape])
+        elif ls.kind == "add":
+            reg[ls.artifact] = (
+                model.cn_add, [ls.tile_in_shape, ls.tile_in_shape])
+
+    # --- full-layer artifacts (layer-by-layer baseline path) ---
+    for ls in spec:
+        if ls.kind == "conv":
+            fn = functools.partial(
+                model.layer_conv, stride=ls.stride, pad=ls.pad, relu=ls.relu)
+            reg[ls.layer_artifact] = (
+                fn, [ls.in_shape, ls.weight, (ls.weight[0],)])
+        elif ls.kind == "pool":
+            reg[ls.layer_artifact] = (model.layer_maxpool, [ls.in_shape])
+        elif ls.kind == "add":
+            reg[ls.layer_artifact] = (
+                model.layer_add, [ls.in_shape, ls.in_shape])
+
+    # --- whole-segment oracle + quickstart FC ---
+    wshapes = [model.IN_SHAPE,
+               spec[0].weight, (64,), spec[2].weight, (64,),
+               spec[3].weight, (64,)]
+    reg["segment_oracle"] = (model.segment_oracle, wshapes)
+    reg["fc_demo"] = (model.fc_demo, [(1, 256), (256, 128), (128,)])
+    return reg
+
+
+def out_shape_of(fn, in_shapes):
+    out = jax.eval_shape(fn, *[_spec(s) for s in in_shapes])
+    (o,) = out  # every artifact returns a 1-tuple
+    return list(o.shape)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    wdir = os.path.join(args.out, "weights")
+    os.makedirs(wdir, exist_ok=True)
+
+    reg = build_artifact_registry()
+    manifest: dict = {"artifacts": {}, "segment": {}, "weights": {}}
+
+    for name, (fn, in_shapes) in sorted(reg.items()):
+        lowered = jax.jit(fn).lower(*[_spec(s) for s in in_shapes])
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, path), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": path,
+            "inputs": [list(s) for s in in_shapes],
+            "output": out_shape_of(fn, in_shapes),
+        }
+        print(f"  lowered {name:24s} ({len(text)} chars)")
+
+    # Segment geometry for the Rust tile slicer.
+    spec = model.segment_spec()
+    manifest["segment"] = {
+        "in_shape": list(model.IN_SHAPE),
+        "rows_per_cn": model.ROWS_PER_CN,
+        "layers": [
+            {
+                **{k: (list(v) if isinstance(v, tuple) else v)
+                   for k, v in dataclasses.asdict(ls).items()},
+                "n_cns": ls.n_cns,
+                "tile_in_shape": list(ls.tile_in_shape),
+                "tile_out_shape": list(ls.tile_out_shape),
+                "tile_in_rows": ls.tile_in_rows,
+            }
+            for ls in spec
+        ],
+    }
+
+    # Deterministic weights + sample input + oracle output as raw f32.
+    params = model.make_params()
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=model.IN_SHAPE), jnp.float32)
+    (y,) = model.segment_oracle(x, *params)
+    blobs = {
+        "input": np.asarray(x),
+        "oracle_output": np.asarray(y),
+        "w0": np.asarray(params[0]), "b0": np.asarray(params[1]),
+        "w2": np.asarray(params[2]), "b2": np.asarray(params[3]),
+        "w3": np.asarray(params[4]), "b3": np.asarray(params[5]),
+    }
+    for name, arr in blobs.items():
+        path = os.path.join("weights", f"{name}.f32")
+        arr.astype("<f4").tofile(os.path.join(args.out, path))
+        manifest["weights"][name] = {"file": path, "shape": list(arr.shape)}
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(reg)} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""L1 Pallas kernels: the CN compute primitives of the Stream stack.
+
+- :mod:`.matmul` — tiled PE-array matmul (C-unroll x K-unroll dataflow)
+- :mod:`.conv` — convolution as implicit GEMM on the matmul kernel
+- :mod:`.pool` — SIMD-core max pooling
+- :mod:`.eltwise` — SIMD-core residual add (+ ReLU)
+- :mod:`.ref` — pure-jnp oracles for all of the above
+"""
+
+from . import conv, eltwise, matmul, pool, ref  # noqa: F401

@@ -1,0 +1,58 @@
+"""L1 Pallas kernel wrapper: convolution as implicit GEMM.
+
+The paper's dataflow cores execute convolutional CNs on a PE array with
+``C`` unrolled across rows (reduction) and ``K`` across columns.  We
+realize this as im2col patch extraction (layout transform, done by XLA)
+feeding the tiled Pallas matmul of :mod:`.matmul` — the patches matrix
+has the contraction dimension ``C*FY*FX`` exactly where the PE array's
+C-unroll sits.
+
+The patch extraction is *not* the hot-spot (it is a gather the paper's
+cores implement with line buffers / address generators); the MACs all
+happen inside the Pallas kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.lax as lax
+
+from . import matmul as mm
+
+
+def _im2col(x: jax.Array, fy: int, fx: int, stride: int,
+            padding: int) -> jax.Array:
+    """x: [C, H, W] -> patches [OY*OX, C*FY*FX] (f32)."""
+    patches = lax.conv_general_dilated_patches(
+        x[None],
+        filter_shape=(fy, fx),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]  # [C*FY*FX, OY, OX]
+    cff, oy, ox = patches.shape
+    return patches.reshape(cff, oy * ox).T, (oy, ox)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "relu"))
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+           stride: int = 1, padding: int = 0, relu: bool = False) -> jax.Array:
+    """Implicit-GEMM convolution on the Pallas matmul kernel.
+
+    x: [C, H, W], w: [K, C, FY, FX], b: [K] -> [K, OY, OX].
+    """
+    k, c, fy, fx = w.shape
+    patches, (oy, ox) = _im2col(x, fy, fx, stride, padding)
+    wmat = w.reshape(k, c * fy * fx).T  # [C*FY*FX, K]
+    out = mm.matmul(patches, wmat, b, relu=relu)  # [OY*OX, K]
+    return out.T.reshape(k, oy, ox)
+
+
+def macs(x_shape, w_shape, stride: int, padding: int) -> int:
+    """Exact MAC count of the convolution (for the L3 cost model tests)."""
+    c, h, wdt = x_shape
+    k, c2, fy, fx = w_shape
+    oy = (h + 2 * padding - fy) // stride + 1
+    ox = (wdt + 2 * padding - fx) // stride + 1
+    return k * oy * ox * c * fy * fx

@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: elementwise residual add (+ ReLU).
+
+Residual-sum CNs run on the SIMD core; this kernel tiles the flattened
+tensor across the vector lanes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _add_relu_kernel(a_ref, b_ref, o_ref, *, relu: bool):
+    out = a_ref[...] + b_ref[...]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("relu",))
+def add_relu(a: jax.Array, b: jax.Array, relu: bool = True) -> jax.Array:
+    """Elementwise ``a + b`` (+ ReLU) over same-shape tensors."""
+    assert a.shape == b.shape, (a.shape, b.shape)
+    shape = a.shape
+    af, bf = a.reshape(-1), b.reshape(-1)
+    n = af.shape[0]
+    blk = min(BLOCK, n)
+    rem = (-n) % blk
+    if rem:
+        af = jnp.pad(af, (0, rem))
+        bf = jnp.pad(bf, (0, rem))
+    npad = af.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_add_relu_kernel, relu=relu),
+        grid=(npad // blk,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,)),
+                  pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.float32),
+        interpret=True,
+    )(af, bf)
+    return out[:n].reshape(shape)

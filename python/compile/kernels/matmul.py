@@ -1,0 +1,136 @@
+"""L1 Pallas kernel: tiled matrix multiply — the PE-array model.
+
+This kernel is the compute hot-spot of the whole stack.  The paper's
+accelerator cores are spatially-unrolled PE arrays: the TPU-like core of
+Fig. 11 unrolls the input channels ``C 32`` across PE rows (a reduction)
+and the output channels ``K 32`` across PE columns (parallel outputs) —
+which is *exactly* a blocked matmul with the reduction dimension mapped
+to the systolic rows.  We therefore realize every dense CN (convolution
+via implicit GEMM, fully-connected) as this one tiled matmul.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the block sizes play the
+role of the spatial unrolling — ``BK`` ↔ the C-unroll, ``BN`` ↔ the
+K-unroll, ``BM`` ↔ the output-pixel tile streamed through the array; the
+BlockSpec index maps express the HBM↔VMEM schedule the paper's cores
+implement with their local SRAMs.  The accumulation across the k-grid
+axis models the temporal reduction through the array.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and the interpreted kernel lowers to plain HLO that the
+Rust runtime loads and runs.  Real-TPU efficiency is estimated
+analytically from the block shapes (see DESIGN.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shapes. 8 x 128 multiples line up with the MXU/VPU native
+# tile of real TPUs; on the interpret path they just bound VMEM usage.
+BM = 32
+BN = 64
+BK = 64
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, relu: bool):
+    """Grid point (i, j, k): accumulate x[i,k] @ w[k,j] into o[i,j].
+
+    The output block is revisited across the k grid axis (its index map
+    ignores ``k``), so it doubles as the VMEM accumulator; the epilogue
+    (bias + optional ReLU) runs on the last k step, mirroring a systolic
+    array draining into the output SRAM through an activation unit.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        out = o_ref[...] + b_ref[...][None, :]
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("relu", "bm", "bn", "bk")
+)
+def matmul(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+           relu: bool = False, bm: int = BM, bn: int = BN,
+           bk: int = BK) -> jax.Array:
+    """Tiled Pallas matmul: ``x[M,K] @ w[K,N] (+ b[N]) (+ ReLU)``.
+
+    Shapes need not be multiples of the block sizes: inputs are
+    zero-padded up to the grid and the result is sliced back, which is
+    numerically exact for matmul (padded rows/cols contribute zeros).
+    """
+    m, kdim = x.shape
+    k2, n = w.shape
+    assert kdim == k2, f"contraction mismatch {kdim} vs {k2}"
+    if b is None:
+        b = jnp.zeros((n,), jnp.float32)
+
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    bp = _pad_to(b, 0, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    nk = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk, relu=relu),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm: int = BM, bn: int = BN, bk: int = BK) -> int:
+    """Estimated VMEM residency of one grid step (f32): x, w, bias, acc, out.
+
+    Used by the analytic TPU performance estimate in DESIGN.md §Perf and
+    by the L3 mapping model's sanity checks.
+    """
+    return 4 * (bm * bk + bk * bn + bn + 2 * bm * bn)
+
+
+def mxu_utilization(m: int, n: int, k: int, bm: int = BM, bn: int = BN,
+                    bk: int = BK, mxu: int = 128) -> float:
+    """Estimated MXU utilization for an [M,K]x[K,N] problem.
+
+    The systolic array is ``mxu x mxu``; a block only fills
+    ``min(bk, k) x min(bn, n)`` of it, and edge blocks are partially
+    empty.  This mirrors the paper's *spatial under-utilization* term.
+    """
+    fill_rows = min(bk, k) / mxu if k < mxu or bk < mxu else 1.0
+    fill_cols = min(bn, n) / mxu if n < mxu or bn < mxu else 1.0
+    def edge(total, block):
+        import math
+        nblk = math.ceil(total / block)
+        return total / (nblk * block)
+    return min(1.0, fill_rows) * min(1.0, fill_cols) * edge(m, bm) * edge(n, bn) * edge(k, bk)

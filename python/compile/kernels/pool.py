@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: max pooling.
+
+Pooling CNs run on the paper's SIMD core (the auxiliary vector core every
+explored architecture carries for pool / residual-add layers).  The
+kernel tiles the channel dimension — the SIMD lanes — and computes the
+window max with statically unrolled shifted slices, which is how a
+line-buffered vector datapath implements pooling.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BC = 16  # channel block = SIMD lane tile
+
+
+def _maxpool_kernel(x_ref, o_ref, *, ksize: int, stride: int):
+    """One channel block: [bc, H, W] -> [bc, OY, OX].
+
+    The (fy, fx) loops are static Python loops — they unroll into the
+    vector max tree a SIMD core would execute.
+    """
+    x = x_ref[...]
+    _, h, w = x.shape
+    oy = (h - ksize) // stride + 1
+    ox = (w - ksize) // stride + 1
+    out = None
+    for dy in range(ksize):
+        for dx in range(ksize):
+            win = x[:, dy:dy + (oy - 1) * stride + 1:stride,
+                    dx:dx + (ox - 1) * stride + 1:stride]
+            out = win if out is None else jnp.maximum(out, win)
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("ksize", "stride", "padding"))
+def maxpool(x: jax.Array, ksize: int = 3, stride: int = 2,
+            padding: int = 0) -> jax.Array:
+    """Max pooling over [C, H, W] with -inf padding, channel-tiled."""
+    c, h, w = x.shape
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding)),
+                    constant_values=-jnp.inf)
+        h, w = h + 2 * padding, w + 2 * padding
+    oy = (h - ksize) // stride + 1
+    ox = (w - ksize) // stride + 1
+
+    bc = min(BC, c)
+    rem = (-c) % bc
+    if rem:
+        x = jnp.pad(x, ((0, rem), (0, 0), (0, 0)),
+                    constant_values=-jnp.inf)
+    cp = x.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_maxpool_kernel, ksize=ksize, stride=stride),
+        grid=(cp // bc,),
+        in_specs=[pl.BlockSpec((bc, h, w), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((bc, oy, ox), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((cp, oy, ox), jnp.float32),
+        interpret=True,
+    )(x)
+    return out[:c]

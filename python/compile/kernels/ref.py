@@ -1,0 +1,70 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact functional counterpart
+here, written with plain ``jax.numpy`` / ``jax.lax`` primitives.  The
+pytest suite asserts ``assert_allclose(kernel(...), ref(...))`` over a
+hypothesis-driven sweep of shapes; these functions are the single source
+of numerical truth for the whole stack (the Rust runtime's end-to-end
+check ultimately compares against an AOT-compiled lowering of these).
+
+All tensors are NCHW (batch dimension elided: CHW) and f32 unless noted.
+"""
+
+import jax
+import jax.numpy as jnp
+import jax.lax as lax
+
+
+def matmul_ref(x: jax.Array, w: jax.Array, b=None, relu: bool = False) -> jax.Array:
+    """[M,K] @ [K,N] (+ bias[N]) (+ ReLU) in f32."""
+    out = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        out = out + b[None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, b=None, stride: int = 1,
+               padding: int = 0, relu: bool = False) -> jax.Array:
+    """Direct convolution oracle.
+
+    x: [C, H, W], w: [K, C, FY, FX], b: [K] -> [K, OY, OX].
+    """
+    out = lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    if b is not None:
+        out = out + b[:, None, None]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def maxpool_ref(x: jax.Array, ksize: int = 3, stride: int = 2,
+                padding: int = 0) -> jax.Array:
+    """Max pooling oracle. x: [C, H, W] -> [C, OY, OX].
+
+    Padding uses -inf so it never wins the max (matches framework
+    semantics for post-ReLU activations and any-signed inputs alike).
+    """
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, ksize, ksize),
+        window_strides=(1, stride, stride),
+        padding=[(0, 0), (padding, padding), (padding, padding)],
+    )
+
+
+def add_relu_ref(a: jax.Array, b: jax.Array, relu: bool = True) -> jax.Array:
+    """Elementwise residual add (+ ReLU)."""
+    out = a + b
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out

@@ -1,0 +1,206 @@
+"""L2: the JAX workload model, built on the L1 Pallas kernels.
+
+This module defines the *functional* counterpart of the workloads the L3
+Rust coordinator schedules: the first segment of ResNet-18 (conv7x7/s2 →
+maxpool3x3/s2 → conv3x3 → conv3x3 → residual add), the workload DIANA's
+published measurements use and the paper's validation Section IV-C models.
+
+Two families of entry points are exported:
+
+- **full-layer functions** (``layer*``) — one call computes an entire
+  layer; AOT artifacts of these implement the *layer-by-layer* execution
+  baseline in the Rust runtime;
+- **CN tile functions** (``cn_*``) — one call computes a single
+  computation node (a block of output rows) from a pre-sliced input tile
+  (halo included); AOT artifacts of these are what the Rust scheduler's
+  *layer-fused* execution actually runs, CN by CN, in schedule order.
+
+The segment geometry (tile shapes, halos, strides) is described by
+:func:`segment_spec`, which ``aot.py`` serializes into
+``artifacts/manifest.json`` so the Rust side slices tiles identically.
+
+Everything here is build-time only: ``aot.py`` lowers each entry point
+once to HLO text and the Python interpreter is never on the Rust request
+path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv, eltwise, matmul, pool, ref
+
+# ---------------------------------------------------------------------------
+# Segment geometry
+# ---------------------------------------------------------------------------
+
+#: Input feature map of the segment: CHW. 112x112 is the paper's ResNet-18
+#: first-segment geometry scaled 2x down so the CPU-interpret end-to-end
+#: run stays fast; every structural property (strides, halos, fusion
+#: pattern) is preserved. See DESIGN.md §Substitutions.
+IN_SHAPE = (3, 112, 112)
+#: Output rows computed per computation node (the scheduling granularity —
+#: 4 lines, the line-buffered granularity DepFiN/DIANA implement).
+ROWS_PER_CN = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """Geometry of one fused layer, shared with the Rust runtime."""
+
+    name: str
+    kind: str            # conv | pool | add
+    in_shape: tuple      # C,H,W (unpadded)
+    out_shape: tuple     # K,OY,OX
+    fy: int = 0
+    fx: int = 0
+    stride: int = 1
+    pad: int = 0
+    relu: bool = True
+    weight: tuple = ()   # K,C,FY,FX for conv
+    #: which earlier layer's output is the second addend (for `add`)
+    residual_of: int = -1
+    artifact: str = ""      # CN tile artifact name
+    layer_artifact: str = ""  # full-layer artifact name
+
+    @property
+    def n_cns(self) -> int:
+        return self.out_shape[1] // ROWS_PER_CN
+
+    @property
+    def tile_in_rows(self) -> int:
+        """Input rows a CN needs: (rows_out-1)*stride + fy (conv/pool)."""
+        if self.kind == "add":
+            return ROWS_PER_CN
+        return (ROWS_PER_CN - 1) * self.stride + self.fy
+
+    @property
+    def tile_in_shape(self) -> tuple:
+        c = self.in_shape[0]
+        if self.kind == "add":
+            return (c, ROWS_PER_CN, self.in_shape[2])
+        return (c, self.tile_in_rows, self.in_shape[2] + 2 * self.pad)
+
+    @property
+    def tile_out_shape(self) -> tuple:
+        return (self.out_shape[0], ROWS_PER_CN, self.out_shape[2])
+
+    def cn_input_row_start(self, cn_idx: int) -> int:
+        """First (possibly negative → padded) input row of CN ``cn_idx``."""
+        if self.kind == "add":
+            return cn_idx * ROWS_PER_CN
+        return cn_idx * ROWS_PER_CN * self.stride - self.pad
+
+
+def segment_spec() -> list[LayerSpec]:
+    """The ResNet-18 first-segment layer stack (Fig. 10c workload)."""
+    c, h, w = IN_SHAPE
+    return [
+        LayerSpec("conv7x7", "conv", (c, h, w), (64, h // 2, w // 2),
+                  fy=7, fx=7, stride=2, pad=3, relu=True,
+                  weight=(64, c, 7, 7),
+                  artifact="cn_conv7x7", layer_artifact="layer_conv7x7"),
+        LayerSpec("maxpool", "pool", (64, h // 2, w // 2),
+                  (64, h // 4, w // 4), fy=3, fx=3, stride=2, pad=1,
+                  relu=False,
+                  artifact="cn_maxpool", layer_artifact="layer_maxpool"),
+        LayerSpec("conv3x3a", "conv", (64, h // 4, w // 4),
+                  (64, h // 4, w // 4), fy=3, fx=3, stride=1, pad=1,
+                  relu=True, weight=(64, 64, 3, 3),
+                  artifact="cn_conv3x3_relu", layer_artifact="layer_conv3x3_relu"),
+        LayerSpec("conv3x3b", "conv", (64, h // 4, w // 4),
+                  (64, h // 4, w // 4), fy=3, fx=3, stride=1, pad=1,
+                  relu=False, weight=(64, 64, 3, 3),
+                  artifact="cn_conv3x3", layer_artifact="layer_conv3x3"),
+        LayerSpec("add", "add", (64, h // 4, w // 4), (64, h // 4, w // 4),
+                  relu=True, residual_of=1,
+                  artifact="cn_add", layer_artifact="layer_add"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Full-layer functions (layer-by-layer baseline artifacts)
+# ---------------------------------------------------------------------------
+
+def layer_conv(x, w, b, stride: int, pad: int, relu: bool):
+    return (conv.conv2d(x, w, b, stride=stride, padding=pad, relu=relu),)
+
+
+def layer_maxpool(x):
+    return (pool.maxpool(x, ksize=3, stride=2, padding=1),)
+
+
+def layer_add(a, b):
+    return (eltwise.add_relu(a, b, relu=True),)
+
+
+def fc_demo(x, w, b):
+    """Small fully-connected head used by the quickstart example."""
+    return (matmul.matmul(x, w, b, relu=True),)
+
+
+# ---------------------------------------------------------------------------
+# CN tile functions (layer-fused artifacts)
+# ---------------------------------------------------------------------------
+# Each takes a pre-sliced, pre-padded input tile (the Rust runtime slices
+# rows with halo and pads the width), computes VALID conv/pool, and emits
+# exactly ROWS_PER_CN output rows.
+
+def cn_conv(x_tile, w, b, stride: int, relu: bool):
+    return (conv.conv2d(x_tile, w, b, stride=stride, padding=0, relu=relu),)
+
+
+def cn_maxpool(x_tile):
+    return (pool.maxpool(x_tile, ksize=3, stride=2, padding=0),)
+
+
+def cn_add(a_tile, b_tile):
+    return (eltwise.add_relu(a_tile, b_tile, relu=True),)
+
+
+# ---------------------------------------------------------------------------
+# Whole-segment oracle (pure jnp, no Pallas) — the numerical ground truth
+# ---------------------------------------------------------------------------
+
+def segment_oracle(x, w0, b0, w2, b2, w3, b3):
+    """Reference forward pass of the full fused segment."""
+    y0 = ref.conv2d_ref(x, w0, b0, stride=2, padding=3, relu=True)
+    y1 = ref.maxpool_ref(y0, ksize=3, stride=2, padding=1)
+    y2 = ref.conv2d_ref(y1, w2, b2, stride=1, padding=1, relu=True)
+    y3 = ref.conv2d_ref(y2, w3, b3, stride=1, padding=1, relu=False)
+    y4 = ref.add_relu_ref(y3, y1, relu=True)
+    return (y4,)
+
+
+def segment_pallas(x, w0, b0, w2, b2, w3, b3):
+    """Same forward pass, every op on the Pallas kernels (for pytest)."""
+    y0 = conv.conv2d(x, w0, b0, stride=2, padding=3, relu=True)
+    y1 = pool.maxpool(y0, ksize=3, stride=2, padding=1)
+    y2 = conv.conv2d(y1, w2, b2, stride=1, padding=1, relu=True)
+    y3 = conv.conv2d(y2, w3, b3, stride=1, padding=1, relu=False)
+    y4 = eltwise.add_relu(y3, y1, relu=True)
+    return (y4,)
+
+
+def make_params(seed: int = 42):
+    """Deterministic segment weights, identical on the Rust side via the
+    raw-f32 dumps ``aot.py`` writes next to the artifacts."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    spec = segment_spec()
+
+    def w(shape, fan_in):
+        return jnp.asarray(
+            rng.normal(0.0, (2.0 / fan_in) ** 0.5, size=shape), jnp.float32)
+
+    w0 = w(spec[0].weight, 3 * 7 * 7)
+    b0 = w((64,), 64)
+    w2 = w(spec[2].weight, 64 * 9)
+    b2 = w((64,), 64)
+    w3 = w(spec[3].weight, 64 * 9)
+    b3 = w((64,), 64)
+    return w0, b0, w2, b2, w3, b3

@@ -1,0 +1,98 @@
+"""AOT artifact tests: manifest consistency and HLO-text sanity.
+
+These run against the ``artifacts/`` directory produced by
+``make artifacts`` (skipped if it has not been built yet), plus
+registry-level checks that need no built artifacts.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+built = os.path.exists(os.path.join(ART, "manifest.json"))
+needs_artifacts = pytest.mark.skipif(
+    not built, reason="run `make artifacts` first")
+
+
+def test_registry_shapes_consistent():
+    reg = aot.build_artifact_registry()
+    assert len(reg) >= 12
+    for name, (fn, in_shapes) in reg.items():
+        out = aot.out_shape_of(fn, in_shapes)
+        assert all(d > 0 for d in out), name
+
+
+def test_registry_covers_segment():
+    reg = aot.build_artifact_registry()
+    for ls in model.segment_spec():
+        assert ls.artifact in reg
+        assert ls.layer_artifact in reg
+
+
+@needs_artifacts
+def test_manifest_files_exist():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for name, meta in man["artifacts"].items():
+        path = os.path.join(ART, meta["file"])
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert "ENTRY" in text, f"{name}: not HLO text"
+        assert "HloModule" in text
+    for name, meta in man["weights"].items():
+        path = os.path.join(ART, meta["file"])
+        n = int(np.prod(meta["shape"]))
+        assert os.path.getsize(path) == 4 * n, name
+
+
+@needs_artifacts
+def test_manifest_segment_geometry_matches_model():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    seg = man["segment"]
+    assert seg["rows_per_cn"] == model.ROWS_PER_CN
+    assert tuple(seg["in_shape"]) == model.IN_SHAPE
+    spec = model.segment_spec()
+    assert len(seg["layers"]) == len(spec)
+    for got, ls in zip(seg["layers"], spec):
+        assert got["name"] == ls.name
+        assert tuple(got["tile_in_shape"]) == ls.tile_in_shape
+        assert tuple(got["tile_out_shape"]) == ls.tile_out_shape
+        assert got["n_cns"] == ls.n_cns
+
+
+@needs_artifacts
+def test_oracle_dump_matches_recompute():
+    """weights/*.f32 dumps reproduce segment_oracle exactly."""
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+
+    def load(name):
+        meta = man["weights"][name]
+        arr = np.fromfile(os.path.join(ART, meta["file"]), "<f4")
+        return jnp.asarray(arr.reshape(meta["shape"]))
+
+    x = load("input")
+    (y,) = model.segment_oracle(x, load("w0"), load("b0"), load("w2"),
+                                load("b2"), load("w3"), load("b3"))
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(load("oracle_output")),
+                               rtol=1e-6, atol=1e-6)
+
+
+@needs_artifacts
+def test_hlo_text_round_trips_through_xla_parser():
+    """The text must parse back into an XlaComputation (what Rust does)."""
+    from jax._src.lib import xla_client as xc
+    path = os.path.join(ART, "fc_demo.hlo.txt")
+    text = open(path).read()
+    # jax's bundled XLA can re-parse HLO text
+    mod = xc._xla.hlo_module_from_text(text)
+    assert mod is not None

@@ -1,0 +1,154 @@
+"""Kernel-vs-oracle correctness: the core numerical signal of the stack.
+
+Each Pallas kernel is compared against its pure-jnp oracle in ``ref.py``
+over both hand-picked shapes and hypothesis-driven sweeps (shapes,
+strides, paddings, block sizes).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv, eltwise, matmul, pool, ref
+
+RNG = np.random.default_rng(1234)
+
+
+def randf(*shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (32, 64, 64), (37, 53, 41),
+                                   (128, 256, 128), (5, 300, 7)])
+@pytest.mark.parametrize("relu", [False, True])
+def test_matmul_fixed(m, k, n, relu):
+    x, w, b = randf(m, k), randf(k, n), randf(n)
+    got = matmul.matmul(x, w, b, relu=relu)
+    want = ref.matmul_ref(x, w, b, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_no_bias():
+    x, w = randf(16, 16), randf(16, 16)
+    np.testing.assert_allclose(matmul.matmul(x, w), ref.matmul_ref(x, w),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 70), k=st.integers(1, 70), n=st.integers(1, 70),
+       bm=st.sampled_from([8, 16, 32]), bn=st.sampled_from([16, 32, 64]),
+       bk=st.sampled_from([16, 32, 64]))
+def test_matmul_hypothesis(m, k, n, bm, bn, bk):
+    x, w, b = randf(m, k), randf(k, n), randf(n)
+    got = matmul.matmul(x, w, b, relu=True, bm=bm, bn=bn, bk=bk)
+    want = ref.matmul_ref(x, w, b, relu=True)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_block_size_invariance():
+    """Result must not depend on the BlockSpec tiling."""
+    x, w, b = randf(50, 90), randf(90, 33), randf(33)
+    a = matmul.matmul(x, w, b, bm=8, bn=16, bk=16)
+    c = matmul.matmul(x, w, b, bm=32, bn=64, bk=64)
+    np.testing.assert_allclose(a, c, rtol=1e-5, atol=1e-5)
+
+
+def test_vmem_estimate_positive():
+    assert matmul.vmem_bytes() > 0
+    assert matmul.vmem_bytes(8, 8, 8) < matmul.vmem_bytes(128, 128, 128)
+
+
+def test_mxu_utilization_bounds():
+    u = matmul.mxu_utilization(3136, 64, 576)
+    assert 0.0 < u <= 1.0
+    # bigger aligned problem → higher estimated utilization
+    assert matmul.mxu_utilization(4096, 128, 1024, bn=128, bk=128) >= u
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride,pad,fy", [(1, 0, 1), (1, 1, 3), (2, 3, 7),
+                                           (2, 1, 3), (1, 2, 5)])
+def test_conv_fixed(stride, pad, fy):
+    x = randf(3, 24, 20)
+    w = randf(8, 3, fy, fy)
+    b = randf(8)
+    got = conv.conv2d(x, w, b, stride=stride, padding=pad, relu=True)
+    want = ref.conv2d_ref(x, w, b, stride=stride, padding=pad, relu=True)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(c=st.integers(1, 8), k=st.integers(1, 16),
+       h=st.integers(7, 24), fy=st.sampled_from([1, 3, 5]),
+       stride=st.sampled_from([1, 2]), pad=st.integers(0, 2),
+       relu=st.booleans())
+def test_conv_hypothesis(c, k, h, fy, stride, pad, relu):
+    x = randf(c, h, h)
+    w = randf(k, c, fy, fy)
+    b = randf(k)
+    got = conv.conv2d(x, w, b, stride=stride, padding=pad, relu=relu)
+    want = ref.conv2d_ref(x, w, b, stride=stride, padding=pad, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_conv_macs():
+    assert conv.macs((3, 8, 8), (4, 3, 3, 3), 1, 1) == 4 * 8 * 8 * 3 * 9
+    assert conv.macs((3, 8, 8), (4, 3, 3, 3), 2, 1) == 4 * 4 * 4 * 3 * 9
+
+
+# ---------------------------------------------------------------------------
+# maxpool
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("c,h,w,k,s,p", [(64, 56, 56, 3, 2, 1),
+                                         (3, 9, 9, 3, 3, 0),
+                                         (19, 15, 17, 3, 2, 1),
+                                         (16, 8, 8, 2, 2, 0)])
+def test_pool_fixed(c, h, w, k, s, p):
+    x = randf(c, h, w)
+    np.testing.assert_allclose(pool.maxpool(x, k, s, p),
+                               ref.maxpool_ref(x, k, s, p), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(c=st.integers(1, 40), h=st.integers(5, 20),
+       k=st.sampled_from([2, 3]), s=st.sampled_from([1, 2]),
+       p=st.integers(0, 1))
+def test_pool_hypothesis(c, h, k, s, p):
+    x = randf(c, h, h)
+    np.testing.assert_allclose(pool.maxpool(x, k, s, p),
+                               ref.maxpool_ref(x, k, s, p), rtol=1e-6)
+
+
+def test_pool_negative_padding_semantics():
+    """-inf padding: border maxima of all-negative inputs stay negative."""
+    x = -jnp.ones((4, 6, 6), jnp.float32)
+    out = pool.maxpool(x, 3, 2, 1)
+    assert float(out.max()) == -1.0
+
+
+# ---------------------------------------------------------------------------
+# eltwise
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 5000), relu=st.booleans())
+def test_add_relu_hypothesis(n, relu):
+    a, b = randf(n), randf(n)
+    np.testing.assert_allclose(eltwise.add_relu(a, b, relu=relu),
+                               ref.add_relu_ref(a, b, relu=relu), rtol=1e-6)
+
+
+def test_add_relu_3d():
+    a, b = randf(64, 4, 28), randf(64, 4, 28)
+    np.testing.assert_allclose(eltwise.add_relu(a, b),
+                               ref.add_relu_ref(a, b), rtol=1e-6)

@@ -1,0 +1,124 @@
+"""L2 model tests: fused-segment numerics and CN tile geometry.
+
+The critical test here is :func:`test_cn_tiling_equals_full_layer`: it
+slices input tiles with exactly the geometry ``segment_spec`` exports to
+the Rust runtime (halo rows, width padding, pad values), runs the CN tile
+functions, stitches the row blocks, and checks the result is identical to
+the full-layer computation.  If this passes, the Rust tile slicer — which
+mirrors the same spec from ``manifest.json`` — computes the same numbers.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(99)
+
+
+def randf(*shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.make_params()
+
+
+@pytest.fixture(scope="module")
+def x_in():
+    return randf(*model.IN_SHAPE)
+
+
+def test_segment_pallas_vs_oracle(params, x_in):
+    (want,) = model.segment_oracle(x_in, *params)
+    (got,) = model.segment_pallas(x_in, *params)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_segment_spec_geometry():
+    spec = model.segment_spec()
+    # chained shapes
+    for prev, cur in zip(spec, spec[1:]):
+        if cur.kind != "add":
+            assert prev.out_shape == cur.in_shape
+    # every layer's output rows divide evenly into CNs
+    for ls in spec:
+        assert ls.out_shape[1] % model.ROWS_PER_CN == 0
+        assert ls.n_cns == ls.out_shape[1] // model.ROWS_PER_CN
+    # conv7x7 halo: (4-1)*2 + 7 = 13 input rows per CN
+    assert spec[0].tile_in_rows == 13
+    assert spec[1].tile_in_rows == 9
+    assert spec[2].tile_in_rows == 6
+
+
+def _slice_tile(x, ls, cn_idx, pad_value):
+    """Reference implementation of the Rust tile slicer."""
+    c, h, w = ls.in_shape
+    rows = ls.tile_in_rows
+    start = ls.cn_input_row_start(cn_idx)
+    tile = np.full((c, rows, w + 2 * ls.pad), pad_value, np.float32)
+    for r in range(rows):
+        src = start + r
+        if 0 <= src < h:
+            tile[:, r, ls.pad: ls.pad + w] = np.asarray(x[:, src, :])
+    return jnp.asarray(tile)
+
+
+@pytest.mark.parametrize("layer_idx", [0, 1, 2, 3])
+def test_cn_tiling_equals_full_layer(layer_idx, params, x_in):
+    spec = model.segment_spec()
+    w0, b0, w2, b2, w3, b3 = params
+    # compute the layer inputs with the oracle up to layer_idx
+    acts = [x_in]
+    acts.append(ref.conv2d_ref(acts[0], w0, b0, 2, 3, True))
+    acts.append(ref.maxpool_ref(acts[1], 3, 2, 1))
+    acts.append(ref.conv2d_ref(acts[2], w2, b2, 1, 1, True))
+    acts.append(ref.conv2d_ref(acts[3], w3, b3, 1, 1, False))
+
+    ls = spec[layer_idx]
+    x = acts[layer_idx]
+    full = acts[layer_idx + 1]
+    wgt = {0: (w0, b0), 2: (w2, b2), 3: (w3, b3)}.get(layer_idx)
+
+    tiles = []
+    for i in range(ls.n_cns):
+        # conv pads with 0; pool input is post-ReLU so 0-padding is exact
+        tile = _slice_tile(x, ls, i, 0.0)
+        if ls.kind == "conv":
+            (out,) = model.cn_conv(tile, wgt[0], wgt[1],
+                                   stride=ls.stride, relu=ls.relu)
+        else:
+            (out,) = model.cn_maxpool(tile)
+        assert out.shape == ls.tile_out_shape
+        tiles.append(out)
+    stitched = jnp.concatenate(tiles, axis=1)
+    np.testing.assert_allclose(stitched, full, rtol=1e-3, atol=1e-4)
+
+
+def test_cn_add_tiling(params, x_in):
+    spec = model.segment_spec()
+    w0, b0, w2, b2, w3, b3 = params
+    y1 = ref.maxpool_ref(
+        ref.conv2d_ref(x_in, w0, b0, 2, 3, True), 3, 2, 1)
+    y3 = ref.conv2d_ref(
+        ref.conv2d_ref(y1, w2, b2, 1, 1, True), w3, b3, 1, 1, False)
+    want = ref.add_relu_ref(y3, y1)
+    ls = spec[4]
+    r = model.ROWS_PER_CN
+    tiles = []
+    for i in range(ls.n_cns):
+        (out,) = model.cn_add(y3[:, i * r:(i + 1) * r, :],
+                              y1[:, i * r:(i + 1) * r, :])
+        tiles.append(out)
+    np.testing.assert_allclose(jnp.concatenate(tiles, axis=1), want,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_make_params_deterministic():
+    a = model.make_params()
+    b = model.make_params()
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)

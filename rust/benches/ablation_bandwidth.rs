@@ -1,0 +1,60 @@
+//! Ablation: inter-core bus and DRAM-port bandwidth sensitivity.
+//!
+//! The paper fixes the bus at 128 bit/cc and the DRAM port at 64 bit/cc;
+//! this ablation sweeps both to show where communication becomes the
+//! bottleneck for fine-grained fusion on the heterogeneous quad-core —
+//! the architectural-decision axis Stream is built to explore.
+//!
+//! ```bash
+//! cargo bench --bench ablation_bandwidth
+//! ```
+
+use stream::allocator::GaParams;
+use stream::arch::presets;
+use stream::cn::CnGranularity;
+use stream::pipeline::{Stream, StreamOpts};
+use stream::workload::models;
+
+fn main() {
+    println!("=== ablation: bus / DRAM bandwidth (ResNet-18, MC:Hetero, fused) ===\n");
+    let ga = GaParams { population: 12, generations: 6, ..Default::default() };
+
+    println!("{:>14} {:>12} {:>12} {:>12}", "bus(bit/cc)", "latency(cc)", "bus(uJ)", "EDP");
+    for bus_bw in [16u64, 32, 64, 128, 256, 512] {
+        let mut arch = presets::hetero_quad();
+        arch.bus_bw_bits = bus_bw;
+        let s = Stream::new(
+            models::resnet18(),
+            arch,
+            StreamOpts { granularity: CnGranularity::Lines(4), ga, ..Default::default() },
+        );
+        let m = s.run().unwrap().best_edp().unwrap().result.metrics;
+        println!(
+            "{:>14} {:>12} {:>12.3} {:>12.3e}",
+            bus_bw,
+            m.latency_cc,
+            m.breakdown.bus_pj / 1e6,
+            m.edp()
+        );
+    }
+
+    println!();
+    println!("{:>14} {:>12} {:>12} {:>12}", "dram(bit/cc)", "latency(cc)", "dram(uJ)", "EDP");
+    for dram_bw in [16u64, 32, 64, 128, 256] {
+        let mut arch = presets::hetero_quad();
+        arch.dram_bw_bits = dram_bw;
+        let s = Stream::new(
+            models::resnet18(),
+            arch,
+            StreamOpts { granularity: CnGranularity::Lines(4), ga, ..Default::default() },
+        );
+        let m = s.run().unwrap().best_edp().unwrap().result.metrics;
+        println!(
+            "{:>14} {:>12} {:>12.3} {:>12.3e}",
+            dram_bw,
+            m.latency_cc,
+            m.breakdown.dram_pj / 1e6,
+            m.edp()
+        );
+    }
+}

@@ -1,0 +1,53 @@
+//! Ablation: CN granularity impact (paper Fig. 4's design axis).
+//!
+//! Sweeps lines-per-CN over {1, 2, 4, 8, 16, layer-by-layer} for three
+//! representative networks on the heterogeneous quad-core, showing the
+//! latency / energy / peak-memory trade-off that motivates Stream's
+//! granularity-aware Step 1: fine granularity minimizes memory but pays
+//! scheduling and weight-locality overheads; coarse granularity loses
+//! parallelism and floods the activation memory.
+//!
+//! ```bash
+//! cargo bench --bench ablation_granularity
+//! ```
+
+use stream::allocator::GaParams;
+use stream::arch::presets;
+use stream::cn::CnGranularity;
+use stream::pipeline::{Stream, StreamOpts};
+use stream::workload::models;
+
+fn main() {
+    println!("=== ablation: CN granularity (MC:Hetero, GA pop 12 x 6) ===\n");
+    let ga = GaParams { population: 12, generations: 6, ..Default::default() };
+    println!(
+        "{:<12} {:>14} {:>12} {:>12} {:>12} {:>10}",
+        "workload", "granularity", "latency(cc)", "energy(uJ)", "EDP", "peak(KB)"
+    );
+    for net in ["resnet18", "squeezenet", "fsrcnn"] {
+        let grans: Vec<(String, CnGranularity)> = [1usize, 2, 4, 8, 16]
+            .iter()
+            .map(|&l| (format!("Lines({l})"), CnGranularity::Lines(l)))
+            .chain(std::iter::once(("layer-by-layer".to_string(), CnGranularity::LayerByLayer)))
+            .collect();
+        for (name, gran) in grans {
+            let s = Stream::new(
+                models::by_name(net).unwrap(),
+                presets::hetero_quad(),
+                StreamOpts { granularity: gran, ga, ..Default::default() },
+            );
+            let r = s.run().unwrap();
+            let m = r.best_edp().unwrap().result.metrics;
+            println!(
+                "{:<12} {:>14} {:>12} {:>12.2} {:>12.3e} {:>10.1}",
+                net,
+                name,
+                m.latency_cc,
+                m.energy_pj / 1e6,
+                m.edp(),
+                m.peak_mem_bytes / 1024.0
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,45 @@
+//! Bench: Fig. 12 — GA-based automatic layer-core allocation vs manual
+//! allocation, ResNet-18 on HomTPU and Hetero, both scheduler
+//! priorities.
+//!
+//! ```bash
+//! cargo bench --bench fig12_allocation                 # reduced GA
+//! STREAM_BENCH_SCALE=paper cargo bench --bench fig12_allocation
+//! ```
+
+use stream::allocator::GaParams;
+use stream::experiments::{fig12, fig12::format_rows};
+use stream::util::bench::paper_scale;
+
+fn main() {
+    let ga = if paper_scale() {
+        GaParams { population: 32, generations: 24, ..Default::default() }
+    } else {
+        GaParams { population: 16, generations: 10, ..Default::default() }
+    };
+    println!(
+        "=== Fig. 12: automatic (GA) vs manual allocation (pop {}, {} gens) ===\n",
+        ga.population, ga.generations
+    );
+    let t = std::time::Instant::now();
+    let rows = fig12(ga);
+    println!("{}", format_rows(&rows));
+
+    // the paper's headline: the GA memory leader trades latency for
+    // memory on the heterogeneous architecture
+    let ga_lat = rows
+        .iter()
+        .find(|r| r.arch == "MC:Hetero" && r.method == "GA" && r.priority == "latency")
+        .unwrap();
+    let ga_mem = rows
+        .iter()
+        .find(|r| r.arch == "MC:Hetero" && r.method == "GA" && r.priority == "memory")
+        .unwrap();
+    println!(
+        "hetero GA memory-leader vs latency-leader: {:.0}% memory at {:.0}% latency",
+        100.0 * ga_mem.peak_mem_kb / ga_lat.peak_mem_kb,
+        100.0 * ga_mem.latency_cc as f64 / ga_lat.latency_cc as f64,
+    );
+    println!("(paper: 44% of the memory at 154% of the latency)");
+    println!("\ntotal: {:.1} s", t.elapsed().as_secs_f64());
+}

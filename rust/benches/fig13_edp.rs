@@ -1,0 +1,38 @@
+//! Bench: Fig. 13 — best EDP over the 5 DNNs x 7 iso-area architectures
+//! under layer-by-layer vs fine-grained layer-fused scheduling, with the
+//! per-architecture geometric-mean EDP reduction the paper headlines
+//! (single-core 2.4-4.7x, homogeneous 10-19x, heterogeneous 30.4x).
+//!
+//! ```bash
+//! cargo bench --bench fig13_edp                    # reduced GA budget
+//! STREAM_BENCH_SCALE=paper cargo bench --bench fig13_edp
+//! ```
+//!
+//! The sweep result is cached under target/stream-bench/ and reused by
+//! the Fig. 14 / Fig. 15 benches.
+
+use stream::allocator::GaParams;
+use stream::experiments::fig13::{default_cache_path, format_fig13, sweep_cached};
+use stream::experiments::SweepConfig;
+use stream::util::bench::paper_scale;
+
+fn main() {
+    let ga = if paper_scale() {
+        GaParams { population: 32, generations: 24, ..Default::default() }
+    } else {
+        GaParams { population: 12, generations: 6, ..Default::default() }
+    };
+    let cfg = SweepConfig { ga, ..Default::default() };
+    println!(
+        "=== Fig. 13: EDP, {} workloads x {} archs (GA pop {}, {} gens) ===\n",
+        cfg.workloads.len(),
+        cfg.archs.len(),
+        ga.population,
+        ga.generations
+    );
+    let t = std::time::Instant::now();
+    let cells = sweep_cached(&cfg, &default_cache_path());
+    println!("{}", format_fig13(&cells));
+    println!("paper reference geomeans: SC 2.4-4.7x, Hom 10-19x, Hetero 30.4x");
+    println!("\nsweep: {:.1} s (cached for fig14/fig15)", t.elapsed().as_secs_f64());
+}

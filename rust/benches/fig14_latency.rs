@@ -1,0 +1,25 @@
+//! Bench: Fig. 14 — latency at the best-EDP points of the exploration
+//! (reuses the Fig. 13 sweep cache when present).
+//!
+//! ```bash
+//! cargo bench --bench fig13_edp && cargo bench --bench fig14_latency
+//! ```
+
+use stream::allocator::GaParams;
+use stream::experiments::fig13::{default_cache_path, format_fig14, sweep_cached};
+use stream::experiments::SweepConfig;
+use stream::util::bench::paper_scale;
+
+fn main() {
+    let ga = if paper_scale() {
+        GaParams { population: 32, generations: 24, ..Default::default() }
+    } else {
+        GaParams { population: 12, generations: 6, ..Default::default() }
+    };
+    let cfg = SweepConfig { ga, ..Default::default() };
+    println!("=== Fig. 14: latency at the best-EDP points ===\n");
+    let t = std::time::Instant::now();
+    let cells = sweep_cached(&cfg, &default_cache_path());
+    println!("{}", format_fig14(&cells));
+    println!("total: {:.1} s", t.elapsed().as_secs_f64());
+}

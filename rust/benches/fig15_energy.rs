@@ -1,0 +1,40 @@
+//! Bench: Fig. 15 — energy breakdown (MAC / on-chip SRAM / bus / DRAM)
+//! at the best-EDP points of the exploration (reuses the Fig. 13 sweep
+//! cache when present).  The paper's qualitative claim to check: fusion
+//! slashes the off-chip (DRAM) energy share.
+//!
+//! ```bash
+//! cargo bench --bench fig13_edp && cargo bench --bench fig15_energy
+//! ```
+
+use stream::allocator::GaParams;
+use stream::experiments::fig13::{default_cache_path, format_fig15, sweep_cached};
+use stream::experiments::SweepConfig;
+use stream::util::bench::paper_scale;
+
+fn main() {
+    let ga = if paper_scale() {
+        GaParams { population: 32, generations: 24, ..Default::default() }
+    } else {
+        GaParams { population: 12, generations: 6, ..Default::default() }
+    };
+    let cfg = SweepConfig { ga, ..Default::default() };
+    println!("=== Fig. 15: energy breakdown at the best-EDP points ===\n");
+    let t = std::time::Instant::now();
+    let cells = sweep_cached(&cfg, &default_cache_path());
+    println!("{}", format_fig15(&cells));
+
+    // fusion's DRAM-energy reduction, aggregated
+    let (mut lbl_dram, mut fused_dram) = (0.0, 0.0);
+    for c in &cells {
+        lbl_dram += c.lbl.breakdown.dram_pj;
+        fused_dram += c.fused.breakdown.dram_pj;
+    }
+    println!(
+        "aggregate DRAM energy: lbl {:.3e} pJ -> fused {:.3e} pJ ({:.1}x lower)",
+        lbl_dram,
+        fused_dram,
+        lbl_dram / fused_dram.max(f64::MIN_POSITIVE)
+    );
+    println!("total: {:.1} s", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,91 @@
+//! Bench: hot-path microbenchmarks for the §Perf pass — the inner loops
+//! the GA hammers (dependency generation, cost-model build, one
+//! scheduler run, one GA generation) on ResNet-18 / Hetero.
+//!
+//! ```bash
+//! cargo bench --bench hotpath
+//! ```
+
+use stream::allocator::{allocation_from_genome, Ga, GaParams, Objective};
+use stream::arch::presets;
+use stream::cn::{CnGranularity, CnSet};
+use stream::depgraph::generate;
+use stream::mapping::CostModel;
+use stream::scheduler::{SchedulePriority, Scheduler};
+use stream::util::bench::bench;
+use stream::workload::models::resnet18;
+
+fn main() {
+    println!("=== hot-path microbenchmarks (ResNet-18 on MC:Hetero) ===\n");
+    let w = resnet18();
+    let arch = presets::hetero_quad();
+    let gran = CnGranularity::Lines(4);
+
+    let s = bench("cn_split", 2, 10, || {
+        std::hint::black_box(CnSet::build(&w, gran));
+    });
+    println!("{s}");
+
+    let s = bench("depgraph_generate (rtree)", 2, 10, || {
+        std::hint::black_box(generate(&w, CnSet::build(&w, gran)));
+    });
+    println!("{s}");
+
+    let cns = CnSet::build(&w, gran);
+    let s = bench("cost_model_build", 2, 10, || {
+        std::hint::black_box(CostModel::build(&w, &cns, &arch));
+    });
+    println!("{s}");
+
+    let costs = CostModel::build(&w, &cns, &arch);
+    let graph = generate(&w, CnSet::build(&w, gran));
+    println!(
+        "graph: {} CNs, {} edges, cost table {} entries",
+        graph.len(),
+        graph.edges.len(),
+        costs.len()
+    );
+    let sched = Scheduler::new(&w, &graph, &costs, &arch);
+    let genome: Vec<u16> = (0..w.dense_layers().len()).map(|i| (i % 4) as u16).collect();
+    let alloc = allocation_from_genome(&w, &arch, &genome);
+
+    let s = bench("scheduler_run (latency prio)", 3, 20, || {
+        std::hint::black_box(sched.run(&alloc, SchedulePriority::Latency));
+    });
+    println!("{s}");
+
+    let s = bench("scheduler_run (memory prio)", 3, 20, || {
+        std::hint::black_box(sched.run(&alloc, SchedulePriority::Memory));
+    });
+    println!("{s}");
+
+    // heavyweight case: FSRCNN at line granularity (4480 CNs)
+    {
+        use stream::workload::models::fsrcnn;
+        let w = fsrcnn(560, 960);
+        let gran = CnGranularity::Lines(1);
+        let cns = CnSet::build(&w, gran);
+        let costs = CostModel::build(&w, &cns, &arch);
+        let graph = generate(&w, CnSet::build(&w, gran));
+        let sched = Scheduler::new(&w, &graph, &costs, &arch);
+        let genome: Vec<u16> = (0..w.dense_layers().len()).map(|i| (i % 4) as u16).collect();
+        let alloc = allocation_from_genome(&w, &arch, &genome);
+        let s = bench("scheduler_run fsrcnn lines1 (4480 CNs)", 2, 10, || {
+            std::hint::black_box(sched.run(&alloc, SchedulePriority::Latency));
+        });
+        println!("{s}");
+    }
+
+    let s = bench("ga_8pop_2gen", 1, 5, || {
+        let mut ga = Ga::new(
+            &w,
+            &arch,
+            &sched,
+            SchedulePriority::Latency,
+            Objective::Edp,
+            GaParams { population: 8, generations: 2, ..Default::default() },
+        );
+        std::hint::black_box(ga.run());
+    });
+    println!("{s}");
+}

@@ -1,0 +1,24 @@
+//! Bench: Table I — validation of modeled latency & peak memory against
+//! the three measured SotA architectures.  Prints the same rows the
+//! paper reports plus the framework runtime per target.
+//!
+//! ```bash
+//! cargo bench --bench table1_validation
+//! ```
+
+use stream::experiments::{table1, table1::format_table};
+
+fn main() {
+    println!("=== Table I: validation against measured silicon ===\n");
+    let t = std::time::Instant::now();
+    let rows = table1();
+    println!("{}", format_table(&rows));
+    println!("paper reference accuracies: DepFiN 91%/97%, 4x4 AiMC 99%/N-A, DIANA 96%/98%");
+    for r in &rows {
+        println!(
+            "{:<10} Stream runtime {:>8.1} ms (paper: 5 s / 3 s / 2 s)",
+            r.arch, r.runtime_ms
+        );
+    }
+    println!("\ntotal: {:.2} s", t.elapsed().as_secs_f64());
+}

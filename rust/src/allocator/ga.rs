@@ -1,0 +1,452 @@
+//! The genetic algorithm driving the layer–core allocation search.
+
+use std::collections::HashMap;
+
+use crate::util::{parallel_map, XorShift64};
+
+use super::nsga2::{crowding_distance, fast_non_dominated_sort};
+use super::allocation_from_genome;
+use crate::arch::{Accelerator, CoreId};
+use crate::cost::ScheduleMetrics;
+use crate::scheduler::{SchedulePriority, Scheduler};
+use crate::workload::WorkloadGraph;
+
+/// What the GA minimizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Objective {
+    /// Energy-delay product (scalar) — the Section V criterion.
+    #[default]
+    Edp,
+    Latency,
+    Energy,
+    /// Bi-objective latency + peak memory (Fig. 12's Pareto axes).
+    LatencyMemory,
+    /// Bi-objective latency + energy.
+    LatencyEnergy,
+}
+
+impl Objective {
+    /// Objective vector (all minimized) from schedule metrics.
+    pub fn values(&self, m: &ScheduleMetrics) -> Vec<f64> {
+        match self {
+            Objective::Edp => vec![m.edp()],
+            Objective::Latency => vec![m.latency_cc as f64],
+            Objective::Energy => vec![m.energy_pj],
+            Objective::LatencyMemory => vec![m.latency_cc as f64, m.peak_mem_bytes],
+            Objective::LatencyEnergy => vec![m.latency_cc as f64, m.energy_pj],
+        }
+    }
+}
+
+/// GA hyper-parameters (paper Section III-D defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct GaParams {
+    pub population: usize,
+    pub generations: usize,
+    /// Ordered-crossover probability (paper: 0.3).
+    pub crossover_p: f64,
+    /// Mutation probability (paper: 0.7).
+    pub mutation_p: f64,
+    pub seed: u64,
+    /// Stop early after this many generations without best-front change.
+    pub patience: usize,
+}
+
+impl Default for GaParams {
+    fn default() -> Self {
+        GaParams {
+            population: 32,
+            generations: 24,
+            crossover_p: 0.3,
+            mutation_p: 0.7,
+            seed: 42,
+            patience: 8,
+        }
+    }
+}
+
+/// One Pareto-front member returned by the GA.
+#[derive(Debug, Clone)]
+pub struct GaResult {
+    pub genome: Vec<u16>,
+    pub allocation: Vec<CoreId>,
+    pub metrics: ScheduleMetrics,
+}
+
+/// The GA engine. Owns nothing heavy: fitness evaluation borrows the
+/// prebuilt [`Scheduler`].
+pub struct Ga<'a> {
+    pub workload: &'a WorkloadGraph,
+    pub arch: &'a Accelerator,
+    pub scheduler: &'a Scheduler<'a>,
+    pub priority: SchedulePriority,
+    pub objective: Objective,
+    pub params: GaParams,
+    /// Fitness memo: genomes seen across generations.
+    cache: HashMap<Vec<u16>, ScheduleMetrics>,
+}
+
+impl<'a> Ga<'a> {
+    pub fn new(
+        workload: &'a WorkloadGraph,
+        arch: &'a Accelerator,
+        scheduler: &'a Scheduler<'a>,
+        priority: SchedulePriority,
+        objective: Objective,
+        params: GaParams,
+    ) -> Ga<'a> {
+        Ga { workload, arch, scheduler, priority, objective, params, cache: HashMap::new() }
+    }
+
+    fn genome_len(&self) -> usize {
+        self.workload.dense_layers().len()
+    }
+
+    fn n_cores(&self) -> usize {
+        self.arch.dense_cores().len()
+    }
+
+    fn evaluate(&mut self, genomes: &[Vec<u16>]) -> Vec<ScheduleMetrics> {
+        // evaluate unseen genomes in parallel, then fill from the cache
+        let fresh: Vec<Vec<u16>> = genomes
+            .iter()
+            .filter(|g| !self.cache.contains_key(*g))
+            .cloned()
+            .collect::<std::collections::HashSet<_>>()
+            .into_iter()
+            .collect();
+        let (workload, arch, scheduler, priority) =
+            (self.workload, self.arch, self.scheduler, self.priority);
+        let results: Vec<(Vec<u16>, ScheduleMetrics)> = parallel_map(fresh, |g| {
+            let alloc = allocation_from_genome(workload, arch, &g);
+            let m = scheduler.run(&alloc, priority).metrics;
+            (g, m)
+        });
+        self.cache.extend(results);
+        genomes.iter().map(|g| self.cache[g]).collect()
+    }
+
+    fn random_genome(&self, rng: &mut XorShift64) -> Vec<u16> {
+        (0..self.genome_len()).map(|_| rng.below(self.n_cores() as u64) as u16).collect()
+    }
+
+    /// Ordered two-point crossover: child takes parent A's gene order
+    /// outside the cut and parent B's inside (assignment-genome variant
+    /// of the paper's ordered crossover).
+    fn crossover(&self, a: &[u16], b: &[u16], rng: &mut XorShift64) -> Vec<u16> {
+        let n = a.len();
+        if n < 2 {
+            return a.to_vec();
+        }
+        let mut lo = rng.below(n as u64) as usize;
+        let mut hi = rng.below(n as u64) as usize;
+        if lo > hi {
+            std::mem::swap(&mut lo, &mut hi);
+        }
+        let mut child = a.to_vec();
+        child[lo..=hi].copy_from_slice(&b[lo..=hi]);
+        child
+    }
+
+    /// Mutation: bit flip (random layer to a random core) or position
+    /// flip (swap two layers' allocations), 50/50.
+    fn mutate(&self, g: &mut [u16], rng: &mut XorShift64) {
+        let n = g.len();
+        if n == 0 {
+            return;
+        }
+        if rng.unit() < 0.5 || n == 1 {
+            let i = rng.below(n as u64) as usize;
+            g[i] = rng.below(self.n_cores() as u64) as u16;
+        } else {
+            let i = rng.below(n as u64) as usize;
+            let j = rng.below(n as u64) as usize;
+            g.swap(i, j);
+        }
+    }
+
+    /// Heuristic seed genomes: round-robin ping-pong, each
+    /// single-core-only assignment, and per-layer greedy minimum-EDP —
+    /// cheap starting points the GA refines (it converges far faster on
+    /// 50-gene genomes than from pure noise).
+    fn seed_genomes(&self) -> Vec<Vec<u16>> {
+        let n = self.genome_len();
+        let k = self.n_cores();
+        let mut seeds = Vec::new();
+        // ping-pong
+        seeds.push((0..n).map(|i| (i % k) as u16).collect());
+        // each core alone
+        for c in 0..k {
+            seeds.push(vec![c as u16; n]);
+        }
+        // greedy: per dense layer, the core with the lowest CN edp
+        let dense_cores = self.arch.dense_cores();
+        let mut greedy = Vec::with_capacity(n);
+        for lid in self.workload.dense_layers() {
+            let cn = &self.scheduler.graph.cns.layer_cns(lid)[0];
+            let best = (0..dense_cores.len())
+                .min_by(|&a, &b| {
+                    let ca = self.scheduler.costs.cn_cost(cn, dense_cores[a]).edp();
+                    let cb = self.scheduler.costs.cn_cost(cn, dense_cores[b]).edp();
+                    ca.partial_cmp(&cb).unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .unwrap_or(0);
+            greedy.push(best as u16);
+        }
+        seeds.push(greedy);
+        seeds
+    }
+
+    /// Run the GA; returns the final Pareto front (deduplicated).
+    pub fn run(&mut self) -> Vec<GaResult> {
+        let mut rng = XorShift64::new(self.params.seed);
+        let pop_size = self.params.population.max(4);
+        let mut population: Vec<Vec<u16>> = self.seed_genomes();
+        population.truncate(pop_size);
+        while population.len() < pop_size {
+            population.push(self.random_genome(&mut rng));
+        }
+
+        let mut best_scalar = f64::INFINITY;
+        let mut stale = 0usize;
+
+        for _gen in 0..self.params.generations {
+            // --- variation: offspring from the current population ---
+            let mut offspring = Vec::with_capacity(pop_size);
+            for _ in 0..pop_size {
+                let a = &population[rng.below(population.len() as u64) as usize];
+                let b = &population[rng.below(population.len() as u64) as usize];
+                let mut child = if rng.unit() < self.params.crossover_p {
+                    self.crossover(a, b, &mut rng)
+                } else {
+                    a.clone()
+                };
+                if rng.unit() < self.params.mutation_p {
+                    self.mutate(&mut child, &mut rng);
+                }
+                offspring.push(child);
+            }
+
+            // --- NSGA-II environmental selection over parents+children ---
+            let mut pool: Vec<Vec<u16>> = population.clone();
+            pool.extend(offspring);
+            let metrics = self.evaluate(&pool);
+            let points: Vec<Vec<f64>> =
+                metrics.iter().map(|m| self.objective.values(m)).collect();
+            let fronts = fast_non_dominated_sort(&points);
+
+            let mut survivors: Vec<usize> = Vec::with_capacity(pop_size);
+            for front in &fronts {
+                if survivors.len() + front.len() <= pop_size {
+                    survivors.extend_from_slice(front);
+                } else {
+                    let d = crowding_distance(front, &points);
+                    let mut order: Vec<usize> = (0..front.len()).collect();
+                    order.sort_by(|&x, &y| {
+                        d[y].partial_cmp(&d[x]).unwrap_or(std::cmp::Ordering::Equal)
+                    });
+                    for &w in order.iter().take(pop_size - survivors.len()) {
+                        survivors.push(front[w]);
+                    }
+                    break;
+                }
+            }
+            population = survivors.iter().map(|&i| pool[i].clone()).collect();
+
+            // --- saturation check on the best scalarized objective ---
+            let gen_best = points
+                .iter()
+                .map(|p| p.iter().product::<f64>())
+                .fold(f64::INFINITY, f64::min);
+            if gen_best < best_scalar * 0.999 {
+                best_scalar = gen_best;
+                stale = 0;
+            } else {
+                stale += 1;
+                if stale >= self.params.patience {
+                    break;
+                }
+            }
+        }
+
+        // final Pareto front over every genome ever evaluated
+        let all: Vec<(Vec<u16>, ScheduleMetrics)> =
+            self.cache.iter().map(|(g, m)| (g.clone(), *m)).collect();
+        let points: Vec<Vec<f64>> =
+            all.iter().map(|(_, m)| self.objective.values(m)).collect();
+        let fronts = fast_non_dominated_sort(&points);
+        let mut seen = std::collections::HashSet::new();
+        let mut results: Vec<GaResult> = fronts
+            .first()
+            .map(|f| {
+                f.iter()
+                    .filter(|&&i| seen.insert(points[i].iter().map(|v| v.to_bits()).collect::<Vec<_>>()))
+                    .map(|&i| GaResult {
+                        genome: all[i].0.clone(),
+                        allocation: allocation_from_genome(self.workload, self.arch, &all[i].0),
+                        metrics: all[i].1,
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        results.sort_by(|a, b| {
+            a.metrics
+                .edp()
+                .partial_cmp(&b.metrics.edp())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        results
+    }
+}
+
+/// The manual baselines of Section V-A: ping-pong across cores for
+/// homogeneous architectures, best-spatial-utilization core for
+/// heterogeneous ones.
+pub fn manual_allocation(
+    workload: &WorkloadGraph,
+    arch: &Accelerator,
+    costs: &crate::mapping::CostModel,
+    cns: &crate::cn::CnSet,
+    heterogeneous: bool,
+) -> Vec<CoreId> {
+    let dense = arch.dense_cores();
+    let simd = arch.simd_core().unwrap_or(dense[0]);
+    let mut i = 0usize;
+    workload
+        .layers()
+        .iter()
+        .map(|l| {
+            if !l.op.is_dense() {
+                return simd;
+            }
+            let core = if heterogeneous {
+                // pick the dense core with the best spatial utilization
+                let cn = &cns.layer_cns(l.id)[0];
+                *dense
+                    .iter()
+                    .max_by(|&&a, &&b| {
+                        let ua = costs.cn_cost(cn, a).spatial_util;
+                        let ub = costs.cn_cost(cn, b).spatial_util;
+                        ua.partial_cmp(&ub).unwrap_or(std::cmp::Ordering::Equal)
+                    })
+                    .unwrap()
+            } else {
+                // ping-pong: subsequent layers on subsequent cores
+                dense[i % dense.len()]
+            };
+            i += 1;
+            core
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::cn::{CnGranularity, CnSet};
+    use crate::depgraph::generate;
+    use crate::mapping::CostModel;
+    use crate::workload::models::tiny_segment;
+
+    struct Fixture {
+        w: WorkloadGraph,
+        arch: Accelerator,
+        g: crate::depgraph::CnGraph,
+        costs: CostModel,
+    }
+
+    fn fixture() -> Fixture {
+        let w = tiny_segment();
+        let arch = presets::hetero_quad();
+        let cns = CnSet::build(&w, CnGranularity::Lines(4));
+        let costs = CostModel::build(&w, &cns, &arch);
+        let g = generate(&w, CnSet::build(&w, CnGranularity::Lines(4)));
+        Fixture { w, arch, g, costs }
+    }
+
+    #[test]
+    fn ga_improves_over_random() {
+        let f = fixture();
+        let sched = Scheduler::new(&f.w, &f.g, &f.costs, &f.arch);
+        let params = GaParams { population: 12, generations: 8, ..Default::default() };
+        let mut ga = Ga::new(&f.w, &f.arch, &sched, SchedulePriority::Latency,
+                             Objective::Edp, params);
+        let front = ga.run();
+        assert!(!front.is_empty());
+        // the best found EDP must beat a deliberately bad allocation
+        // (everything on one small core)
+        let bad = allocation_from_genome(&f.w, &f.arch, &[0, 0, 0]);
+        let bad_m = sched.run(&bad, SchedulePriority::Latency).metrics;
+        assert!(front[0].metrics.edp() <= bad_m.edp());
+    }
+
+    #[test]
+    fn ga_deterministic_for_seed() {
+        let f = fixture();
+        let sched = Scheduler::new(&f.w, &f.g, &f.costs, &f.arch);
+        let params = GaParams { population: 8, generations: 4, ..Default::default() };
+        let run = |seed| {
+            let mut ga = Ga::new(&f.w, &f.arch, &sched, SchedulePriority::Latency,
+                                 Objective::Edp, GaParams { seed, ..params });
+            ga.run()[0].metrics.edp()
+        };
+        assert_eq!(run(7).to_bits(), run(7).to_bits());
+    }
+
+    #[test]
+    fn pareto_front_is_nondominated() {
+        let f = fixture();
+        let sched = Scheduler::new(&f.w, &f.g, &f.costs, &f.arch);
+        let params = GaParams { population: 12, generations: 6, ..Default::default() };
+        let mut ga = Ga::new(&f.w, &f.arch, &sched, SchedulePriority::Latency,
+                             Objective::LatencyMemory, params);
+        let front = ga.run();
+        for a in &front {
+            for b in &front {
+                let pa = Objective::LatencyMemory.values(&a.metrics);
+                let pb = Objective::LatencyMemory.values(&b.metrics);
+                assert!(!super::super::nsga2::dominates(&pa, &pb) || pa == pb);
+            }
+        }
+    }
+
+    #[test]
+    fn manual_heterogeneous_picks_best_fit() {
+        let f = fixture();
+        let cns = CnSet::build(&f.w, CnGranularity::Lines(4));
+        let alloc = manual_allocation(&f.w, &f.arch, &f.costs, &cns, true);
+        // all layers allocated, simd layers pinned
+        assert_eq!(alloc.len(), f.w.len());
+        assert_eq!(alloc[1], f.arch.simd_core().unwrap());
+    }
+
+    #[test]
+    fn manual_pingpong_cycles_cores() {
+        let f = fixture();
+        let cns = CnSet::build(&f.w, CnGranularity::Lines(4));
+        let alloc = manual_allocation(&f.w, &f.arch, &f.costs, &cns, false);
+        // dense layers 0,2,3 -> cores 0,1,2
+        assert_eq!(alloc[0], CoreId(0));
+        assert_eq!(alloc[2], CoreId(1));
+        assert_eq!(alloc[3], CoreId(2));
+    }
+
+    #[test]
+    fn crossover_and_mutation_keep_genome_valid() {
+        let f = fixture();
+        let sched = Scheduler::new(&f.w, &f.g, &f.costs, &f.arch);
+        let ga = Ga::new(&f.w, &f.arch, &sched, SchedulePriority::Latency,
+                         Objective::Edp, GaParams::default());
+        let mut rng = XorShift64::new(1);
+        let a = ga.random_genome(&mut rng);
+        let b = ga.random_genome(&mut rng);
+        for _ in 0..50 {
+            let mut c = ga.crossover(&a, &b, &mut rng);
+            ga.mutate(&mut c, &mut rng);
+            assert_eq!(c.len(), a.len());
+            let alloc = allocation_from_genome(&f.w, &f.arch, &c);
+            assert_eq!(alloc.len(), f.w.len());
+        }
+    }
+}

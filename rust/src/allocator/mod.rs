@@ -1,0 +1,75 @@
+//! Step 4 — layer–core allocation via a genetic algorithm.
+//!
+//! The genome assigns every *dense* layer (conv / dwconv / fc) to one of
+//! the architecture's dataflow cores; pooling and elementwise layers are
+//! pinned to the SIMD core (paper Section V-B).  Selection uses NSGA-II
+//! [7] (fast non-dominated sort + crowding distance); variation is an
+//! ordered two-point crossover (p = 0.3) and a mutation (p = 0.7) that
+//! either bit-flips one gene (reallocating a layer to a different core)
+//! or swaps two layers' allocations — exactly the operators of paper
+//! Section III-D.  The GA returns the Pareto front of allocations.
+
+mod ga;
+mod nsga2;
+
+pub use ga::{manual_allocation, Ga, GaParams, GaResult, Objective};
+pub use nsga2::{crowding_distance, fast_non_dominated_sort, dominates};
+
+use crate::arch::{Accelerator, CoreId};
+use crate::workload::WorkloadGraph;
+
+/// Expand a dense-layer genome into a per-layer core allocation
+/// (pool/add/concat layers pinned to the SIMD core, or to the first
+/// dense core if the architecture has none).
+pub fn allocation_from_genome(
+    workload: &WorkloadGraph,
+    arch: &Accelerator,
+    genome: &[u16],
+) -> Vec<CoreId> {
+    let dense_cores = arch.dense_cores();
+    let simd = arch.simd_core().unwrap_or(dense_cores[0]);
+    let mut gi = 0;
+    workload
+        .layers()
+        .iter()
+        .map(|l| {
+            if l.op.is_dense() {
+                let c = dense_cores[genome[gi] as usize % dense_cores.len()];
+                gi += 1;
+                c
+            } else {
+                simd
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::workload::models::tiny_segment;
+
+    #[test]
+    fn genome_expansion() {
+        let w = tiny_segment();
+        let arch = presets::hetero_quad();
+        // 3 dense layers (conv7x7, conv3x3a, conv3x3b)
+        let alloc = allocation_from_genome(&w, &arch, &[0, 1, 2]);
+        assert_eq!(alloc.len(), w.len());
+        let simd = arch.simd_core().unwrap();
+        assert_eq!(alloc[1], simd); // maxpool
+        assert_eq!(alloc[4], simd); // add
+        assert_eq!(alloc[0], CoreId(0));
+        assert_eq!(alloc[2], CoreId(1));
+        assert_eq!(alloc[3], CoreId(2));
+    }
+
+    #[test]
+    fn genome_wraps_out_of_range() {
+        let w = tiny_segment();
+        let arch = presets::test_dual(); // 2 dense cores
+        let alloc = allocation_from_genome(&w, &arch, &[5, 0, 1]);
+        assert_eq!(alloc[0], CoreId(1)); // 5 % 2
+    }
+}

@@ -1,0 +1,140 @@
+//! NSGA-II primitives: Pareto dominance, fast non-dominated sorting and
+//! crowding distance (Deb et al. [7]).
+
+/// Does `a` Pareto-dominate `b` (all objectives <=, at least one <)?
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Fast non-dominated sort: partitions indices into fronts, best first.
+pub fn fast_non_dominated_sort(points: &[Vec<f64>]) -> Vec<Vec<usize>> {
+    let n = points.len();
+    let mut dominated_by: Vec<usize> = vec![0; n]; // count dominating me
+    let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if dominates(&points[i], &points[j]) {
+                dominates_list[i].push(j);
+                dominated_by[j] += 1;
+            } else if dominates(&points[j], &points[i]) {
+                dominates_list[j].push(i);
+                dominated_by[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> =
+        (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            for &j in &dominates_list[i] {
+                dominated_by[j] -= 1;
+                if dominated_by[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(std::mem::take(&mut current));
+        current = next;
+    }
+    fronts
+}
+
+/// Crowding distance of each member of one front (index-aligned).
+/// Boundary points get +inf so they always survive.
+pub fn crowding_distance(front: &[usize], points: &[Vec<f64>]) -> Vec<f64> {
+    let m = front.len();
+    let mut dist = vec![0.0f64; m];
+    if m == 0 {
+        return dist;
+    }
+    if m <= 2 {
+        return vec![f64::INFINITY; m];
+    }
+    let n_obj = points[front[0]].len();
+    for obj in 0..n_obj {
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| {
+            points[front[a]][obj]
+                .partial_cmp(&points[front[b]][obj])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let lo = points[front[order[0]]][obj];
+        let hi = points[front[order[m - 1]]][obj];
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        let span = (hi - lo).max(f64::MIN_POSITIVE);
+        for w in 1..m - 1 {
+            let prev = points[front[order[w - 1]]][obj];
+            let next = points[front[order[w + 1]]][obj];
+            dist[order[w]] += (next - prev) / span;
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0])); // trade-off
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0])); // equal
+    }
+
+    #[test]
+    fn sort_known_fronts() {
+        let pts = vec![
+            vec![1.0, 4.0], // front 0
+            vec![2.0, 3.0], // front 0
+            vec![3.0, 3.5], // dominated by [2,3]
+            vec![4.0, 1.0], // front 0
+            vec![5.0, 5.0], // dominated by everything
+        ];
+        let fronts = fast_non_dominated_sort(&pts);
+        assert_eq!(fronts[0], vec![0, 1, 3]);
+        assert_eq!(fronts[1], vec![2]);
+        assert_eq!(fronts[2], vec![4]);
+    }
+
+    #[test]
+    fn sort_single_objective_is_total_order() {
+        let pts = vec![vec![3.0], vec![1.0], vec![2.0]];
+        let fronts = fast_non_dominated_sort(&pts);
+        assert_eq!(fronts.len(), 3);
+        assert_eq!(fronts[0], vec![1]);
+    }
+
+    #[test]
+    fn crowding_boundaries_infinite() {
+        let pts = vec![vec![1.0, 4.0], vec![2.0, 3.0], vec![3.0, 2.0], vec![4.0, 1.0]];
+        let front: Vec<usize> = (0..4).collect();
+        let d = crowding_distance(&front, &pts);
+        assert!(d[0].is_infinite());
+        assert!(d[3].is_infinite());
+        assert!(d[1].is_finite() && d[1] > 0.0);
+    }
+
+    #[test]
+    fn crowding_prefers_spread() {
+        // middle point crammed next to index 0 gets lower distance
+        let pts = vec![vec![0.0, 10.0], vec![0.5, 9.5], vec![5.0, 5.0], vec![10.0, 0.0]];
+        let front: Vec<usize> = (0..4).collect();
+        let d = crowding_distance(&front, &pts);
+        assert!(d[2] > d[1]);
+    }
+}

@@ -1,0 +1,205 @@
+//! Multi-core accelerator architecture model (paper Fig. 2).
+//!
+//! An [`Accelerator`] is a set of [`Core`]s — dense dataflow PE arrays
+//! and an auxiliary SIMD core — connected by a limited-bandwidth
+//! inter-core communication bus and a shared off-chip DRAM port.
+//! Each core carries its spatial [`Dataflow`] (the unrolled loop dims),
+//! private activation/weight SRAMs and a local port bandwidth.
+//!
+//! [`presets`] defines the seven iso-area exploration architectures of
+//! Fig. 11 and the three validation targets of Fig. 9.
+
+pub mod presets;
+
+use crate::cacti;
+use crate::workload::Dim;
+
+/// Identifier of a core within an accelerator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CoreId(pub usize);
+
+impl std::fmt::Display for CoreId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "core{}", self.0)
+    }
+}
+
+/// A spatial dataflow: which loop dims the PE array unrolls, and by how
+/// much.  E.g. the TPU-like core is `C 32 | K 32`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Dataflow(pub Vec<(Dim, usize)>);
+
+impl Dataflow {
+    pub fn new(unrolls: &[(Dim, usize)]) -> Self {
+        Dataflow(unrolls.to_vec())
+    }
+
+    /// Spatial unrolling factor of a dim (1 if not unrolled).
+    pub fn unroll(&self, d: Dim) -> usize {
+        self.0
+            .iter()
+            .filter(|(dd, _)| *dd == d)
+            .map(|(_, u)| *u)
+            .product::<usize>()
+            .max(1)
+    }
+
+    /// Total PE count (product of all unrollings).
+    pub fn pe_count(&self) -> usize {
+        self.0.iter().map(|(_, u)| u).product::<usize>().max(1)
+    }
+}
+
+impl std::fmt::Display for Dataflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let parts: Vec<String> =
+            self.0.iter().map(|(d, u)| format!("{d:?} {u}")).collect();
+        write!(f, "{}", parts.join(" | "))
+    }
+}
+
+/// The compute fabric of a core.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CoreKind {
+    /// Digital PE array with the given MAC energy (pJ/MAC).
+    Digital { mac_pj: f64 },
+    /// Analog in-memory-compute array: cheap MACs, weights live in the
+    /// array itself and reloading them costs `weight_load_pj` per bit.
+    /// `act_bits_per_cycle` models bit-serial DAC input application
+    /// (Jia et al. apply 2 activation bits per cycle; DIANA's array
+    /// takes the full word at once).
+    Aimc { mac_pj: f64, weight_load_pj: f64, act_bits_per_cycle: usize },
+    /// SIMD vector core for pool / elementwise layers.
+    Simd { lanes: usize, op_pj: f64 },
+}
+
+/// One accelerator core (paper Fig. 2b).
+#[derive(Debug, Clone)]
+pub struct Core {
+    pub id: CoreId,
+    pub name: String,
+    pub kind: CoreKind,
+    /// Spatial dataflow of the PE array (empty for SIMD cores).
+    pub dataflow: Dataflow,
+    /// Private activation SRAM capacity in bytes.
+    pub act_mem_bytes: u64,
+    /// Private weight SRAM capacity in bytes (0 => streamed from DRAM).
+    pub wgt_mem_bytes: u64,
+    /// Local SRAM port bandwidth, bits per clock cycle.
+    pub sram_bw_bits: u64,
+}
+
+impl Core {
+    pub fn is_simd(&self) -> bool {
+        matches!(self.kind, CoreKind::Simd { .. })
+    }
+
+    /// MAC / op energy of this fabric in pJ.
+    pub fn mac_pj(&self) -> f64 {
+        match self.kind {
+            CoreKind::Digital { mac_pj } => mac_pj,
+            CoreKind::Aimc { mac_pj, .. } => mac_pj,
+            CoreKind::Simd { op_pj, .. } => op_pj,
+        }
+    }
+
+    /// Parallel lanes: PE count for arrays, lane count for SIMD.
+    pub fn parallelism(&self) -> usize {
+        match self.kind {
+            CoreKind::Simd { lanes, .. } => lanes,
+            _ => self.dataflow.pe_count(),
+        }
+    }
+
+    /// Activation SRAM access energies (pJ per `word_bits` access).
+    pub fn act_read_pj(&self, word_bits: u64) -> f64 {
+        cacti::sram_read_pj(self.act_mem_bytes.max(1024), word_bits)
+    }
+
+    pub fn act_write_pj(&self, word_bits: u64) -> f64 {
+        cacti::sram_write_pj(self.act_mem_bytes.max(1024), word_bits)
+    }
+
+    pub fn wgt_read_pj(&self, word_bits: u64) -> f64 {
+        cacti::sram_read_pj(self.wgt_mem_bytes.max(1024), word_bits)
+    }
+}
+
+/// The whole multi-core accelerator (paper Fig. 2a).
+#[derive(Debug, Clone)]
+pub struct Accelerator {
+    pub name: String,
+    pub cores: Vec<Core>,
+    /// Inter-core communication bus bandwidth, bits per cycle.
+    pub bus_bw_bits: u64,
+    /// Bus transfer energy, pJ/bit.
+    pub bus_pj_per_bit: f64,
+    /// Shared off-chip DRAM port bandwidth, bits per cycle.
+    pub dram_bw_bits: u64,
+    /// DRAM access energy, pJ/bit.
+    pub dram_pj_per_bit: f64,
+}
+
+impl Accelerator {
+    pub fn core(&self, id: CoreId) -> &Core {
+        &self.cores[id.0]
+    }
+
+    /// Ids of the dense dataflow cores (GA allocation targets).
+    pub fn dense_cores(&self) -> Vec<CoreId> {
+        self.cores.iter().filter(|c| !c.is_simd()).map(|c| c.id).collect()
+    }
+
+    /// Id of the SIMD core (pool / add layers), if present.
+    pub fn simd_core(&self) -> Option<CoreId> {
+        self.cores.iter().find(|c| c.is_simd()).map(|c| c.id)
+    }
+
+    /// Total on-chip memory in bytes (area-parity bookkeeping).
+    pub fn total_onchip_bytes(&self) -> u64 {
+        self.cores.iter().map(|c| c.act_mem_bytes + c.wgt_mem_bytes).sum()
+    }
+
+    /// Total PE count across dense cores.
+    pub fn total_pes(&self) -> usize {
+        self.cores.iter().filter(|c| !c.is_simd()).map(|c| c.parallelism()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataflow_unroll_lookup() {
+        let df = Dataflow::new(&[(Dim::C, 32), (Dim::K, 32)]);
+        assert_eq!(df.unroll(Dim::C), 32);
+        assert_eq!(df.unroll(Dim::OX), 1);
+        assert_eq!(df.pe_count(), 1024);
+    }
+
+    #[test]
+    fn eyeriss_like_dataflow() {
+        let df = Dataflow::new(&[(Dim::OX, 64), (Dim::FX, 4), (Dim::FY, 4)]);
+        assert_eq!(df.pe_count(), 1024);
+        assert_eq!(df.unroll(Dim::FY), 4);
+    }
+
+    #[test]
+    fn preset_iso_area() {
+        // all seven exploration architectures share 1 MB on-chip memory
+        // and 4096 dense PEs (paper: identical area footprint)
+        for arch in presets::exploration_archs() {
+            assert_eq!(arch.total_onchip_bytes(), 1024 * 1024, "{}", arch.name);
+            assert_eq!(arch.total_pes(), 4096, "{}", arch.name);
+            assert!(arch.simd_core().is_some(), "{}", arch.name);
+        }
+    }
+
+    #[test]
+    fn dense_core_listing() {
+        let a = presets::hetero_quad();
+        assert_eq!(a.dense_cores().len(), 4);
+        assert!(a.simd_core().is_some());
+    }
+}

@@ -1,0 +1,312 @@
+//! Architecture presets: the seven iso-area exploration architectures of
+//! paper Fig. 11 and the three validation targets of Fig. 9.
+//!
+//! Exploration invariants (Section V): every architecture has 4096 dense
+//! PEs, 1 MB of on-chip memory spread across its cores, a 128 bit/cc
+//! inter-core bus and a shared 64 bit/cc DRAM port, plus an auxiliary
+//! SIMD core for pooling / residual-add layers.
+
+use super::{Accelerator, Core, CoreId, CoreKind, Dataflow};
+use crate::cacti;
+use crate::workload::Dim;
+
+/// On-chip budget shared by all exploration architectures (1 MB).
+const TOTAL_ONCHIP: u64 = 1024 * 1024;
+/// SIMD core activation buffer carved out of the budget.
+const SIMD_BUF: u64 = 64 * 1024;
+/// Exploration bus bandwidth (bits per clock cycle), paper Section V.
+const BUS_BW: u64 = 128;
+/// Exploration shared DRAM port bandwidth (bits per clock cycle).
+const DRAM_BW: u64 = 64;
+/// Local SRAM port width per core, bits per cycle.
+const SRAM_BW: u64 = 512;
+
+fn digital_core(id: usize, name: &str, df: &[(Dim, usize)], act: u64, wgt: u64) -> Core {
+    Core {
+        id: CoreId(id),
+        name: name.to_string(),
+        kind: CoreKind::Digital { mac_pj: cacti::MAC_PJ_DIGITAL_8B },
+        dataflow: Dataflow::new(df),
+        act_mem_bytes: act,
+        wgt_mem_bytes: wgt,
+        sram_bw_bits: SRAM_BW,
+    }
+}
+
+fn simd_core(id: usize, act: u64) -> Core {
+    Core {
+        id: CoreId(id),
+        name: "simd".to_string(),
+        kind: CoreKind::Simd { lanes: 64, op_pj: cacti::SIMD_OP_PJ },
+        dataflow: Dataflow::new(&[]),
+        act_mem_bytes: act,
+        wgt_mem_bytes: 0,
+        sram_bw_bits: SRAM_BW,
+    }
+}
+
+fn exploration(name: &str, dense: Vec<Core>) -> Accelerator {
+    let mut cores = dense;
+    let next = cores.len();
+    cores.push(simd_core(next, SIMD_BUF));
+    Accelerator {
+        name: name.to_string(),
+        cores,
+        bus_bw_bits: BUS_BW,
+        bus_pj_per_bit: cacti::BUS_PJ_PER_BIT,
+        dram_bw_bits: DRAM_BW,
+        dram_pj_per_bit: cacti::DRAM_PJ_PER_BIT,
+    }
+}
+
+fn split(total: u64) -> (u64, u64) {
+    (total / 2, total - total / 2)
+}
+
+/// SC: TPU — single core, `C 64 | K 64` (TPU-like weight-stationary).
+pub fn sc_tpu() -> Accelerator {
+    let (act, wgt) = split(TOTAL_ONCHIP - SIMD_BUF);
+    exploration(
+        "SC:TPU",
+        vec![digital_core(0, "tpu", &[(Dim::C, 64), (Dim::K, 64)], act, wgt)],
+    )
+}
+
+/// SC: Eye — single core, `OX 256 | FX 4 | FY 4` (Eyeriss-like row-stationary).
+pub fn sc_eye() -> Accelerator {
+    let (act, wgt) = split(TOTAL_ONCHIP - SIMD_BUF);
+    exploration(
+        "SC:Eye",
+        vec![digital_core(0, "eye", &[(Dim::OX, 256), (Dim::FX, 4), (Dim::FY, 4)], act, wgt)],
+    )
+}
+
+/// SC: Env — single core, `OX 64 | K 64` (Envision-like).
+pub fn sc_env() -> Accelerator {
+    let (act, wgt) = split(TOTAL_ONCHIP - SIMD_BUF);
+    exploration(
+        "SC:Env",
+        vec![digital_core(0, "env", &[(Dim::OX, 64), (Dim::K, 64)], act, wgt)],
+    )
+}
+
+/// MC: HomTPU — homogeneous quad-core, each `C 32 | K 32`.
+pub fn hom_tpu() -> Accelerator {
+    let per = (TOTAL_ONCHIP - SIMD_BUF) / 4;
+    let (act, wgt) = split(per);
+    exploration(
+        "MC:HomTPU",
+        (0..4)
+            .map(|i| digital_core(i, &format!("tpu{i}"), &[(Dim::C, 32), (Dim::K, 32)], act, wgt))
+            .collect(),
+    )
+}
+
+/// MC: HomEye — homogeneous quad-core, each `OX 64 | FX 4 | FY 4`.
+pub fn hom_eye() -> Accelerator {
+    let per = (TOTAL_ONCHIP - SIMD_BUF) / 4;
+    let (act, wgt) = split(per);
+    exploration(
+        "MC:HomEye",
+        (0..4)
+            .map(|i| {
+                digital_core(
+                    i,
+                    &format!("eye{i}"),
+                    &[(Dim::OX, 64), (Dim::FX, 4), (Dim::FY, 4)],
+                    act,
+                    wgt,
+                )
+            })
+            .collect(),
+    )
+}
+
+/// MC: HomEnv — homogeneous quad-core, each `OX 32 | K 32`.
+pub fn hom_env() -> Accelerator {
+    let per = (TOTAL_ONCHIP - SIMD_BUF) / 4;
+    let (act, wgt) = split(per);
+    exploration(
+        "MC:HomEnv",
+        (0..4)
+            .map(|i| digital_core(i, &format!("env{i}"), &[(Dim::OX, 32), (Dim::K, 32)], act, wgt))
+            .collect(),
+    )
+}
+
+/// MC: Hetero — heterogeneous quad-core (paper Fig. 11):
+/// core0 `OX 64 | FX 4 | FY 4`, core1 `OX 32 | K 32`,
+/// cores 2/3 `C 32 | K 32`.
+pub fn hetero_quad() -> Accelerator {
+    let per = (TOTAL_ONCHIP - SIMD_BUF) / 4;
+    let (act, wgt) = split(per);
+    exploration(
+        "MC:Hetero",
+        vec![
+            digital_core(0, "eye", &[(Dim::OX, 64), (Dim::FX, 4), (Dim::FY, 4)], act, wgt),
+            digital_core(1, "env", &[(Dim::OX, 32), (Dim::K, 32)], act, wgt),
+            digital_core(2, "tpu-a", &[(Dim::C, 32), (Dim::K, 32)], act, wgt),
+            digital_core(3, "tpu-b", &[(Dim::C, 32), (Dim::K, 32)], act, wgt),
+        ],
+    )
+}
+
+/// All seven exploration architectures in Fig. 11 order.
+pub fn exploration_archs() -> Vec<Accelerator> {
+    vec![sc_tpu(), sc_eye(), sc_env(), hom_tpu(), hom_eye(), hom_env(), hetero_quad()]
+}
+
+/// Look an architecture up by CLI name.
+pub fn by_name(name: &str) -> Option<Accelerator> {
+    match name {
+        "sc-tpu" => Some(sc_tpu()),
+        "sc-eye" => Some(sc_eye()),
+        "sc-env" => Some(sc_env()),
+        "hom-tpu" => Some(hom_tpu()),
+        "hom-eye" => Some(hom_eye()),
+        "hom-env" => Some(hom_env()),
+        "hetero" => Some(hetero_quad()),
+        "depfin" => Some(depfin()),
+        "aimc-4x4" => Some(aimc_4x4()),
+        "diana" => Some(diana()),
+        _ => None,
+    }
+}
+
+pub const ARCH_NAMES: &[&str] = &[
+    "sc-tpu", "sc-eye", "sc-env", "hom-tpu", "hom-eye", "hom-env", "hetero",
+    "depfin", "aimc-4x4", "diana",
+];
+
+// ---------------------------------------------------------------------------
+// Validation targets (Fig. 9)
+// ---------------------------------------------------------------------------
+
+/// DepFiN-like single-core depth-first CNN processor (Goetschalckx &
+/// Verhelst, VLSI'21): a large digital PE array tuned for
+/// high-resolution pixel processing, line-buffered on-chip memory.
+pub fn depfin() -> Accelerator {
+    // DepFiN is a pixel-processing engine: a wide output-pixel-parallel
+    // array (3.8 TOPS class) that keeps near-full utilization on
+    // super-resolution CNNs whose layers have huge OX and small K.
+    let dense = digital_core(
+        0,
+        "depfin",
+        &[(Dim::OX, 512), (Dim::K, 4)],
+        600 * 1024, // line buffers
+        400 * 1024, // weight SRAM
+    );
+    Accelerator {
+        name: "DepFiN".to_string(),
+        cores: vec![dense, simd_core(1, 32 * 1024)],
+        bus_bw_bits: 256,
+        bus_pj_per_bit: cacti::BUS_PJ_PER_BIT,
+        dram_bw_bits: 64,
+        dram_pj_per_bit: cacti::DRAM_PJ_PER_BIT,
+    }
+}
+
+/// Jia et al.'s 4x4 array of analog in-memory-compute cores (JSSC'22):
+/// each core a 1152x256 capacitor-based IMC bit-cell array, pipelined
+/// execution, weights resident in the arrays.
+pub fn aimc_4x4() -> Accelerator {
+    let mut cores: Vec<Core> = (0..16)
+        .map(|i| Core {
+            id: CoreId(i),
+            name: format!("aimc{i}"),
+            kind: CoreKind::Aimc {
+                mac_pj: cacti::MAC_PJ_AIMC,
+                weight_load_pj: 1.0,
+                act_bits_per_cycle: 2, // bit-serial DACs
+            },
+            dataflow: Dataflow::new(&[(Dim::C, 1152), (Dim::K, 256)]),
+            act_mem_bytes: 32 * 1024,
+            wgt_mem_bytes: 1152 * 256 / 8 * 4, // in-array weight capacity
+            sram_bw_bits: 512,
+        })
+        .collect();
+    cores.push(simd_core(16, 32 * 1024));
+    Accelerator {
+        name: "4x4-AiMC".to_string(),
+        cores,
+        bus_bw_bits: 512,
+        bus_pj_per_bit: cacti::BUS_PJ_PER_BIT,
+        dram_bw_bits: 128,
+        dram_pj_per_bit: cacti::DRAM_PJ_PER_BIT,
+    }
+}
+
+/// DIANA (Ueyoshi et al., ISSCC'22): heterogeneous digital + AiMC hybrid
+/// SoC sharing a 256 KB L1 memory.
+pub fn diana() -> Accelerator {
+    let digital = digital_core(0, "digital", &[(Dim::K, 16), (Dim::C, 16)], 128 * 1024, 64 * 1024);
+    let aimc = Core {
+        id: CoreId(1),
+        name: "aimc".to_string(),
+        kind: CoreKind::Aimc {
+            mac_pj: cacti::MAC_PJ_AIMC,
+            weight_load_pj: 1.0,
+            act_bits_per_cycle: 8, // word-parallel input application
+        },
+        dataflow: Dataflow::new(&[(Dim::C, 1152), (Dim::K, 512)]),
+        act_mem_bytes: 64 * 1024,
+        wgt_mem_bytes: 1152 * 512 / 8,
+        sram_bw_bits: 512,
+    };
+    Accelerator {
+        name: "DIANA".to_string(),
+        cores: vec![digital, aimc, simd_core(2, 64 * 1024)],
+        // cores communicate through the shared L1: model as a wide bus
+        bus_bw_bits: 256,
+        bus_pj_per_bit: cacti::sram_read_pj(256 * 1024, 1),
+        dram_bw_bits: 64,
+        dram_pj_per_bit: cacti::DRAM_PJ_PER_BIT,
+    }
+}
+
+/// Tiny dual-core architecture for unit tests and the quickstart
+/// (roomy 128 KB + 128 KB per core so small test workloads fit).
+pub fn test_dual() -> Accelerator {
+    exploration(
+        "test-dual",
+        vec![
+            digital_core(0, "a", &[(Dim::C, 8), (Dim::K, 8)], 128 * 1024, 128 * 1024),
+            digital_core(1, "b", &[(Dim::OX, 8), (Dim::K, 8)], 128 * 1024, 128 * 1024),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ARCH_NAMES {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn hetero_has_three_dataflow_kinds() {
+        let a = hetero_quad();
+        let dfs: std::collections::HashSet<String> =
+            a.cores.iter().filter(|c| !c.is_simd()).map(|c| c.dataflow.to_string()).collect();
+        assert_eq!(dfs.len(), 3);
+    }
+
+    #[test]
+    fn validation_targets_build() {
+        assert_eq!(depfin().cores.len(), 2);
+        assert_eq!(aimc_4x4().cores.len(), 17);
+        assert_eq!(diana().cores.len(), 3);
+    }
+
+    #[test]
+    fn diana_is_heterogeneous() {
+        let d = diana();
+        assert!(matches!(d.cores[0].kind, CoreKind::Digital { .. }));
+        assert!(matches!(d.cores[1].kind, CoreKind::Aimc { .. }));
+    }
+}

@@ -1,0 +1,89 @@
+//! CACTI-lite: analytic SRAM/DRAM access-energy and area model.
+//!
+//! The paper extracts all memory read/write costs with CACTI 7 [4].
+//! CACTI itself is a large C++ tool we substitute with a closed-form fit
+//! (DESIGN.md §Substitutions): access energy per bit grows with the
+//! square root of capacity (bitline/wordline length), plus a constant
+//! sense/periphery term.  The coefficients are calibrated to published
+//! 28–32 nm CACTI datapoints (8 KB ≈ 0.05 pJ/bit, 64 KB ≈ 0.12 pJ/bit,
+//! 1 MB ≈ 0.42 pJ/bit read) so the *relative* ordering the exploration
+//! depends on — register < small SRAM < large SRAM << DRAM — is
+//! preserved.
+
+/// Read energy of an SRAM access, in pJ per access of `word_bits` bits.
+pub fn sram_read_pj(capacity_bytes: u64, word_bits: u64) -> f64 {
+    word_bits as f64 * e_bit_read(capacity_bytes)
+}
+
+/// Write energy (slightly above read: bitline full-swing).
+pub fn sram_write_pj(capacity_bytes: u64, word_bits: u64) -> f64 {
+    1.2 * sram_read_pj(capacity_bytes, word_bits)
+}
+
+/// pJ/bit for a read of an SRAM of the given capacity.
+fn e_bit_read(capacity_bytes: u64) -> f64 {
+    let kb = (capacity_bytes as f64 / 1024.0).max(0.125);
+    0.012 + 0.013 * kb.sqrt()
+}
+
+/// Off-chip DRAM energy in pJ/bit (LPDDR4-class interface+core).
+pub const DRAM_PJ_PER_BIT: f64 = 3.7;
+
+/// DRAM access energy for a burst of `bits`.
+pub fn dram_pj(bits: u64) -> f64 {
+    bits as f64 * DRAM_PJ_PER_BIT
+}
+
+/// Inter-core bus energy in pJ/bit (on-chip long wires + arbitration).
+pub const BUS_PJ_PER_BIT: f64 = 0.15;
+
+/// Digital MAC energy at 8-bit precision, pJ (28 nm class).
+pub const MAC_PJ_DIGITAL_8B: f64 = 0.1;
+
+/// Analog in-memory-compute MAC energy, pJ (capacitor-based AiMC).
+pub const MAC_PJ_AIMC: f64 = 0.008;
+
+/// SIMD-core vector op energy, pJ per element op.
+pub const SIMD_OP_PJ: f64 = 0.05;
+
+/// SRAM macro area in mm² (28 nm, ~0.3 mm²/Mb + periphery).
+pub fn sram_area_mm2(capacity_bytes: u64) -> f64 {
+    let mb = capacity_bytes as f64 * 8.0 / 1e6;
+    0.05 + 0.3 * mb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_grows_with_capacity() {
+        let small = sram_read_pj(8 * 1024, 8);
+        let big = sram_read_pj(1024 * 1024, 8);
+        assert!(big > 2.0 * small, "{small} vs {big}");
+    }
+
+    #[test]
+    fn calibration_points() {
+        // ~0.05 pJ/bit at 8 KB, ~0.12 at 64 KB, ~0.42 at 1 MB
+        assert!((sram_read_pj(8 * 1024, 1) - 0.049).abs() < 0.02);
+        assert!((sram_read_pj(64 * 1024, 1) - 0.116).abs() < 0.03);
+        assert!((sram_read_pj(1024 * 1024, 1) - 0.428).abs() < 0.08);
+    }
+
+    #[test]
+    fn dram_dominates_sram() {
+        // the fusion advantage hinges on DRAM >> on-chip SRAM energy
+        assert!(DRAM_PJ_PER_BIT > 5.0 * sram_read_pj(256 * 1024, 1));
+    }
+
+    #[test]
+    fn write_above_read() {
+        assert!(sram_write_pj(64 * 1024, 64) > sram_read_pj(64 * 1024, 64));
+    }
+
+    #[test]
+    fn area_scales() {
+        assert!(sram_area_mm2(1024 * 1024) > sram_area_mm2(64 * 1024));
+    }
+}

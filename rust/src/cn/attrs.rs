@@ -1,0 +1,119 @@
+//! Fig. 5 attribute extraction: discardable inputs & newly generated
+//! final outputs, plus plain input/output byte counts per CN.
+
+use super::ComputationNode;
+use crate::workload::Layer;
+
+/// Fill in the byte-count attributes of a layer's CNs (in outer-CN loop
+/// order).
+///
+/// - `input_bytes` / `output_bytes`: the valid-region activation
+///   footprints of the CN.
+/// - `discard_input_bytes` (Fig. 5, red): input rows used by this CN and
+///   by **no later CN of the same layer** — they can be freed when the
+///   CN finishes.  Because consecutive CNs share halo rows, interior CNs
+///   discard `lines * stride` rows while the first/last CNs differ.
+/// - `final_output_bytes` (Fig. 5, green): output bytes that are final
+///   the moment the CN finishes.  With the channel reduction (C) kept
+///   inside every CN, *all* produced outputs are final.
+pub fn extract_attributes(layer: &Layer, cns: &mut [ComputationNode]) {
+    let act_b = layer.act_bits as u64;
+    let in_w = layer.in_width() as u64;
+    let c = layer.c as u64;
+
+    let n = cns.len();
+    for i in 0..n {
+        let in_rows = (cns[i].in_rect.hi[1] - cns[i].in_rect.lo[1]) as u64;
+        let out_elems = cns[i].out_rect.volume();
+
+        cns[i].input_bytes = c * in_rows * in_w * act_b / 8;
+        cns[i].output_bytes = out_elems * act_b / 8;
+        cns[i].final_output_bytes = cns[i].output_bytes;
+
+        // rows needed by the *next* CN of this layer start at its in_lo;
+        // everything strictly below that is exclusively ours.
+        let discard_hi = if i + 1 < n {
+            cns[i + 1].in_rect.lo[1]
+        } else {
+            cns[i].in_rect.hi[1]
+        };
+        let discard_rows = (discard_hi - cns[i].in_rect.lo[1]).max(0) as u64;
+        // rows before our own window were discarded by predecessors
+        cns[i].discard_input_bytes = c * discard_rows.min(in_rows) * in_w * act_b / 8;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::cn::{split_layer, CnGranularity};
+    use crate::workload::{LayerBuilder, LayerId, OpType};
+
+    fn conv3x3_same(oy: usize) -> crate::workload::Layer {
+        let mut l = LayerBuilder::new("c", OpType::Conv)
+            .k(4)
+            .c(2)
+            .spatial(oy, 8)
+            .filter(3, 3)
+            .pad(1)
+            .build();
+        l.id = LayerId(0);
+        l
+    }
+
+    #[test]
+    fn conservation_inputs() {
+        // summed discardable inputs == total layer input bytes
+        let l = conv3x3_same(16);
+        let cns = split_layer(&l, CnGranularity::Lines(4));
+        let total_discard: u64 = cns.iter().map(|c| c.discard_input_bytes).sum();
+        assert_eq!(total_discard, l.input_bytes());
+    }
+
+    #[test]
+    fn conservation_outputs() {
+        let l = conv3x3_same(16);
+        let cns = split_layer(&l, CnGranularity::Lines(4));
+        let total_out: u64 = cns.iter().map(|c| c.final_output_bytes).sum();
+        assert_eq!(total_out, l.output_bytes());
+    }
+
+    #[test]
+    fn interior_cns_discard_stride_times_lines_rows() {
+        // 3x3 pad-1 stride-1: each interior CN of 4 lines discards
+        // exactly 4 input rows (the halo shifts down by 4).
+        let l = conv3x3_same(16);
+        let cns = split_layer(&l, CnGranularity::Lines(4));
+        let row_bytes = 2 * 8; // c * in_w * 1 byte
+        // first CN: window rows 0..6 (clipped), next starts at 3 -> 3 rows
+        assert_eq!(cns[0].discard_input_bytes, 3 * row_bytes);
+        // interior CN: rows 3..10, next starts at 7 -> 4 rows
+        assert_eq!(cns[1].discard_input_bytes, 4 * row_bytes);
+        // last CN frees its whole remaining window
+        assert_eq!(cns[3].discard_input_bytes, 5 * row_bytes);
+    }
+
+    #[test]
+    fn strided_conv_discards_more() {
+        let mut l = LayerBuilder::new("c", OpType::Conv)
+            .k(4)
+            .c(2)
+            .spatial(8, 8)
+            .filter(3, 3)
+            .stride(2)
+            .pad(1)
+            .build();
+        l.id = LayerId(0);
+        let cns = split_layer(&l, CnGranularity::Lines(2));
+        // interior CN discards lines*stride = 4 rows
+        let row_bytes = 2 * l.in_width() as u64;
+        assert_eq!(cns[1].discard_input_bytes, 4 * row_bytes);
+    }
+
+    #[test]
+    fn single_cn_discards_everything() {
+        let l = conv3x3_same(16);
+        let cns = split_layer(&l, CnGranularity::LayerByLayer);
+        assert_eq!(cns[0].discard_input_bytes, l.input_bytes());
+        assert_eq!(cns[0].final_output_bytes, l.output_bytes());
+    }
+}

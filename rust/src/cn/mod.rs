@@ -1,0 +1,136 @@
+//! Step 1 — CN identification & attribute extraction.
+//!
+//! Every layer is split into individually schedulable **computation
+//! nodes** (CNs) by isolating a subset of inner for-loops; the remaining
+//! outer-CN loops (here: blocks of output lines, `OY`) determine the
+//! CNs' relative execution order.  The split follows the paper's two
+//! principles:
+//!
+//! 1. **Layer topology awareness** — fully-connected layers have no
+//!    spatial locality, so their single CN encapsulates every loop
+//!    (automatically breaking the fused stack); spatially-local layers
+//!    (conv / dwconv / pool / add / concat) split along `OY`.
+//! 2. **HW dataflow awareness** — a CN must minimally encompass every
+//!    for-loop dimension that is spatially unrolled in *any* core of the
+//!    target architecture, so no core is forced below full spatial
+//!    utilization by the granularity itself ([`CnGranularity::for_arch`]).
+//!
+//! Each CN carries the two attributes of paper Fig. 5: the number of
+//! **discardable inputs** (inputs used by no later CN of the same layer)
+//! and the number of **newly generated final outputs**.
+
+mod attrs;
+mod split;
+
+pub use attrs::extract_attributes;
+pub use split::{split_layer, split_workload};
+
+use crate::arch::Accelerator;
+use crate::rtree::Rect;
+use crate::workload::{Dim, LayerId, WorkloadGraph};
+
+/// Identifier of a CN inside one [`CnSet`] / dependency graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CnId(pub usize);
+
+impl std::fmt::Display for CnId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "CN{}", self.0)
+    }
+}
+
+/// Scheduling granularity of the CN split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CnGranularity {
+    /// Traditional layer-by-layer: one CN per layer (paper baseline).
+    LayerByLayer,
+    /// Layer-fused: CNs of `lines` output rows each (depth-first /
+    /// line-buffered processing).
+    Lines(usize),
+}
+
+impl CnGranularity {
+    /// Clamp the requested line granularity up to the minimum imposed by
+    /// the architecture's spatial dataflows (HW dataflow awareness): a
+    /// CN must contain at least the `OY` lines any core unrolls
+    /// spatially.
+    pub fn for_arch(self, arch: &Accelerator) -> CnGranularity {
+        match self {
+            CnGranularity::LayerByLayer => self,
+            CnGranularity::Lines(lines) => {
+                let min_oy = arch
+                    .cores
+                    .iter()
+                    .map(|c| c.dataflow.unroll(Dim::OY))
+                    .max()
+                    .unwrap_or(1);
+                CnGranularity::Lines(lines.max(min_oy))
+            }
+        }
+    }
+}
+
+/// One computation node: a block of a layer's output lines.
+#[derive(Debug, Clone)]
+pub struct ComputationNode {
+    pub id: CnId,
+    pub layer: LayerId,
+    /// Index among the CNs of this layer (outer-CN loop order).
+    pub idx: usize,
+    /// Output ranges in (K, OY, OX) space.
+    pub out_rect: Rect,
+    /// Input ranges in (C, IY, IX) space, clipped to the valid tensor
+    /// (padding regions excluded).
+    pub in_rect: Rect,
+    /// MAC (or SIMD-op) count of this CN.
+    pub macs: u64,
+    /// Activation input bytes read (valid region only).
+    pub input_bytes: u64,
+    /// Activation output bytes produced.
+    pub output_bytes: u64,
+    /// Fig. 5 attribute 1: input bytes that can be discarded once this
+    /// CN finishes (used by no later CN of the same layer).
+    pub discard_input_bytes: u64,
+    /// Fig. 5 attribute 2: newly generated *final* output bytes.
+    pub final_output_bytes: u64,
+}
+
+impl ComputationNode {
+    /// Number of output lines this CN covers.
+    pub fn out_lines(&self) -> usize {
+        (self.out_rect.hi[1] - self.out_rect.lo[1]) as usize
+    }
+}
+
+/// All CNs of a workload, grouped per layer, with global contiguous ids.
+#[derive(Debug)]
+pub struct CnSet {
+    pub nodes: Vec<ComputationNode>,
+    /// Global CN id range per layer: `per_layer[l] = (first, count)`.
+    pub per_layer: Vec<(usize, usize)>,
+}
+
+impl CnSet {
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: CnId) -> &ComputationNode {
+        &self.nodes[id.0]
+    }
+
+    /// The CNs of one layer, in outer-CN loop order.
+    pub fn layer_cns(&self, layer: LayerId) -> &[ComputationNode] {
+        let (first, count) = self.per_layer[layer.0];
+        &self.nodes[first..first + count]
+    }
+
+    /// Build the set from a workload at the given granularity.
+    pub fn build(workload: &WorkloadGraph, gran: CnGranularity) -> CnSet {
+        split_workload(workload, gran)
+    }
+}

@@ -1,0 +1,176 @@
+//! CN splitting: layers -> line-granular computation nodes.
+
+use super::attrs::extract_attributes;
+use super::{CnGranularity, CnId, CnSet, ComputationNode};
+use crate::rtree::Rect;
+use crate::workload::{Layer, OpType, WorkloadGraph};
+
+/// Split one layer into CNs at the given granularity.
+///
+/// Returns CNs with layer-local indices; the caller (usually
+/// [`split_workload`]) assigns global ids and attributes.
+pub fn split_layer(layer: &Layer, gran: CnGranularity) -> Vec<ComputationNode> {
+    let lines = match gran {
+        CnGranularity::LayerByLayer => layer.oy,
+        // Layer topology awareness: no spatial locality -> single CN.
+        CnGranularity::Lines(_) if !layer.op.has_spatial_locality() => layer.oy,
+        CnGranularity::Lines(l) => l.max(1).min(layer.oy),
+    };
+
+    let n_cns = layer.oy.div_ceil(lines);
+    let mut cns = Vec::with_capacity(n_cns);
+    for idx in 0..n_cns {
+        let o_lo = idx * lines;
+        let o_hi = ((idx + 1) * lines).min(layer.oy);
+        let out_rect = Rect::chw(0..layer.k as i64, o_lo as i64..o_hi as i64, 0..layer.ox as i64);
+        let in_rect = input_rect(layer, o_lo, o_hi);
+
+        let macs = layer.macs() * (o_hi - o_lo) as u64 / layer.oy as u64;
+        cns.push(ComputationNode {
+            id: CnId(usize::MAX), // assigned by split_workload
+            layer: layer.id,
+            idx,
+            out_rect,
+            in_rect,
+            macs,
+            input_bytes: 0,
+            output_bytes: 0,
+            discard_input_bytes: 0,
+            final_output_bytes: 0,
+        });
+    }
+    extract_attributes(layer, &mut cns);
+    cns
+}
+
+/// Input region (C, IY, IX) a block of output lines `[o_lo, o_hi)` needs,
+/// clipped to the valid (unpadded) input tensor.
+pub(crate) fn input_rect(layer: &Layer, o_lo: usize, o_hi: usize) -> Rect {
+    match layer.op {
+        OpType::Add | OpType::Concat => {
+            // elementwise / copy: same rows as the output
+            Rect::chw(0..layer.c as i64, o_lo as i64..o_hi as i64, 0..layer.ox as i64)
+        }
+        OpType::Fc => Rect::chw(0..layer.c as i64, 0..1, 0..1),
+        _ => {
+            let s = layer.stride as i64;
+            let pad = layer.pad as i64;
+            let fy = layer.fy as i64;
+            let ih = layer.in_height() as i64;
+            let iw = layer.in_width() as i64;
+            let i_lo = (o_lo as i64 * s - pad).max(0);
+            let i_hi = ((o_hi as i64 - 1) * s - pad + fy).min(ih).max(i_lo);
+            Rect::chw(0..layer.c as i64, i_lo..i_hi, 0..iw)
+        }
+    }
+}
+
+/// Split every layer of the workload and extract the Fig. 5 attributes.
+pub fn split_workload(workload: &WorkloadGraph, gran: CnGranularity) -> CnSet {
+    let mut nodes = Vec::new();
+    let mut per_layer = Vec::with_capacity(workload.len());
+    for layer in workload.layers() {
+        let first = nodes.len();
+        let mut cns = split_layer(layer, gran);
+        // assign global ids in order
+        for (i, cn) in cns.iter_mut().enumerate() {
+            cn.id = CnId(first + i);
+        }
+        per_layer.push((first, cns.len()));
+        nodes.extend(cns);
+    }
+    CnSet { nodes, per_layer }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::{resnet18, tiny_segment};
+    use crate::workload::{LayerBuilder, LayerId};
+
+    fn conv_layer() -> Layer {
+        let mut l = LayerBuilder::new("c", OpType::Conv)
+            .k(64)
+            .c(3)
+            .spatial(56, 56)
+            .filter(7, 7)
+            .stride(2)
+            .pad(3)
+            .build();
+        l.id = LayerId(0);
+        l
+    }
+
+    #[test]
+    fn layer_by_layer_is_one_cn() {
+        let cns = split_layer(&conv_layer(), CnGranularity::LayerByLayer);
+        assert_eq!(cns.len(), 1);
+        assert_eq!(cns[0].out_lines(), 56);
+        assert_eq!(cns[0].macs, conv_layer().macs());
+    }
+
+    #[test]
+    fn line_split_counts() {
+        let cns = split_layer(&conv_layer(), CnGranularity::Lines(4));
+        assert_eq!(cns.len(), 14);
+        assert!(cns.iter().all(|c| c.out_lines() == 4));
+        let total: u64 = cns.iter().map(|c| c.macs).sum();
+        assert_eq!(total, conv_layer().macs());
+    }
+
+    #[test]
+    fn uneven_split_last_cn_smaller() {
+        let mut l = conv_layer();
+        l.oy = 30;
+        let cns = split_layer(&l, CnGranularity::Lines(8));
+        assert_eq!(cns.len(), 4);
+        assert_eq!(cns.last().unwrap().out_lines(), 6);
+    }
+
+    #[test]
+    fn fc_never_splits() {
+        let mut l = LayerBuilder::new("fc", OpType::Fc).k(10).c(100).build();
+        l.id = LayerId(0);
+        let cns = split_layer(&l, CnGranularity::Lines(1));
+        assert_eq!(cns.len(), 1);
+    }
+
+    #[test]
+    fn input_rect_halo() {
+        let l = conv_layer(); // 7x7 s2 p3, in 112 (511->112? in_height = 55*2+7-6 = 111)
+        // first CN rows 0..4: input rows max(0, -3) .. 3*2-3+7 = 10
+        let r = input_rect(&l, 0, 4);
+        assert_eq!(r.lo[1], 0);
+        assert_eq!(r.hi[1], 10);
+        // middle CN rows 4..8: 4*2-3=5 .. 7*2-3+7=18
+        let r = input_rect(&l, 4, 8);
+        assert_eq!((r.lo[1], r.hi[1]), (5, 18));
+    }
+
+    #[test]
+    fn input_rect_clips_to_valid() {
+        let l = conv_layer();
+        let last = input_rect(&l, 52, 56);
+        assert_eq!(last.hi[1], l.in_height() as i64);
+    }
+
+    #[test]
+    fn workload_split_ids_contiguous() {
+        let set = split_workload(&tiny_segment(), CnGranularity::Lines(4));
+        for (i, cn) in set.nodes.iter().enumerate() {
+            assert_eq!(cn.id.0, i);
+        }
+        // conv7x7 at 56 rows -> 14 CNs, pool 28 -> 7, convs 7+7, add 7
+        assert_eq!(set.len(), 14 + 7 + 7 + 7 + 7);
+        assert_eq!(set.layer_cns(LayerId(0)).len(), 14);
+        assert_eq!(set.layer_cns(LayerId(4)).len(), 7);
+    }
+
+    #[test]
+    fn resnet18_cn_counts_scale_with_granularity() {
+        let coarse = split_workload(&resnet18(), CnGranularity::LayerByLayer);
+        let fine = split_workload(&resnet18(), CnGranularity::Lines(1));
+        assert_eq!(coarse.len(), resnet18().len());
+        assert!(fine.len() > 10 * coarse.len());
+    }
+}

@@ -1,0 +1,116 @@
+//! Cost aggregation: schedule-level metrics and energy breakdowns.
+
+/// Energy split by destination (paper Fig. 15's stacked bars).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// MAC / SIMD-op energy (pJ).
+    pub mac_pj: f64,
+    /// On-chip SRAM access energy inside the cores (pJ).
+    pub onchip_pj: f64,
+    /// Inter-core bus transfer energy (pJ).
+    pub bus_pj: f64,
+    /// Off-chip DRAM access energy (pJ).
+    pub dram_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.mac_pj + self.onchip_pj + self.bus_pj + self.dram_pj
+    }
+}
+
+/// End-to-end metrics of one schedule.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScheduleMetrics {
+    /// Makespan in clock cycles.
+    pub latency_cc: u64,
+    /// Total energy in pJ.
+    pub energy_pj: f64,
+    /// Peak activation memory across cores in bytes.
+    pub peak_mem_bytes: f64,
+    pub breakdown: EnergyBreakdown,
+    /// Average temporal utilization of the dense cores (busy / makespan).
+    pub avg_core_util: f64,
+}
+
+impl ScheduleMetrics {
+    /// Energy-delay product in pJ x cycles.
+    pub fn edp(&self) -> f64 {
+        self.energy_pj * self.latency_cc as f64
+    }
+}
+
+/// Geometric mean helper for the Fig. 13 summaries.
+pub fn geomean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = values.iter().map(|v| v.max(f64::MIN_POSITIVE).ln()).sum();
+    (s / values.len() as f64).exp()
+}
+
+/// Pretty-print a pJ value with engineering units.
+pub fn fmt_energy(pj: f64) -> String {
+    if pj >= 1e9 {
+        format!("{:.2} mJ", pj / 1e9)
+    } else if pj >= 1e6 {
+        format!("{:.2} uJ", pj / 1e6)
+    } else if pj >= 1e3 {
+        format!("{:.2} nJ", pj / 1e3)
+    } else {
+        format!("{pj:.2} pJ")
+    }
+}
+
+/// Pretty-print a cycle count.
+pub fn fmt_cycles(cc: u64) -> String {
+    if cc >= 1_000_000 {
+        format!("{:.2} Mcc", cc as f64 / 1e6)
+    } else if cc >= 1_000 {
+        format!("{:.2} kcc", cc as f64 / 1e3)
+    } else {
+        format!("{cc} cc")
+    }
+}
+
+/// Pretty-print a byte count.
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= 1024.0 * 1024.0 {
+        format!("{:.2} MB", b / (1024.0 * 1024.0))
+    } else if b >= 1024.0 {
+        format!("{:.1} KB", b / 1024.0)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_total() {
+        let b = EnergyBreakdown { mac_pj: 1.0, onchip_pj: 2.0, bus_pj: 3.0, dram_pj: 4.0 };
+        assert_eq!(b.total(), 10.0);
+    }
+
+    #[test]
+    fn edp() {
+        let m = ScheduleMetrics { latency_cc: 100, energy_pj: 5.0, ..Default::default() };
+        assert_eq!(m.edp(), 500.0);
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+        assert_eq!(geomean(&[]), 0.0);
+        assert!((geomean(&[7.0]) - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_cycles(1_500_000), "1.50 Mcc");
+        assert_eq!(fmt_energy(2_500.0), "2.50 nJ");
+        assert_eq!(fmt_bytes(2048.0), "2.0 KB");
+    }
+}

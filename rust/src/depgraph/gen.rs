@@ -1,0 +1,325 @@
+//! Dependency edge generation (R-tree fast path + pairwise oracle).
+
+use super::graph::{CnEdge, CnGraph, EdgeKind};
+use crate::cn::{CnSet, ComputationNode};
+use crate::rtree::{RTree, Rect};
+use crate::workload::{Layer, OpType, WorkloadGraph};
+
+/// The input region a consumer CN needs, expressed in the *producer's
+/// output coordinate space* (K, OY, OX), for producer `pred_idx` among
+/// the consumer's predecessors.
+///
+/// - conv/pool: channels map 1:1, rows through stride/pad halo;
+/// - add: element-wise, rows map 1:1;
+/// - concat: the consumer's input channel range maps to the producer's
+///   K range shifted by the channel offset of that predecessor;
+/// - fc: needs the producer's entire output (no spatial locality).
+pub fn consumer_input_rect(
+    consumer: &Layer,
+    cn: &ComputationNode,
+    producer: &Layer,
+    pred_idx: usize,
+    chan_offset: i64,
+) -> Rect {
+    let prod_bounds = Rect::chw(
+        0..producer.k as i64,
+        0..producer.oy as i64,
+        0..producer.ox as i64,
+    );
+    match consumer.op {
+        OpType::Fc => prod_bounds,
+        OpType::Concat => {
+            // consumer channel range [chan_offset, chan_offset + prod.k)
+            // comes from this producer; rows/cols map 1:1
+            let r = Rect::chw(
+                (cn.in_rect.lo[0] - chan_offset)..(cn.in_rect.hi[0] - chan_offset),
+                cn.in_rect.lo[1]..cn.in_rect.hi[1],
+                cn.in_rect.lo[2]..cn.in_rect.hi[2],
+            );
+            r.clip(&prod_bounds)
+        }
+        OpType::Add => {
+            let _ = pred_idx;
+            cn.in_rect.clip(&prod_bounds)
+        }
+        _ => {
+            // conv/dwconv/pool: the CN's input window, clipped to what
+            // the producer actually produces
+            cn.in_rect.clip(&prod_bounds)
+        }
+    }
+}
+
+/// The *exclusive* part of a consumer CN's input window: the rows no
+/// earlier CN of the same layer also reads.  Consecutive CN windows
+/// overlap by their halo; attributing each input row to the first CN
+/// that reads it makes the per-edge transfer bytes partition the
+/// producer's output, so communication volume is counted exactly once
+/// (dependency *edges* still use the full window).
+pub fn exclusive_input_rect(
+    consumer: &Layer,
+    layer_cns: &[ComputationNode],
+    idx: usize,
+    producer: &Layer,
+    pred_idx: usize,
+    chan_offset: i64,
+) -> Rect {
+    let full = consumer_input_rect(consumer, &layer_cns[idx], producer, pred_idx, chan_offset);
+    if full.is_empty() || idx == 0 {
+        return full;
+    }
+    let prev =
+        consumer_input_rect(consumer, &layer_cns[idx - 1], producer, pred_idx, chan_offset);
+    if prev.is_empty() {
+        return full;
+    }
+    // rows strictly below the previous CN's window end are fresh
+    let lo_y = full.lo[1].max(prev.hi[1]);
+    Rect::new([full.lo[0], lo_y.min(full.hi[1]), full.lo[2]], full.hi)
+}
+
+/// Channel offsets of each predecessor in the consumer's input space
+/// (non-zero only for Concat consumers).
+fn chan_offsets(workload: &WorkloadGraph, consumer: &Layer) -> Vec<i64> {
+    let mut offs = Vec::with_capacity(consumer.predecessors.len());
+    let mut acc = 0i64;
+    for &p in &consumer.predecessors {
+        offs.push(acc);
+        if consumer.op == OpType::Concat {
+            acc += workload.layer(p).k as i64;
+        }
+    }
+    offs
+}
+
+/// Generate all edges (intra-layer ordering + inter-layer data) with the
+/// R-tree algorithm and assemble the [`CnGraph`].
+pub fn generate(workload: &WorkloadGraph, cns: CnSet) -> CnGraph {
+    let mut edges = Vec::new();
+
+    // --- intra-layer ordering edges (outer-CN loop order) ---
+    for layer in workload.layers() {
+        let layer_cns = cns.layer_cns(layer.id);
+        for pair in layer_cns.windows(2) {
+            edges.push(CnEdge {
+                from: pair[0].id,
+                to: pair[1].id,
+                bytes: 0,
+                kind: EdgeKind::Order,
+            });
+        }
+    }
+
+    // --- inter-layer data edges, one producer-consumer layer pair at a
+    //     time (paper Fig. 6) ---
+    for consumer in workload.layers() {
+        let offsets = chan_offsets(workload, consumer);
+        for (pi, &prod_id) in consumer.predecessors.iter().enumerate() {
+            let producer = workload.layer(prod_id);
+            inter_layer_edges_rtree(
+                workload, &cns, producer, consumer, pi, offsets[pi], &mut edges,
+            );
+        }
+    }
+
+    CnGraph::new(cns, edges)
+}
+
+fn inter_layer_edges_rtree(
+    _workload: &WorkloadGraph,
+    cns: &CnSet,
+    producer: &Layer,
+    consumer: &Layer,
+    pred_idx: usize,
+    chan_offset: i64,
+    edges: &mut Vec<CnEdge>,
+) {
+    let cons_cns = cns.layer_cns(consumer.id);
+    // exclusive windows give the transfer byte counts
+    let exclusive: Vec<Rect> = (0..cons_cns.len())
+        .map(|i| exclusive_input_rect(consumer, cons_cns, i, producer, pred_idx, chan_offset))
+        .collect();
+
+    // 1) build the R-tree over consumer CNs' required input ranges
+    let items: Vec<(Rect, u32)> = cons_cns
+        .iter()
+        .enumerate()
+        .filter_map(|(i, cn)| {
+            let r = consumer_input_rect(consumer, cn, producer, pred_idx, chan_offset);
+            if r.is_empty() {
+                None
+            } else {
+                Some((r, i as u32))
+            }
+        })
+        .collect();
+    let tree = RTree::bulk_load(items);
+
+    // 2) query with each producer CN's output range
+    let act_bits = producer.act_bits as u64;
+    for pcn in cns.layer_cns(producer.id) {
+        tree.query(&pcn.out_rect, |_, ci| {
+            let bytes =
+                pcn.out_rect.intersection_volume(&exclusive[ci as usize]) * act_bits / 8;
+            edges.push(CnEdge {
+                from: pcn.id,
+                to: cons_cns[ci as usize].id,
+                bytes,
+                kind: EdgeKind::Data,
+            });
+        });
+    }
+}
+
+/// Quadratic baseline: check every producer-consumer CN pair one by one.
+/// Used as the correctness oracle and the speedup-bench baseline.
+pub fn generate_pairwise(workload: &WorkloadGraph, cns: CnSet) -> CnGraph {
+    let mut edges = Vec::new();
+
+    for layer in workload.layers() {
+        let layer_cns = cns.layer_cns(layer.id);
+        for pair in layer_cns.windows(2) {
+            edges.push(CnEdge {
+                from: pair[0].id,
+                to: pair[1].id,
+                bytes: 0,
+                kind: EdgeKind::Order,
+            });
+        }
+    }
+
+    for consumer in workload.layers() {
+        let offsets = chan_offsets(workload, consumer);
+        for (pi, &prod_id) in consumer.predecessors.iter().enumerate() {
+            let producer = workload.layer(prod_id);
+            let cons_cns = cns.layer_cns(consumer.id);
+            let act_bits = producer.act_bits as u64;
+            for pcn in cns.layer_cns(producer.id) {
+                for (ci, ccn) in cons_cns.iter().enumerate() {
+                    let r = consumer_input_rect(consumer, ccn, producer, pi, offsets[pi]);
+                    if r.is_empty() || !pcn.out_rect.intersects(&r) {
+                        continue;
+                    }
+                    let ex = exclusive_input_rect(consumer, cons_cns, ci, producer, pi, offsets[pi]);
+                    edges.push(CnEdge {
+                        from: pcn.id,
+                        to: ccn.id,
+                        bytes: pcn.out_rect.intersection_volume(&ex) * act_bits / 8,
+                        kind: EdgeKind::Data,
+                    });
+                }
+            }
+        }
+    }
+
+    CnGraph::new(cns, edges)
+}
+
+/// Canonical edge multiset for equivalence checks (tests + proptests).
+pub fn edge_set(g: &CnGraph) -> std::collections::HashMap<(usize, usize), u64> {
+    let mut m = std::collections::HashMap::new();
+    for e in &g.edges {
+        *m.entry((e.from.0, e.to.0)).or_insert(0) += e.bytes;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cn::CnGranularity;
+    use crate::workload::models::{
+        resnet18_first_segment, squeezenet, tiny_branchy, tiny_segment,
+    };
+
+    fn build(w: &WorkloadGraph, lines: usize) -> (CnGraph, CnGraph) {
+        let a = generate(w, CnSet::build(w, CnGranularity::Lines(lines)));
+        let b = generate_pairwise(w, CnSet::build(w, CnGranularity::Lines(lines)));
+        (a, b)
+    }
+
+    #[test]
+    fn rtree_equals_pairwise_segment() {
+        let w = tiny_segment();
+        let (a, b) = build(&w, 4);
+        assert_eq!(edge_set(&a), edge_set(&b));
+    }
+
+    #[test]
+    fn rtree_equals_pairwise_branchy() {
+        let w = tiny_branchy();
+        let (a, b) = build(&w, 2);
+        assert_eq!(edge_set(&a), edge_set(&b));
+    }
+
+    #[test]
+    fn rtree_equals_pairwise_concat() {
+        let w = squeezenet();
+        // restrict to a manageable CN count but still exercise concat
+        let (a, b) = build(&w, 16);
+        assert_eq!(edge_set(&a), edge_set(&b));
+    }
+
+    #[test]
+    fn graph_is_acyclic() {
+        let w = resnet18_first_segment();
+        let (g, _) = build(&w, 4);
+        assert!(g.check_acyclic());
+    }
+
+    #[test]
+    fn strided_conv_fan_in() {
+        // conv7x7/s2 consumer rows 4..8 need producer rows 5..18:
+        // with 4-line producer CNs that's producers 1..4 -> fan-in 4 on
+        // the input edge side (plus the intra-layer order edge)
+        let w = tiny_segment();
+        let g = generate(&w, CnSet::build(&w, CnGranularity::Lines(4)));
+        // layer1 (pool) CN #1
+        let pool_cns = g.cns.layer_cns(crate::workload::LayerId(1));
+        let target = pool_cns[1].id;
+        let data_preds: Vec<_> = g
+            .pred_edges(target)
+            .filter(|e| e.kind == EdgeKind::Data)
+            .collect();
+        // pool CN rows 4..8 needs conv1 rows 7..16 -> conv1 CNs 1,2,3
+        assert_eq!(data_preds.len(), 3);
+    }
+
+    #[test]
+    fn layer_by_layer_has_layer_graph_shape() {
+        let w = tiny_branchy();
+        let g = generate(&w, CnSet::build(&w, CnGranularity::LayerByLayer));
+        // one CN per layer, data edges mirror the workload edges
+        assert_eq!(g.len(), w.len());
+        let n_data = g.edges.iter().filter(|e| e.kind == EdgeKind::Data).count();
+        let n_workload_edges: usize =
+            w.layers().iter().map(|l| l.predecessors.len()).sum();
+        assert_eq!(n_data, n_workload_edges);
+    }
+
+    #[test]
+    fn sources_are_first_layer_cns() {
+        let w = tiny_segment();
+        let g = generate(&w, CnSet::build(&w, CnGranularity::Lines(4)));
+        let sources = g.sources();
+        // only the first CN of layer 0 has no preds (others chain)
+        assert_eq!(sources.len(), 1);
+        assert_eq!(g.cns.node(sources[0]).layer, crate::workload::LayerId(0));
+    }
+
+    #[test]
+    fn edge_bytes_conservation() {
+        // total inter-layer data bytes from a producer == its output
+        // bytes when the consumer covers it fully (conv3x3a -> conv3x3b)
+        let w = tiny_segment();
+        let g = generate(&w, CnSet::build(&w, CnGranularity::LayerByLayer));
+        let conv_a = g.cns.layer_cns(crate::workload::LayerId(2))[0].id;
+        let out: u64 = g
+            .succ_edges(conv_a)
+            .filter(|e| e.kind == EdgeKind::Data)
+            .map(|e| e.bytes)
+            .sum();
+        let expect = w.layer(crate::workload::LayerId(2)).output_bytes();
+        assert_eq!(out, expect);
+    }
+}

@@ -1,0 +1,91 @@
+//! The fine-grained CN graph: CN set + dependency edges + adjacency.
+
+use crate::cn::{CnId, CnSet};
+
+/// Edge kind: data dependency (carries bytes) or pure ordering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// Inter-layer data dependency: `bytes` move producer -> consumer.
+    Data,
+    /// Intra-layer outer-CN-loop ordering (no data transfer).
+    Order,
+}
+
+/// One dependency edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CnEdge {
+    pub from: CnId,
+    pub to: CnId,
+    pub bytes: u64,
+    pub kind: EdgeKind,
+}
+
+/// CN set plus dependency adjacency.
+#[derive(Debug)]
+pub struct CnGraph {
+    pub cns: CnSet,
+    pub edges: Vec<CnEdge>,
+    preds: Vec<Vec<usize>>, // indices into `edges`
+    succs: Vec<Vec<usize>>,
+}
+
+impl CnGraph {
+    pub fn new(cns: CnSet, edges: Vec<CnEdge>) -> CnGraph {
+        let n = cns.len();
+        let mut preds = vec![Vec::new(); n];
+        let mut succs = vec![Vec::new(); n];
+        for (i, e) in edges.iter().enumerate() {
+            preds[e.to.0].push(i);
+            succs[e.from.0].push(i);
+        }
+        CnGraph { cns, edges, preds, succs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cns.is_empty()
+    }
+
+    /// Incoming edges of a CN.
+    pub fn pred_edges(&self, id: CnId) -> impl Iterator<Item = &CnEdge> {
+        self.preds[id.0].iter().map(move |&i| &self.edges[i])
+    }
+
+    /// Outgoing edges of a CN.
+    pub fn succ_edges(&self, id: CnId) -> impl Iterator<Item = &CnEdge> {
+        self.succs[id.0].iter().map(move |&i| &self.edges[i])
+    }
+
+    pub fn pred_count(&self, id: CnId) -> usize {
+        self.preds[id.0].len()
+    }
+
+    /// CNs with no incoming edges (schedule entry points).
+    pub fn sources(&self) -> Vec<CnId> {
+        (0..self.len()).filter(|&i| self.preds[i].is_empty()).map(CnId).collect()
+    }
+
+    /// Verify the graph is acyclic & edges point id-forward within
+    /// layers (construction invariant; used by tests/proptests).
+    pub fn check_acyclic(&self) -> bool {
+        // Kahn's algorithm
+        let mut indeg: Vec<usize> = (0..self.len()).map(|i| self.preds[i].len()).collect();
+        let mut stack: Vec<usize> =
+            indeg.iter().enumerate().filter(|(_, &d)| d == 0).map(|(i, _)| i).collect();
+        let mut seen = 0;
+        while let Some(i) = stack.pop() {
+            seen += 1;
+            for &ei in &self.succs[i] {
+                let t = self.edges[ei].to.0;
+                indeg[t] -= 1;
+                if indeg[t] == 0 {
+                    stack.push(t);
+                }
+            }
+        }
+        seen == self.len()
+    }
+}

@@ -1,0 +1,18 @@
+//! Step 2 — fine-grained CN dependency graph generation.
+//!
+//! *Intra-layer* edges chain the CNs of a layer in outer-CN loop order
+//! (structured tensor access with loop counters).  *Inter-layer* edges
+//! connect producer CNs to the consumer CNs whose input windows overlap
+//! the produced data — found by bulk-loading the consumer CNs' required
+//! input ranges into an [`crate::rtree::RTree`] and querying it with
+//! each producer CN's output range (paper Fig. 6).
+//!
+//! A quadratic pairwise generator ([`generate_pairwise`]) is kept as the
+//! correctness oracle and as the baseline of the paper's 10^3x speedup
+//! claim (`benches/rtree_speedup.rs`).
+
+mod gen;
+mod graph;
+
+pub use gen::{consumer_input_rect, edge_set, generate, generate_pairwise};
+pub use graph::{CnEdge, CnGraph, EdgeKind};

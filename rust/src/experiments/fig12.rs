@@ -1,0 +1,125 @@
+//! Fig. 12 — impact of the automatic (GA) layer-core allocation vs the
+//! manual baselines, for ResNet-18 on HomTPU and Hetero, under both
+//! scheduler priorities.
+
+use crate::allocator::{manual_allocation, Ga, GaParams, Objective};
+use crate::arch::{presets, Accelerator};
+use crate::cn::{CnGranularity, CnSet};
+use crate::depgraph::generate;
+use crate::mapping::CostModel;
+use crate::scheduler::{SchedulePriority, Scheduler};
+use crate::workload::models::resnet18;
+
+/// One point of Fig. 12.
+#[derive(Debug, Clone)]
+pub struct Fig12Row {
+    pub arch: String,
+    pub method: String,   // "manual" | "GA"
+    pub priority: String, // "latency" | "memory"
+    pub latency_cc: u64,
+    pub peak_mem_kb: f64,
+}
+
+fn run_arch(arch: Accelerator, heterogeneous: bool, ga_params: GaParams) -> Vec<Fig12Row> {
+    let w = resnet18();
+    let gran = CnGranularity::Lines(4).for_arch(&arch);
+    let cns = CnSet::build(&w, gran);
+    let costs = CostModel::build(&w, &cns, &arch);
+    let graph = generate(&w, CnSet::build(&w, gran));
+    let sched = Scheduler::new(&w, &graph, &costs, &arch);
+
+    let manual = manual_allocation(&w, &arch, &costs, &cns, heterogeneous);
+    let mut rows = Vec::new();
+
+    for (pname, priority) in
+        [("latency", SchedulePriority::Latency), ("memory", SchedulePriority::Memory)]
+    {
+        // manual baseline
+        let m = sched.run(&manual, priority).metrics;
+        rows.push(Fig12Row {
+            arch: arch.name.clone(),
+            method: "manual".into(),
+            priority: pname.into(),
+            latency_cc: m.latency_cc,
+            peak_mem_kb: m.peak_mem_bytes / 1024.0,
+        });
+
+        // GA (bi-objective latency+memory, matching the figure's axes)
+        let mut ga = Ga::new(&w, &arch, &sched, priority, Objective::LatencyMemory, ga_params);
+        let front = ga.run();
+        // report the front's latency leader under latency priority and
+        // memory leader under memory priority
+        let best = match priority {
+            SchedulePriority::Latency => front
+                .iter()
+                .min_by_key(|r| r.metrics.latency_cc)
+                .expect("front nonempty"),
+            SchedulePriority::Memory => front
+                .iter()
+                .min_by(|a, b| {
+                    a.metrics
+                        .peak_mem_bytes
+                        .partial_cmp(&b.metrics.peak_mem_bytes)
+                        .unwrap()
+                })
+                .expect("front nonempty"),
+        };
+        let m = sched.run(&best.allocation, priority).metrics;
+        rows.push(Fig12Row {
+            arch: arch.name.clone(),
+            method: "GA".into(),
+            priority: pname.into(),
+            latency_cc: m.latency_cc,
+            peak_mem_kb: m.peak_mem_bytes / 1024.0,
+        });
+    }
+    rows
+}
+
+/// Run the full Fig. 12 experiment.
+pub fn fig12(ga_params: GaParams) -> Vec<Fig12Row> {
+    let mut rows = run_arch(presets::hom_tpu(), false, ga_params);
+    rows.extend(run_arch(presets::hetero_quad(), true, ga_params));
+    rows
+}
+
+/// Text rendering of the rows.
+pub fn format_rows(rows: &[Fig12Row]) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:<10} {:<7} {:<8} {:>12} {:>12}",
+        "arch", "method", "priority", "latency(cc)", "peakmem(KB)"
+    );
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "{:<10} {:<7} {:<8} {:>12} {:>12.1}",
+            r.arch, r.method, r.priority, r.latency_cc, r.peak_mem_kb
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ga_beats_or_matches_manual_on_hetero() {
+        let params = GaParams { population: 10, generations: 5, ..Default::default() };
+        let rows = run_arch(presets::hetero_quad(), true, params);
+        let manual_lat = rows
+            .iter()
+            .find(|r| r.method == "manual" && r.priority == "latency")
+            .unwrap()
+            .latency_cc;
+        let ga_lat = rows
+            .iter()
+            .find(|r| r.method == "GA" && r.priority == "latency")
+            .unwrap()
+            .latency_cc;
+        assert!(ga_lat <= manual_lat, "GA {ga_lat} vs manual {manual_lat}");
+    }
+}

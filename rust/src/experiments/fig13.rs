@@ -1,0 +1,338 @@
+//! Figs. 13/14/15 — the architecture exploration: best EDP (and its
+//! latency / energy breakdown) over the 5 DNNs x 7 iso-area
+//! architectures, under layer-by-layer vs layer-fused scheduling.
+
+use crate::allocator::{GaParams, Objective};
+use crate::arch::{presets, Accelerator};
+use crate::cn::CnGranularity;
+use crate::cost::{geomean, ScheduleMetrics};
+use crate::pipeline::{SchedulePriority, Stream, StreamOpts};
+use crate::workload::{models, WorkloadGraph};
+
+/// One (workload, architecture) cell of the exploration.
+#[derive(Debug, Clone)]
+pub struct ExplorationCell {
+    pub workload: String,
+    pub arch: String,
+    /// Best-EDP metrics under layer-by-layer scheduling.
+    pub lbl: ScheduleMetrics,
+    /// Best-EDP metrics under fine-grained layer fusion.
+    pub fused: ScheduleMetrics,
+}
+
+impl ExplorationCell {
+    pub fn edp_reduction(&self) -> f64 {
+        self.lbl.edp() / self.fused.edp().max(f64::MIN_POSITIVE)
+    }
+}
+
+/// Sweep configuration (sized down for tests, paper-scale for benches).
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub workloads: Vec<String>,
+    pub archs: Vec<String>,
+    pub ga: GaParams,
+    /// Candidate CN granularities for the layer-fused runs; the best
+    /// EDP across them is reported (Stream's Step-1 granularity
+    /// optimization: big-activation networks want line granularity,
+    /// weight-heavy networks want coarser blocks).
+    pub lines: Vec<usize>,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            workloads: vec![
+                "resnet18".into(),
+                "mobilenetv2".into(),
+                "squeezenet".into(),
+                "tinyyolo".into(),
+                "fsrcnn".into(),
+            ],
+            archs: vec![
+                "sc-tpu".into(),
+                "sc-eye".into(),
+                "sc-env".into(),
+                "hom-tpu".into(),
+                "hom-eye".into(),
+                "hom-env".into(),
+                "hetero".into(),
+            ],
+            ga: GaParams::default(),
+            lines: vec![1, 4],
+        }
+    }
+}
+
+fn best_edp(
+    workload: &WorkloadGraph,
+    arch: &Accelerator,
+    gran: CnGranularity,
+    ga: GaParams,
+) -> ScheduleMetrics {
+    let s = Stream::new(
+        workload.clone(),
+        arch.clone(),
+        StreamOpts {
+            granularity: gran,
+            priority: SchedulePriority::Latency,
+            objective: Objective::Edp,
+            ga,
+            allocation: None,
+        },
+    );
+    let r = s.run().expect("pipeline");
+    r.best_edp().expect("nonempty front").result.metrics
+}
+
+/// Run the exploration sweep; cells are evaluated in parallel.
+pub fn exploration_sweep(cfg: &SweepConfig) -> Vec<ExplorationCell> {
+    let pairs: Vec<(String, String)> = cfg
+        .workloads
+        .iter()
+        .flat_map(|w| cfg.archs.iter().map(move |a| (w.clone(), a.clone())))
+        .collect();
+
+    crate::util::parallel_map(pairs, |(wname, aname)| {
+        let w = models::by_name(&wname).expect("workload");
+        let a = presets::by_name(&aname).expect("arch");
+        let lbl = best_edp(&w, &a, CnGranularity::LayerByLayer, cfg.ga);
+        let fused = cfg
+            .lines
+            .iter()
+            .map(|&l| best_edp(&w, &a, CnGranularity::Lines(l), cfg.ga))
+            .min_by(|x, y| x.edp().partial_cmp(&y.edp()).unwrap_or(std::cmp::Ordering::Equal))
+            .expect("at least one granularity");
+        ExplorationCell { workload: wname, arch: aname, lbl, fused }
+    })
+}
+
+/// Serialize sweep cells to JSON (so the Fig. 14/15 benches reuse the
+/// Fig. 13 sweep instead of recomputing it).
+pub fn cells_to_json(cells: &[ExplorationCell]) -> String {
+    use crate::util::Json;
+    use std::collections::BTreeMap;
+
+    fn metrics_json(m: &ScheduleMetrics) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("latency_cc".into(), Json::Num(m.latency_cc as f64));
+        o.insert("energy_pj".into(), Json::Num(m.energy_pj));
+        o.insert("peak_mem_bytes".into(), Json::Num(m.peak_mem_bytes));
+        o.insert("mac_pj".into(), Json::Num(m.breakdown.mac_pj));
+        o.insert("onchip_pj".into(), Json::Num(m.breakdown.onchip_pj));
+        o.insert("bus_pj".into(), Json::Num(m.breakdown.bus_pj));
+        o.insert("dram_pj".into(), Json::Num(m.breakdown.dram_pj));
+        o.insert("avg_core_util".into(), Json::Num(m.avg_core_util));
+        Json::Obj(o)
+    }
+
+    let arr: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            let mut o = BTreeMap::new();
+            o.insert("workload".into(), Json::Str(c.workload.clone()));
+            o.insert("arch".into(), Json::Str(c.arch.clone()));
+            o.insert("lbl".into(), metrics_json(&c.lbl));
+            o.insert("fused".into(), metrics_json(&c.fused));
+            Json::Obj(o)
+        })
+        .collect();
+    crate::util::Json::Arr(arr).to_string_compact()
+}
+
+/// Parse cells back from [`cells_to_json`] output.
+pub fn cells_from_json(text: &str) -> Option<Vec<ExplorationCell>> {
+    use crate::util::Json;
+
+    fn metrics(j: &Json) -> Option<ScheduleMetrics> {
+        Some(ScheduleMetrics {
+            latency_cc: j.get("latency_cc")?.as_f64()? as u64,
+            energy_pj: j.get("energy_pj")?.as_f64()?,
+            peak_mem_bytes: j.get("peak_mem_bytes")?.as_f64()?,
+            breakdown: crate::cost::EnergyBreakdown {
+                mac_pj: j.get("mac_pj")?.as_f64()?,
+                onchip_pj: j.get("onchip_pj")?.as_f64()?,
+                bus_pj: j.get("bus_pj")?.as_f64()?,
+                dram_pj: j.get("dram_pj")?.as_f64()?,
+            },
+            avg_core_util: j.get("avg_core_util")?.as_f64()?,
+        })
+    }
+
+    let j = Json::parse(text).ok()?;
+    j.as_arr()?
+        .iter()
+        .map(|c| {
+            Some(ExplorationCell {
+                workload: c.get("workload")?.as_str()?.to_string(),
+                arch: c.get("arch")?.as_str()?.to_string(),
+                lbl: metrics(c.get("lbl")?)?,
+                fused: metrics(c.get("fused")?)?,
+            })
+        })
+        .collect()
+}
+
+/// Run the sweep, caching the result at `path` (reused by later benches
+/// with the same config; delete the file to force a re-run).
+pub fn sweep_cached(cfg: &SweepConfig, path: &std::path::Path) -> Vec<ExplorationCell> {
+    let key = format!(
+        "{:?}|{:?}|{}|{}|{:?}",
+        cfg.workloads, cfg.archs, cfg.ga.population, cfg.ga.generations, cfg.lines
+    );
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Some((stored_key, body)) = text.split_once('\n') {
+            if stored_key == key {
+                if let Some(cells) = cells_from_json(body) {
+                    return cells;
+                }
+            }
+        }
+    }
+    let cells = exploration_sweep(cfg);
+    let _ = std::fs::create_dir_all(path.parent().unwrap_or(std::path::Path::new(".")));
+    let _ = std::fs::write(path, format!("{key}\n{}", cells_to_json(&cells)));
+    cells
+}
+
+/// Default cache location under target/.
+pub fn default_cache_path() -> std::path::PathBuf {
+    std::path::PathBuf::from("target/stream-bench/fig13_cells.json")
+}
+
+/// Geometric-mean EDP reduction per architecture (the Fig. 13 labels).
+pub fn geomean_reduction_per_arch(cells: &[ExplorationCell]) -> Vec<(String, f64)> {
+    let mut archs: Vec<String> = cells.iter().map(|c| c.arch.clone()).collect();
+    archs.dedup();
+    archs.sort();
+    archs.dedup();
+    archs
+        .into_iter()
+        .map(|a| {
+            let rs: Vec<f64> = cells
+                .iter()
+                .filter(|c| c.arch == a)
+                .map(|c| c.edp_reduction())
+                .collect();
+            (a, geomean(&rs))
+        })
+        .collect()
+}
+
+/// Fig. 13 text rendering: EDP matrix + geomean reductions.
+pub fn format_fig13(cells: &[ExplorationCell]) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:<12} {:<9} {:>13} {:>13} {:>8}",
+        "workload", "arch", "EDP lbl", "EDP fused", "gain"
+    );
+    for c in cells {
+        let _ = writeln!(
+            s,
+            "{:<12} {:<9} {:>13.3e} {:>13.3e} {:>7.1}x",
+            c.workload,
+            c.arch,
+            c.lbl.edp(),
+            c.fused.edp(),
+            c.edp_reduction()
+        );
+    }
+    let _ = writeln!(s, "-- geomean EDP reduction (layer-by-layer -> fused) --");
+    for (a, g) in geomean_reduction_per_arch(cells) {
+        let _ = writeln!(s, "{a:<9} {g:>6.1}x");
+    }
+    s
+}
+
+/// Fig. 14 rendering: latency at the best-EDP points.
+pub fn format_fig14(cells: &[ExplorationCell]) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:<12} {:<9} {:>13} {:>13} {:>8}",
+        "workload", "arch", "lat lbl(cc)", "lat fused(cc)", "gain"
+    );
+    for c in cells {
+        let _ = writeln!(
+            s,
+            "{:<12} {:<9} {:>13} {:>13} {:>7.1}x",
+            c.workload,
+            c.arch,
+            c.lbl.latency_cc,
+            c.fused.latency_cc,
+            c.lbl.latency_cc as f64 / c.fused.latency_cc.max(1) as f64
+        );
+    }
+    s
+}
+
+/// Fig. 15 rendering: energy breakdown at the best-EDP points.
+pub fn format_fig15(cells: &[ExplorationCell]) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:<12} {:<9} {:<6} {:>11} {:>11} {:>11} {:>11}",
+        "workload", "arch", "sched", "mac(pJ)", "onchip(pJ)", "bus(pJ)", "dram(pJ)"
+    );
+    for c in cells {
+        for (tag, m) in [("lbl", &c.lbl), ("fused", &c.fused)] {
+            let b = m.breakdown;
+            let _ = writeln!(
+                s,
+                "{:<12} {:<9} {:<6} {:>11.3e} {:>11.3e} {:>11.3e} {:>11.3e}",
+                c.workload, c.arch, tag, b.mac_pj, b.onchip_pj, b.bus_pj, b.dram_pj
+            );
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> SweepConfig {
+        SweepConfig {
+            workloads: vec!["tiny-segment".into()],
+            archs: vec!["sc-tpu".into(), "hetero".into()],
+            ga: GaParams { population: 8, generations: 4, ..Default::default() },
+            lines: vec![4],
+        }
+    }
+
+    #[test]
+    fn sweep_produces_all_cells() {
+        let cells = exploration_sweep(&tiny_cfg());
+        assert_eq!(cells.len(), 2);
+        for c in &cells {
+            assert!(c.fused.edp() > 0.0);
+            assert!(c.lbl.edp() > 0.0);
+        }
+    }
+
+    #[test]
+    fn fusion_reduces_edp() {
+        let cells = exploration_sweep(&tiny_cfg());
+        for c in &cells {
+            assert!(
+                c.edp_reduction() > 1.0,
+                "{} on {}: reduction {}",
+                c.workload,
+                c.arch,
+                c.edp_reduction()
+            );
+        }
+    }
+
+    #[test]
+    fn renderings_nonempty() {
+        let cells = exploration_sweep(&tiny_cfg());
+        assert!(format_fig13(&cells).contains("geomean"));
+        assert!(format_fig14(&cells).contains("lat"));
+        assert!(format_fig15(&cells).contains("dram"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Experiment harnesses shared by the CLI and the `benches/` targets:
+//! one function per paper table / figure.
+
+pub mod fig12;
+pub mod fig13;
+pub mod table1;
+
+pub use fig12::{fig12, Fig12Row};
+pub use fig13::{exploration_sweep, ExplorationCell, SweepConfig};
+pub use table1::{table1, Table1Row};

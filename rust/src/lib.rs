@@ -1,0 +1,66 @@
+//! # Stream — DSE of layer-fused DNNs on heterogeneous multi-core accelerators
+//!
+//! A Rust reproduction of *"Towards Heterogeneous Multi-core Accelerators
+//! Exploiting Fine-grained Scheduling of Layer-Fused Deep Neural Networks"*
+//! (Symons et al., KU Leuven, 2022 — the Stream framework).
+//!
+//! Stream takes a DNN workload graph and a high-level multi-core
+//! accelerator description, and derives an optimized execution schedule
+//! together with its energy, latency and memory footprint:
+//!
+//! 1. [`cn`] — split every layer into **computation nodes** (CNs) at a
+//!    granularity aware of the layer topology and of every core's spatial
+//!    dataflow (paper Step 1);
+//! 2. [`depgraph`] — generate the fine-grained CN dependency graph, using
+//!    an [`rtree`] for fast inter-layer overlap queries (Step 2);
+//! 3. [`mapping`] — extract per-(CN, core) energy/latency with a
+//!    ZigZag-lite analytic intra-core model over [`arch`] descriptions
+//!    and the [`cacti`] memory-energy model (Step 3);
+//! 4. [`allocator`] — explore the layer–core allocation space with a
+//!    genetic algorithm using NSGA-II selection (Step 4);
+//! 5. [`scheduler`] — schedule CNs onto cores with latency- or
+//!    memory-prioritized heuristics, modeling bus contention, DRAM-port
+//!    contention and FIFO weight eviction (Step 5.1), and trace activation
+//!    memory usage over time (Step 5.2).
+//!
+//! The [`pipeline`] module orchestrates the five steps behind one call;
+//! [`runtime`] loads the AOT-compiled XLA artifacts (built once from
+//! JAX/Pallas by `python/compile/aot.py`) and *executes* the resulting
+//! schedules numerically on the PJRT CPU client, proving the fused
+//! schedules compute exactly what the layer-by-layer baseline computes.
+//!
+//! ```no_run
+//! use stream::prelude::*;
+//!
+//! let workload = stream::workload::models::resnet18();
+//! let arch = stream::arch::presets::hetero_quad();
+//! let opts = StreamOpts::default();
+//! let result = stream::pipeline::Stream::new(workload, arch, opts).run().unwrap();
+//! println!("best EDP = {:.3e}", result.best_edp().unwrap().edp());
+//! ```
+
+pub mod allocator;
+pub mod arch;
+pub mod experiments;
+pub mod cacti;
+pub mod cn;
+pub mod cost;
+pub mod depgraph;
+pub mod mapping;
+pub mod pipeline;
+pub mod rtree;
+pub mod runtime;
+pub mod scheduler;
+pub mod util;
+pub mod viz;
+pub mod workload;
+
+/// Convenience re-exports for downstream users.
+pub mod prelude {
+    pub use crate::arch::{Accelerator, Core, Dataflow};
+    pub use crate::cn::{CnGranularity, ComputationNode};
+    pub use crate::cost::{EnergyBreakdown, ScheduleMetrics};
+    pub use crate::pipeline::{SchedulePriority, Stream, StreamOpts, StreamResult};
+    pub use crate::scheduler::ScheduleResult;
+    pub use crate::workload::{Layer, LayerId, OpType, WorkloadGraph};
+}

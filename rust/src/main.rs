@@ -1,0 +1,252 @@
+//! `stream` — CLI for the Stream DSE framework.
+//!
+//! ```text
+//! stream list                                   # workloads & architectures
+//! stream schedule -w resnet18 -a hetero --gantt # run pipeline, print Gantt
+//! stream explore  -w resnet18,fsrcnn -a sc-tpu,hetero
+//! stream validate                               # Table I reproduction
+//! stream allocation                             # Fig. 12 reproduction
+//! stream execute  [--artifacts DIR]             # run fused schedule on PJRT
+//! ```
+//!
+//! Argument parsing is hand-rolled (the build environment has no clap).
+
+use anyhow::{anyhow, bail, Result};
+
+use stream::allocator::GaParams;
+use stream::arch::presets;
+use stream::cn::CnGranularity;
+use stream::cost::{fmt_bytes, fmt_cycles, fmt_energy};
+use stream::experiments;
+use stream::pipeline::{SchedulePriority, Stream, StreamOpts};
+use stream::workload::models;
+
+const USAGE: &str = "\
+stream — DSE of layer-fused DNNs on heterogeneous multi-core accelerators
+
+USAGE:
+  stream list
+  stream schedule -w <workload> -a <arch> [--lines N] [--layer-by-layer]
+                  [--priority latency|memory] [--population N]
+                  [--generations N] [--gantt] [--json <path>]
+  stream explore  [-w w1,w2,...] [-a a1,a2,...] [--population N] [--generations N]
+  stream validate
+  stream allocation [--population N] [--generations N]
+  stream execute  [--artifacts <dir>]
+";
+
+/// Tiny flag parser: `--key value` / `--flag` / `-w value`.
+struct Args {
+    args: Vec<String>,
+}
+
+impl Args {
+    fn new(args: Vec<String>) -> Args {
+        Args { args }
+    }
+
+    fn opt(&self, names: &[&str]) -> Option<String> {
+        for (i, a) in self.args.iter().enumerate() {
+            if names.contains(&a.as_str()) {
+                return self.args.get(i + 1).cloned();
+            }
+        }
+        None
+    }
+
+    fn flag(&self, name: &str) -> bool {
+        self.args.iter().any(|a| a == name)
+    }
+
+    fn usize_opt(&self, names: &[&str], default: usize) -> Result<usize> {
+        match self.opt(names) {
+            Some(v) => v.parse().map_err(|_| anyhow!("bad number for {names:?}: {v}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn parse_priority(s: &str) -> Result<SchedulePriority> {
+    match s {
+        "latency" => Ok(SchedulePriority::Latency),
+        "memory" => Ok(SchedulePriority::Memory),
+        _ => bail!("priority must be latency|memory, got {s}"),
+    }
+}
+
+fn main() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv.remove(0);
+    let args = Args::new(argv);
+
+    match cmd.as_str() {
+        "list" => cmd_list(),
+        "schedule" => cmd_schedule(&args),
+        "explore" => cmd_explore(&args),
+        "validate" => cmd_validate(),
+        "allocation" => cmd_allocation(&args),
+        "execute" => cmd_execute(&args),
+        other => {
+            print!("{USAGE}");
+            bail!("unknown command {other}")
+        }
+    }
+}
+
+fn cmd_list() -> Result<()> {
+    println!("workloads:");
+    for w in models::WORKLOAD_NAMES {
+        let g = models::by_name(w).unwrap();
+        println!(
+            "  {:<24} {:>3} layers {:>10.1} MMAC",
+            w,
+            g.len(),
+            g.total_macs() as f64 / 1e6
+        );
+    }
+    println!("architectures:");
+    for a in presets::ARCH_NAMES {
+        let arch = presets::by_name(a).unwrap();
+        println!(
+            "  {:<12} {:>2} cores {:>6} KB on-chip",
+            a,
+            arch.cores.len(),
+            arch.total_onchip_bytes() / 1024
+        );
+    }
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    let workload =
+        args.opt(&["-w", "--workload"]).ok_or_else(|| anyhow!("missing -w <workload>"))?;
+    let arch = args.opt(&["-a", "--arch"]).ok_or_else(|| anyhow!("missing -a <arch>"))?;
+    let w = models::by_name(&workload).ok_or_else(|| anyhow!("unknown workload {workload}"))?;
+    let a = presets::by_name(&arch).ok_or_else(|| anyhow!("unknown arch {arch}"))?;
+
+    let granularity = if args.flag("--layer-by-layer") {
+        CnGranularity::LayerByLayer
+    } else {
+        CnGranularity::Lines(args.usize_opt(&["--lines"], 4)?)
+    };
+    let opts = StreamOpts {
+        granularity,
+        priority: parse_priority(
+            &args.opt(&["-p", "--priority"]).unwrap_or_else(|| "latency".into()),
+        )?,
+        ga: GaParams {
+            population: args.usize_opt(&["--population"], 32)?,
+            generations: args.usize_opt(&["--generations"], 24)?,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+
+    let t = stream::util::ScopeTimer::start();
+    let s = Stream::new(w.clone(), a.clone(), opts);
+    let r = s.run().map_err(|e| anyhow!("{e}"))?;
+    let best = r.best_edp().ok_or_else(|| anyhow!("empty result"))?;
+    println!(
+        "{workload} on {arch}: {} CNs, {} edges, {:.1} ms runtime",
+        r.n_cns,
+        r.n_edges,
+        t.elapsed_ms()
+    );
+    let m = &best.result.metrics;
+    println!(
+        "best EDP point: latency {} | energy {} | peak mem {} | EDP {:.3e}",
+        fmt_cycles(m.latency_cc),
+        fmt_energy(m.energy_pj),
+        fmt_bytes(m.peak_mem_bytes),
+        m.edp()
+    );
+    println!(
+        "allocation: {:?}",
+        best.allocation.iter().map(|c| c.0).collect::<Vec<_>>()
+    );
+    if args.flag("--gantt") {
+        println!("{}", stream::viz::gantt(&best.result, &w, &a, 100));
+    }
+    if let Some(path) = args.opt(&["--json"]) {
+        std::fs::write(&path, stream::viz::to_json(&best.result))?;
+        println!("schedule written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_explore(args: &Args) -> Result<()> {
+    let mut cfg = experiments::SweepConfig {
+        ga: GaParams {
+            population: args.usize_opt(&["--population"], 16)?,
+            generations: args.usize_opt(&["--generations"], 10)?,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    if let Some(ws) = args.opt(&["-w", "--workloads"]) {
+        cfg.workloads = ws.split(',').map(String::from).collect();
+    }
+    if let Some(as_) = args.opt(&["-a", "--archs"]) {
+        cfg.archs = as_.split(',').map(String::from).collect();
+    }
+    for w in &cfg.workloads {
+        if models::by_name(w).is_none() {
+            bail!("unknown workload {w}");
+        }
+    }
+    for a in &cfg.archs {
+        if presets::by_name(a).is_none() {
+            bail!("unknown arch {a}");
+        }
+    }
+    let cells = experiments::exploration_sweep(&cfg);
+    println!("{}", experiments::fig13::format_fig13(&cells));
+    println!("{}", experiments::fig13::format_fig14(&cells));
+    println!("{}", experiments::fig13::format_fig15(&cells));
+    Ok(())
+}
+
+fn cmd_validate() -> Result<()> {
+    let rows = experiments::table1();
+    println!("{}", experiments::table1::format_table(&rows));
+    Ok(())
+}
+
+fn cmd_allocation(args: &Args) -> Result<()> {
+    let rows = experiments::fig12(GaParams {
+        population: args.usize_opt(&["--population"], 16)?,
+        generations: args.usize_opt(&["--generations"], 10)?,
+        ..Default::default()
+    });
+    println!("{}", experiments::fig12::format_rows(&rows));
+    Ok(())
+}
+
+fn cmd_execute(args: &Args) -> Result<()> {
+    use stream::runtime::{Runtime, SegmentExecutor};
+    let artifacts = args.opt(&["--artifacts"]).unwrap_or_else(|| "artifacts".into());
+    let mut rt = Runtime::new(&artifacts)?;
+    println!("PJRT platform: {}", rt.platform());
+    let exec = SegmentExecutor::new(&rt)?;
+
+    let t = stream::util::ScopeTimer::start();
+    let lbl = exec.run_layer_by_layer(&mut rt)?;
+    let d1 = exec.verify(&lbl, 1e-3)?;
+    println!("layer-by-layer: max|diff| = {d1:.2e} vs oracle  ({:.1} ms)", t.elapsed_ms());
+
+    let t = stream::util::ScopeTimer::start();
+    let order = exec.depth_first_order(&rt);
+    let fused = exec.run_fused(&mut rt, &order)?;
+    let d2 = exec.verify(&fused, 1e-3)?;
+    println!(
+        "layer-fused ({} CNs): max|diff| = {d2:.2e} vs oracle  ({:.1} ms)",
+        order.len(),
+        t.elapsed_ms()
+    );
+    println!("fused == layer-by-layer == python oracle OK");
+    Ok(())
+}

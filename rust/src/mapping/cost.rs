@@ -1,0 +1,306 @@
+//! Per-(CN, core) energy & latency extraction.
+//!
+//! Access-count model (ZigZag-lite): each operand's SRAM traffic is its
+//! footprint times a *refetch factor* — how often the temporal mapping
+//! must re-stream it because the PE-local register file cannot hold the
+//! full reuse window:
+//!
+//! - activations are re-read once per output-channel slice that doesn't
+//!   fit the spatial K-unroll times the RF's psum depth ([`REG_K`]);
+//! - weights are re-read once per output-pixel tile beyond the spatial
+//!   OX/OY-unroll times the RF's pixel-streaming window ([`REG_PIX`]).
+//!
+//! This captures the first-order dataflow asymmetries (a `C|K` core
+//! streams pixels through stationary weights; an `OX|F` core streams
+//! weights through stationary rows) without a full temporal-mapping
+//! search, and it is exactly the kind of cost ZigZag/LOMA would return
+//! as the optimum of that search.
+
+use std::collections::HashMap;
+
+use crate::arch::{Accelerator, Core, CoreId, CoreKind};
+use crate::cn::{CnSet, ComputationNode};
+use crate::workload::{Dim, Layer, OpType, WorkloadGraph};
+
+use super::spatial::{spatial_utilization, temporal_iterations};
+
+/// Psum slots per PE register file (output channels kept resident).
+const REG_K: usize = 8;
+/// Output pixels streamed per weight residency window.
+const REG_PIX: usize = 64;
+
+/// Cost of executing one CN on one core.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CnCost {
+    /// Cycles the PE array / SIMD unit is busy (incl. bandwidth stalls).
+    pub compute_cycles: u64,
+    /// Core-internal energy: MACs + SRAM accesses (pJ).
+    pub energy_pj: f64,
+    /// MAC-only share of `energy_pj` (for the Fig. 15 breakdown).
+    pub mac_energy_pj: f64,
+    /// Spatial utilization of the PE array in (0, 1].
+    pub spatial_util: f64,
+}
+
+impl CnCost {
+    /// Energy-delay product contribution (pJ x cycles).
+    pub fn edp(&self) -> f64 {
+        self.energy_pj * self.compute_cycles as f64
+    }
+}
+
+/// Memoized cost model over a fixed (workload, architecture) pair.
+///
+/// Costs depend only on `(layer, core, out_lines, in_rows)`, so the
+/// table stays small (a few entries per layer-core pair) regardless of
+/// CN count; lookups on the GA/scheduler hot path are hash-map reads.
+pub struct CostModel {
+    table: HashMap<(usize, usize, u32, u32), CnCost>,
+}
+
+impl CostModel {
+    /// Precompute every (CN shape, core) combination of the set.
+    pub fn build(workload: &WorkloadGraph, cns: &CnSet, arch: &Accelerator) -> CostModel {
+        let mut table = HashMap::new();
+        for cn in &cns.nodes {
+            let layer = workload.layer(cn.layer);
+            for core in &arch.cores {
+                let key = Self::key(cn, core.id);
+                table
+                    .entry(key)
+                    .or_insert_with(|| compute_cost(layer, cn, core));
+            }
+        }
+        CostModel { table }
+    }
+
+    fn key(cn: &ComputationNode, core: CoreId) -> (usize, usize, u32, u32) {
+        let out_lines = (cn.out_rect.hi[1] - cn.out_rect.lo[1]) as u32;
+        let in_rows = (cn.in_rect.hi[1] - cn.in_rect.lo[1]) as u32;
+        (cn.layer.0, core.0, out_lines, in_rows)
+    }
+
+    /// Cost of `cn` on `core` (must be a combination seen at build time).
+    pub fn cn_cost(&self, cn: &ComputationNode, core: CoreId) -> CnCost {
+        self.table[&Self::key(cn, core)]
+    }
+
+    pub fn len(&self) -> usize {
+        self.table.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.table.is_empty()
+    }
+}
+
+/// Analytic cost of one CN on one core.
+pub fn compute_cost(layer: &Layer, cn: &ComputationNode, core: &Core) -> CnCost {
+    match core.kind {
+        CoreKind::Simd { lanes, op_pj } => simd_cost(layer, cn, core, lanes, op_pj),
+        _ => dense_cost(layer, cn, core),
+    }
+}
+
+fn dense_cost(layer: &Layer, cn: &ComputationNode, core: &Core) -> CnCost {
+    let lines = cn.out_lines();
+    let df = &core.dataflow;
+    let util = spatial_utilization(layer, lines, df);
+    let iters = temporal_iterations(layer, lines, df);
+
+    let macs = cn.macs;
+    let in_elems = cn.in_rect.volume();
+    let out_elems = cn.out_rect.volume();
+    let wgt_elems = match layer.op {
+        OpType::Conv => (layer.k * layer.c * layer.fy * layer.fx) as u64,
+        OpType::DwConv => (layer.k * layer.fy * layer.fx) as u64,
+        OpType::Fc => (layer.k * layer.c) as u64,
+        _ => 0,
+    };
+
+    // refetch factors from the register-file reuse windows
+    let k_slices = layer.k.div_ceil(df.unroll(Dim::K) * REG_K).max(1) as u64;
+    let pix_per_window = (df.unroll(Dim::OX) * df.unroll(Dim::OY) * REG_PIX).max(1);
+    let out_pix = (lines * layer.ox).max(1);
+    // Weight streaming continues across back-to-back CNs of the same
+    // layer on a core, so the weight-read count is pro-rated by the CN's
+    // share of the layer's output pixels (fractional windows) rather
+    // than ceil'd per CN — otherwise fine granularities would be charged
+    // n_CNs x the layer's weight traffic, which no real core pays.
+    let layer_pix = (layer.oy * layer.ox).max(1) as f64;
+    let pix_tiles_f =
+        (out_pix as f64 / pix_per_window as f64).max(out_pix as f64 / layer_pix);
+
+    let act_reads = in_elems * k_slices;
+    let wgt_reads = (wgt_elems as f64 * pix_tiles_f).ceil() as u64;
+    let out_writes = out_elems;
+
+    // energy
+    let mac_e = macs as f64 * core.mac_pj();
+    let act_e = act_reads as f64 * core.act_read_pj(layer.act_bits as u64);
+    let wgt_e = wgt_reads as f64 * core.wgt_read_pj(layer.wgt_bits as u64);
+    let out_e = out_writes as f64 * core.act_write_pj(layer.act_bits as u64);
+    let energy = mac_e + act_e + wgt_e + out_e;
+
+    // latency: ideal temporal iterations, stretched by SRAM bandwidth.
+    // AiMC arrays apply multi-bit activations bit-serially on the DACs
+    // (2 bits per cycle in the Jia et al. class of designs), so their
+    // temporal iterations scale with act_bits / 2.
+    let bit_serial = match core.kind {
+        CoreKind::Aimc { act_bits_per_cycle, .. } => {
+            (layer.act_bits as u64).div_ceil(act_bits_per_cycle.max(1) as u64).max(1)
+        }
+        _ => 1,
+    };
+    let traffic_bits = act_reads * layer.act_bits as u64
+        + wgt_reads * layer.wgt_bits as u64
+        + out_writes * layer.act_bits as u64;
+    let ideal = (iters * bit_serial).max(1);
+    let mem_cycles = traffic_bits.div_ceil(core.sram_bw_bits.max(1));
+    let compute_cycles = ideal.max(mem_cycles);
+
+    CnCost {
+        compute_cycles,
+        energy_pj: energy,
+        mac_energy_pj: mac_e,
+        spatial_util: util,
+    }
+}
+
+fn simd_cost(layer: &Layer, cn: &ComputationNode, core: &Core, lanes: usize, op_pj: f64) -> CnCost {
+    // ops: window ops for pool, element ops for add, pure copy for concat
+    let ops = match layer.op {
+        OpType::Concat => cn.out_rect.volume(), // copy traffic only
+        _ => cn.macs.max(cn.out_rect.volume()),
+    };
+    let out_elems = cn.out_rect.volume();
+    let reads = ops;
+    let writes = out_elems;
+
+    let ideal = ops.div_ceil(lanes as u64).max(1);
+    let traffic_bits = (reads + writes) * layer.act_bits as u64;
+    let mem_cycles = traffic_bits.div_ceil(core.sram_bw_bits.max(1));
+    let compute_cycles = ideal.max(mem_cycles);
+
+    let e = ops as f64 * op_pj
+        + reads as f64 * core.act_read_pj(layer.act_bits as u64)
+        + writes as f64 * core.act_write_pj(layer.act_bits as u64);
+
+    CnCost {
+        compute_cycles,
+        energy_pj: e,
+        mac_energy_pj: ops as f64 * op_pj,
+        spatial_util: 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::cn::{CnGranularity, CnSet};
+    use crate::workload::models::{resnet18_first_segment, tiny_linear};
+    use crate::workload::{LayerBuilder, LayerId};
+
+    fn seg_model() -> (crate::workload::WorkloadGraph, CnSet, Accelerator) {
+        let w = resnet18_first_segment();
+        let arch = presets::hetero_quad();
+        let cns = CnSet::build(&w, CnGranularity::Lines(4));
+        (w, cns, arch)
+    }
+
+    #[test]
+    fn table_is_compact() {
+        let (w, cns, arch) = seg_model();
+        let m = CostModel::build(&w, &cns, &arch);
+        // <= 3 shapes per layer (first/interior/last) x 5 cores x 5 layers
+        assert!(m.len() <= 3 * 5 * 5, "{}", m.len());
+        assert!(!m.is_empty());
+    }
+
+    #[test]
+    fn lookup_matches_direct_compute() {
+        let (w, cns, arch) = seg_model();
+        let m = CostModel::build(&w, &cns, &arch);
+        for cn in &cns.nodes {
+            for core in &arch.cores {
+                let got = m.cn_cost(cn, core.id);
+                let want = compute_cost(w.layer(cn.layer), cn, core);
+                assert_eq!(got, want);
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_dataflow_is_slower() {
+        // depthwise conv on C|K core vs OX|F core
+        let dw = {
+            let mut l = LayerBuilder::new("dw", crate::workload::OpType::DwConv)
+                .k(64)
+                .c(64)
+                .spatial(56, 64)
+                .filter(3, 3)
+                .pad(1)
+                .build();
+            l.id = LayerId(0);
+            l
+        };
+        let cns = crate::cn::split_layer(&dw, CnGranularity::LayerByLayer);
+        let arch = presets::hetero_quad();
+        let ck_core = &arch.cores[2]; // C 32 | K 32
+        let oxf_core = &arch.cores[0]; // OX 64 | FX 4 | FY 4
+        let c_ck = compute_cost(&dw, &cns[0], ck_core);
+        let c_oxf = compute_cost(&dw, &cns[0], oxf_core);
+        // memory traffic caps the gap, but the mismatch must still cost
+        // well over 1.5x in latency and >10x in spatial utilization
+        assert!(
+            c_ck.compute_cycles as f64 > 1.5 * c_oxf.compute_cycles as f64,
+            "{} vs {}",
+            c_ck.compute_cycles,
+            c_oxf.compute_cycles
+        );
+        assert!(c_oxf.spatial_util > 10.0 * c_ck.spatial_util);
+    }
+
+    #[test]
+    fn energy_scales_with_cn_size() {
+        let (w, cns, arch) = seg_model();
+        let m = CostModel::build(&w, &cns, &arch);
+        let layer0 = cns.layer_cns(LayerId(0));
+        let c_small = m.cn_cost(&layer0[1], crate::arch::CoreId(2));
+        // a whole-layer CN must cost ~n_cns x one interior CN
+        let whole = CnSet::build(&w, CnGranularity::LayerByLayer);
+        let c_big = m_build_single(&w, &whole, &arch, crate::arch::CoreId(2));
+        assert!(c_big.energy_pj > 10.0 * c_small.energy_pj);
+    }
+
+    fn m_build_single(
+        w: &crate::workload::WorkloadGraph,
+        cns: &CnSet,
+        arch: &Accelerator,
+        core: crate::arch::CoreId,
+    ) -> CnCost {
+        let m = CostModel::build(w, cns, arch);
+        m.cn_cost(&cns.nodes[0], core)
+    }
+
+    #[test]
+    fn simd_core_handles_pool() {
+        let (w, cns, arch) = seg_model();
+        let m = CostModel::build(&w, &cns, &arch);
+        let simd = arch.simd_core().unwrap();
+        let pool_cn = &cns.layer_cns(LayerId(1))[0];
+        let c = m.cn_cost(pool_cn, simd);
+        assert!(c.compute_cycles > 0);
+        assert!(c.energy_pj > 0.0);
+    }
+
+    #[test]
+    fn total_macs_conserved_through_costs() {
+        let w = tiny_linear();
+        let cns = CnSet::build(&w, CnGranularity::Lines(2));
+        let total: u64 = cns.nodes.iter().map(|c| c.macs).sum();
+        let direct: u64 = w.layers().iter().map(|l| l.macs()).sum();
+        assert_eq!(total, direct);
+    }
+}

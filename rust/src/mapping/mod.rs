@@ -1,0 +1,28 @@
+//! Step 3 — intra-core mapping cost extraction (ZigZag-lite).
+//!
+//! For every unique (CN shape, core) combination, this module derives
+//! the energy, latency and utilization of executing the CN on the core,
+//! following the analytic structure of ZigZag [28] with the uniform
+//! latency model of Mei et al. (DATE'22) [29]:
+//!
+//! - **Spatial utilization** ([`spatial`]): loop bounds that do not fill
+//!   the core's spatial unrolling leave PEs idle — computed exactly from
+//!   per-dimension `ceil` edge effects.
+//! - **Temporal access counts** ([`cost`]): per-operand SRAM traffic is
+//!   the MAC count divided by the spatial reuse of that operand (the
+//!   product of the unrollings of the dims the operand does not index),
+//!   mirroring the dataflow-dependent reuse ZigZag extracts from the
+//!   full temporal-mapping search.
+//! - **Latency** = compute cycles under utilization x bandwidth-stall
+//!   factor, plus on/off-loading cycles through the core's local port.
+//!
+//! Costs are memoized per (layer, core, CN-line-count) — all interior
+//! CNs of a layer share a shape, so a workload needs only a handful of
+//! evaluations per layer-core pair (the paper's "unique CN-core
+//! combinations").
+
+mod cost;
+mod spatial;
+
+pub use cost::{CnCost, CostModel};
+pub use spatial::{spatial_utilization, temporal_iterations};

@@ -1,0 +1,120 @@
+//! Spatial utilization: how well a CN's loop bounds fill a core's
+//! spatially unrolled PE array.
+
+use crate::arch::Dataflow;
+use crate::workload::{Dim, Layer};
+
+/// All seven loop dims in canonical order.
+pub const ALL_DIMS: [Dim; 7] = [Dim::B, Dim::K, Dim::C, Dim::OY, Dim::OX, Dim::FY, Dim::FX];
+
+/// Loop bound of dim `d` for a CN spanning `lines` output rows of
+/// `layer` (everything else full).
+pub fn cn_dim(layer: &Layer, lines: usize, d: Dim) -> usize {
+    match d {
+        Dim::OY => lines.min(layer.oy),
+        _ => layer.dim(d),
+    }
+}
+
+/// Temporal iteration count: cycles the PE array needs for the CN,
+/// assuming one spatial wavefront per cycle (ZigZag's ideal temporal
+/// mapping).  Each dim contributes `ceil(bound / unroll)`.
+pub fn temporal_iterations(layer: &Layer, lines: usize, df: &Dataflow) -> u64 {
+    let mut iters: u64 = 1;
+    for d in ALL_DIMS {
+        let bound = cn_dim(layer, lines, d) as u64;
+        let unroll = df.unroll(d) as u64;
+        iters *= bound.div_ceil(unroll);
+    }
+    iters
+}
+
+/// Spatial utilization in (0, 1]: actual MACs over PE-cycles consumed.
+///
+/// A `C 32 | K 32` core running a depthwise layer (C-bound 1) uses 1/32
+/// of its rows — exactly the dataflow mismatch the paper's heterogeneous
+/// architectures exploit.
+pub fn spatial_utilization(layer: &Layer, lines: usize, df: &Dataflow) -> f64 {
+    let macs: u64 = ALL_DIMS.iter().map(|&d| cn_dim(layer, lines, d) as u64).product();
+    let cycles = temporal_iterations(layer, lines, df);
+    let pes = df.pe_count() as u64;
+    macs as f64 / (cycles * pes) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{LayerBuilder, OpType};
+
+    fn conv(k: usize, c: usize, oy: usize, ox: usize, f: usize) -> Layer {
+        LayerBuilder::new("c", OpType::Conv).k(k).c(c).spatial(oy, ox).filter(f, f).build()
+    }
+
+    #[test]
+    fn perfect_fit_is_full_utilization() {
+        let df = Dataflow::new(&[(Dim::C, 32), (Dim::K, 32)]);
+        let l = conv(64, 64, 28, 28, 3);
+        assert!((spatial_utilization(&l, 28, &df) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn undersized_channels_waste_pes() {
+        let df = Dataflow::new(&[(Dim::C, 32), (Dim::K, 32)]);
+        let l = conv(16, 16, 28, 28, 3); // fills 16/32 x 16/32 = 1/4
+        assert!((spatial_utilization(&l, 28, &df) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn depthwise_on_ck_core_is_terrible() {
+        let df = Dataflow::new(&[(Dim::C, 32), (Dim::K, 32)]);
+        let l = LayerBuilder::new("dw", OpType::DwConv)
+            .k(64)
+            .c(64)
+            .spatial(28, 28)
+            .filter(3, 3)
+            .build();
+        // C bound is 1 for depthwise -> utilization 1/32
+        let u = spatial_utilization(&l, 28, &df);
+        assert!((u - 1.0 / 32.0).abs() < 1e-9, "{u}");
+    }
+
+    #[test]
+    fn depthwise_on_spatial_core_is_fine() {
+        let df = Dataflow::new(&[(Dim::OX, 64), (Dim::FX, 4), (Dim::FY, 4)]);
+        let l = LayerBuilder::new("dw", OpType::DwConv)
+            .k(64)
+            .c(64)
+            .spatial(56, 64)
+            .filter(3, 3)
+            .build();
+        // OX 64/64 full, FY/FX 3/4
+        let u = spatial_utilization(&l, 56, &df);
+        assert!(u > 0.5, "{u}");
+    }
+
+    #[test]
+    fn edge_effects() {
+        let df = Dataflow::new(&[(Dim::K, 32)]);
+        let l = conv(33, 1, 1, 1, 1); // 33 -> ceil = 2 iters of 32
+        let u = spatial_utilization(&l, 1, &df);
+        assert!((u - 33.0 / 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn temporal_iterations_counts() {
+        let df = Dataflow::new(&[(Dim::C, 32), (Dim::K, 32)]);
+        let l = conv(64, 64, 28, 28, 3);
+        // K: 2, C: 2, OY: 28, OX: 28, FY: 3, FX: 3
+        assert_eq!(temporal_iterations(&l, 28, &df), 2 * 2 * 28 * 28 * 9);
+    }
+
+    #[test]
+    fn fewer_lines_fewer_iterations() {
+        let df = Dataflow::new(&[(Dim::C, 32), (Dim::K, 32)]);
+        let l = conv(64, 64, 28, 28, 3);
+        assert_eq!(
+            temporal_iterations(&l, 4, &df) * 7,
+            temporal_iterations(&l, 28, &df)
+        );
+    }
+}

@@ -1,0 +1,265 @@
+//! The Stream pipeline: Steps 1–5 behind one call (paper Fig. 3).
+//!
+//! ```no_run
+//! use stream::prelude::*;
+//! let result = stream::pipeline::Stream::new(
+//!     stream::workload::models::resnet18(),
+//!     stream::arch::presets::hetero_quad(),
+//!     StreamOpts::default(),
+//! ).run().unwrap();
+//! ```
+
+use crate::allocator::{allocation_from_genome, Ga, GaParams, Objective};
+use crate::arch::{Accelerator, CoreId};
+use crate::cn::{CnGranularity, CnSet};
+use crate::depgraph::{generate, CnGraph};
+use crate::mapping::CostModel;
+use crate::scheduler::{ScheduleResult, Scheduler};
+use crate::workload::WorkloadGraph;
+
+pub use crate::allocator::GaResult;
+pub use crate::scheduler::SchedulePriority;
+
+/// Pipeline options.
+#[derive(Debug, Clone)]
+pub struct StreamOpts {
+    /// CN granularity before HW-dataflow clamping (Step 1).
+    pub granularity: CnGranularity,
+    /// Scheduler candidate priority (Step 5).
+    pub priority: SchedulePriority,
+    /// GA optimization criterion (Step 4).
+    pub objective: Objective,
+    pub ga: GaParams,
+    /// Fixed per-layer allocation: skips the GA when set (used by the
+    /// validation experiments, which pin the measured mapping).
+    pub allocation: Option<Vec<CoreId>>,
+}
+
+impl Default for StreamOpts {
+    fn default() -> Self {
+        StreamOpts {
+            granularity: CnGranularity::Lines(4),
+            priority: SchedulePriority::Latency,
+            objective: Objective::Edp,
+            ga: GaParams::default(),
+            allocation: None,
+        }
+    }
+}
+
+impl StreamOpts {
+    /// Layer-by-layer baseline options (the Section V comparison point).
+    pub fn layer_by_layer() -> StreamOpts {
+        StreamOpts { granularity: CnGranularity::LayerByLayer, ..Default::default() }
+    }
+}
+
+/// Errors from the pipeline.
+#[derive(Debug)]
+pub enum StreamError {
+    EmptyWorkload,
+    BadAllocation(String),
+}
+
+impl std::fmt::Display for StreamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StreamError::EmptyWorkload => write!(f, "workload has no layers"),
+            StreamError::BadAllocation(m) => write!(f, "bad allocation: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for StreamError {}
+
+/// One fully-scheduled allocation in the result set.
+pub struct ScheduledPoint {
+    pub allocation: Vec<CoreId>,
+    pub result: ScheduleResult,
+}
+
+/// The pipeline output: the Pareto set of scheduled allocations.
+pub struct StreamResult {
+    pub points: Vec<ScheduledPoint>,
+    /// Number of CNs in the fine-grained graph (diagnostics).
+    pub n_cns: usize,
+    /// Number of dependency edges (diagnostics).
+    pub n_edges: usize,
+}
+
+impl StreamResult {
+    /// The minimum-EDP point.
+    pub fn best_edp(&self) -> Option<&ScheduledPoint> {
+        self.points.iter().min_by(|a, b| {
+            a.result
+                .edp()
+                .partial_cmp(&b.result.edp())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+    }
+
+    /// The minimum-latency point.
+    pub fn best_latency(&self) -> Option<&ScheduledPoint> {
+        self.points.iter().min_by_key(|p| p.result.latency())
+    }
+
+    /// The minimum-peak-memory point.
+    pub fn best_memory(&self) -> Option<&ScheduledPoint> {
+        self.points.iter().min_by(|a, b| {
+            a.result
+                .peak_mem()
+                .partial_cmp(&b.result.peak_mem())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+    }
+}
+
+impl ScheduledPoint {
+    pub fn edp(&self) -> f64 {
+        self.result.edp()
+    }
+}
+
+/// The Stream framework instance.
+pub struct Stream {
+    pub workload: WorkloadGraph,
+    pub arch: Accelerator,
+    pub opts: StreamOpts,
+}
+
+impl Stream {
+    pub fn new(workload: WorkloadGraph, arch: Accelerator, opts: StreamOpts) -> Stream {
+        Stream { workload, arch, opts }
+    }
+
+    /// Steps 1–2: split into CNs and build the dependency graph.
+    pub fn build_graph(&self) -> CnGraph {
+        let gran = self.opts.granularity.for_arch(&self.arch);
+        let cns = CnSet::build(&self.workload, gran);
+        generate(&self.workload, cns)
+    }
+
+    /// Step 3: the intra-core cost model for this (workload, arch).
+    pub fn build_costs(&self, graph: &CnGraph) -> CostModel {
+        CostModel::build(&self.workload, &graph.cns, &self.arch)
+    }
+
+    /// Run the full pipeline (Steps 1–5).
+    pub fn run(&self) -> Result<StreamResult, StreamError> {
+        if self.workload.is_empty() {
+            return Err(StreamError::EmptyWorkload);
+        }
+        let graph = self.build_graph();
+        let costs = self.build_costs(&graph);
+        let scheduler = Scheduler::new(&self.workload, &graph, &costs, &self.arch);
+
+        let allocations: Vec<Vec<CoreId>> = match &self.opts.allocation {
+            Some(fixed) => {
+                if fixed.len() != self.workload.len() {
+                    return Err(StreamError::BadAllocation(format!(
+                        "expected {} entries, got {}",
+                        self.workload.len(),
+                        fixed.len()
+                    )));
+                }
+                vec![fixed.clone()]
+            }
+            None => {
+                let mut ga = Ga::new(
+                    &self.workload,
+                    &self.arch,
+                    &scheduler,
+                    self.opts.priority,
+                    self.opts.objective,
+                    self.opts.ga,
+                );
+                let front = ga.run();
+                if front.is_empty() {
+                    // degenerate: no dense layers — single default genome
+                    vec![allocation_from_genome(&self.workload, &self.arch, &[])]
+                } else {
+                    front.into_iter().map(|r| r.allocation).collect()
+                }
+            }
+        };
+
+        let points = allocations
+            .into_iter()
+            .map(|allocation| {
+                let result = scheduler.run(&allocation, self.opts.priority);
+                ScheduledPoint { allocation, result }
+            })
+            .collect();
+
+        Ok(StreamResult { points, n_cns: graph.len(), n_edges: graph.edges.len() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::workload::models::{tiny_branchy, tiny_segment};
+
+    fn small_ga() -> GaParams {
+        GaParams { population: 8, generations: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn full_pipeline_runs() {
+        let s = Stream::new(
+            tiny_segment(),
+            presets::hetero_quad(),
+            StreamOpts { ga: small_ga(), ..Default::default() },
+        );
+        let r = s.run().unwrap();
+        assert!(!r.points.is_empty());
+        assert!(r.n_cns > 5);
+        assert!(r.best_edp().unwrap().result.latency() > 0);
+    }
+
+    #[test]
+    fn fixed_allocation_skips_ga() {
+        let w = tiny_segment();
+        let arch = presets::test_dual();
+        let simd = arch.simd_core().unwrap();
+        let alloc: Vec<CoreId> = w
+            .layers()
+            .iter()
+            .map(|l| if l.op.is_dense() { CoreId(0) } else { simd })
+            .collect();
+        let s = Stream::new(
+            w,
+            arch,
+            StreamOpts { allocation: Some(alloc.clone()), ..Default::default() },
+        );
+        let r = s.run().unwrap();
+        assert_eq!(r.points.len(), 1);
+        assert_eq!(r.points[0].allocation, alloc);
+    }
+
+    #[test]
+    fn bad_allocation_length_rejected() {
+        let s = Stream::new(
+            tiny_segment(),
+            presets::test_dual(),
+            StreamOpts { allocation: Some(vec![CoreId(0)]), ..Default::default() },
+        );
+        assert!(s.run().is_err());
+    }
+
+    #[test]
+    fn fused_beats_lbl_on_edp_multicore() {
+        let run = |opts: StreamOpts| {
+            Stream::new(tiny_branchy(), presets::hetero_quad(), opts)
+                .run()
+                .unwrap()
+                .best_edp()
+                .unwrap()
+                .edp()
+        };
+        let fused = run(StreamOpts { ga: small_ga(), ..Default::default() });
+        let lbl = run(StreamOpts { ga: small_ga(), ..StreamOpts::layer_by_layer() });
+        assert!(fused < lbl, "fused {fused} vs lbl {lbl}");
+    }
+}

@@ -1,0 +1,147 @@
+//! Axis-aligned integer hyper-rectangles (half-open ranges per axis).
+
+/// Maximum dimensionality of CN loop-range rectangles: (channel, y, x).
+/// Unused axes are stored as the degenerate full range `[0, 1)`.
+pub const DIMS: usize = 3;
+
+/// An axis-aligned box of half-open integer ranges `[lo, hi)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rect {
+    pub lo: [i64; DIMS],
+    pub hi: [i64; DIMS],
+}
+
+impl Rect {
+    /// Build from per-axis `[lo, hi)` ranges.
+    pub fn new(lo: [i64; DIMS], hi: [i64; DIMS]) -> Self {
+        debug_assert!(lo.iter().zip(&hi).all(|(a, b)| a <= b), "{lo:?}..{hi:?}");
+        Rect { lo, hi }
+    }
+
+    /// Rectangle over (channels, rows, cols).
+    pub fn chw(c: std::ops::Range<i64>, y: std::ops::Range<i64>, x: std::ops::Range<i64>) -> Self {
+        Rect::new([c.start, y.start, x.start], [c.end, y.end, x.end])
+    }
+
+    /// The empty rectangle.
+    pub fn empty() -> Self {
+        Rect { lo: [0; DIMS], hi: [0; DIMS] }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo.iter().zip(&self.hi).any(|(a, b)| a >= b)
+    }
+
+    /// Do two boxes share any volume? (half-open semantics)
+    #[inline]
+    pub fn intersects(&self, other: &Rect) -> bool {
+        for d in 0..DIMS {
+            if self.lo[d] >= other.hi[d] || other.lo[d] >= self.hi[d] {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Volume of the intersection (0 if disjoint).
+    #[inline]
+    pub fn intersection_volume(&self, other: &Rect) -> u64 {
+        let mut v: u64 = 1;
+        for d in 0..DIMS {
+            let lo = self.lo[d].max(other.lo[d]);
+            let hi = self.hi[d].min(other.hi[d]);
+            if hi <= lo {
+                return 0;
+            }
+            v *= (hi - lo) as u64;
+        }
+        v
+    }
+
+    /// Total volume.
+    pub fn volume(&self) -> u64 {
+        let mut v: u64 = 1;
+        for d in 0..DIMS {
+            if self.hi[d] <= self.lo[d] {
+                return 0;
+            }
+            v *= (self.hi[d] - self.lo[d]) as u64;
+        }
+        v
+    }
+
+    /// Smallest box containing both.
+    pub fn union(&self, other: &Rect) -> Rect {
+        let mut lo = [0i64; DIMS];
+        let mut hi = [0i64; DIMS];
+        for d in 0..DIMS {
+            lo[d] = self.lo[d].min(other.lo[d]);
+            hi[d] = self.hi[d].max(other.hi[d]);
+        }
+        Rect { lo, hi }
+    }
+
+    /// Center coordinate along one axis (x2 to stay integral).
+    #[inline]
+    pub fn center2(&self, d: usize) -> i64 {
+        self.lo[d] + self.hi[d]
+    }
+
+    /// Clip to a bounding box; may produce an empty rect.
+    pub fn clip(&self, bounds: &Rect) -> Rect {
+        let mut lo = [0i64; DIMS];
+        let mut hi = [0i64; DIMS];
+        for d in 0..DIMS {
+            lo[d] = self.lo[d].max(bounds.lo[d]);
+            hi[d] = self.hi[d].min(bounds.hi[d]).max(lo[d]);
+        }
+        Rect { lo, hi }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intersection_basics() {
+        let a = Rect::chw(0..4, 0..4, 0..4);
+        let b = Rect::chw(2..6, 2..6, 2..6);
+        assert!(a.intersects(&b));
+        assert_eq!(a.intersection_volume(&b), 8);
+        // touching edges (half-open) do not intersect
+        let c = Rect::chw(4..8, 0..4, 0..4);
+        assert!(!a.intersects(&c));
+        assert_eq!(a.intersection_volume(&c), 0);
+    }
+
+    #[test]
+    fn volume_and_union() {
+        let a = Rect::chw(0..2, 0..3, 0..5);
+        assert_eq!(a.volume(), 30);
+        let b = Rect::chw(1..4, 1..2, 0..1);
+        let u = a.union(&b);
+        assert_eq!(u, Rect::chw(0..4, 0..3, 0..5));
+    }
+
+    #[test]
+    fn empty_rect() {
+        assert!(Rect::empty().is_empty());
+        assert_eq!(Rect::empty().volume(), 0);
+        let a = Rect::chw(0..1, 5..5, 0..1);
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn clip() {
+        let a = Rect::chw(-2..10, -1..5, 0..3);
+        let b = a.clip(&Rect::chw(0..4, 0..4, 0..4));
+        assert_eq!(b, Rect::chw(0..4, 0..4, 0..3));
+    }
+
+    #[test]
+    fn self_intersection_is_volume() {
+        let a = Rect::chw(3..7, 1..9, 2..4);
+        assert_eq!(a.intersection_volume(&a), a.volume());
+    }
+}

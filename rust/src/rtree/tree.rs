@@ -1,0 +1,255 @@
+//! STR-bulk-loaded R-tree with arena storage.
+
+use super::rect::{Rect, DIMS};
+
+/// Maximum children per internal node / entries per leaf.
+const NODE_CAP: usize = 16;
+
+#[derive(Debug)]
+struct Node {
+    bbox: Rect,
+    /// Child node indices (internal) — empty for leaves.
+    children: Vec<u32>,
+    /// (rect, payload) entries — empty for internal nodes.
+    entries: Vec<(Rect, u32)>,
+}
+
+/// An immutable R-tree over `(Rect, payload: u32)` entries.
+///
+/// Built once per producer–consumer layer pair by STR bulk loading,
+/// then queried once per producer CN — the access pattern of paper
+/// Step 2.
+#[derive(Debug)]
+pub struct RTree {
+    nodes: Vec<Node>,
+    root: Option<u32>,
+    len: usize,
+}
+
+impl RTree {
+    /// Bulk-load with Sort-Tile-Recursive packing.
+    pub fn bulk_load(mut items: Vec<(Rect, u32)>) -> Self {
+        let len = items.len();
+        if items.is_empty() {
+            return RTree { nodes: vec![], root: None, len: 0 };
+        }
+        let mut nodes = Vec::with_capacity(2 * len / NODE_CAP + 2);
+
+        // STR: recursively sort by successive axes' centers and tile.
+        str_sort(&mut items, 0);
+
+        // leaf level
+        let mut level: Vec<u32> = items
+            .chunks(NODE_CAP)
+            .map(|chunk| {
+                let bbox = chunk
+                    .iter()
+                    .map(|(r, _)| *r)
+                    .reduce(|a, b| a.union(&b))
+                    .unwrap();
+                nodes.push(Node { bbox, children: vec![], entries: chunk.to_vec() });
+                (nodes.len() - 1) as u32
+            })
+            .collect();
+
+        // internal levels
+        while level.len() > 1 {
+            // order parent groups by bbox center for locality
+            let mut keyed: Vec<(u32, Rect)> =
+                level.iter().map(|&i| (i, nodes[i as usize].bbox)).collect();
+            keyed.sort_by_key(|(_, r)| (r.center2(1), r.center2(2), r.center2(0)));
+            level = keyed
+                .chunks(NODE_CAP)
+                .map(|chunk| {
+                    let bbox = chunk
+                        .iter()
+                        .map(|(_, r)| *r)
+                        .reduce(|a, b| a.union(&b))
+                        .unwrap();
+                    let children = chunk.iter().map(|(i, _)| *i).collect();
+                    nodes.push(Node { bbox, children, entries: vec![] });
+                    (nodes.len() - 1) as u32
+                })
+                .collect();
+        }
+
+        let root = Some(level[0]);
+        RTree { nodes, root, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Visit every payload whose rect intersects `query`.
+    pub fn query<F: FnMut(&Rect, u32)>(&self, query: &Rect, mut f: F) {
+        if let Some(root) = self.root {
+            self.query_rec(root, query, &mut f);
+        }
+    }
+
+    fn query_rec<F: FnMut(&Rect, u32)>(&self, node: u32, query: &Rect, f: &mut F) {
+        let n = &self.nodes[node as usize];
+        if !n.bbox.intersects(query) {
+            return;
+        }
+        for (r, p) in &n.entries {
+            if r.intersects(query) {
+                f(r, *p);
+            }
+        }
+        for &c in &n.children {
+            self.query_rec(c, query, f);
+        }
+    }
+
+    /// Collect intersecting payloads into a vec (convenience).
+    pub fn query_vec(&self, query: &Rect) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.query(query, |_, p| out.push(p));
+        out
+    }
+
+    /// Tree height (for tests / diagnostics).
+    pub fn height(&self) -> usize {
+        let mut h = 0;
+        let mut cur = self.root;
+        while let Some(i) = cur {
+            h += 1;
+            cur = self.nodes[i as usize].children.first().copied();
+        }
+        h
+    }
+}
+
+/// Recursive STR: sort by axis `d`'s center, split into vertical slabs,
+/// recurse into the next axis within each slab.
+fn str_sort(items: &mut [(Rect, u32)], d: usize) {
+    if d >= DIMS - 1 || items.len() <= NODE_CAP {
+        items.sort_by_key(|(r, _)| r.center2(d.min(DIMS - 1)));
+        return;
+    }
+    items.sort_by_key(|(r, _)| r.center2(d));
+    // number of slabs so that each slab holds ~sqrt of the leaves
+    let n_leaves = items.len().div_ceil(NODE_CAP);
+    let n_slabs = (n_leaves as f64).powf(1.0 / (DIMS - d) as f64).ceil() as usize;
+    let slab = items.len().div_ceil(n_slabs.max(1));
+    for chunk in items.chunks_mut(slab.max(1)) {
+        str_sort(chunk, d + 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Brute-force oracle.
+    fn brute(items: &[(Rect, u32)], q: &Rect) -> Vec<u32> {
+        let mut v: Vec<u32> =
+            items.iter().filter(|(r, _)| r.intersects(q)).map(|(_, p)| *p).collect();
+        v.sort_unstable();
+        v
+    }
+
+    fn grid_items(n: i64, size: i64) -> Vec<(Rect, u32)> {
+        let mut items = Vec::new();
+        let mut id = 0;
+        for y in 0..n {
+            for x in 0..n {
+                items.push((
+                    Rect::chw(0..1, y * size..(y + 1) * size, x * size..(x + 1) * size),
+                    id,
+                ));
+                id += 1;
+            }
+        }
+        items
+    }
+
+    #[test]
+    fn empty_tree() {
+        let t = RTree::bulk_load(vec![]);
+        assert!(t.is_empty());
+        assert_eq!(t.query_vec(&Rect::chw(0..10, 0..10, 0..10)), vec![]);
+    }
+
+    #[test]
+    fn single_item() {
+        let t = RTree::bulk_load(vec![(Rect::chw(0..2, 0..2, 0..2), 7)]);
+        assert_eq!(t.query_vec(&Rect::chw(1..3, 1..3, 1..3)), vec![7]);
+        assert_eq!(t.query_vec(&Rect::chw(2..3, 0..2, 0..2)), vec![]);
+    }
+
+    #[test]
+    fn grid_queries_match_brute_force() {
+        let items = grid_items(16, 4); // 256 tiles
+        let t = RTree::bulk_load(items.clone());
+        assert_eq!(t.len(), 256);
+        for q in [
+            Rect::chw(0..1, 0..4, 0..4),
+            Rect::chw(0..1, 3..9, 3..9),
+            Rect::chw(0..1, 0..64, 30..34),
+            Rect::chw(0..1, 63..64, 63..64),
+            Rect::chw(0..1, 100..200, 100..200), // off-grid
+        ] {
+            let mut got = t.query_vec(&q);
+            got.sort_unstable();
+            assert_eq!(got, brute(&items, &q), "query {q:?}");
+        }
+    }
+
+    #[test]
+    fn random_rects_match_brute_force() {
+        // deterministic xorshift so the test is reproducible
+        let mut s: u64 = 0x9E3779B97F4A7C15;
+        let mut rnd = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            s
+        };
+        let mut items = Vec::new();
+        for i in 0..500u32 {
+            let c0 = (rnd() % 8) as i64;
+            let y0 = (rnd() % 100) as i64;
+            let x0 = (rnd() % 100) as i64;
+            items.push((
+                Rect::chw(
+                    c0..c0 + 1 + (rnd() % 4) as i64,
+                    y0..y0 + 1 + (rnd() % 20) as i64,
+                    x0..x0 + 1 + (rnd() % 20) as i64,
+                ),
+                i,
+            ));
+        }
+        let t = RTree::bulk_load(items.clone());
+        for _ in 0..50 {
+            let y0 = (rnd() % 110) as i64;
+            let x0 = (rnd() % 110) as i64;
+            let q = Rect::chw(0..10, y0..y0 + 15, x0..x0 + 15);
+            let mut got = t.query_vec(&q);
+            got.sort_unstable();
+            assert_eq!(got, brute(&items, &q));
+        }
+    }
+
+    #[test]
+    fn height_is_logarithmic() {
+        let t = RTree::bulk_load(grid_items(32, 2)); // 1024 entries
+        assert!(t.height() <= 4, "height {}", t.height());
+    }
+
+    #[test]
+    fn large_tree_point_queries() {
+        let items = grid_items(64, 1); // 4096 unit tiles
+        let t = RTree::bulk_load(items.clone());
+        // each unit query hits exactly one tile
+        for (r, p) in items.iter().step_by(97) {
+            assert_eq!(t.query_vec(r), vec![*p]);
+        }
+    }
+}

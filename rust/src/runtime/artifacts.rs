@@ -1,0 +1,336 @@
+//! Artifact manifest parsing and the host-side [`Tensor`] type.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// `manifest.json` — written by `python/compile/aot.py`.
+#[derive(Debug)]
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactMeta>,
+    pub segment: SegmentSpec,
+    pub weights: HashMap<String, WeightMeta>,
+    pub dir: PathBuf,
+}
+
+#[derive(Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub output: Vec<usize>,
+}
+
+#[derive(Debug)]
+pub struct WeightMeta {
+    pub file: String,
+    pub shape: Vec<usize>,
+}
+
+/// Segment geometry mirrored from `python/compile/model.py`.
+#[derive(Debug)]
+pub struct SegmentSpec {
+    pub in_shape: Vec<usize>,
+    pub rows_per_cn: usize,
+    pub layers: Vec<SegmentLayerSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SegmentLayerSpec {
+    pub name: String,
+    pub kind: String, // conv | pool | add
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub fy: usize,
+    pub fx: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub relu: bool,
+    pub residual_of: i64,
+    pub artifact: String,
+    pub layer_artifact: String,
+    pub n_cns: usize,
+    pub tile_in_shape: Vec<usize>,
+    pub tile_out_shape: Vec<usize>,
+    pub tile_in_rows: usize,
+}
+
+impl SegmentLayerSpec {
+    /// First input row a CN needs (may be negative -> padded).
+    pub fn cn_input_row_start(&self, cn_idx: usize, rows_per_cn: usize) -> i64 {
+        if self.kind == "add" {
+            (cn_idx * rows_per_cn) as i64
+        } else {
+            (cn_idx * rows_per_cn * self.stride) as i64 - self.pad as i64
+        }
+    }
+}
+
+fn jstr(j: &Json, key: &str) -> Result<String> {
+    Ok(j.get(key)
+        .and_then(|v| v.as_str())
+        .with_context(|| format!("manifest: missing string {key}"))?
+        .to_string())
+}
+
+fn jusize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key).and_then(|v| v.as_usize()).with_context(|| format!("manifest: missing number {key}"))
+}
+
+fn jshape(j: &Json, key: &str) -> Result<Vec<usize>> {
+    j.get(key)
+        .and_then(|v| v.as_usize_vec())
+        .with_context(|| format!("manifest: missing shape {key}"))
+}
+
+impl Manifest {
+    /// Load `manifest.json` from the artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+        let mut artifacts = HashMap::new();
+        for (name, meta) in j.get("artifacts").and_then(|v| v.as_obj()).context("artifacts")? {
+            let inputs = meta
+                .get("inputs")
+                .and_then(|v| v.as_arr())
+                .context("inputs")?
+                .iter()
+                .map(|s| s.as_usize_vec().context("input shape"))
+                .collect::<Result<_>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta { file: jstr(meta, "file")?, inputs, output: jshape(meta, "output")? },
+            );
+        }
+
+        let mut weights = HashMap::new();
+        for (name, meta) in j.get("weights").and_then(|v| v.as_obj()).context("weights")? {
+            weights.insert(
+                name.clone(),
+                WeightMeta { file: jstr(meta, "file")?, shape: jshape(meta, "shape")? },
+            );
+        }
+
+        let seg = j.get("segment").context("segment")?;
+        let layers = seg
+            .get("layers")
+            .and_then(|v| v.as_arr())
+            .context("segment.layers")?
+            .iter()
+            .map(|l| {
+                Ok(SegmentLayerSpec {
+                    name: jstr(l, "name")?,
+                    kind: jstr(l, "kind")?,
+                    in_shape: jshape(l, "in_shape")?,
+                    out_shape: jshape(l, "out_shape")?,
+                    fy: l.get("fy").and_then(|v| v.as_usize()).unwrap_or(0),
+                    fx: l.get("fx").and_then(|v| v.as_usize()).unwrap_or(0),
+                    stride: jusize(l, "stride")?,
+                    pad: l.get("pad").and_then(|v| v.as_usize()).unwrap_or(0),
+                    relu: l.get("relu").and_then(|v| v.as_bool()).unwrap_or(false),
+                    residual_of: l.get("residual_of").and_then(|v| v.as_i64()).unwrap_or(-1),
+                    artifact: jstr(l, "artifact")?,
+                    layer_artifact: jstr(l, "layer_artifact")?,
+                    n_cns: jusize(l, "n_cns")?,
+                    tile_in_shape: jshape(l, "tile_in_shape")?,
+                    tile_out_shape: jshape(l, "tile_out_shape")?,
+                    tile_in_rows: jusize(l, "tile_in_rows")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let segment = SegmentSpec {
+            in_shape: jshape(seg, "in_shape")?,
+            rows_per_cn: jusize(seg, "rows_per_cn")?,
+            layers,
+        };
+
+        Ok(Manifest { artifacts, segment, weights, dir })
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        let meta =
+            self.artifacts.get(name).with_context(|| format!("unknown artifact {name}"))?;
+        Ok(self.dir.join(&meta.file))
+    }
+
+    /// Load a raw-f32 weight dump as a [`Tensor`].
+    pub fn load_weight(&self, name: &str) -> Result<Tensor> {
+        let meta =
+            self.weights.get(name).with_context(|| format!("unknown weight {name}"))?;
+        let bytes = std::fs::read(self.dir.join(&meta.file))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{name}: byte count {} not a multiple of 4", bytes.len());
+        }
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let t = Tensor::new(meta.shape.clone(), data)?;
+        Ok(t)
+    }
+}
+
+/// A host-side dense f32 tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} needs {n} elems, got {}", data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// CHW accessor (3-D tensors).
+    pub fn at3(&self, c: usize, y: usize, x: usize) -> f32 {
+        let (_, h, w) = (self.shape[0], self.shape[1], self.shape[2]);
+        self.data[(c * h + y) * w + x]
+    }
+
+    /// Slice `rows` input rows starting at (possibly negative) `row0`
+    /// out of a CHW tensor, padding out-of-range rows and `pad_w`
+    /// columns on each side with `pad_value` — the Rust mirror of the
+    /// tile slicer validated in `python/tests/test_model.py`.
+    pub fn slice_rows_padded(
+        &self,
+        row0: i64,
+        rows: usize,
+        pad_w: usize,
+        pad_value: f32,
+    ) -> Tensor {
+        let (c, h, w) = (self.shape[0], self.shape[1], self.shape[2]);
+        let ow = w + 2 * pad_w;
+        let mut out = vec![pad_value; c * rows * ow];
+        for ci in 0..c {
+            for r in 0..rows {
+                let src = row0 + r as i64;
+                if src < 0 || src >= h as i64 {
+                    continue;
+                }
+                let src_off = (ci * h + src as usize) * w;
+                let dst_off = (ci * rows + r) * ow + pad_w;
+                out[dst_off..dst_off + w]
+                    .copy_from_slice(&self.data[src_off..src_off + w]);
+            }
+        }
+        Tensor { shape: vec![c, rows, ow], data: out }
+    }
+
+    /// Write `tile` (C, rows, W) into rows `[row0, row0+rows)` of self.
+    pub fn write_rows(&mut self, row0: usize, tile: &Tensor) {
+        let (c, h, w) = (self.shape[0], self.shape[1], self.shape[2]);
+        let rows = tile.shape[1];
+        assert_eq!(tile.shape[0], c);
+        assert_eq!(tile.shape[2], w);
+        assert!(row0 + rows <= h);
+        for ci in 0..c {
+            for r in 0..rows {
+                let dst = (ci * h + row0 + r) * w;
+                let src = (ci * rows + r) * w;
+                self.data[dst..dst + w].copy_from_slice(&tile.data[src..src + w]);
+            }
+        }
+    }
+
+    /// Slice rows `[row0, row0+rows)` without padding (for add tiles).
+    pub fn slice_rows(&self, row0: usize, rows: usize) -> Tensor {
+        self.slice_rows_padded(row0 as i64, rows, 0, 0.0)
+    }
+
+    /// Max absolute difference against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq_tensor(c: usize, h: usize, w: usize) -> Tensor {
+        let data = (0..c * h * w).map(|i| i as f32).collect();
+        Tensor::new(vec![c, h, w], data).unwrap()
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::new(vec![2, 2], vec![1.0; 5]).is_err());
+    }
+
+    #[test]
+    fn slice_interior() {
+        let t = seq_tensor(1, 6, 4);
+        let s = t.slice_rows_padded(2, 2, 0, 0.0);
+        assert_eq!(s.shape, vec![1, 2, 4]);
+        assert_eq!(s.data, vec![8.0, 9.0, 10.0, 11.0, 12.0, 13.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    fn slice_with_negative_start_pads() {
+        let t = seq_tensor(1, 4, 2);
+        let s = t.slice_rows_padded(-1, 3, 1, -5.0);
+        assert_eq!(s.shape, vec![1, 3, 4]);
+        // first row fully padded
+        assert_eq!(&s.data[0..4], &[-5.0, -5.0, -5.0, -5.0]);
+        // second row = source row 0 with width pad
+        assert_eq!(&s.data[4..8], &[-5.0, 0.0, 1.0, -5.0]);
+    }
+
+    #[test]
+    fn slice_past_end_pads() {
+        let t = seq_tensor(1, 3, 2);
+        let s = t.slice_rows_padded(2, 3, 0, 9.0);
+        assert_eq!(&s.data[2..6], &[9.0, 9.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn write_then_read_rows_roundtrip() {
+        let mut t = Tensor::zeros(vec![2, 6, 3]);
+        let tile = seq_tensor(2, 2, 3);
+        t.write_rows(2, &tile);
+        let back = t.slice_rows(2, 2);
+        assert_eq!(back, tile);
+    }
+
+    #[test]
+    fn at3_indexing() {
+        let t = seq_tensor(2, 3, 4);
+        assert_eq!(t.at3(1, 2, 3), (1 * 3 * 4 + 2 * 4 + 3) as f32);
+    }
+
+    #[test]
+    fn max_abs_diff_zero_for_self() {
+        let t = seq_tensor(1, 2, 2);
+        assert_eq!(t.max_abs_diff(&t), 0.0);
+    }
+}

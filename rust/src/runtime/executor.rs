@@ -1,0 +1,211 @@
+//! Segment executor: run the ResNet-18 first segment layer-by-layer or
+//! layer-fused (CN by CN, in an arbitrary dependency-respecting order)
+//! on the PJRT runtime, and verify against the Python oracle.
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::Tensor;
+use super::pjrt::Runtime;
+
+/// Executes the AOT-compiled segment.
+///
+/// Holds the weights loaded from the artifact dumps; layer inputs /
+/// outputs are threaded through [`Tensor`]s on the host, mirroring the
+/// shared-memory data movement the L3 scheduler models.
+pub struct SegmentExecutor {
+    weights: Vec<Option<(Tensor, Tensor)>>, // per layer: (w, b)
+    pub input: Tensor,
+    pub oracle: Tensor,
+}
+
+impl SegmentExecutor {
+    pub fn new(rt: &Runtime) -> Result<SegmentExecutor> {
+        let m = &rt.manifest;
+        let n_layers = m.segment.layers.len();
+        let mut weights = vec![None; n_layers];
+        // conv layers: 0 -> (w0,b0), 2 -> (w2,b2), 3 -> (w3,b3)
+        weights[0] = Some((m.load_weight("w0")?, m.load_weight("b0")?));
+        weights[2] = Some((m.load_weight("w2")?, m.load_weight("b2")?));
+        weights[3] = Some((m.load_weight("w3")?, m.load_weight("b3")?));
+        let input = m.load_weight("input")?;
+        let oracle = m.load_weight("oracle_output")?;
+        Ok(SegmentExecutor { weights, input, oracle })
+    }
+
+    /// Activation buffer chain for the segment: `acts[l]` is the output
+    /// of layer `l-1` (`acts[0]` = network input).
+    fn layer_input_index(&self, layer_idx: usize) -> usize {
+        layer_idx
+    }
+
+    /// Layer-by-layer baseline: one artifact call per layer.
+    pub fn run_layer_by_layer(&self, rt: &mut Runtime) -> Result<Tensor> {
+        let specs: Vec<super::artifacts::SegmentLayerSpec> =
+            rt.manifest.segment.layers.clone();
+        let mut acts: Vec<Tensor> = Vec::with_capacity(specs.len() + 1);
+        acts.push(self.input.clone());
+        for (li, spec) in specs.iter().enumerate() {
+            let name = spec.layer_artifact.clone();
+            let out = match spec.kind.as_str() {
+                "conv" => {
+                    let (w, b) = self.weights[li].as_ref().context("conv weights")?;
+                    let x = &acts[self.layer_input_index(li)];
+                    rt.execute(&name, &[x, w, b])?
+                }
+                "pool" => {
+                    let x = &acts[self.layer_input_index(li)];
+                    rt.execute(&name, &[x])?
+                }
+                "add" => {
+                    let a = &acts[li]; // previous layer output
+                    let res = &acts[(spec.residual_of + 1) as usize];
+                    rt.execute(&name, &[a, res])?
+                }
+                k => bail!("unknown layer kind {k}"),
+            };
+            acts.push(out);
+        }
+        Ok(acts.pop().unwrap())
+    }
+
+    /// Layer-fused execution: run CNs in `order` (pairs of layer index,
+    /// CN index), slicing input tiles with the manifest geometry.  The
+    /// order must respect data dependencies (produced rows available
+    /// before a consumer tile needs them); this is checked and a
+    /// violation is an error — which is precisely what makes executing a
+    /// Stream schedule a real validation of the scheduler.
+    pub fn run_fused(&self, rt: &mut Runtime, order: &[(usize, usize)]) -> Result<Tensor> {
+        let rows_per_cn = rt.manifest.segment.rows_per_cn;
+        let n_layers = rt.manifest.segment.layers.len();
+
+        // output buffer + per-layer count of contiguously completed rows
+        let out_shapes: Vec<Vec<usize>> = rt
+            .manifest
+            .segment
+            .layers
+            .iter()
+            .map(|l| l.out_shape.clone())
+            .collect();
+        let mut outs: Vec<Tensor> = out_shapes.into_iter().map(Tensor::zeros).collect();
+        let mut done_rows = vec![0usize; n_layers];
+
+        let expected: usize =
+            rt.manifest.segment.layers.iter().map(|l| l.n_cns).sum();
+        if order.len() != expected {
+            bail!("order has {} CNs, segment needs {expected}", order.len());
+        }
+
+        for &(li, ci) in order {
+            let spec = rt.manifest.segment.layers[li].clone();
+            let spec = &spec;
+            let row0_out = ci * rows_per_cn;
+            // intra-layer ordering: CNs of a layer run in index order
+            if row0_out != done_rows[li] {
+                bail!("layer {li} CN {ci} out of order (done rows {})", done_rows[li]);
+            }
+
+            // check + gather the input tile
+            let in_start = spec.cn_input_row_start(ci, rows_per_cn);
+            let in_rows = spec.tile_in_rows;
+            let needed_hi = (in_start + in_rows as i64).min(spec.in_shape[1] as i64);
+
+            let (out_tile, name) = match spec.kind.as_str() {
+                "conv" => {
+                    let src: &Tensor =
+                        if li == 0 { &self.input } else { &outs[li - 1] };
+                    if li > 0 && (done_rows[li - 1] as i64) < needed_hi {
+                        bail!("layer {li} CN {ci}: producer rows not ready");
+                    }
+                    let tile = src.slice_rows_padded(in_start, in_rows, spec.pad, 0.0);
+                    let (w, b) = self.weights[li].as_ref().context("weights")?;
+                    (rt.execute(&spec.artifact, &[&tile, w, b])?, &spec.artifact)
+                }
+                "pool" => {
+                    let src = &outs[li - 1];
+                    if (done_rows[li - 1] as i64) < needed_hi {
+                        bail!("layer {li} CN {ci}: producer rows not ready");
+                    }
+                    // post-ReLU activations are >= 0, so 0-padding is an
+                    // exact stand-in for -inf pool padding
+                    let tile = src.slice_rows_padded(in_start, in_rows, spec.pad, 0.0);
+                    (rt.execute(&spec.artifact, &[&tile])?, &spec.artifact)
+                }
+                "add" => {
+                    let a_src = &outs[li - 1];
+                    let r_li = spec.residual_of as usize;
+                    let r_src = &outs[r_li];
+                    let need = row0_out + rows_per_cn;
+                    if done_rows[li - 1] < need || done_rows[r_li] < need {
+                        bail!("layer {li} CN {ci}: addend rows not ready");
+                    }
+                    let a = a_src.slice_rows(row0_out, rows_per_cn);
+                    let r = r_src.slice_rows(row0_out, rows_per_cn);
+                    (rt.execute(&spec.artifact, &[&a, &r])?, &spec.artifact)
+                }
+                k => bail!("unknown layer kind {k}"),
+            };
+            let _ = name;
+            outs[li].write_rows(row0_out, &out_tile);
+            done_rows[li] += rows_per_cn;
+        }
+
+        for (li, spec) in rt.manifest.segment.layers.iter().enumerate() {
+            if done_rows[li] != spec.out_shape[1] {
+                bail!("layer {li} incomplete: {} of {} rows", done_rows[li], spec.out_shape[1]);
+            }
+        }
+        Ok(outs.pop().unwrap())
+    }
+
+    /// Depth-first reference order: for each output row-block, run every
+    /// layer's CN as soon as its inputs exist (a valid fused order used
+    /// by tests; Stream schedules provide the interesting orders).
+    pub fn depth_first_order(&self, rt: &Runtime) -> Vec<(usize, usize)> {
+        let specs = &rt.manifest.segment.layers;
+        let rows = rt.manifest.segment.rows_per_cn;
+        let mut done = vec![0usize; specs.len()];
+        let mut order = Vec::new();
+        let total: usize = specs.iter().map(|s| s.n_cns).sum();
+        while order.len() < total {
+            let mut progressed = false;
+            for li in 0..specs.len() {
+                let spec = &specs[li];
+                while done[li] < spec.n_cns {
+                    let ci = done[li];
+                    let in_start = spec.cn_input_row_start(ci, rows);
+                    let hi = (in_start + spec.tile_in_rows as i64)
+                        .min(spec.in_shape[1] as i64);
+                    let ready = match spec.kind.as_str() {
+                        "conv" if li == 0 => true,
+                        "add" => {
+                            let need = (ci + 1) * rows;
+                            done[li - 1] * rows >= need
+                                && done[spec.residual_of as usize] * rows >= need
+                        }
+                        _ => (done[li - 1] * rows) as i64 >= hi,
+                    };
+                    if !ready {
+                        break;
+                    }
+                    order.push((li, ci));
+                    done[li] += 1;
+                    progressed = true;
+                }
+            }
+            assert!(progressed, "depth-first order stuck");
+        }
+        order
+    }
+
+    /// Verify a result against the Python oracle dump.
+    pub fn verify(&self, out: &Tensor, tol: f32) -> Result<f32> {
+        if out.shape != self.oracle.shape {
+            bail!("shape {:?} != oracle {:?}", out.shape, self.oracle.shape);
+        }
+        let diff = out.max_abs_diff(&self.oracle);
+        if diff > tol {
+            bail!("max |diff| {diff} exceeds tolerance {tol}");
+        }
+        Ok(diff)
+    }
+}

@@ -1,0 +1,24 @@
+//! Runtime: load AOT-compiled XLA artifacts and execute schedules
+//! numerically on the PJRT CPU client.
+//!
+//! The Python side (`python/compile/aot.py`) lowers every CN tile
+//! function and every full-layer function of the ResNet-18 first
+//! segment to HLO text, once, at build time (`make artifacts`).  This
+//! module is the *only* consumer: [`pjrt::Runtime`] compiles the text
+//! through `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile` and caches the executables; [`executor`] then
+//! runs either the layer-by-layer baseline or a layer-fused schedule CN
+//! by CN — slicing input tiles with exactly the halo/padding geometry
+//! the manifest describes — and verifies both against the Python
+//! oracle dump.  Python is never on this path.
+
+pub mod artifacts;
+pub mod executor;
+pub mod pjrt;
+
+pub use artifacts::{Manifest, SegmentLayerSpec, Tensor};
+pub use executor::SegmentExecutor;
+pub use pjrt::Runtime;
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

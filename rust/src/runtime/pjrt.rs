@@ -1,0 +1,86 @@
+//! PJRT CPU client wrapper: compile HLO-text artifacts, cache
+//! executables, run them with host [`Tensor`]s.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::{Manifest, Tensor};
+
+/// The runtime: one PJRT client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.artifact_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Execute artifact `name` with the given inputs; returns the single
+    /// output tensor (artifacts are lowered with `return_tuple=True` and
+    /// exactly one result).
+    pub fn execute(&mut self, name: &str, inputs: &[&Tensor]) -> Result<Tensor> {
+        self.load(name)?;
+        let meta = &self.manifest.artifacts[name];
+        if meta.inputs.len() != inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", meta.inputs.len(), inputs.len());
+        }
+        for (i, (t, expect)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if &t.shape != expect {
+                bail!("{name}: input {i} shape {:?} != manifest {:?}", t.shape, expect);
+            }
+        }
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .context("reshaping input literal")
+            })
+            .collect::<Result<_>>()?;
+
+        let exe = &self.cache[name];
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
+        let values = out.to_vec::<f32>().context("reading f32 result")?;
+
+        let shape = meta.output.clone();
+        let t = Tensor::new(shape, values)?;
+        Ok(t)
+    }
+}

@@ -1,0 +1,135 @@
+//! Step 5.2 — activation memory usage tracing.
+//!
+//! Events are (time, core, delta-bytes); the trace accumulates the total
+//! on-chip activation footprint across cores, whose maximum is the peak
+//! memory usage (paper Fig. 7 bottom).
+//!
+//! Accounting rules (Section III-F):
+//! - a CN's output space is **allocated on its core when the CN starts**;
+//! - inputs that no later CN needs are **freed when the CN finishes**
+//!   (the discardable-input attribute);
+//! - for an inter-core transfer, space is allocated in the consuming
+//!   core when the communication starts, and the producer's copy is
+//!   freed when the communication concludes;
+//! - when a producer feeds several consumer *layers*, the frees against
+//!   the producer-side allocation are scaled by 1/fanout so the single
+//!   physical buffer is released exactly once.
+
+use crate::arch::CoreId;
+
+/// One memory-delta event.
+#[derive(Debug, Clone, Copy)]
+pub struct MemEvent {
+    pub time: u64,
+    pub core: CoreId,
+    pub delta: f64,
+}
+
+/// Collected trace with peak computation.
+#[derive(Debug, Default)]
+pub struct MemTrace {
+    pub events: Vec<MemEvent>,
+}
+
+impl MemTrace {
+    pub fn new() -> MemTrace {
+        MemTrace { events: Vec::new() }
+    }
+
+    pub fn push(&mut self, time: u64, core: CoreId, delta: f64) {
+        if delta != 0.0 {
+            self.events.push(MemEvent { time, core, delta });
+        }
+    }
+
+    /// Time-sorted running total across all cores.
+    pub fn total_curve(&self) -> Vec<(u64, f64)> {
+        let mut ev: Vec<&MemEvent> = self.events.iter().collect();
+        // frees before allocs at the same timestamp: a buffer handed
+        // over at time t must not be counted twice
+        ev.sort_by(|a, b| {
+            a.time.cmp(&b.time).then(
+                a.delta.partial_cmp(&b.delta).unwrap_or(std::cmp::Ordering::Equal),
+            )
+        });
+        let mut curve = Vec::with_capacity(ev.len() + 1);
+        let mut total = 0.0;
+        curve.push((0, 0.0));
+        for e in ev {
+            total += e.delta;
+            curve.push((e.time, total));
+        }
+        curve
+    }
+
+    /// Peak of the total curve in bytes.
+    pub fn peak(&self) -> f64 {
+        self.total_curve().iter().map(|(_, v)| *v).fold(0.0, f64::max)
+    }
+
+    /// Residual footprint at the end of the schedule (should be ~0 for
+    /// a complete run whose outputs are stored off-chip).
+    pub fn residual(&self) -> f64 {
+        self.events.iter().map(|e| e.delta).sum()
+    }
+
+    /// Per-core peak (diagnostics / per-core capacity checks).
+    pub fn core_peak(&self, core: CoreId) -> f64 {
+        let mut ev: Vec<&MemEvent> = self.events.iter().filter(|e| e.core == core).collect();
+        ev.sort_by(|a, b| {
+            a.time.cmp(&b.time).then(
+                a.delta.partial_cmp(&b.delta).unwrap_or(std::cmp::Ordering::Equal),
+            )
+        });
+        let mut peak = 0.0f64;
+        let mut total = 0.0;
+        for e in ev {
+            total += e.delta;
+            peak = peak.max(total);
+        }
+        peak
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_and_residual() {
+        let mut t = MemTrace::new();
+        t.push(0, CoreId(0), 100.0);
+        t.push(5, CoreId(1), 50.0);
+        t.push(10, CoreId(0), -100.0);
+        t.push(12, CoreId(1), -50.0);
+        assert_eq!(t.peak(), 150.0);
+        assert_eq!(t.residual(), 0.0);
+    }
+
+    #[test]
+    fn same_time_free_before_alloc() {
+        let mut t = MemTrace::new();
+        t.push(0, CoreId(0), 100.0);
+        // hand-over at t=10: free then alloc -> peak must stay 100
+        t.push(10, CoreId(0), -100.0);
+        t.push(10, CoreId(1), 100.0);
+        assert_eq!(t.peak(), 100.0);
+    }
+
+    #[test]
+    fn per_core_peak() {
+        let mut t = MemTrace::new();
+        t.push(0, CoreId(0), 10.0);
+        t.push(1, CoreId(1), 90.0);
+        t.push(2, CoreId(0), -10.0);
+        assert_eq!(t.core_peak(CoreId(0)), 10.0);
+        assert_eq!(t.core_peak(CoreId(1)), 90.0);
+    }
+
+    #[test]
+    fn zero_deltas_ignored() {
+        let mut t = MemTrace::new();
+        t.push(0, CoreId(0), 0.0);
+        assert!(t.events.is_empty());
+    }
+}

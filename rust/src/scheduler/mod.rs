@@ -1,0 +1,102 @@
+//! Step 5 — multi-core CN scheduling + activation memory tracing.
+//!
+//! An event-driven list scheduler places every CN on its allocated core,
+//! modeling (paper Section III-E):
+//!
+//! 1. **Inter-core communication**: a communication node is inserted for
+//!    every producer→consumer data edge crossing cores; the shared bus
+//!    serves them first-come-first-serve with limited bandwidth
+//!    ([`resources::Bus`]).
+//! 2. **Off-chip fetching**: layer weights not resident in a core's
+//!    weight SRAM are fetched through the shared limited-bandwidth DRAM
+//!    port, evicting older weights FIFO ([`resources::WeightTracker`]);
+//!    the first layer's input activations and the last layer's outputs
+//!    also move through the port.
+//!
+//! The scheduler keeps a candidate pool of CNs whose predecessors are
+//! all scheduled and picks the next one by the configured priority
+//! (Fig. 8): **latency** — the candidate whose predecessors finished
+//! earliest; **memory** — the candidate from the deepest layer.
+//!
+//! Step 5.2: once start/end times are known, activation memory usage is
+//! traced from the CNs' discardable-input / generated-output attributes
+//! ([`memtrace`]).
+
+mod engine;
+pub mod memtrace;
+pub mod resources;
+
+pub use engine::{schedule, ScheduledCn, Scheduler};
+pub use memtrace::{MemEvent, MemTrace};
+
+use crate::arch::CoreId;
+use crate::cost::ScheduleMetrics;
+
+/// Scheduling priority of the candidate pool (paper Fig. 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedulePriority {
+    /// Pick the candidate whose predecessors finished earliest —
+    /// maximizes core utilization, best latency.
+    #[default]
+    Latency,
+    /// Pick the candidate from the deepest layer — consume data as soon
+    /// as possible for minimal activation footprint.
+    Memory,
+}
+
+/// One scheduled communication node (bus transfer).
+#[derive(Debug, Clone, Copy)]
+pub struct CommEvent {
+    pub from_core: CoreId,
+    pub to_core: CoreId,
+    pub start: u64,
+    pub end: u64,
+    pub bytes: u64,
+}
+
+/// One scheduled DRAM-port transfer (weight fetch / act fetch / output
+/// store).
+#[derive(Debug, Clone, Copy)]
+pub struct DramEvent {
+    pub core: CoreId,
+    pub start: u64,
+    pub end: u64,
+    pub bytes: u64,
+    pub kind: DramKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DramKind {
+    WeightFetch,
+    ActFetch,
+    ActStore,
+}
+
+/// Complete schedule: per-CN placement/timing, resource events, metrics
+/// and the activation memory trace.
+#[derive(Debug)]
+pub struct ScheduleResult {
+    pub cns: Vec<ScheduledCn>,
+    pub comms: Vec<CommEvent>,
+    pub drams: Vec<DramEvent>,
+    pub metrics: ScheduleMetrics,
+    pub memtrace: MemTrace,
+}
+
+impl ScheduleResult {
+    pub fn latency(&self) -> u64 {
+        self.metrics.latency_cc
+    }
+
+    pub fn energy(&self) -> f64 {
+        self.metrics.energy_pj
+    }
+
+    pub fn edp(&self) -> f64 {
+        self.metrics.edp()
+    }
+
+    pub fn peak_mem(&self) -> f64 {
+        self.metrics.peak_mem_bytes
+    }
+}

@@ -1,0 +1,67 @@
+//! Minimal benchmarking harness (offline substitute for criterion):
+//! warmup + N timed iterations, reporting min/median/mean.
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub min_ms: f64,
+    pub median_ms: f64,
+    pub mean_ms: f64,
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} {:>10.3} ms (median, n={}; min {:.3}, mean {:.3})",
+            self.name, self.median_ms, self.iters, self.min_ms, self.mean_ms
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t = std::time::Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min = samples[0];
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: samples.len(),
+        min_ms: min,
+        median_ms: median,
+        mean_ms: mean,
+    }
+}
+
+/// Benchmark scale from the environment: `STREAM_BENCH_SCALE=paper` runs
+/// the full paper-size configuration, anything else a reduced one.
+pub fn paper_scale() -> bool {
+    std::env::var("STREAM_BENCH_SCALE").map(|v| v == "paper").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_positive_times() {
+        let s = bench("spin", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.min_ms >= 0.0);
+        assert!(s.median_ms >= s.min_ms);
+        assert_eq!(s.iters, 5);
+    }
+}

@@ -1,0 +1,82 @@
+//! Small shared utilities: deterministic RNG, JSON, parallel map,
+//! scope timing — in-tree substitutes for crates unavailable in the
+//! offline build environment (DESIGN.md §Substitutions).
+
+pub mod bench;
+pub mod json;
+pub mod par;
+
+pub use bench::{bench, BenchStats};
+pub use json::Json;
+pub use par::{parallel_map, parallel_map_with};
+
+/// Deterministic xorshift64* RNG for tests/benches that must not depend
+/// on the `rand` crate's version-specific streams.
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> XorShift64 {
+        XorShift64 { state: seed.max(1) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+
+    /// Uniform float in [0, 1).
+    pub fn unit(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+/// Simple wall-clock scope timer for the perf pass and bench harnesses.
+pub struct ScopeTimer {
+    start: std::time::Instant,
+}
+
+impl ScopeTimer {
+    pub fn start() -> ScopeTimer {
+        ScopeTimer { start: std::time::Instant::now() }
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = XorShift64::new(9);
+        let mut b = XorShift64::new(9);
+        for _ in 0..10 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_below_in_range() {
+        let mut r = XorShift64::new(3);
+        for _ in 0..100 {
+            assert!(r.below(7) < 7);
+            let u = r.unit();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Scoped-thread parallel map (offline substitute for rayon) used by
+//! the GA fitness evaluation and the exploration sweep.
+
+/// Map `f` over `items` on up to `threads` worker threads, preserving
+/// order.  Falls back to sequential for tiny inputs.
+pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    parallel_map_with(items, f, threads)
+}
+
+/// Same with an explicit worker count.
+pub fn parallel_map_with<T, R, F>(items: Vec<T>, f: F, threads: usize) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n <= 1 || threads <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let threads = threads.min(n);
+
+    // work-stealing by atomic index over a shared Vec<Option<T>>
+    let slots: Vec<std::sync::Mutex<Option<T>>> =
+        items.into_iter().map(|t| std::sync::Mutex::new(Some(t))).collect();
+    let results: Vec<std::sync::Mutex<Option<R>>> =
+        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = slots[i].lock().unwrap().take().expect("each slot taken once");
+                let r = f(item);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("all computed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let v: Vec<usize> = (0..100).collect();
+        let r = parallel_map(v, |x| x * 2);
+        assert_eq!(r, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(parallel_map(Vec::<u32>::new(), |x| x), Vec::<u32>::new());
+        assert_eq!(parallel_map(vec![7], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn explicit_thread_count() {
+        let v: Vec<usize> = (0..37).collect();
+        let r = parallel_map_with(v, |x| x + 1, 3);
+        assert_eq!(r.len(), 37);
+        assert_eq!(r[36], 37);
+    }
+}

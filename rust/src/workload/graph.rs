@@ -1,0 +1,286 @@
+//! [`WorkloadGraph`]: the DNN as a DAG of layers.
+
+use std::collections::HashMap;
+
+use super::layer::{Layer, LayerId, OpType};
+
+/// Errors raised by graph construction / validation.
+#[derive(Debug)]
+pub enum GraphError {
+    /// A predecessor id does not exist (or points forward).
+    DanglingEdge { layer: LayerId, pred: LayerId },
+    /// The graph contains a cycle.
+    Cycle,
+    /// Channel bookkeeping between producer and consumer is inconsistent.
+    ChannelMismatch { layer: LayerId, expect: usize, got: usize },
+}
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GraphError::DanglingEdge { layer, pred } => {
+                write!(f, "{layer} references unknown predecessor {pred}")
+            }
+            GraphError::Cycle => write!(f, "workload graph contains a cycle"),
+            GraphError::ChannelMismatch { layer, expect, got } => {
+                write!(f, "{layer}: expected {expect} input channels, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+/// The DNN workload: layers in topological id order plus adjacency.
+#[derive(Debug, Clone)]
+pub struct WorkloadGraph {
+    pub name: String,
+    layers: Vec<Layer>,
+    /// successors\[i\] = ids of layers consuming layer i's output.
+    successors: Vec<Vec<LayerId>>,
+}
+
+impl WorkloadGraph {
+    /// Build from a list of layers whose `predecessors` reference earlier
+    /// list positions. Ids are assigned by position (guaranteeing
+    /// topological order by construction).
+    pub fn new(name: &str, mut layers: Vec<Layer>) -> Result<Self, GraphError> {
+        for (i, l) in layers.iter_mut().enumerate() {
+            l.id = LayerId(i);
+        }
+        let n = layers.len();
+        let mut successors = vec![Vec::new(); n];
+        for l in &layers {
+            for &p in &l.predecessors {
+                if p.0 >= l.id.0 {
+                    return Err(GraphError::DanglingEdge { layer: l.id, pred: p });
+                }
+                successors[p.0].push(l.id);
+            }
+        }
+        Ok(WorkloadGraph {
+            name: name.to_string(),
+            layers,
+            successors,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    pub fn layer(&self, id: LayerId) -> &Layer {
+        &self.layers[id.0]
+    }
+
+    pub fn layers(&self) -> &[Layer] {
+        &self.layers
+    }
+
+    pub fn successors(&self, id: LayerId) -> &[LayerId] {
+        &self.successors[id.0]
+    }
+
+    pub fn predecessors(&self, id: LayerId) -> &[LayerId] {
+        &self.layers[id.0].predecessors
+    }
+
+    /// Layers with no predecessors (network inputs).
+    pub fn sources(&self) -> Vec<LayerId> {
+        self.layers
+            .iter()
+            .filter(|l| l.predecessors.is_empty())
+            .map(|l| l.id)
+            .collect()
+    }
+
+    /// Layers with no successors (network outputs).
+    pub fn sinks(&self) -> Vec<LayerId> {
+        self.layers
+            .iter()
+            .filter(|l| self.successors[l.id.0].is_empty())
+            .map(|l| l.id)
+            .collect()
+    }
+
+    /// Ids in topological order (== id order by construction).
+    pub fn topo_order(&self) -> Vec<LayerId> {
+        (0..self.layers.len()).map(LayerId).collect()
+    }
+
+    /// Total MAC count of the network's dense layers.
+    pub fn total_macs(&self) -> u64 {
+        self.layers
+            .iter()
+            .filter(|l| l.op.is_dense())
+            .map(|l| l.macs())
+            .sum()
+    }
+
+    /// Total weight footprint of the network in bytes.
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_bytes()).sum()
+    }
+
+    /// Dense layers (the ones the GA allocates to dataflow cores).
+    pub fn dense_layers(&self) -> Vec<LayerId> {
+        self.layers
+            .iter()
+            .filter(|l| l.op.is_dense())
+            .map(|l| l.id)
+            .collect()
+    }
+
+    /// Validate channel consistency: for every non-concat consumer the
+    /// summed producer K must equal the consumer C; for Concat, K must
+    /// equal the summed producer Ks.
+    pub fn validate_channels(&self) -> Result<(), GraphError> {
+        for l in &self.layers {
+            if l.predecessors.is_empty() {
+                continue;
+            }
+            let pred_k: usize = l.predecessors.iter().map(|p| self.layer(*p).k).sum();
+            match l.op {
+                OpType::Concat => {
+                    if l.k != pred_k {
+                        return Err(GraphError::ChannelMismatch {
+                            layer: l.id,
+                            expect: pred_k,
+                            got: l.k,
+                        });
+                    }
+                }
+                OpType::Add => {
+                    // all addends must share K == layer C == layer K
+                    for &p in &l.predecessors {
+                        if self.layer(p).k != l.k {
+                            return Err(GraphError::ChannelMismatch {
+                                layer: l.id,
+                                expect: l.k,
+                                got: self.layer(p).k,
+                            });
+                        }
+                    }
+                }
+                OpType::Fc => {
+                    // FC consumes the flattened producer output: C may be
+                    // K or K * OY * OX of the producer.
+                    let p = self.layer(l.predecessors[0]);
+                    let flat = p.k * p.oy * p.ox;
+                    if l.c != p.k && l.c != flat {
+                        return Err(GraphError::ChannelMismatch {
+                            layer: l.id,
+                            expect: flat,
+                            got: l.c,
+                        });
+                    }
+                }
+                _ => {
+                    // Conv/Pool: single data predecessor path; C must
+                    // match the (first) producer's K.
+                    let first_k = self.layer(l.predecessors[0]).k;
+                    if l.c != first_k {
+                        return Err(GraphError::ChannelMismatch {
+                            layer: l.id,
+                            expect: first_k,
+                            got: l.c,
+                        });
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Quick per-op-type census (used by reports and tests).
+    pub fn op_census(&self) -> HashMap<&'static str, usize> {
+        let mut m = HashMap::new();
+        for l in &self.layers {
+            let key = match l.op {
+                OpType::Conv => "conv",
+                OpType::DwConv => "dwconv",
+                OpType::Fc => "fc",
+                OpType::Pool(_) => "pool",
+                OpType::Add => "add",
+                OpType::Concat => "concat",
+            };
+            *m.entry(key).or_insert(0) += 1;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::layer::{LayerBuilder, PoolKind};
+    use super::*;
+
+    fn tiny() -> WorkloadGraph {
+        let l0 = LayerBuilder::new("conv0", OpType::Conv)
+            .k(8)
+            .c(3)
+            .spatial(16, 16)
+            .filter(3, 3)
+            .pad(1)
+            .build();
+        let l1 = LayerBuilder::new("pool", OpType::Pool(PoolKind::Max))
+            .k(8)
+            .c(8)
+            .spatial(8, 8)
+            .filter(2, 2)
+            .stride(2)
+            .preds(&[LayerId(0)])
+            .build();
+        let l2 = LayerBuilder::new("fc", OpType::Fc)
+            .k(10)
+            .c(8 * 8 * 8)
+            .preds(&[LayerId(1)])
+            .build();
+        WorkloadGraph::new("tiny", vec![l0, l1, l2]).unwrap()
+    }
+
+    #[test]
+    fn construction_and_adjacency() {
+        let g = tiny();
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.successors(LayerId(0)), &[LayerId(1)]);
+        assert_eq!(g.predecessors(LayerId(2)), &[LayerId(1)]);
+        assert_eq!(g.sources(), vec![LayerId(0)]);
+        assert_eq!(g.sinks(), vec![LayerId(2)]);
+    }
+
+    #[test]
+    fn forward_edge_rejected() {
+        let l0 = LayerBuilder::new("bad", OpType::Conv)
+            .preds(&[LayerId(5)])
+            .build();
+        assert!(WorkloadGraph::new("bad", vec![l0]).is_err());
+    }
+
+    #[test]
+    fn dense_layer_filter() {
+        let g = tiny();
+        assert_eq!(g.dense_layers(), vec![LayerId(0), LayerId(2)]);
+    }
+
+    #[test]
+    fn census() {
+        let g = tiny();
+        let c = g.op_census();
+        assert_eq!(c["conv"], 1);
+        assert_eq!(c["pool"], 1);
+        assert_eq!(c["fc"], 1);
+    }
+
+    #[test]
+    fn total_macs_only_dense() {
+        let g = tiny();
+        let conv_macs = 8 * 3 * 16 * 16 * 9u64;
+        let fc_macs = 10 * 8 * 8 * 8u64;
+        assert_eq!(g.total_macs(), conv_macs + fc_macs);
+    }
+}

@@ -1,0 +1,351 @@
+//! The [`Layer`] type: one dense/SIMD operator described by its nested
+//! for-loop dimensions, the unified representation of paper Section III.
+
+/// Identifier of a layer inside one [`super::WorkloadGraph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LayerId(pub usize);
+
+impl std::fmt::Display for LayerId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "L{}", self.0)
+    }
+}
+
+/// The seven canonical for-loop dimensions of dense DNN operators.
+///
+/// `B` batch, `K` output channels, `C` input channels, `OY`/`OX` output
+/// spatial, `FY`/`FX` filter spatial.  Spatial dataflows of accelerator
+/// cores are expressed as unrollings of these dims ([`crate::arch::Dataflow`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dim {
+    B,
+    K,
+    C,
+    OY,
+    OX,
+    FY,
+    FX,
+}
+
+/// Pooling flavor — both run on the SIMD core, max is the common case.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Average,
+}
+
+/// Operator type. Dense types (`Conv`, `DwConv`, `Fc`) run on dataflow
+/// cores; `Pool`/`Add`/`Concat` run on the SIMD core (paper Section V-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpType {
+    /// Standard convolution (K, C, OY, OX, FY, FX all meaningful).
+    Conv,
+    /// Depthwise convolution: one filter per channel (C == K groups).
+    DwConv,
+    /// Fully connected / matrix-vector: no spatial locality, so the
+    /// layer collapses into a single CN (paper Step 1, topology rule).
+    Fc,
+    /// Spatial pooling window.
+    Pool(PoolKind),
+    /// Elementwise residual addition.
+    Add,
+    /// Channel concatenation (SqueezeNet / Tiny-YOLO style).
+    Concat,
+}
+
+impl OpType {
+    /// Does this op run on a dense dataflow core (true) or on the
+    /// auxiliary SIMD core (false)?
+    pub fn is_dense(&self) -> bool {
+        matches!(self, OpType::Conv | OpType::DwConv | OpType::Fc)
+    }
+
+    /// Does the operator have spatial locality in OY (and can therefore
+    /// be split into line-granular CNs)?  FC does not — its CN must
+    /// encapsulate every loop (paper's "layer topology awareness").
+    pub fn has_spatial_locality(&self) -> bool {
+        !matches!(self, OpType::Fc)
+    }
+}
+
+/// One DNN layer: operator type + loop bounds + geometry + precision.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub id: LayerId,
+    pub name: String,
+    pub op: OpType,
+    /// Output channels (K). For DwConv, K == C.
+    pub k: usize,
+    /// Input channels (C).
+    pub c: usize,
+    /// Output spatial height/width.
+    pub oy: usize,
+    pub ox: usize,
+    /// Filter spatial height/width (1 for FC/Add/Concat).
+    pub fy: usize,
+    pub fx: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Activation / weight precision in bits.
+    pub act_bits: usize,
+    pub wgt_bits: usize,
+    /// Data predecessors (graph edges are stored on the consumer side).
+    pub predecessors: Vec<LayerId>,
+}
+
+impl Layer {
+    /// Input feature-map height as stored by the producer, inverted from
+    /// the output geometry.  Padded ('same'-style) layers use
+    /// `oy * stride` (the framework convention: padding is chosen so the
+    /// input is an exact multiple of the stride); valid layers use
+    /// `(oy-1) * stride + fy`.
+    pub fn in_height(&self) -> usize {
+        match self.op {
+            OpType::Add | OpType::Concat | OpType::Fc => self.oy,
+            _ if self.pad > 0 => self.oy * self.stride,
+            _ => (self.oy - 1) * self.stride + self.fy,
+        }
+    }
+
+    /// Input feature-map width (same derivation as [`Self::in_height`]).
+    pub fn in_width(&self) -> usize {
+        match self.op {
+            OpType::Add | OpType::Concat | OpType::Fc => self.ox,
+            _ if self.pad > 0 => self.ox * self.stride,
+            _ => (self.ox - 1) * self.stride + self.fx,
+        }
+    }
+
+    /// Multiply-accumulate count of the whole layer.
+    pub fn macs(&self) -> u64 {
+        let (k, c, oy, ox, fy, fx) = (
+            self.k as u64,
+            self.c as u64,
+            self.oy as u64,
+            self.ox as u64,
+            self.fy.max(1) as u64,
+            self.fx.max(1) as u64,
+        );
+        match self.op {
+            OpType::Conv => k * c * oy * ox * fy * fx,
+            // Depthwise: one input channel per output channel.
+            OpType::DwConv => k * oy * ox * fy * fx,
+            OpType::Fc => k * c,
+            // SIMD ops: one "op" per output element (no MACs, but we
+            // count vector ops for the SIMD-core latency model).
+            OpType::Pool(_) => k * oy * ox * fy * fx,
+            OpType::Add => k * oy * ox,
+            OpType::Concat => 0,
+        }
+    }
+
+    /// Loop bound of one dimension (used by the spatial-utilization model).
+    pub fn dim(&self, d: Dim) -> usize {
+        match d {
+            Dim::B => 1,
+            Dim::K => self.k,
+            Dim::C => match self.op {
+                OpType::DwConv => 1, // per-channel group reduction is 1
+                _ => self.c,
+            },
+            Dim::OY => self.oy,
+            Dim::OX => self.ox,
+            Dim::FY => self.fy.max(1),
+            Dim::FX => self.fx.max(1),
+        }
+    }
+
+    /// Total weight footprint in bytes.
+    pub fn weight_bytes(&self) -> u64 {
+        let elems: u64 = match self.op {
+            OpType::Conv => (self.k * self.c * self.fy * self.fx) as u64,
+            OpType::DwConv => (self.k * self.fy * self.fx) as u64,
+            OpType::Fc => (self.k * self.c) as u64,
+            _ => 0,
+        };
+        elems * self.wgt_bits as u64 / 8
+    }
+
+    /// Total output activation footprint in bytes.
+    pub fn output_bytes(&self) -> u64 {
+        (self.k * self.oy * self.ox) as u64 * self.act_bits as u64 / 8
+    }
+
+    /// Total input activation footprint in bytes (all predecessors).
+    pub fn input_bytes(&self) -> u64 {
+        (self.c * self.in_height() * self.in_width()) as u64 * self.act_bits as u64 / 8
+    }
+}
+
+/// Fluent builder used by [`super::models`].
+pub struct LayerBuilder {
+    layer: Layer,
+}
+
+impl LayerBuilder {
+    pub fn new(name: &str, op: OpType) -> Self {
+        LayerBuilder {
+            layer: Layer {
+                id: LayerId(usize::MAX),
+                name: name.to_string(),
+                op,
+                k: 1,
+                c: 1,
+                oy: 1,
+                ox: 1,
+                fy: 1,
+                fx: 1,
+                stride: 1,
+                pad: 0,
+                act_bits: 8,
+                wgt_bits: 8,
+                predecessors: vec![],
+            },
+        }
+    }
+
+    pub fn k(mut self, k: usize) -> Self {
+        self.layer.k = k;
+        self
+    }
+    pub fn c(mut self, c: usize) -> Self {
+        self.layer.c = c;
+        self
+    }
+    pub fn spatial(mut self, oy: usize, ox: usize) -> Self {
+        self.layer.oy = oy;
+        self.layer.ox = ox;
+        self
+    }
+    pub fn filter(mut self, fy: usize, fx: usize) -> Self {
+        self.layer.fy = fy;
+        self.layer.fx = fx;
+        self
+    }
+    pub fn stride(mut self, s: usize) -> Self {
+        self.layer.stride = s;
+        self
+    }
+    pub fn pad(mut self, p: usize) -> Self {
+        self.layer.pad = p;
+        self
+    }
+    pub fn bits(mut self, act: usize, wgt: usize) -> Self {
+        self.layer.act_bits = act;
+        self.layer.wgt_bits = wgt;
+        self
+    }
+    pub fn preds(mut self, preds: &[LayerId]) -> Self {
+        self.layer.predecessors = preds.to_vec();
+        self
+    }
+    pub fn build(self) -> Layer {
+        self.layer
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv3x3() -> Layer {
+        LayerBuilder::new("c", OpType::Conv)
+            .k(64)
+            .c(64)
+            .spatial(28, 28)
+            .filter(3, 3)
+            .pad(1)
+            .build()
+    }
+
+    #[test]
+    fn macs_conv() {
+        let l = conv3x3();
+        assert_eq!(l.macs(), 64 * 64 * 28 * 28 * 9);
+    }
+
+    #[test]
+    fn macs_dwconv_excludes_c() {
+        let l = LayerBuilder::new("dw", OpType::DwConv)
+            .k(32)
+            .c(32)
+            .spatial(14, 14)
+            .filter(3, 3)
+            .build();
+        assert_eq!(l.macs(), 32 * 14 * 14 * 9);
+    }
+
+    #[test]
+    fn macs_fc() {
+        let l = LayerBuilder::new("fc", OpType::Fc).k(1000).c(512).build();
+        assert_eq!(l.macs(), 512_000);
+    }
+
+    #[test]
+    fn geometry_same_padding() {
+        let l = conv3x3();
+        // 'same' conv: input spatial == output spatial
+        assert_eq!(l.in_height(), 28);
+        assert_eq!(l.in_width(), 28);
+    }
+
+    #[test]
+    fn geometry_strided() {
+        let l = LayerBuilder::new("c", OpType::Conv)
+            .k(64)
+            .c(3)
+            .spatial(112, 112)
+            .filter(7, 7)
+            .stride(2)
+            .pad(3)
+            .build();
+        assert_eq!(l.in_height(), 224);
+        assert_eq!(l.in_width(), 224);
+    }
+
+    #[test]
+    fn geometry_valid_pool() {
+        let l = LayerBuilder::new("p", OpType::Pool(PoolKind::Max))
+            .k(96)
+            .c(96)
+            .spatial(54, 54)
+            .filter(3, 3)
+            .stride(2)
+            .build();
+        assert_eq!(l.in_height(), 53 * 2 + 3); // 109
+    }
+
+    #[test]
+    fn bytes() {
+        let l = conv3x3();
+        assert_eq!(l.weight_bytes(), 64 * 64 * 9);
+        assert_eq!(l.output_bytes(), 64 * 28 * 28);
+        assert_eq!(l.input_bytes(), 64 * 28 * 28);
+    }
+
+    #[test]
+    fn fc_has_no_spatial_locality() {
+        assert!(!OpType::Fc.has_spatial_locality());
+        assert!(OpType::Conv.has_spatial_locality());
+        assert!(OpType::Pool(PoolKind::Max).has_spatial_locality());
+    }
+
+    #[test]
+    fn dense_classification() {
+        assert!(OpType::Conv.is_dense());
+        assert!(OpType::DwConv.is_dense());
+        assert!(OpType::Fc.is_dense());
+        assert!(!OpType::Add.is_dense());
+        assert!(!OpType::Pool(PoolKind::Max).is_dense());
+        assert!(!OpType::Concat.is_dense());
+    }
+
+    #[test]
+    fn dim_lookup() {
+        let l = conv3x3();
+        assert_eq!(l.dim(Dim::K), 64);
+        assert_eq!(l.dim(Dim::OY), 28);
+        assert_eq!(l.dim(Dim::FY), 3);
+        assert_eq!(l.dim(Dim::B), 1);
+    }
+}

@@ -1,0 +1,18 @@
+//! Workload representation: DNN layer graphs.
+//!
+//! A [`WorkloadGraph`] is a DAG of [`Layer`]s, each described by the
+//! seven canonical nested-loop dimensions of dense DNN operators
+//! (`B, K, C, OY, OX, FY, FX`), plus stride/padding and operand
+//! precisions — the same ONNX-level abstraction the paper ingests.
+//!
+//! [`models`] provides builders for the paper's evaluation networks
+//! (ResNet-18, MobileNetV2, SqueezeNet, Tiny-YOLO, FSRCNN) and the
+//! validation workloads (ResNet-50 segments, the ResNet-18 first
+//! segment used for DIANA).
+
+mod graph;
+mod layer;
+pub mod models;
+
+pub use graph::{GraphError, WorkloadGraph};
+pub use layer::{Dim, Layer, LayerBuilder, LayerId, OpType, PoolKind};

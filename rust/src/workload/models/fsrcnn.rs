@@ -1,0 +1,57 @@
+//! FSRCNN (Dong et al.): super-resolution CNN with large uniform feature
+//! maps — the DepFiN validation workload (560x960) and the fifth
+//! exploration network.
+
+use super::*;
+
+/// FSRCNN(d=56, s=12, m=4) at `h x w` low-resolution input.
+///
+/// feature extraction conv5x5/56 -> shrink conv1x1/12 -> 4x mapping
+/// conv3x3/12 -> expand conv1x1/56 -> deconv9x9 modeled as a conv9x9
+/// producing 4 sub-pixel channels (depth-to-space x2 upscaling), all at
+/// the LR grid — matching the line-buffered processing DepFiN measures.
+pub fn fsrcnn(h: usize, w: usize) -> WorkloadGraph {
+    let mut layers = Vec::new();
+    layers.push(conv("feat", None, 56, 1, h, w, 5, 1, 2));
+    let mut x = LayerId(0);
+    layers.push(conv("shrink", Some(x), 12, 56, h, w, 1, 1, 0));
+    x = LayerId(1);
+    for i in 0..4 {
+        layers.push(conv(&format!("map{i}"), Some(x), 12, 12, h, w, 3, 1, 1));
+        x = LayerId(layers.len() - 1);
+    }
+    layers.push(conv("expand", Some(x), 56, 12, h, w, 1, 1, 0));
+    x = LayerId(layers.len() - 1);
+    // deconv as sub-pixel conv: 4 = (2x)^2 output channels
+    layers.push(conv("deconv", Some(x), 4, 56, h, w, 9, 1, 4));
+
+    WorkloadGraph::new("fsrcnn", layers).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channels_validate() {
+        fsrcnn(560, 960).validate_channels().unwrap();
+    }
+
+    #[test]
+    fn depth() {
+        assert_eq!(fsrcnn(560, 960).len(), 8);
+    }
+
+    #[test]
+    fn activation_sizes_are_large() {
+        // the paper: layer-by-layer peak memory 28.3 MB at 560x960.
+        let g = fsrcnn(560, 960);
+        let max_out = g.layers().iter().map(|l| l.output_bytes()).max().unwrap();
+        assert!(max_out > 25_000_000, "{max_out}"); // feat: 56*560*960 B
+    }
+
+    #[test]
+    fn scales_with_resolution() {
+        assert!(fsrcnn(560, 960).total_macs() > 4 * fsrcnn(280, 480).total_macs() - 1000);
+    }
+}

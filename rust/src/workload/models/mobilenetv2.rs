@@ -1,0 +1,159 @@
+//! MobileNetV2 (Sandler et al., 224x224): inverted-residual bottlenecks
+//! with depthwise convolutions — the paper's most layer-type-diverse
+//! exploration network.
+
+use super::*;
+
+/// One inverted residual: 1x1 expand (t*cin) -> dw3x3 (stride) ->
+/// 1x1 project (cout) -> add if stride==1 && cin==cout.
+#[allow(clippy::too_many_arguments)]
+fn bottleneck(
+    layers: &mut Vec<Layer>,
+    name: &str,
+    input: LayerId,
+    cin: usize,
+    cout: usize,
+    t: usize,
+    stride: usize,
+    out_spatial: usize,
+) -> LayerId {
+    let hidden = cin * t;
+    let in_spatial = out_spatial * stride;
+    let mut x = input;
+
+    if t != 1 {
+        layers.push(conv(
+            &format!("{name}.expand"),
+            Some(x),
+            hidden,
+            cin,
+            in_spatial,
+            in_spatial,
+            1,
+            1,
+            0,
+        ));
+        x = LayerId(layers.len() - 1);
+    }
+
+    layers.push(dwconv(
+        &format!("{name}.dw"),
+        x,
+        hidden,
+        out_spatial,
+        out_spatial,
+        3,
+        stride,
+        1,
+    ));
+    x = LayerId(layers.len() - 1);
+
+    layers.push(conv(
+        &format!("{name}.project"),
+        Some(x),
+        cout,
+        hidden,
+        out_spatial,
+        out_spatial,
+        1,
+        1,
+        0,
+    ));
+    x = LayerId(layers.len() - 1);
+
+    if stride == 1 && cin == cout {
+        layers.push(add(&format!("{name}.add"), x, input, cout, out_spatial, out_spatial));
+        x = LayerId(layers.len() - 1);
+    }
+    x
+}
+
+/// Full MobileNetV2 at 224x224 (width multiplier 1.0).
+pub fn mobilenetv2() -> WorkloadGraph {
+    let mut layers = Vec::new();
+    layers.push(conv("conv0", None, 32, 3, 112, 112, 3, 2, 1));
+    let mut x = LayerId(0);
+
+    // (t, c, n, s) table from the paper
+    let cfg: &[(usize, usize, usize, usize)] = &[
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut cin = 32;
+    let mut spatial = 112;
+    for (bi, &(t, c, n, s)) in cfg.iter().enumerate() {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            if stride == 2 {
+                spatial /= 2;
+            }
+            x = bottleneck(
+                &mut layers,
+                &format!("bn{bi}.{i}"),
+                x,
+                cin,
+                c,
+                t,
+                stride,
+                spatial,
+            );
+            cin = c;
+        }
+    }
+
+    layers.push(conv("conv_last", Some(x), 1280, 320, 7, 7, 1, 1, 0));
+    let cl = LayerId(layers.len() - 1);
+    layers.push(avgpool("avgpool", cl, 1280, 1, 1, 7, 1));
+    let ap = LayerId(layers.len() - 1);
+    layers.push(fc("fc", ap, 1000, 1280));
+
+    WorkloadGraph::new("mobilenetv2", layers).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::OpType;
+
+    #[test]
+    fn channels_validate() {
+        mobilenetv2().validate_channels().unwrap();
+    }
+
+    #[test]
+    fn has_depthwise_layers() {
+        let g = mobilenetv2();
+        assert_eq!(g.op_census()["dwconv"], 17);
+    }
+
+    #[test]
+    fn residual_adds_only_where_shapes_match() {
+        let g = mobilenetv2();
+        for l in g.layers() {
+            if matches!(l.op, OpType::Add) {
+                for &p in &l.predecessors {
+                    assert_eq!(g.layer(p).k, l.k, "{}", l.name);
+                    assert_eq!(g.layer(p).oy, l.oy, "{}", l.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn final_spatial_is_7() {
+        let g = mobilenetv2();
+        let last_proj = g
+            .layers()
+            .iter()
+            .filter(|l| l.name.contains("project"))
+            .next_back()
+            .unwrap();
+        assert_eq!(last_proj.oy, 7);
+        assert_eq!(last_proj.k, 320);
+    }
+}

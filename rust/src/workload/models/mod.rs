@@ -1,0 +1,247 @@
+//! Builders for the paper's evaluation and validation workloads.
+//!
+//! Exploration networks (Section V): ResNet-18, MobileNetV2, SqueezeNet,
+//! Tiny-YOLO, FSRCNN.  Validation workloads (Section IV): FSRCNN at
+//! 560x960 (DepFiN), ResNet-50 segment (Jia et al. 4x4 AiMC), ResNet-18
+//! first segment (DIANA).  Plus tiny synthetic networks for tests.
+//!
+//! Layer dimensions follow the original papers at the canonical input
+//! resolutions (224x224 for the classification networks, 416x416 for
+//! Tiny-YOLO, 560x960 for FSRCNN).
+
+mod fsrcnn;
+mod mobilenetv2;
+mod resnet;
+mod squeezenet;
+mod tiny;
+mod tinyyolo;
+
+pub use fsrcnn::fsrcnn;
+pub use mobilenetv2::mobilenetv2;
+pub use resnet::{resnet18, resnet18_first_segment, resnet50_segment};
+pub use squeezenet::squeezenet;
+pub use tiny::{tiny_branchy, tiny_linear, tiny_segment};
+pub use tinyyolo::tiny_yolo;
+
+use super::{Layer, LayerBuilder, LayerId, OpType, PoolKind, WorkloadGraph};
+
+/// The five exploration networks of Section V, by name.
+pub fn exploration_networks() -> Vec<WorkloadGraph> {
+    vec![
+        resnet18(),
+        mobilenetv2(),
+        squeezenet(),
+        tiny_yolo(),
+        fsrcnn(560, 960),
+    ]
+}
+
+/// Look a workload up by CLI name.
+pub fn by_name(name: &str) -> Option<WorkloadGraph> {
+    match name {
+        "resnet18" => Some(resnet18()),
+        "mobilenetv2" => Some(mobilenetv2()),
+        "squeezenet" => Some(squeezenet()),
+        "tinyyolo" | "tiny-yolo" => Some(tiny_yolo()),
+        "fsrcnn" => Some(fsrcnn(560, 960)),
+        "resnet18-first-segment" => Some(resnet18_first_segment()),
+        "resnet50-segment" => Some(resnet50_segment()),
+        "tiny-linear" => Some(tiny_linear()),
+        "tiny-branchy" => Some(tiny_branchy()),
+        "tiny-segment" => Some(tiny_segment()),
+        _ => None,
+    }
+}
+
+pub const WORKLOAD_NAMES: &[&str] = &[
+    "resnet18",
+    "mobilenetv2",
+    "squeezenet",
+    "tinyyolo",
+    "fsrcnn",
+    "resnet18-first-segment",
+    "resnet50-segment",
+    "tiny-linear",
+    "tiny-branchy",
+    "tiny-segment",
+];
+
+// ---------------------------------------------------------------------------
+// shared builder helpers
+// ---------------------------------------------------------------------------
+
+pub(crate) fn conv(
+    name: &str,
+    pred: Option<LayerId>,
+    k: usize,
+    c: usize,
+    oy: usize,
+    ox: usize,
+    f: usize,
+    stride: usize,
+    pad: usize,
+) -> Layer {
+    let b = LayerBuilder::new(name, OpType::Conv)
+        .k(k)
+        .c(c)
+        .spatial(oy, ox)
+        .filter(f, f)
+        .stride(stride)
+        .pad(pad);
+    match pred {
+        Some(p) => b.preds(&[p]).build(),
+        None => b.build(),
+    }
+}
+
+pub(crate) fn dwconv(
+    name: &str,
+    pred: LayerId,
+    c: usize,
+    oy: usize,
+    ox: usize,
+    f: usize,
+    stride: usize,
+    pad: usize,
+) -> Layer {
+    LayerBuilder::new(name, OpType::DwConv)
+        .k(c)
+        .c(c)
+        .spatial(oy, ox)
+        .filter(f, f)
+        .stride(stride)
+        .pad(pad)
+        .preds(&[pred])
+        .build()
+}
+
+pub(crate) fn maxpool(
+    name: &str,
+    pred: LayerId,
+    c: usize,
+    oy: usize,
+    ox: usize,
+    f: usize,
+    stride: usize,
+    pad: usize,
+) -> Layer {
+    LayerBuilder::new(name, OpType::Pool(PoolKind::Max))
+        .k(c)
+        .c(c)
+        .spatial(oy, ox)
+        .filter(f, f)
+        .stride(stride)
+        .pad(pad)
+        .preds(&[pred])
+        .build()
+}
+
+pub(crate) fn avgpool(
+    name: &str,
+    pred: LayerId,
+    c: usize,
+    oy: usize,
+    ox: usize,
+    f: usize,
+    stride: usize,
+) -> Layer {
+    LayerBuilder::new(name, OpType::Pool(PoolKind::Average))
+        .k(c)
+        .c(c)
+        .spatial(oy, ox)
+        .filter(f, f)
+        .stride(stride)
+        .preds(&[pred])
+        .build()
+}
+
+pub(crate) fn add(name: &str, a: LayerId, b: LayerId, c: usize, oy: usize, ox: usize) -> Layer {
+    LayerBuilder::new(name, OpType::Add)
+        .k(c)
+        .c(c)
+        .spatial(oy, ox)
+        .preds(&[a, b])
+        .build()
+}
+
+pub(crate) fn concat(name: &str, preds: &[LayerId], k: usize, oy: usize, ox: usize) -> Layer {
+    LayerBuilder::new(name, OpType::Concat)
+        .k(k)
+        .c(k)
+        .spatial(oy, ox)
+        .preds(preds)
+        .build()
+}
+
+pub(crate) fn fc(name: &str, pred: LayerId, k: usize, c: usize) -> Layer {
+    LayerBuilder::new(name, OpType::Fc)
+        .k(k)
+        .c(c)
+        .preds(&[pred])
+        .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_networks_build_and_validate() {
+        for name in WORKLOAD_NAMES {
+            let g = by_name(name).unwrap();
+            assert!(!g.is_empty(), "{name}");
+            g.validate_channels().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn exploration_set_has_five() {
+        assert_eq!(exploration_networks().len(), 5);
+    }
+
+    #[test]
+    fn resnet18_census() {
+        let g = resnet18();
+        let c = g.op_census();
+        assert_eq!(c["conv"], 20); // 17 main + 3 downsample
+        assert_eq!(c["add"], 8);
+        assert_eq!(c["fc"], 1);
+        assert_eq!(c["pool"], 2);
+    }
+
+    #[test]
+    fn resnet18_macs_ballpark() {
+        // ~1.8 GMACs at 224x224
+        let m = resnet18().total_macs();
+        assert!(m > 1_600_000_000 && m < 2_000_000_000, "{m}");
+    }
+
+    #[test]
+    fn mobilenetv2_macs_ballpark() {
+        // ~300 MMACs at 224x224
+        let m = mobilenetv2().total_macs();
+        assert!(m > 250_000_000 && m < 400_000_000, "{m}");
+    }
+
+    #[test]
+    fn squeezenet_macs_ballpark() {
+        // ~850 MMACs for v1.0 at 224x224
+        let m = squeezenet().total_macs();
+        assert!(m > 600_000_000 && m < 1_100_000_000, "{m}");
+    }
+
+    #[test]
+    fn fsrcnn_is_uniform_spatial() {
+        let g = fsrcnn(560, 960);
+        for l in g.layers() {
+            if l.op.is_dense() {
+                assert_eq!((l.oy, l.ox), (560, 960), "{}", l.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! ResNet-18 (He et al., 224x224), its first segment (the DIANA
+//! validation workload) and a ResNet-50 stage-3 segment (the Jia et al.
+//! 4x4-AiMC validation workload).
+
+use super::*;
+
+/// One basic block: conv3x3 -> conv3x3 -> add, with an optional strided
+/// 1x1 downsample on the skip path. Returns (layers, output id offset).
+fn basic_block(
+    layers: &mut Vec<Layer>,
+    name: &str,
+    input: LayerId,
+    in_c: usize,
+    out_c: usize,
+    spatial: usize,
+    stride: usize,
+) -> LayerId {
+    let id = |layers: &Vec<Layer>| LayerId(layers.len());
+
+    layers.push(conv(
+        &format!("{name}.conv1"),
+        Some(input),
+        out_c,
+        in_c,
+        spatial,
+        spatial,
+        3,
+        stride,
+        1,
+    ));
+    let c1 = LayerId(layers.len() - 1);
+
+    layers.push(conv(
+        &format!("{name}.conv2"),
+        Some(c1),
+        out_c,
+        out_c,
+        spatial,
+        spatial,
+        3,
+        1,
+        1,
+    ));
+    let c2 = LayerId(layers.len() - 1);
+
+    let skip = if stride != 1 || in_c != out_c {
+        layers.push(conv(
+            &format!("{name}.down"),
+            Some(input),
+            out_c,
+            in_c,
+            spatial,
+            spatial,
+            1,
+            stride,
+            0,
+        ));
+        LayerId(layers.len() - 1)
+    } else {
+        input
+    };
+
+    layers.push(add(&format!("{name}.add"), c2, skip, out_c, spatial, spatial));
+    let _ = id;
+    LayerId(layers.len() - 1)
+}
+
+/// Full ResNet-18 at 224x224 (batch 1).
+pub fn resnet18() -> WorkloadGraph {
+    let mut layers = Vec::new();
+    layers.push(conv("conv1", None, 64, 3, 112, 112, 7, 2, 3));
+    layers.push(maxpool("maxpool", LayerId(0), 64, 56, 56, 3, 2, 1));
+    let mut x = LayerId(1);
+
+    for (stage, (c, s0)) in [(64usize, 1usize), (128, 2), (256, 2), (512, 2)]
+        .iter()
+        .enumerate()
+    {
+        let spatial = 56 >> stage;
+        let in_c = if stage == 0 { 64 } else { c / 2 };
+        x = basic_block(&mut layers, &format!("s{stage}.b0"), x, in_c, *c, spatial, *s0);
+        x = basic_block(&mut layers, &format!("s{stage}.b1"), x, *c, *c, spatial, 1);
+    }
+
+    layers.push(avgpool("avgpool", x, 512, 1, 1, 7, 1));
+    let p = LayerId(layers.len() - 1);
+    layers.push(fc("fc", p, 1000, 512));
+
+    WorkloadGraph::new("resnet18", layers).unwrap()
+}
+
+/// The first segment of ResNet-18 — conv7x7/s2 -> maxpool -> conv3x3 ->
+/// conv3x3 -> residual add — the workload of the DIANA validation
+/// (Section IV-C / Fig. 10c) and of the runtime end-to-end example.
+pub fn resnet18_first_segment() -> WorkloadGraph {
+    let mut layers = Vec::new();
+    layers.push(conv("conv1", None, 64, 3, 112, 112, 7, 2, 3));
+    layers.push(maxpool("maxpool", LayerId(0), 64, 56, 56, 3, 2, 1));
+    layers.push(conv("conv2a", Some(LayerId(1)), 64, 64, 56, 56, 3, 1, 1));
+    layers.push(conv("conv2b", Some(LayerId(2)), 64, 64, 56, 56, 3, 1, 1));
+    layers.push(add("add", LayerId(3), LayerId(1), 64, 56, 56));
+    WorkloadGraph::new("resnet18-first-segment", layers).unwrap()
+}
+
+/// A ResNet-50 stage-3 segment: two bottleneck blocks at 28x28
+/// (1x1/128 -> 3x3/128 -> 1x1/512 -> add), the pipelined workload class
+/// measured on the 4x4 AiMC multi-core of Jia et al. (Section IV-B).
+pub fn resnet50_segment() -> WorkloadGraph {
+    let mut layers: Vec<Layer> = Vec::new();
+    let sp = 28;
+    // segment input: 512-channel feature map produced upstream
+    layers.push(conv("in_proj", None, 512, 256, sp, sp, 1, 1, 0));
+    let mut x = LayerId(0);
+
+    for b in 0..2 {
+        let n = format!("b{b}");
+        layers.push(conv(&format!("{n}.red"), Some(x), 128, 512, sp, sp, 1, 1, 0));
+        let r = LayerId(layers.len() - 1);
+        layers.push(conv(&format!("{n}.conv3"), Some(r), 128, 128, sp, sp, 3, 1, 1));
+        let c3 = LayerId(layers.len() - 1);
+        layers.push(conv(&format!("{n}.exp"), Some(c3), 512, 128, sp, sp, 1, 1, 0));
+        let e = LayerId(layers.len() - 1);
+        layers.push(add(&format!("{n}.add"), e, x, 512, sp, sp));
+        x = LayerId(layers.len() - 1);
+    }
+    WorkloadGraph::new("resnet50-segment", layers).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::OpType;
+
+    #[test]
+    fn first_segment_matches_python_geometry() {
+        // Mirrors python/compile/model.py::segment_spec at 224 input.
+        let g = resnet18_first_segment();
+        assert_eq!(g.len(), 5);
+        let c1 = g.layer(LayerId(0));
+        assert_eq!((c1.k, c1.oy, c1.ox, c1.fy, c1.stride, c1.pad), (64, 112, 112, 7, 2, 3));
+        assert_eq!(c1.in_height(), 224);
+        let addl = g.layer(LayerId(4));
+        assert_eq!(addl.predecessors, vec![LayerId(3), LayerId(1)]);
+    }
+
+    #[test]
+    fn resnet18_depth() {
+        let g = resnet18();
+        // 20 convs + 2 pools + 8 adds + 1 fc
+        assert_eq!(g.len(), 31);
+        g.validate_channels().unwrap();
+    }
+
+    #[test]
+    fn resnet18_stage_spatial_halving() {
+        let g = resnet18();
+        let spatials: Vec<usize> = g
+            .layers()
+            .iter()
+            .filter(|l| matches!(l.op, OpType::Conv) && l.fy == 3)
+            .map(|l| l.oy)
+            .collect();
+        assert!(spatials.contains(&56));
+        assert!(spatials.contains(&28));
+        assert!(spatials.contains(&14));
+        assert!(spatials.contains(&7));
+    }
+
+    #[test]
+    fn resnet50_segment_channels() {
+        let g = resnet50_segment();
+        g.validate_channels().unwrap();
+        assert_eq!(g.op_census()["add"], 2);
+    }
+}

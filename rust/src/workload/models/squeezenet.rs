@@ -1,0 +1,118 @@
+//! SqueezeNet v1.0 (Iandola et al., 224x224): fire modules with channel
+//! concatenation — the paper's "uniform" small network.
+
+use super::*;
+
+/// Fire module: squeeze 1x1 -> (expand 1x1 || expand 3x3) -> concat.
+fn fire(
+    layers: &mut Vec<Layer>,
+    name: &str,
+    input: LayerId,
+    cin: usize,
+    squeeze: usize,
+    expand: usize,
+    spatial: usize,
+) -> LayerId {
+    layers.push(conv(
+        &format!("{name}.squeeze"),
+        Some(input),
+        squeeze,
+        cin,
+        spatial,
+        spatial,
+        1,
+        1,
+        0,
+    ));
+    let s = LayerId(layers.len() - 1);
+    layers.push(conv(
+        &format!("{name}.exp1"),
+        Some(s),
+        expand,
+        squeeze,
+        spatial,
+        spatial,
+        1,
+        1,
+        0,
+    ));
+    let e1 = LayerId(layers.len() - 1);
+    layers.push(conv(
+        &format!("{name}.exp3"),
+        Some(s),
+        expand,
+        squeeze,
+        spatial,
+        spatial,
+        3,
+        1,
+        1,
+    ));
+    let e3 = LayerId(layers.len() - 1);
+    layers.push(concat(
+        &format!("{name}.concat"),
+        &[e1, e3],
+        2 * expand,
+        spatial,
+        spatial,
+    ));
+    LayerId(layers.len() - 1)
+}
+
+/// Full SqueezeNet v1.0 at 224x224.
+pub fn squeezenet() -> WorkloadGraph {
+    let mut layers = Vec::new();
+    // conv1: 7x7/2, 96, valid padding: 224 -> 109
+    layers.push(conv("conv1", None, 96, 3, 109, 109, 7, 2, 0));
+    layers.push(maxpool("pool1", LayerId(0), 96, 54, 54, 3, 2, 0));
+    let mut x = LayerId(1);
+
+    x = fire(&mut layers, "fire2", x, 96, 16, 64, 54);
+    x = fire(&mut layers, "fire3", x, 128, 16, 64, 54);
+    x = fire(&mut layers, "fire4", x, 128, 32, 128, 54);
+    layers.push(maxpool("pool4", x, 256, 27, 27, 3, 2, 0));
+    x = LayerId(layers.len() - 1);
+
+    x = fire(&mut layers, "fire5", x, 256, 32, 128, 27);
+    x = fire(&mut layers, "fire6", x, 256, 48, 192, 27);
+    x = fire(&mut layers, "fire7", x, 384, 48, 192, 27);
+    x = fire(&mut layers, "fire8", x, 384, 64, 256, 27);
+    layers.push(maxpool("pool8", x, 512, 13, 13, 3, 2, 0));
+    x = LayerId(layers.len() - 1);
+
+    x = fire(&mut layers, "fire9", x, 512, 64, 256, 13);
+    layers.push(conv("conv10", Some(x), 1000, 512, 13, 13, 1, 1, 0));
+    let c10 = LayerId(layers.len() - 1);
+    layers.push(avgpool("avgpool", c10, 1000, 1, 1, 13, 1));
+
+    WorkloadGraph::new("squeezenet", layers).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channels_validate() {
+        squeezenet().validate_channels().unwrap();
+    }
+
+    #[test]
+    fn fire_count() {
+        let g = squeezenet();
+        assert_eq!(g.op_census()["concat"], 8);
+        // 1 stem + 8*3 fire convs + conv10
+        assert_eq!(g.op_census()["conv"], 26);
+    }
+
+    #[test]
+    fn concat_doubles_channels() {
+        let g = squeezenet();
+        for l in g.layers() {
+            if matches!(l.op, crate::workload::OpType::Concat) {
+                let sum: usize = l.predecessors.iter().map(|p| g.layer(*p).k).sum();
+                assert_eq!(l.k, sum);
+            }
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Tiny synthetic networks for unit/integration tests and the quickstart
+//! example — small enough to hand-trace schedules.
+
+use super::*;
+
+/// Four-layer linear stack: conv -> conv -> pool -> fc.
+pub fn tiny_linear() -> WorkloadGraph {
+    let mut layers = Vec::new();
+    layers.push(conv("conv0", None, 8, 3, 16, 16, 3, 1, 1));
+    layers.push(conv("conv1", Some(LayerId(0)), 16, 8, 16, 16, 3, 1, 1));
+    layers.push(maxpool("pool", LayerId(1), 16, 8, 8, 2, 2, 0));
+    layers.push(fc("fc", LayerId(2), 10, 16 * 8 * 8));
+    WorkloadGraph::new("tiny-linear", layers).unwrap()
+}
+
+/// Diamond-shaped branchy network: conv -> (conv || conv) -> add -> conv.
+pub fn tiny_branchy() -> WorkloadGraph {
+    let mut layers = Vec::new();
+    layers.push(conv("stem", None, 8, 3, 16, 16, 3, 1, 1));
+    layers.push(conv("left", Some(LayerId(0)), 8, 8, 16, 16, 3, 1, 1));
+    layers.push(conv("right", Some(LayerId(0)), 8, 8, 16, 16, 1, 1, 0));
+    layers.push(add("add", LayerId(1), LayerId(2), 8, 16, 16));
+    layers.push(conv("out", Some(LayerId(3)), 4, 8, 16, 16, 3, 1, 1));
+    WorkloadGraph::new("tiny-branchy", layers).unwrap()
+}
+
+/// The runtime segment at the Python artifact geometry (112x112 input):
+/// mirrors `python/compile/model.py::segment_spec` exactly, so the CN
+/// graph Stream builds for it matches the AOT tile artifacts.
+pub fn tiny_segment() -> WorkloadGraph {
+    let mut layers = Vec::new();
+    layers.push(conv("conv7x7", None, 64, 3, 56, 56, 7, 2, 3));
+    layers.push(maxpool("maxpool", LayerId(0), 64, 28, 28, 3, 2, 1));
+    layers.push(conv("conv3x3a", Some(LayerId(1)), 64, 64, 28, 28, 3, 1, 1));
+    layers.push(conv("conv3x3b", Some(LayerId(2)), 64, 64, 28, 28, 3, 1, 1));
+    layers.push(add("add", LayerId(3), LayerId(1), 64, 28, 28));
+    WorkloadGraph::new("tiny-segment", layers).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tiny_validate() {
+        tiny_linear().validate_channels().unwrap();
+        tiny_branchy().validate_channels().unwrap();
+        tiny_segment().validate_channels().unwrap();
+    }
+
+    #[test]
+    fn branchy_fanout() {
+        let g = tiny_branchy();
+        assert_eq!(g.successors(LayerId(0)).len(), 2);
+        assert_eq!(g.predecessors(LayerId(3)).len(), 2);
+    }
+
+    #[test]
+    fn segment_matches_artifact_geometry() {
+        let g = tiny_segment();
+        let c1 = g.layer(LayerId(0));
+        assert_eq!(c1.in_height(), 112);
+        assert_eq!(c1.oy, 56);
+        assert_eq!(g.layer(LayerId(4)).oy, 28);
+    }
+}

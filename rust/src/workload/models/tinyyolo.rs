@@ -1,0 +1,66 @@
+//! Tiny-YOLO (v3-tiny trunk, 416x416): the object-detection exploration
+//! network — deep, linear, with interleaved maxpools.
+
+use super::*;
+
+/// Tiny-YOLO at 416x416: the classic conv/maxpool trunk plus the
+/// detection head convolutions.
+pub fn tiny_yolo() -> WorkloadGraph {
+    let mut layers = Vec::new();
+
+    // trunk: conv3x3(c) + maxpool2x2/2, channel doubling each stage
+    let stages: &[(usize, usize)] = &[
+        // (channels, output spatial of the conv)
+        (16, 416),
+        (32, 208),
+        (64, 104),
+        (128, 52),
+        (256, 26),
+        (512, 13),
+    ];
+    let mut prev: Option<LayerId> = None;
+    let mut cin = 3;
+    for (i, &(c, sp)) in stages.iter().enumerate() {
+        layers.push(conv(&format!("conv{i}"), prev, c, cin, sp, sp, 3, 1, 1));
+        let cid = LayerId(layers.len() - 1);
+        // final maxpool is stride 1 in v3-tiny (keeps 13x13)
+        let (pstride, psp) = if i == stages.len() - 1 { (1, 13) } else { (2, sp / 2) };
+        layers.push(maxpool(&format!("pool{i}"), cid, c, psp, psp, 2, pstride, 0));
+        prev = Some(LayerId(layers.len() - 1));
+        cin = c;
+    }
+    let trunk = prev.unwrap();
+
+    // head
+    layers.push(conv("conv6", Some(trunk), 1024, 512, 13, 13, 3, 1, 1));
+    let c6 = LayerId(layers.len() - 1);
+    layers.push(conv("conv7", Some(c6), 256, 1024, 13, 13, 1, 1, 0));
+    let c7 = LayerId(layers.len() - 1);
+    layers.push(conv("conv8", Some(c7), 512, 256, 13, 13, 3, 1, 1));
+    let c8 = LayerId(layers.len() - 1);
+    layers.push(conv("det", Some(c8), 255, 512, 13, 13, 1, 1, 0));
+
+    WorkloadGraph::new("tinyyolo", layers).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channels_validate() {
+        tiny_yolo().validate_channels().unwrap();
+    }
+
+    #[test]
+    fn macs_ballpark() {
+        // v3-tiny trunk+head is ~2.7 GMACs at 416x416
+        let m = tiny_yolo().total_macs();
+        assert!(m > 2_000_000_000 && m < 3_500_000_000, "{m}");
+    }
+
+    #[test]
+    fn pool_every_stage() {
+        assert_eq!(tiny_yolo().op_census()["pool"], 6);
+    }
+}

@@ -1,0 +1,103 @@
+//! Cross-module integration: CN splitting + dependency generation +
+//! cost extraction over the real evaluation networks.
+
+use stream::arch::presets;
+use stream::cn::{CnGranularity, CnSet};
+use stream::depgraph::{edge_set, generate, generate_pairwise};
+use stream::mapping::CostModel;
+use stream::workload::models;
+
+#[test]
+fn all_networks_split_and_generate_at_coarse_granularity() {
+    for name in models::WORKLOAD_NAMES {
+        let w = models::by_name(name).unwrap();
+        let g = generate(&w, CnSet::build(&w, CnGranularity::LayerByLayer));
+        assert_eq!(g.len(), w.len(), "{name}");
+        assert!(g.check_acyclic(), "{name}");
+    }
+}
+
+#[test]
+fn all_networks_generate_fine_grained() {
+    for name in ["resnet18", "mobilenetv2", "squeezenet", "tinyyolo"] {
+        let w = models::by_name(name).unwrap();
+        let g = generate(&w, CnSet::build(&w, CnGranularity::Lines(4)));
+        assert!(g.len() > 3 * w.len(), "{name}: only {} CNs", g.len());
+        assert!(g.check_acyclic(), "{name}");
+        assert!(!g.sources().is_empty(), "{name}");
+    }
+}
+
+#[test]
+fn rtree_equals_pairwise_on_real_networks() {
+    for name in ["resnet18", "squeezenet"] {
+        let w = models::by_name(name).unwrap();
+        let a = generate(&w, CnSet::build(&w, CnGranularity::Lines(8)));
+        let b = generate_pairwise(&w, CnSet::build(&w, CnGranularity::Lines(8)));
+        assert_eq!(edge_set(&a), edge_set(&b), "{name}");
+    }
+}
+
+#[test]
+fn mac_conservation_across_granularities() {
+    for name in models::WORKLOAD_NAMES {
+        let w = models::by_name(name).unwrap();
+        let direct: u64 = w.layers().iter().map(|l| l.macs()).sum();
+        for gran in [CnGranularity::LayerByLayer, CnGranularity::Lines(4), CnGranularity::Lines(1)]
+        {
+            let cns = CnSet::build(&w, gran);
+            let total: u64 = cns.nodes.iter().map(|c| c.macs).sum();
+            assert_eq!(total, direct, "{name} at {gran:?}");
+        }
+    }
+}
+
+#[test]
+fn cost_model_covers_every_combination() {
+    let w = models::resnet18();
+    for arch_name in ["sc-tpu", "hetero", "hom-eye"] {
+        let arch = presets::by_name(arch_name).unwrap();
+        let cns = CnSet::build(&w, CnGranularity::Lines(4));
+        let m = CostModel::build(&w, &cns, &arch);
+        for cn in &cns.nodes {
+            for core in &arch.cores {
+                let c = m.cn_cost(cn, core.id);
+                assert!(c.compute_cycles > 0, "{arch_name} {:?}", cn.id);
+                assert!(c.energy_pj > 0.0);
+                assert!(c.spatial_util > 0.0 && c.spatial_util <= 1.0 + 1e-9);
+            }
+        }
+    }
+}
+
+#[test]
+fn finer_granularity_means_more_smaller_cns() {
+    let w = models::resnet18();
+    let c4 = CnSet::build(&w, CnGranularity::Lines(4));
+    let c1 = CnSet::build(&w, CnGranularity::Lines(1));
+    assert!(c1.len() > 2 * c4.len());
+    let max4 = c4.nodes.iter().map(|c| c.macs).max().unwrap();
+    let max1 = c1.nodes.iter().map(|c| c.macs).max().unwrap();
+    assert!(max1 <= max4);
+}
+
+#[test]
+fn granularity_clamped_by_architecture() {
+    use stream::workload::Dim;
+    // an architecture that unrolls OY forces CNs of >= that many lines
+    let mut arch = presets::sc_tpu();
+    arch.cores[0].dataflow = stream::arch::Dataflow::new(&[(Dim::OY, 8), (Dim::K, 8)]);
+    let g = CnGranularity::Lines(2).for_arch(&arch);
+    assert_eq!(g, CnGranularity::Lines(8));
+}
+
+#[test]
+fn depfin_fsrcnn_scale() {
+    // the DepFiN validation workload produces thousands of CNs and a
+    // dependency graph in well under a second
+    let w = models::fsrcnn(560, 960);
+    let t = std::time::Instant::now();
+    let g = generate(&w, CnSet::build(&w, CnGranularity::Lines(4)));
+    assert!(g.len() > 1000, "{}", g.len());
+    assert!(t.elapsed().as_secs_f64() < 5.0);
+}

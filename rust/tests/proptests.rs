@@ -1,0 +1,339 @@
+//! Property-based tests over randomly generated workloads, allocations
+//! and granularities (in-tree harness: deterministic xorshift generator,
+//! many iterations, shrink-free but with seeds printed on failure).
+//!
+//! Invariants checked:
+//! 1. R-tree dependency generation == pairwise oracle
+//! 2. CN graphs are acyclic; MACs/bytes conserved across granularities
+//! 3. schedules respect every edge; cores never double-book
+//! 4. bus/DRAM FCFS serialization
+//! 5. memory trace never negative, residual ~0
+//! 6. GA operators keep genomes valid
+
+use stream::arch::{presets, Accelerator, CoreId};
+use stream::cn::{CnGranularity, CnSet};
+use stream::depgraph::{edge_set, generate, generate_pairwise};
+use stream::mapping::CostModel;
+use stream::scheduler::{schedule, SchedulePriority};
+use stream::util::XorShift64;
+use stream::workload::{LayerBuilder, LayerId, OpType, PoolKind, WorkloadGraph};
+
+/// Random layer chain with consistent channels/spatial dims, with
+/// optional residual branches.
+fn random_workload(rng: &mut XorShift64) -> WorkloadGraph {
+    let mut layers = Vec::new();
+    let mut c = 1 + rng.below(8) as usize;
+    let mut spatial = 8 + 4 * rng.below(8) as usize; // 8..36
+    let depth = 2 + rng.below(6) as usize;
+
+    layers.push(
+        LayerBuilder::new("stem", OpType::Conv)
+            .k(4 + rng.below(12) as usize)
+            .c(c)
+            .spatial(spatial, spatial)
+            .filter(3, 3)
+            .pad(1)
+            .build(),
+    );
+    c = layers[0].k;
+
+    for i in 0..depth {
+        let prev = LayerId(layers.len() - 1);
+        match rng.below(5) {
+            0 if spatial >= 8 => {
+                // strided conv
+                spatial /= 2;
+                let k = 4 + rng.below(16) as usize;
+                layers.push(
+                    LayerBuilder::new(&format!("conv{i}"), OpType::Conv)
+                        .k(k)
+                        .c(c)
+                        .spatial(spatial, spatial)
+                        .filter(3, 3)
+                        .stride(2)
+                        .pad(1)
+                        .preds(&[prev])
+                        .build(),
+                );
+                c = k;
+            }
+            1 if spatial >= 8 => {
+                // maxpool
+                spatial /= 2;
+                layers.push(
+                    LayerBuilder::new(&format!("pool{i}"), OpType::Pool(PoolKind::Max))
+                        .k(c)
+                        .c(c)
+                        .spatial(spatial, spatial)
+                        .filter(2, 2)
+                        .stride(2)
+                        .preds(&[prev])
+                        .build(),
+                );
+            }
+            2 => {
+                // residual block: conv -> add(prev)
+                layers.push(
+                    LayerBuilder::new(&format!("res{i}"), OpType::Conv)
+                        .k(c)
+                        .c(c)
+                        .spatial(spatial, spatial)
+                        .filter(3, 3)
+                        .pad(1)
+                        .preds(&[prev])
+                        .build(),
+                );
+                let conv = LayerId(layers.len() - 1);
+                layers.push(
+                    LayerBuilder::new(&format!("add{i}"), OpType::Add)
+                        .k(c)
+                        .c(c)
+                        .spatial(spatial, spatial)
+                        .preds(&[conv, prev])
+                        .build(),
+                );
+            }
+            3 => {
+                // dwconv
+                layers.push(
+                    LayerBuilder::new(&format!("dw{i}"), OpType::DwConv)
+                        .k(c)
+                        .c(c)
+                        .spatial(spatial, spatial)
+                        .filter(3, 3)
+                        .pad(1)
+                        .preds(&[prev])
+                        .build(),
+                );
+            }
+            _ => {
+                // 1x1 conv
+                let k = 4 + rng.below(16) as usize;
+                layers.push(
+                    LayerBuilder::new(&format!("pw{i}"), OpType::Conv)
+                        .k(k)
+                        .c(c)
+                        .spatial(spatial, spatial)
+                        .filter(1, 1)
+                        .preds(&[prev])
+                        .build(),
+                );
+                c = k;
+            }
+        }
+    }
+    let g = WorkloadGraph::new("random", layers).expect("valid random workload");
+    g.validate_channels().expect("channels consistent");
+    g
+}
+
+fn random_granularity(rng: &mut XorShift64) -> CnGranularity {
+    match rng.below(4) {
+        0 => CnGranularity::LayerByLayer,
+        1 => CnGranularity::Lines(1),
+        2 => CnGranularity::Lines(2),
+        _ => CnGranularity::Lines(4),
+    }
+}
+
+fn random_alloc(rng: &mut XorShift64, w: &WorkloadGraph, arch: &Accelerator) -> Vec<CoreId> {
+    let dense = arch.dense_cores();
+    let simd = arch.simd_core().unwrap();
+    w.layers()
+        .iter()
+        .map(|l| {
+            if l.op.is_dense() {
+                dense[rng.below(dense.len() as u64) as usize]
+            } else {
+                simd
+            }
+        })
+        .collect()
+}
+
+const CASES: u64 = 40;
+
+#[test]
+fn prop_rtree_equals_pairwise() {
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(1000 + seed);
+        let w = random_workload(&mut rng);
+        let gran = random_granularity(&mut rng);
+        let a = generate(&w, CnSet::build(&w, gran));
+        let b = generate_pairwise(&w, CnSet::build(&w, gran));
+        assert_eq!(edge_set(&a), edge_set(&b), "seed {seed}, gran {gran:?}");
+        assert!(a.check_acyclic(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_conservation() {
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(2000 + seed);
+        let w = random_workload(&mut rng);
+        let direct_macs: u64 = w.layers().iter().map(|l| l.macs()).sum();
+        for gran in [CnGranularity::LayerByLayer, CnGranularity::Lines(2)] {
+            let cns = CnSet::build(&w, gran);
+            let macs: u64 = cns.nodes.iter().map(|c| c.macs).sum();
+            assert_eq!(macs, direct_macs, "seed {seed} macs");
+            for layer in w.layers() {
+                let lcns = cns.layer_cns(layer.id);
+                let disc: u64 = lcns.iter().map(|c| c.discard_input_bytes).sum();
+                assert_eq!(disc, layer.input_bytes(), "seed {seed} {}", layer.name);
+                let outs: u64 = lcns.iter().map(|c| c.final_output_bytes).sum();
+                assert_eq!(outs, layer.output_bytes(), "seed {seed} {}", layer.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_schedule_invariants() {
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(3000 + seed);
+        let w = random_workload(&mut rng);
+        let arch = if rng.below(2) == 0 { presets::test_dual() } else { presets::hetero_quad() };
+        let gran = random_granularity(&mut rng);
+        let cns = CnSet::build(&w, gran);
+        let costs = CostModel::build(&w, &cns, &arch);
+        let g = generate(&w, CnSet::build(&w, gran));
+        let alloc = random_alloc(&mut rng, &w, &arch);
+        let pr = if rng.below(2) == 0 {
+            SchedulePriority::Latency
+        } else {
+            SchedulePriority::Memory
+        };
+        let r = schedule(&w, &g, &costs, &arch, &alloc, pr);
+
+        // every CN scheduled, edges respected
+        assert_eq!(r.cns.len(), g.len(), "seed {seed}");
+        let time: std::collections::HashMap<usize, (u64, u64)> =
+            r.cns.iter().map(|s| (s.cn.0, (s.start, s.end))).collect();
+        for e in &g.edges {
+            assert!(time[&e.to.0].0 >= time[&e.from.0].1, "seed {seed} edge {e:?}");
+        }
+
+        // cores never double-booked
+        let mut per_core: std::collections::HashMap<usize, Vec<(u64, u64)>> = Default::default();
+        for s in &r.cns {
+            per_core.entry(s.core.0).or_default().push((s.start, s.end));
+        }
+        for (_, mut spans) in per_core {
+            spans.sort();
+            for p in spans.windows(2) {
+                assert!(p[0].1 <= p[1].0, "seed {seed}");
+            }
+        }
+
+        // FCFS bus + dram
+        let mut comms = r.comms.clone();
+        comms.sort_by_key(|c| c.start);
+        for p in comms.windows(2) {
+            assert!(p[0].end <= p[1].start, "seed {seed}");
+        }
+
+        // memory trace: total curve never negative (beyond float fuzz),
+        // residual ~0
+        for (_, v) in r.memtrace.total_curve() {
+            assert!(v > -1.0, "seed {seed}: negative trace {v}");
+        }
+        assert!(r.memtrace.residual().abs() < 1.0, "seed {seed}: residual");
+
+        // peak mem >= largest single CN output
+        let max_out =
+            g.cns.nodes.iter().map(|c| c.output_bytes).max().unwrap_or(0) as f64;
+        assert!(r.peak_mem() >= max_out, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_finer_granularity_never_increases_peak_mem_single_core() {
+    let mut ok = 0;
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(4000 + seed);
+        let w = random_workload(&mut rng);
+        let arch = presets::test_dual();
+        let alloc: Vec<CoreId> = {
+            let simd = arch.simd_core().unwrap();
+            w.layers()
+                .iter()
+                .map(|l| if l.op.is_dense() { CoreId(0) } else { simd })
+                .collect()
+        };
+        let run = |gran| {
+            let cns = CnSet::build(&w, gran);
+            let costs = CostModel::build(&w, &cns, &arch);
+            let g = generate(&w, CnSet::build(&w, gran));
+            schedule(&w, &g, &costs, &arch, &alloc, SchedulePriority::Memory).peak_mem()
+        };
+        let fine = run(CnGranularity::Lines(1));
+        let coarse = run(CnGranularity::LayerByLayer);
+        // allow small constant overhead from halo duplication
+        if fine <= coarse * 1.1 {
+            ok += 1;
+        }
+    }
+    // statistically dominant, not absolute (branchy halos can pin data)
+    assert!(ok as f64 >= 0.9 * CASES as f64, "only {ok}/{CASES} cases improved");
+}
+
+#[test]
+fn prop_ga_allocation_expansion_valid() {
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(5000 + seed);
+        let w = random_workload(&mut rng);
+        let arch = presets::hetero_quad();
+        let n_dense = w.dense_layers().len();
+        let genome: Vec<u16> =
+            (0..n_dense).map(|_| rng.below(64) as u16).collect();
+        let alloc = stream::allocator::allocation_from_genome(&w, &arch, &genome);
+        assert_eq!(alloc.len(), w.len());
+        let dense = arch.dense_cores();
+        for (l, c) in w.layers().iter().zip(&alloc) {
+            if l.op.is_dense() {
+                assert!(dense.contains(c), "seed {seed}");
+            } else {
+                assert_eq!(*c, arch.simd_core().unwrap(), "seed {seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_rtree_random_rect_queries() {
+    use stream::rtree::{RTree, Rect};
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(6000 + seed);
+        let n = 50 + rng.below(400);
+        let items: Vec<(Rect, u32)> = (0..n)
+            .map(|i| {
+                let c0 = rng.below(16) as i64;
+                let y0 = rng.below(200) as i64;
+                let x0 = rng.below(200) as i64;
+                (
+                    Rect::chw(
+                        c0..c0 + 1 + rng.below(8) as i64,
+                        y0..y0 + 1 + rng.below(30) as i64,
+                        x0..x0 + 1 + rng.below(30) as i64,
+                    ),
+                    i as u32,
+                )
+            })
+            .collect();
+        let tree = RTree::bulk_load(items.clone());
+        for _ in 0..20 {
+            let y0 = rng.below(220) as i64;
+            let x0 = rng.below(220) as i64;
+            let q = Rect::chw(0..20, y0..y0 + 25, x0..x0 + 25);
+            let mut got = tree.query_vec(&q);
+            got.sort_unstable();
+            let mut want: Vec<u32> = items
+                .iter()
+                .filter(|(r, _)| r.intersects(&q))
+                .map(|(_, p)| *p)
+                .collect();
+            want.sort_unstable();
+            assert_eq!(got, want, "seed {seed}");
+        }
+    }
+}

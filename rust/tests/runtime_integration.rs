@@ -1,0 +1,171 @@
+//! PJRT runtime integration: execute the AOT artifacts and verify that
+//! the fused schedules compute exactly what the layer-by-layer baseline
+//! and the Python oracle compute.
+//!
+//! These tests need `make artifacts` to have run; they are skipped (not
+//! failed) when the artifact directory is absent so `cargo test` works
+//! in a fresh checkout.
+
+use stream::runtime::{Manifest, Runtime, SegmentExecutor};
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifact_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_parses_and_is_consistent() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    assert!(m.artifacts.len() >= 12);
+    assert_eq!(m.segment.layers.len(), 5);
+    assert_eq!(m.segment.rows_per_cn, 4);
+    for l in &m.segment.layers {
+        assert!(m.artifacts.contains_key(&l.artifact), "{}", l.artifact);
+        assert!(m.artifacts.contains_key(&l.layer_artifact), "{}", l.layer_artifact);
+        // tile output shape matches the artifact's declared output
+        assert_eq!(m.artifacts[&l.artifact].output, l.tile_out_shape);
+    }
+}
+
+#[test]
+fn weights_load_with_manifest_shapes() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    for name in ["input", "oracle_output", "w0", "b0", "w2", "b2", "w3", "b3"] {
+        let t = m.load_weight(name).unwrap();
+        assert_eq!(t.shape, m.weights[name].shape, "{name}");
+        assert!(t.data.iter().all(|v| v.is_finite()), "{name}");
+    }
+}
+
+#[test]
+fn fc_demo_artifact_executes() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let x = stream::runtime::Tensor::new(vec![1, 256], vec![0.01; 256]).unwrap();
+    let w = stream::runtime::Tensor::new(vec![256, 128], vec![0.02; 256 * 128]).unwrap();
+    let b = stream::runtime::Tensor::new(vec![128], vec![0.5; 128]).unwrap();
+    let y = rt.execute("fc_demo", &[&x, &w, &b]).unwrap();
+    assert_eq!(y.shape, vec![1, 128]);
+    // relu(0.01*0.02*256 + 0.5) = 0.5512
+    for v in &y.data {
+        assert!((v - 0.5512).abs() < 1e-4, "{v}");
+    }
+}
+
+#[test]
+fn layer_by_layer_matches_oracle() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let exec = SegmentExecutor::new(&rt).unwrap();
+    let out = exec.run_layer_by_layer(&mut rt).unwrap();
+    let diff = exec.verify(&out, 1e-3).unwrap();
+    assert!(diff < 1e-3, "{diff}");
+}
+
+#[test]
+fn depth_first_fused_matches_oracle() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let exec = SegmentExecutor::new(&rt).unwrap();
+    let order = exec.depth_first_order(&rt);
+    let out = exec.run_fused(&mut rt, &order).unwrap();
+    let diff = exec.verify(&out, 1e-3).unwrap();
+    assert!(diff < 1e-3, "{diff}");
+}
+
+#[test]
+fn breadth_first_fused_matches_oracle() {
+    // layer-by-layer order expressed as a fused CN order
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let exec = SegmentExecutor::new(&rt).unwrap();
+    let mut order = Vec::new();
+    for (li, spec) in rt.manifest.segment.layers.iter().enumerate() {
+        for ci in 0..spec.n_cns {
+            order.push((li, ci));
+        }
+    }
+    let out = exec.run_fused(&mut rt, &order).unwrap();
+    assert!(exec.verify(&out, 1e-3).unwrap() < 1e-3);
+}
+
+#[test]
+fn stream_schedule_order_executes_and_matches_oracle() {
+    // the composition proof at test scale: Stream's own schedule order,
+    // produced by the cost-model pipeline, is executable on PJRT
+    let dir = require_artifacts!();
+    use stream::arch::presets;
+    use stream::cn::{CnGranularity, CnSet};
+    use stream::pipeline::{Stream, StreamOpts};
+    use stream::workload::models;
+
+    let workload = models::tiny_segment();
+    let arch = presets::diana();
+    let s = Stream::new(
+        workload.clone(),
+        arch.clone(),
+        StreamOpts {
+            granularity: CnGranularity::Lines(4),
+            ga: stream::allocator::GaParams {
+                population: 8,
+                generations: 4,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let r = s.run().unwrap();
+    let best = r.best_edp().unwrap();
+
+    let gran = CnGranularity::Lines(4).for_arch(&arch);
+    let cns = CnSet::build(&workload, gran);
+    let mut placed = best.result.cns.clone();
+    placed.sort_by_key(|p| (p.start, p.end));
+    let order: Vec<(usize, usize)> = placed
+        .iter()
+        .map(|p| {
+            let n = cns.node(p.cn);
+            (n.layer.0, n.idx)
+        })
+        .collect();
+
+    let mut rt = Runtime::new(&dir).unwrap();
+    let exec = SegmentExecutor::new(&rt).unwrap();
+    let out = exec.run_fused(&mut rt, &order).unwrap();
+    assert!(exec.verify(&out, 1e-3).unwrap() < 1e-3);
+}
+
+#[test]
+fn invalid_order_rejected() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let exec = SegmentExecutor::new(&rt).unwrap();
+    // start with a deep layer first: must be rejected, not mis-computed
+    let mut order = exec.depth_first_order(&rt);
+    order.swap(0, 10);
+    assert!(exec.run_fused(&mut rt, &order).is_err());
+}
+
+#[test]
+fn wrong_input_shape_rejected() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let bad = stream::runtime::Tensor::new(vec![2, 256], vec![0.0; 512]).unwrap();
+    let w = stream::runtime::Tensor::new(vec![256, 128], vec![0.0; 256 * 128]).unwrap();
+    let b = stream::runtime::Tensor::new(vec![128], vec![0.0; 128]).unwrap();
+    assert!(rt.execute("fc_demo", &[&bad, &w, &b]).is_err());
+}

@@ -1,0 +1,192 @@
+//! Scheduler integration: invariants over real networks and
+//! architectures, including the latency/memory priority trade-off and
+//! resource-contention behavior.
+
+use std::collections::HashMap;
+
+use stream::arch::{presets, Accelerator, CoreId};
+use stream::cn::{CnGranularity, CnSet};
+use stream::depgraph::{generate, CnGraph};
+use stream::mapping::CostModel;
+use stream::scheduler::{schedule, DramKind, SchedulePriority, ScheduleResult};
+use stream::workload::models;
+use stream::workload::WorkloadGraph;
+
+struct Fx {
+    w: WorkloadGraph,
+    arch: Accelerator,
+    g: CnGraph,
+    costs: CostModel,
+}
+
+fn fixture(workload: &str, arch: &str, gran: CnGranularity) -> Fx {
+    let w = models::by_name(workload).unwrap();
+    let arch = presets::by_name(arch).unwrap();
+    let cns = CnSet::build(&w, gran);
+    let costs = CostModel::build(&w, &cns, &arch);
+    let g = generate(&w, CnSet::build(&w, gran));
+    Fx { w, arch, g, costs }
+}
+
+fn round_robin_alloc(f: &Fx) -> Vec<CoreId> {
+    let dense = f.arch.dense_cores();
+    let simd = f.arch.simd_core().unwrap();
+    let mut i = 0;
+    f.w.layers()
+        .iter()
+        .map(|l| {
+            if l.op.is_dense() {
+                let c = dense[i % dense.len()];
+                i += 1;
+                c
+            } else {
+                simd
+            }
+        })
+        .collect()
+}
+
+fn check_invariants(f: &Fx, r: &ScheduleResult) {
+    // 1) every CN scheduled exactly once
+    assert_eq!(r.cns.len(), f.g.len());
+    let time: HashMap<usize, (u64, u64, CoreId)> =
+        r.cns.iter().map(|s| (s.cn.0, (s.start, s.end, s.core))).collect();
+    assert_eq!(time.len(), f.g.len());
+
+    // 2) dependencies respected
+    for e in &f.g.edges {
+        let (_, p_end, _) = time[&e.from.0];
+        let (c_start, _, _) = time[&e.to.0];
+        assert!(c_start >= p_end, "edge {e:?}");
+    }
+
+    // 3) no overlapping CNs on one core
+    let mut per_core: HashMap<CoreId, Vec<(u64, u64)>> = HashMap::new();
+    for s in &r.cns {
+        per_core.entry(s.core).or_default().push((s.start, s.end));
+    }
+    for (_, mut spans) in per_core {
+        spans.sort();
+        for pair in spans.windows(2) {
+            assert!(pair[0].1 <= pair[1].0, "{pair:?}");
+        }
+    }
+
+    // 4) bus transfers serialized
+    let mut comms = r.comms.clone();
+    comms.sort_by_key(|c| c.start);
+    for pair in comms.windows(2) {
+        assert!(pair[0].end <= pair[1].start);
+    }
+
+    // 5) dram transfers serialized
+    let mut drams = r.drams.clone();
+    drams.sort_by_key(|d| d.start);
+    for pair in drams.windows(2) {
+        assert!(pair[0].end <= pair[1].start);
+    }
+
+    // 6) metrics are self-consistent
+    assert!(r.metrics.latency_cc >= r.cns.iter().map(|s| s.end).max().unwrap_or(0));
+    assert!((r.metrics.energy_pj - r.metrics.breakdown.total()).abs() < 1e-6);
+    assert!(r.metrics.peak_mem_bytes >= 0.0);
+}
+
+#[test]
+fn resnet18_on_hetero_both_priorities() {
+    let f = fixture("resnet18", "hetero", CnGranularity::Lines(4));
+    let alloc = round_robin_alloc(&f);
+    for p in [SchedulePriority::Latency, SchedulePriority::Memory] {
+        let r = schedule(&f.w, &f.g, &f.costs, &f.arch, &alloc, p);
+        check_invariants(&f, &r);
+    }
+}
+
+#[test]
+fn memory_priority_never_much_worse_on_memory() {
+    let f = fixture("resnet18", "hom-tpu", CnGranularity::Lines(4));
+    let alloc = round_robin_alloc(&f);
+    let lat = schedule(&f.w, &f.g, &f.costs, &f.arch, &alloc, SchedulePriority::Latency);
+    let mem = schedule(&f.w, &f.g, &f.costs, &f.arch, &alloc, SchedulePriority::Memory);
+    assert!(
+        mem.peak_mem() <= lat.peak_mem() * 1.01,
+        "memory priority {} vs latency priority {}",
+        mem.peak_mem(),
+        lat.peak_mem()
+    );
+    assert!(lat.latency() <= mem.latency());
+}
+
+#[test]
+fn squeezenet_concat_workload_schedules() {
+    let f = fixture("squeezenet", "hetero", CnGranularity::Lines(8));
+    let alloc = round_robin_alloc(&f);
+    let r = schedule(&f.w, &f.g, &f.costs, &f.arch, &alloc, SchedulePriority::Latency);
+    check_invariants(&f, &r);
+}
+
+#[test]
+fn mobilenet_depthwise_workload_schedules() {
+    let f = fixture("mobilenetv2", "hetero", CnGranularity::Lines(8));
+    let alloc = round_robin_alloc(&f);
+    let r = schedule(&f.w, &f.g, &f.costs, &f.arch, &alloc, SchedulePriority::Latency);
+    check_invariants(&f, &r);
+}
+
+#[test]
+fn fused_multicore_close_to_single_core_latency() {
+    // under fine granularity a quad-core (1/4 PEs per core) must stay
+    // competitive with the same-area single core thanks to parallelism
+    let f_mc = fixture("resnet18", "hom-tpu", CnGranularity::Lines(4));
+    let alloc_mc = round_robin_alloc(&f_mc);
+    let mc =
+        schedule(&f_mc.w, &f_mc.g, &f_mc.costs, &f_mc.arch, &alloc_mc, SchedulePriority::Latency);
+
+    let f_sc = fixture("resnet18", "sc-tpu", CnGranularity::Lines(4));
+    let alloc_sc = round_robin_alloc(&f_sc);
+    let sc =
+        schedule(&f_sc.w, &f_sc.g, &f_sc.costs, &f_sc.arch, &alloc_sc, SchedulePriority::Latency);
+
+    assert!(
+        (mc.latency() as f64) < 2.5 * sc.latency() as f64,
+        "mc {} vs sc {}",
+        mc.latency(),
+        sc.latency()
+    );
+}
+
+#[test]
+fn weight_streaming_when_memory_too_small() {
+    // a big network on small cores must show weight refetch traffic of
+    // at least the full weight footprint (capacity misses)
+    let f = fixture("resnet18", "hom-tpu", CnGranularity::LayerByLayer);
+    let alloc = round_robin_alloc(&f);
+    let r = schedule(&f.w, &f.g, &f.costs, &f.arch, &alloc, SchedulePriority::Latency);
+    let wf: u64 = r
+        .drams
+        .iter()
+        .filter(|d| d.kind == DramKind::WeightFetch)
+        .map(|d| d.bytes)
+        .sum();
+    // ResNet-18 int8 weights ~11 MB >> 480 KB total weight SRAM
+    assert!(wf >= f.w.total_weight_bytes(), "{wf}");
+}
+
+#[test]
+fn fusion_slashes_peak_memory_on_fsrcnn() {
+    let f_l = fixture("fsrcnn", "sc-env", CnGranularity::LayerByLayer);
+    let alloc_l = round_robin_alloc(&f_l);
+    let lbl =
+        schedule(&f_l.w, &f_l.g, &f_l.costs, &f_l.arch, &alloc_l, SchedulePriority::Latency);
+    let f_f = fixture("fsrcnn", "sc-env", CnGranularity::Lines(4));
+    let alloc_f = round_robin_alloc(&f_f);
+    let fused =
+        schedule(&f_f.w, &f_f.g, &f_f.costs, &f_f.arch, &alloc_f, SchedulePriority::Latency);
+    // FSRCNN's huge activations (paper: 28.3 MB lbl vs 244 KB fused)
+    assert!(
+        fused.peak_mem() < 0.2 * lbl.peak_mem(),
+        "fused {} vs lbl {}",
+        fused.peak_mem(),
+        lbl.peak_mem()
+    );
+}
