@@ -20,7 +20,7 @@ use stream::pipeline::{SchedulePriority, Stream, StreamOpts};
 use stream::runtime::{Runtime, SegmentExecutor};
 use stream::workload::models;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> stream::util::error::Result<()> {
     // --- 1) model + schedule with Stream (cost-model world) ---
     let workload = models::tiny_segment(); // 112x112 artifact geometry
     let arch = presets::diana();
@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         },
     );
-    let r = s.run().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let r = s.run().map_err(|e| stream::anyhow!("{e}"))?;
     let best = r.best_edp().expect("nonempty front");
     let m = &best.result.metrics;
     println!(

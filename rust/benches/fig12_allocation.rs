@@ -21,9 +21,35 @@ fn main() {
         "=== Fig. 12: automatic (GA) vs manual allocation (pop {}, {} gens) ===\n",
         ga.population, ga.generations
     );
+
+    // serial baseline (1 fitness worker, same seed): must produce the
+    // exact same rows, only slower
+    let t = std::time::Instant::now();
+    let serial_rows = fig12(GaParams { threads: 1, ..ga });
+    let serial_s = t.elapsed().as_secs_f64();
+
     let t = std::time::Instant::now();
     let rows = fig12(ga);
+    let parallel_s = t.elapsed().as_secs_f64();
     println!("{}", format_rows(&rows));
+
+    for (a, b) in serial_rows.iter().zip(&rows) {
+        assert_eq!(
+            (a.latency_cc, a.peak_mem_kb.to_bits()),
+            (b.latency_cc, b.peak_mem_kb.to_bits()),
+            "serial and parallel rows must be bit-identical ({} {} {})",
+            a.arch,
+            a.method,
+            a.priority,
+        );
+    }
+    println!(
+        "serial {:.1} s -> parallel+memoized {:.1} s on {} threads ({:.2}x), rows bit-identical",
+        serial_s,
+        parallel_s,
+        stream::util::thread_count(0),
+        serial_s / parallel_s
+    );
 
     // the paper's headline: the GA memory leader trades latency for
     // memory on the heterogeneous architecture

@@ -53,11 +53,19 @@ fn main() {
         std::hint::black_box(sched.run(&alloc, SchedulePriority::Latency));
     });
     println!("{s}");
+    let heap_lat = s.median_ms;
 
     let s = bench("scheduler_run (memory prio)", 3, 20, || {
         std::hint::black_box(sched.run(&alloc, SchedulePriority::Memory));
     });
     println!("{s}");
+
+    // the seed's O(n)-scan candidate selection, same results bit-for-bit
+    let s = bench("scheduler_run linear-scan baseline", 3, 20, || {
+        std::hint::black_box(sched.run_reference(&alloc, SchedulePriority::Latency));
+    });
+    println!("{s}");
+    println!("  -> heap pool speedup vs linear scan: {:.2}x\n", s.median_ms / heap_lat);
 
     // heavyweight case: FSRCNN at line granularity (4480 CNs)
     {
@@ -88,4 +96,53 @@ fn main() {
         std::hint::black_box(ga.run());
     });
     println!("{s}");
+
+    // --- the tentpole: parallel + memoized GA fitness evaluation ---
+    // serial (1 thread, cold cache) vs parallel (all cores) vs a warm
+    // shared cache; results are bit-identical in all three cases.
+    let ga_params = GaParams { population: 24, generations: 6, ..Default::default() };
+    let run_edp = |threads: usize, cache: Option<&stream::cost::ScheduleCache>| {
+        let mut ga = Ga::new(
+            &w,
+            &arch,
+            &sched,
+            SchedulePriority::Latency,
+            Objective::Edp,
+            GaParams { threads, ..ga_params },
+        );
+        if let Some(c) = cache {
+            ga = ga.with_cache(c);
+        }
+        ga.run()[0].metrics.edp()
+    };
+
+    let s = bench("ga_24pop_6gen serial (1 thread)", 1, 3, || {
+        std::hint::black_box(run_edp(1, None));
+    });
+    println!("{s}");
+    let serial_ms = s.median_ms;
+
+    let threads = stream::util::thread_count(0);
+    let s = bench("ga_24pop_6gen parallel (auto)", 1, 3, || {
+        std::hint::black_box(run_edp(0, None));
+    });
+    println!("{s}");
+    println!(
+        "  -> parallel fitness speedup on {threads} threads: {:.2}x",
+        serial_ms / s.median_ms
+    );
+
+    let cache = stream::cost::ScheduleCache::new();
+    let cold = run_edp(0, Some(&cache));
+    let s = bench("ga_24pop_6gen warm shared cache", 1, 3, || {
+        std::hint::black_box(run_edp(0, Some(&cache)));
+    });
+    println!("{s}");
+    println!("  -> memoized rerun speedup vs serial: {:.2}x", serial_ms / s.median_ms);
+    let (hits, misses, entries) = cache.stats();
+    println!("  -> cache: {hits} hits / {misses} misses / {entries} entries");
+
+    let serial = run_edp(1, None);
+    assert_eq!(serial.to_bits(), cold.to_bits(), "serial vs parallel EDP must be bit-equal");
+    println!("  -> serial / parallel / memoized EDP bit-identical OK");
 }

@@ -1,13 +1,27 @@
 //! The genetic algorithm driving the layer–core allocation search.
+//!
+//! Fitness evaluation is the hot path: each unseen genome costs one
+//! full event-driven schedule simulation.  Two mechanisms keep it fast:
+//!
+//! - **data parallelism** — unseen genomes of a generation are
+//!   evaluated concurrently on [`GaParams::threads`] workers (0 = the
+//!   `STREAM_THREADS` environment variable, else all cores).  Workers
+//!   share only immutable state (the prebuilt [`Scheduler`]) plus the
+//!   thread-safe memo cache, so serial (`threads: 1`) and parallel runs
+//!   produce **bit-identical** results for a fixed seed;
+//! - **memoization** — schedule metrics are cached in a
+//!   [`ScheduleCache`] keyed by the expanded core allocation, so
+//!   genomes resurfacing across generations (or across GA runs sharing
+//!   a cache via [`Ga::with_cache`]) cost a hash lookup.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
-use crate::util::{parallel_map, XorShift64};
+use crate::util::{parallel_map_with, thread_count, XorShift64};
 
-use super::nsga2::{crowding_distance, fast_non_dominated_sort};
 use super::allocation_from_genome;
+use super::nsga2::{crowding_distance, fast_non_dominated_sort};
 use crate::arch::{Accelerator, CoreId};
-use crate::cost::ScheduleMetrics;
+use crate::cost::{ScheduleCache, ScheduleMetrics};
 use crate::scheduler::{SchedulePriority, Scheduler};
 use crate::workload::WorkloadGraph;
 
@@ -50,6 +64,10 @@ pub struct GaParams {
     pub seed: u64,
     /// Stop early after this many generations without best-front change.
     pub patience: usize,
+    /// Fitness-evaluation worker threads.  0 = auto (`STREAM_THREADS`
+    /// env var, else all available cores); 1 = fully serial.  Results
+    /// are bit-identical for any value.
+    pub threads: usize,
 }
 
 impl Default for GaParams {
@@ -61,6 +79,7 @@ impl Default for GaParams {
             mutation_p: 0.7,
             seed: 42,
             patience: 8,
+            threads: 0,
         }
     }
 }
@@ -73,8 +92,42 @@ pub struct GaResult {
     pub metrics: ScheduleMetrics,
 }
 
+/// How a [`Ga`] reaches its schedule-metrics memo: its own private
+/// cache, or one shared with other GA runs / the surrounding
+/// experiment (see [`Ga::with_cache`]).
+enum CacheRef<'a> {
+    Owned(Box<ScheduleCache>),
+    Shared(&'a ScheduleCache),
+}
+
 /// The GA engine. Owns nothing heavy: fitness evaluation borrows the
 /// prebuilt [`Scheduler`].
+///
+/// # Examples
+///
+/// ```
+/// use stream::allocator::{Ga, GaParams, Objective};
+/// use stream::arch::presets;
+/// use stream::cn::{CnGranularity, CnSet};
+/// use stream::depgraph::generate;
+/// use stream::mapping::CostModel;
+/// use stream::scheduler::{SchedulePriority, Scheduler};
+/// use stream::workload::models::tiny_segment;
+///
+/// let workload = tiny_segment();
+/// let arch = presets::hetero_quad();
+/// let cns = CnSet::build(&workload, CnGranularity::Lines(4));
+/// let costs = CostModel::build(&workload, &cns, &arch);
+/// let graph = generate(&workload, CnSet::build(&workload, CnGranularity::Lines(4)));
+/// let scheduler = Scheduler::new(&workload, &graph, &costs, &arch);
+///
+/// let params = GaParams { population: 8, generations: 3, ..Default::default() };
+/// let mut ga = Ga::new(&workload, &arch, &scheduler, SchedulePriority::Latency,
+///                      Objective::Edp, params);
+/// let front = ga.run();
+/// assert!(!front.is_empty());
+/// assert_eq!(front[0].allocation.len(), workload.len());
+/// ```
 pub struct Ga<'a> {
     pub workload: &'a WorkloadGraph,
     pub arch: &'a Accelerator,
@@ -82,8 +135,14 @@ pub struct Ga<'a> {
     pub priority: SchedulePriority,
     pub objective: Objective,
     pub params: GaParams,
-    /// Fitness memo: genomes seen across generations.
-    cache: HashMap<Vec<u16>, ScheduleMetrics>,
+    /// Schedule-metrics memo, possibly shared across GA runs.
+    cache: CacheRef<'a>,
+    /// Every genome this run evaluated, in deterministic first-seen
+    /// order (the final Pareto front is computed over this list, so the
+    /// result cannot depend on hash-map iteration order or on what a
+    /// shared cache already contained).
+    evaluated: Vec<(Vec<u16>, ScheduleMetrics)>,
+    evaluated_metrics: HashMap<Vec<u16>, ScheduleMetrics>,
 }
 
 impl<'a> Ga<'a> {
@@ -95,7 +154,34 @@ impl<'a> Ga<'a> {
         objective: Objective,
         params: GaParams,
     ) -> Ga<'a> {
-        Ga { workload, arch, scheduler, priority, objective, params, cache: HashMap::new() }
+        Ga {
+            workload,
+            arch,
+            scheduler,
+            priority,
+            objective,
+            params,
+            cache: CacheRef::Owned(Box::new(ScheduleCache::new())),
+            evaluated: Vec::new(),
+            evaluated_metrics: HashMap::new(),
+        }
+    }
+
+    /// Share a schedule-metrics cache with other GA runs over the same
+    /// (workload, CN graph, cost model, architecture).  The caller must
+    /// guarantee that context is identical — the cache key is only the
+    /// (allocation, priority) pair.
+    pub fn with_cache(mut self, cache: &'a ScheduleCache) -> Ga<'a> {
+        self.cache = CacheRef::Shared(cache);
+        self
+    }
+
+    /// The memo this run consults (owned or shared).
+    pub fn cache(&self) -> &ScheduleCache {
+        match &self.cache {
+            CacheRef::Owned(c) => c,
+            CacheRef::Shared(c) => c,
+        }
     }
 
     fn genome_len(&self) -> usize {
@@ -106,24 +192,55 @@ impl<'a> Ga<'a> {
         self.arch.dense_cores().len()
     }
 
+    fn record(&mut self, genome: Vec<u16>, m: ScheduleMetrics) {
+        if !self.evaluated_metrics.contains_key(&genome) {
+            self.evaluated_metrics.insert(genome.clone(), m);
+            self.evaluated.push((genome, m));
+        }
+    }
+
+    /// Fitness of every genome in `genomes` (order-preserving).
+    ///
+    /// Distinct genomes not yet in this run's record are dispatched to
+    /// [`GaParams::threads`] workers in first-seen order; each worker
+    /// consults the [`ScheduleCache`] and only simulates on a miss.
+    /// The workers share only `&Scheduler` and the cache,
+    /// `parallel_map_with` preserves order, and — crucially — the
+    /// record order is the same whether a genome hits or misses the
+    /// cache, so neither the thread count nor a pre-warmed shared
+    /// cache can perturb the GA trajectory or the final front's
+    /// tie-breaking.
     fn evaluate(&mut self, genomes: &[Vec<u16>]) -> Vec<ScheduleMetrics> {
-        // evaluate unseen genomes in parallel, then fill from the cache
-        let fresh: Vec<Vec<u16>> = genomes
-            .iter()
-            .filter(|g| !self.cache.contains_key(*g))
-            .cloned()
-            .collect::<std::collections::HashSet<_>>()
-            .into_iter()
-            .collect();
+        let mut jobs: Vec<Vec<u16>> = Vec::new();
+        let mut seen: HashSet<&[u16]> = HashSet::new();
+        for g in genomes {
+            if !self.evaluated_metrics.contains_key(g) && seen.insert(g.as_slice()) {
+                jobs.push(g.clone());
+            }
+        }
+
         let (workload, arch, scheduler, priority) =
             (self.workload, self.arch, self.scheduler, self.priority);
-        let results: Vec<(Vec<u16>, ScheduleMetrics)> = parallel_map(fresh, |g| {
-            let alloc = allocation_from_genome(workload, arch, &g);
-            let m = scheduler.run(&alloc, priority).metrics;
-            (g, m)
-        });
-        self.cache.extend(results);
-        genomes.iter().map(|g| self.cache[g]).collect()
+        let cache = match &self.cache {
+            CacheRef::Owned(c) => c.as_ref(),
+            CacheRef::Shared(c) => c,
+        };
+        let threads = thread_count(self.params.threads);
+        let results: Vec<(Vec<u16>, ScheduleMetrics)> = parallel_map_with(
+            jobs,
+            |g| {
+                let alloc = allocation_from_genome(workload, arch, &g);
+                let m = cache.get_or_compute(&alloc, priority, || {
+                    scheduler.run(&alloc, priority).metrics
+                });
+                (g, m)
+            },
+            threads,
+        );
+        for (g, m) in results {
+            self.record(g, m);
+        }
+        genomes.iter().map(|g| self.evaluated_metrics[g]).collect()
     }
 
     fn random_genome(&self, rng: &mut XorShift64) -> Vec<u16> {
@@ -269,9 +386,9 @@ impl<'a> Ga<'a> {
             }
         }
 
-        // final Pareto front over every genome ever evaluated
-        let all: Vec<(Vec<u16>, ScheduleMetrics)> =
-            self.cache.iter().map(|(g, m)| (g.clone(), *m)).collect();
+        // final Pareto front over every genome this run evaluated, in
+        // deterministic first-seen order
+        let all: &[(Vec<u16>, ScheduleMetrics)] = &self.evaluated;
         let points: Vec<Vec<f64>> =
             all.iter().map(|(_, m)| self.objective.values(m)).collect();
         let fronts = fast_non_dominated_sort(&points);
@@ -392,6 +509,57 @@ mod tests {
             ga.run()[0].metrics.edp()
         };
         assert_eq!(run(7).to_bits(), run(7).to_bits());
+    }
+
+    #[test]
+    fn serial_and_parallel_fitness_identical() {
+        let f = fixture();
+        let sched = Scheduler::new(&f.w, &f.g, &f.costs, &f.arch);
+        let run = |threads: usize| {
+            let params = GaParams {
+                population: 10,
+                generations: 5,
+                threads,
+                ..Default::default()
+            };
+            let mut ga = Ga::new(&f.w, &f.arch, &sched, SchedulePriority::Latency,
+                                 Objective::LatencyMemory, params);
+            ga.run()
+        };
+        let serial = run(1);
+        let parallel = run(4);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.genome, b.genome);
+            assert_eq!(a.metrics.latency_cc, b.metrics.latency_cc);
+            assert_eq!(a.metrics.energy_pj.to_bits(), b.metrics.energy_pj.to_bits());
+            assert_eq!(
+                a.metrics.peak_mem_bytes.to_bits(),
+                b.metrics.peak_mem_bytes.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn shared_cache_is_reused_across_runs() {
+        let f = fixture();
+        let sched = Scheduler::new(&f.w, &f.g, &f.costs, &f.arch);
+        let cache = crate::cost::ScheduleCache::new();
+        let params = GaParams { population: 8, generations: 3, ..Default::default() };
+        let run = || {
+            let mut ga = Ga::new(&f.w, &f.arch, &sched, SchedulePriority::Latency,
+                                 Objective::Edp, params)
+                .with_cache(&cache);
+            ga.run()[0].metrics.edp()
+        };
+        let first = run();
+        let misses_after_first = cache.misses();
+        let second = run();
+        assert_eq!(first.to_bits(), second.to_bits(), "cache must not change results");
+        // the second run re-visits the same genome sequence: every
+        // schedule comes from the cache, no new misses
+        assert_eq!(cache.misses(), misses_after_first);
+        assert!(cache.hits() > 0);
     }
 
     #[test]

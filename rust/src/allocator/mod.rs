@@ -8,6 +8,12 @@
 //! either bit-flips one gene (reallocating a layer to a different core)
 //! or swaps two layers' allocations — exactly the operators of paper
 //! Section III-D.  The GA returns the Pareto front of allocations.
+//!
+//! Fitness evaluation — one full schedule simulation per unseen genome
+//! — is data-parallel across [`GaParams::threads`] workers and
+//! memoized in a [`crate::cost::ScheduleCache`] (shareable across GA
+//! runs via [`Ga::with_cache`]); serial and parallel runs are
+//! bit-identical for a fixed seed.  See the [`Ga`] docs.
 
 mod ga;
 mod nsga2;
@@ -21,6 +27,21 @@ use crate::workload::WorkloadGraph;
 /// Expand a dense-layer genome into a per-layer core allocation
 /// (pool/add/concat layers pinned to the SIMD core, or to the first
 /// dense core if the architecture has none).
+///
+/// # Examples
+///
+/// ```
+/// use stream::allocator::allocation_from_genome;
+/// use stream::arch::presets;
+/// use stream::workload::models::tiny_segment;
+///
+/// let workload = tiny_segment(); // 3 dense layers among 5
+/// let arch = presets::hetero_quad();
+/// let alloc = allocation_from_genome(&workload, &arch, &[0, 1, 2]);
+/// assert_eq!(alloc.len(), workload.len());
+/// // non-dense layers are pinned to the SIMD core
+/// assert_eq!(alloc[1], arch.simd_core().unwrap());
+/// ```
 pub fn allocation_from_genome(
     workload: &WorkloadGraph,
     arch: &Accelerator,

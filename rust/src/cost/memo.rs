@@ -1,0 +1,281 @@
+//! Memoized schedule costs: a thread-safe cache from (core-allocation,
+//! scheduler priority) to [`ScheduleMetrics`].
+//!
+//! The GA re-encounters identical genomes constantly — elitist NSGA-II
+//! survivors re-enter the mating pool every generation, crossover of
+//! near-identical parents reproduces earlier children, and the Fig. 12
+//! experiment re-schedules the front's winners for reporting.  Each of
+//! those used to re-run the full event-driven scheduler (the single
+//! hottest path in the crate).  [`ScheduleCache`] makes every repeat a
+//! hash lookup instead.
+//!
+//! Keys are the **expanded per-layer core allocation** (not the
+//! dense-layer genome), so manual baselines, GA genomes and pinned
+//! validation mappings all share one cache.  A 64-bit FNV-1a
+//! fingerprint of the allocation picks the shard and the `HashMap`
+//! slot; the full allocation is kept alongside and compared on lookup,
+//! so hash collisions can never return wrong metrics.
+//!
+//! The cache is sharded (`Mutex<HashMap>` per shard) so the parallel
+//! fitness workers of [`crate::allocator::Ga`] can hit it concurrently
+//! without serializing on one lock.  Two workers racing on the same
+//! missing key may both compute it; the schedule is deterministic, so
+//! whichever insert lands last stores the same bits — the race is
+//! benign and lock-free reads stay cheap.
+//!
+//! # Examples
+//!
+//! ```
+//! use stream::arch::CoreId;
+//! use stream::cost::{ScheduleCache, ScheduleMetrics};
+//! use stream::scheduler::SchedulePriority;
+//!
+//! let cache = ScheduleCache::new();
+//! let alloc = [CoreId(0), CoreId(1), CoreId(0)];
+//!
+//! // first call computes, second call is a hit with identical bits
+//! let m1 = cache.get_or_compute(&alloc, SchedulePriority::Latency, || ScheduleMetrics {
+//!     latency_cc: 123,
+//!     ..Default::default()
+//! });
+//! let m2 = cache.get_or_compute(&alloc, SchedulePriority::Latency, || unreachable!());
+//! assert_eq!(m1.latency_cc, m2.latency_cc);
+//! assert_eq!((cache.hits(), cache.misses()), (1, 1));
+//!
+//! // a different priority is a different key
+//! assert!(cache.get(&alloc, SchedulePriority::Memory).is_none());
+//! ```
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::ScheduleMetrics;
+use crate::arch::CoreId;
+use crate::scheduler::SchedulePriority;
+
+/// Number of independently-locked shards.  Power of two; 16 keeps lock
+/// contention negligible for the worker counts this crate targets.
+const SHARDS: usize = 16;
+
+/// One cached entry's identity: fingerprint + the exact allocation it
+/// was computed for (collision safety) + the priority tag.
+#[derive(Clone, PartialEq, Eq)]
+struct Key {
+    fingerprint: u64,
+    priority: u8,
+    allocation: Box<[u16]>,
+}
+
+impl std::hash::Hash for Key {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        // the fingerprint already mixes allocation + priority
+        state.write_u64(self.fingerprint);
+    }
+}
+
+fn priority_tag(p: SchedulePriority) -> u8 {
+    match p {
+        SchedulePriority::Latency => 0,
+        SchedulePriority::Memory => 1,
+    }
+}
+
+/// 64-bit FNV-1a over the allocation's core indices and the priority.
+pub fn fingerprint(allocation: &[CoreId], priority: SchedulePriority) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for c in allocation {
+        let v = c.0 as u32;
+        eat(v as u8);
+        eat((v >> 8) as u8);
+        eat((v >> 16) as u8);
+        eat((v >> 24) as u8);
+    }
+    eat(priority_tag(priority));
+    h
+}
+
+/// Thread-safe memo of schedule metrics keyed by (allocation, priority).
+///
+/// See the [module docs](self) for design notes.  All methods take
+/// `&self`; interior mutability is per-shard `Mutex`es plus atomic
+/// hit/miss counters, so a shared reference can be handed to any number
+/// of worker threads.
+pub struct ScheduleCache {
+    shards: Vec<Mutex<HashMap<Key, ScheduleMetrics>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for ScheduleCache {
+    fn default() -> Self {
+        ScheduleCache::new()
+    }
+}
+
+impl ScheduleCache {
+    pub fn new() -> ScheduleCache {
+        ScheduleCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn key(allocation: &[CoreId], priority: SchedulePriority) -> Key {
+        Key {
+            fingerprint: fingerprint(allocation, priority),
+            priority: priority_tag(priority),
+            allocation: allocation.iter().map(|c| c.0 as u16).collect(),
+        }
+    }
+
+    fn shard(&self, fingerprint: u64) -> &Mutex<HashMap<Key, ScheduleMetrics>> {
+        &self.shards[(fingerprint % SHARDS as u64) as usize]
+    }
+
+    /// Cached metrics for this allocation under this priority, if any.
+    /// Counts as a hit/miss in [`stats`](Self::stats).
+    pub fn get(&self, allocation: &[CoreId], priority: SchedulePriority) -> Option<ScheduleMetrics> {
+        let key = Self::key(allocation, priority);
+        let got = self.shard(key.fingerprint).lock().unwrap().get(&key).copied();
+        match got {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        got
+    }
+
+    /// Insert (or overwrite with identical bits — the scheduler is
+    /// deterministic) the metrics for this allocation.
+    pub fn insert(
+        &self,
+        allocation: &[CoreId],
+        priority: SchedulePriority,
+        metrics: ScheduleMetrics,
+    ) {
+        let key = Self::key(allocation, priority);
+        self.shard(key.fingerprint).lock().unwrap().insert(key, metrics);
+    }
+
+    /// The memoized hot path: return the cached metrics or compute,
+    /// store and return them.  `compute` runs **outside** the shard
+    /// lock so concurrent misses on different keys never serialize on
+    /// the scheduler run.
+    pub fn get_or_compute<F: FnOnce() -> ScheduleMetrics>(
+        &self,
+        allocation: &[CoreId],
+        priority: SchedulePriority,
+        compute: F,
+    ) -> ScheduleMetrics {
+        if let Some(m) = self.get(allocation, priority) {
+            return m;
+        }
+        let m = compute();
+        self.insert(allocation, priority, m);
+        m
+    }
+
+    /// Number of cached entries across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// `(hits, misses, entries)` — one line of diagnostics for benches.
+    pub fn stats(&self) -> (u64, u64, usize) {
+        (self.hits(), self.misses(), self.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(latency: u64) -> ScheduleMetrics {
+        ScheduleMetrics { latency_cc: latency, energy_pj: latency as f64 * 2.0, ..Default::default() }
+    }
+
+    #[test]
+    fn miss_then_hit() {
+        let c = ScheduleCache::new();
+        let a = [CoreId(0), CoreId(2), CoreId(1)];
+        assert!(c.get(&a, SchedulePriority::Latency).is_none());
+        c.insert(&a, SchedulePriority::Latency, m(10));
+        let got = c.get(&a, SchedulePriority::Latency).unwrap();
+        assert_eq!(got.latency_cc, 10);
+        assert_eq!(got.energy_pj.to_bits(), (20.0f64).to_bits());
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn priority_separates_keys() {
+        let c = ScheduleCache::new();
+        let a = [CoreId(1), CoreId(1)];
+        c.insert(&a, SchedulePriority::Latency, m(1));
+        c.insert(&a, SchedulePriority::Memory, m(2));
+        assert_eq!(c.get(&a, SchedulePriority::Latency).unwrap().latency_cc, 1);
+        assert_eq!(c.get(&a, SchedulePriority::Memory).unwrap().latency_cc, 2);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn different_allocations_do_not_alias() {
+        let c = ScheduleCache::new();
+        c.insert(&[CoreId(0), CoreId(1)], SchedulePriority::Latency, m(1));
+        c.insert(&[CoreId(1), CoreId(0)], SchedulePriority::Latency, m(2));
+        assert_eq!(c.get(&[CoreId(0), CoreId(1)], SchedulePriority::Latency).unwrap().latency_cc, 1);
+        assert_eq!(c.get(&[CoreId(1), CoreId(0)], SchedulePriority::Latency).unwrap().latency_cc, 2);
+    }
+
+    #[test]
+    fn get_or_compute_counts() {
+        let c = ScheduleCache::new();
+        let a = [CoreId(3)];
+        let computed = std::cell::Cell::new(0);
+        for _ in 0..3 {
+            c.get_or_compute(&a, SchedulePriority::Memory, || {
+                computed.set(computed.get() + 1);
+                m(5)
+            });
+        }
+        assert_eq!(computed.get(), 1);
+        assert_eq!(c.hits(), 2);
+        assert_eq!(c.misses(), 1);
+    }
+
+    #[test]
+    fn concurrent_access_is_consistent() {
+        let c = ScheduleCache::new();
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let c = &c;
+                s.spawn(move || {
+                    for i in 0..100u64 {
+                        let alloc = [CoreId((i % 7) as usize), CoreId(((i + t) % 5) as usize)];
+                        let got = c.get_or_compute(&alloc, SchedulePriority::Latency, || {
+                            m(alloc[0].0 as u64 * 100 + alloc[1].0 as u64)
+                        });
+                        assert_eq!(got.latency_cc, alloc[0].0 as u64 * 100 + alloc[1].0 as u64);
+                    }
+                });
+            }
+        });
+        assert!(c.len() <= 35);
+    }
+}

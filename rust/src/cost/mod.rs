@@ -1,4 +1,31 @@
-//! Cost aggregation: schedule-level metrics and energy breakdowns.
+//! Cost aggregation: schedule-level metrics, energy breakdowns and the
+//! memoized schedule-cost cache.
+//!
+//! Everything the rest of the crate *reports* lives here:
+//!
+//! - [`ScheduleMetrics`] — latency / energy / peak-memory of one
+//!   schedule (the objective vector the GA minimizes, paper Section V);
+//! - [`EnergyBreakdown`] — MAC / on-chip / bus / DRAM split (the
+//!   stacked bars of paper Fig. 15);
+//! - [`ScheduleCache`] ([`memo`]) — the thread-safe memo from
+//!   (core-allocation, priority) to metrics that lets the GA skip
+//!   re-simulating duplicate genomes;
+//! - formatting helpers ([`fmt_cycles`], [`fmt_energy`], [`fmt_bytes`],
+//!   [`geomean`]) shared by the CLI and the benches.
+//!
+//! # Examples
+//!
+//! ```
+//! use stream::cost::ScheduleMetrics;
+//!
+//! let m = ScheduleMetrics { latency_cc: 200, energy_pj: 4.0, ..Default::default() };
+//! assert_eq!(m.edp(), 800.0);
+//! assert_eq!(stream::cost::fmt_cycles(1_500_000), "1.50 Mcc");
+//! ```
+
+pub mod memo;
+
+pub use memo::ScheduleCache;
 
 /// Energy split by destination (paper Fig. 15's stacked bars).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]

@@ -5,6 +5,7 @@
 use crate::allocator::{manual_allocation, Ga, GaParams, Objective};
 use crate::arch::{presets, Accelerator};
 use crate::cn::{CnGranularity, CnSet};
+use crate::cost::ScheduleCache;
 use crate::depgraph::generate;
 use crate::mapping::CostModel;
 use crate::scheduler::{SchedulePriority, Scheduler};
@@ -27,6 +28,9 @@ fn run_arch(arch: Accelerator, heterogeneous: bool, ga_params: GaParams) -> Vec<
     let costs = CostModel::build(&w, &cns, &arch);
     let graph = generate(&w, CnSet::build(&w, gran));
     let sched = Scheduler::new(&w, &graph, &costs, &arch);
+    // one memo shared by both priorities' GA runs and the final
+    // reporting re-schedules (keys include the priority)
+    let cache = ScheduleCache::new();
 
     let manual = manual_allocation(&w, &arch, &costs, &cns, heterogeneous);
     let mut rows = Vec::new();
@@ -35,7 +39,7 @@ fn run_arch(arch: Accelerator, heterogeneous: bool, ga_params: GaParams) -> Vec<
         [("latency", SchedulePriority::Latency), ("memory", SchedulePriority::Memory)]
     {
         // manual baseline
-        let m = sched.run(&manual, priority).metrics;
+        let m = cache.get_or_compute(&manual, priority, || sched.run(&manual, priority).metrics);
         rows.push(Fig12Row {
             arch: arch.name.clone(),
             method: "manual".into(),
@@ -45,7 +49,8 @@ fn run_arch(arch: Accelerator, heterogeneous: bool, ga_params: GaParams) -> Vec<
         });
 
         // GA (bi-objective latency+memory, matching the figure's axes)
-        let mut ga = Ga::new(&w, &arch, &sched, priority, Objective::LatencyMemory, ga_params);
+        let mut ga = Ga::new(&w, &arch, &sched, priority, Objective::LatencyMemory, ga_params)
+            .with_cache(&cache);
         let front = ga.run();
         // report the front's latency leader under latency priority and
         // memory leader under memory priority
@@ -64,7 +69,10 @@ fn run_arch(arch: Accelerator, heterogeneous: bool, ga_params: GaParams) -> Vec<
                 })
                 .expect("front nonempty"),
         };
-        let m = sched.run(&best.allocation, priority).metrics;
+        let m = cache
+            .get_or_compute(&best.allocation, priority, || {
+                sched.run(&best.allocation, priority).metrics
+            });
         rows.push(Fig12Row {
             arch: arch.name.clone(),
             method: "GA".into(),

@@ -70,6 +70,9 @@ fn best_edp(
     gran: CnGranularity,
     ga: GaParams,
 ) -> ScheduleMetrics {
+    // the sweep is already data-parallel across (workload, arch) cells,
+    // so the inner GA runs serially to avoid thread oversubscription
+    let ga = GaParams { threads: 1, ..ga };
     let s = Stream::new(
         workload.clone(),
         arch.clone(),

@@ -17,11 +17,18 @@
 //!    ZigZag-lite analytic intra-core model over [`arch`] descriptions
 //!    and the [`cacti`] memory-energy model (Step 3);
 //! 4. [`allocator`] — explore the layer–core allocation space with a
-//!    genetic algorithm using NSGA-II selection (Step 4);
+//!    genetic algorithm using NSGA-II selection (Step 4); fitness
+//!    evaluation is data-parallel (`GaParams::threads` /
+//!    `STREAM_THREADS`, bit-identical to the serial path) and memoized
+//!    through the [`cost`] module's `ScheduleCache`;
 //! 5. [`scheduler`] — schedule CNs onto cores with latency- or
-//!    memory-prioritized heuristics, modeling bus contention, DRAM-port
-//!    contention and FIFO weight eviction (Step 5.1), and trace activation
-//!    memory usage over time (Step 5.2).
+//!    memory-prioritized heuristics in O(log n) per pick, modeling bus
+//!    contention, DRAM-port contention and FIFO weight eviction
+//!    (Step 5.1), and trace activation memory usage over time
+//!    (Step 5.2).
+//!
+//! `docs/ARCHITECTURE.md` in the repository walks through the pipeline
+//! step by step and maps every module to its paper section.
 //!
 //! The [`pipeline`] module orchestrates the five steps behind one call;
 //! [`runtime`] loads the AOT-compiled XLA artifacts (built once from

@@ -11,7 +11,8 @@
 //!
 //! Argument parsing is hand-rolled (the build environment has no clap).
 
-use anyhow::{anyhow, bail, Result};
+use stream::util::error::Result;
+use stream::{anyhow, bail};
 
 use stream::allocator::GaParams;
 use stream::arch::presets;

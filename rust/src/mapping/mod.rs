@@ -5,10 +5,10 @@
 //! following the analytic structure of ZigZag [28] with the uniform
 //! latency model of Mei et al. (DATE'22) [29]:
 //!
-//! - **Spatial utilization** ([`spatial`]): loop bounds that do not fill
-//!   the core's spatial unrolling leave PEs idle — computed exactly from
-//!   per-dimension `ceil` edge effects.
-//! - **Temporal access counts** ([`cost`]): per-operand SRAM traffic is
+//! - **Spatial utilization** ([`spatial_utilization`]): loop bounds that
+//!   do not fill the core's spatial unrolling leave PEs idle — computed
+//!   exactly from per-dimension `ceil` edge effects.
+//! - **Temporal access counts** ([`CostModel`]): per-operand SRAM traffic is
 //!   the MAC count divided by the spatial reuse of that operand (the
 //!   product of the unrollings of the dims the operand does not index),
 //!   mirroring the dataflow-dependent reuse ZigZag extracts from the

@@ -1,5 +1,12 @@
 //! The Stream pipeline: Steps 1–5 behind one call (paper Fig. 3).
 //!
+//! See `docs/ARCHITECTURE.md` for the full walkthrough of the steps
+//! and their modules.  The GA inside `run()` evaluates fitness on
+//! [`GaParams::threads`](crate::allocator::GaParams) worker threads
+//! (0 = auto via `STREAM_THREADS`, 1 = serial; results are
+//! bit-identical either way) and memoizes schedule costs in a
+//! [`ScheduleCache`](crate::cost::ScheduleCache).
+//!
 //! ```no_run
 //! use stream::prelude::*;
 //! let result = stream::pipeline::Stream::new(

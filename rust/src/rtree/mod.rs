@@ -8,6 +8,24 @@
 //! generated output range is queried for intersection.  Compared with
 //! the quadratic pairwise check this is the paper's 10^3x speedup
 //! (`benches/rtree_speedup.rs` reproduces the claim).
+//!
+//! # Examples
+//!
+//! ```
+//! use stream::rtree::{Rect, RTree};
+//!
+//! // three consumer input windows (channel, y, x), bulk-loaded by id
+//! let tree = RTree::bulk_load(vec![
+//!     (Rect::chw(0..16, 0..4, 0..8), 0),
+//!     (Rect::chw(0..16, 2..6, 0..8), 1),
+//!     (Rect::chw(0..16, 6..10, 0..8), 2),
+//! ]);
+//!
+//! // which windows overlap a producer's output rows 3..5?
+//! let mut hits = tree.query_vec(&Rect::chw(0..16, 3..5, 0..8));
+//! hits.sort();
+//! assert_eq!(hits, vec![0, 1]);
+//! ```
 
 mod rect;
 mod tree;

@@ -3,7 +3,8 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::bail;
 
 use crate::util::Json;
 
@@ -92,7 +93,7 @@ impl Manifest {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let j = Json::parse(&text).map_err(|e| crate::anyhow!("{e}"))?;
 
         let mut artifacts = HashMap::new();
         for (name, meta) in j.get("artifacts").and_then(|v| v.as_obj()).context("artifacts")? {

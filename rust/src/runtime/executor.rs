@@ -2,7 +2,8 @@
 //! layer-fused (CN by CN, in an arbitrary dependency-respecting order)
 //! on the PJRT runtime, and verify against the Python oracle.
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::bail;
 
 use super::artifacts::Tensor;
 use super::pjrt::Runtime;

@@ -11,6 +11,11 @@
 //! by CN — slicing input tiles with exactly the halo/padding geometry
 //! the manifest describes — and verifies both against the Python
 //! oracle dump.  Python is never on this path.
+//!
+//! The XLA bindings are optional: built without the `pjrt` cargo
+//! feature (the offline default), [`pjrt`] compiles against an in-tree
+//! stub whose client constructor returns a descriptive error, and the
+//! integration tests self-skip when no artifacts are present.
 
 pub mod artifacts;
 pub mod executor;

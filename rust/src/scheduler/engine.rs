@@ -6,6 +6,7 @@ use crate::cost::{EnergyBreakdown, ScheduleMetrics};
 use crate::depgraph::{CnGraph, EdgeKind};
 use crate::mapping::CostModel;
 use crate::scheduler::memtrace::MemTrace;
+use crate::scheduler::pool::CandidatePool;
 use crate::scheduler::resources::{Bus, DramPort, WeightTracker};
 use crate::scheduler::{CommEvent, DramEvent, DramKind, SchedulePriority, ScheduleResult};
 use crate::workload::{LayerId, OpType, WorkloadGraph};
@@ -33,8 +34,8 @@ pub struct Scheduler<'a> {
     fanout: Vec<f64>,
     /// fresh input bytes each source-layer CN must fetch from DRAM.
     fresh_in_bytes: Vec<u64>,
-    /// Per-layer DRAM weight-fetch cycles (cached off the pick() hot
-    /// loop; see EXPERIMENTS.md §Perf).
+    /// Per-layer DRAM weight-fetch cycles (cached off the candidate
+    /// selection hot loop; see EXPERIMENTS.md §Perf).
     wgt_fetch_cc: Vec<u64>,
     /// Bounded-buffer gates: `gate_preds[p]` lists consumer CNs that
     /// must finish before producer CN `p` may start (streaming
@@ -141,20 +142,62 @@ impl<'a> Scheduler<'a> {
     }
 
     /// Schedule under `allocation` (a core per layer) and `priority`.
+    ///
+    /// `&self` + per-call resource state means one prebuilt scheduler
+    /// serves any number of threads concurrently (the parallel GA
+    /// fitness path relies on this).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use stream::arch::presets;
+    /// use stream::cn::{CnGranularity, CnSet};
+    /// use stream::depgraph::generate;
+    /// use stream::mapping::CostModel;
+    /// use stream::scheduler::{schedule, SchedulePriority};
+    /// use stream::workload::models::tiny_segment;
+    ///
+    /// let workload = tiny_segment();
+    /// let arch = presets::test_dual();
+    /// let cns = CnSet::build(&workload, CnGranularity::Lines(4));
+    /// let costs = CostModel::build(&workload, &cns, &arch);
+    /// let graph = generate(&workload, CnSet::build(&workload, CnGranularity::Lines(4)));
+    ///
+    /// // everything on core 0, SIMD layers on the SIMD core
+    /// let simd = arch.simd_core().unwrap();
+    /// let alloc: Vec<_> = workload
+    ///     .layers()
+    ///     .iter()
+    ///     .map(|l| if l.op.is_dense() { stream::arch::CoreId(0) } else { simd })
+    ///     .collect();
+    /// let result = schedule(&workload, &graph, &costs, &arch, &alloc, SchedulePriority::Latency);
+    /// assert_eq!(result.cns.len(), graph.len());
+    /// assert!(result.latency() > 0);
+    /// ```
     pub fn run(&self, allocation: &[CoreId], priority: SchedulePriority) -> ScheduleResult {
+        self.run_impl(allocation, priority, true)
+    }
+
+    /// The seed's O(n)-scan candidate selection — bit-identical results
+    /// to [`run`](Self::run), kept for equivalence tests and as the
+    /// `hotpath` bench baseline.
+    #[doc(hidden)]
+    pub fn run_reference(
+        &self,
+        allocation: &[CoreId],
+        priority: SchedulePriority,
+    ) -> ScheduleResult {
+        self.run_impl(allocation, priority, false)
+    }
+
+    fn run_impl(
+        &self,
+        allocation: &[CoreId],
+        priority: SchedulePriority,
+        heap_pool: bool,
+    ) -> ScheduleResult {
         let n = self.graph.len();
         assert_eq!(allocation.len(), self.workload.len(), "allocation per layer");
-
-        let mut sched: Vec<Option<ScheduledCn>> = vec![None; n];
-        let mut pending: Vec<usize> = (0..n)
-            .map(|i| self.graph.pred_count(CnId(i)) + self.gate_preds[i].len())
-            .collect();
-        let mut pool: Vec<Candidate> = Vec::new();
-        for i in 0..n {
-            if pending[i] == 0 {
-                pool.push(self.candidate(CnId(i), &sched));
-            }
-        }
 
         let mut core_avail = vec![0u64; self.arch.cores.len()];
         let mut core_busy = vec![0u64; self.arch.cores.len()];
@@ -162,6 +205,18 @@ impl<'a> Scheduler<'a> {
         let mut dram = DramPort::new(self.arch.dram_bw_bits);
         let mut weights: Vec<WeightTracker> =
             self.arch.cores.iter().map(|c| WeightTracker::new(c.wgt_mem_bytes)).collect();
+        let mut evicted: Vec<LayerId> = Vec::new();
+
+        let mut sched: Vec<Option<ScheduledCn>> = vec![None; n];
+        let mut pending: Vec<usize> = (0..n)
+            .map(|i| self.graph.pred_count(CnId(i)) + self.gate_preds[i].len())
+            .collect();
+        let mut pool = CandidatePool::new(n, self.arch.cores.len());
+        for i in 0..n {
+            if pending[i] == 0 {
+                self.add_candidate(CnId(i), &sched, &weights, allocation, &mut pool);
+            }
+        }
 
         let mut trace = MemTrace::new();
         let mut comms: Vec<CommEvent> = Vec::new();
@@ -172,16 +227,23 @@ impl<'a> Scheduler<'a> {
         // Pooled activation occupancy in scheduling order, used for
         // backpressure: producers are not scheduled arbitrarily far
         // ahead of their consumers when the on-chip activation capacity
-        // would overflow (the pick() fallback then drains the deepest
-        // ready CNs first, like the memory-prioritized scheduler).
+        // would overflow (the pool's memory-full fallback then drains
+        // the deepest ready CNs first, like the memory-prioritized
+        // scheduler).
         let act_cap: f64 = self.arch.cores.iter().map(|c| c.act_mem_bytes as f64).sum();
         let mut act_occ = 0.0f64;
 
 
-        while let Some(pick) =
-            self.pick(&mut pool, priority, act_occ, act_cap, &weights, allocation)
-        {
-            let cn_id = pick.cn;
+        loop {
+            let picked = if heap_pool {
+                match priority {
+                    SchedulePriority::Latency => pool.pop_latency(act_occ, act_cap),
+                    SchedulePriority::Memory => pool.pop_memory(act_occ, act_cap),
+                }
+            } else {
+                pool.pop_linear(priority, act_occ, act_cap)
+            };
+            let Some(cn_id) = picked else { break };
             let cn = self.graph.cns.node(cn_id);
             let layer = self.workload.layer(cn.layer);
             let core_id = allocation[cn.layer.0];
@@ -230,7 +292,7 @@ impl<'a> Scheduler<'a> {
             let mut weights_ready = 0u64;
             let wbytes = layer.weight_bytes();
             if wbytes > 0 {
-                let fetch = weights[core_id.0].require(cn.layer, wbytes);
+                let fetch = weights[core_id.0].require_evicting(cn.layer, wbytes, &mut evicted);
                 if fetch > 0 {
                     let (ds, de) = dram.transfer(0, fetch);
                     drams.push(DramEvent {
@@ -245,6 +307,20 @@ impl<'a> Scheduler<'a> {
                         breakdown.onchip_pj += fetch as f64 * 8.0 * weight_load_pj;
                     }
                     weights_ready = de;
+                    // residency on this core changed: the fetched layer's
+                    // remaining CNs lose their fetch penalty, the FIFO
+                    // victims' CNs gain one
+                    let fetched_layer = cn.layer;
+                    let evicted = &evicted;
+                    pool.rekey_core(core_id.0, |l| {
+                        if l == fetched_layer {
+                            Some(0)
+                        } else if evicted.contains(&l) {
+                            Some(self.wgt_fetch_cc[l.0])
+                        } else {
+                            None
+                        }
+                    });
                 }
             }
 
@@ -331,13 +407,13 @@ impl<'a> Scheduler<'a> {
             for e in self.graph.succ_edges(cn_id) {
                 pending[e.to.0] -= 1;
                 if pending[e.to.0] == 0 {
-                    pool.push(self.candidate(e.to, &sched));
+                    self.add_candidate(e.to, &sched, &weights, allocation, &mut pool);
                 }
             }
             for &g in &self.gate_succs[cn_id.0] {
                 pending[g.0] -= 1;
                 if pending[g.0] == 0 {
-                    pool.push(self.candidate(g, &sched));
+                    self.add_candidate(g, &sched, &weights, allocation, &mut pool);
                 }
             }
         }
@@ -393,8 +469,24 @@ impl<'a> Scheduler<'a> {
         ScheduleResult { cns: scheduled_order, comms, drams, metrics, memtrace: trace }
     }
 
-    fn candidate(&self, id: CnId, sched: &[Option<ScheduledCn>]) -> Candidate {
-        // ready = time the last predecessor (or buffer gate) finished
+    /// Register a CN whose predecessors (and buffer gates) are all
+    /// scheduled as a pool candidate.
+    ///
+    /// `ready` is the time the last predecessor finished; the
+    /// *effective* readiness additionally charges the layer's DRAM
+    /// weight-fetch time when the weights are not resident on its
+    /// allocated core — this keeps CNs of a resident layer running back
+    /// to back and avoids weight thrash when several layers share a
+    /// core.  CNs with a nonzero fetch are watched in the pool's
+    /// per-core bucket so residency changes re-key them.
+    fn add_candidate(
+        &self,
+        id: CnId,
+        sched: &[Option<ScheduledCn>],
+        weights: &[WeightTracker],
+        allocation: &[CoreId],
+        pool: &mut CandidatePool,
+    ) {
         let ready = self
             .graph
             .pred_edges(id)
@@ -403,82 +495,15 @@ impl<'a> Scheduler<'a> {
             .max()
             .unwrap_or(0);
         let cn = self.graph.cns.node(id);
-        Candidate { cn: id, ready, layer: cn.layer, idx: cn.idx }
-    }
-
-    /// Pop the best candidate per the configured priority (Fig. 8),
-    /// with backpressure: when the pool holds candidates whose outputs
-    /// still fit in the pooled activation capacity, only those compete —
-    /// otherwise the deepest ready CN is drained first to free memory.
-    fn pick(
-        &self,
-        pool: &mut Vec<Candidate>,
-        priority: SchedulePriority,
-        act_occ: f64,
-        act_cap: f64,
-        weights: &[WeightTracker],
-        allocation: &[CoreId],
-    ) -> Option<Candidate> {
-        if pool.is_empty() {
-            return None;
-        }
-        let fits = |c: &Candidate| {
-            act_occ + self.graph.cns.node(c.cn).output_bytes as f64 <= act_cap
-        };
-        let any_fits = pool.iter().any(fits);
-
-        // effective readiness: a CN whose layer weights are not resident
-        // on its core cannot start before the DRAM fetch completes, so
-        // rank it by ready + fetch time.  This keeps CNs of a resident
-        // layer running back to back and avoids weight thrash when
-        // several layers share a core.
-        let eff_ready = |c: &Candidate| {
-            let fetch = self.wgt_fetch_cc[c.layer.0];
-            if fetch == 0 || weights[allocation[c.layer.0].0].is_resident(c.layer) {
-                c.ready
-            } else {
-                c.ready + fetch
-            }
-        };
-
-        let best = if !any_fits {
-            // memory full: drain the deepest ready CN (its discards free
-            // the most upstream data)
-            pool.iter()
-                .enumerate()
-                .max_by_key(|(_, c)| (c.layer.0, std::cmp::Reverse(c.idx)))
-                .map(|(i, _)| i)
-                .unwrap()
+        let core = allocation[cn.layer.0];
+        let fetch = self.wgt_fetch_cc[cn.layer.0];
+        let eff = if fetch == 0 || weights[core.0].is_resident(cn.layer) {
+            ready
         } else {
-            match priority {
-                SchedulePriority::Latency => pool
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, c)| fits(c))
-                    .min_by_key(|(_, c)| (eff_ready(c), c.layer.0, c.idx))
-                    .map(|(i, _)| i)
-                    .unwrap(),
-                SchedulePriority::Memory => pool
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, c)| fits(c))
-                    .max_by_key(|(_, c)| {
-                        (c.layer.0, std::cmp::Reverse(c.idx), std::cmp::Reverse(c.ready))
-                    })
-                    .map(|(i, _)| i)
-                    .unwrap(),
-            }
+            ready + fetch
         };
-        Some(pool.swap_remove(best))
+        pool.insert(id, cn.layer, cn.idx, ready, eff, cn.output_bytes, core.0, fetch > 0);
     }
-}
-
-#[derive(Debug, Clone, Copy)]
-struct Candidate {
-    cn: CnId,
-    ready: u64,
-    layer: LayerId,
-    idx: usize,
 }
 
 fn p_layer(graph: &CnGraph, cn: CnId) -> LayerId {
@@ -666,6 +691,44 @@ mod tests {
             r.drams.iter().filter(|d| d.kind == DramKind::WeightFetch).count();
         // 3 conv layers with weights, all fit -> exactly 3 fetches
         assert_eq!(n_weight_fetches, 3);
+    }
+
+    /// The heap-backed candidate pool must reproduce the seed's linear
+    /// scan bit-for-bit: same placements, same metrics, across
+    /// granularities, allocations and priorities.
+    #[test]
+    fn heap_pool_matches_reference_scan() {
+        for gran in [CnGranularity::LayerByLayer, CnGranularity::Lines(2), CnGranularity::Lines(4)]
+        {
+            let (w, g, costs, arch) = setup(gran);
+            let simd = arch.simd_core().unwrap();
+            let allocs: Vec<Vec<CoreId>> = vec![
+                simd_alloc(&w, &arch, CoreId(0)),
+                simd_alloc(&w, &arch, CoreId(1)),
+                // alternate dense layers across cores (cross-core comms)
+                w.layers()
+                    .iter()
+                    .map(|l| if l.op.is_dense() { CoreId(l.id.0 % 2) } else { simd })
+                    .collect(),
+            ];
+            let sched = Scheduler::new(&w, &g, &costs, &arch);
+            for alloc in &allocs {
+                for pr in [SchedulePriority::Latency, SchedulePriority::Memory] {
+                    let a = sched.run(alloc, pr);
+                    let b = sched.run_reference(alloc, pr);
+                    assert_eq!(a.metrics.latency_cc, b.metrics.latency_cc);
+                    assert_eq!(a.metrics.energy_pj.to_bits(), b.metrics.energy_pj.to_bits());
+                    assert_eq!(
+                        a.metrics.peak_mem_bytes.to_bits(),
+                        b.metrics.peak_mem_bytes.to_bits()
+                    );
+                    assert_eq!(a.cns.len(), b.cns.len());
+                    for (x, y) in a.cns.iter().zip(&b.cns) {
+                        assert_eq!((x.cn, x.core, x.start, x.end), (y.cn, y.core, y.start, y.end));
+                    }
+                }
+            }
+        }
     }
 
     #[test]

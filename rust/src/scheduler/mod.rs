@@ -17,6 +17,14 @@
 //! all scheduled and picks the next one by the configured priority
 //! (Fig. 8): **latency** — the candidate whose predecessors finished
 //! earliest; **memory** — the candidate from the deepest layer.
+//! Selection is O(log n) per pick: the pool keeps lazily-invalidated
+//! binary heaps per priority order plus per-core ready buckets that are
+//! re-keyed when a core's weight residency changes (see [`Scheduler`]
+//! and the internal `pool` module).  [`Scheduler::run`] takes `&self`,
+//! and all per-run mutable state ([`resources::Bus`],
+//! [`resources::DramPort`], [`resources::WeightTracker`], the pool) is
+//! local to the call, so one prebuilt scheduler can serve any number of
+//! GA fitness workers concurrently.
 //!
 //! Step 5.2: once start/end times are known, activation memory usage is
 //! traced from the CNs' discardable-input / generated-output attributes
@@ -24,6 +32,7 @@
 
 mod engine;
 pub mod memtrace;
+mod pool;
 pub mod resources;
 
 pub use engine::{schedule, ScheduledCn, Scheduler};

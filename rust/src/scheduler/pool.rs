@@ -1,0 +1,415 @@
+//! The scheduler's candidate pool: O(log n) selection via lazy binary
+//! heaps plus per-core ready buckets.
+//!
+//! The seed implementation kept ready CNs in a flat `Vec` and ran an
+//! O(n) scan per pick — O(n²) per schedule, the dominant cost once the
+//! GA multiplies it by population × generations.  This pool keeps three
+//! heaps over the same candidates, all with **lazy invalidation**
+//! (entries are validated against the slot table when popped, never
+//! removed eagerly):
+//!
+//! - `lat` — min-heap on `(effective_ready, layer, idx)`, the
+//!   [`SchedulePriority::Latency`] order.  *Effective* readiness adds
+//!   the layer's DRAM weight-fetch time when its weights are not
+//!   resident on its core; residency changes re-key affected entries
+//!   (see below), so a popped entry is discarded as stale when its
+//!   stored key no longer matches the slot's current value.
+//! - `depth` — max-heap on `(layer, -idx)`, the
+//!   [`SchedulePriority::Memory`] order and the drain order used by
+//!   both priorities when no candidate's output fits in the pooled
+//!   activation capacity.
+//! - `minout` — min-heap on `output_bytes`, giving the O(log n)
+//!   "does *anything* still fit" feasibility test that the seed
+//!   answered with a full scan.
+//!
+//! **Per-core ready buckets** (`by_core`) index the pooled CNs with a
+//! nonzero weight fetch by their allocated core.  When a weight fetch
+//! on core *c* changes residency (the fetched layer becomes resident,
+//! FIFO-evicted layers stop being resident), the scheduler calls
+//! [`CandidatePool::rekey_core`] and only bucket *c* is re-keyed —
+//! stale heap entries are left behind and dropped lazily on pop.
+//!
+//! Every candidate always owns at least one heap entry carrying its
+//! *current* key (insert pushes one; every re-key pushes one), so the
+//! first popped entry that matches its slot is the true optimum; keys
+//! are unique because `(layer, idx)` identifies a CN.  This makes the
+//! heap path pick-for-pick identical to the linear reference scan
+//! ([`CandidatePool::pop_linear`], kept for the equivalence tests and
+//! the `hotpath` bench baseline).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::cn::CnId;
+use crate::scheduler::SchedulePriority;
+use crate::workload::LayerId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    /// Not (yet) a candidate: predecessors pending, slot unused.
+    Out,
+    /// In the pool, selectable.
+    In,
+    /// Picked and scheduled; heap leftovers are stale.
+    Done,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    ready: u64,
+    /// ready + weight-fetch time when the layer's weights are not
+    /// resident on its core; kept current by [`CandidatePool::rekey_core`].
+    eff: u64,
+    out_bytes: u64,
+    layer: usize,
+    idx: usize,
+    state: State,
+}
+
+const EMPTY_SLOT: Slot =
+    Slot { ready: 0, eff: 0, out_bytes: 0, layer: 0, idx: 0, state: State::Out };
+
+/// See the [module docs](self).
+pub(crate) struct CandidatePool {
+    lat: BinaryHeap<Reverse<(u64, usize, usize, usize)>>, // (eff, layer, idx, cn)
+    depth: BinaryHeap<(usize, Reverse<usize>, usize)>,    // (layer, -idx, cn)
+    minout: BinaryHeap<Reverse<(u64, usize)>>,            // (out_bytes, cn)
+    slots: Vec<Slot>,
+    by_core: Vec<Vec<usize>>,
+    len: usize,
+}
+
+impl CandidatePool {
+    pub fn new(n_cns: usize, n_cores: usize) -> CandidatePool {
+        CandidatePool {
+            lat: BinaryHeap::with_capacity(n_cns),
+            depth: BinaryHeap::with_capacity(n_cns),
+            minout: BinaryHeap::with_capacity(n_cns),
+            slots: vec![EMPTY_SLOT; n_cns],
+            by_core: vec![Vec::new(); n_cores],
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Add a CN whose predecessors are all scheduled.  `watch_core` is
+    /// set for CNs with a nonzero weight fetch: their effective
+    /// readiness depends on the weight residency of `core`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn insert(
+        &mut self,
+        cn: CnId,
+        layer: LayerId,
+        idx: usize,
+        ready: u64,
+        eff: u64,
+        out_bytes: u64,
+        core: usize,
+        watch_core: bool,
+    ) {
+        let i = cn.0;
+        debug_assert_eq!(self.slots[i].state, State::Out, "CN inserted twice");
+        self.slots[i] =
+            Slot { ready, eff, out_bytes, layer: layer.0, idx, state: State::In };
+        self.lat.push(Reverse((eff, layer.0, idx, i)));
+        self.depth.push((layer.0, Reverse(idx), i));
+        self.minout.push(Reverse((out_bytes, i)));
+        if watch_core {
+            self.by_core[core].push(i);
+        }
+        self.len += 1;
+    }
+
+    fn fits(&self, cn: usize, act_occ: f64, act_cap: f64) -> bool {
+        act_occ + self.slots[cn].out_bytes as f64 <= act_cap
+    }
+
+    /// O(log n) feasibility: does any pooled CN's output still fit in
+    /// the activation capacity?  (Pops stale `minout` leftovers.)
+    fn any_fits(&mut self, act_occ: f64, act_cap: f64) -> bool {
+        while let Some(&Reverse((out, cn))) = self.minout.peek() {
+            if self.slots[cn].state == State::In {
+                return act_occ + out as f64 <= act_cap;
+            }
+            self.minout.pop();
+        }
+        false
+    }
+
+    fn take(&mut self, cn: usize) -> CnId {
+        self.slots[cn].state = State::Done;
+        self.len -= 1;
+        CnId(cn)
+    }
+
+    /// Deepest-layer, smallest-idx candidate — the drain order under
+    /// memory pressure and the base order of the Memory priority.  When
+    /// `respect_fit` is set, non-fitting candidates are skipped (and
+    /// restored afterwards).
+    fn pop_deepest(&mut self, act_occ: f64, act_cap: f64, respect_fit: bool) -> CnId {
+        let mut stash: Vec<(usize, Reverse<usize>, usize)> = Vec::new();
+        let picked = loop {
+            let e = self.depth.pop().expect("pool not empty");
+            let cn = e.2;
+            if self.slots[cn].state != State::In {
+                continue; // stale leftover of an already-picked CN
+            }
+            if respect_fit && !self.fits(cn, act_occ, act_cap) {
+                stash.push(e);
+                continue;
+            }
+            break cn;
+        };
+        self.depth.extend(stash);
+        self.take(picked)
+    }
+
+    /// Pop under [`SchedulePriority::Memory`]: the deepest ready CN
+    /// whose output fits, or — when nothing fits — the deepest ready CN
+    /// outright (its discards free the most upstream data).
+    pub fn pop_memory(&mut self, act_occ: f64, act_cap: f64) -> Option<CnId> {
+        if self.len() == 0 {
+            return None;
+        }
+        let respect_fit = self.any_fits(act_occ, act_cap);
+        Some(self.pop_deepest(act_occ, act_cap, respect_fit))
+    }
+
+    /// Pop under [`SchedulePriority::Latency`]: minimum effective
+    /// readiness among fitting candidates; same memory-full drain as
+    /// the Memory priority otherwise.
+    pub fn pop_latency(&mut self, act_occ: f64, act_cap: f64) -> Option<CnId> {
+        if self.len() == 0 {
+            return None;
+        }
+        if !self.any_fits(act_occ, act_cap) {
+            return Some(self.pop_deepest(act_occ, act_cap, false));
+        }
+        let mut stash: Vec<Reverse<(u64, usize, usize, usize)>> = Vec::new();
+        let picked = loop {
+            let e = self.lat.pop().expect("a fitting candidate exists");
+            let Reverse((eff, _, _, cn)) = e;
+            if self.slots[cn].state != State::In || eff != self.slots[cn].eff {
+                continue; // taken, or re-keyed since this entry was pushed
+            }
+            if !self.fits(cn, act_occ, act_cap) {
+                stash.push(e);
+                continue;
+            }
+            break cn;
+        };
+        self.lat.extend(stash);
+        Some(self.take(picked))
+    }
+
+    /// Weight residency on `core` changed: re-key the effective
+    /// readiness of that core's bucket.  `extra_of(layer)` returns
+    /// `Some(extra_cycles)` for layers whose residency changed (0 when
+    /// the layer just became resident, its DRAM fetch time when it was
+    /// just evicted) and `None` for unaffected layers.
+    pub fn rekey_core<F: Fn(LayerId) -> Option<u64>>(&mut self, core: usize, extra_of: F) {
+        let mut bucket = std::mem::take(&mut self.by_core[core]);
+        bucket.retain(|&cn| self.slots[cn].state == State::In);
+        for &cn in &bucket {
+            if let Some(extra) = extra_of(LayerId(self.slots[cn].layer)) {
+                let new_eff = self.slots[cn].ready + extra;
+                if new_eff != self.slots[cn].eff {
+                    self.slots[cn].eff = new_eff;
+                    self.lat.push(Reverse((
+                        new_eff,
+                        self.slots[cn].layer,
+                        self.slots[cn].idx,
+                        cn,
+                    )));
+                }
+            }
+        }
+        self.by_core[core] = bucket;
+    }
+
+    /// The seed's O(n) scan, byte-for-byte the same selection rule —
+    /// kept as the reference implementation for the heap-equivalence
+    /// tests and the `hotpath` bench baseline.
+    pub fn pop_linear(
+        &mut self,
+        priority: SchedulePriority,
+        act_occ: f64,
+        act_cap: f64,
+    ) -> Option<CnId> {
+        if self.len() == 0 {
+            return None;
+        }
+        let pooled: Vec<usize> = (0..self.slots.len())
+            .filter(|&i| self.slots[i].state == State::In)
+            .collect();
+        let any_fits = pooled.iter().any(|&i| self.fits(i, act_occ, act_cap));
+        let best = if !any_fits {
+            *pooled
+                .iter()
+                .max_by_key(|&&i| (self.slots[i].layer, Reverse(self.slots[i].idx)))
+                .unwrap()
+        } else {
+            match priority {
+                SchedulePriority::Latency => *pooled
+                    .iter()
+                    .filter(|&&i| self.fits(i, act_occ, act_cap))
+                    .min_by_key(|&&i| {
+                        (self.slots[i].eff, self.slots[i].layer, self.slots[i].idx)
+                    })
+                    .unwrap(),
+                SchedulePriority::Memory => *pooled
+                    .iter()
+                    .filter(|&&i| self.fits(i, act_occ, act_cap))
+                    .max_by_key(|&&i| {
+                        (
+                            self.slots[i].layer,
+                            Reverse(self.slots[i].idx),
+                            Reverse(self.slots[i].ready),
+                        )
+                    })
+                    .unwrap(),
+            }
+        };
+        Some(self.take(best))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64;
+
+    fn pool_with(cands: &[(usize, usize, u64, u64)]) -> CandidatePool {
+        // (layer, idx, ready/eff, out_bytes); no weight-fetch watching
+        let mut p = CandidatePool::new(cands.len(), 2);
+        for (i, &(layer, idx, ready, out)) in cands.iter().enumerate() {
+            p.insert(CnId(i), LayerId(layer), idx, ready, ready, out, 0, false);
+        }
+        p
+    }
+
+    #[test]
+    fn memory_priority_pops_deepest_first() {
+        let mut p = pool_with(&[(0, 0, 5, 1), (1, 3, 9, 1), (1, 1, 7, 1), (2, 0, 8, 1)]);
+        let order: Vec<usize> = std::iter::from_fn(|| p.pop_memory(0.0, 1e9)).map(|c| c.0).collect();
+        // deepest layer first; within a layer, smallest idx first
+        assert_eq!(order, vec![3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn latency_priority_pops_earliest_ready() {
+        let mut p = pool_with(&[(0, 0, 5, 1), (1, 0, 3, 1), (2, 0, 4, 1), (3, 0, 3, 1)]);
+        let order: Vec<usize> = std::iter::from_fn(|| p.pop_latency(0.0, 1e9)).map(|c| c.0).collect();
+        // eff 3 (layer 1) before eff 3 (layer 3): layer breaks the tie
+        assert_eq!(order, vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn memory_full_drains_deepest() {
+        // nothing fits: capacity 10, occupancy 8, outputs 4
+        let mut p = pool_with(&[(0, 0, 1, 4), (2, 1, 9, 4), (2, 0, 9, 4)]);
+        assert_eq!(p.pop_latency(8.0, 10.0).unwrap().0, 2);
+        // with room, the earliest-ready shallow CN wins again
+        assert_eq!(p.pop_latency(0.0, 10.0).unwrap().0, 0);
+    }
+
+    #[test]
+    fn fitting_filter_skips_large_outputs() {
+        // CN 0 ready first but too large; CN 1 fits
+        let mut p = pool_with(&[(0, 0, 1, 100), (0, 1, 2, 1)]);
+        assert_eq!(p.pop_latency(5.0, 10.0).unwrap().0, 1);
+        // stash restored: CN 0 still poppable once occupancy drops
+        assert_eq!(p.pop_latency(0.0, 200.0).unwrap().0, 0);
+        assert!(p.pop_latency(0.0, 200.0).is_none());
+    }
+
+    #[test]
+    fn rekey_core_changes_latency_order() {
+        let mut p = CandidatePool::new(2, 2);
+        // CN 0: ready 0 but weights not resident -> eff 100, watched on core 1
+        p.insert(CnId(0), LayerId(0), 0, 0, 100, 1, 1, true);
+        // CN 1: ready 10, resident
+        p.insert(CnId(1), LayerId(1), 0, 10, 10, 1, 0, false);
+        // before the event, CN 1 wins; then layer 0 becomes resident on core 1
+        p.rekey_core(1, |l| if l == LayerId(0) { Some(0) } else { None });
+        assert_eq!(p.pop_latency(0.0, 1e9).unwrap().0, 0);
+        assert_eq!(p.pop_latency(0.0, 1e9).unwrap().0, 1);
+    }
+
+    #[test]
+    fn rekey_eviction_pushes_candidate_back() {
+        let mut p = CandidatePool::new(2, 1);
+        // both resident initially
+        p.insert(CnId(0), LayerId(0), 0, 5, 5, 1, 0, true);
+        p.insert(CnId(1), LayerId(1), 0, 6, 6, 1, 0, true);
+        // layer 0 evicted: its fetch costs 50 cycles
+        p.rekey_core(0, |l| if l == LayerId(0) { Some(50) } else { None });
+        assert_eq!(p.pop_latency(0.0, 1e9).unwrap().0, 1);
+        assert_eq!(p.pop_latency(0.0, 1e9).unwrap().0, 0);
+    }
+
+    /// The load-bearing test: the heap path and the seed's linear scan
+    /// agree pick-for-pick under randomized candidates, occupancies and
+    /// residency re-key events, for both priorities.
+    #[test]
+    fn heap_matches_linear_reference_fuzz() {
+        for priority in [SchedulePriority::Latency, SchedulePriority::Memory] {
+            let mut rng = XorShift64::new(0xC0FFEE);
+            for round in 0..200 {
+                let n = 2 + (rng.below(30) as usize);
+                let n_layers = 1 + (rng.below(6) as usize);
+                // unique (layer, idx) pairs; random ready/eff/out
+                let mut idx_in_layer = vec![0usize; n_layers];
+                let cands: Vec<(usize, usize, u64, u64, u64, bool)> = (0..n)
+                    .map(|_| {
+                        let layer = rng.below(n_layers as u64) as usize;
+                        let idx = idx_in_layer[layer];
+                        idx_in_layer[layer] += 1;
+                        let ready = rng.below(100);
+                        let fetch = if rng.unit() < 0.5 { rng.below(40) + 1 } else { 0 };
+                        let out = rng.below(50) + 1;
+                        (layer, idx, ready, ready + fetch, out, fetch > 0)
+                    })
+                    .collect();
+
+                let build = || {
+                    let mut p = CandidatePool::new(n, 2);
+                    for (i, &(layer, idx, ready, eff, out, watch)) in cands.iter().enumerate()
+                    {
+                        p.insert(CnId(i), LayerId(layer), idx, ready, eff, out, i % 2, watch);
+                    }
+                    p
+                };
+                let mut heap = build();
+                let mut linear = build();
+
+                let cap = 30.0 + rng.below(60) as f64;
+                let mut occ = 0.0f64;
+                let mut events = XorShift64::new(round + 1);
+                for _ in 0..n {
+                    // occasionally flip residency of a random layer on a
+                    // random core (same event applied to both pools)
+                    if events.unit() < 0.4 {
+                        let layer = LayerId(events.below(n_layers as u64) as usize);
+                        let core = events.below(2) as usize;
+                        let extra = events.below(60);
+                        let f = |l: LayerId| if l == layer { Some(extra) } else { None };
+                        heap.rekey_core(core, f);
+                        linear.rekey_core(core, f);
+                    }
+                    let a = match priority {
+                        SchedulePriority::Latency => heap.pop_latency(occ, cap),
+                        SchedulePriority::Memory => heap.pop_memory(occ, cap),
+                    };
+                    let b = linear.pop_linear(priority, occ, cap);
+                    assert_eq!(a, b, "round {round}, occ {occ}, cap {cap}");
+                    occ = (occ + events.below(25) as f64 - 10.0).max(0.0);
+                }
+                assert!(heap.pop_linear(priority, occ, cap).is_none());
+            }
+        }
+    }
+}

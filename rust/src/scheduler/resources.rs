@@ -11,7 +11,13 @@ use crate::workload::LayerId;
 /// single shared resource, so a transfer starts at
 /// `max(data_ready, bus_free)` and occupies the bus for
 /// `ceil(bytes * 8 / bandwidth)` cycles.
-#[derive(Debug)]
+///
+/// All resource models ([`Bus`], [`DramPort`], [`WeightTracker`]) are
+/// plain-data and `Clone`: `Scheduler::run` builds a fresh set per
+/// call, so concurrent per-genome simulations share nothing mutable —
+/// `Clone` additionally lets callers snapshot/fork resource state
+/// (e.g. for what-if probes) without reconstructing it.
+#[derive(Debug, Clone)]
 pub struct Bus {
     bw_bits: u64,
     free_at: u64,
@@ -42,7 +48,7 @@ impl Bus {
 }
 
 /// Shared DRAM port, same FCFS semantics as the bus.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct DramPort {
     bw_bits: u64,
     free_at: u64,
@@ -71,7 +77,7 @@ impl DramPort {
 /// Weights are kept per layer; when a CN of a layer whose weights are
 /// not resident is scheduled, the fetch is charged and older layers'
 /// weights are evicted first-in-first-out until the new set fits.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct WeightTracker {
     capacity: u64,
     used: u64,
@@ -107,6 +113,21 @@ impl WeightTracker {
     /// III-E2: the fetch node is inserted when the weights are not
     /// on-chip; afterwards they are).
     pub fn require(&mut self, layer: LayerId, bytes: u64) -> u64 {
+        let mut evicted = Vec::new();
+        self.require_evicting(layer, bytes, &mut evicted)
+    }
+
+    /// Like [`require`](Self::require), but records which layers were
+    /// FIFO-evicted into `evicted` (cleared first).  The scheduler uses
+    /// the list to re-key the effective readiness of candidate CNs
+    /// whose weights just left (or entered) this core's memory.
+    pub fn require_evicting(
+        &mut self,
+        layer: LayerId,
+        bytes: u64,
+        evicted: &mut Vec<LayerId>,
+    ) -> u64 {
+        evicted.clear();
         if bytes == 0 || self.is_resident(layer) {
             return 0;
         }
@@ -115,9 +136,10 @@ impl WeightTracker {
         let occupancy = bytes.min(self.capacity);
         while self.used + occupancy > self.capacity {
             match self.resident.pop_front() {
-                Some((_, evicted)) => {
-                    self.used -= evicted;
+                Some((l, freed)) => {
+                    self.used -= freed;
                     self.evictions += 1;
+                    evicted.push(l);
                 }
                 None => break,
             }
@@ -186,6 +208,22 @@ mod tests {
         // consecutive CNs of the same layer hit
         assert_eq!(w.require(LayerId(0), 500), 0);
         assert_eq!(w.fetches, 2);
+    }
+
+    #[test]
+    fn require_evicting_reports_victims() {
+        let mut w = WeightTracker::new(100);
+        let mut evicted = Vec::new();
+        assert_eq!(w.require_evicting(LayerId(0), 60, &mut evicted), 60);
+        assert!(evicted.is_empty());
+        assert_eq!(w.require_evicting(LayerId(1), 30, &mut evicted), 30);
+        assert!(evicted.is_empty());
+        // needs 90 -> evicts L0 then L1
+        assert_eq!(w.require_evicting(LayerId(2), 90, &mut evicted), 90);
+        assert_eq!(evicted, vec![LayerId(0), LayerId(1)]);
+        // a hit clears the list and evicts nothing
+        assert_eq!(w.require_evicting(LayerId(2), 90, &mut evicted), 0);
+        assert!(evicted.is_empty());
     }
 
     #[test]

@@ -3,12 +3,13 @@
 //! offline build environment (DESIGN.md §Substitutions).
 
 pub mod bench;
+pub mod error;
 pub mod json;
 pub mod par;
 
 pub use bench::{bench, BenchStats};
 pub use json::Json;
-pub use par::{parallel_map, parallel_map_with};
+pub use par::{parallel_map, parallel_map_with, thread_count};
 
 /// Deterministic xorshift64* RNG for tests/benches that must not depend
 /// on the `rand` crate's version-specific streams.

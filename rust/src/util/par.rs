@@ -1,16 +1,49 @@
 //! Scoped-thread parallel map (offline substitute for rayon) used by
 //! the GA fitness evaluation and the exploration sweep.
+//!
+//! The worker count is the **parallelism knob** of the whole crate:
+//! every data-parallel loop funnels through [`parallel_map`] /
+//! [`parallel_map_with`], and the default count comes from
+//! [`thread_count`] — `STREAM_THREADS` in the environment when set,
+//! otherwise `std::thread::available_parallelism()`.  Pass an explicit
+//! count of 1 (e.g. `GaParams { threads: 1, .. }`) for a fully serial
+//! run; results are bit-identical either way because each item's
+//! computation is independent and deterministic and output order is
+//! preserved.
 
-/// Map `f` over `items` on up to `threads` worker threads, preserving
-/// order.  Falls back to sequential for tiny inputs.
+/// Resolve a requested worker count: `requested` when nonzero, else the
+/// `STREAM_THREADS` environment variable when set to a positive
+/// integer, else `std::thread::available_parallelism()` (fallback 4).
+///
+/// # Examples
+///
+/// ```
+/// assert_eq!(stream::util::thread_count(3), 3);
+/// assert!(stream::util::thread_count(0) >= 1);
+/// ```
+pub fn thread_count(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    if let Ok(v) = std::env::var("STREAM_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Map `f` over `items` on up to [`thread_count`]`(0)` worker threads,
+/// preserving order.  Falls back to sequential for tiny inputs.
 pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
 where
     T: Send,
     R: Send,
     F: Fn(T) -> R + Sync,
 {
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    parallel_map_with(items, f, threads)
+    parallel_map_with(items, f, thread_count(0))
 }
 
 /// Same with an explicit worker count.

@@ -1,0 +1,169 @@
+//! Regression tests for the parallel + memoized allocation engine:
+//! the parallel fitness path and the schedule-cost memo must produce
+//! **bit-identical** `ScheduleMetrics` to the serial path, for both
+//! scheduler priorities, on the 4-core heterogeneous preset.
+//!
+//! Floating-point metrics are compared via `to_bits()` — "close enough"
+//! would hide nondeterministic evaluation orders.
+
+use stream::allocator::{allocation_from_genome, Ga, GaParams, GaResult, Objective};
+use stream::arch::presets;
+use stream::cn::{CnGranularity, CnSet};
+use stream::cost::{ScheduleCache, ScheduleMetrics};
+use stream::depgraph::generate;
+use stream::mapping::CostModel;
+use stream::scheduler::{SchedulePriority, Scheduler};
+use stream::workload::models::{tiny_branchy, tiny_segment};
+use stream::workload::WorkloadGraph;
+
+fn assert_metrics_bit_equal(a: &ScheduleMetrics, b: &ScheduleMetrics, what: &str) {
+    assert_eq!(a.latency_cc, b.latency_cc, "{what}: latency");
+    assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits(), "{what}: energy");
+    assert_eq!(a.peak_mem_bytes.to_bits(), b.peak_mem_bytes.to_bits(), "{what}: peak mem");
+    assert_eq!(a.avg_core_util.to_bits(), b.avg_core_util.to_bits(), "{what}: util");
+    assert_eq!(a.breakdown.mac_pj.to_bits(), b.breakdown.mac_pj.to_bits(), "{what}: mac");
+    assert_eq!(a.breakdown.bus_pj.to_bits(), b.breakdown.bus_pj.to_bits(), "{what}: bus");
+    assert_eq!(a.breakdown.dram_pj.to_bits(), b.breakdown.dram_pj.to_bits(), "{what}: dram");
+    assert_eq!(
+        a.breakdown.onchip_pj.to_bits(),
+        b.breakdown.onchip_pj.to_bits(),
+        "{what}: onchip"
+    );
+}
+
+fn assert_fronts_bit_equal(a: &[GaResult], b: &[GaResult], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: front size");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.genome, y.genome, "{what}: genome");
+        assert_eq!(x.allocation, y.allocation, "{what}: allocation");
+        assert_metrics_bit_equal(&x.metrics, &y.metrics, what);
+    }
+}
+
+struct Fixture {
+    w: WorkloadGraph,
+    arch: stream::arch::Accelerator,
+    graph: stream::depgraph::CnGraph,
+    costs: CostModel,
+}
+
+fn fixture(w: WorkloadGraph) -> Fixture {
+    // hetero_quad is the 4-core preset (3 heterogeneous dense cores +
+    // 1 SIMD core), the architecture of paper Fig. 12
+    let arch = presets::hetero_quad();
+    let gran = CnGranularity::Lines(4);
+    let cns = CnSet::build(&w, gran);
+    let costs = CostModel::build(&w, &cns, &arch);
+    let graph = generate(&w, CnSet::build(&w, gran));
+    Fixture { w, arch, graph, costs }
+}
+
+fn ga_front(f: &Fixture, priority: SchedulePriority, threads: usize, seed: u64) -> Vec<GaResult> {
+    let sched = Scheduler::new(&f.w, &f.graph, &f.costs, &f.arch);
+    let params = GaParams {
+        population: 12,
+        generations: 6,
+        threads,
+        seed,
+        ..Default::default()
+    };
+    let mut ga = Ga::new(&f.w, &f.arch, &sched, priority, Objective::LatencyMemory, params);
+    ga.run()
+}
+
+#[test]
+fn parallel_ga_matches_serial_latency_priority() {
+    let f = fixture(tiny_segment());
+    let serial = ga_front(&f, SchedulePriority::Latency, 1, 42);
+    let parallel = ga_front(&f, SchedulePriority::Latency, 4, 42);
+    assert_fronts_bit_equal(&serial, &parallel, "latency priority");
+}
+
+#[test]
+fn parallel_ga_matches_serial_memory_priority() {
+    let f = fixture(tiny_segment());
+    let serial = ga_front(&f, SchedulePriority::Memory, 1, 42);
+    let parallel = ga_front(&f, SchedulePriority::Memory, 4, 42);
+    assert_fronts_bit_equal(&serial, &parallel, "memory priority");
+}
+
+#[test]
+fn parallel_ga_matches_serial_branchy_workload() {
+    let f = fixture(tiny_branchy());
+    for priority in [SchedulePriority::Latency, SchedulePriority::Memory] {
+        let serial = ga_front(&f, priority, 1, 7);
+        let parallel = ga_front(&f, priority, 8, 7);
+        assert_fronts_bit_equal(&serial, &parallel, "branchy");
+    }
+}
+
+#[test]
+fn memoized_rerun_matches_cold_run_and_hits_cache() {
+    let f = fixture(tiny_segment());
+    let sched = Scheduler::new(&f.w, &f.graph, &f.costs, &f.arch);
+    for priority in [SchedulePriority::Latency, SchedulePriority::Memory] {
+        let params = GaParams { population: 10, generations: 4, ..Default::default() };
+        let cold = {
+            let mut ga =
+                Ga::new(&f.w, &f.arch, &sched, priority, Objective::LatencyMemory, params);
+            ga.run()
+        };
+        let cache = ScheduleCache::new();
+        let warm_once = {
+            let mut ga =
+                Ga::new(&f.w, &f.arch, &sched, priority, Objective::LatencyMemory, params)
+                    .with_cache(&cache);
+            ga.run()
+        };
+        let misses_after_first = cache.misses();
+        let warm_twice = {
+            let mut ga =
+                Ga::new(&f.w, &f.arch, &sched, priority, Objective::LatencyMemory, params)
+                    .with_cache(&cache);
+            ga.run()
+        };
+        assert_fronts_bit_equal(&cold, &warm_once, "cold vs first cached");
+        assert_fronts_bit_equal(&cold, &warm_twice, "cold vs memoized rerun");
+        assert_eq!(cache.misses(), misses_after_first, "rerun must be all cache hits");
+        assert!(cache.hits() > 0);
+    }
+}
+
+#[test]
+fn cached_metrics_match_direct_scheduler_run() {
+    // the memo layer itself must be transparent: get_or_compute
+    // returns exactly what the scheduler computes
+    let f = fixture(tiny_segment());
+    let sched = Scheduler::new(&f.w, &f.graph, &f.costs, &f.arch);
+    let cache = ScheduleCache::new();
+    for priority in [SchedulePriority::Latency, SchedulePriority::Memory] {
+        for genome in [[0u16, 1, 2], [1, 1, 1], [2, 0, 1]] {
+            let alloc = allocation_from_genome(&f.w, &f.arch, &genome);
+            let direct = sched.run(&alloc, priority).metrics;
+            let via_cache =
+                cache.get_or_compute(&alloc, priority, || sched.run(&alloc, priority).metrics);
+            assert_metrics_bit_equal(&direct, &via_cache, "memo transparency (miss)");
+            let hit = cache.get(&alloc, priority).expect("cached");
+            assert_metrics_bit_equal(&direct, &hit, "memo transparency (hit)");
+        }
+    }
+}
+
+#[test]
+fn scheduler_is_shareable_across_threads() {
+    // the property the parallel fitness path relies on: one prebuilt
+    // &Scheduler, many concurrent run() calls, all bit-identical
+    let f = fixture(tiny_segment());
+    let sched = Scheduler::new(&f.w, &f.graph, &f.costs, &f.arch);
+    let alloc = allocation_from_genome(&f.w, &f.arch, &[0, 1, 2]);
+    let baseline = sched.run(&alloc, SchedulePriority::Latency).metrics;
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let (sched, alloc, baseline) = (&sched, &alloc, &baseline);
+            s.spawn(move || {
+                let m = sched.run(alloc, SchedulePriority::Latency).metrics;
+                assert_metrics_bit_equal(&m, baseline, "concurrent run");
+            });
+        }
+    });
+}
