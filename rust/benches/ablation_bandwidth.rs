@@ -10,7 +10,7 @@
 //! ```
 
 use stream::allocator::GaParams;
-use stream::arch::presets;
+use stream::arch::{presets, Topology};
 use stream::cn::CnGranularity;
 use stream::pipeline::{Stream, StreamOpts};
 use stream::workload::models;
@@ -19,10 +19,14 @@ fn main() {
     println!("=== ablation: bus / DRAM bandwidth (ResNet-18, MC:Hetero, fused) ===\n");
     let ga = GaParams { population: 12, generations: 6, ..Default::default() };
 
-    println!("{:>14} {:>12} {:>12} {:>12}", "bus(bit/cc)", "latency(cc)", "bus(uJ)", "EDP");
+    println!("{:>14} {:>12} {:>12} {:>12}", "bus(bit/cc)", "latency(cc)", "noc(uJ)", "EDP");
     for bus_bw in [16u64, 32, 64, 128, 256, 512] {
-        let mut arch = presets::hetero_quad();
-        arch.bus_bw_bits = bus_bw;
+        let arch = presets::hetero_quad();
+        let n = arch.cores.len();
+        // inherit everything but the swept scalar from the preset
+        let (_, bus_pj, dram_bw, dram_pj) = arch.topology.as_shared_bus().unwrap();
+        let arch =
+            arch.with_topology(Topology::shared_bus(n, bus_bw, bus_pj, dram_bw, dram_pj));
         let s = Stream::new(
             models::resnet18(),
             arch,
@@ -33,7 +37,7 @@ fn main() {
             "{:>14} {:>12} {:>12.3} {:>12.3e}",
             bus_bw,
             m.latency_cc,
-            m.breakdown.bus_pj / 1e6,
+            m.breakdown.noc_pj / 1e6,
             m.edp()
         );
     }
@@ -41,8 +45,11 @@ fn main() {
     println!();
     println!("{:>14} {:>12} {:>12} {:>12}", "dram(bit/cc)", "latency(cc)", "dram(uJ)", "EDP");
     for dram_bw in [16u64, 32, 64, 128, 256] {
-        let mut arch = presets::hetero_quad();
-        arch.dram_bw_bits = dram_bw;
+        let arch = presets::hetero_quad();
+        let n = arch.cores.len();
+        let (bus_bw, bus_pj, _, dram_pj) = arch.topology.as_shared_bus().unwrap();
+        let arch =
+            arch.with_topology(Topology::shared_bus(n, bus_bw, bus_pj, dram_bw, dram_pj));
         let s = Stream::new(
             models::resnet18(),
             arch,

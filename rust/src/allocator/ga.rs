@@ -168,9 +168,11 @@ impl<'a> Ga<'a> {
     }
 
     /// Share a schedule-metrics cache with other GA runs over the same
-    /// (workload, CN graph, cost model, architecture).  The caller must
-    /// guarantee that context is identical — the cache key is only the
-    /// (allocation, priority) pair.
+    /// (workload, CN graph, cost model).  The cache key is the
+    /// (allocation, priority, interconnect-topology fingerprint)
+    /// triple, so runs over different topologies of the same cores may
+    /// share a cache; the caller must still guarantee the workload, CN
+    /// graph and cost model are identical.
     pub fn with_cache(mut self, cache: &'a ScheduleCache) -> Ga<'a> {
         self.cache = CacheRef::Shared(cache);
         self
@@ -226,11 +228,12 @@ impl<'a> Ga<'a> {
             CacheRef::Shared(c) => c,
         };
         let threads = thread_count(self.params.threads);
+        let topo_fp = arch.topology.fingerprint();
         let results: Vec<(Vec<u16>, ScheduleMetrics)> = parallel_map_with(
             jobs,
             |g| {
                 let alloc = allocation_from_genome(workload, arch, &g);
-                let m = cache.get_or_compute(&alloc, priority, || {
+                let m = cache.get_or_compute(&alloc, priority, topo_fp, || {
                     scheduler.run(&alloc, priority).metrics
                 });
                 (g, m)

@@ -1,15 +1,23 @@
 //! Multi-core accelerator architecture model (paper Fig. 2).
 //!
 //! An [`Accelerator`] is a set of [`Core`]s — dense dataflow PE arrays
-//! and an auxiliary SIMD core — connected by a limited-bandwidth
-//! inter-core communication bus and a shared off-chip DRAM port.
+//! and an auxiliary SIMD core — connected by an interconnect
+//! [`Topology`]: a routed graph of bandwidth/energy links between the
+//! cores and one or more off-chip DRAM ports ([`topology`]).  The
+//! classic single-bus + single-DRAM-port model is the
+//! [`Topology::shared_bus`] preset; ring, 2-D mesh and crossbar fabrics
+//! open the chiplet-style region of the design space.
 //! Each core carries its spatial [`Dataflow`] (the unrolled loop dims),
 //! private activation/weight SRAMs and a local port bandwidth.
 //!
 //! [`presets`] defines the seven iso-area exploration architectures of
-//! Fig. 11 and the three validation targets of Fig. 9.
+//! Fig. 11 and the three validation targets of Fig. 9, each with
+//! `@ring` / `@mesh` / `@crossbar` chiplet variants.
 
 pub mod presets;
+pub mod topology;
+
+pub use topology::{Link, LinkId, LinkKind, TopoKind, Topology};
 
 use crate::cacti;
 use crate::workload::Dim;
@@ -130,19 +138,24 @@ impl Core {
 pub struct Accelerator {
     pub name: String,
     pub cores: Vec<Core>,
-    /// Inter-core communication bus bandwidth, bits per cycle.
-    pub bus_bw_bits: u64,
-    /// Bus transfer energy, pJ/bit.
-    pub bus_pj_per_bit: f64,
-    /// Shared off-chip DRAM port bandwidth, bits per cycle.
-    pub dram_bw_bits: u64,
-    /// DRAM access energy, pJ/bit.
-    pub dram_pj_per_bit: f64,
+    /// The interconnect: cores + DRAM ports joined by routed links.
+    pub topology: Topology,
 }
 
 impl Accelerator {
     pub fn core(&self, id: CoreId) -> &Core {
         &self.cores[id.0]
+    }
+
+    /// Swap in a different interconnect (must cover every core).
+    pub fn with_topology(mut self, topology: Topology) -> Accelerator {
+        assert_eq!(
+            topology.n_cores(),
+            self.cores.len(),
+            "topology must describe exactly the accelerator's cores"
+        );
+        self.topology = topology;
+        self
     }
 
     /// Ids of the dense dataflow cores (GA allocation targets).

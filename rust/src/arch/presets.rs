@@ -5,8 +5,14 @@
 //! PEs, 1 MB of on-chip memory spread across its cores, a 128 bit/cc
 //! inter-core bus and a shared 64 bit/cc DRAM port, plus an auxiliary
 //! SIMD core for pooling / residual-add layers.
+//!
+//! Every preset also has **chiplet NoC variants**: `by_name` accepts an
+//! `@<topology>` suffix (`hetero@mesh`, `hom-tpu@ring`,
+//! `sc-tpu@crossbar`, …) that swaps the default shared bus for the
+//! matching routed fabric via [`with_noc`], keeping the cores — and so
+//! the iso-area invariants — untouched.
 
-use super::{Accelerator, Core, CoreId, CoreKind, Dataflow};
+use super::{Accelerator, Core, CoreId, CoreKind, Dataflow, Topology};
 use crate::cacti;
 use crate::workload::Dim;
 
@@ -49,14 +55,14 @@ fn exploration(name: &str, dense: Vec<Core>) -> Accelerator {
     let mut cores = dense;
     let next = cores.len();
     cores.push(simd_core(next, SIMD_BUF));
-    Accelerator {
-        name: name.to_string(),
-        cores,
-        bus_bw_bits: BUS_BW,
-        bus_pj_per_bit: cacti::BUS_PJ_PER_BIT,
-        dram_bw_bits: DRAM_BW,
-        dram_pj_per_bit: cacti::DRAM_PJ_PER_BIT,
-    }
+    let topology = Topology::shared_bus(
+        cores.len(),
+        BUS_BW,
+        cacti::BUS_PJ_PER_BIT,
+        DRAM_BW,
+        cacti::DRAM_PJ_PER_BIT,
+    );
+    Accelerator { name: name.to_string(), cores, topology }
 }
 
 fn split(total: u64) -> (u64, u64) {
@@ -156,8 +162,13 @@ pub fn exploration_archs() -> Vec<Accelerator> {
     vec![sc_tpu(), sc_eye(), sc_env(), hom_tpu(), hom_eye(), hom_env(), hetero_quad()]
 }
 
-/// Look an architecture up by CLI name.
+/// Look an architecture up by CLI name.  An optional `@<topology>`
+/// suffix ([`TOPOLOGY_NAMES`]) swaps the interconnect: `hetero@mesh`,
+/// `hom-tpu@ring`, `sc-tpu@crossbar`, `diana@bus`, ….
 pub fn by_name(name: &str) -> Option<Accelerator> {
+    if let Some((base, noc)) = name.split_once('@') {
+        return with_noc(by_name(base)?, noc);
+    }
     match name {
         "sc-tpu" => Some(sc_tpu()),
         "sc-eye" => Some(sc_eye()),
@@ -177,6 +188,53 @@ pub const ARCH_NAMES: &[&str] = &[
     "sc-tpu", "sc-eye", "sc-env", "hom-tpu", "hom-eye", "hom-env", "hetero",
     "depfin", "aimc-4x4", "diana",
 ];
+
+/// Interconnect suffixes accepted by [`by_name`]'s `arch@topology` form
+/// and by [`with_noc`].
+pub const TOPOLOGY_NAMES: &[&str] = &["bus", "ring", "mesh", "crossbar"];
+
+/// Replace an accelerator's interconnect with a chiplet-style NoC
+/// preset, keeping the cores (and thus the iso-area invariants)
+/// untouched.  Link widths inherit the arch's shared-bus parameters
+/// (fall back to the exploration defaults for non-bus sources):
+///
+/// - `"bus"` — the shared bus + single DRAM channel (identity for the
+///   built-in presets);
+/// - `"ring"` — bidirectional ring at the bus width per link, one DRAM
+///   port at ring position 0, [`cacti::NOC_HOP_PJ_PER_BIT`] per hop;
+/// - `"mesh"` (alias `"mesh2d"`) — XY-routed `~sqrt(n)`-column 2-D
+///   mesh, **two** DRAM ports at opposite corners with the bus-model
+///   port width each;
+/// - `"crossbar"` (alias `"xbar"`) — non-blocking crossbar with
+///   per-core port links at the bus width.
+pub fn with_noc(arch: Accelerator, noc: &str) -> Option<Accelerator> {
+    let n = arch.cores.len();
+    let (bus_bw, bus_pj, dram_bw, dram_pj) = arch
+        .topology
+        .as_shared_bus()
+        .unwrap_or((BUS_BW, cacti::BUS_PJ_PER_BIT, DRAM_BW, cacti::DRAM_PJ_PER_BIT));
+    let hop_pj = cacti::NOC_HOP_PJ_PER_BIT;
+    let topology = match noc {
+        "bus" => Topology::shared_bus(n, bus_bw, bus_pj, dram_bw, dram_pj),
+        "ring" => Topology::ring(n, bus_bw, hop_pj, dram_bw, dram_pj),
+        "mesh" | "mesh2d" => {
+            let cols = (n as f64).sqrt().ceil() as usize;
+            Topology::mesh2d(n, cols.max(1), bus_bw, hop_pj, dram_bw, dram_pj, 2)
+        }
+        "crossbar" | "xbar" => Topology::crossbar(n, bus_bw, hop_pj, dram_bw, dram_pj),
+        _ => return None,
+    };
+    let name = format!("{}@{noc}", arch.name);
+    let mut arch = arch.with_topology(topology);
+    arch.name = name;
+    Some(arch)
+}
+
+/// All seven exploration architectures with a given NoC suffix —
+/// the chiplet-variant counterpart of [`exploration_archs`].
+pub fn exploration_archs_noc(noc: &str) -> Option<Vec<Accelerator>> {
+    exploration_archs().into_iter().map(|a| with_noc(a, noc)).collect()
+}
 
 // ---------------------------------------------------------------------------
 // Validation targets (Fig. 9)
@@ -199,10 +257,13 @@ pub fn depfin() -> Accelerator {
     Accelerator {
         name: "DepFiN".to_string(),
         cores: vec![dense, simd_core(1, 32 * 1024)],
-        bus_bw_bits: 256,
-        bus_pj_per_bit: cacti::BUS_PJ_PER_BIT,
-        dram_bw_bits: 64,
-        dram_pj_per_bit: cacti::DRAM_PJ_PER_BIT,
+        topology: Topology::shared_bus(
+            2,
+            256,
+            cacti::BUS_PJ_PER_BIT,
+            64,
+            cacti::DRAM_PJ_PER_BIT,
+        ),
     }
 }
 
@@ -226,14 +287,14 @@ pub fn aimc_4x4() -> Accelerator {
         })
         .collect();
     cores.push(simd_core(16, 32 * 1024));
-    Accelerator {
-        name: "4x4-AiMC".to_string(),
-        cores,
-        bus_bw_bits: 512,
-        bus_pj_per_bit: cacti::BUS_PJ_PER_BIT,
-        dram_bw_bits: 128,
-        dram_pj_per_bit: cacti::DRAM_PJ_PER_BIT,
-    }
+    let topology = Topology::shared_bus(
+        cores.len(),
+        512,
+        cacti::BUS_PJ_PER_BIT,
+        128,
+        cacti::DRAM_PJ_PER_BIT,
+    );
+    Accelerator { name: "4x4-AiMC".to_string(), cores, topology }
 }
 
 /// DIANA (Ueyoshi et al., ISSCC'22): heterogeneous digital + AiMC hybrid
@@ -257,10 +318,13 @@ pub fn diana() -> Accelerator {
         name: "DIANA".to_string(),
         cores: vec![digital, aimc, simd_core(2, 64 * 1024)],
         // cores communicate through the shared L1: model as a wide bus
-        bus_bw_bits: 256,
-        bus_pj_per_bit: cacti::sram_read_pj(256 * 1024, 1),
-        dram_bw_bits: 64,
-        dram_pj_per_bit: cacti::DRAM_PJ_PER_BIT,
+        topology: Topology::shared_bus(
+            3,
+            256,
+            cacti::sram_read_pj(256 * 1024, 1),
+            64,
+            cacti::DRAM_PJ_PER_BIT,
+        ),
     }
 }
 
@@ -308,5 +372,44 @@ mod tests {
         let d = diana();
         assert!(matches!(d.cores[0].kind, CoreKind::Digital { .. }));
         assert!(matches!(d.cores[1].kind, CoreKind::Aimc { .. }));
+    }
+
+    #[test]
+    fn noc_suffix_roundtrip_and_iso_area() {
+        for base in ["hetero", "hom-tpu", "sc-tpu"] {
+            for noc in TOPOLOGY_NAMES {
+                let a = by_name(&format!("{base}@{noc}")).unwrap_or_else(|| {
+                    panic!("{base}@{noc} must resolve");
+                });
+                let plain = by_name(base).unwrap();
+                // NoC swap keeps the cores: iso-area invariants survive
+                assert_eq!(a.cores.len(), plain.cores.len());
+                assert_eq!(a.total_onchip_bytes(), plain.total_onchip_bytes());
+                assert_eq!(a.total_pes(), plain.total_pes());
+                assert_eq!(a.topology.n_cores(), a.cores.len());
+                assert!(a.name.ends_with(&format!("@{noc}")));
+            }
+        }
+        assert!(by_name("hetero@nope").is_none());
+        assert!(by_name("nope@mesh").is_none());
+    }
+
+    #[test]
+    fn chiplet_variants_change_the_fingerprint_only() {
+        let bus = hetero_quad();
+        let mesh = with_noc(hetero_quad(), "mesh").unwrap();
+        assert_ne!(bus.topology.fingerprint(), mesh.topology.fingerprint());
+        // the identity swap reproduces the default topology exactly
+        let rebus = with_noc(hetero_quad(), "bus").unwrap();
+        assert_eq!(bus.topology.fingerprint(), rebus.topology.fingerprint());
+    }
+
+    #[test]
+    fn exploration_noc_variants_build() {
+        for noc in TOPOLOGY_NAMES {
+            let archs = exploration_archs_noc(noc).unwrap();
+            assert_eq!(archs.len(), 7);
+        }
+        assert!(exploration_archs_noc("bogus").is_none());
     }
 }

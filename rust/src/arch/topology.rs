@@ -1,0 +1,967 @@
+//! Interconnect topology: nodes, directed links and precomputed routes.
+//!
+//! The original model collapsed all communication into one FCFS bus and
+//! one DRAM port, so every expressible architecture was a single-hop
+//! star.  A [`Topology`] instead describes the interconnect explicitly:
+//!
+//! - **nodes** — one per core (plus, for meshes, router-only grid
+//!   fillers) and one per off-chip **DRAM port**;
+//! - **links** — bandwidth (bits/cycle) + energy (pJ/bit) edges between
+//!   nodes.  NoC links ([`LinkKind::Noc`]) are usually directed
+//!   (full-duplex channel pairs); DRAM channels ([`LinkKind::Dram`])
+//!   are shared media serving loads and stores alike, matching the old
+//!   single-port semantics;
+//! - **routes** — for every (src, dst) node pair, the precomputed link
+//!   sequence a transfer occupies.  The scheduler's `LinkSet` resource
+//!   reserves *every* link of a route FCFS, so multi-hop transfers
+//!   contend realistically with everything they cross.
+//!
+//! Four preset shapes cover the common fabrics:
+//!
+//! | constructor              | shape                                        |
+//! |--------------------------|----------------------------------------------|
+//! | [`Topology::shared_bus`] | one bus + one DRAM channel (the old model)   |
+//! | [`Topology::ring`]       | bidirectional ring, shorter-arc routing      |
+//! | [`Topology::mesh2d`]     | XY-routed 2-D mesh, chiplet style, ≥1 ports  |
+//! | [`Topology::crossbar`]   | non-blocking, per-node port contention only  |
+//!
+//! [`Topology::custom`] accepts an arbitrary node/link list and derives
+//! deterministic shortest-hop routes by BFS, for architectures none of
+//! the presets describe (see `docs/ARCHITECTURE.md` § Interconnect
+//! model).
+//!
+//! DRAM traffic always routes to the **nearest** port (fewest hops,
+//! ties to the lowest port index), so multi-port meshes spread their
+//! off-chip bandwidth the way chiplet designs do.
+
+use std::collections::HashMap;
+
+use crate::arch::CoreId;
+
+/// Identifier of a link within a topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LinkId(pub usize);
+
+impl std::fmt::Display for LinkId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "link{}", self.0)
+    }
+}
+
+/// What a link connects to, for energy attribution: NoC hop energy
+/// feeds `EnergyBreakdown::noc_pj`, DRAM channel energy feeds
+/// `EnergyBreakdown::dram_pj`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    /// On-chip interconnect segment (bus, ring/mesh hop, crossbar port).
+    Noc,
+    /// Off-chip DRAM channel of one port.
+    Dram,
+}
+
+/// One interconnect link.
+///
+/// `from`/`to` are node indices (metadata for shared media, where
+/// `from == to` marks a bus-like segment every route may use).
+/// `directed: false` means a single half-duplex resource serves both
+/// directions — the DRAM channels and the shared bus work like this.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub from: usize,
+    pub to: usize,
+    /// Link bandwidth, bits per clock cycle.
+    pub bw_bits: u64,
+    /// Transfer energy, pJ per bit crossing this link.
+    pub pj_per_bit: f64,
+    pub kind: LinkKind,
+    pub directed: bool,
+    pub name: String,
+}
+
+/// One off-chip DRAM port: where it attaches and its channel link.
+#[derive(Debug, Clone, Copy)]
+struct DramPort {
+    /// Node index of the port itself.
+    node: usize,
+    /// The shared DRAM channel link (loads and stores serialize on it).
+    link: LinkId,
+}
+
+/// Which preset produced a topology (used by the legacy-equivalence
+/// path and for display; [`TopoKind::Custom`] for user-built fabrics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopoKind {
+    SharedBus,
+    Ring,
+    Mesh2d { cols: usize },
+    Crossbar,
+    Custom,
+}
+
+/// An interconnect description with precomputed routes.  See the
+/// [module docs](self).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub name: String,
+    pub kind: TopoKind,
+    n_cores: usize,
+    n_nodes: usize,
+    links: Vec<Link>,
+    /// Node index of each core (identity for every preset).
+    core_node: Vec<usize>,
+    ports: Vec<DramPort>,
+    /// Row-major `n_nodes x n_nodes` route table.
+    routes: Vec<Box<[LinkId]>>,
+    /// Per core: index into `ports` of the fewest-hops DRAM port.
+    nearest_port: Vec<usize>,
+    /// Per core: route DRAM port -> core (weight/input fetches).
+    dram_load: Vec<Box<[LinkId]>>,
+    /// Per core: route core -> DRAM port (output stores).
+    dram_store: Vec<Box<[LinkId]>>,
+    fp: u64,
+}
+
+impl Topology {
+    // -- constructors -----------------------------------------------------
+
+    /// The pre-refactor model: one shared FCFS bus between all cores and
+    /// one shared DRAM channel.  A scheduler running on this topology is
+    /// bit-for-bit identical to the old `Bus`/`DramPort` pair (enforced
+    /// by `rust/tests/topology_equivalence.rs`).
+    pub fn shared_bus(
+        n_cores: usize,
+        bus_bw_bits: u64,
+        bus_pj_per_bit: f64,
+        dram_bw_bits: u64,
+        dram_pj_per_bit: f64,
+    ) -> Topology {
+        assert!(n_cores >= 1, "shared_bus needs at least one core");
+        let dram_node = n_cores;
+        let n_nodes = n_cores + 1;
+        let links = vec![
+            Link {
+                from: 0,
+                to: 0,
+                bw_bits: bus_bw_bits,
+                pj_per_bit: bus_pj_per_bit,
+                kind: LinkKind::Noc,
+                directed: false,
+                name: "bus".into(),
+            },
+            Link {
+                from: dram_node,
+                to: dram_node,
+                bw_bits: dram_bw_bits,
+                pj_per_bit: dram_pj_per_bit,
+                kind: LinkKind::Dram,
+                directed: false,
+                name: "dram0".into(),
+            },
+        ];
+        let bus = LinkId(0);
+        let chan = LinkId(1);
+        let mut routes = empty_routes(n_nodes);
+        for i in 0..n_cores {
+            for j in 0..n_cores {
+                if i != j {
+                    routes[i * n_nodes + j] = Box::new([bus]);
+                }
+            }
+            routes[i * n_nodes + dram_node] = Box::new([chan]);
+            routes[dram_node * n_nodes + i] = Box::new([chan]);
+        }
+        finish(
+            format!("bus[{n_cores}]"),
+            TopoKind::SharedBus,
+            n_cores,
+            n_nodes,
+            (0..n_cores).collect(),
+            links,
+            vec![DramPort { node: dram_node, link: chan }],
+            routes,
+        )
+    }
+
+    /// Bidirectional ring with shorter-arc routing (clockwise on ties)
+    /// and one DRAM port attached at ring position 0.  DRAM traffic
+    /// from core *i* crosses the ring to position 0 and then the
+    /// shared channel — distant cores really pay for their position.
+    pub fn ring(
+        n_cores: usize,
+        link_bw_bits: u64,
+        link_pj_per_bit: f64,
+        dram_bw_bits: u64,
+        dram_pj_per_bit: f64,
+    ) -> Topology {
+        assert!(n_cores >= 2, "ring needs at least two cores");
+        let n = n_cores;
+        let dram_node = n;
+        let n_nodes = n + 1;
+        let mut links = Vec::new();
+        let mut cw = Vec::with_capacity(n); // cw[i]: i -> (i+1)%n
+        for i in 0..n {
+            cw.push(LinkId(links.len()));
+            links.push(Link {
+                from: i,
+                to: (i + 1) % n,
+                bw_bits: link_bw_bits,
+                pj_per_bit: link_pj_per_bit,
+                kind: LinkKind::Noc,
+                directed: true,
+                name: format!("cw{i}"),
+            });
+        }
+        let mut ccw = Vec::with_capacity(n); // ccw[i]: i -> (i+n-1)%n
+        if n > 2 {
+            for i in 0..n {
+                ccw.push(LinkId(links.len()));
+                links.push(Link {
+                    from: i,
+                    to: (i + n - 1) % n,
+                    bw_bits: link_bw_bits,
+                    pj_per_bit: link_pj_per_bit,
+                    kind: LinkKind::Noc,
+                    directed: true,
+                    name: format!("ccw{i}"),
+                });
+            }
+        }
+        let chan = LinkId(links.len());
+        links.push(Link {
+            from: dram_node,
+            to: dram_node,
+            bw_bits: dram_bw_bits,
+            pj_per_bit: dram_pj_per_bit,
+            kind: LinkKind::Dram,
+            directed: false,
+            name: "dram0".into(),
+        });
+
+        // shorter arc; ties go clockwise (n == 2 only has cw links)
+        let arc = |i: usize, j: usize| -> Vec<LinkId> {
+            let mut path = Vec::new();
+            if i == j {
+                return path;
+            }
+            let d_cw = (j + n - i) % n;
+            let d_ccw = (i + n - j) % n;
+            if d_cw <= d_ccw || n == 2 {
+                let mut at = i;
+                while at != j {
+                    path.push(cw[at]);
+                    at = (at + 1) % n;
+                }
+            } else {
+                let mut at = i;
+                while at != j {
+                    path.push(ccw[at]);
+                    at = (at + n - 1) % n;
+                }
+            }
+            path
+        };
+
+        let mut routes = empty_routes(n_nodes);
+        for i in 0..n {
+            for j in 0..n {
+                routes[i * n_nodes + j] = arc(i, j).into();
+            }
+            // core -> port: ring to the attachment (node 0), then channel
+            let mut to_port = arc(i, 0);
+            to_port.push(chan);
+            routes[i * n_nodes + dram_node] = to_port.into();
+            let mut from_port = vec![chan];
+            from_port.extend(arc(0, i));
+            routes[dram_node * n_nodes + i] = from_port.into();
+        }
+        finish(
+            format!("ring[{n}]"),
+            TopoKind::Ring,
+            n,
+            n_nodes,
+            (0..n).collect(),
+            links,
+            vec![DramPort { node: dram_node, link: chan }],
+            routes,
+        )
+    }
+
+    /// XY-routed 2-D mesh (chiplet style).  Cores sit row-major on a
+    /// `ceil(n_cores / cols) x cols` grid; grid slots beyond the core
+    /// count become router-only nodes, so routes never dead-end on a
+    /// ragged last row.  Up to four DRAM ports attach at the grid
+    /// corners (top-left, bottom-right, top-right, bottom-left order);
+    /// every core uses its nearest port.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mesh2d(
+        n_cores: usize,
+        cols: usize,
+        link_bw_bits: u64,
+        link_pj_per_bit: f64,
+        dram_bw_bits: u64,
+        dram_pj_per_bit: f64,
+        n_dram_ports: usize,
+    ) -> Topology {
+        assert!(n_cores >= 1 && cols >= 1, "mesh2d needs cores and columns");
+        let cols = cols.min(n_cores);
+        let rows = n_cores.div_ceil(cols);
+        let grid = rows * cols;
+        let mut links = Vec::new();
+        let mut adj: HashMap<(usize, usize), LinkId> = HashMap::new();
+        let mut connect = |a: usize, b: usize, links: &mut Vec<Link>| {
+            let id = LinkId(links.len());
+            links.push(Link {
+                from: a,
+                to: b,
+                bw_bits: link_bw_bits,
+                pj_per_bit: link_pj_per_bit,
+                kind: LinkKind::Noc,
+                directed: true,
+                name: format!("n{a}>n{b}"),
+            });
+            adj.insert((a, b), id);
+        };
+        for r in 0..rows {
+            for c in 0..cols {
+                let a = r * cols + c;
+                if c + 1 < cols {
+                    connect(a, a + 1, &mut links);
+                    connect(a + 1, a, &mut links);
+                }
+                if r + 1 < rows {
+                    connect(a, a + cols, &mut links);
+                    connect(a + cols, a, &mut links);
+                }
+            }
+        }
+
+        // DRAM ports at the corners, deduplicated for degenerate grids
+        let mut corners = vec![0, grid - 1, cols - 1, grid - cols];
+        let mut seen = Vec::new();
+        corners.retain(|c| {
+            if seen.contains(c) {
+                false
+            } else {
+                seen.push(*c);
+                true
+            }
+        });
+        let n_ports = n_dram_ports.clamp(1, corners.len());
+        let mut ports = Vec::new();
+        for (p, &attach) in corners.iter().take(n_ports).enumerate() {
+            let node = grid + p;
+            let link = LinkId(links.len());
+            links.push(Link {
+                from: node,
+                to: attach,
+                bw_bits: dram_bw_bits,
+                pj_per_bit: dram_pj_per_bit,
+                kind: LinkKind::Dram,
+                directed: false,
+                name: format!("dram{p}"),
+            });
+            ports.push(DramPort { node, link });
+        }
+        let n_nodes = grid + ports.len();
+
+        // XY walk: columns first, then rows (all grid nodes exist)
+        let xy = |a: usize, b: usize| -> Vec<LinkId> {
+            let (mut r, mut c) = (a / cols, a % cols);
+            let (r2, c2) = (b / cols, b % cols);
+            let mut path = Vec::new();
+            while c != c2 {
+                let nc = if c2 > c { c + 1 } else { c - 1 };
+                path.push(adj[&(r * cols + c, r * cols + nc)]);
+                c = nc;
+            }
+            while r != r2 {
+                let nr = if r2 > r { r + 1 } else { r - 1 };
+                path.push(adj[&(r * cols + c, nr * cols + c)]);
+                r = nr;
+            }
+            path
+        };
+
+        let mut routes = empty_routes(n_nodes);
+        for a in 0..grid {
+            for b in 0..grid {
+                routes[a * n_nodes + b] = xy(a, b).into();
+            }
+        }
+        for (p, port) in ports.iter().enumerate() {
+            let attach = links[port.link.0].to;
+            for a in 0..grid {
+                let mut to_port = xy(a, attach);
+                to_port.push(port.link);
+                routes[a * n_nodes + port.node] = to_port.into();
+                let mut from_port = vec![port.link];
+                from_port.extend(xy(attach, a));
+                routes[port.node * n_nodes + a] = from_port.into();
+            }
+            for (q, other) in ports.iter().enumerate() {
+                if p == q {
+                    continue;
+                }
+                let oattach = links[other.link.0].to;
+                let mut path = vec![port.link];
+                path.extend(xy(attach, oattach));
+                path.push(other.link);
+                routes[port.node * n_nodes + other.node] = path.into();
+            }
+        }
+        finish(
+            format!("mesh{rows}x{cols}"),
+            TopoKind::Mesh2d { cols },
+            n_cores,
+            n_nodes,
+            (0..n_cores).collect(),
+            links,
+            ports,
+            routes,
+        )
+    }
+
+    /// Non-blocking crossbar: every node owns one egress and one ingress
+    /// port link, a route is `[egress(src), ingress(dst)]`.  Disjoint
+    /// (src, dst) pairs never contend; transfers sharing a source or a
+    /// destination serialize on the shared port, like a real switch.
+    /// One DRAM channel hangs off the crossbar as an extra node.
+    pub fn crossbar(
+        n_cores: usize,
+        link_bw_bits: u64,
+        link_pj_per_bit: f64,
+        dram_bw_bits: u64,
+        dram_pj_per_bit: f64,
+    ) -> Topology {
+        assert!(n_cores >= 1, "crossbar needs at least one core");
+        let dram_node = n_cores;
+        let n_nodes = n_cores + 1;
+        let mut links = Vec::new();
+        let mut egress = Vec::with_capacity(n_cores);
+        let mut ingress = Vec::with_capacity(n_cores);
+        for i in 0..n_cores {
+            egress.push(LinkId(links.len()));
+            links.push(Link {
+                from: i,
+                to: i,
+                bw_bits: link_bw_bits,
+                pj_per_bit: link_pj_per_bit,
+                kind: LinkKind::Noc,
+                directed: true,
+                name: format!("out{i}"),
+            });
+            ingress.push(LinkId(links.len()));
+            links.push(Link {
+                from: i,
+                to: i,
+                bw_bits: link_bw_bits,
+                pj_per_bit: link_pj_per_bit,
+                kind: LinkKind::Noc,
+                directed: true,
+                name: format!("in{i}"),
+            });
+        }
+        let chan = LinkId(links.len());
+        links.push(Link {
+            from: dram_node,
+            to: dram_node,
+            bw_bits: dram_bw_bits,
+            pj_per_bit: dram_pj_per_bit,
+            kind: LinkKind::Dram,
+            directed: false,
+            name: "dram0".into(),
+        });
+        let mut routes = empty_routes(n_nodes);
+        for i in 0..n_cores {
+            for j in 0..n_cores {
+                if i != j {
+                    routes[i * n_nodes + j] = Box::new([egress[i], ingress[j]]);
+                }
+            }
+            routes[i * n_nodes + dram_node] = Box::new([egress[i], chan]);
+            routes[dram_node * n_nodes + i] = Box::new([chan, ingress[i]]);
+        }
+        finish(
+            format!("xbar[{n_cores}]"),
+            TopoKind::Crossbar,
+            n_cores,
+            n_nodes,
+            (0..n_cores).collect(),
+            links,
+            vec![DramPort { node: dram_node, link: chan }],
+            routes,
+        )
+    }
+
+    /// Arbitrary fabric: `n_nodes` core/router nodes, `core_node[i]`
+    /// placing core *i*, proper point-to-point `links` among them
+    /// (`from != to`; `directed: false` links carry both directions),
+    /// and DRAM ports given as `(attach_node, bw_bits, pj_per_bit)`.
+    /// Routes are minimum-hop by BFS, deterministically tie-broken by
+    /// link id, so two identically-built topologies schedule
+    /// identically.
+    pub fn custom(
+        name: &str,
+        n_nodes: usize,
+        core_node: Vec<usize>,
+        mut links: Vec<Link>,
+        dram_ports: &[(usize, u64, f64)],
+    ) -> Topology {
+        assert!(!core_node.is_empty(), "custom topology needs cores");
+        assert!(!dram_ports.is_empty(), "custom topology needs a DRAM port");
+        for &n in &core_node {
+            assert!(n < n_nodes, "core node {n} out of range");
+        }
+        for l in &links {
+            assert!(
+                l.from != l.to && l.from < n_nodes && l.to < n_nodes,
+                "custom links must be point-to-point within the node range"
+            );
+        }
+        let n_cores = core_node.len();
+        let mut ports = Vec::new();
+        for (p, &(attach, bw, pj)) in dram_ports.iter().enumerate() {
+            assert!(attach < n_nodes, "DRAM attach node {attach} out of range");
+            let node = n_nodes + p;
+            let link = LinkId(links.len());
+            links.push(Link {
+                from: node,
+                to: attach,
+                bw_bits: bw,
+                pj_per_bit: pj,
+                kind: LinkKind::Dram,
+                directed: false,
+                name: format!("dram{p}"),
+            });
+            ports.push(DramPort { node, link });
+        }
+        let all_nodes = n_nodes + ports.len();
+
+        // adjacency in link-id order => deterministic BFS parents
+        let mut out: Vec<Vec<(usize, LinkId)>> = vec![Vec::new(); all_nodes];
+        for (i, l) in links.iter().enumerate() {
+            out[l.from].push((l.to, LinkId(i)));
+            if !l.directed {
+                out[l.to].push((l.from, LinkId(i)));
+            }
+        }
+
+        let mut routes = empty_routes(all_nodes);
+        for src in 0..all_nodes {
+            // BFS with first-discovery parents
+            let mut parent: Vec<Option<(usize, LinkId)>> = vec![None; all_nodes];
+            let mut seen = vec![false; all_nodes];
+            let mut queue = std::collections::VecDeque::new();
+            seen[src] = true;
+            queue.push_back(src);
+            while let Some(at) = queue.pop_front() {
+                for &(to, link) in &out[at] {
+                    if !seen[to] {
+                        seen[to] = true;
+                        parent[to] = Some((at, link));
+                        queue.push_back(to);
+                    }
+                }
+            }
+            for dst in 0..all_nodes {
+                if dst == src || !seen[dst] {
+                    continue;
+                }
+                let mut path = Vec::new();
+                let mut at = dst;
+                while at != src {
+                    let (prev, link) = parent[at].expect("on BFS tree");
+                    path.push(link);
+                    at = prev;
+                }
+                path.reverse();
+                routes[src * all_nodes + dst] = path.into();
+            }
+        }
+        finish(
+            name.to_string(),
+            TopoKind::Custom,
+            n_cores,
+            all_nodes,
+            core_node,
+            links,
+            ports,
+            routes,
+        )
+    }
+
+    // -- queries ----------------------------------------------------------
+
+    pub fn n_cores(&self) -> usize {
+        self.n_cores
+    }
+
+    pub fn n_dram_ports(&self) -> usize {
+        self.ports.len()
+    }
+
+    pub fn n_links(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+
+    pub fn link(&self, id: LinkId) -> &Link {
+        &self.links[id.0]
+    }
+
+    /// Link sequence a core-to-core transfer occupies (empty iff
+    /// `from == to`).
+    pub fn core_route(&self, from: CoreId, to: CoreId) -> &[LinkId] {
+        let a = self.core_node[from.0];
+        let b = self.core_node[to.0];
+        &self.routes[a * self.n_nodes + b]
+    }
+
+    /// Index of the fewest-hops DRAM port serving this core.
+    pub fn nearest_dram_port(&self, core: CoreId) -> usize {
+        self.nearest_port[core.0]
+    }
+
+    /// Route of a DRAM fetch (weights / fresh inputs) into this core:
+    /// nearest port's channel first, then the NoC hops inward.
+    pub fn dram_load_route(&self, core: CoreId) -> &[LinkId] {
+        &self.dram_load[core.0]
+    }
+
+    /// Route of an off-chip store from this core: NoC hops outward,
+    /// then the nearest port's channel.
+    pub fn dram_store_route(&self, core: CoreId) -> &[LinkId] {
+        &self.dram_store[core.0]
+    }
+
+    /// Bottleneck bandwidth of a route (bits/cycle).
+    pub fn route_bw_bits(&self, route: &[LinkId]) -> u64 {
+        route.iter().map(|l| self.links[l.0].bw_bits).min().unwrap_or(u64::MAX).max(1)
+    }
+
+    /// Summed pJ/bit of the route's NoC hops.
+    pub fn route_noc_pj_per_bit(&self, route: &[LinkId]) -> f64 {
+        route
+            .iter()
+            .filter(|l| self.links[l.0].kind == LinkKind::Noc)
+            .map(|l| self.links[l.0].pj_per_bit)
+            .sum()
+    }
+
+    /// Summed pJ/bit of the route's DRAM channel crossings.
+    pub fn route_dram_pj_per_bit(&self, route: &[LinkId]) -> f64 {
+        route
+            .iter()
+            .filter(|l| self.links[l.0].kind == LinkKind::Dram)
+            .map(|l| self.links[l.0].pj_per_bit)
+            .sum()
+    }
+
+    /// Aggregate off-chip bandwidth: sum of the ports' channel widths.
+    /// Single-port topologies reduce to the old `dram_bw_bits`.
+    pub fn dram_bw_bits(&self) -> u64 {
+        self.ports.iter().map(|p| self.links[p.link.0].bw_bits).sum::<u64>().max(1)
+    }
+
+    /// Mean channel energy across ports (spill accounting, where the
+    /// spilling core is unknown).  Single-port topologies reduce to the
+    /// old `dram_pj_per_bit`.
+    pub fn spill_dram_pj_per_bit(&self) -> f64 {
+        let s: f64 = self.ports.iter().map(|p| self.links[p.link.0].pj_per_bit).sum();
+        s / self.ports.len() as f64
+    }
+
+    /// The DRAM channel link of every port (spill busy-time accounting).
+    pub fn dram_channel_links(&self) -> impl Iterator<Item = LinkId> + '_ {
+        self.ports.iter().map(|p| p.link)
+    }
+
+    /// The shared-bus parameters `(bus_bw, bus_pj, dram_bw, dram_pj)` if
+    /// this is a [`TopoKind::SharedBus`] topology.
+    pub fn as_shared_bus(&self) -> Option<(u64, f64, u64, f64)> {
+        if self.kind != TopoKind::SharedBus {
+            return None;
+        }
+        let bus = self.links.iter().find(|l| l.kind == LinkKind::Noc)?;
+        let dram = self.links.iter().find(|l| l.kind == LinkKind::Dram)?;
+        Some((bus.bw_bits, bus.pj_per_bit, dram.bw_bits, dram.pj_per_bit))
+    }
+
+    /// 64-bit structural fingerprint (links, routes, core placement) —
+    /// mixed into `ScheduleCache` keys so one cache can serve several
+    /// topologies without aliasing.
+    pub fn fingerprint(&self) -> u64 {
+        self.fp
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} ({} cores, {} links, {} DRAM port{})",
+            self.name,
+            self.n_cores,
+            self.links.len(),
+            self.ports.len(),
+            if self.ports.len() == 1 { "" } else { "s" }
+        )
+    }
+}
+
+fn empty_routes(n_nodes: usize) -> Vec<Box<[LinkId]>> {
+    (0..n_nodes * n_nodes).map(|_| Vec::new().into_boxed_slice()).collect()
+}
+
+/// Derive nearest ports, DRAM routes and the fingerprint; validate.
+#[allow(clippy::too_many_arguments)]
+fn finish(
+    name: String,
+    kind: TopoKind,
+    n_cores: usize,
+    n_nodes: usize,
+    core_node: Vec<usize>,
+    links: Vec<Link>,
+    ports: Vec<DramPort>,
+    routes: Vec<Box<[LinkId]>>,
+) -> Topology {
+    assert_eq!(core_node.len(), n_cores);
+    assert_eq!(routes.len(), n_nodes * n_nodes);
+    assert!(!ports.is_empty(), "a topology needs at least one DRAM port");
+
+    // every distinct core pair must occupy distinct nodes and be
+    // mutually routable — an empty cross-core route would otherwise
+    // reach the scheduler and silently model a free transfer
+    for a in 0..n_cores {
+        for b in 0..n_cores {
+            if a == b {
+                continue;
+            }
+            assert_ne!(
+                core_node[a], core_node[b],
+                "{name}: cores {a} and {b} share node {}",
+                core_node[a]
+            );
+            assert!(
+                !routes[core_node[a] * n_nodes + core_node[b]].is_empty(),
+                "{name}: no route from core {a} to core {b}"
+            );
+        }
+    }
+
+    let mut nearest_port = Vec::with_capacity(n_cores);
+    let mut dram_load = Vec::with_capacity(n_cores);
+    let mut dram_store = Vec::with_capacity(n_cores);
+    for c in 0..n_cores {
+        let cn = core_node[c];
+        let best = (0..ports.len())
+            .min_by_key(|&p| (routes[ports[p].node * n_nodes + cn].len(), p))
+            .expect("ports nonempty");
+        let load = routes[ports[best].node * n_nodes + cn].clone();
+        let store = routes[cn * n_nodes + ports[best].node].clone();
+        assert!(
+            !load.is_empty() && !store.is_empty(),
+            "{name}: core {c} unreachable from DRAM port {best}"
+        );
+        nearest_port.push(best);
+        dram_load.push(load);
+        dram_store.push(store);
+    }
+
+    // FNV-1a over the whole structure
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    eat(n_cores as u64);
+    eat(n_nodes as u64);
+    for &cn in &core_node {
+        eat(cn as u64);
+    }
+    for l in &links {
+        eat(l.from as u64);
+        eat(l.to as u64);
+        eat(l.bw_bits);
+        eat(l.pj_per_bit.to_bits());
+        eat(match l.kind {
+            LinkKind::Noc => 1,
+            LinkKind::Dram => 2,
+        });
+        eat(l.directed as u64);
+    }
+    for p in &ports {
+        eat(p.node as u64);
+        eat(p.link.0 as u64);
+    }
+    for r in &routes {
+        eat(r.len() as u64);
+        for l in r.iter() {
+            eat(l.0 as u64);
+        }
+    }
+
+    Topology {
+        name,
+        kind,
+        n_cores,
+        n_nodes,
+        links,
+        core_node,
+        ports,
+        routes,
+        nearest_port,
+        dram_load,
+        dram_store,
+        fp: h,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_bus_routes_reduce_to_two_links() {
+        let t = Topology::shared_bus(4, 128, 0.15, 64, 3.7);
+        assert_eq!(t.n_links(), 2);
+        for i in 0..4 {
+            for j in 0..4 {
+                let r = t.core_route(CoreId(i), CoreId(j));
+                if i == j {
+                    assert!(r.is_empty());
+                } else {
+                    assert_eq!(r, &[LinkId(0)]);
+                }
+            }
+            // DRAM traffic never touches the bus
+            assert_eq!(t.dram_load_route(CoreId(i)), &[LinkId(1)]);
+            assert_eq!(t.dram_store_route(CoreId(i)), &[LinkId(1)]);
+            assert_eq!(t.nearest_dram_port(CoreId(i)), 0);
+        }
+        assert_eq!(t.as_shared_bus(), Some((128, 0.15, 64, 3.7)));
+        assert_eq!(t.dram_bw_bits(), 64);
+        assert_eq!(t.spill_dram_pj_per_bit(), 3.7);
+    }
+
+    #[test]
+    fn ring_takes_the_shorter_arc() {
+        let t = Topology::ring(5, 128, 0.05, 64, 3.7);
+        // 0 -> 1: one clockwise hop
+        assert_eq!(t.core_route(CoreId(0), CoreId(1)).len(), 1);
+        // 0 -> 4: one counter-clockwise hop (shorter than 4 cw hops)
+        assert_eq!(t.core_route(CoreId(0), CoreId(4)).len(), 1);
+        // 0 -> 2 vs 0 -> 3: two hops each (tie at n=5 split 2/3)
+        assert_eq!(t.core_route(CoreId(0), CoreId(2)).len(), 2);
+        assert_eq!(t.core_route(CoreId(0), CoreId(3)).len(), 2);
+        // DRAM from core 2: two ring hops to node 0 plus the channel
+        assert_eq!(t.dram_load_route(CoreId(2)).len(), 3);
+        // core 0 sits on the port: channel only
+        assert_eq!(t.dram_load_route(CoreId(0)).len(), 1);
+    }
+
+    #[test]
+    fn ring_of_two_uses_direct_links() {
+        let t = Topology::ring(2, 128, 0.05, 64, 3.7);
+        assert_eq!(t.core_route(CoreId(0), CoreId(1)).len(), 1);
+        assert_eq!(t.core_route(CoreId(1), CoreId(0)).len(), 1);
+    }
+
+    #[test]
+    fn mesh_xy_routes_and_router_fillers() {
+        // 5 cores on a 2x3 grid: node 5 is a router-only filler
+        let t = Topology::mesh2d(5, 3, 128, 0.05, 64, 3.7, 1);
+        // (0,0) -> (1,1): X first (one hop), then Y (one hop)
+        let r = t.core_route(CoreId(0), CoreId(4));
+        assert_eq!(r.len(), 2);
+        let l0 = t.link(r[0]);
+        assert_eq!((l0.from, l0.to), (0, 1));
+        let l1 = t.link(r[1]);
+        assert_eq!((l1.from, l1.to), (1, 4));
+        // core 4 at (1,1) is two hops from the corner port at (0,0)
+        assert_eq!(t.dram_load_route(CoreId(4)).len(), 3);
+        // every route's first load link is the DRAM channel
+        for c in 0..5 {
+            let load = t.dram_load_route(CoreId(c));
+            assert_eq!(t.link(load[0]).kind, LinkKind::Dram);
+            let store = t.dram_store_route(CoreId(c));
+            assert_eq!(t.link(*store.last().unwrap()).kind, LinkKind::Dram);
+        }
+    }
+
+    #[test]
+    fn mesh_multi_port_picks_nearest() {
+        // 2x3 grid, ports at node 0 (top-left) and node 5 (bottom-right)
+        let t = Topology::mesh2d(6, 3, 128, 0.05, 64, 3.7, 2);
+        assert_eq!(t.n_dram_ports(), 2);
+        assert_eq!(t.nearest_dram_port(CoreId(0)), 0);
+        assert_eq!(t.nearest_dram_port(CoreId(5)), 1);
+        // aggregate off-chip bandwidth doubles with two ports
+        assert_eq!(t.dram_bw_bits(), 128);
+    }
+
+    #[test]
+    fn crossbar_is_non_blocking_across_disjoint_pairs() {
+        let t = Topology::crossbar(4, 128, 0.05, 64, 3.7);
+        let r01: Vec<LinkId> = t.core_route(CoreId(0), CoreId(1)).to_vec();
+        let r23: Vec<LinkId> = t.core_route(CoreId(2), CoreId(3)).to_vec();
+        assert!(r01.iter().all(|l| !r23.contains(l)), "disjoint pairs share no link");
+        // same source serializes on the egress port
+        let r02: Vec<LinkId> = t.core_route(CoreId(0), CoreId(2)).to_vec();
+        assert_eq!(r01[0], r02[0]);
+        assert_ne!(r01[1], r02[1]);
+    }
+
+    #[test]
+    fn custom_bfs_finds_shortest_hop_routes() {
+        // line 0-1-2 with a shortcut 0-2
+        let link = |a: usize, b: usize| Link {
+            from: a,
+            to: b,
+            bw_bits: 64,
+            pj_per_bit: 0.1,
+            kind: LinkKind::Noc,
+            directed: false,
+            name: format!("l{a}{b}"),
+        };
+        let t = Topology::custom(
+            "line+shortcut",
+            3,
+            vec![0, 1, 2],
+            vec![link(0, 1), link(1, 2), link(0, 2)],
+            &[(1, 64, 3.7)],
+        );
+        assert_eq!(t.core_route(CoreId(0), CoreId(2)).len(), 1, "takes the shortcut");
+        assert_eq!(t.core_route(CoreId(0), CoreId(1)).len(), 1);
+        // DRAM attaches at node 1: core 0 loads cross channel + one hop
+        assert_eq!(t.dram_load_route(CoreId(0)).len(), 2);
+        assert_eq!(t.dram_load_route(CoreId(1)).len(), 1);
+    }
+
+    #[test]
+    fn fingerprints_separate_topologies() {
+        let bus = Topology::shared_bus(5, 128, 0.15, 64, 3.7);
+        let bus2 = Topology::shared_bus(5, 128, 0.15, 64, 3.7);
+        let wide = Topology::shared_bus(5, 256, 0.15, 64, 3.7);
+        let mesh = Topology::mesh2d(5, 3, 128, 0.05, 64, 3.7, 2);
+        let ring = Topology::ring(5, 128, 0.05, 64, 3.7);
+        assert_eq!(bus.fingerprint(), bus2.fingerprint(), "structural determinism");
+        assert_ne!(bus.fingerprint(), wide.fingerprint());
+        assert_ne!(bus.fingerprint(), mesh.fingerprint());
+        assert_ne!(mesh.fingerprint(), ring.fingerprint());
+    }
+
+    #[test]
+    fn route_helpers_split_energy_by_kind() {
+        let t = Topology::mesh2d(4, 2, 128, 0.05, 64, 3.7, 1);
+        let load = t.dram_load_route(CoreId(3)); // channel + 2 hops
+        assert_eq!(t.route_dram_pj_per_bit(load), 3.7);
+        assert!((t.route_noc_pj_per_bit(load) - 0.10).abs() < 1e-12);
+        assert_eq!(t.route_bw_bits(load), 64, "channel is the bottleneck");
+    }
+}

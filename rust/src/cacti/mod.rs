@@ -37,6 +37,12 @@ pub fn dram_pj(bits: u64) -> f64 {
 /// Inter-core bus energy in pJ/bit (on-chip long wires + arbitration).
 pub const BUS_PJ_PER_BIT: f64 = 0.15;
 
+/// Per-hop NoC link energy in pJ/bit (one short link + one router
+/// crossing — shorter wires than the chip-spanning shared bus, so a
+/// mesh/ring hop costs a fraction of `BUS_PJ_PER_BIT`; multi-hop routes
+/// pay once per hop).
+pub const NOC_HOP_PJ_PER_BIT: f64 = 0.06;
+
 /// Digital MAC energy at 8-bit precision, pJ (28 nm class).
 pub const MAC_PJ_DIGITAL_8B: f64 = 0.1;
 

@@ -10,11 +10,16 @@
 //! hash lookup instead.
 //!
 //! Keys are the **expanded per-layer core allocation** (not the
-//! dense-layer genome), so manual baselines, GA genomes and pinned
-//! validation mappings all share one cache.  A 64-bit FNV-1a
-//! fingerprint of the allocation picks the shard and the `HashMap`
-//! slot; the full allocation is kept alongside and compared on lookup,
-//! so hash collisions can never return wrong metrics.
+//! dense-layer genome) plus the **interconnect topology fingerprint**
+//! ([`Topology::fingerprint`](crate::arch::Topology::fingerprint)), so
+//! manual baselines, GA genomes and pinned validation mappings all
+//! share one cache — and so can runs over *different topologies* of the
+//! same cores (the `ablation_topology` bench sweeps bus / ring / mesh /
+//! crossbar through one pipeline) without ever aliasing.  A 64-bit
+//! FNV-1a fingerprint of (allocation, priority, topology) picks the
+//! shard and the `HashMap` slot; the full allocation and the topology
+//! fingerprint are kept alongside and compared on lookup, so hash
+//! collisions can never return wrong metrics.
 //!
 //! The cache is sharded (`Mutex<HashMap>` per shard) so the parallel
 //! fitness workers of [`crate::allocator::Ga`] can hit it concurrently
@@ -32,18 +37,20 @@
 //!
 //! let cache = ScheduleCache::new();
 //! let alloc = [CoreId(0), CoreId(1), CoreId(0)];
+//! let topo = stream::arch::presets::hetero_quad().topology.fingerprint();
 //!
 //! // first call computes, second call is a hit with identical bits
-//! let m1 = cache.get_or_compute(&alloc, SchedulePriority::Latency, || ScheduleMetrics {
+//! let m1 = cache.get_or_compute(&alloc, SchedulePriority::Latency, topo, || ScheduleMetrics {
 //!     latency_cc: 123,
 //!     ..Default::default()
 //! });
-//! let m2 = cache.get_or_compute(&alloc, SchedulePriority::Latency, || unreachable!());
+//! let m2 = cache.get_or_compute(&alloc, SchedulePriority::Latency, topo, || unreachable!());
 //! assert_eq!(m1.latency_cc, m2.latency_cc);
 //! assert_eq!((cache.hits(), cache.misses()), (1, 1));
 //!
-//! // a different priority is a different key
-//! assert!(cache.get(&alloc, SchedulePriority::Memory).is_none());
+//! // a different priority — or a different topology — is a different key
+//! assert!(cache.get(&alloc, SchedulePriority::Memory, topo).is_none());
+//! assert!(cache.get(&alloc, SchedulePriority::Latency, topo ^ 1).is_none());
 //! ```
 
 use std::collections::HashMap;
@@ -58,18 +65,19 @@ use crate::scheduler::SchedulePriority;
 /// contention negligible for the worker counts this crate targets.
 const SHARDS: usize = 16;
 
-/// One cached entry's identity: fingerprint + the exact allocation it
-/// was computed for (collision safety) + the priority tag.
+/// One cached entry's identity: fingerprint + the exact allocation and
+/// topology it was computed for (collision safety) + the priority tag.
 #[derive(Clone, PartialEq, Eq)]
 struct Key {
     fingerprint: u64,
     priority: u8,
+    topology_fp: u64,
     allocation: Box<[u16]>,
 }
 
 impl std::hash::Hash for Key {
     fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
-        // the fingerprint already mixes allocation + priority
+        // the fingerprint already mixes allocation + priority + topology
         state.write_u64(self.fingerprint);
     }
 }
@@ -81,8 +89,14 @@ fn priority_tag(p: SchedulePriority) -> u8 {
     }
 }
 
-/// 64-bit FNV-1a over the allocation's core indices and the priority.
-pub fn fingerprint(allocation: &[CoreId], priority: SchedulePriority) -> u64 {
+/// 64-bit FNV-1a over the allocation's core indices, the priority and
+/// the interconnect-topology fingerprint
+/// ([`Topology::fingerprint`](crate::arch::Topology::fingerprint)).
+pub fn fingerprint(
+    allocation: &[CoreId],
+    priority: SchedulePriority,
+    topology_fp: u64,
+) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     let mut eat = |b: u8| {
         h ^= b as u64;
@@ -96,10 +110,14 @@ pub fn fingerprint(allocation: &[CoreId], priority: SchedulePriority) -> u64 {
         eat((v >> 24) as u8);
     }
     eat(priority_tag(priority));
+    for b in topology_fp.to_le_bytes() {
+        eat(b);
+    }
     h
 }
 
-/// Thread-safe memo of schedule metrics keyed by (allocation, priority).
+/// Thread-safe memo of schedule metrics keyed by (allocation, priority,
+/// topology fingerprint).
 ///
 /// See the [module docs](self) for design notes.  All methods take
 /// `&self`; interior mutability is per-shard `Mutex`es plus atomic
@@ -126,10 +144,11 @@ impl ScheduleCache {
         }
     }
 
-    fn key(allocation: &[CoreId], priority: SchedulePriority) -> Key {
+    fn key(allocation: &[CoreId], priority: SchedulePriority, topology_fp: u64) -> Key {
         Key {
-            fingerprint: fingerprint(allocation, priority),
+            fingerprint: fingerprint(allocation, priority, topology_fp),
             priority: priority_tag(priority),
+            topology_fp,
             allocation: allocation.iter().map(|c| c.0 as u16).collect(),
         }
     }
@@ -138,10 +157,15 @@ impl ScheduleCache {
         &self.shards[(fingerprint % SHARDS as u64) as usize]
     }
 
-    /// Cached metrics for this allocation under this priority, if any.
-    /// Counts as a hit/miss in [`stats`](Self::stats).
-    pub fn get(&self, allocation: &[CoreId], priority: SchedulePriority) -> Option<ScheduleMetrics> {
-        let key = Self::key(allocation, priority);
+    /// Cached metrics for this allocation under this priority on this
+    /// topology, if any.  Counts as a hit/miss in [`stats`](Self::stats).
+    pub fn get(
+        &self,
+        allocation: &[CoreId],
+        priority: SchedulePriority,
+        topology_fp: u64,
+    ) -> Option<ScheduleMetrics> {
+        let key = Self::key(allocation, priority, topology_fp);
         let got = self.shard(key.fingerprint).lock().unwrap().get(&key).copied();
         match got {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
@@ -156,9 +180,10 @@ impl ScheduleCache {
         &self,
         allocation: &[CoreId],
         priority: SchedulePriority,
+        topology_fp: u64,
         metrics: ScheduleMetrics,
     ) {
-        let key = Self::key(allocation, priority);
+        let key = Self::key(allocation, priority, topology_fp);
         self.shard(key.fingerprint).lock().unwrap().insert(key, metrics);
     }
 
@@ -170,13 +195,14 @@ impl ScheduleCache {
         &self,
         allocation: &[CoreId],
         priority: SchedulePriority,
+        topology_fp: u64,
         compute: F,
     ) -> ScheduleMetrics {
-        if let Some(m) = self.get(allocation, priority) {
+        if let Some(m) = self.get(allocation, priority, topology_fp) {
             return m;
         }
         let m = compute();
-        self.insert(allocation, priority, m);
+        self.insert(allocation, priority, topology_fp, m);
         m
     }
 
@@ -211,13 +237,16 @@ mod tests {
         ScheduleMetrics { latency_cc: latency, energy_pj: latency as f64 * 2.0, ..Default::default() }
     }
 
+    const T0: u64 = 0xD00D_F00D;
+    const T1: u64 = 0xBEEF_CAFE;
+
     #[test]
     fn miss_then_hit() {
         let c = ScheduleCache::new();
         let a = [CoreId(0), CoreId(2), CoreId(1)];
-        assert!(c.get(&a, SchedulePriority::Latency).is_none());
-        c.insert(&a, SchedulePriority::Latency, m(10));
-        let got = c.get(&a, SchedulePriority::Latency).unwrap();
+        assert!(c.get(&a, SchedulePriority::Latency, T0).is_none());
+        c.insert(&a, SchedulePriority::Latency, T0, m(10));
+        let got = c.get(&a, SchedulePriority::Latency, T0).unwrap();
         assert_eq!(got.latency_cc, 10);
         assert_eq!(got.energy_pj.to_bits(), (20.0f64).to_bits());
         assert_eq!(c.len(), 1);
@@ -227,20 +256,40 @@ mod tests {
     fn priority_separates_keys() {
         let c = ScheduleCache::new();
         let a = [CoreId(1), CoreId(1)];
-        c.insert(&a, SchedulePriority::Latency, m(1));
-        c.insert(&a, SchedulePriority::Memory, m(2));
-        assert_eq!(c.get(&a, SchedulePriority::Latency).unwrap().latency_cc, 1);
-        assert_eq!(c.get(&a, SchedulePriority::Memory).unwrap().latency_cc, 2);
+        c.insert(&a, SchedulePriority::Latency, T0, m(1));
+        c.insert(&a, SchedulePriority::Memory, T0, m(2));
+        assert_eq!(c.get(&a, SchedulePriority::Latency, T0).unwrap().latency_cc, 1);
+        assert_eq!(c.get(&a, SchedulePriority::Memory, T0).unwrap().latency_cc, 2);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn topology_separates_keys() {
+        // same allocation + priority on two different interconnects:
+        // a shared cache must never hand one topology's metrics to the
+        // other (the ablation benches rely on this)
+        let c = ScheduleCache::new();
+        let a = [CoreId(0), CoreId(1)];
+        c.insert(&a, SchedulePriority::Latency, T0, m(1));
+        c.insert(&a, SchedulePriority::Latency, T1, m(2));
+        assert_eq!(c.get(&a, SchedulePriority::Latency, T0).unwrap().latency_cc, 1);
+        assert_eq!(c.get(&a, SchedulePriority::Latency, T1).unwrap().latency_cc, 2);
         assert_eq!(c.len(), 2);
     }
 
     #[test]
     fn different_allocations_do_not_alias() {
         let c = ScheduleCache::new();
-        c.insert(&[CoreId(0), CoreId(1)], SchedulePriority::Latency, m(1));
-        c.insert(&[CoreId(1), CoreId(0)], SchedulePriority::Latency, m(2));
-        assert_eq!(c.get(&[CoreId(0), CoreId(1)], SchedulePriority::Latency).unwrap().latency_cc, 1);
-        assert_eq!(c.get(&[CoreId(1), CoreId(0)], SchedulePriority::Latency).unwrap().latency_cc, 2);
+        c.insert(&[CoreId(0), CoreId(1)], SchedulePriority::Latency, T0, m(1));
+        c.insert(&[CoreId(1), CoreId(0)], SchedulePriority::Latency, T0, m(2));
+        assert_eq!(
+            c.get(&[CoreId(0), CoreId(1)], SchedulePriority::Latency, T0).unwrap().latency_cc,
+            1
+        );
+        assert_eq!(
+            c.get(&[CoreId(1), CoreId(0)], SchedulePriority::Latency, T0).unwrap().latency_cc,
+            2
+        );
     }
 
     #[test]
@@ -249,7 +298,7 @@ mod tests {
         let a = [CoreId(3)];
         let computed = std::cell::Cell::new(0);
         for _ in 0..3 {
-            c.get_or_compute(&a, SchedulePriority::Memory, || {
+            c.get_or_compute(&a, SchedulePriority::Memory, T0, || {
                 computed.set(computed.get() + 1);
                 m(5)
             });
@@ -268,7 +317,7 @@ mod tests {
                 s.spawn(move || {
                     for i in 0..100u64 {
                         let alloc = [CoreId((i % 7) as usize), CoreId(((i + t) % 5) as usize)];
-                        let got = c.get_or_compute(&alloc, SchedulePriority::Latency, || {
+                        let got = c.get_or_compute(&alloc, SchedulePriority::Latency, T0, || {
                             m(alloc[0].0 as u64 * 100 + alloc[1].0 as u64)
                         });
                         assert_eq!(got.latency_cc, alloc[0].0 as u64 * 100 + alloc[1].0 as u64);

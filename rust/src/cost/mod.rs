@@ -5,11 +5,11 @@
 //!
 //! - [`ScheduleMetrics`] — latency / energy / peak-memory of one
 //!   schedule (the objective vector the GA minimizes, paper Section V);
-//! - [`EnergyBreakdown`] — MAC / on-chip / bus / DRAM split (the
+//! - [`EnergyBreakdown`] — MAC / on-chip / NoC / DRAM split (the
 //!   stacked bars of paper Fig. 15);
 //! - [`ScheduleCache`] ([`memo`]) — the thread-safe memo from
-//!   (core-allocation, priority) to metrics that lets the GA skip
-//!   re-simulating duplicate genomes;
+//!   (core-allocation, priority, interconnect topology) to metrics that
+//!   lets the GA skip re-simulating duplicate genomes;
 //! - formatting helpers ([`fmt_cycles`], [`fmt_energy`], [`fmt_bytes`],
 //!   [`geomean`]) shared by the CLI and the benches.
 //!
@@ -34,15 +34,16 @@ pub struct EnergyBreakdown {
     pub mac_pj: f64,
     /// On-chip SRAM access energy inside the cores (pJ).
     pub onchip_pj: f64,
-    /// Inter-core bus transfer energy (pJ).
-    pub bus_pj: f64,
-    /// Off-chip DRAM access energy (pJ).
+    /// Interconnect transfer energy (pJ): shared-bus crossings or, on
+    /// routed topologies, the summed per-hop link energies.
+    pub noc_pj: f64,
+    /// Off-chip DRAM channel energy (pJ).
     pub dram_pj: f64,
 }
 
 impl EnergyBreakdown {
     pub fn total(&self) -> f64 {
-        self.mac_pj + self.onchip_pj + self.bus_pj + self.dram_pj
+        self.mac_pj + self.onchip_pj + self.noc_pj + self.dram_pj
     }
 }
 
@@ -117,7 +118,7 @@ mod tests {
 
     #[test]
     fn breakdown_total() {
-        let b = EnergyBreakdown { mac_pj: 1.0, onchip_pj: 2.0, bus_pj: 3.0, dram_pj: 4.0 };
+        let b = EnergyBreakdown { mac_pj: 1.0, onchip_pj: 2.0, noc_pj: 3.0, dram_pj: 4.0 };
         assert_eq!(b.total(), 10.0);
     }
 

@@ -29,8 +29,9 @@ fn run_arch(arch: Accelerator, heterogeneous: bool, ga_params: GaParams) -> Vec<
     let graph = generate(&w, CnSet::build(&w, gran));
     let sched = Scheduler::new(&w, &graph, &costs, &arch);
     // one memo shared by both priorities' GA runs and the final
-    // reporting re-schedules (keys include the priority)
+    // reporting re-schedules (keys include the priority and topology)
     let cache = ScheduleCache::new();
+    let topo_fp = arch.topology.fingerprint();
 
     let manual = manual_allocation(&w, &arch, &costs, &cns, heterogeneous);
     let mut rows = Vec::new();
@@ -39,7 +40,8 @@ fn run_arch(arch: Accelerator, heterogeneous: bool, ga_params: GaParams) -> Vec<
         [("latency", SchedulePriority::Latency), ("memory", SchedulePriority::Memory)]
     {
         // manual baseline
-        let m = cache.get_or_compute(&manual, priority, || sched.run(&manual, priority).metrics);
+        let m = cache
+            .get_or_compute(&manual, priority, topo_fp, || sched.run(&manual, priority).metrics);
         rows.push(Fig12Row {
             arch: arch.name.clone(),
             method: "manual".into(),
@@ -70,7 +72,7 @@ fn run_arch(arch: Accelerator, heterogeneous: bool, ga_params: GaParams) -> Vec<
                 .expect("front nonempty"),
         };
         let m = cache
-            .get_or_compute(&best.allocation, priority, || {
+            .get_or_compute(&best.allocation, priority, topo_fp, || {
                 sched.run(&best.allocation, priority).metrics
             });
         rows.push(Fig12Row {

@@ -123,7 +123,7 @@ pub fn cells_to_json(cells: &[ExplorationCell]) -> String {
         o.insert("peak_mem_bytes".into(), Json::Num(m.peak_mem_bytes));
         o.insert("mac_pj".into(), Json::Num(m.breakdown.mac_pj));
         o.insert("onchip_pj".into(), Json::Num(m.breakdown.onchip_pj));
-        o.insert("bus_pj".into(), Json::Num(m.breakdown.bus_pj));
+        o.insert("noc_pj".into(), Json::Num(m.breakdown.noc_pj));
         o.insert("dram_pj".into(), Json::Num(m.breakdown.dram_pj));
         o.insert("avg_core_util".into(), Json::Num(m.avg_core_util));
         Json::Obj(o)
@@ -155,7 +155,7 @@ pub fn cells_from_json(text: &str) -> Option<Vec<ExplorationCell>> {
             breakdown: crate::cost::EnergyBreakdown {
                 mac_pj: j.get("mac_pj")?.as_f64()?,
                 onchip_pj: j.get("onchip_pj")?.as_f64()?,
-                bus_pj: j.get("bus_pj")?.as_f64()?,
+                noc_pj: j.get("noc_pj")?.as_f64()?,
                 dram_pj: j.get("dram_pj")?.as_f64()?,
             },
             avg_core_util: j.get("avg_core_util")?.as_f64()?,
@@ -279,7 +279,7 @@ pub fn format_fig15(cells: &[ExplorationCell]) -> String {
     let _ = writeln!(
         s,
         "{:<12} {:<9} {:<6} {:>11} {:>11} {:>11} {:>11}",
-        "workload", "arch", "sched", "mac(pJ)", "onchip(pJ)", "bus(pJ)", "dram(pJ)"
+        "workload", "arch", "sched", "mac(pJ)", "onchip(pJ)", "noc(pJ)", "dram(pJ)"
     );
     for c in cells {
         for (tag, m) in [("lbl", &c.lbl), ("fused", &c.fused)] {
@@ -287,7 +287,7 @@ pub fn format_fig15(cells: &[ExplorationCell]) -> String {
             let _ = writeln!(
                 s,
                 "{:<12} {:<9} {:<6} {:>11.3e} {:>11.3e} {:>11.3e} {:>11.3e}",
-                c.workload, c.arch, tag, b.mac_pj, b.onchip_pj, b.bus_pj, b.dram_pj
+                c.workload, c.arch, tag, b.mac_pj, b.onchip_pj, b.noc_pj, b.dram_pj
             );
         }
     }

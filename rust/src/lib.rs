@@ -22,10 +22,12 @@
 //!    `STREAM_THREADS`, bit-identical to the serial path) and memoized
 //!    through the [`cost`] module's `ScheduleCache`;
 //! 5. [`scheduler`] — schedule CNs onto cores with latency- or
-//!    memory-prioritized heuristics in O(log n) per pick, modeling bus
-//!    contention, DRAM-port contention and FIFO weight eviction
-//!    (Step 5.1), and trace activation memory usage over time
-//!    (Step 5.2).
+//!    memory-prioritized heuristics in O(log n) per pick, routing every
+//!    transfer over the architecture's interconnect topology
+//!    ([`arch::topology`]: shared bus, ring, 2-D mesh, crossbar or
+//!    custom fabrics) with per-link FCFS contention, nearest-DRAM-port
+//!    selection and FIFO weight eviction (Step 5.1), and trace
+//!    activation memory usage over time (Step 5.2).
 //!
 //! `docs/ARCHITECTURE.md` in the repository walks through the pipeline
 //! step by step and maps every module to its paper section.

@@ -3,7 +3,8 @@
 //! ```text
 //! stream list                                   # workloads & architectures
 //! stream schedule -w resnet18 -a hetero --gantt # run pipeline, print Gantt
-//! stream explore  -w resnet18,fsrcnn -a sc-tpu,hetero
+//! stream schedule -w resnet18 -a hetero@mesh    # same cores, 2-D-mesh NoC
+//! stream explore  -w resnet18,fsrcnn -a sc-tpu,hetero@ring
 //! stream validate                               # Table I reproduction
 //! stream allocation                             # Fig. 12 reproduction
 //! stream execute  [--artifacts DIR]             # run fused schedule on PJRT
@@ -27,13 +28,16 @@ stream — DSE of layer-fused DNNs on heterogeneous multi-core accelerators
 
 USAGE:
   stream list
-  stream schedule -w <workload> -a <arch> [--lines N] [--layer-by-layer]
+  stream schedule -w <workload> -a <arch[@topology]> [--lines N] [--layer-by-layer]
                   [--priority latency|memory] [--population N]
                   [--generations N] [--gantt] [--json <path>]
   stream explore  [-w w1,w2,...] [-a a1,a2,...] [--population N] [--generations N]
   stream validate
   stream allocation [--population N] [--generations N]
   stream execute  [--artifacts <dir>]
+
+Any architecture accepts an @topology suffix (bus|ring|mesh|crossbar)
+selecting its interconnect, e.g. hetero@mesh or hom-tpu@ring.
 ";
 
 /// Tiny flag parser: `--key value` / `--flag` / `-w value`.
@@ -113,12 +117,17 @@ fn cmd_list() -> Result<()> {
     for a in presets::ARCH_NAMES {
         let arch = presets::by_name(a).unwrap();
         println!(
-            "  {:<12} {:>2} cores {:>6} KB on-chip",
+            "  {:<12} {:>2} cores {:>6} KB on-chip  {}",
             a,
             arch.cores.len(),
-            arch.total_onchip_bytes() / 1024
+            arch.total_onchip_bytes() / 1024,
+            arch.topology
         );
     }
+    println!(
+        "topologies (suffix any arch with @name): {}",
+        presets::TOPOLOGY_NAMES.join(", ")
+    );
     Ok(())
 }
 

@@ -1,14 +1,17 @@
-//! The event-driven list scheduler (paper Fig. 7/8 semantics).
+//! The event-driven list scheduler (paper Fig. 7/8 semantics), with
+//! communication routed over the architecture's interconnect topology.
 
-use crate::arch::{Accelerator, CoreId, CoreKind};
+use crate::arch::{Accelerator, CoreId, CoreKind, LinkId};
 use crate::cn::CnId;
 use crate::cost::{EnergyBreakdown, ScheduleMetrics};
 use crate::depgraph::{CnGraph, EdgeKind};
 use crate::mapping::CostModel;
 use crate::scheduler::memtrace::MemTrace;
 use crate::scheduler::pool::CandidatePool;
-use crate::scheduler::resources::{Bus, DramPort, WeightTracker};
-use crate::scheduler::{CommEvent, DramEvent, DramKind, SchedulePriority, ScheduleResult};
+use crate::scheduler::resources::{FcfsLink, LinkSet, WeightTracker};
+use crate::scheduler::{
+    CommEvent, DramEvent, DramKind, LinkStat, SchedulePriority, ScheduleResult,
+};
 use crate::workload::{LayerId, OpType, WorkloadGraph};
 
 /// Placement and timing of one scheduled CN.
@@ -122,10 +125,14 @@ impl<'a> Scheduler<'a> {
             }
         }
 
+        // Heuristic readiness penalty for non-resident weights: the
+        // fetch time at the topology's aggregate off-chip bandwidth
+        // (allocation-independent, so it can be precomputed; the actual
+        // fetch is routed per core at schedule time).
         let wgt_fetch_cc = workload
             .layers()
             .iter()
-            .map(|l| (l.weight_bytes() * 8).div_ceil(arch.dram_bw_bits.max(1)))
+            .map(|l| (l.weight_bytes() * 8).div_ceil(arch.topology.dram_bw_bits()))
             .collect();
 
         Scheduler {
@@ -190,6 +197,281 @@ impl<'a> Scheduler<'a> {
         self.run_impl(allocation, priority, false)
     }
 
+    /// The pre-topology scheduler, verbatim: one scalar FCFS bus and one
+    /// scalar FCFS DRAM port, no routing.  Only valid on a
+    /// [`shared_bus`](crate::arch::Topology::shared_bus) topology
+    /// (panics otherwise).  `rust/tests/topology_equivalence.rs` pins
+    /// the routed path against this bit-for-bit; it is not part of the
+    /// public API.
+    #[doc(hidden)]
+    pub fn run_legacy_bus(
+        &self,
+        allocation: &[CoreId],
+        priority: SchedulePriority,
+    ) -> ScheduleResult {
+        let (bus_bw, bus_pj, dram_bw, dram_pj) = self
+            .arch
+            .topology
+            .as_shared_bus()
+            .expect("run_legacy_bus requires a shared-bus topology");
+        // in the shared_bus constructor the bus is link 0, the DRAM
+        // channel link 1 — events carry them so results compare fully
+        let bus_link: Box<[LinkId]> = Box::new([LinkId(0)]);
+        let dram_link: Box<[LinkId]> = Box::new([LinkId(1)]);
+
+        let n = self.graph.len();
+        assert_eq!(allocation.len(), self.workload.len(), "allocation per layer");
+
+        let mut core_avail = vec![0u64; self.arch.cores.len()];
+        let mut core_busy = vec![0u64; self.arch.cores.len()];
+        let mut bus = FcfsLink::new(bus_bw);
+        let mut dram = FcfsLink::new(dram_bw);
+        let mut weights: Vec<WeightTracker> =
+            self.arch.cores.iter().map(|c| WeightTracker::new(c.wgt_mem_bytes)).collect();
+        let mut evicted: Vec<LayerId> = Vec::new();
+
+        let mut sched: Vec<Option<ScheduledCn>> = vec![None; n];
+        let mut pending: Vec<usize> = (0..n)
+            .map(|i| self.graph.pred_count(CnId(i)) + self.gate_preds[i].len())
+            .collect();
+        let mut pool = CandidatePool::new(n, self.arch.cores.len());
+        for i in 0..n {
+            if pending[i] == 0 {
+                self.add_candidate(CnId(i), &sched, &weights, allocation, &mut pool);
+            }
+        }
+
+        let mut trace = MemTrace::new();
+        let mut comms: Vec<CommEvent> = Vec::new();
+        let mut drams: Vec<DramEvent> = Vec::new();
+        let mut breakdown = EnergyBreakdown::default();
+        let mut scheduled_order = Vec::with_capacity(n);
+
+        let act_cap: f64 = self.arch.cores.iter().map(|c| c.act_mem_bytes as f64).sum();
+        let mut act_occ = 0.0f64;
+
+        loop {
+            let picked = match priority {
+                SchedulePriority::Latency => pool.pop_latency(act_occ, act_cap),
+                SchedulePriority::Memory => pool.pop_memory(act_occ, act_cap),
+            };
+            let Some(cn_id) = picked else { break };
+            let cn = self.graph.cns.node(cn_id);
+            let layer = self.workload.layer(cn.layer);
+            let core_id = allocation[cn.layer.0];
+            let core = self.arch.core(core_id);
+
+            let mut data_ready = 0u64;
+            for e in self.graph.pred_edges(cn_id) {
+                let p = sched[e.from.0].expect("pred scheduled");
+                match e.kind {
+                    EdgeKind::Order => data_ready = data_ready.max(p.end),
+                    EdgeKind::Data => {
+                        if p.core == core_id || e.bytes == 0 {
+                            data_ready = data_ready.max(p.end);
+                        } else {
+                            let (cs, ce) = bus.transfer(p.end, e.bytes);
+                            comms.push(CommEvent {
+                                from_core: p.core,
+                                to_core: core_id,
+                                start: cs,
+                                end: ce,
+                                bytes: e.bytes,
+                                links: bus_link.clone(),
+                            });
+                            breakdown.noc_pj += e.bytes as f64 * 8.0 * bus_pj;
+                            trace.push(cs, core_id, e.bytes as f64);
+                            act_occ += e.bytes as f64;
+                            let pf = self.fanout[p_layer(self.graph, e.from).0];
+                            trace.push(ce, p.core, -(e.bytes as f64) / pf);
+                            act_occ = (act_occ - e.bytes as f64 / pf).max(0.0);
+                            data_ready = data_ready.max(ce);
+                        }
+                    }
+                }
+            }
+
+            for g in &self.gate_preds[cn_id.0] {
+                data_ready = data_ready.max(sched[g.0].expect("gate scheduled").end);
+            }
+
+            let mut weights_ready = 0u64;
+            let wbytes = layer.weight_bytes();
+            if wbytes > 0 {
+                let fetch = weights[core_id.0].require_evicting(cn.layer, wbytes, &mut evicted);
+                if fetch > 0 {
+                    let (ds, de) = dram.transfer(0, fetch);
+                    drams.push(DramEvent {
+                        core: core_id,
+                        start: ds,
+                        end: de,
+                        bytes: fetch,
+                        kind: DramKind::WeightFetch,
+                        links: dram_link.clone(),
+                    });
+                    breakdown.dram_pj += fetch as f64 * 8.0 * dram_pj;
+                    if let CoreKind::Aimc { weight_load_pj, .. } = core.kind {
+                        breakdown.onchip_pj += fetch as f64 * 8.0 * weight_load_pj;
+                    }
+                    weights_ready = de;
+                    let fetched_layer = cn.layer;
+                    let evicted = &evicted;
+                    pool.rekey_core(core_id.0, |l| {
+                        if l == fetched_layer {
+                            Some(0)
+                        } else if evicted.contains(&l) {
+                            Some(self.wgt_fetch_cc[l.0])
+                        } else {
+                            None
+                        }
+                    });
+                }
+            }
+
+            let mut input_ready = 0u64;
+            let fresh = self.fresh_in_bytes[cn_id.0];
+            if fresh > 0 {
+                let (ds, de) = dram.transfer(0, fresh);
+                drams.push(DramEvent {
+                    core: core_id,
+                    start: ds,
+                    end: de,
+                    bytes: fresh,
+                    kind: DramKind::ActFetch,
+                    links: dram_link.clone(),
+                });
+                breakdown.dram_pj += fresh as f64 * 8.0 * dram_pj;
+                trace.push(ds, core_id, fresh as f64);
+                act_occ += fresh as f64;
+                input_ready = de;
+            }
+
+            let cost = self.costs.cn_cost(cn, core_id);
+            let start = core_avail[core_id.0]
+                .max(data_ready)
+                .max(weights_ready)
+                .max(input_ready);
+            let end = start + cost.compute_cycles;
+            core_avail[core_id.0] = end;
+            core_busy[core_id.0] += cost.compute_cycles;
+            breakdown.mac_pj += cost.mac_energy_pj;
+            breakdown.onchip_pj += cost.energy_pj - cost.mac_energy_pj;
+
+            trace.push(start, core_id, cn.output_bytes as f64);
+            act_occ += cn.output_bytes as f64;
+
+            if layer.predecessors.is_empty() {
+                trace.push(end, core_id, -(cn.discard_input_bytes as f64));
+                act_occ = (act_occ - cn.discard_input_bytes as f64).max(0.0);
+            } else {
+                for &p in &layer.predecessors {
+                    let share = match layer.op {
+                        OpType::Concat => {
+                            cn.discard_input_bytes as f64 * self.workload.layer(p).k as f64
+                                / layer.c as f64
+                        }
+                        _ => cn.discard_input_bytes as f64,
+                    };
+                    let p_core = allocation[p.0];
+                    if p_core == core_id {
+                        trace.push(end, core_id, -share / self.fanout[p.0]);
+                        act_occ = (act_occ - share / self.fanout[p.0]).max(0.0);
+                    } else {
+                        trace.push(end, core_id, -share);
+                        act_occ = (act_occ - share).max(0.0);
+                    }
+                }
+            }
+
+            if self.workload.successors(cn.layer).is_empty() {
+                let (ds, de) = dram.transfer(end, cn.output_bytes);
+                drams.push(DramEvent {
+                    core: core_id,
+                    start: ds,
+                    end: de,
+                    bytes: cn.output_bytes,
+                    kind: DramKind::ActStore,
+                    links: dram_link.clone(),
+                });
+                breakdown.dram_pj += cn.output_bytes as f64 * 8.0 * dram_pj;
+                trace.push(de, core_id, -(cn.output_bytes as f64));
+                act_occ = (act_occ - cn.output_bytes as f64).max(0.0);
+            }
+
+            let placed = ScheduledCn { cn: cn_id, core: core_id, start, end };
+            sched[cn_id.0] = Some(placed);
+            scheduled_order.push(placed);
+
+            for e in self.graph.succ_edges(cn_id) {
+                pending[e.to.0] -= 1;
+                if pending[e.to.0] == 0 {
+                    self.add_candidate(e.to, &sched, &weights, allocation, &mut pool);
+                }
+            }
+            for &g in &self.gate_succs[cn_id.0] {
+                pending[g.0] -= 1;
+                if pending[g.0] == 0 {
+                    self.add_candidate(g, &sched, &weights, allocation, &mut pool);
+                }
+            }
+        }
+
+        debug_assert!(sched.iter().all(|s| s.is_some()), "all CNs scheduled");
+
+        let compute_end = scheduled_order.iter().map(|s| s.end).max().unwrap_or(0);
+        let io_end = drams
+            .iter()
+            .map(|d| d.end)
+            .chain(comms.iter().map(|c| c.end))
+            .max()
+            .unwrap_or(0);
+        let latency = compute_end.max(io_end);
+
+        let dense_busy: u64 = self
+            .arch
+            .cores
+            .iter()
+            .filter(|c| !c.is_simd())
+            .map(|c| core_busy[c.id.0])
+            .sum();
+        let dense_count = self.arch.cores.iter().filter(|c| !c.is_simd()).count() as f64;
+        let avg_core_util = if latency > 0 {
+            dense_busy as f64 / (latency as f64 * dense_count)
+        } else {
+            0.0
+        };
+
+        let (peak, spill_bytes) = peak_and_spill(&trace, self.arch);
+        let mut latency = latency;
+        if spill_bytes > 0.5 {
+            breakdown.dram_pj += 2.0 * spill_bytes * 8.0 * dram_pj;
+            let extra_port = (2.0 * spill_bytes * 8.0 / dram_bw.max(1) as f64) as u64;
+            latency = latency.max(dram.busy_cycles + extra_port);
+        }
+
+        let metrics = ScheduleMetrics {
+            latency_cc: latency,
+            energy_pj: breakdown.total(),
+            peak_mem_bytes: peak,
+            breakdown,
+            avg_core_util,
+        };
+
+        let link_stats = vec![
+            LinkStat { busy_cycles: bus.busy_cycles, bytes_moved: bus.bytes_moved },
+            LinkStat { busy_cycles: dram.busy_cycles, bytes_moved: dram.bytes_moved },
+        ];
+
+        ScheduleResult {
+            cns: scheduled_order,
+            comms,
+            drams,
+            link_stats,
+            metrics,
+            memtrace: trace,
+        }
+    }
+
     fn run_impl(
         &self,
         allocation: &[CoreId],
@@ -199,10 +481,10 @@ impl<'a> Scheduler<'a> {
         let n = self.graph.len();
         assert_eq!(allocation.len(), self.workload.len(), "allocation per layer");
 
+        let topo = &self.arch.topology;
         let mut core_avail = vec![0u64; self.arch.cores.len()];
         let mut core_busy = vec![0u64; self.arch.cores.len()];
-        let mut bus = Bus::new(self.arch.bus_bw_bits);
-        let mut dram = DramPort::new(self.arch.dram_bw_bits);
+        let mut links = LinkSet::new(topo);
         let mut weights: Vec<WeightTracker> =
             self.arch.cores.iter().map(|c| WeightTracker::new(c.wgt_mem_bytes)).collect();
         let mut evicted: Vec<LayerId> = Vec::new();
@@ -250,7 +532,8 @@ impl<'a> Scheduler<'a> {
             let core = self.arch.core(core_id);
 
             // 1) incoming data: same-core preds gate by finish time;
-            //    cross-core preds need a bus communication node
+            //    cross-core preds need a routed communication node that
+            //    occupies every interconnect link between the two cores
             let mut data_ready = 0u64;
             for e in self.graph.pred_edges(cn_id) {
                 let p = sched[e.from.0].expect("pred scheduled");
@@ -260,16 +543,18 @@ impl<'a> Scheduler<'a> {
                         if p.core == core_id || e.bytes == 0 {
                             data_ready = data_ready.max(p.end);
                         } else {
-                            let (cs, ce) = bus.transfer(p.end, e.bytes);
+                            let route = topo.core_route(p.core, core_id);
+                            let (cs, ce) = links.transfer(route, p.end, e.bytes);
                             comms.push(CommEvent {
                                 from_core: p.core,
                                 to_core: core_id,
                                 start: cs,
                                 end: ce,
                                 bytes: e.bytes,
+                                links: route.into(),
                             });
-                            breakdown.bus_pj +=
-                                e.bytes as f64 * 8.0 * self.arch.bus_pj_per_bit;
+                            breakdown.noc_pj +=
+                                e.bytes as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
                             // consumer-side copy allocated at comm start
                             trace.push(cs, core_id, e.bytes as f64);
                             act_occ += e.bytes as f64;
@@ -288,21 +573,25 @@ impl<'a> Scheduler<'a> {
                 data_ready = data_ready.max(sched[g.0].expect("gate scheduled").end);
             }
 
-            // 2) weights: fetch through the DRAM port if not resident
+            // 2) weights: fetch through the nearest DRAM port if not
+            //    resident (channel + any NoC hops into the core)
             let mut weights_ready = 0u64;
             let wbytes = layer.weight_bytes();
             if wbytes > 0 {
                 let fetch = weights[core_id.0].require_evicting(cn.layer, wbytes, &mut evicted);
                 if fetch > 0 {
-                    let (ds, de) = dram.transfer(0, fetch);
+                    let route = topo.dram_load_route(core_id);
+                    let (ds, de) = links.transfer(route, 0, fetch);
                     drams.push(DramEvent {
                         core: core_id,
                         start: ds,
                         end: de,
                         bytes: fetch,
                         kind: DramKind::WeightFetch,
+                        links: route.into(),
                     });
-                    breakdown.dram_pj += fetch as f64 * 8.0 * self.arch.dram_pj_per_bit;
+                    breakdown.dram_pj += fetch as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
+                    breakdown.noc_pj += fetch as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
                     if let CoreKind::Aimc { weight_load_pj, .. } = core.kind {
                         breakdown.onchip_pj += fetch as f64 * 8.0 * weight_load_pj;
                     }
@@ -328,15 +617,18 @@ impl<'a> Scheduler<'a> {
             let mut input_ready = 0u64;
             let fresh = self.fresh_in_bytes[cn_id.0];
             if fresh > 0 {
-                let (ds, de) = dram.transfer(0, fresh);
+                let route = topo.dram_load_route(core_id);
+                let (ds, de) = links.transfer(route, 0, fresh);
                 drams.push(DramEvent {
                     core: core_id,
                     start: ds,
                     end: de,
                     bytes: fresh,
                     kind: DramKind::ActFetch,
+                    links: route.into(),
                 });
-                breakdown.dram_pj += fresh as f64 * 8.0 * self.arch.dram_pj_per_bit;
+                breakdown.dram_pj += fresh as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
+                breakdown.noc_pj += fresh as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
                 trace.push(ds, core_id, fresh as f64);
                 act_occ += fresh as f64;
                 input_ready = de;
@@ -384,17 +676,22 @@ impl<'a> Scheduler<'a> {
                 }
             }
 
-            // 6) sink outputs stream to DRAM
+            // 6) sink outputs stream to DRAM via the nearest port
             if self.workload.successors(cn.layer).is_empty() {
-                let (ds, de) = dram.transfer(end, cn.output_bytes);
+                let route = topo.dram_store_route(core_id);
+                let (ds, de) = links.transfer(route, end, cn.output_bytes);
                 drams.push(DramEvent {
                     core: core_id,
                     start: ds,
                     end: de,
                     bytes: cn.output_bytes,
                     kind: DramKind::ActStore,
+                    links: route.into(),
                 });
-                breakdown.dram_pj += cn.output_bytes as f64 * 8.0 * self.arch.dram_pj_per_bit;
+                breakdown.dram_pj +=
+                    cn.output_bytes as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
+                breakdown.noc_pj +=
+                    cn.output_bytes as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
                 trace.push(de, core_id, -(cn.output_bytes as f64));
                 act_occ = (act_occ - cn.output_bytes as f64).max(0.0);
             }
@@ -452,10 +749,16 @@ impl<'a> Scheduler<'a> {
         let (peak, spill_bytes) = peak_and_spill(&trace, self.arch);
         let mut latency = latency;
         if spill_bytes > 0.5 {
-            breakdown.dram_pj += 2.0 * spill_bytes * 8.0 * self.arch.dram_pj_per_bit;
-            let extra_port =
-                (2.0 * spill_bytes * 8.0 / self.arch.dram_bw_bits.max(1) as f64) as u64;
-            latency = latency.max(dram.busy_cycles + extra_port);
+            // spill round trips pay the mean port energy and extend the
+            // makespan to the aggregate-off-chip-bandwidth floor
+            breakdown.dram_pj += 2.0 * spill_bytes * 8.0 * topo.spill_dram_pj_per_bit();
+            let extra_port = (2.0 * spill_bytes * 8.0 / topo.dram_bw_bits() as f64) as u64;
+            let dram_busy = topo
+                .dram_channel_links()
+                .map(|l| links.busy_cycles(l))
+                .max()
+                .unwrap_or(0);
+            latency = latency.max(dram_busy + extra_port);
         }
 
         let metrics = ScheduleMetrics {
@@ -466,7 +769,20 @@ impl<'a> Scheduler<'a> {
             avg_core_util,
         };
 
-        ScheduleResult { cns: scheduled_order, comms, drams, metrics, memtrace: trace }
+        let link_stats = links
+            .stats()
+            .into_iter()
+            .map(|(busy_cycles, bytes_moved)| LinkStat { busy_cycles, bytes_moved })
+            .collect();
+
+        ScheduleResult {
+            cns: scheduled_order,
+            comms,
+            drams,
+            link_stats,
+            metrics,
+            memtrace: trace,
+        }
     }
 
     /// Register a CN whose predecessors (and buffer gates) are all
@@ -664,13 +980,26 @@ mod tests {
             .collect();
         let r = schedule(&w, &g, &costs, &arch, &alloc, SchedulePriority::Latency);
         assert!(!r.comms.is_empty());
-        assert!(r.metrics.breakdown.bus_pj > 0.0);
+        assert!(r.metrics.breakdown.noc_pj > 0.0);
         // bus transfers never overlap (FCFS single resource)
         let mut sorted = r.comms.clone();
         sorted.sort_by_key(|c| c.start);
         for pair in sorted.windows(2) {
             assert!(pair[0].end <= pair[1].start);
         }
+        // on the shared bus every comm occupies exactly the bus link,
+        // and the link counters account for all communicated bytes
+        let total: u64 = sorted.iter().map(|c| c.bytes).sum();
+        assert!(sorted.iter().all(|c| c.links.len() == 1));
+        assert_eq!(r.link_stats[c_bus(&arch)].bytes_moved, total);
+    }
+
+    fn c_bus(arch: &Accelerator) -> usize {
+        arch.topology
+            .links()
+            .iter()
+            .position(|l| l.kind == crate::arch::LinkKind::Noc)
+            .unwrap()
     }
 
     #[test]
@@ -728,6 +1057,159 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    /// Satellite coverage: the bounded-buffer gate edges built in
+    /// `Scheduler::new` must exist under memory pressure, always point
+    /// from a deeper-layer consumer CN back to a shallower-layer
+    /// producer CN whose pending output lies above the gate's window
+    /// (so they can never close a cycle with the forward data edges),
+    /// and stay internally consistent with their reverse index.
+    #[test]
+    fn bounded_buffer_gates_constructed_and_consistent() {
+        let w = tiny_segment();
+        let mut arch = presets::test_dual();
+        for c in &mut arch.cores {
+            c.act_mem_bytes = 2 * 1024; // starve the activation budget
+        }
+        let gran = CnGranularity::Lines(2);
+        let cns = CnSet::build(&w, gran);
+        let costs = CostModel::build(&w, &cns, &arch);
+        let g = generate(&w, CnSet::build(&w, gran));
+        let s = Scheduler::new(&w, &g, &costs, &arch);
+
+        let n_gates: usize = s.gate_preds.iter().map(|v| v.len()).sum();
+        assert!(n_gates > 0, "tiny activation memory must gate producers");
+        assert_eq!(
+            n_gates,
+            s.gate_succs.iter().map(|v| v.len()).sum::<usize>(),
+            "forward and reverse gate indexes must agree"
+        );
+        for (p, gates) in s.gate_preds.iter().enumerate() {
+            let pcn = g.cns.node(CnId(p));
+            for gate in gates {
+                let gcn = g.cns.node(*gate);
+                assert!(
+                    gcn.layer > pcn.layer,
+                    "gate {:?} (layer {:?}) must be deeper than producer {:?} (layer {:?})",
+                    gate,
+                    gcn.layer,
+                    pcn.id,
+                    pcn.layer
+                );
+                assert!(
+                    gcn.in_rect.hi[1] < pcn.out_rect.lo[1],
+                    "gating consumer window must end below the producer's pending rows"
+                );
+                assert!(
+                    s.gate_succs[gate.0].contains(&pcn.id),
+                    "reverse index must list the gated producer"
+                );
+            }
+        }
+
+        // the gated graph still schedules to completion, for both
+        // priorities and both pool implementations
+        let alloc = simd_alloc(&w, &arch, CoreId(0));
+        for pr in [SchedulePriority::Latency, SchedulePriority::Memory] {
+            let a = s.run(&alloc, pr);
+            let b = s.run_reference(&alloc, pr);
+            assert_eq!(a.cns.len(), g.len());
+            assert_eq!(a.metrics.latency_cc, b.metrics.latency_cc);
+        }
+    }
+
+    #[test]
+    fn roomy_memory_builds_no_gates() {
+        let w = tiny_segment();
+        let mut arch = presets::test_dual();
+        for c in &mut arch.cores {
+            c.act_mem_bytes = 64 * 1024 * 1024; // every output fits whole
+        }
+        let gran = CnGranularity::Lines(4);
+        let cns = CnSet::build(&w, gran);
+        let costs = CostModel::build(&w, &cns, &arch);
+        let g = generate(&w, CnSet::build(&w, gran));
+        let s = Scheduler::new(&w, &g, &costs, &arch);
+        assert!(s.gate_preds.iter().all(|v| v.is_empty()));
+        assert!(s.gate_succs.iter().all(|v| v.is_empty()));
+    }
+
+    /// Satellite coverage: the single-pass peak + spill accounting.
+    #[test]
+    fn peak_and_spill_accounting() {
+        let arch = presets::test_dual(); // pooled act capacity 320 KB
+        let cap: f64 = arch.cores.iter().map(|c| c.act_mem_bytes as f64).sum();
+
+        // under capacity: peak tracked, nothing spills
+        let mut t = MemTrace::new();
+        t.push(0, CoreId(0), cap - 10.0);
+        t.push(5, CoreId(0), -(cap - 10.0));
+        let (peak, spill) = peak_and_spill(&t, &arch);
+        assert_eq!(peak, cap - 10.0);
+        assert_eq!(spill, 0.0);
+
+        // overflowing alloc spills exactly the overshoot
+        let mut t = MemTrace::new();
+        t.push(0, CoreId(0), cap);
+        t.push(1, CoreId(1), 100.0);
+        t.push(2, CoreId(0), -cap);
+        let (peak, spill) = peak_and_spill(&t, &arch);
+        assert_eq!(peak, cap + 100.0);
+        assert_eq!(spill, 100.0);
+
+        // same-timestamp free+alloc must net out (free sorts first)
+        let mut t = MemTrace::new();
+        t.push(0, CoreId(0), cap);
+        t.push(3, CoreId(0), -cap);
+        t.push(3, CoreId(1), cap);
+        let (peak, spill) = peak_and_spill(&t, &arch);
+        assert_eq!(peak, cap);
+        assert_eq!(spill, 0.0);
+
+        // repeated overshoot spills every round trip
+        let mut t = MemTrace::new();
+        t.push(0, CoreId(0), cap);
+        t.push(1, CoreId(0), 50.0);
+        t.push(2, CoreId(0), -50.0);
+        t.push(3, CoreId(0), 50.0);
+        let (_, spill) = peak_and_spill(&t, &arch);
+        assert_eq!(spill, 100.0);
+    }
+
+    #[test]
+    fn mesh_topology_schedules_with_multi_hop_comms() {
+        let w = tiny_segment();
+        let arch = presets::by_name("hetero@mesh").unwrap();
+        let gran = CnGranularity::Lines(4);
+        let cns = CnSet::build(&w, gran);
+        let costs = CostModel::build(&w, &cns, &arch);
+        let g = generate(&w, CnSet::build(&w, gran));
+        let simd = arch.simd_core().unwrap();
+        // spread dense layers over all four dense cores
+        let alloc: Vec<CoreId> = w
+            .layers()
+            .iter()
+            .map(|l| if l.op.is_dense() { CoreId(l.id.0 % 4) } else { simd })
+            .collect();
+        let r = schedule(&w, &g, &costs, &arch, &alloc, SchedulePriority::Latency);
+        assert_eq!(r.cns.len(), g.len());
+        assert!(
+            r.comms.iter().any(|c| c.links.len() > 1),
+            "a 5-core mesh must route some transfer over multiple hops"
+        );
+        // every event's bytes are accounted on every link it crossed
+        for c in &r.comms {
+            for l in c.links.iter() {
+                assert!(r.link_stats[l.0].bytes_moved >= c.bytes);
+            }
+        }
+        // dependencies still respected under multi-hop contention
+        let time: std::collections::HashMap<usize, (u64, u64)> =
+            r.cns.iter().map(|s| (s.cn.0, (s.start, s.end))).collect();
+        for e in &g.edges {
+            assert!(time[&e.to.0].0 >= time[&e.from.0].1);
         }
     }
 

@@ -132,4 +132,54 @@ mod tests {
         t.push(0, CoreId(0), 0.0);
         assert!(t.events.is_empty());
     }
+
+    #[test]
+    fn total_curve_is_time_ordered_with_running_total() {
+        let mut t = MemTrace::new();
+        // pushed out of order: the curve must still be time-sorted
+        t.push(20, CoreId(1), 30.0);
+        t.push(0, CoreId(0), 100.0);
+        t.push(10, CoreId(0), -40.0);
+        let curve = t.total_curve();
+        assert_eq!(curve, vec![(0, 0.0), (0, 100.0), (10, 60.0), (20, 90.0)]);
+        assert_eq!(t.peak(), 100.0);
+    }
+
+    #[test]
+    fn interleaved_cores_accumulate_into_one_pool() {
+        // peak-activation accounting is pooled across cores (paper
+        // Fig. 7: "total memory usage of all three cores"), so
+        // staggered per-core peaks must combine, not max
+        let mut t = MemTrace::new();
+        t.push(0, CoreId(0), 60.0);
+        t.push(1, CoreId(1), 50.0);
+        t.push(2, CoreId(2), 40.0);
+        t.push(3, CoreId(0), -60.0);
+        assert_eq!(t.peak(), 150.0);
+        assert_eq!(t.core_peak(CoreId(0)), 60.0);
+        assert_eq!(t.core_peak(CoreId(1)), 50.0);
+        assert_eq!(t.core_peak(CoreId(2)), 40.0);
+        assert_eq!(t.residual(), 90.0);
+    }
+
+    #[test]
+    fn handover_frees_producer_copy_exactly_once() {
+        // a producer feeding two consumer layers frees 1/fanout per
+        // consumer finish: the physical buffer is released exactly once
+        let mut t = MemTrace::new();
+        t.push(0, CoreId(0), 100.0); // producer output
+        t.push(5, CoreId(0), -50.0); // consumer A done (fanout 2)
+        t.push(9, CoreId(0), -50.0); // consumer B done
+        assert_eq!(t.peak(), 100.0);
+        assert!(t.residual().abs() < 1e-9);
+    }
+
+    #[test]
+    fn core_peak_with_equal_timestamps_frees_first() {
+        let mut t = MemTrace::new();
+        t.push(0, CoreId(0), 80.0);
+        t.push(4, CoreId(0), -80.0);
+        t.push(4, CoreId(0), 80.0); // swap at t=4 must not double-count
+        assert_eq!(t.core_peak(CoreId(0)), 80.0);
+    }
 }

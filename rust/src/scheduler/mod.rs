@@ -4,14 +4,18 @@
 //! modeling (paper Section III-E):
 //!
 //! 1. **Inter-core communication**: a communication node is inserted for
-//!    every producer→consumer data edge crossing cores; the shared bus
-//!    serves them first-come-first-serve with limited bandwidth
-//!    ([`resources::Bus`]).
+//!    every producer→consumer data edge crossing cores; the transfer is
+//!    routed over the architecture's interconnect
+//!    [`Topology`](crate::arch::Topology) and occupies **every** link of
+//!    its route first-come-first-serve at the route's bottleneck
+//!    bandwidth ([`resources::LinkSet`]).  A `shared_bus` topology
+//!    reduces to the paper's single-bus model.
 //! 2. **Off-chip fetching**: layer weights not resident in a core's
-//!    weight SRAM are fetched through the shared limited-bandwidth DRAM
-//!    port, evicting older weights FIFO ([`resources::WeightTracker`]);
-//!    the first layer's input activations and the last layer's outputs
-//!    also move through the port.
+//!    weight SRAM are fetched through the nearest DRAM port's shared
+//!    channel (plus any NoC hops on the way in), evicting older weights
+//!    FIFO ([`resources::WeightTracker`]); the first layer's input
+//!    activations and the last layer's outputs also route to the
+//!    nearest port.
 //!
 //! The scheduler keeps a candidate pool of CNs whose predecessors are
 //! all scheduled and picks the next one by the configured priority
@@ -21,10 +25,10 @@
 //! binary heaps per priority order plus per-core ready buckets that are
 //! re-keyed when a core's weight residency changes (see [`Scheduler`]
 //! and the internal `pool` module).  [`Scheduler::run`] takes `&self`,
-//! and all per-run mutable state ([`resources::Bus`],
-//! [`resources::DramPort`], [`resources::WeightTracker`], the pool) is
-//! local to the call, so one prebuilt scheduler can serve any number of
-//! GA fitness workers concurrently.
+//! and all per-run mutable state ([`resources::LinkSet`],
+//! [`resources::WeightTracker`], the pool) is local to the call, so one
+//! prebuilt scheduler can serve any number of GA fitness workers
+//! concurrently.
 //!
 //! Step 5.2: once start/end times are known, activation memory usage is
 //! traced from the CNs' discardable-input / generated-output attributes
@@ -38,7 +42,7 @@ pub mod resources;
 pub use engine::{schedule, ScheduledCn, Scheduler};
 pub use memtrace::{MemEvent, MemTrace};
 
-use crate::arch::CoreId;
+use crate::arch::{CoreId, LinkId};
 use crate::cost::ScheduleMetrics;
 
 /// Scheduling priority of the candidate pool (paper Fig. 8).
@@ -53,25 +57,37 @@ pub enum SchedulePriority {
     Memory,
 }
 
-/// One scheduled communication node (bus transfer).
-#[derive(Debug, Clone, Copy)]
+/// One scheduled communication node (inter-core transfer).
+#[derive(Debug, Clone)]
 pub struct CommEvent {
     pub from_core: CoreId,
     pub to_core: CoreId,
     pub start: u64,
     pub end: u64,
     pub bytes: u64,
+    /// The interconnect links the transfer occupied, in route order.
+    pub links: Box<[LinkId]>,
 }
 
-/// One scheduled DRAM-port transfer (weight fetch / act fetch / output
-/// store).
-#[derive(Debug, Clone, Copy)]
+/// One scheduled DRAM transfer (weight fetch / act fetch / output
+/// store), routed through the core's nearest DRAM port.
+#[derive(Debug, Clone)]
 pub struct DramEvent {
     pub core: CoreId,
     pub start: u64,
     pub end: u64,
     pub bytes: u64,
     pub kind: DramKind,
+    /// The links the transfer occupied (DRAM channel + any NoC hops).
+    pub links: Box<[LinkId]>,
+}
+
+/// Occupancy counters of one interconnect link over a whole schedule
+/// (indexes match [`Topology::links`](crate::arch::Topology::links)).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LinkStat {
+    pub busy_cycles: u64,
+    pub bytes_moved: u64,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -88,6 +104,8 @@ pub struct ScheduleResult {
     pub cns: Vec<ScheduledCn>,
     pub comms: Vec<CommEvent>,
     pub drams: Vec<DramEvent>,
+    /// Per-link occupancy, in the topology's link order.
+    pub link_stats: Vec<LinkStat>,
     pub metrics: ScheduleMetrics,
     pub memtrace: MemTrace,
 }

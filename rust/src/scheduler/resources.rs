@@ -1,33 +1,40 @@
-//! Shared-resource models: the inter-core bus, the off-chip DRAM port
-//! and the per-core weight-memory tracker with FIFO eviction.
+//! Shared-resource models: the routed interconnect link set and the
+//! per-core weight-memory tracker with FIFO eviction.
+//!
+//! The seed carried two byte-identical FCFS resources (`Bus` and
+//! `DramPort`); they are deduplicated into one [`FcfsLink`] primitive,
+//! and the topology refactor generalizes the pair to a [`LinkSet`] —
+//! one `FcfsLink` per [`Topology`](crate::arch::Topology) link, where a
+//! transfer reserves **every** link on its route.
 
 use std::collections::VecDeque;
 
+use crate::arch::{LinkId, Topology};
 use crate::workload::LayerId;
 
-/// First-come-first-serve shared bus (paper Section III-E1).
+/// One first-come-first-serve interconnect link (paper Section III-E1's
+/// shared-bus semantics, reused for every link of a routed topology).
 ///
-/// Communication nodes are served in scheduling order; the bus is a
-/// single shared resource, so a transfer starts at
-/// `max(data_ready, bus_free)` and occupies the bus for
-/// `ceil(bytes * 8 / bandwidth)` cycles.
+/// Transfers are served in scheduling order; the link is a single
+/// shared resource, so a transfer starts at `max(data_ready, free_at)`
+/// and occupies the link for `ceil(bytes * 8 / bandwidth)` cycles.
 ///
-/// All resource models ([`Bus`], [`DramPort`], [`WeightTracker`]) are
-/// plain-data and `Clone`: `Scheduler::run` builds a fresh set per
+/// All resource models ([`FcfsLink`], [`LinkSet`], [`WeightTracker`])
+/// are plain-data and `Clone`: `Scheduler::run` builds a fresh set per
 /// call, so concurrent per-genome simulations share nothing mutable —
 /// `Clone` additionally lets callers snapshot/fork resource state
 /// (e.g. for what-if probes) without reconstructing it.
 #[derive(Debug, Clone)]
-pub struct Bus {
+pub struct FcfsLink {
     bw_bits: u64,
     free_at: u64,
     pub busy_cycles: u64,
     pub bytes_moved: u64,
 }
 
-impl Bus {
-    pub fn new(bw_bits: u64) -> Bus {
-        Bus { bw_bits: bw_bits.max(1), free_at: 0, busy_cycles: 0, bytes_moved: 0 }
+impl FcfsLink {
+    pub fn new(bw_bits: u64) -> FcfsLink {
+        FcfsLink { bw_bits: bw_bits.max(1), free_at: 0, busy_cycles: 0, bytes_moved: 0 }
     }
 
     /// Schedule a transfer that becomes ready at `ready`; returns
@@ -47,28 +54,60 @@ impl Bus {
     }
 }
 
-/// Shared DRAM port, same FCFS semantics as the bus.
+/// The scheduler's view of a whole interconnect: one [`FcfsLink`] per
+/// topology link.  A routed transfer starts when its data is ready
+/// *and* every link along the route is free, runs at the route's
+/// bottleneck bandwidth, and occupies all its links until it ends —
+/// so multi-hop mesh/ring transfers contend with everything they
+/// cross, and a `shared_bus` topology reduces exactly to the seed's
+/// single-bus + single-DRAM-port behavior.
 #[derive(Debug, Clone)]
-pub struct DramPort {
-    bw_bits: u64,
-    free_at: u64,
-    pub busy_cycles: u64,
-    pub bytes_moved: u64,
+pub struct LinkSet {
+    links: Vec<FcfsLink>,
 }
 
-impl DramPort {
-    pub fn new(bw_bits: u64) -> DramPort {
-        DramPort { bw_bits: bw_bits.max(1), free_at: 0, busy_cycles: 0, bytes_moved: 0 }
+impl LinkSet {
+    pub fn new(topology: &Topology) -> LinkSet {
+        LinkSet {
+            links: topology.links().iter().map(|l| FcfsLink::new(l.bw_bits)).collect(),
+        }
     }
 
-    pub fn transfer(&mut self, ready: u64, bytes: u64) -> (u64, u64) {
-        let start = ready.max(self.free_at);
-        let dur = (bytes * 8).div_ceil(self.bw_bits);
+    /// Schedule a transfer over `route`; returns (start, end).
+    pub fn transfer(&mut self, route: &[LinkId], ready: u64, bytes: u64) -> (u64, u64) {
+        debug_assert!(!route.is_empty(), "transfer over an empty route");
+        let mut start = ready;
+        let mut bw = u64::MAX;
+        for l in route {
+            start = start.max(self.links[l.0].free_at);
+            bw = bw.min(self.links[l.0].bw_bits);
+        }
+        let dur = (bytes * 8).div_ceil(bw.max(1));
         let end = start + dur;
-        self.free_at = end;
-        self.busy_cycles += dur;
-        self.bytes_moved += bytes;
+        for l in route {
+            let link = &mut self.links[l.0];
+            link.free_at = end;
+            link.busy_cycles += dur;
+            link.bytes_moved += bytes;
+        }
         (start, end)
+    }
+
+    pub fn busy_cycles(&self, link: LinkId) -> u64 {
+        self.links[link.0].busy_cycles
+    }
+
+    pub fn bytes_moved(&self, link: LinkId) -> u64 {
+        self.links[link.0].bytes_moved
+    }
+
+    pub fn free_at(&self, link: LinkId) -> u64 {
+        self.links[link.0].free_at
+    }
+
+    /// Per-link (busy_cycles, bytes_moved) snapshot, in link-id order.
+    pub fn stats(&self) -> Vec<(u64, u64)> {
+        self.links.iter().map(|l| (l.busy_cycles, l.bytes_moved)).collect()
     }
 }
 
@@ -159,8 +198,8 @@ mod tests {
     use super::*;
 
     #[test]
-    fn bus_fcfs_contention() {
-        let mut bus = Bus::new(128); // 16 bytes/cc
+    fn link_fcfs_contention() {
+        let mut bus = FcfsLink::new(128); // 16 bytes/cc
         let (s1, e1) = bus.transfer(0, 1600); // 100 cc
         assert_eq!((s1, e1), (0, 100));
         // ready at 10 but bus busy until 100
@@ -173,10 +212,49 @@ mod tests {
     }
 
     #[test]
-    fn dram_rounding_up() {
-        let mut p = DramPort::new(64);
+    fn link_rounding_up() {
+        let mut p = FcfsLink::new(64);
         let (_, e) = p.transfer(0, 1); // 8 bits / 64 -> 1 cycle min
         assert_eq!(e, 1);
+    }
+
+    #[test]
+    fn linkset_occupies_every_route_link() {
+        // 4-core ring: 0 -> 2 crosses two clockwise links
+        let topo = Topology::ring(4, 128, 0.05, 64, 3.7);
+        let mut links = LinkSet::new(&topo);
+        let route: Vec<LinkId> =
+            topo.core_route(crate::arch::CoreId(0), crate::arch::CoreId(2)).to_vec();
+        assert_eq!(route.len(), 2);
+        let (s, e) = links.transfer(&route, 0, 1600); // 100 cc at 128 b/cc
+        assert_eq!((s, e), (0, 100));
+        for l in &route {
+            assert_eq!(links.busy_cycles(*l), 100);
+            assert_eq!(links.bytes_moved(*l), 1600);
+            assert_eq!(links.free_at(*l), 100);
+        }
+        // a transfer sharing the first hop (0 -> 1) waits for it...
+        let hop: Vec<LinkId> =
+            topo.core_route(crate::arch::CoreId(0), crate::arch::CoreId(1)).to_vec();
+        assert_eq!(hop, route[..1].to_vec());
+        let (s2, _) = links.transfer(&hop, 10, 16);
+        assert_eq!(s2, 100, "shared first hop serializes");
+        // ...while a disjoint hop (2 -> 3) does not
+        let far: Vec<LinkId> =
+            topo.core_route(crate::arch::CoreId(2), crate::arch::CoreId(3)).to_vec();
+        let (s3, _) = links.transfer(&far, 10, 16);
+        assert_eq!(s3, 10, "disjoint links run in parallel");
+    }
+
+    #[test]
+    fn linkset_runs_at_bottleneck_bandwidth() {
+        // mesh DRAM load: 64 b/cc channel feeding 128 b/cc hops
+        let topo = Topology::mesh2d(4, 2, 128, 0.05, 64, 3.7, 1);
+        let mut links = LinkSet::new(&topo);
+        let route: Vec<LinkId> = topo.dram_load_route(crate::arch::CoreId(3)).to_vec();
+        assert!(route.len() > 1);
+        let (s, e) = links.transfer(&route, 0, 800); // 6400 bits / 64 = 100 cc
+        assert_eq!((s, e), (0, 100));
     }
 
     #[test]

@@ -7,9 +7,11 @@ use crate::arch::Accelerator;
 use crate::scheduler::ScheduleResult;
 use crate::workload::WorkloadGraph;
 
-/// Render a proportional ASCII Gantt chart of the schedule: one lane per
-/// core (plus bus and DRAM lanes), `width` characters across the
-/// makespan.  CN blocks are labeled by layer id (mod 10).
+/// Render a proportional ASCII Gantt chart of the schedule: one lane
+/// per core plus one lane per interconnect link (shared-bus topologies
+/// show the familiar `bus` and `dram0` lanes; meshes show every hop),
+/// `width` characters across the makespan.  CN blocks are labeled by
+/// layer id (mod 10).
 pub fn gantt(
     result: &ScheduleResult,
     workload: &WorkloadGraph,
@@ -33,23 +35,30 @@ pub fn gantt(
         let _ = writeln!(out, "{:>8} |{}|", core.name, String::from_utf8_lossy(&lane));
     }
 
-    // bus lane
-    let mut lane = vec![b'.'; width];
-    for c in &result.comms {
-        for ch in lane.iter_mut().take(scale(c.end) + 1).skip(scale(c.start)) {
-            *ch = b'#';
+    // one lane per interconnect link, occupied by every comm / DRAM
+    // event whose route crosses it
+    for (i, link) in arch.topology.links().iter().enumerate() {
+        let id = crate::arch::LinkId(i);
+        let mut lane = vec![b'.'; width];
+        let spans = result
+            .comms
+            .iter()
+            .filter(|c| c.links.contains(&id))
+            .map(|c| (c.start, c.end))
+            .chain(
+                result
+                    .drams
+                    .iter()
+                    .filter(|d| d.links.contains(&id))
+                    .map(|d| (d.start, d.end)),
+            );
+        for (s, e) in spans {
+            for ch in lane.iter_mut().take(scale(e) + 1).skip(scale(s)) {
+                *ch = b'#';
+            }
         }
+        let _ = writeln!(out, "{:>8} |{}|", link.name, String::from_utf8_lossy(&lane));
     }
-    let _ = writeln!(out, "{:>8} |{}|", "bus", String::from_utf8_lossy(&lane));
-
-    // dram lane
-    let mut lane = vec![b'.'; width];
-    for d in &result.drams {
-        for ch in lane.iter_mut().take(scale(d.end) + 1).skip(scale(d.start)) {
-            *ch = b'#';
-        }
-    }
-    let _ = writeln!(out, "{:>8} |{}|", "dram", String::from_utf8_lossy(&lane));
 
     let _ = writeln!(
         out,
@@ -102,6 +111,20 @@ pub fn to_json(result: &ScheduleResult) -> String {
             o.insert("start".into(), Json::Num(c.start as f64));
             o.insert("end".into(), Json::Num(c.end as f64));
             o.insert("bytes".into(), Json::Num(c.bytes as f64));
+            o.insert(
+                "links".into(),
+                Json::Arr(c.links.iter().map(|l| Json::Num(l.0 as f64)).collect()),
+            );
+            Json::Obj(o)
+        })
+        .collect();
+    let link_stats: Vec<Json> = result
+        .link_stats
+        .iter()
+        .map(|s| {
+            let mut o = BTreeMap::new();
+            o.insert("busy_cycles".into(), Json::Num(s.busy_cycles as f64));
+            o.insert("bytes_moved".into(), Json::Num(s.bytes_moved as f64));
             Json::Obj(o)
         })
         .collect();
@@ -118,6 +141,7 @@ pub fn to_json(result: &ScheduleResult) -> String {
     root.insert("peak_mem_bytes".into(), Json::Num(result.metrics.peak_mem_bytes));
     root.insert("cns".into(), Json::Arr(cns));
     root.insert("comms".into(), Json::Arr(comms));
+    root.insert("link_stats".into(), Json::Arr(link_stats));
     root.insert("mem_curve".into(), Json::Arr(curve));
     Json::Obj(root).to_string_compact()
 }
@@ -151,7 +175,32 @@ mod tests {
         assert!(g.contains("bus"));
         assert!(g.contains("dram"));
         assert!(g.contains("peak mem"));
-        assert_eq!(g.lines().count(), arch.cores.len() + 3);
+        // one lane per core, one per interconnect link, one footer
+        assert_eq!(
+            g.lines().count(),
+            arch.cores.len() + arch.topology.n_links() + 1
+        );
+    }
+
+    #[test]
+    fn gantt_renders_a_lane_per_mesh_link() {
+        let w = tiny_segment();
+        let arch = presets::with_noc(presets::test_dual(), "mesh").unwrap();
+        let s = Stream::new(
+            w.clone(),
+            arch.clone(),
+            StreamOpts {
+                ga: crate::allocator::GaParams { population: 6, generations: 2, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let mut r = s.run().unwrap();
+        let r = r.points.remove(0).result;
+        let g = gantt(&r, &w, &arch, 60);
+        assert_eq!(
+            g.lines().count(),
+            arch.cores.len() + arch.topology.n_links() + 1
+        );
     }
 
     #[test]

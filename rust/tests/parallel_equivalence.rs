@@ -22,7 +22,7 @@ fn assert_metrics_bit_equal(a: &ScheduleMetrics, b: &ScheduleMetrics, what: &str
     assert_eq!(a.peak_mem_bytes.to_bits(), b.peak_mem_bytes.to_bits(), "{what}: peak mem");
     assert_eq!(a.avg_core_util.to_bits(), b.avg_core_util.to_bits(), "{what}: util");
     assert_eq!(a.breakdown.mac_pj.to_bits(), b.breakdown.mac_pj.to_bits(), "{what}: mac");
-    assert_eq!(a.breakdown.bus_pj.to_bits(), b.breakdown.bus_pj.to_bits(), "{what}: bus");
+    assert_eq!(a.breakdown.noc_pj.to_bits(), b.breakdown.noc_pj.to_bits(), "{what}: noc");
     assert_eq!(a.breakdown.dram_pj.to_bits(), b.breakdown.dram_pj.to_bits(), "{what}: dram");
     assert_eq!(
         a.breakdown.onchip_pj.to_bits(),
@@ -136,14 +136,16 @@ fn cached_metrics_match_direct_scheduler_run() {
     let f = fixture(tiny_segment());
     let sched = Scheduler::new(&f.w, &f.graph, &f.costs, &f.arch);
     let cache = ScheduleCache::new();
+    let topo_fp = f.arch.topology.fingerprint();
     for priority in [SchedulePriority::Latency, SchedulePriority::Memory] {
         for genome in [[0u16, 1, 2], [1, 1, 1], [2, 0, 1]] {
             let alloc = allocation_from_genome(&f.w, &f.arch, &genome);
             let direct = sched.run(&alloc, priority).metrics;
-            let via_cache =
-                cache.get_or_compute(&alloc, priority, || sched.run(&alloc, priority).metrics);
+            let via_cache = cache.get_or_compute(&alloc, priority, topo_fp, || {
+                sched.run(&alloc, priority).metrics
+            });
             assert_metrics_bit_equal(&direct, &via_cache, "memo transparency (miss)");
-            let hit = cache.get(&alloc, priority).expect("cached");
+            let hit = cache.get(&alloc, priority, topo_fp).expect("cached");
             assert_metrics_bit_equal(&direct, &hit, "memo transparency (hit)");
         }
     }

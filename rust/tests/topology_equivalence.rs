@@ -1,0 +1,225 @@
+//! The load-bearing refactor guarantee: on a `shared_bus` topology the
+//! routed scheduler (`Scheduler::run`, LinkSet + precomputed routes) is
+//! **bit-for-bit** the pre-refactor scheduler (`Scheduler::run_legacy_bus`,
+//! one scalar FCFS bus + one scalar FCFS DRAM port) — same
+//! `ScheduleMetrics`, same per-CN placement and timing, same events and
+//! per-link counters — across the paper's Fig. 12/13 workloads, both
+//! priorities and multiple allocations.
+//!
+//! A second set of tests shows the opposite for routed fabrics: a mesh
+//! genuinely reroutes and re-times traffic, so the topology axis is a
+//! real modeling axis and not a renaming.
+
+use stream::arch::{presets, Accelerator, CoreId};
+use stream::cn::{CnGranularity, CnSet};
+use stream::depgraph::{generate, CnGraph};
+use stream::mapping::CostModel;
+use stream::scheduler::{SchedulePriority, ScheduleResult, Scheduler};
+use stream::workload::{models, WorkloadGraph};
+
+struct Fx {
+    w: WorkloadGraph,
+    arch: Accelerator,
+    g: CnGraph,
+    costs: CostModel,
+}
+
+fn fixture(workload: &str, arch: &str, gran: CnGranularity) -> Fx {
+    let w = models::by_name(workload).unwrap();
+    let arch = presets::by_name(arch).unwrap();
+    let cns = CnSet::build(&w, gran);
+    let costs = CostModel::build(&w, &cns, &arch);
+    let g = generate(&w, CnSet::build(&w, gran));
+    Fx { w, arch, g, costs }
+}
+
+fn round_robin_alloc(f: &Fx) -> Vec<CoreId> {
+    let dense = f.arch.dense_cores();
+    let simd = f.arch.simd_core().unwrap();
+    let mut i = 0;
+    f.w.layers()
+        .iter()
+        .map(|l| {
+            if l.op.is_dense() {
+                let c = dense[i % dense.len()];
+                i += 1;
+                c
+            } else {
+                simd
+            }
+        })
+        .collect()
+}
+
+fn single_core_alloc(f: &Fx) -> Vec<CoreId> {
+    let dense = f.arch.dense_cores()[0];
+    let simd = f.arch.simd_core().unwrap();
+    f.w.layers()
+        .iter()
+        .map(|l| if l.op.is_dense() { dense } else { simd })
+        .collect()
+}
+
+fn assert_bit_identical(a: &ScheduleResult, b: &ScheduleResult, what: &str) {
+    // metrics, bit for bit
+    assert_eq!(a.metrics.latency_cc, b.metrics.latency_cc, "{what}: latency");
+    assert_eq!(a.metrics.energy_pj.to_bits(), b.metrics.energy_pj.to_bits(), "{what}: energy");
+    assert_eq!(
+        a.metrics.peak_mem_bytes.to_bits(),
+        b.metrics.peak_mem_bytes.to_bits(),
+        "{what}: peak mem"
+    );
+    assert_eq!(
+        a.metrics.avg_core_util.to_bits(),
+        b.metrics.avg_core_util.to_bits(),
+        "{what}: util"
+    );
+    let (ba, bb) = (a.metrics.breakdown, b.metrics.breakdown);
+    assert_eq!(ba.mac_pj.to_bits(), bb.mac_pj.to_bits(), "{what}: mac");
+    assert_eq!(ba.onchip_pj.to_bits(), bb.onchip_pj.to_bits(), "{what}: onchip");
+    assert_eq!(ba.noc_pj.to_bits(), bb.noc_pj.to_bits(), "{what}: noc");
+    assert_eq!(ba.dram_pj.to_bits(), bb.dram_pj.to_bits(), "{what}: dram");
+
+    // per-CN placement and timing, in scheduling order
+    assert_eq!(a.cns.len(), b.cns.len(), "{what}: CN count");
+    for (x, y) in a.cns.iter().zip(&b.cns) {
+        assert_eq!(
+            (x.cn, x.core, x.start, x.end),
+            (y.cn, y.core, y.start, y.end),
+            "{what}: CN placement"
+        );
+    }
+
+    // events and link occupancy
+    assert_eq!(a.comms.len(), b.comms.len(), "{what}: comm count");
+    for (x, y) in a.comms.iter().zip(&b.comms) {
+        assert_eq!(
+            (x.from_core, x.to_core, x.start, x.end, x.bytes),
+            (y.from_core, y.to_core, y.start, y.end, y.bytes),
+            "{what}: comm event"
+        );
+        assert_eq!(x.links, y.links, "{what}: comm route");
+    }
+    assert_eq!(a.drams.len(), b.drams.len(), "{what}: dram count");
+    for (x, y) in a.drams.iter().zip(&b.drams) {
+        assert_eq!(
+            (x.core, x.start, x.end, x.bytes, x.kind),
+            (y.core, y.start, y.end, y.bytes, y.kind),
+            "{what}: dram event"
+        );
+        assert_eq!(x.links, y.links, "{what}: dram route");
+    }
+    assert_eq!(a.link_stats, b.link_stats, "{what}: link stats");
+}
+
+fn check_workload(workload: &str, arch: &str, gran: CnGranularity) {
+    let f = fixture(workload, arch, gran);
+    let sched = Scheduler::new(&f.w, &f.g, &f.costs, &f.arch);
+    let allocs = [round_robin_alloc(&f), single_core_alloc(&f)];
+    for (ai, alloc) in allocs.iter().enumerate() {
+        for pr in [SchedulePriority::Latency, SchedulePriority::Memory] {
+            let routed = sched.run(alloc, pr);
+            let legacy = sched.run_legacy_bus(alloc, pr);
+            assert_bit_identical(
+                &routed,
+                &legacy,
+                &format!("{workload} on {arch}, alloc {ai}, {pr:?}"),
+            );
+        }
+    }
+}
+
+// -- shared_bus == legacy, on every Fig. 12/13 workload ------------------
+
+#[test]
+fn resnet18_shared_bus_matches_legacy() {
+    check_workload("resnet18", "hetero", CnGranularity::Lines(4));
+}
+
+#[test]
+fn mobilenetv2_shared_bus_matches_legacy() {
+    check_workload("mobilenetv2", "hetero", CnGranularity::Lines(8));
+}
+
+#[test]
+fn squeezenet_shared_bus_matches_legacy() {
+    check_workload("squeezenet", "hetero", CnGranularity::Lines(8));
+}
+
+#[test]
+fn tinyyolo_shared_bus_matches_legacy() {
+    check_workload("tinyyolo", "hom-tpu", CnGranularity::Lines(4));
+}
+
+#[test]
+fn fsrcnn_shared_bus_matches_legacy() {
+    check_workload("fsrcnn", "sc-env", CnGranularity::Lines(4));
+}
+
+#[test]
+fn layer_by_layer_granularity_matches_legacy_too() {
+    check_workload("resnet18", "hom-eye", CnGranularity::LayerByLayer);
+}
+
+// -- and a mesh is NOT the bus: the new axis does something --------------
+
+#[test]
+fn mesh_reroutes_and_retimes_real_traffic() {
+    let gran = CnGranularity::Lines(4);
+    let bus = fixture("resnet18", "hetero", gran);
+    let mesh = fixture("resnet18", "hetero@mesh", gran);
+    let alloc = round_robin_alloc(&bus);
+
+    let r_bus = Scheduler::new(&bus.w, &bus.g, &bus.costs, &bus.arch)
+        .run(&alloc, SchedulePriority::Latency);
+    let r_mesh = Scheduler::new(&mesh.w, &mesh.g, &mesh.costs, &mesh.arch)
+        .run(&alloc, SchedulePriority::Latency);
+
+    // same compute, different communication structure
+    assert_eq!(r_bus.cns.len(), r_mesh.cns.len());
+    assert!(
+        r_mesh.comms.iter().any(|c| c.links.len() > 1),
+        "mesh transfers must take multi-hop routes"
+    );
+    assert!(
+        r_bus.comms.iter().all(|c| c.links.len() == 1),
+        "bus transfers are single-hop by construction"
+    );
+    // more than two resources see traffic on the mesh
+    let active = r_mesh.link_stats.iter().filter(|s| s.bytes_moved > 0).count();
+    assert!(active > 2, "mesh spread traffic over {active} links only");
+    // and the schedules genuinely differ
+    assert!(
+        r_bus.metrics.latency_cc != r_mesh.metrics.latency_cc
+            || r_bus.metrics.energy_pj.to_bits() != r_mesh.metrics.energy_pj.to_bits(),
+        "bus and mesh must not produce identical schedules"
+    );
+}
+
+#[test]
+fn all_topologies_schedule_all_cns() {
+    let gran = CnGranularity::Lines(4);
+    for noc in presets::TOPOLOGY_NAMES {
+        let f = fixture("resnet18", &format!("hetero@{noc}"), gran);
+        let alloc = round_robin_alloc(&f);
+        let sched = Scheduler::new(&f.w, &f.g, &f.costs, &f.arch);
+        for pr in [SchedulePriority::Latency, SchedulePriority::Memory] {
+            let r = sched.run(&alloc, pr);
+            assert_eq!(r.cns.len(), f.g.len(), "{noc} {pr:?}");
+            // dependencies hold under routed contention
+            let time: std::collections::HashMap<usize, (u64, u64)> =
+                r.cns.iter().map(|s| (s.cn.0, (s.start, s.end))).collect();
+            for e in &f.g.edges {
+                assert!(time[&e.to.0].0 >= time[&e.from.0].1, "{noc} edge {e:?}");
+            }
+            // heap pool still matches the linear reference scan
+            let lin = sched.run_reference(&alloc, pr);
+            assert_eq!(r.metrics.latency_cc, lin.metrics.latency_cc, "{noc} {pr:?}");
+            assert_eq!(
+                r.metrics.energy_pj.to_bits(),
+                lin.metrics.energy_pj.to_bits(),
+                "{noc} {pr:?}"
+            );
+        }
+    }
+}
