@@ -19,7 +19,7 @@ use std::collections::{HashMap, HashSet};
 use crate::util::{parallel_map_with, thread_count, XorShift64};
 
 use super::allocation_from_genome;
-use super::nsga2::{crowding_distance, fast_non_dominated_sort};
+use super::nsga2::{fast_non_dominated_sort, select_survivors};
 use crate::arch::{Accelerator, CoreId};
 use crate::cost::{ScheduleCache, ScheduleMetrics};
 use crate::scheduler::{SchedulePriority, Scheduler};
@@ -353,24 +353,7 @@ impl<'a> Ga<'a> {
             let metrics = self.evaluate(&pool);
             let points: Vec<Vec<f64>> =
                 metrics.iter().map(|m| self.objective.values(m)).collect();
-            let fronts = fast_non_dominated_sort(&points);
-
-            let mut survivors: Vec<usize> = Vec::with_capacity(pop_size);
-            for front in &fronts {
-                if survivors.len() + front.len() <= pop_size {
-                    survivors.extend_from_slice(front);
-                } else {
-                    let d = crowding_distance(front, &points);
-                    let mut order: Vec<usize> = (0..front.len()).collect();
-                    order.sort_by(|&x, &y| {
-                        d[y].partial_cmp(&d[x]).unwrap_or(std::cmp::Ordering::Equal)
-                    });
-                    for &w in order.iter().take(pop_size - survivors.len()) {
-                        survivors.push(front[w]);
-                    }
-                    break;
-                }
-            }
+            let survivors = select_survivors(&points, pop_size);
             population = survivors.iter().map(|&i| pool[i].clone()).collect();
 
             // --- saturation check on the best scalarized objective ---

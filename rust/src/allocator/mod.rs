@@ -19,7 +19,7 @@ mod ga;
 mod nsga2;
 
 pub use ga::{manual_allocation, Ga, GaParams, GaResult, Objective};
-pub use nsga2::{crowding_distance, fast_non_dominated_sort, dominates};
+pub use nsga2::{crowding_distance, dominates, fast_non_dominated_sort, select_survivors};
 
 use crate::arch::{Accelerator, CoreId};
 use crate::workload::WorkloadGraph;
@@ -65,11 +65,68 @@ pub fn allocation_from_genome(
         .collect()
 }
 
+/// Total gene count of a multi-tenant genome: one gene per dense layer
+/// of every tenant, in tenant order (the scenario engine's
+/// `(tenant, layer) -> core` encoding).
+pub fn genome_len_multi(workloads: &[&WorkloadGraph]) -> usize {
+    workloads.iter().map(|w| w.dense_layers().len()).sum()
+}
+
+/// Expand a flat multi-tenant genome — tenant 0's dense genes first,
+/// then tenant 1's, … ([`genome_len_multi`] genes total) — into one
+/// per-layer core allocation per tenant.  Each tenant's segment expands
+/// exactly like [`allocation_from_genome`], so a 1-tenant multi genome
+/// degenerates to the single-workload encoding.
+///
+/// # Examples
+///
+/// ```
+/// use stream::allocator::{allocation_from_genome_multi, genome_len_multi};
+/// use stream::arch::presets;
+/// use stream::workload::models::tiny_segment;
+///
+/// let a = tiny_segment();
+/// let b = tiny_segment();
+/// let tenants = [&a, &b];
+/// let arch = presets::hetero_quad();
+/// assert_eq!(genome_len_multi(&tenants), 6); // 3 dense layers each
+/// let allocs = allocation_from_genome_multi(&tenants, &arch, &[0, 1, 2, 3, 0, 1]);
+/// assert_eq!(allocs.len(), 2);
+/// assert_eq!(allocs[0].len(), a.len());
+/// ```
+pub fn allocation_from_genome_multi(
+    workloads: &[&WorkloadGraph],
+    arch: &Accelerator,
+    genome: &[u16],
+) -> Vec<Vec<CoreId>> {
+    let mut out = Vec::with_capacity(workloads.len());
+    let mut off = 0usize;
+    for w in workloads {
+        let n = w.dense_layers().len();
+        out.push(allocation_from_genome(w, arch, &genome[off..off + n]));
+        off += n;
+    }
+    assert_eq!(off, genome.len(), "genome length must match the tenants' dense layers");
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::presets;
     use crate::workload::models::tiny_segment;
+
+    #[test]
+    fn multi_genome_segments_match_single_expansion() {
+        let a = tiny_segment();
+        let b = tiny_segment();
+        let arch = presets::hetero_quad();
+        let tenants = [&a, &b];
+        let genome = [0u16, 1, 2, 3, 0, 1];
+        let allocs = allocation_from_genome_multi(&tenants, &arch, &genome);
+        assert_eq!(allocs[0], allocation_from_genome(&a, &arch, &genome[..3]));
+        assert_eq!(allocs[1], allocation_from_genome(&b, &arch, &genome[3..]));
+    }
 
     #[test]
     fn genome_expansion() {

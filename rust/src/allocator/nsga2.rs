@@ -51,6 +51,33 @@ pub fn fast_non_dominated_sort(points: &[Vec<f64>]) -> Vec<Vec<usize>> {
     fronts
 }
 
+/// NSGA-II (μ+λ) environmental selection: the indices of the
+/// `pop_size` survivors of one parents+offspring pool, by
+/// non-domination rank first and crowding distance within the
+/// splitting front — the selection step shared by the single-model
+/// [`Ga`](crate::allocator::Ga) and the scenario-level
+/// [`ScenarioGa`](crate::scenario::ScenarioGa).
+pub fn select_survivors(points: &[Vec<f64>], pop_size: usize) -> Vec<usize> {
+    let fronts = fast_non_dominated_sort(points);
+    let mut survivors: Vec<usize> = Vec::with_capacity(pop_size);
+    for front in &fronts {
+        if survivors.len() + front.len() <= pop_size {
+            survivors.extend_from_slice(front);
+        } else {
+            let d = crowding_distance(front, points);
+            let mut order: Vec<usize> = (0..front.len()).collect();
+            order.sort_by(|&x, &y| {
+                d[y].partial_cmp(&d[x]).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            for &w in order.iter().take(pop_size - survivors.len()) {
+                survivors.push(front[w]);
+            }
+            break;
+        }
+    }
+    survivors
+}
+
 /// Crowding distance of each member of one front (index-aligned).
 /// Boundary points get +inf so they always survive.
 pub fn crowding_distance(front: &[usize], points: &[Vec<f64>]) -> Vec<f64> {
@@ -117,6 +144,24 @@ mod tests {
         let fronts = fast_non_dominated_sort(&pts);
         assert_eq!(fronts.len(), 3);
         assert_eq!(fronts[0], vec![1]);
+    }
+
+    #[test]
+    fn select_survivors_ranks_then_spreads() {
+        let pts = vec![
+            vec![1.0, 4.0], // front 0
+            vec![2.0, 3.0], // front 0
+            vec![3.0, 3.5], // front 1
+            vec![4.0, 1.0], // front 0
+            vec![5.0, 5.0], // front 2
+        ];
+        // the whole first front fits exactly
+        assert_eq!(select_survivors(&pts, 3), vec![0, 1, 3]);
+        // splitting the first front keeps the boundary (infinite
+        // crowding) points, in deterministic stable-sort order
+        assert_eq!(select_survivors(&pts, 2), vec![0, 3]);
+        // room for everyone: ranks concatenate
+        assert_eq!(select_survivors(&pts, 5), vec![0, 1, 3, 2, 4]);
     }
 
     #[test]

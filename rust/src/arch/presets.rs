@@ -176,7 +176,12 @@ pub fn by_name(name: &str) -> Option<Accelerator> {
         "hom-tpu" => Some(hom_tpu()),
         "hom-eye" => Some(hom_eye()),
         "hom-env" => Some(hom_env()),
-        "hetero" => Some(hetero_quad()),
+        // `hetero_quad` / `hetero-quad` alias the constructor name used
+        // throughout the docs (`stream scenario -a hetero_quad@mesh`)
+        "hetero" | "hetero_quad" | "hetero-quad" => Some(hetero_quad()),
+        // test fixture, resolvable by name (incl. @topology suffixes)
+        // for the integration tests; deliberately not in ARCH_NAMES
+        "test-dual" => Some(test_dual()),
         "depfin" => Some(depfin()),
         "aimc-4x4" => Some(aimc_4x4()),
         "diana" => Some(diana()),

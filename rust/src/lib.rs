@@ -29,6 +29,14 @@
 //!    selection and FIFO weight eviction (Step 5.1), and trace
 //!    activation memory usage over time (Step 5.2).
 //!
+//! On top of the per-inference pipeline, [`scenario`] (Step 6) turns
+//! the simulator into a **serving-scenario explorer**: multi-tenant
+//! request streams with deadlines and priorities are co-scheduled over
+//! the shared cores/links/DRAM ports under fifo / priority / EDF
+//! arbitration, reporting per-tenant p50/p99 latency, deadline-miss
+//! rate and throughput, with NSGA-II co-optimization of the
+//! `(tenant, layer) → core` partitioning.
+//!
 //! `docs/ARCHITECTURE.md` in the repository walks through the pipeline
 //! step by step and maps every module to its paper section.
 //!
@@ -59,6 +67,7 @@ pub mod mapping;
 pub mod pipeline;
 pub mod rtree;
 pub mod runtime;
+pub mod scenario;
 pub mod scheduler;
 pub mod util;
 pub mod viz;
@@ -70,6 +79,7 @@ pub mod prelude {
     pub use crate::cn::{CnGranularity, ComputationNode};
     pub use crate::cost::{EnergyBreakdown, ScheduleMetrics};
     pub use crate::pipeline::{SchedulePriority, Stream, StreamOpts, StreamResult};
+    pub use crate::scenario::{Arbitration, Scenario, ScenarioResult, ScenarioSim, Tenant};
     pub use crate::scheduler::ScheduleResult;
     pub use crate::workload::{Layer, LayerId, OpType, WorkloadGraph};
 }

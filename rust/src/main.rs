@@ -4,6 +4,7 @@
 //! stream list                                   # workloads & architectures
 //! stream schedule -w resnet18 -a hetero --gantt # run pipeline, print Gantt
 //! stream schedule -w resnet18 -a hetero@mesh    # same cores, 2-D-mesh NoC
+//! stream scenario -a hetero_quad@mesh -s edge_mix   # multi-DNN serving
 //! stream explore  -w resnet18,fsrcnn -a sc-tpu,hetero@ring
 //! stream validate                               # Table I reproduction
 //! stream allocation                             # Fig. 12 reproduction
@@ -31,6 +32,8 @@ USAGE:
   stream schedule -w <workload> -a <arch[@topology]> [--lines N] [--layer-by-layer]
                   [--priority latency|memory] [--population N]
                   [--generations N] [--gantt] [--json <path>]
+  stream scenario -a <arch[@topology]> -s <scenario> [--arbitration fifo|priority|edf]
+                  [--optimize] [--population N] [--generations N] [--gantt]
   stream explore  [-w w1,w2,...] [-a a1,a2,...] [--population N] [--generations N]
   stream validate
   stream allocation [--population N] [--generations N]
@@ -38,6 +41,10 @@ USAGE:
 
 Any architecture accepts an @topology suffix (bus|ring|mesh|crossbar)
 selecting its interconnect, e.g. hetero@mesh or hom-tpu@ring.
+`stream scenario` co-schedules a multi-DNN request stream (see
+`stream list` for canned scenarios); --optimize runs the scenario-level
+NSGA-II search over the (tenant, layer) -> core partitioning instead of
+the default per-tenant GA.
 ";
 
 /// Tiny flag parser: `--key value` / `--flag` / `-w value`.
@@ -91,6 +98,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "list" => cmd_list(),
         "schedule" => cmd_schedule(&args),
+        "scenario" => cmd_scenario(&args),
         "explore" => cmd_explore(&args),
         "validate" => cmd_validate(),
         "allocation" => cmd_allocation(&args),
@@ -128,6 +136,108 @@ fn cmd_list() -> Result<()> {
         "topologies (suffix any arch with @name): {}",
         presets::TOPOLOGY_NAMES.join(", ")
     );
+    println!("scenarios:");
+    for s in stream::scenario::SCENARIO_NAMES {
+        let sc = stream::scenario::by_name(s).unwrap();
+        println!(
+            "  {:<20} {:>2} tenants {:>3} requests",
+            s,
+            sc.tenants.len(),
+            sc.n_requests()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_scenario(args: &Args) -> Result<()> {
+    use stream::scenario::{Arbitration, ScenarioGa, ScenarioSim};
+
+    let arch_name =
+        args.opt(&["-a", "--arch"]).ok_or_else(|| anyhow!("missing -a <arch>"))?;
+    let scen_name =
+        args.opt(&["-s", "--scenario"]).ok_or_else(|| anyhow!("missing -s <scenario>"))?;
+    let arch = presets::by_name(&arch_name)
+        .ok_or_else(|| anyhow!("unknown arch {arch_name}"))?;
+    let scenario = stream::scenario::by_name(&scen_name)
+        .ok_or_else(|| anyhow!("unknown scenario {scen_name}"))?;
+    let arb_name = args.opt(&["--arbitration"]).unwrap_or_else(|| "edf".into());
+    let arbitration = Arbitration::by_name(&arb_name)
+        .ok_or_else(|| anyhow!("arbitration must be fifo|priority|edf, got {arb_name}"))?;
+    let ga = GaParams {
+        population: args.usize_opt(&["--population"], 8)?,
+        generations: args.usize_opt(&["--generations"], 4)?,
+        ..Default::default()
+    };
+
+    let t = stream::util::ScopeTimer::start();
+    let sim = ScenarioSim::new(&scenario, &arch).map_err(|e| anyhow!("{e}"))?;
+    let allocs = if args.flag("--optimize") {
+        let mut sga = ScenarioGa::new(&sim, arbitration, ga);
+        let front = sga.run();
+        let best = front.first().ok_or_else(|| anyhow!("empty scenario front"))?;
+        println!(
+            "co-optimized partitioning: {} Pareto points, best (misses {}, p99 {}, energy {})",
+            front.len(),
+            best.misses,
+            fmt_cycles(best.worst_p99_cc),
+            fmt_energy(best.energy_pj),
+        );
+        best.allocations.clone()
+    } else {
+        stream::scenario::per_tenant_ga(&sim, ga)
+    };
+    let r = sim.run(&allocs, arbitration);
+
+    println!(
+        "{scen_name} on {arch_name} [{arbitration}]: {} requests, makespan {}, {:.1} ms runtime",
+        r.outcomes.len(),
+        fmt_cycles(r.makespan_cc()),
+        t.elapsed_ms()
+    );
+    println!(
+        "energy {} | peak mem {} | dense-core util {:.0}%",
+        fmt_energy(r.metrics.energy_pj),
+        fmt_bytes(r.metrics.peak_mem_bytes),
+        100.0 * r.metrics.avg_core_util
+    );
+    println!(
+        "{:<14} {:>4} {:>12} {:>12} {:>12} {:>10} {:>10}",
+        "tenant", "req", "p50", "p99", "mean", "miss rate", "req/s"
+    );
+    for t in &r.tenants {
+        println!(
+            "{:<14} {:>4} {:>12} {:>12} {:>12} {:>9.0}% {:>10.1}",
+            t.name,
+            t.requests,
+            fmt_cycles(t.p50_cc),
+            fmt_cycles(t.p99_cc),
+            fmt_cycles(t.mean_cc as u64),
+            100.0 * t.miss_rate,
+            t.throughput_rps,
+        );
+    }
+    for core in &arch.cores {
+        println!("  {:<10} util {:>5.1}%", core.name, 100.0 * r.core_util(core.id));
+    }
+    let mut busiest: Vec<(usize, u64)> = r
+        .link_stats
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (i, s.busy_cycles))
+        .filter(|(_, b)| *b > 0)
+        .collect();
+    busiest.sort_by_key(|&(_, b)| std::cmp::Reverse(b));
+    for (i, _) in busiest.iter().take(4) {
+        println!(
+            "  {:<10} util {:>5.1}%  {} moved",
+            arch.topology.links()[*i].name,
+            100.0 * r.link_util(*i),
+            fmt_bytes(r.link_stats[*i].bytes_moved as f64),
+        );
+    }
+    if args.flag("--gantt") {
+        println!("{}", stream::viz::scenario_gantt(&r, &arch, 100));
+    }
     Ok(())
 }
 

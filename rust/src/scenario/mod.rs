@@ -1,0 +1,59 @@
+//! Step 6 — multi-DNN serving scenarios: request streams, deadlines and
+//! tail-latency-aware co-scheduling.
+//!
+//! The Steps 1–5 pipeline answers *"how fast does one inference of one
+//! model run?"*.  Real deployments ask a different question: how does a
+//! heterogeneous fabric behave under a **stream of requests from
+//! several DNNs** sharing cores, NoC links and DRAM ports (Herald's
+//! multi-DNN axis, on top of this crate's topology-aware Stream
+//! scheduler)?  This module opens that axis:
+//!
+//! - [`Scenario`] describes N [`Tenant`] models — any
+//!   [`workload::models`](crate::workload::models) entry — each with a
+//!   deterministic request pattern ([`Arrival`]: one-shot, periodic or
+//!   bursty trace), an optional per-request deadline and a priority;
+//! - [`ScenarioSim`] instantiates per-request CN graphs (reusing the
+//!   Step 1–3 splitting/cost machinery) and co-schedules **all**
+//!   requests in one event-driven run over the shared cores, routed
+//!   [`LinkSet`](crate::scheduler::resources::LinkSet) and per-core
+//!   weight memories (same-tenant requests reuse resident weights);
+//!   inter-request [`Arbitration`] (fifo / priority / earliest-deadline
+//!   -first) decides who gets the next scheduling decision;
+//! - [`ScenarioResult`] reports per-tenant p50/p99 latency,
+//!   deadline-miss rate, throughput (req/s at the modeled clock),
+//!   aggregate energy and per-core/per-link utilization;
+//! - [`ScenarioGa`] co-optimizes the static `(tenant, layer) → core`
+//!   partitioning across tenants with the NSGA-II machinery of Step 4.
+//!
+//! The degenerate 1-tenant / 1-request scenario reproduces
+//! [`Scheduler::run`](crate::scheduler::Scheduler::run) **bit-for-bit**
+//! (`rust/tests/scenario_equivalence.rs`), so the serving layer is a
+//! strict superset of the single-model pipeline.
+//!
+//! ```no_run
+//! use stream::arch::presets;
+//! use stream::scenario::{self, Arbitration, ScenarioSim};
+//!
+//! let scenario = scenario::edge_mix();
+//! let arch = presets::by_name("hetero_quad@mesh").unwrap();
+//! let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+//! let result = sim.run(&sim.greedy_allocations(), Arbitration::Edf);
+//! for t in &result.tenants {
+//!     println!("{}: p99 {} cc, miss rate {:.0}%", t.name, t.p99_cc, 100.0 * t.miss_rate);
+//! }
+//! ```
+
+mod engine;
+mod opt;
+mod result;
+mod spec;
+
+pub use engine::{Arbitration, ScenarioError, ScenarioRunner, ScenarioSim, TenantBuild};
+pub use opt::{per_tenant_ga, ScenarioGa, ScenarioGaResult};
+pub use result::{
+    percentile_cc, RequestOutcome, ScenarioCn, ScenarioResult, TenantStats,
+};
+pub use spec::{
+    av_pipeline, by_name, duplicate_resnet_x4, edge_mix, tiny_mix, Arrival, Request, Scenario,
+    Tenant, SCENARIO_NAMES,
+};

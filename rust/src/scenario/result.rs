@@ -1,0 +1,135 @@
+//! Scenario outputs: per-request outcomes, per-tenant tail-latency
+//! statistics and the aggregate schedule metrics.
+
+use crate::arch::CoreId;
+use crate::cost::ScheduleMetrics;
+use crate::scheduler::{CommEvent, DramEvent, LinkStat, MemTrace, ScheduledCn};
+
+/// One scheduled CN, tagged with the request it belongs to.
+#[derive(Debug, Clone, Copy)]
+pub struct ScenarioCn {
+    /// Request sequence number ([`Request::seq`](super::Request::seq)).
+    pub request: usize,
+    pub placed: ScheduledCn,
+}
+
+/// What happened to one request.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestOutcome {
+    pub request: usize,
+    pub tenant: usize,
+    pub release_cc: u64,
+    /// When the request's last CN / off-chip store finished.
+    pub completion_cc: u64,
+    /// `completion - release`.
+    pub latency_cc: u64,
+    pub deadline_abs_cc: Option<u64>,
+    /// `completion > deadline` (always `false` without a deadline).
+    pub missed: bool,
+}
+
+/// Tail-latency summary of one tenant's requests.
+#[derive(Debug, Clone)]
+pub struct TenantStats {
+    pub name: String,
+    pub requests: usize,
+    pub p50_cc: u64,
+    pub p99_cc: u64,
+    pub mean_cc: f64,
+    pub misses: usize,
+    /// `misses / requests` (0 when the tenant has no deadline).
+    pub miss_rate: f64,
+    /// Completed requests per second at the scenario's modeled clock.
+    pub throughput_rps: f64,
+}
+
+/// Complete scenario outcome: request-tagged schedule, per-tenant
+/// statistics and the same aggregate [`ScheduleMetrics`] the
+/// single-model scheduler reports (bit-identical for the degenerate
+/// 1-tenant / 1-request scenario — see `rust/tests/scenario_equivalence.rs`).
+#[derive(Debug)]
+pub struct ScenarioResult {
+    /// Aggregate metrics over the whole co-schedule (makespan, energy,
+    /// peak memory, dense-core utilization).
+    pub metrics: ScheduleMetrics,
+    pub cns: Vec<ScenarioCn>,
+    pub comms: Vec<CommEvent>,
+    /// Request tag per [`comms`](Self::comms) entry (index-aligned).
+    pub comm_req: Vec<usize>,
+    pub drams: Vec<DramEvent>,
+    /// Request tag per [`drams`](Self::drams) entry (index-aligned).
+    pub dram_req: Vec<usize>,
+    /// Per-link occupancy, in the topology's link order.
+    pub link_stats: Vec<LinkStat>,
+    /// Busy cycles per core, by core id.
+    pub core_busy: Vec<u64>,
+    pub memtrace: MemTrace,
+    pub outcomes: Vec<RequestOutcome>,
+    pub tenants: Vec<TenantStats>,
+}
+
+impl ScenarioResult {
+    /// Makespan of the whole scenario in cycles.
+    pub fn makespan_cc(&self) -> u64 {
+        self.metrics.latency_cc
+    }
+
+    /// Total deadline misses across tenants.
+    pub fn total_misses(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.missed).count()
+    }
+
+    /// Worst per-tenant p99 latency in cycles.
+    pub fn worst_p99_cc(&self) -> u64 {
+        self.tenants.iter().map(|t| t.p99_cc).max().unwrap_or(0)
+    }
+
+    /// Temporal utilization of one core (busy / makespan).
+    pub fn core_util(&self, core: CoreId) -> f64 {
+        if self.metrics.latency_cc == 0 {
+            return 0.0;
+        }
+        self.core_busy[core.0] as f64 / self.metrics.latency_cc as f64
+    }
+
+    /// Temporal utilization of one link (busy / makespan).
+    pub fn link_util(&self, link: usize) -> f64 {
+        if self.metrics.latency_cc == 0 {
+            return 0.0;
+        }
+        self.link_stats[link].busy_cycles as f64 / self.metrics.latency_cc as f64
+    }
+
+    /// The outcome rows of one tenant, in request order.
+    pub fn tenant_outcomes(&self, tenant: usize) -> impl Iterator<Item = &RequestOutcome> {
+        self.outcomes.iter().filter(move |o| o.tenant == tenant)
+    }
+}
+
+/// Nearest-rank percentile (`p` in [0, 100]) of an unsorted latency
+/// sample; 0 for an empty sample.
+pub fn percentile_cc(latencies: &[u64], p: f64) -> u64 {
+    if latencies.is_empty() {
+        return 0;
+    }
+    let mut sorted = latencies.to_vec();
+    sorted.sort_unstable();
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let l = [10, 20, 30, 40, 50, 60, 70, 80, 90, 100];
+        assert_eq!(percentile_cc(&l, 50.0), 50);
+        assert_eq!(percentile_cc(&l, 99.0), 100);
+        assert_eq!(percentile_cc(&l, 100.0), 100);
+        assert_eq!(percentile_cc(&l, 0.0), 10);
+        assert_eq!(percentile_cc(&[42], 99.0), 42);
+        assert_eq!(percentile_cc(&[], 50.0), 0);
+    }
+}

@@ -1,0 +1,304 @@
+//! Scenario descriptions: tenants, request patterns, deadlines and the
+//! canned scenario library.
+
+use crate::cn::CnGranularity;
+use crate::scheduler::SchedulePriority;
+use crate::workload::models;
+use crate::workload::WorkloadGraph;
+
+/// When a tenant's inference requests arrive, in clock cycles of the
+/// modeled accelerator.  All patterns are deterministic so scenario
+/// runs (and the GA fitness built on them) are exactly reproducible.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Arrival {
+    /// A single request released at `at_cc`.
+    OneShot { at_cc: u64 },
+    /// `count` requests released every `every_cc` cycles starting at
+    /// `offset_cc` (a periodic camera / sensor stream).
+    Periodic { every_cc: u64, count: usize, offset_cc: u64 },
+    /// An explicit release-time trace (deterministic bursty arrivals).
+    Burst { times_cc: Vec<u64> },
+}
+
+impl Arrival {
+    /// The release times this pattern expands to, ascending.
+    pub fn releases(&self) -> Vec<u64> {
+        match self {
+            Arrival::OneShot { at_cc } => vec![*at_cc],
+            Arrival::Periodic { every_cc, count, offset_cc } => {
+                let step = (*every_cc).max(1);
+                (0..*count).map(|i| *offset_cc + i as u64 * step).collect()
+            }
+            Arrival::Burst { times_cc } => {
+                let mut t = times_cc.clone();
+                t.sort_unstable();
+                t
+            }
+        }
+    }
+}
+
+/// One tenant model sharing the accelerator.
+#[derive(Debug, Clone)]
+pub struct Tenant {
+    /// Display name (e.g. `"detector"`).
+    pub name: String,
+    /// Workload name resolved through [`models::by_name`].
+    pub model: String,
+    pub arrival: Arrival,
+    /// Per-request deadline relative to its release, in cycles.
+    pub deadline_cc: Option<u64>,
+    /// Arbitration priority (higher wins under
+    /// [`Arbitration::Priority`](super::Arbitration::Priority)).
+    pub priority: u16,
+    /// Intra-request candidate-pool priority (paper Fig. 8 semantics,
+    /// per tenant).
+    pub pool_priority: SchedulePriority,
+}
+
+impl Tenant {
+    pub fn new(name: &str, model: &str, arrival: Arrival) -> Tenant {
+        Tenant {
+            name: name.to_string(),
+            model: model.to_string(),
+            arrival,
+            deadline_cc: None,
+            priority: 0,
+            pool_priority: SchedulePriority::Latency,
+        }
+    }
+
+    pub fn deadline(mut self, cc: u64) -> Tenant {
+        self.deadline_cc = Some(cc);
+        self
+    }
+
+    pub fn priority(mut self, p: u16) -> Tenant {
+        self.priority = p;
+        self
+    }
+
+    pub fn pool_priority(mut self, p: SchedulePriority) -> Tenant {
+        self.pool_priority = p;
+        self
+    }
+
+    /// Resolve the tenant's workload graph.
+    pub fn workload(&self) -> Option<WorkloadGraph> {
+        models::by_name(&self.model)
+    }
+}
+
+/// A multi-DNN serving scenario: N tenants, each with a request stream,
+/// sharing one accelerator's cores, interconnect links and DRAM ports.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub tenants: Vec<Tenant>,
+    /// CN granularity applied to every tenant (clamped per-arch like
+    /// the single-model pipeline).
+    pub granularity: CnGranularity,
+    /// Modeled clock in GHz, used only to convert cycle counts into
+    /// requests-per-second throughput.
+    pub clock_ghz: f64,
+}
+
+impl Scenario {
+    pub fn new(name: &str, tenants: Vec<Tenant>) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            tenants,
+            granularity: CnGranularity::Lines(4),
+            clock_ghz: 1.0,
+        }
+    }
+
+    /// Total request count across tenants.
+    pub fn n_requests(&self) -> usize {
+        self.tenants.iter().map(|t| t.arrival.releases().len()).sum()
+    }
+
+    /// Expand the tenants' arrival patterns into the request list the
+    /// engine schedules: sorted by (release, tenant order), so `seq`
+    /// is the FIFO arbitration order.
+    pub fn requests(&self) -> Vec<Request> {
+        let mut reqs = Vec::new();
+        for (t, tenant) in self.tenants.iter().enumerate() {
+            for release_cc in tenant.arrival.releases() {
+                reqs.push(Request {
+                    seq: 0,
+                    tenant: t,
+                    release_cc,
+                    deadline_abs_cc: tenant.deadline_cc.map(|d| release_cc + d),
+                });
+            }
+        }
+        reqs.sort_by_key(|r| (r.release_cc, r.tenant));
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.seq = i;
+        }
+        reqs
+    }
+}
+
+/// One concrete inference request expanded from a tenant's [`Arrival`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    /// Arrival order across the whole scenario (FIFO tie-break key).
+    pub seq: usize,
+    /// Index into [`Scenario::tenants`].
+    pub tenant: usize,
+    pub release_cc: u64,
+    /// Absolute deadline (`release + deadline_cc`), if any.
+    pub deadline_abs_cc: Option<u64>,
+}
+
+// ---------------------------------------------------------------------------
+// canned scenario library
+// ---------------------------------------------------------------------------
+
+/// Edge-device mix: a periodic classifier, a periodic low-priority
+/// enhancement net and a bursty high-priority detector — three tenants
+/// with different deadlines contending for the same fabric.
+pub fn edge_mix() -> Scenario {
+    Scenario::new(
+        "edge_mix",
+        vec![
+            Tenant::new(
+                "classifier",
+                "squeezenet",
+                Arrival::Periodic { every_cc: 2_000_000, count: 3, offset_cc: 0 },
+            )
+            .deadline(4_000_000)
+            .priority(1),
+            Tenant::new(
+                "enhancer",
+                "mobilenetv2",
+                Arrival::Periodic { every_cc: 1_500_000, count: 4, offset_cc: 250_000 },
+            )
+            .deadline(3_000_000),
+            Tenant::new(
+                "detector",
+                "tinyyolo",
+                Arrival::Burst { times_cc: vec![500_000, 3_500_000] },
+            )
+            .deadline(12_000_000)
+            .priority(2),
+        ],
+    )
+}
+
+/// Autonomous-vehicle pipeline: a hard-deadline perception net and a
+/// softer planning net on the same period, phase-shifted.
+pub fn av_pipeline() -> Scenario {
+    Scenario::new(
+        "av_pipeline",
+        vec![
+            Tenant::new(
+                "perception",
+                "tinyyolo",
+                Arrival::Periodic { every_cc: 8_000_000, count: 3, offset_cc: 0 },
+            )
+            .deadline(8_000_000)
+            .priority(3),
+            Tenant::new(
+                "planning",
+                "resnet18",
+                Arrival::Periodic { every_cc: 8_000_000, count: 3, offset_cc: 1_000_000 },
+            )
+            .deadline(16_000_000)
+            .priority(1),
+        ],
+    )
+}
+
+/// Herald-style duplicate co-location: four independent ResNet-18
+/// tenants released together, measuring pure multi-instance contention.
+pub fn duplicate_resnet_x4() -> Scenario {
+    Scenario::new(
+        "duplicate_resnet_x4",
+        (0..4)
+            .map(|i| {
+                Tenant::new(&format!("resnet18-{i}"), "resnet18", Arrival::OneShot { at_cc: 0 })
+            })
+            .collect(),
+    )
+}
+
+/// Tiny two-tenant mix over the synthetic test networks — fast enough
+/// for unit tests and CI smoke runs.
+pub fn tiny_mix() -> Scenario {
+    Scenario::new(
+        "tiny_mix",
+        vec![
+            Tenant::new(
+                "seg",
+                "tiny-segment",
+                Arrival::Periodic { every_cc: 20_000, count: 3, offset_cc: 0 },
+            )
+            .deadline(200_000)
+            .priority(1),
+            Tenant::new("branchy", "tiny-branchy", Arrival::Burst { times_cc: vec![0, 30_000] })
+                .deadline(300_000),
+        ],
+    )
+}
+
+/// Look a canned scenario up by CLI name.
+pub fn by_name(name: &str) -> Option<Scenario> {
+    match name {
+        "edge_mix" | "edge-mix" => Some(edge_mix()),
+        "av_pipeline" | "av-pipeline" => Some(av_pipeline()),
+        "duplicate_resnet_x4" | "duplicate-resnet-x4" => Some(duplicate_resnet_x4()),
+        "tiny_mix" | "tiny-mix" => Some(tiny_mix()),
+        _ => None,
+    }
+}
+
+pub const SCENARIO_NAMES: &[&str] =
+    &["edge_mix", "av_pipeline", "duplicate_resnet_x4", "tiny_mix"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_expansion() {
+        assert_eq!(Arrival::OneShot { at_cc: 7 }.releases(), vec![7]);
+        assert_eq!(
+            Arrival::Periodic { every_cc: 10, count: 3, offset_cc: 5 }.releases(),
+            vec![5, 15, 25]
+        );
+        assert_eq!(Arrival::Burst { times_cc: vec![9, 1, 4] }.releases(), vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn requests_sorted_and_sequenced() {
+        let s = tiny_mix();
+        let reqs = s.requests();
+        assert_eq!(reqs.len(), s.n_requests());
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.seq, i);
+        }
+        for pair in reqs.windows(2) {
+            assert!(
+                (pair[0].release_cc, pair[0].tenant) <= (pair[1].release_cc, pair[1].tenant)
+            );
+        }
+        // deadlines are absolute
+        assert_eq!(reqs[0].deadline_abs_cc, Some(reqs[0].release_cc + 200_000));
+    }
+
+    #[test]
+    fn library_resolves_models() {
+        for name in SCENARIO_NAMES {
+            let s = by_name(name).unwrap();
+            assert!(!s.tenants.is_empty(), "{name}");
+            for t in &s.tenants {
+                assert!(t.workload().is_some(), "{name}: unknown model {}", t.model);
+            }
+            assert!(s.n_requests() >= 1, "{name}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -34,18 +34,20 @@ pub struct Scheduler<'a> {
     pub costs: &'a CostModel,
     pub arch: &'a Accelerator,
     /// #consumer layers per layer (producer-buffer free scaling).
-    fanout: Vec<f64>,
+    /// `pub(crate)`: the scenario engine drives the same per-CN
+    /// accounting over many concurrent request instances.
+    pub(crate) fanout: Vec<f64>,
     /// fresh input bytes each source-layer CN must fetch from DRAM.
-    fresh_in_bytes: Vec<u64>,
+    pub(crate) fresh_in_bytes: Vec<u64>,
     /// Per-layer DRAM weight-fetch cycles (cached off the candidate
     /// selection hot loop; see EXPERIMENTS.md §Perf).
-    wgt_fetch_cc: Vec<u64>,
+    pub(crate) wgt_fetch_cc: Vec<u64>,
     /// Bounded-buffer gates: `gate_preds[p]` lists consumer CNs that
     /// must finish before producer CN `p` may start (streaming
     /// backpressure so producers cannot run arbitrarily far ahead of a
     /// slow consumer and flood the activation memory).
-    gate_preds: Vec<Vec<CnId>>,
-    gate_succs: Vec<Vec<CnId>>,
+    pub(crate) gate_preds: Vec<Vec<CnId>>,
+    pub(crate) gate_succs: Vec<Vec<CnId>>,
 }
 
 impl<'a> Scheduler<'a> {
@@ -833,7 +835,7 @@ fn p_layer(graph: &CnGraph, cn: CnId) -> LayerId {
 /// the fusion advantage of paper Figs. 14/15 in one number.  Capacity
 /// is pooled across cores, matching the paper's total-usage trace
 /// semantics (Fig. 7: "total memory usage of all three cores").
-fn peak_and_spill(trace: &MemTrace, arch: &Accelerator) -> (f64, f64) {
+pub(crate) fn peak_and_spill(trace: &MemTrace, arch: &Accelerator) -> (f64, f64) {
     let cap: f64 = arch.cores.iter().map(|c| c.act_mem_bytes as f64).sum();
     let mut evs: Vec<(u64, f64)> =
         trace.events.iter().map(|e| (e.time, e.delta)).collect();

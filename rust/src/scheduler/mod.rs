@@ -36,9 +36,10 @@
 
 mod engine;
 pub mod memtrace;
-mod pool;
+pub(crate) mod pool;
 pub mod resources;
 
+pub(crate) use engine::peak_and_spill;
 pub use engine::{schedule, ScheduledCn, Scheduler};
 pub use memtrace::{MemEvent, MemTrace};
 

@@ -123,6 +123,22 @@ impl CandidatePool {
         self.len += 1;
     }
 
+    /// Smallest *current* effective readiness among pooled candidates,
+    /// without removing anything — the scenario engine's inter-request
+    /// arbitration signal.  Stale `lat` leftovers (taken CNs, superseded
+    /// re-keys) are popped on the way; every live candidate always owns
+    /// one entry carrying its current key, so the first valid top is the
+    /// true minimum.
+    pub fn peek_min_eff(&mut self) -> Option<u64> {
+        while let Some(&Reverse((eff, _, _, cn))) = self.lat.peek() {
+            if self.slots[cn].state == State::In && eff == self.slots[cn].eff {
+                return Some(eff);
+            }
+            self.lat.pop();
+        }
+        None
+    }
+
     fn fits(&self, cn: usize, act_occ: f64, act_cap: f64) -> bool {
         act_occ + self.slots[cn].out_bytes as f64 <= act_cap
     }
@@ -349,6 +365,21 @@ mod tests {
         p.rekey_core(0, |l| if l == LayerId(0) { Some(50) } else { None });
         assert_eq!(p.pop_latency(0.0, 1e9).unwrap().0, 1);
         assert_eq!(p.pop_latency(0.0, 1e9).unwrap().0, 0);
+    }
+
+    #[test]
+    fn peek_min_eff_tracks_rekeys_and_takes() {
+        let mut p = CandidatePool::new(2, 1);
+        p.insert(CnId(0), LayerId(0), 0, 5, 5, 1, 0, true);
+        p.insert(CnId(1), LayerId(1), 0, 9, 9, 1, 0, false);
+        assert_eq!(p.peek_min_eff(), Some(5));
+        // evicting layer 0 re-keys CN 0 to 5 + 50: CN 1 is now minimal
+        p.rekey_core(0, |l| if l == LayerId(0) { Some(50) } else { None });
+        assert_eq!(p.peek_min_eff(), Some(9));
+        assert_eq!(p.pop_latency(0.0, 1e9).unwrap().0, 1);
+        assert_eq!(p.peek_min_eff(), Some(55));
+        assert_eq!(p.pop_latency(0.0, 1e9).unwrap().0, 0);
+        assert_eq!(p.peek_min_eff(), None);
     }
 
     /// The load-bearing test: the heap path and the seed's linear scan

@@ -1,11 +1,49 @@
 //! Schedule visualization: text Gantt charts (paper Fig. 10) and JSON
 //! export of schedules + memory traces for external plotting.
+//!
+//! [`scenario_gantt`] renders multi-DNN co-schedules: one glyph per
+//! request, a legend mapping glyphs to tenants/releases/deadlines, and
+//! a deadline lane marking met (`|`) and missed (`!`) deadlines.
 
 use std::fmt::Write as _;
 
 use crate::arch::Accelerator;
-use crate::scheduler::ScheduleResult;
+use crate::scenario::ScenarioResult;
+use crate::scheduler::{CommEvent, DramEvent, ScheduleResult};
 use crate::workload::WorkloadGraph;
+
+/// One Gantt lane per interconnect link, occupied by every comm / DRAM
+/// event whose route crosses it (shared by [`gantt`] and
+/// [`scenario_gantt`]).
+fn link_lanes(
+    out: &mut String,
+    arch: &Accelerator,
+    comms: &[CommEvent],
+    drams: &[DramEvent],
+    width: usize,
+    scale: &dyn Fn(u64) -> usize,
+) {
+    for (i, link) in arch.topology.links().iter().enumerate() {
+        let id = crate::arch::LinkId(i);
+        let mut lane = vec![b'.'; width];
+        let spans = comms
+            .iter()
+            .filter(|c| c.links.contains(&id))
+            .map(|c| (c.start, c.end))
+            .chain(
+                drams
+                    .iter()
+                    .filter(|d| d.links.contains(&id))
+                    .map(|d| (d.start, d.end)),
+            );
+        for (s, e) in spans {
+            for ch in lane.iter_mut().take(scale(e) + 1).skip(scale(s)) {
+                *ch = b'#';
+            }
+        }
+        let _ = writeln!(out, "{:>8} |{}|", link.name, String::from_utf8_lossy(&lane));
+    }
+}
 
 /// Render a proportional ASCII Gantt chart of the schedule: one lane
 /// per core plus one lane per interconnect link (shared-bus topologies
@@ -35,30 +73,7 @@ pub fn gantt(
         let _ = writeln!(out, "{:>8} |{}|", core.name, String::from_utf8_lossy(&lane));
     }
 
-    // one lane per interconnect link, occupied by every comm / DRAM
-    // event whose route crosses it
-    for (i, link) in arch.topology.links().iter().enumerate() {
-        let id = crate::arch::LinkId(i);
-        let mut lane = vec![b'.'; width];
-        let spans = result
-            .comms
-            .iter()
-            .filter(|c| c.links.contains(&id))
-            .map(|c| (c.start, c.end))
-            .chain(
-                result
-                    .drams
-                    .iter()
-                    .filter(|d| d.links.contains(&id))
-                    .map(|d| (d.start, d.end)),
-            );
-        for (s, e) in spans {
-            for ch in lane.iter_mut().take(scale(e) + 1).skip(scale(s)) {
-                *ch = b'#';
-            }
-        }
-        let _ = writeln!(out, "{:>8} |{}|", link.name, String::from_utf8_lossy(&lane));
-    }
+    link_lanes(&mut out, arch, &result.comms, &result.drams, width, &scale);
 
     let _ = writeln!(
         out,
@@ -81,6 +96,105 @@ fn result_layer_digit(_w: &WorkloadGraph, result: &ScheduleResult, cn_idx: usize
         }
         None => b'?',
     }
+}
+
+/// Request glyphs for the scenario Gantt: request `seq` maps to
+/// `GLYPHS[seq % GLYPHS.len()]`.
+const GLYPHS: &[u8] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789";
+
+fn glyph(request: usize) -> u8 {
+    GLYPHS[request % GLYPHS.len()]
+}
+
+/// Render a multi-DNN scenario co-schedule: one lane per core with CN
+/// blocks **colored by request** (one glyph per request), one lane per
+/// interconnect link, a `deadline` lane marking every request's
+/// absolute deadline (`|` met, `!` missed), and a legend that maps each
+/// glyph to its tenant, release, completion and deadline verdict,
+/// followed by the per-tenant tail-latency summary.
+pub fn scenario_gantt(result: &ScenarioResult, arch: &Accelerator, width: usize) -> String {
+    let mut out = String::new();
+    let span = result.metrics.latency_cc.max(1) as f64;
+    let width = width.max(20);
+    let scale = |t: u64| {
+        (((t as f64 / span) * (width - 1) as f64) as usize).min(width - 1)
+    };
+
+    for core in &arch.cores {
+        let mut lane = vec![b'.'; width];
+        for s in result.cns.iter().filter(|s| s.placed.core == core.id) {
+            let (a, b) = (scale(s.placed.start), scale(s.placed.end).max(scale(s.placed.start)));
+            let g = glyph(s.request);
+            for c in lane.iter_mut().take(b + 1).skip(a) {
+                *c = g;
+            }
+        }
+        let _ = writeln!(out, "{:>8} |{}|", core.name, String::from_utf8_lossy(&lane));
+    }
+
+    link_lanes(&mut out, arch, &result.comms, &result.drams, width, &scale);
+
+    // deadline lane: one marker per request with a deadline; deadlines
+    // beyond the chart's time axis are legend-only (drawing them at
+    // the clamped last column would misplace them), and a miss is
+    // never overwritten by a met marker sharing the column
+    let mut lane = vec![b'.'; width];
+    for o in &result.outcomes {
+        if let Some(d) = o.deadline_abs_cc {
+            if d > result.metrics.latency_cc {
+                continue;
+            }
+            let col = scale(d);
+            if o.missed {
+                lane[col] = b'!';
+            } else if lane[col] != b'!' {
+                lane[col] = b'|';
+            }
+        }
+    }
+    let _ = writeln!(out, "{:>8} |{}|", "deadline", String::from_utf8_lossy(&lane));
+
+    // legend: glyph -> request
+    let _ = writeln!(out, "legend:");
+    for o in &result.outcomes {
+        let tenant = &result.tenants[o.tenant];
+        let verdict = match (o.deadline_abs_cc, o.missed) {
+            (None, _) => "-".to_string(),
+            (Some(d), false) => format!("dl {} ok", crate::cost::fmt_cycles(d)),
+            (Some(d), true) => format!("dl {} MISS", crate::cost::fmt_cycles(d)),
+        };
+        let _ = writeln!(
+            out,
+            "  {} = {} req{}  rel {}  done {}  {}",
+            glyph(o.request) as char,
+            tenant.name,
+            o.request,
+            crate::cost::fmt_cycles(o.release_cc),
+            crate::cost::fmt_cycles(o.completion_cc),
+            verdict,
+        );
+    }
+
+    for t in &result.tenants {
+        let _ = writeln!(
+            out,
+            "  {:<12} p50 {:>10}  p99 {:>10}  miss {}/{}  {:.1} req/s",
+            t.name,
+            crate::cost::fmt_cycles(t.p50_cc),
+            crate::cost::fmt_cycles(t.p99_cc),
+            t.misses,
+            t.requests,
+            t.throughput_rps,
+        );
+    }
+    let _ = writeln!(
+        out,
+        "  t=0 .. {} cc | energy {} | peak mem {}",
+        result.metrics.latency_cc,
+        crate::cost::fmt_energy(result.metrics.energy_pj),
+        crate::cost::fmt_bytes(result.metrics.peak_mem_bytes),
+    );
+    out
 }
 
 /// Export a schedule as JSON (for notebook plotting of Fig. 7/10
@@ -201,6 +315,40 @@ mod tests {
             g.lines().count(),
             arch.cores.len() + arch.topology.n_links() + 1
         );
+    }
+
+    #[test]
+    fn scenario_gantt_has_request_glyphs_legend_and_deadline_lane() {
+        use crate::scenario::{self, Arbitration, ScenarioSim};
+        let scenario = scenario::tiny_mix();
+        let arch = presets::test_dual();
+        let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+        let r = sim.run(&sim.greedy_allocations(), Arbitration::Fifo);
+        let g = scenario_gantt(&r, &arch, 60);
+        assert!(g.contains("legend:"));
+        assert!(g.contains("deadline"));
+        // one legend line per request, glyphs starting at 'A'
+        assert!(g.contains("A = "));
+        assert!(g.contains("B = "));
+        // lanes: cores + links + deadline lane, then legend/summary
+        let framed = g.lines().filter(|l| l.ends_with('|')).count();
+        assert_eq!(framed, arch.cores.len() + arch.topology.n_links() + 1);
+    }
+
+    #[test]
+    fn scenario_gantt_marks_missed_deadlines() {
+        use crate::scenario::{self, Arbitration, ScenarioSim};
+        let mut scenario = scenario::tiny_mix();
+        for t in &mut scenario.tenants {
+            t.deadline_cc = Some(1); // impossible: everything misses
+        }
+        let arch = presets::test_dual();
+        let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+        let r = sim.run(&sim.greedy_allocations(), Arbitration::Edf);
+        assert!(r.total_misses() > 0);
+        let g = scenario_gantt(&r, &arch, 60);
+        assert!(g.contains('!'), "deadline lane must mark misses");
+        assert!(g.contains("MISS"), "legend must call out missed requests");
     }
 
     #[test]

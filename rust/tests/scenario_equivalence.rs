@@ -1,0 +1,262 @@
+//! The scenario engine's load-bearing guarantees (same spirit as
+//! `topology_equivalence.rs`):
+//!
+//! 1. **Degenerate equivalence** — a 1-tenant / 1-request scenario
+//!    released at t=0 reproduces `Scheduler::run` **bit-for-bit**:
+//!    same metrics, same per-CN placement/timing, same comm/DRAM
+//!    events and per-link counters.  The serving layer is a strict
+//!    superset of the single-model pipeline, not a reimplementation
+//!    that drifts.
+//! 2. **Arbitration is a real axis** — EDF and FIFO provably diverge
+//!    on a contended scenario: the tight-deadline tenant completes
+//!    strictly earlier under EDF, and a deadline placed between the
+//!    two completion times is met under EDF but missed under FIFO.
+
+use stream::arch::{presets, Accelerator, CoreId};
+use stream::cn::{CnGranularity, CnSet};
+use stream::depgraph::generate;
+use stream::mapping::CostModel;
+use stream::scenario::{Arbitration, Arrival, Scenario, ScenarioSim, Tenant};
+use stream::scheduler::{SchedulePriority, Scheduler};
+use stream::workload::models;
+
+fn round_robin_alloc(w: &stream::workload::WorkloadGraph, arch: &Accelerator) -> Vec<CoreId> {
+    let dense = arch.dense_cores();
+    let simd = arch.simd_core().unwrap();
+    let mut i = 0;
+    w.layers()
+        .iter()
+        .map(|l| {
+            if l.op.is_dense() {
+                let c = dense[i % dense.len()];
+                i += 1;
+                c
+            } else {
+                simd
+            }
+        })
+        .collect()
+}
+
+/// The degenerate scenario must be bit-identical to `Scheduler::run`
+/// for every arbitration policy and both pool priorities.
+fn check_degenerate(model: &str, arch_name: &str) {
+    let w = models::by_name(model).unwrap();
+    let arch = presets::by_name(arch_name).unwrap();
+    let gran = CnGranularity::Lines(4).for_arch(&arch);
+    let cns = CnSet::build(&w, gran);
+    let costs = CostModel::build(&w, &cns, &arch);
+    let g = generate(&w, CnSet::build(&w, gran));
+    let sched = Scheduler::new(&w, &g, &costs, &arch);
+    let alloc = round_robin_alloc(&w, &arch);
+
+    for pool_priority in [SchedulePriority::Latency, SchedulePriority::Memory] {
+        let reference = sched.run(&alloc, pool_priority);
+
+        let scenario = Scenario::new(
+            "degenerate",
+            vec![Tenant::new("solo", model, Arrival::OneShot { at_cc: 0 })
+                .pool_priority(pool_priority)],
+        );
+        let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+        for arb in [Arbitration::Fifo, Arbitration::Priority, Arbitration::Edf] {
+            let r = sim.run(std::slice::from_ref(&alloc), arb);
+            let what = format!("{model} on {arch_name}, {pool_priority:?}, {arb}");
+
+            // metrics, bit for bit
+            assert_eq!(r.metrics.latency_cc, reference.metrics.latency_cc, "{what}: latency");
+            assert_eq!(
+                r.metrics.energy_pj.to_bits(),
+                reference.metrics.energy_pj.to_bits(),
+                "{what}: energy"
+            );
+            assert_eq!(
+                r.metrics.peak_mem_bytes.to_bits(),
+                reference.metrics.peak_mem_bytes.to_bits(),
+                "{what}: peak mem"
+            );
+            assert_eq!(
+                r.metrics.avg_core_util.to_bits(),
+                reference.metrics.avg_core_util.to_bits(),
+                "{what}: util"
+            );
+            let (ba, bb) = (r.metrics.breakdown, reference.metrics.breakdown);
+            assert_eq!(ba.mac_pj.to_bits(), bb.mac_pj.to_bits(), "{what}: mac");
+            assert_eq!(ba.onchip_pj.to_bits(), bb.onchip_pj.to_bits(), "{what}: onchip");
+            assert_eq!(ba.noc_pj.to_bits(), bb.noc_pj.to_bits(), "{what}: noc");
+            assert_eq!(ba.dram_pj.to_bits(), bb.dram_pj.to_bits(), "{what}: dram");
+
+            // per-CN placement/timing in scheduling order, all tagged
+            // with the single request
+            assert_eq!(r.cns.len(), reference.cns.len(), "{what}: CN count");
+            for (x, y) in r.cns.iter().zip(&reference.cns) {
+                assert_eq!(x.request, 0, "{what}: request tag");
+                assert_eq!(
+                    (x.placed.cn, x.placed.core, x.placed.start, x.placed.end),
+                    (y.cn, y.core, y.start, y.end),
+                    "{what}: CN placement"
+                );
+            }
+
+            // events and link occupancy
+            assert_eq!(r.comms.len(), reference.comms.len(), "{what}: comm count");
+            for (x, y) in r.comms.iter().zip(&reference.comms) {
+                assert_eq!(
+                    (x.from_core, x.to_core, x.start, x.end, x.bytes),
+                    (y.from_core, y.to_core, y.start, y.end, y.bytes),
+                    "{what}: comm event"
+                );
+                assert_eq!(x.links, y.links, "{what}: comm route");
+            }
+            assert_eq!(r.drams.len(), reference.drams.len(), "{what}: dram count");
+            for (x, y) in r.drams.iter().zip(&reference.drams) {
+                assert_eq!(
+                    (x.core, x.start, x.end, x.bytes, x.kind),
+                    (y.core, y.start, y.end, y.bytes, y.kind),
+                    "{what}: dram event"
+                );
+                assert_eq!(x.links, y.links, "{what}: dram route");
+            }
+            assert_eq!(r.link_stats, reference.link_stats, "{what}: link stats");
+
+            // the serving view agrees with the schedule view
+            assert_eq!(r.outcomes.len(), 1, "{what}");
+            assert!(!r.outcomes[0].missed, "{what}: no deadline, no miss");
+            assert_eq!(r.tenants[0].requests, 1, "{what}");
+            assert_eq!(r.tenants[0].p50_cc, r.tenants[0].p99_cc, "{what}");
+        }
+    }
+}
+
+#[test]
+fn degenerate_scenario_matches_scheduler_tiny_segment_dual() {
+    check_degenerate("tiny-segment", "test-dual");
+}
+
+#[test]
+fn degenerate_scenario_matches_scheduler_tiny_branchy_hetero() {
+    check_degenerate("tiny-branchy", "hetero");
+}
+
+#[test]
+fn degenerate_scenario_matches_scheduler_on_mesh() {
+    check_degenerate("tiny-segment", "hetero_quad@mesh");
+}
+
+#[test]
+fn degenerate_scenario_matches_scheduler_resnet18() {
+    check_degenerate("resnet18", "hetero");
+}
+
+/// Two tenants, full contention (both pinned to the same dense core):
+/// tenant B has the tighter deadline but loses FIFO ties to tenant A.
+/// EDF must finish B strictly earlier than FIFO does, and a deadline
+/// placed between the two completion times separates the policies'
+/// miss behavior — the acceptance criterion's provable divergence.
+#[test]
+fn edf_and_fifo_provably_diverge_under_contention() {
+    let arch = presets::by_name("test-dual").unwrap();
+    let make = |deadline_b: u64| {
+        Scenario::new(
+            "contended",
+            vec![
+                Tenant::new("loose", "tiny-segment", Arrival::OneShot { at_cc: 0 })
+                    .deadline(1_000_000_000),
+                Tenant::new("tight", "tiny-segment", Arrival::OneShot { at_cc: 0 })
+                    .deadline(deadline_b),
+            ],
+        )
+    };
+
+    // everything on dense core 0: maximum contention
+    let scenario = make(1_000_000);
+    let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+    let simd = arch.simd_core().unwrap();
+    let pinned: Vec<CoreId> = sim.builds()[0]
+        .workload
+        .layers()
+        .iter()
+        .map(|l| if l.op.is_dense() { CoreId(0) } else { simd })
+        .collect();
+    let allocs = vec![pinned.clone(), pinned.clone()];
+
+    let fifo = sim.run(&allocs, Arbitration::Fifo);
+    let edf = sim.run(&allocs, Arbitration::Edf);
+    let done = |r: &stream::scenario::ScenarioResult, t: usize| {
+        r.tenant_outcomes(t).map(|o| o.completion_cc).max().unwrap()
+    };
+
+    let (fifo_tight, edf_tight) = (done(&fifo, 1), done(&edf, 1));
+    assert!(
+        edf_tight < fifo_tight,
+        "EDF must complete the tight-deadline tenant earlier: {edf_tight} vs {fifo_tight}"
+    );
+    assert!(
+        done(&edf, 0) >= done(&fifo, 0),
+        "EDF pays for it on the loose tenant"
+    );
+
+    // a deadline between the two completions separates the policies
+    let mid = (edf_tight + fifo_tight) / 2;
+    let scenario2 = make(mid);
+    let sim2 = ScenarioSim::new(&scenario2, &arch).unwrap();
+    let fifo2 = sim2.run(&allocs, Arbitration::Fifo);
+    let edf2 = sim2.run(&allocs, Arbitration::Edf);
+    assert_eq!(edf2.tenants[1].misses, 0, "EDF meets the mid deadline");
+    assert!(fifo2.tenants[1].misses > 0, "FIFO misses the mid deadline");
+    assert!(edf2.tenants[1].miss_rate < fifo2.tenants[1].miss_rate);
+}
+
+/// Priority arbitration strictly favors the high-priority tenant under
+/// the same contention.
+#[test]
+fn priority_arbitration_orders_tenants() {
+    let arch = presets::by_name("test-dual").unwrap();
+    let scenario = Scenario::new(
+        "prio",
+        vec![
+            Tenant::new("low", "tiny-segment", Arrival::OneShot { at_cc: 0 }).priority(0),
+            Tenant::new("high", "tiny-segment", Arrival::OneShot { at_cc: 0 }).priority(9),
+        ],
+    );
+    let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+    let simd = arch.simd_core().unwrap();
+    let pinned: Vec<CoreId> = sim.builds()[0]
+        .workload
+        .layers()
+        .iter()
+        .map(|l| if l.op.is_dense() { CoreId(0) } else { simd })
+        .collect();
+    let allocs = vec![pinned.clone(), pinned];
+    let fifo = sim.run(&allocs, Arbitration::Fifo);
+    let prio = sim.run(&allocs, Arbitration::Priority);
+    let done = |r: &stream::scenario::ScenarioResult, t: usize| {
+        r.tenant_outcomes(t).map(|o| o.completion_cc).max().unwrap()
+    };
+    assert!(done(&prio, 1) < done(&fifo, 1), "high-priority tenant finishes earlier");
+}
+
+/// The canned scenarios run end-to-end on the acceptance architecture
+/// and report the full serving metric set.
+#[test]
+fn canned_scenarios_run_on_hetero_quad_mesh() {
+    let arch = presets::by_name("hetero_quad@mesh").unwrap();
+    let scenario = stream::scenario::tiny_mix();
+    let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+    for arb in [Arbitration::Fifo, Arbitration::Priority, Arbitration::Edf] {
+        let r = sim.run(&sim.greedy_allocations(), arb);
+        assert_eq!(r.outcomes.len(), scenario.n_requests());
+        assert!(r.metrics.latency_cc > 0);
+        assert!(r.metrics.energy_pj > 0.0);
+        for t in &r.tenants {
+            assert!(t.requests > 0);
+            assert!(t.p50_cc <= t.p99_cc);
+            assert!(t.throughput_rps > 0.0);
+        }
+        // utilization is well-formed
+        for c in &arch.cores {
+            let u = r.core_util(c.id);
+            assert!((0.0..=1.0).contains(&u), "{arb}: util {u}");
+        }
+    }
+}
