@@ -1,0 +1,332 @@
+//! The shared (μ+λ) evolutionary driver.
+//!
+//! The single-model [`Ga`](super::Ga) and the scenario-level
+//! [`ScenarioGa`](crate::scenario::ScenarioGa) used to carry two
+//! hand-mirrored copies of the same loop — population init + seeding,
+//! ordered two-point crossover / gene-or-swap mutation, NSGA-II
+//! environmental selection ([`select_survivors`]), patience-based
+//! early stopping and the final Pareto-front extraction.  [`evolve`]
+//! is that loop, written once; a search instantiates it by
+//! implementing [`EvoProblem`] (genome shape, seed genomes, batched
+//! fitness, the patience scalarization).
+//!
+//! Determinism guarantees carried over from both originals:
+//!
+//! - the RNG ([`XorShift64`]) is consumed in exactly the same order as
+//!   the historical loops, so a fixed [`GaParams::seed`] reproduces
+//!   the historical trajectories bit-for-bit;
+//! - every evaluated genome is recorded in **first-seen order** and
+//!   the final front is computed over that record, so neither hash-map
+//!   iteration order, a pre-warmed fitness memo, nor the evaluation
+//!   thread count can perturb the result
+//!   (`rust/tests/evolve_pinning.rs`, `rust/tests/parallel_equivalence.rs`).
+
+use std::collections::HashSet;
+
+use super::ga::GaParams;
+use super::nsga2::{fast_non_dominated_sort, select_survivors};
+use crate::util::XorShift64;
+
+/// What a search must provide to run on the shared driver.
+///
+/// All objectives are minimized.  `evaluate` is **batched** so an
+/// implementation can dispatch unseen genomes to parallel workers (the
+/// single-model GA does) or loop serially (the scenario GA does); it
+/// must return one objective vector per input genome,
+/// order-preserving.
+///
+/// # Examples
+///
+/// ```
+/// use stream::allocator::{evolve, EvoProblem, GaParams};
+///
+/// /// Toy search: minimize the number of nonzero genes.
+/// struct ZeroMin;
+/// impl EvoProblem for ZeroMin {
+///     fn genome_len(&self) -> usize { 4 }
+///     fn n_cores(&self) -> usize { 2 }
+///     fn evaluate(&mut self, genomes: &[Vec<u16>]) -> Vec<Vec<f64>> {
+///         genomes
+///             .iter()
+///             .map(|g| vec![g.iter().filter(|&&v| v != 0).count() as f64])
+///             .collect()
+///     }
+/// }
+///
+/// let params = GaParams { population: 16, generations: 10, ..Default::default() };
+/// let out = evolve(&mut ZeroMin, &params);
+/// assert!(!out.front.is_empty());
+/// let best = &out.evaluated[out.front[0]];
+/// assert!(best.1[0] <= 1.0, "driver must nearly zero the genome");
+/// ```
+pub trait EvoProblem {
+    /// Gene count of one genome.
+    fn genome_len(&self) -> usize;
+    /// Exclusive upper bound of every gene value (the core count).
+    fn n_cores(&self) -> usize;
+    /// Heuristic starting genomes; truncated / padded with random
+    /// genomes to the population size.
+    fn seed_genomes(&self) -> Vec<Vec<u16>> {
+        Vec::new()
+    }
+    /// Objective vectors (all minimized) of `genomes`, order-preserving.
+    fn evaluate(&mut self, genomes: &[Vec<u16>]) -> Vec<Vec<f64>>;
+    /// Scalarization used only by the patience-based early-stopping
+    /// check (default: product of the objectives).
+    fn scalarize(&self, point: &[f64]) -> f64 {
+        point.iter().product()
+    }
+}
+
+/// The driver's result: every distinct genome evaluated (first-seen
+/// order) and the deduplicated first Pareto front over that record.
+pub struct EvolveOutcome {
+    /// `(genome, objective vector)` per distinct genome, in
+    /// deterministic first-seen order.
+    pub evaluated: Vec<(Vec<u16>, Vec<f64>)>,
+    /// Indices into [`evaluated`](Self::evaluated) of the first
+    /// non-dominated front, deduplicated by objective vector.
+    pub front: Vec<usize>,
+}
+
+/// One random genome (every gene uniform below the core count).
+pub(crate) fn random_genome(len: usize, n_cores: usize, rng: &mut XorShift64) -> Vec<u16> {
+    (0..len).map(|_| rng.below(n_cores as u64) as u16).collect()
+}
+
+/// Ordered two-point crossover: child takes parent A's gene order
+/// outside the cut and parent B's inside (assignment-genome variant of
+/// the paper's ordered crossover).
+pub(crate) fn crossover(a: &[u16], b: &[u16], rng: &mut XorShift64) -> Vec<u16> {
+    let n = a.len();
+    if n < 2 {
+        return a.to_vec();
+    }
+    let mut lo = rng.below(n as u64) as usize;
+    let mut hi = rng.below(n as u64) as usize;
+    if lo > hi {
+        std::mem::swap(&mut lo, &mut hi);
+    }
+    let mut child = a.to_vec();
+    child[lo..=hi].copy_from_slice(&b[lo..=hi]);
+    child
+}
+
+/// Mutation: bit flip (random gene to a random core) or position flip
+/// (swap two genes), 50/50.
+pub(crate) fn mutate(g: &mut [u16], n_cores: usize, rng: &mut XorShift64) {
+    let n = g.len();
+    if n == 0 {
+        return;
+    }
+    if rng.unit() < 0.5 || n == 1 {
+        let i = rng.below(n as u64) as usize;
+        g[i] = rng.below(n_cores as u64) as u16;
+    } else {
+        let i = rng.below(n as u64) as usize;
+        let j = rng.below(n as u64) as usize;
+        g.swap(i, j);
+    }
+}
+
+/// Run the (μ+λ) evolutionary loop on `problem` under `params`; see
+/// the [module docs](self) and [`EvoProblem`].
+pub fn evolve<P: EvoProblem + ?Sized>(problem: &mut P, params: &GaParams) -> EvolveOutcome {
+    let mut rng = XorShift64::new(params.seed);
+    let pop_size = params.population.max(4);
+    let mut population = problem.seed_genomes();
+    population.truncate(pop_size);
+    while population.len() < pop_size {
+        population.push(random_genome(problem.genome_len(), problem.n_cores(), &mut rng));
+    }
+
+    // every distinct genome in deterministic first-seen order — the
+    // final front is computed over this record, so the result cannot
+    // depend on hash-map iteration order or on what a shared fitness
+    // memo already contained
+    let mut evaluated: Vec<(Vec<u16>, Vec<f64>)> = Vec::new();
+    let mut known: HashSet<Vec<u16>> = HashSet::new();
+
+    let mut best_scalar = f64::INFINITY;
+    let mut stale = 0usize;
+
+    for _gen in 0..params.generations {
+        // --- variation: offspring from the current population ---
+        let mut offspring = Vec::with_capacity(pop_size);
+        for _ in 0..pop_size {
+            let a = &population[rng.below(population.len() as u64) as usize];
+            let b = &population[rng.below(population.len() as u64) as usize];
+            let mut child = if rng.unit() < params.crossover_p {
+                crossover(a, b, &mut rng)
+            } else {
+                a.clone()
+            };
+            if rng.unit() < params.mutation_p {
+                mutate(&mut child, problem.n_cores(), &mut rng);
+            }
+            offspring.push(child);
+        }
+
+        // --- fitness over parents+children, recorded first-seen ---
+        let mut pool: Vec<Vec<u16>> = population.clone();
+        pool.extend(offspring);
+        let points = problem.evaluate(&pool);
+        debug_assert_eq!(points.len(), pool.len(), "one objective vector per genome");
+        for (g, p) in pool.iter().zip(&points) {
+            // check before cloning: surviving parents resurface every
+            // generation and are already recorded
+            if !known.contains(g) {
+                known.insert(g.clone());
+                evaluated.push((g.clone(), p.clone()));
+            }
+        }
+
+        // --- NSGA-II environmental selection ---
+        let survivors = select_survivors(&points, pop_size);
+        population = survivors.iter().map(|&i| pool[i].clone()).collect();
+
+        // --- saturation check on the best scalarized objective ---
+        let gen_best = points
+            .iter()
+            .map(|p| problem.scalarize(p))
+            .fold(f64::INFINITY, f64::min);
+        if gen_best < best_scalar * 0.999 {
+            best_scalar = gen_best;
+            stale = 0;
+        } else {
+            stale += 1;
+            if stale >= params.patience {
+                break;
+            }
+        }
+    }
+
+    // --- final Pareto front over every genome evaluated ---
+    let points: Vec<Vec<f64>> = evaluated.iter().map(|(_, p)| p.clone()).collect();
+    let fronts = fast_non_dominated_sort(&points);
+    let mut seen = HashSet::new();
+    let front = fronts
+        .first()
+        .map(|f| {
+            f.iter()
+                .filter(|&&i| {
+                    seen.insert(points[i].iter().map(|v| v.to_bits()).collect::<Vec<_>>())
+                })
+                .copied()
+                .collect()
+        })
+        .unwrap_or_default();
+    EvolveOutcome { evaluated, front }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Single objective: the sum of the genes.
+    struct SumMin {
+        len: usize,
+        cores: usize,
+        calls: usize,
+    }
+
+    impl EvoProblem for SumMin {
+        fn genome_len(&self) -> usize {
+            self.len
+        }
+        fn n_cores(&self) -> usize {
+            self.cores
+        }
+        fn evaluate(&mut self, genomes: &[Vec<u16>]) -> Vec<Vec<f64>> {
+            self.calls += 1;
+            genomes
+                .iter()
+                .map(|g| vec![g.iter().map(|&v| v as f64).sum()])
+                .collect()
+        }
+    }
+
+    fn params(seed: u64) -> GaParams {
+        GaParams {
+            population: 16,
+            generations: 40,
+            patience: 40,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn driver_finds_the_all_zero_optimum() {
+        let mut p = SumMin { len: 4, cores: 2, calls: 0 };
+        let out = evolve(&mut p, &params(42));
+        assert!(!out.front.is_empty());
+        let best = &out.evaluated[out.front[0]];
+        assert_eq!(best.1[0], 0.0, "16x40 evaluations over a 16-genome space");
+        assert_eq!(best.0, vec![0u16; 4]);
+        assert!(p.calls > 0);
+    }
+
+    #[test]
+    fn driver_is_deterministic_for_a_seed() {
+        let run = |seed| {
+            let mut p = SumMin { len: 6, cores: 3, calls: 0 };
+            let out = evolve(&mut p, &params(seed));
+            (out.evaluated, out.front)
+        };
+        let (ea, fa) = run(7);
+        let (eb, fb) = run(7);
+        assert_eq!(fa, fb);
+        assert_eq!(ea.len(), eb.len());
+        for ((ga, pa), (gb, pb)) in ea.iter().zip(&eb) {
+            assert_eq!(ga, gb);
+            assert_eq!(pa, pb);
+        }
+        // a different seed explores a different trajectory
+        let (ec, _) = run(8);
+        assert!(
+            ea.iter().zip(&ec).any(|(x, y)| x.0 != y.0) || ea.len() != ec.len(),
+            "seeds must matter"
+        );
+    }
+
+    #[test]
+    fn record_is_first_seen_unique() {
+        let mut p = SumMin { len: 3, cores: 2, calls: 0 };
+        let out = evolve(&mut p, &params(3));
+        let mut seen = std::collections::HashSet::new();
+        for (g, _) in &out.evaluated {
+            assert!(seen.insert(g.clone()), "genome {g:?} recorded twice");
+        }
+        // front indices are valid and non-dominated within the record
+        for &i in &out.front {
+            assert!(i < out.evaluated.len());
+            for &j in &out.front {
+                let (a, b) = (&out.evaluated[i].1, &out.evaluated[j].1);
+                assert!(!crate::allocator::dominates(a, b) || a == b);
+            }
+        }
+    }
+
+    #[test]
+    fn variation_keeps_genomes_valid() {
+        let mut rng = XorShift64::new(1);
+        let a = random_genome(8, 3, &mut rng);
+        let b = random_genome(8, 3, &mut rng);
+        assert!(a.iter().all(|&v| v < 3));
+        for _ in 0..100 {
+            let mut c = crossover(&a, &b, &mut rng);
+            mutate(&mut c, 3, &mut rng);
+            assert_eq!(c.len(), a.len());
+            assert!(c.iter().all(|&v| v < 3), "{c:?}");
+        }
+    }
+
+    #[test]
+    fn empty_generations_yield_empty_outcome() {
+        let mut p = SumMin { len: 4, cores: 2, calls: 0 };
+        let out = evolve(&mut p, &GaParams { generations: 0, ..params(1) });
+        assert!(out.evaluated.is_empty());
+        assert!(out.front.is_empty());
+    }
+}

@@ -16,10 +16,10 @@
 
 use std::collections::{HashMap, HashSet};
 
-use crate::util::{parallel_map_with, thread_count, XorShift64};
+use crate::util::{parallel_map_with, thread_count};
 
 use super::allocation_from_genome;
-use super::nsga2::{fast_non_dominated_sort, select_survivors};
+use super::evolve::{evolve, EvoProblem};
 use crate::arch::{Accelerator, CoreId};
 use crate::cost::{ScheduleCache, ScheduleMetrics};
 use crate::scheduler::{SchedulePriority, Scheduler};
@@ -137,11 +137,9 @@ pub struct Ga<'a> {
     pub params: GaParams,
     /// Schedule-metrics memo, possibly shared across GA runs.
     cache: CacheRef<'a>,
-    /// Every genome this run evaluated, in deterministic first-seen
-    /// order (the final Pareto front is computed over this list, so the
-    /// result cannot depend on hash-map iteration order or on what a
-    /// shared cache already contained).
-    evaluated: Vec<(Vec<u16>, ScheduleMetrics)>,
+    /// Metrics per genome this run evaluated (the shared driver keeps
+    /// the deterministic first-seen record; this map only resolves the
+    /// front's genomes back to their [`ScheduleMetrics`]).
     evaluated_metrics: HashMap<Vec<u16>, ScheduleMetrics>,
 }
 
@@ -162,7 +160,6 @@ impl<'a> Ga<'a> {
             objective,
             params,
             cache: CacheRef::Owned(Box::new(ScheduleCache::new())),
-            evaluated: Vec::new(),
             evaluated_metrics: HashMap::new(),
         }
     }
@@ -186,21 +183,6 @@ impl<'a> Ga<'a> {
         }
     }
 
-    fn genome_len(&self) -> usize {
-        self.workload.dense_layers().len()
-    }
-
-    fn n_cores(&self) -> usize {
-        self.arch.dense_cores().len()
-    }
-
-    fn record(&mut self, genome: Vec<u16>, m: ScheduleMetrics) {
-        if !self.evaluated_metrics.contains_key(&genome) {
-            self.evaluated_metrics.insert(genome.clone(), m);
-            self.evaluated.push((genome, m));
-        }
-    }
-
     /// Fitness of every genome in `genomes` (order-preserving).
     ///
     /// Distinct genomes not yet in this run's record are dispatched to
@@ -212,7 +194,7 @@ impl<'a> Ga<'a> {
     /// cache, so neither the thread count nor a pre-warmed shared
     /// cache can perturb the GA trajectory or the final front's
     /// tie-breaking.
-    fn evaluate(&mut self, genomes: &[Vec<u16>]) -> Vec<ScheduleMetrics> {
+    fn eval_metrics(&mut self, genomes: &[Vec<u16>]) -> Vec<ScheduleMetrics> {
         let mut jobs: Vec<Vec<u16>> = Vec::new();
         let mut seen: HashSet<&[u16]> = HashSet::new();
         for g in genomes {
@@ -241,48 +223,52 @@ impl<'a> Ga<'a> {
             threads,
         );
         for (g, m) in results {
-            self.record(g, m);
+            self.evaluated_metrics.entry(g).or_insert(m);
         }
         genomes.iter().map(|g| self.evaluated_metrics[g]).collect()
     }
 
-    fn random_genome(&self, rng: &mut XorShift64) -> Vec<u16> {
-        (0..self.genome_len()).map(|_| rng.below(self.n_cores() as u64) as u16).collect()
+    /// Run the GA on the shared evolutionary driver
+    /// ([`evolve`](fn@super::evolve)); returns the final Pareto front
+    /// (deduplicated), best EDP first.
+    pub fn run(&mut self) -> Vec<GaResult> {
+        let params = self.params;
+        let outcome = evolve(self, &params);
+        let mut results: Vec<GaResult> = outcome
+            .front
+            .iter()
+            .map(|&i| {
+                let genome = outcome.evaluated[i].0.clone();
+                let metrics = self.evaluated_metrics[&genome];
+                GaResult {
+                    allocation: allocation_from_genome(self.workload, self.arch, &genome),
+                    genome,
+                    metrics,
+                }
+            })
+            .collect();
+        results.sort_by(|a, b| {
+            a.metrics
+                .edp()
+                .partial_cmp(&b.metrics.edp())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        results
+    }
+}
+
+/// The [`Ga`]'s instantiation of the shared evolutionary driver: the
+/// genome assigns every dense layer one dense core, fitness is the
+/// (cached, possibly parallel) schedule simulation projected through
+/// [`Objective::values`], and the patience scalarization is the plain
+/// objective product.
+impl EvoProblem for Ga<'_> {
+    fn genome_len(&self) -> usize {
+        self.workload.dense_layers().len()
     }
 
-    /// Ordered two-point crossover: child takes parent A's gene order
-    /// outside the cut and parent B's inside (assignment-genome variant
-    /// of the paper's ordered crossover).
-    fn crossover(&self, a: &[u16], b: &[u16], rng: &mut XorShift64) -> Vec<u16> {
-        let n = a.len();
-        if n < 2 {
-            return a.to_vec();
-        }
-        let mut lo = rng.below(n as u64) as usize;
-        let mut hi = rng.below(n as u64) as usize;
-        if lo > hi {
-            std::mem::swap(&mut lo, &mut hi);
-        }
-        let mut child = a.to_vec();
-        child[lo..=hi].copy_from_slice(&b[lo..=hi]);
-        child
-    }
-
-    /// Mutation: bit flip (random layer to a random core) or position
-    /// flip (swap two layers' allocations), 50/50.
-    fn mutate(&self, g: &mut [u16], rng: &mut XorShift64) {
-        let n = g.len();
-        if n == 0 {
-            return;
-        }
-        if rng.unit() < 0.5 || n == 1 {
-            let i = rng.below(n as u64) as usize;
-            g[i] = rng.below(self.n_cores() as u64) as u16;
-        } else {
-            let i = rng.below(n as u64) as usize;
-            let j = rng.below(n as u64) as usize;
-            g.swap(i, j);
-        }
+    fn n_cores(&self) -> usize {
+        self.arch.dense_cores().len()
     }
 
     /// Heuristic seed genomes: round-robin ping-pong, each
@@ -317,89 +303,13 @@ impl<'a> Ga<'a> {
         seeds
     }
 
-    /// Run the GA; returns the final Pareto front (deduplicated).
-    pub fn run(&mut self) -> Vec<GaResult> {
-        let mut rng = XorShift64::new(self.params.seed);
-        let pop_size = self.params.population.max(4);
-        let mut population: Vec<Vec<u16>> = self.seed_genomes();
-        population.truncate(pop_size);
-        while population.len() < pop_size {
-            population.push(self.random_genome(&mut rng));
-        }
-
-        let mut best_scalar = f64::INFINITY;
-        let mut stale = 0usize;
-
-        for _gen in 0..self.params.generations {
-            // --- variation: offspring from the current population ---
-            let mut offspring = Vec::with_capacity(pop_size);
-            for _ in 0..pop_size {
-                let a = &population[rng.below(population.len() as u64) as usize];
-                let b = &population[rng.below(population.len() as u64) as usize];
-                let mut child = if rng.unit() < self.params.crossover_p {
-                    self.crossover(a, b, &mut rng)
-                } else {
-                    a.clone()
-                };
-                if rng.unit() < self.params.mutation_p {
-                    self.mutate(&mut child, &mut rng);
-                }
-                offspring.push(child);
-            }
-
-            // --- NSGA-II environmental selection over parents+children ---
-            let mut pool: Vec<Vec<u16>> = population.clone();
-            pool.extend(offspring);
-            let metrics = self.evaluate(&pool);
-            let points: Vec<Vec<f64>> =
-                metrics.iter().map(|m| self.objective.values(m)).collect();
-            let survivors = select_survivors(&points, pop_size);
-            population = survivors.iter().map(|&i| pool[i].clone()).collect();
-
-            // --- saturation check on the best scalarized objective ---
-            let gen_best = points
-                .iter()
-                .map(|p| p.iter().product::<f64>())
-                .fold(f64::INFINITY, f64::min);
-            if gen_best < best_scalar * 0.999 {
-                best_scalar = gen_best;
-                stale = 0;
-            } else {
-                stale += 1;
-                if stale >= self.params.patience {
-                    break;
-                }
-            }
-        }
-
-        // final Pareto front over every genome this run evaluated, in
-        // deterministic first-seen order
-        let all: &[(Vec<u16>, ScheduleMetrics)] = &self.evaluated;
-        let points: Vec<Vec<f64>> =
-            all.iter().map(|(_, m)| self.objective.values(m)).collect();
-        let fronts = fast_non_dominated_sort(&points);
-        let mut seen = std::collections::HashSet::new();
-        let mut results: Vec<GaResult> = fronts
-            .first()
-            .map(|f| {
-                f.iter()
-                    .filter(|&&i| seen.insert(points[i].iter().map(|v| v.to_bits()).collect::<Vec<_>>()))
-                    .map(|&i| GaResult {
-                        genome: all[i].0.clone(),
-                        allocation: allocation_from_genome(self.workload, self.arch, &all[i].0),
-                        metrics: all[i].1,
-                    })
-                    .collect()
-            })
-            .unwrap_or_default();
-        results.sort_by(|a, b| {
-            a.metrics
-                .edp()
-                .partial_cmp(&b.metrics.edp())
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
-        results
+    fn evaluate(&mut self, genomes: &[Vec<u16>]) -> Vec<Vec<f64>> {
+        let metrics = self.eval_metrics(genomes);
+        metrics.iter().map(|m| self.objective.values(m)).collect()
     }
+
+    // scalarize: the trait's default (objective product) is exactly the
+    // historical Ga saturation criterion.
 }
 
 /// The manual baselines of Section V-A: ping-pong across cores for
@@ -586,18 +496,20 @@ mod tests {
         assert_eq!(alloc[3], CoreId(2));
     }
 
+    /// The driver's variation operators produce genomes the expansion
+    /// accepts (the operator-level unit tests live in `evolve.rs`).
     #[test]
-    fn crossover_and_mutation_keep_genome_valid() {
+    fn driver_variation_expands_to_valid_allocations() {
         let f = fixture();
         let sched = Scheduler::new(&f.w, &f.g, &f.costs, &f.arch);
         let ga = Ga::new(&f.w, &f.arch, &sched, SchedulePriority::Latency,
                          Objective::Edp, GaParams::default());
-        let mut rng = XorShift64::new(1);
-        let a = ga.random_genome(&mut rng);
-        let b = ga.random_genome(&mut rng);
+        let mut rng = crate::util::XorShift64::new(1);
+        let a = super::super::evolve::random_genome(ga.genome_len(), ga.n_cores(), &mut rng);
+        let b = super::super::evolve::random_genome(ga.genome_len(), ga.n_cores(), &mut rng);
         for _ in 0..50 {
-            let mut c = ga.crossover(&a, &b, &mut rng);
-            ga.mutate(&mut c, &mut rng);
+            let mut c = super::super::evolve::crossover(&a, &b, &mut rng);
+            super::super::evolve::mutate(&mut c, ga.n_cores(), &mut rng);
             assert_eq!(c.len(), a.len());
             let alloc = allocation_from_genome(&f.w, &f.arch, &c);
             assert_eq!(alloc.len(), f.w.len());

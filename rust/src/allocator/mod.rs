@@ -14,10 +14,18 @@
 //! memoized in a [`crate::cost::ScheduleCache`] (shareable across GA
 //! runs via [`Ga::with_cache`]); serial and parallel runs are
 //! bit-identical for a fixed seed.  See the [`Ga`] docs.
+//!
+//! The evolutionary loop itself — population seeding, variation,
+//! NSGA-II survival, early stopping, final front extraction — lives
+//! once in [`evolve`](fn@evolve): [`Ga`] and the scenario-level
+//! [`ScenarioGa`](crate::scenario::ScenarioGa) are both thin
+//! [`EvoProblem`] instantiations of that shared driver.
 
+mod evolve;
 mod ga;
 mod nsga2;
 
+pub use evolve::{evolve, EvoProblem, EvolveOutcome};
 pub use ga::{manual_allocation, Ga, GaParams, GaResult, Objective};
 pub use nsga2::{crowding_distance, dominates, fast_non_dominated_sort, select_survivors};
 

@@ -2,81 +2,38 @@
 //!
 //! [`ScenarioSim`] instantiates one CN graph per tenant (reusing the
 //! Step 1–3 pipeline stages) and schedules **every request of every
-//! tenant in one event-driven run**: all requests share the cores'
-//! availability, the routed [`LinkSet`], the per-core
-//! [`WeightTracker`]s (weights are keyed by a *global* `(tenant,
-//! layer)` id, so back-to-back requests of the same tenant reuse
-//! resident weights) and the pooled activation capacity.
+//! tenant in one event-driven run** of the crate's unified simulation
+//! core (`crate::scheduler`'s internal `sim` module): all requests
+//! share the cores' availability, the routed `LinkSet`, the per-core
+//! weight trackers (weights are keyed by a *global* `(tenant, layer)`
+//! id, so back-to-back requests of the same tenant reuse resident
+//! weights) and the pooled activation capacity.
 //!
-//! Each request owns a private `CandidatePool` whose candidates are
+//! Each request owns a private candidate pool whose candidates are
 //! never ready before the request's release; an inter-request
 //! [`Arbitration`] policy picks which request gets the next scheduling
 //! decision, and the request's own pool then picks the CN under the
 //! tenant's Fig. 8 priority.  Arbitration is **causal**: a virtual
-//! admission clock (the monotone frontier of earliest candidate
-//! readiness) gates deadline/priority preference to requests that have
-//! actually arrived, so a future release never pre-empts ready work
-//! and the engine stays work-conserving.  With a single one-shot
-//! request the arbitration is vacuous and the engine's inner loop is a
-//! line-for-line mirror of `Scheduler::run`, which is why the
-//! degenerate scenario is **bit-identical** to the single-model
-//! scheduler (`rust/tests/scenario_equivalence.rs`).
+//! admission clock gates deadline/priority preference to requests that
+//! have actually arrived, so a future release never pre-empts ready
+//! work and the engine stays work-conserving.  There is no mirrored
+//! scheduler body here — this module only assembles the core's
+//! request-tagged outcome into serving statistics, which is why the
+//! degenerate 1-tenant / 1-request scenario is **bit-identical** to
+//! the single-model scheduler by construction
+//! (`rust/tests/scenario_equivalence.rs` keeps pinning it anyway).
 
 use crate::allocator::manual_allocation;
-use crate::arch::{Accelerator, CoreId, CoreKind};
-use crate::cn::{CnId, CnSet};
-use crate::cost::{EnergyBreakdown, ScheduleMetrics};
-use crate::depgraph::{generate, CnGraph, EdgeKind};
+use crate::arch::{Accelerator, CoreId};
+use crate::cn::CnSet;
+use crate::depgraph::{generate, CnGraph};
 use crate::mapping::CostModel;
-use crate::scheduler::peak_and_spill;
-use crate::scheduler::pool::CandidatePool;
-use crate::scheduler::resources::{LinkSet, WeightTracker};
-use crate::scheduler::{
-    CommEvent, DramEvent, DramKind, LinkStat, MemTrace, SchedulePriority, ScheduledCn,
-    Scheduler,
-};
-use crate::workload::{LayerId, OpType, WorkloadGraph};
+use crate::scheduler::sim::{global_wgt_fetch, SimContext, SimRequest, SimTenant};
+use crate::scheduler::{Arbitration, Scheduler};
+use crate::workload::WorkloadGraph;
 
 use super::result::{percentile_cc, RequestOutcome, ScenarioCn, ScenarioResult, TenantStats};
 use super::spec::Scenario;
-
-/// How the engine decides *which request* gets the next scheduling
-/// decision (the per-CN pick within a request still follows the
-/// tenant's [`SchedulePriority`]).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub enum Arbitration {
-    /// Requests share resources in readiness order; ties go to the
-    /// earlier arrival — fair FCFS processor sharing.
-    #[default]
-    Fifo,
-    /// Strictly serve the highest-[`priority`](super::Tenant::priority)
-    /// tenant with work available; readiness breaks ties.
-    Priority,
-    /// Earliest absolute deadline first; deadline-free requests rank
-    /// last, readiness breaks ties.
-    Edf,
-}
-
-impl Arbitration {
-    pub fn by_name(name: &str) -> Option<Arbitration> {
-        match name {
-            "fifo" => Some(Arbitration::Fifo),
-            "priority" => Some(Arbitration::Priority),
-            "edf" => Some(Arbitration::Edf),
-            _ => None,
-        }
-    }
-}
-
-impl std::fmt::Display for Arbitration {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            Arbitration::Fifo => write!(f, "fifo"),
-            Arbitration::Priority => write!(f, "priority"),
-            Arbitration::Edf => write!(f, "edf"),
-        }
-    }
-}
 
 /// Errors from scenario construction.
 #[derive(Debug)]
@@ -102,19 +59,6 @@ pub struct TenantBuild {
     pub workload: WorkloadGraph,
     pub graph: CnGraph,
     pub costs: CostModel,
-}
-
-/// Mutable state of one in-flight request.
-struct ReqState {
-    seq: usize,
-    tenant: usize,
-    release: u64,
-    deadline_abs: Option<u64>,
-    sched: Vec<Option<ScheduledCn>>,
-    pending: Vec<usize>,
-    pool: CandidatePool,
-    /// Completion frontier: last CN end or off-chip store end.
-    last_end: u64,
 }
 
 /// A reusable scenario simulator over a fixed (scenario, architecture):
@@ -186,10 +130,7 @@ impl<'a> ScenarioSim<'a> {
             .map(|b| Scheduler::new(&b.workload, &b.graph, &b.costs, self.arch))
             .collect();
         // global (tenant, layer) -> DRAM weight-fetch cycles
-        let mut wgt_fetch_g: Vec<u64> = Vec::new();
-        for s in &scheds {
-            wgt_fetch_g.extend_from_slice(&s.wgt_fetch_cc);
-        }
+        let wgt_fetch_g = global_wgt_fetch(&scheds);
         // higher tenant priority => smaller arbitration rank
         let prio_rank: Vec<u64> =
             self.scenario.tenants.iter().map(|t| u64::from(u16::MAX - t.priority)).collect();
@@ -217,411 +158,74 @@ pub struct ScenarioRunner<'s> {
 
 impl ScenarioRunner<'_> {
     /// Co-schedule every request of every tenant under `allocs` (one
-    /// per-layer core allocation per tenant) and `arbitration`.
+    /// per-layer core allocation per tenant) and `arbitration`: build
+    /// the request lanes, hand them to the unified simulation core,
+    /// and fold the request-tagged outcome into per-tenant serving
+    /// statistics.
     pub fn run(&self, allocs: &[Vec<CoreId>], arbitration: Arbitration) -> ScenarioResult {
         assert_eq!(allocs.len(), self.sim.builds.len(), "one allocation per tenant");
         for (b, a) in self.sim.builds.iter().zip(allocs) {
             assert_eq!(a.len(), b.workload.len(), "allocation per layer");
         }
-        let scheds = &self.scheds;
-        let wgt_fetch_g = &self.wgt_fetch_g;
-        let prio_rank = &self.prio_rank;
 
-        let topo = &self.sim.arch.topology;
-        let n_cores = self.sim.arch.cores.len();
-        let mut core_avail = vec![0u64; n_cores];
-        let mut core_busy = vec![0u64; n_cores];
-        let mut links = LinkSet::new(topo);
-        let mut weights: Vec<WeightTracker> =
-            self.sim.arch.cores.iter().map(|c| WeightTracker::new(c.wgt_mem_bytes)).collect();
-        let mut evicted: Vec<LayerId> = Vec::new();
-
-        let mut reqs: Vec<ReqState> = self
-            .sim
-            .scenario
-            .requests()
+        let tenants: Vec<SimTenant> = self
+            .scheds
             .iter()
-            .map(|r| {
-                let s = &scheds[r.tenant];
-                let n = s.graph.len();
-                ReqState {
-                    seq: r.seq,
-                    tenant: r.tenant,
-                    release: r.release_cc,
-                    deadline_abs: r.deadline_abs_cc,
-                    sched: vec![None; n],
-                    pending: (0..n)
-                        .map(|i| s.graph.pred_count(CnId(i)) + s.gate_preds[i].len())
-                        .collect(),
-                    pool: CandidatePool::new(n, n_cores),
-                    last_end: r.release_cc,
-                }
+            .enumerate()
+            .map(|(t, s)| SimTenant {
+                sched: s,
+                alloc: &allocs[t],
+                pool_priority: self.sim.scenario.tenants[t].pool_priority,
+                prio_rank: self.prio_rank[t],
+                layer_off: self.sim.layer_off[t],
             })
             .collect();
-        for req in reqs.iter_mut() {
-            let s = &scheds[req.tenant];
-            let off = self.sim.layer_off[req.tenant];
-            for i in 0..s.graph.len() {
-                if req.pending[i] == 0 {
-                    add_candidate(
-                        s,
-                        req,
-                        CnId(i),
-                        &weights,
-                        &allocs[req.tenant],
-                        off,
-                        wgt_fetch_g,
-                    );
-                }
-            }
-        }
-
-        let mut trace = MemTrace::new();
-        let mut cns: Vec<ScenarioCn> = Vec::new();
-        let mut comms: Vec<CommEvent> = Vec::new();
-        let mut comm_req: Vec<usize> = Vec::new();
-        let mut drams: Vec<DramEvent> = Vec::new();
-        let mut dram_req: Vec<usize> = Vec::new();
-        let mut breakdown = EnergyBreakdown::default();
-
-        let act_cap: f64 = self.sim.arch.cores.iter().map(|c| c.act_mem_bytes as f64).sum();
-        let mut act_occ = 0.0f64;
-
-        // Virtual admission clock: monotonically tracks the earliest
-        // time any schedulable candidate could start.  Deadline- and
-        // priority-preference only applies to requests *released* by
-        // `now`, so a future arrival can never pre-empt ready work and
-        // leave cores idle (causal, work-conserving arbitration).  The
-        // request achieving the global minimum readiness is always
-        // released (its readiness is >= its release), so an eligible
-        // request always exists.
-        let mut now = 0u64;
-        let mut cands: Vec<(usize, u64)> = Vec::new(); // (request, min eff)
-
-        loop {
-            // --- inter-request arbitration -------------------------------
-            cands.clear();
-            let mut min_eff = u64::MAX;
-            for (ri, r) in reqs.iter_mut().enumerate() {
-                if r.pool.len() == 0 {
-                    continue;
-                }
-                let eff = r.pool.peek_min_eff().expect("nonempty pool has a minimum");
-                min_eff = min_eff.min(eff);
-                cands.push((ri, eff));
-            }
-            if cands.is_empty() {
-                break;
-            }
-            now = now.max(min_eff);
-
-            let mut best: Option<((u64, u64, u64), usize)> = None;
-            for &(ri, eff) in &cands {
-                let r = &reqs[ri];
-                if r.release > now {
-                    continue; // not yet arrived: ineligible for preference
-                }
-                let key = match arbitration {
-                    Arbitration::Fifo => (0, eff, r.seq as u64),
-                    Arbitration::Priority => (prio_rank[r.tenant], eff, r.seq as u64),
-                    Arbitration::Edf => {
-                        (r.deadline_abs.unwrap_or(u64::MAX), eff, r.seq as u64)
-                    }
-                };
-                let better = match best {
-                    None => true,
-                    Some((k, _)) => key < k,
-                };
-                if better {
-                    best = Some((key, ri));
-                }
-            }
-            let (_, ri) = best.expect("a released request always exists");
-
-            // --- one scheduling decision: a line-for-line mirror of
-            // Scheduler::run_impl, over the chosen request's graph ------
-            let rekey = {
-                let req = &mut reqs[ri];
-                let s = &scheds[req.tenant];
-                let alloc = &allocs[req.tenant];
-                let off = self.sim.layer_off[req.tenant];
-                let cn_id = match self.sim.scenario.tenants[req.tenant].pool_priority {
-                    SchedulePriority::Latency => req.pool.pop_latency(act_occ, act_cap),
-                    SchedulePriority::Memory => req.pool.pop_memory(act_occ, act_cap),
-                }
-                .expect("arbitration picked a nonempty pool");
-                let cn = s.graph.cns.node(cn_id);
-                let layer = s.workload.layer(cn.layer);
-                let core_id = alloc[cn.layer.0];
-                let core = self.sim.arch.core(core_id);
-
-                // 1) incoming data (cross-core edges routed over links);
-                //    a request starts no earlier than its release
-                let mut data_ready = req.release;
-                for e in s.graph.pred_edges(cn_id) {
-                    let p = req.sched[e.from.0].expect("pred scheduled");
-                    match e.kind {
-                        EdgeKind::Order => data_ready = data_ready.max(p.end),
-                        EdgeKind::Data => {
-                            if p.core == core_id || e.bytes == 0 {
-                                data_ready = data_ready.max(p.end);
-                            } else {
-                                let route = topo.core_route(p.core, core_id);
-                                let (cs, ce) = links.transfer(route, p.end, e.bytes);
-                                comms.push(CommEvent {
-                                    from_core: p.core,
-                                    to_core: core_id,
-                                    start: cs,
-                                    end: ce,
-                                    bytes: e.bytes,
-                                    links: route.into(),
-                                });
-                                comm_req.push(req.seq);
-                                breakdown.noc_pj +=
-                                    e.bytes as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
-                                trace.push(cs, core_id, e.bytes as f64);
-                                act_occ += e.bytes as f64;
-                                let pf = s.fanout[s.graph.cns.node(e.from).layer.0];
-                                trace.push(ce, p.core, -(e.bytes as f64) / pf);
-                                act_occ = (act_occ - e.bytes as f64 / pf).max(0.0);
-                                data_ready = data_ready.max(ce);
-                            }
-                        }
-                    }
-                }
-
-                // 1b) bounded-buffer gates
-                for g in &s.gate_preds[cn_id.0] {
-                    data_ready = data_ready.max(req.sched[g.0].expect("gate scheduled").end);
-                }
-
-                // 2) weights, keyed by the global (tenant, layer) id so
-                //    requests of the same tenant share residency
-                let gl = LayerId(off + cn.layer.0);
-                let mut weights_ready = 0u64;
-                let wbytes = layer.weight_bytes();
-                let mut rekey = None;
-                if wbytes > 0 {
-                    let fetch = weights[core_id.0].require_evicting(gl, wbytes, &mut evicted);
-                    if fetch > 0 {
-                        let route = topo.dram_load_route(core_id);
-                        let (ds, de) = links.transfer(route, req.release, fetch);
-                        drams.push(DramEvent {
-                            core: core_id,
-                            start: ds,
-                            end: de,
-                            bytes: fetch,
-                            kind: DramKind::WeightFetch,
-                            links: route.into(),
-                        });
-                        dram_req.push(req.seq);
-                        breakdown.dram_pj +=
-                            fetch as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
-                        breakdown.noc_pj +=
-                            fetch as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
-                        if let CoreKind::Aimc { weight_load_pj, .. } = core.kind {
-                            breakdown.onchip_pj += fetch as f64 * 8.0 * weight_load_pj;
-                        }
-                        weights_ready = de;
-                        // residency on this core changed for EVERY
-                        // request watching it; re-keyed after the body
-                        // releases this request's borrow
-                        rekey = Some((core_id.0, gl));
-                    }
-                }
-
-                // 3) first-layer input activations from DRAM
-                let mut input_ready = 0u64;
-                let fresh = s.fresh_in_bytes[cn_id.0];
-                if fresh > 0 {
-                    let route = topo.dram_load_route(core_id);
-                    let (ds, de) = links.transfer(route, req.release, fresh);
-                    drams.push(DramEvent {
-                        core: core_id,
-                        start: ds,
-                        end: de,
-                        bytes: fresh,
-                        kind: DramKind::ActFetch,
-                        links: route.into(),
-                    });
-                    dram_req.push(req.seq);
-                    breakdown.dram_pj += fresh as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
-                    breakdown.noc_pj += fresh as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
-                    trace.push(ds, core_id, fresh as f64);
-                    act_occ += fresh as f64;
-                    input_ready = de;
-                }
-
-                // 4) execute
-                let cost = s.costs.cn_cost(cn, core_id);
-                let start = core_avail[core_id.0]
-                    .max(data_ready)
-                    .max(weights_ready)
-                    .max(input_ready);
-                let end = start + cost.compute_cycles;
-                core_avail[core_id.0] = end;
-                core_busy[core_id.0] += cost.compute_cycles;
-                breakdown.mac_pj += cost.mac_energy_pj;
-                breakdown.onchip_pj += cost.energy_pj - cost.mac_energy_pj;
-
-                // 5) memory trace
-                trace.push(start, core_id, cn.output_bytes as f64);
-                act_occ += cn.output_bytes as f64;
-                if layer.predecessors.is_empty() {
-                    trace.push(end, core_id, -(cn.discard_input_bytes as f64));
-                    act_occ = (act_occ - cn.discard_input_bytes as f64).max(0.0);
-                } else {
-                    for &p in &layer.predecessors {
-                        let share = match layer.op {
-                            OpType::Concat => {
-                                cn.discard_input_bytes as f64 * s.workload.layer(p).k as f64
-                                    / layer.c as f64
-                            }
-                            _ => cn.discard_input_bytes as f64,
-                        };
-                        let p_core = alloc[p.0];
-                        if p_core == core_id {
-                            trace.push(end, core_id, -share / s.fanout[p.0]);
-                            act_occ = (act_occ - share / s.fanout[p.0]).max(0.0);
-                        } else {
-                            trace.push(end, core_id, -share);
-                            act_occ = (act_occ - share).max(0.0);
-                        }
-                    }
-                }
-
-                // 6) sink outputs stream to DRAM
-                if s.workload.successors(cn.layer).is_empty() {
-                    let route = topo.dram_store_route(core_id);
-                    let (ds, de) = links.transfer(route, end, cn.output_bytes);
-                    drams.push(DramEvent {
-                        core: core_id,
-                        start: ds,
-                        end: de,
-                        bytes: cn.output_bytes,
-                        kind: DramKind::ActStore,
-                        links: route.into(),
-                    });
-                    dram_req.push(req.seq);
-                    breakdown.dram_pj +=
-                        cn.output_bytes as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
-                    breakdown.noc_pj +=
-                        cn.output_bytes as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
-                    trace.push(de, core_id, -(cn.output_bytes as f64));
-                    act_occ = (act_occ - cn.output_bytes as f64).max(0.0);
-                    req.last_end = req.last_end.max(de);
-                }
-
-                let placed = ScheduledCn { cn: cn_id, core: core_id, start, end };
-                req.sched[cn_id.0] = Some(placed);
-                req.last_end = req.last_end.max(end);
-                cns.push(ScenarioCn { request: req.seq, placed });
-
-                // 7) release successors within this request
-                for e in s.graph.succ_edges(cn_id) {
-                    req.pending[e.to.0] -= 1;
-                    if req.pending[e.to.0] == 0 {
-                        add_candidate(s, req, e.to, &weights, alloc, off, wgt_fetch_g);
-                    }
-                }
-                for &g in &s.gate_succs[cn_id.0] {
-                    req.pending[g.0] -= 1;
-                    if req.pending[g.0] == 0 {
-                        add_candidate(s, req, g, &weights, alloc, off, wgt_fetch_g);
-                    }
-                }
-                rekey
-            };
-
-            // --- propagate a residency change to every request's pool ---
-            if let Some((core, fetched)) = rekey {
-                let evicted = &evicted;
-                for r in reqs.iter_mut() {
-                    r.pool.rekey_core(core, |l| {
-                        if l == fetched {
-                            Some(0)
-                        } else if evicted.contains(&l) {
-                            Some(wgt_fetch_g[l.0])
-                        } else {
-                            None
-                        }
-                    });
-                }
-            }
-        }
-
-        debug_assert!(
-            reqs.iter().all(|r| r.sched.iter().all(|s| s.is_some())),
-            "all CNs of all requests scheduled"
-        );
-
-        // --- aggregate metrics, exactly like Scheduler::run_impl --------
-        let compute_end = cns.iter().map(|c| c.placed.end).max().unwrap_or(0);
-        let io_end = drams
+        // requests() is (release, tenant)-sorted with seq == index, so
+        // the core's lane indices are exactly the request seqs
+        let reqs = self.sim.scenario.requests();
+        let requests: Vec<SimRequest> = reqs
             .iter()
-            .map(|d| d.end)
-            .chain(comms.iter().map(|c| c.end))
-            .max()
-            .unwrap_or(0);
-        let latency = compute_end.max(io_end);
-
-        let dense_busy: u64 = self
-            .sim
-            .arch
-            .cores
-            .iter()
-            .filter(|c| !c.is_simd())
-            .map(|c| core_busy[c.id.0])
-            .sum();
-        let dense_count =
-            self.sim.arch.cores.iter().filter(|c| !c.is_simd()).count() as f64;
-        let avg_core_util = if latency > 0 {
-            dense_busy as f64 / (latency as f64 * dense_count)
-        } else {
-            0.0
-        };
-
-        let (peak, spill_bytes) = peak_and_spill(&trace, self.sim.arch);
-        let mut latency = latency;
-        if spill_bytes > 0.5 {
-            breakdown.dram_pj += 2.0 * spill_bytes * 8.0 * topo.spill_dram_pj_per_bit();
-            let extra_port = (2.0 * spill_bytes * 8.0 / topo.dram_bw_bits() as f64) as u64;
-            let dram_busy = topo
-                .dram_channel_links()
-                .map(|l| links.busy_cycles(l))
-                .max()
-                .unwrap_or(0);
-            latency = latency.max(dram_busy + extra_port);
-        }
-
-        let metrics = ScheduleMetrics {
-            latency_cc: latency,
-            energy_pj: breakdown.total(),
-            peak_mem_bytes: peak,
-            breakdown,
-            avg_core_util,
-        };
-
-        let link_stats = links
-            .stats()
-            .into_iter()
-            .map(|(busy_cycles, bytes_moved)| LinkStat { busy_cycles, bytes_moved })
+            .map(|r| SimRequest {
+                tenant: r.tenant,
+                release: r.release_cc,
+                deadline_abs: r.deadline_abs_cc,
+            })
             .collect();
+
+        let out = SimContext {
+            arch: self.sim.arch,
+            tenants: &tenants,
+            requests: &requests,
+            wgt_fetch_g: &self.wgt_fetch_g,
+            arbitration,
+            linear_pool: false,
+            tag_events: true,
+        }
+        .simulate();
 
         // --- per-request / per-tenant serving statistics -----------------
+        let cns: Vec<ScenarioCn> = out
+            .cns
+            .iter()
+            .zip(&out.cn_req)
+            .map(|(p, &r)| ScenarioCn { request: r, placed: *p })
+            .collect();
+
         let outcomes: Vec<RequestOutcome> = reqs
             .iter()
-            .map(|r| RequestOutcome {
+            .zip(&out.request_end)
+            .map(|(r, &end)| RequestOutcome {
                 request: r.seq,
                 tenant: r.tenant,
-                release_cc: r.release,
-                completion_cc: r.last_end,
-                latency_cc: r.last_end.saturating_sub(r.release),
-                deadline_abs_cc: r.deadline_abs,
-                missed: r.deadline_abs.is_some_and(|d| r.last_end > d),
+                release_cc: r.release_cc,
+                completion_cc: end,
+                latency_cc: end.saturating_sub(r.release_cc),
+                deadline_abs_cc: r.deadline_abs_cc,
+                missed: r.deadline_abs_cc.is_some_and(|d| end > d),
             })
             .collect();
 
+        let latency = out.metrics.latency_cc;
         let seconds = if self.sim.scenario.clock_ghz > 0.0 && latency > 0 {
             latency as f64 / (self.sim.scenario.clock_ghz * 1e9)
         } else {
@@ -659,50 +263,19 @@ impl ScenarioRunner<'_> {
             .collect();
 
         ScenarioResult {
-            metrics,
+            metrics: out.metrics,
             cns,
-            comms,
-            comm_req,
-            drams,
-            dram_req,
-            link_stats,
-            core_busy,
-            memtrace: trace,
+            comms: out.comms,
+            comm_req: out.comm_req,
+            drams: out.drams,
+            dram_req: out.dram_req,
+            link_stats: out.link_stats,
+            core_busy: out.core_busy,
+            memtrace: out.memtrace,
             outcomes,
             tenants,
         }
     }
-}
-
-/// Mirror of `Scheduler::add_candidate` over one request's state:
-/// readiness defaults to the request's release, and weight residency is
-/// looked up under the global `(tenant, layer)` id.
-fn add_candidate(
-    s: &Scheduler,
-    req: &mut ReqState,
-    id: CnId,
-    weights: &[WeightTracker],
-    alloc: &[CoreId],
-    layer_off: usize,
-    wgt_fetch_g: &[u64],
-) {
-    let ready = s
-        .graph
-        .pred_edges(id)
-        .map(|e| req.sched[e.from.0].expect("pred scheduled").end)
-        .chain(
-            s.gate_preds[id.0]
-                .iter()
-                .map(|g| req.sched[g.0].expect("gate scheduled").end),
-        )
-        .max()
-        .unwrap_or(req.release);
-    let cn = s.graph.cns.node(id);
-    let core = alloc[cn.layer.0];
-    let gl = LayerId(layer_off + cn.layer.0);
-    let fetch = wgt_fetch_g[gl.0];
-    let eff = if fetch == 0 || weights[core.0].is_resident(gl) { ready } else { ready + fetch };
-    req.pool.insert(id, gl, cn.idx, ready, eff, cn.output_bytes, core.0, fetch > 0);
 }
 
 #[cfg(test)]
@@ -710,6 +283,7 @@ mod tests {
     use super::*;
     use crate::arch::presets;
     use crate::scenario::spec::{self, Arrival, Tenant};
+    use crate::scheduler::DramKind;
 
     fn two_seg_scenario(release2: u64) -> Scenario {
         Scenario::new(

@@ -48,7 +48,8 @@ mod opt;
 mod result;
 mod spec;
 
-pub use engine::{Arbitration, ScenarioError, ScenarioRunner, ScenarioSim, TenantBuild};
+pub use crate::scheduler::Arbitration;
+pub use engine::{ScenarioError, ScenarioRunner, ScenarioSim, TenantBuild};
 pub use opt::{per_tenant_ga, ScenarioGa, ScenarioGaResult};
 pub use result::{
     percentile_cc, RequestOutcome, ScenarioCn, ScenarioResult, TenantStats,

@@ -7,8 +7,10 @@
 //! genes ([`allocation_from_genome_multi`]) and each fitness evaluation
 //! is one full [`ScenarioSim::run`] co-schedule, minimized over the
 //! serving objectives `(deadline misses, worst per-tenant p99 latency,
-//! energy)` with the same NSGA-II primitives the single-model GA uses
-//! (fast non-dominated sort + crowding distance).
+//! energy)`.  The evolutionary loop itself is the same shared driver
+//! the single-model GA runs on ([`allocator::evolve`](fn@crate::allocator::evolve)):
+//! `ScenarioGa` only provides the genome shape, the seed genomes and
+//! the co-schedule fitness through the [`EvoProblem`] trait.
 //!
 //! [`per_tenant_ga`] is the uncoordinated baseline: each tenant runs
 //! the classic single-model GA in isolation, blind to its neighbors.
@@ -16,14 +18,13 @@
 use std::collections::HashMap;
 
 use crate::allocator::{
-    allocation_from_genome_multi, fast_non_dominated_sort, genome_len_multi,
-    manual_allocation, select_survivors, Ga, GaParams, Objective,
+    allocation_from_genome_multi, evolve, genome_len_multi, manual_allocation, EvoProblem,
+    Ga, GaParams, Objective,
 };
 use crate::arch::CoreId;
-use crate::scheduler::Scheduler;
-use crate::util::XorShift64;
+use crate::scheduler::{Arbitration, Scheduler};
 
-use super::engine::{Arbitration, ScenarioRunner, ScenarioSim};
+use super::engine::{ScenarioRunner, ScenarioSim};
 
 /// One Pareto-front member of the scenario search.
 #[derive(Debug, Clone)]
@@ -45,8 +46,8 @@ pub struct ScenarioGa<'a> {
     runner: ScenarioRunner<'a>,
     arbitration: Arbitration,
     params: GaParams,
-    /// Every genome evaluated, in deterministic first-seen order.
-    evaluated: Vec<(Vec<u16>, Vec<f64>)>,
+    /// Serving-objective memo per genome (the shared driver keeps the
+    /// deterministic first-seen record).
     objectives: HashMap<Vec<u16>, Vec<f64>>,
 }
 
@@ -61,21 +62,12 @@ impl<'a> ScenarioGa<'a> {
             runner: sim.runner(),
             arbitration,
             params,
-            evaluated: Vec::new(),
             objectives: HashMap::new(),
         }
     }
 
-    fn genome_len(&self) -> usize {
-        genome_len_multi(&self.sim.tenant_workloads())
-    }
-
-    fn n_cores(&self) -> usize {
-        self.sim.arch.dense_cores().len()
-    }
-
     /// `(misses, worst p99, energy)` of one genome, memoized.
-    fn evaluate(&mut self, genome: &[u16]) -> Vec<f64> {
+    fn eval_one(&mut self, genome: &[u16]) -> Vec<f64> {
         if let Some(v) = self.objectives.get(genome) {
             return v.clone();
         }
@@ -88,42 +80,55 @@ impl<'a> ScenarioGa<'a> {
             r.metrics.energy_pj,
         ];
         self.objectives.insert(genome.to_vec(), v.clone());
-        self.evaluated.push((genome.to_vec(), v.clone()));
         v
     }
 
-    fn random_genome(&self, rng: &mut XorShift64) -> Vec<u16> {
-        (0..self.genome_len()).map(|_| rng.below(self.n_cores() as u64) as u16).collect()
+    /// Run the search on the shared evolutionary driver
+    /// ([`allocator::evolve`](fn@crate::allocator::evolve)); returns
+    /// the Pareto front over the serving objectives, best miss-count
+    /// first.
+    pub fn run(&mut self) -> Vec<ScenarioGaResult> {
+        let params = self.params;
+        let outcome = evolve(self, &params);
+        let mut results: Vec<ScenarioGaResult> = outcome
+            .front
+            .iter()
+            .map(|&i| {
+                let (genome, point) = &outcome.evaluated[i];
+                ScenarioGaResult {
+                    genome: genome.clone(),
+                    allocations: allocation_from_genome_multi(
+                        &self.sim.tenant_workloads(),
+                        self.sim.arch,
+                        genome,
+                    ),
+                    misses: point[0] as usize,
+                    worst_p99_cc: point[1] as u64,
+                    energy_pj: point[2],
+                }
+            })
+            .collect();
+        results.sort_by(|a, b| {
+            (a.misses, a.worst_p99_cc)
+                .cmp(&(b.misses, b.worst_p99_cc))
+                .then(a.energy_pj.partial_cmp(&b.energy_pj).unwrap_or(std::cmp::Ordering::Equal))
+        });
+        results
+    }
+}
+
+/// The [`ScenarioGa`]'s instantiation of the shared evolutionary
+/// driver: the flat multi-tenant genome, serving-objective fitness
+/// through one co-schedule per unseen genome, and a `(1 + objective)`
+/// product scalarization for the patience check — robust to the
+/// frequent all-deadlines-met `misses == 0` case.
+impl EvoProblem for ScenarioGa<'_> {
+    fn genome_len(&self) -> usize {
+        genome_len_multi(&self.sim.tenant_workloads())
     }
 
-    fn crossover(&self, a: &[u16], b: &[u16], rng: &mut XorShift64) -> Vec<u16> {
-        let n = a.len();
-        if n < 2 {
-            return a.to_vec();
-        }
-        let mut lo = rng.below(n as u64) as usize;
-        let mut hi = rng.below(n as u64) as usize;
-        if lo > hi {
-            std::mem::swap(&mut lo, &mut hi);
-        }
-        let mut child = a.to_vec();
-        child[lo..=hi].copy_from_slice(&b[lo..=hi]);
-        child
-    }
-
-    fn mutate(&self, g: &mut [u16], rng: &mut XorShift64) {
-        let n = g.len();
-        if n == 0 {
-            return;
-        }
-        if rng.unit() < 0.5 || n == 1 {
-            let i = rng.below(n as u64) as usize;
-            g[i] = rng.below(self.n_cores() as u64) as u16;
-        } else {
-            let i = rng.below(n as u64) as usize;
-            let j = rng.below(n as u64) as usize;
-            g.swap(i, j);
-        }
+    fn n_cores(&self) -> usize {
+        self.sim.arch.dense_cores().len()
     }
 
     /// Seed genomes: the greedy per-tenant baseline, a Herald-style
@@ -145,96 +150,12 @@ impl<'a> ScenarioGa<'a> {
         seeds
     }
 
-    /// Run the search; returns the Pareto front over the serving
-    /// objectives, best miss-count first.
-    pub fn run(&mut self) -> Vec<ScenarioGaResult> {
-        let mut rng = XorShift64::new(self.params.seed);
-        let pop_size = self.params.population.max(4);
-        let mut population = self.seed_genomes();
-        population.truncate(pop_size);
-        while population.len() < pop_size {
-            population.push(self.random_genome(&mut rng));
-        }
+    fn evaluate(&mut self, genomes: &[Vec<u16>]) -> Vec<Vec<f64>> {
+        genomes.iter().map(|g| self.eval_one(g)).collect()
+    }
 
-        let mut best_scalar = f64::INFINITY;
-        let mut stale = 0usize;
-
-        for _gen in 0..self.params.generations {
-            let mut offspring = Vec::with_capacity(pop_size);
-            for _ in 0..pop_size {
-                let a = &population[rng.below(population.len() as u64) as usize];
-                let b = &population[rng.below(population.len() as u64) as usize];
-                let mut child = if rng.unit() < self.params.crossover_p {
-                    self.crossover(a, b, &mut rng)
-                } else {
-                    a.clone()
-                };
-                if rng.unit() < self.params.mutation_p {
-                    self.mutate(&mut child, &mut rng);
-                }
-                offspring.push(child);
-            }
-
-            let mut pool: Vec<Vec<u16>> = population.clone();
-            pool.extend(offspring);
-            let points: Vec<Vec<f64>> = pool.iter().map(|g| self.evaluate(g)).collect();
-            let survivors = select_survivors(&points, pop_size);
-            population = survivors.iter().map(|&i| pool[i].clone()).collect();
-
-            // saturation on a (1 + objective)-product scalarization —
-            // robust to the frequent all-deadlines-met misses == 0 case
-            let gen_best = points
-                .iter()
-                .map(|p| p.iter().map(|v| v + 1.0).product::<f64>())
-                .fold(f64::INFINITY, f64::min);
-            if gen_best < best_scalar * 0.999 {
-                best_scalar = gen_best;
-                stale = 0;
-            } else {
-                stale += 1;
-                if stale >= self.params.patience {
-                    break;
-                }
-            }
-        }
-
-        let points: Vec<Vec<f64>> =
-            self.evaluated.iter().map(|(_, v)| v.clone()).collect();
-        let fronts = fast_non_dominated_sort(&points);
-        let mut seen = std::collections::HashSet::new();
-        let mut results: Vec<ScenarioGaResult> = fronts
-            .first()
-            .map(|f| {
-                f.iter()
-                    .filter(|&&i| {
-                        seen.insert(
-                            points[i].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-                        )
-                    })
-                    .map(|&i| {
-                        let genome = self.evaluated[i].0.clone();
-                        let allocations = allocation_from_genome_multi(
-                            &self.sim.tenant_workloads(),
-                            self.sim.arch,
-                            &genome,
-                        );
-                        ScenarioGaResult {
-                            genome,
-                            allocations,
-                            misses: points[i][0] as usize,
-                            worst_p99_cc: points[i][1] as u64,
-                            energy_pj: points[i][2],
-                        }
-                    })
-                    .collect()
-            })
-            .unwrap_or_default();
-        results.sort_by(|a, b| {
-            (a.misses, a.worst_p99_cc)
-                .cmp(&(b.misses, b.worst_p99_cc))
-                .then(a.energy_pj.partial_cmp(&b.energy_pj).unwrap_or(std::cmp::Ordering::Equal))
-        });
-        results
+    fn scalarize(&self, point: &[f64]) -> f64 {
+        point.iter().map(|v| v + 1.0).product()
     }
 }
 

@@ -1,18 +1,21 @@
 //! The event-driven list scheduler (paper Fig. 7/8 semantics), with
 //! communication routed over the architecture's interconnect topology.
+//!
+//! Since the request-context refactor the inner loop itself lives in
+//! [`super::sim`]: [`Scheduler::run`] is the degenerate single-request
+//! instantiation of the unified core that the multi-DNN scenario
+//! engine also drives.  This module keeps the allocation-independent
+//! precomputation ([`Scheduler::new`]) and the one-shot result
+//! assembly.
 
-use crate::arch::{Accelerator, CoreId, CoreKind, LinkId};
+use crate::arch::{Accelerator, CoreId};
 use crate::cn::CnId;
-use crate::cost::{EnergyBreakdown, ScheduleMetrics};
-use crate::depgraph::{CnGraph, EdgeKind};
+use crate::depgraph::CnGraph;
 use crate::mapping::CostModel;
 use crate::scheduler::memtrace::MemTrace;
-use crate::scheduler::pool::CandidatePool;
-use crate::scheduler::resources::{FcfsLink, LinkSet, WeightTracker};
-use crate::scheduler::{
-    CommEvent, DramEvent, DramKind, LinkStat, SchedulePriority, ScheduleResult,
-};
-use crate::workload::{LayerId, OpType, WorkloadGraph};
+use crate::scheduler::sim::{Arbitration, SimContext, SimRequest, SimTenant};
+use crate::scheduler::{SchedulePriority, ScheduleResult};
+use crate::workload::WorkloadGraph;
 
 /// Placement and timing of one scheduled CN.
 #[derive(Debug, Clone, Copy)]
@@ -34,20 +37,18 @@ pub struct Scheduler<'a> {
     pub costs: &'a CostModel,
     pub arch: &'a Accelerator,
     /// #consumer layers per layer (producer-buffer free scaling).
-    /// `pub(crate)`: the scenario engine drives the same per-CN
-    /// accounting over many concurrent request instances.
-    pub(crate) fanout: Vec<f64>,
+    pub(super) fanout: Vec<f64>,
     /// fresh input bytes each source-layer CN must fetch from DRAM.
-    pub(crate) fresh_in_bytes: Vec<u64>,
+    pub(super) fresh_in_bytes: Vec<u64>,
     /// Per-layer DRAM weight-fetch cycles (cached off the candidate
     /// selection hot loop; see EXPERIMENTS.md §Perf).
-    pub(crate) wgt_fetch_cc: Vec<u64>,
+    pub(super) wgt_fetch_cc: Vec<u64>,
     /// Bounded-buffer gates: `gate_preds[p]` lists consumer CNs that
     /// must finish before producer CN `p` may start (streaming
     /// backpressure so producers cannot run arbitrarily far ahead of a
     /// slow consumer and flood the activation memory).
-    pub(crate) gate_preds: Vec<Vec<CnId>>,
-    pub(crate) gate_succs: Vec<Vec<CnId>>,
+    pub(super) gate_preds: Vec<Vec<CnId>>,
+    pub(super) gate_succs: Vec<Vec<CnId>>,
 }
 
 impl<'a> Scheduler<'a> {
@@ -184,647 +185,54 @@ impl<'a> Scheduler<'a> {
     /// assert!(result.latency() > 0);
     /// ```
     pub fn run(&self, allocation: &[CoreId], priority: SchedulePriority) -> ScheduleResult {
-        self.run_impl(allocation, priority, true)
+        self.run_sim(allocation, priority, false)
     }
 
-    /// The seed's O(n)-scan candidate selection — bit-identical results
-    /// to [`run`](Self::run), kept for equivalence tests and as the
-    /// `hotpath` bench baseline.
-    #[doc(hidden)]
-    pub fn run_reference(
+    /// The degenerate single-request instantiation of the unified
+    /// simulation core (`super::sim`): one lane released at t = 0 with
+    /// layer offset 0, vacuous FIFO arbitration, and event tagging off
+    /// (`tag_events: false` — nothing here reads the tags, so the hot
+    /// path never records them).  `linear_pool` selects the seed's
+    /// O(n) candidate scan — the `run_reference` pinning path.
+    pub(super) fn run_sim(
         &self,
         allocation: &[CoreId],
         priority: SchedulePriority,
+        linear_pool: bool,
     ) -> ScheduleResult {
-        self.run_impl(allocation, priority, false)
-    }
-
-    /// The pre-topology scheduler, verbatim: one scalar FCFS bus and one
-    /// scalar FCFS DRAM port, no routing.  Only valid on a
-    /// [`shared_bus`](crate::arch::Topology::shared_bus) topology
-    /// (panics otherwise).  `rust/tests/topology_equivalence.rs` pins
-    /// the routed path against this bit-for-bit; it is not part of the
-    /// public API.
-    #[doc(hidden)]
-    pub fn run_legacy_bus(
-        &self,
-        allocation: &[CoreId],
-        priority: SchedulePriority,
-    ) -> ScheduleResult {
-        let (bus_bw, bus_pj, dram_bw, dram_pj) = self
-            .arch
-            .topology
-            .as_shared_bus()
-            .expect("run_legacy_bus requires a shared-bus topology");
-        // in the shared_bus constructor the bus is link 0, the DRAM
-        // channel link 1 — events carry them so results compare fully
-        let bus_link: Box<[LinkId]> = Box::new([LinkId(0)]);
-        let dram_link: Box<[LinkId]> = Box::new([LinkId(1)]);
-
-        let n = self.graph.len();
         assert_eq!(allocation.len(), self.workload.len(), "allocation per layer");
-
-        let mut core_avail = vec![0u64; self.arch.cores.len()];
-        let mut core_busy = vec![0u64; self.arch.cores.len()];
-        let mut bus = FcfsLink::new(bus_bw);
-        let mut dram = FcfsLink::new(dram_bw);
-        let mut weights: Vec<WeightTracker> =
-            self.arch.cores.iter().map(|c| WeightTracker::new(c.wgt_mem_bytes)).collect();
-        let mut evicted: Vec<LayerId> = Vec::new();
-
-        let mut sched: Vec<Option<ScheduledCn>> = vec![None; n];
-        let mut pending: Vec<usize> = (0..n)
-            .map(|i| self.graph.pred_count(CnId(i)) + self.gate_preds[i].len())
-            .collect();
-        let mut pool = CandidatePool::new(n, self.arch.cores.len());
-        for i in 0..n {
-            if pending[i] == 0 {
-                self.add_candidate(CnId(i), &sched, &weights, allocation, &mut pool);
-            }
-        }
-
-        let mut trace = MemTrace::new();
-        let mut comms: Vec<CommEvent> = Vec::new();
-        let mut drams: Vec<DramEvent> = Vec::new();
-        let mut breakdown = EnergyBreakdown::default();
-        let mut scheduled_order = Vec::with_capacity(n);
-
-        let act_cap: f64 = self.arch.cores.iter().map(|c| c.act_mem_bytes as f64).sum();
-        let mut act_occ = 0.0f64;
-
-        loop {
-            let picked = match priority {
-                SchedulePriority::Latency => pool.pop_latency(act_occ, act_cap),
-                SchedulePriority::Memory => pool.pop_memory(act_occ, act_cap),
-            };
-            let Some(cn_id) = picked else { break };
-            let cn = self.graph.cns.node(cn_id);
-            let layer = self.workload.layer(cn.layer);
-            let core_id = allocation[cn.layer.0];
-            let core = self.arch.core(core_id);
-
-            let mut data_ready = 0u64;
-            for e in self.graph.pred_edges(cn_id) {
-                let p = sched[e.from.0].expect("pred scheduled");
-                match e.kind {
-                    EdgeKind::Order => data_ready = data_ready.max(p.end),
-                    EdgeKind::Data => {
-                        if p.core == core_id || e.bytes == 0 {
-                            data_ready = data_ready.max(p.end);
-                        } else {
-                            let (cs, ce) = bus.transfer(p.end, e.bytes);
-                            comms.push(CommEvent {
-                                from_core: p.core,
-                                to_core: core_id,
-                                start: cs,
-                                end: ce,
-                                bytes: e.bytes,
-                                links: bus_link.clone(),
-                            });
-                            breakdown.noc_pj += e.bytes as f64 * 8.0 * bus_pj;
-                            trace.push(cs, core_id, e.bytes as f64);
-                            act_occ += e.bytes as f64;
-                            let pf = self.fanout[p_layer(self.graph, e.from).0];
-                            trace.push(ce, p.core, -(e.bytes as f64) / pf);
-                            act_occ = (act_occ - e.bytes as f64 / pf).max(0.0);
-                            data_ready = data_ready.max(ce);
-                        }
-                    }
-                }
-            }
-
-            for g in &self.gate_preds[cn_id.0] {
-                data_ready = data_ready.max(sched[g.0].expect("gate scheduled").end);
-            }
-
-            let mut weights_ready = 0u64;
-            let wbytes = layer.weight_bytes();
-            if wbytes > 0 {
-                let fetch = weights[core_id.0].require_evicting(cn.layer, wbytes, &mut evicted);
-                if fetch > 0 {
-                    let (ds, de) = dram.transfer(0, fetch);
-                    drams.push(DramEvent {
-                        core: core_id,
-                        start: ds,
-                        end: de,
-                        bytes: fetch,
-                        kind: DramKind::WeightFetch,
-                        links: dram_link.clone(),
-                    });
-                    breakdown.dram_pj += fetch as f64 * 8.0 * dram_pj;
-                    if let CoreKind::Aimc { weight_load_pj, .. } = core.kind {
-                        breakdown.onchip_pj += fetch as f64 * 8.0 * weight_load_pj;
-                    }
-                    weights_ready = de;
-                    let fetched_layer = cn.layer;
-                    let evicted = &evicted;
-                    pool.rekey_core(core_id.0, |l| {
-                        if l == fetched_layer {
-                            Some(0)
-                        } else if evicted.contains(&l) {
-                            Some(self.wgt_fetch_cc[l.0])
-                        } else {
-                            None
-                        }
-                    });
-                }
-            }
-
-            let mut input_ready = 0u64;
-            let fresh = self.fresh_in_bytes[cn_id.0];
-            if fresh > 0 {
-                let (ds, de) = dram.transfer(0, fresh);
-                drams.push(DramEvent {
-                    core: core_id,
-                    start: ds,
-                    end: de,
-                    bytes: fresh,
-                    kind: DramKind::ActFetch,
-                    links: dram_link.clone(),
-                });
-                breakdown.dram_pj += fresh as f64 * 8.0 * dram_pj;
-                trace.push(ds, core_id, fresh as f64);
-                act_occ += fresh as f64;
-                input_ready = de;
-            }
-
-            let cost = self.costs.cn_cost(cn, core_id);
-            let start = core_avail[core_id.0]
-                .max(data_ready)
-                .max(weights_ready)
-                .max(input_ready);
-            let end = start + cost.compute_cycles;
-            core_avail[core_id.0] = end;
-            core_busy[core_id.0] += cost.compute_cycles;
-            breakdown.mac_pj += cost.mac_energy_pj;
-            breakdown.onchip_pj += cost.energy_pj - cost.mac_energy_pj;
-
-            trace.push(start, core_id, cn.output_bytes as f64);
-            act_occ += cn.output_bytes as f64;
-
-            if layer.predecessors.is_empty() {
-                trace.push(end, core_id, -(cn.discard_input_bytes as f64));
-                act_occ = (act_occ - cn.discard_input_bytes as f64).max(0.0);
-            } else {
-                for &p in &layer.predecessors {
-                    let share = match layer.op {
-                        OpType::Concat => {
-                            cn.discard_input_bytes as f64 * self.workload.layer(p).k as f64
-                                / layer.c as f64
-                        }
-                        _ => cn.discard_input_bytes as f64,
-                    };
-                    let p_core = allocation[p.0];
-                    if p_core == core_id {
-                        trace.push(end, core_id, -share / self.fanout[p.0]);
-                        act_occ = (act_occ - share / self.fanout[p.0]).max(0.0);
-                    } else {
-                        trace.push(end, core_id, -share);
-                        act_occ = (act_occ - share).max(0.0);
-                    }
-                }
-            }
-
-            if self.workload.successors(cn.layer).is_empty() {
-                let (ds, de) = dram.transfer(end, cn.output_bytes);
-                drams.push(DramEvent {
-                    core: core_id,
-                    start: ds,
-                    end: de,
-                    bytes: cn.output_bytes,
-                    kind: DramKind::ActStore,
-                    links: dram_link.clone(),
-                });
-                breakdown.dram_pj += cn.output_bytes as f64 * 8.0 * dram_pj;
-                trace.push(de, core_id, -(cn.output_bytes as f64));
-                act_occ = (act_occ - cn.output_bytes as f64).max(0.0);
-            }
-
-            let placed = ScheduledCn { cn: cn_id, core: core_id, start, end };
-            sched[cn_id.0] = Some(placed);
-            scheduled_order.push(placed);
-
-            for e in self.graph.succ_edges(cn_id) {
-                pending[e.to.0] -= 1;
-                if pending[e.to.0] == 0 {
-                    self.add_candidate(e.to, &sched, &weights, allocation, &mut pool);
-                }
-            }
-            for &g in &self.gate_succs[cn_id.0] {
-                pending[g.0] -= 1;
-                if pending[g.0] == 0 {
-                    self.add_candidate(g, &sched, &weights, allocation, &mut pool);
-                }
-            }
-        }
-
-        debug_assert!(sched.iter().all(|s| s.is_some()), "all CNs scheduled");
-
-        let compute_end = scheduled_order.iter().map(|s| s.end).max().unwrap_or(0);
-        let io_end = drams
-            .iter()
-            .map(|d| d.end)
-            .chain(comms.iter().map(|c| c.end))
-            .max()
-            .unwrap_or(0);
-        let latency = compute_end.max(io_end);
-
-        let dense_busy: u64 = self
-            .arch
-            .cores
-            .iter()
-            .filter(|c| !c.is_simd())
-            .map(|c| core_busy[c.id.0])
-            .sum();
-        let dense_count = self.arch.cores.iter().filter(|c| !c.is_simd()).count() as f64;
-        let avg_core_util = if latency > 0 {
-            dense_busy as f64 / (latency as f64 * dense_count)
-        } else {
-            0.0
+        let tenants = [SimTenant {
+            sched: self,
+            alloc: allocation,
+            pool_priority: priority,
+            prio_rank: 0,
+            layer_off: 0,
+        }];
+        let requests = [SimRequest { tenant: 0, release: 0, deadline_abs: None }];
+        let ctx = SimContext {
+            arch: self.arch,
+            tenants: &tenants,
+            requests: &requests,
+            wgt_fetch_g: &self.wgt_fetch_cc,
+            arbitration: Arbitration::Fifo,
+            linear_pool,
+            tag_events: false,
         };
-
-        let (peak, spill_bytes) = peak_and_spill(&trace, self.arch);
-        let mut latency = latency;
-        if spill_bytes > 0.5 {
-            breakdown.dram_pj += 2.0 * spill_bytes * 8.0 * dram_pj;
-            let extra_port = (2.0 * spill_bytes * 8.0 / dram_bw.max(1) as f64) as u64;
-            latency = latency.max(dram.busy_cycles + extra_port);
-        }
-
-        let metrics = ScheduleMetrics {
-            latency_cc: latency,
-            energy_pj: breakdown.total(),
-            peak_mem_bytes: peak,
-            breakdown,
-            avg_core_util,
-        };
-
-        let link_stats = vec![
-            LinkStat { busy_cycles: bus.busy_cycles, bytes_moved: bus.bytes_moved },
-            LinkStat { busy_cycles: dram.busy_cycles, bytes_moved: dram.bytes_moved },
-        ];
-
+        let out = ctx.simulate();
         ScheduleResult {
-            cns: scheduled_order,
-            comms,
-            drams,
-            link_stats,
-            metrics,
-            memtrace: trace,
+            cns: out.cns,
+            comms: out.comms,
+            drams: out.drams,
+            link_stats: out.link_stats,
+            metrics: out.metrics,
+            memtrace: out.memtrace,
         }
-    }
-
-    fn run_impl(
-        &self,
-        allocation: &[CoreId],
-        priority: SchedulePriority,
-        heap_pool: bool,
-    ) -> ScheduleResult {
-        let n = self.graph.len();
-        assert_eq!(allocation.len(), self.workload.len(), "allocation per layer");
-
-        let topo = &self.arch.topology;
-        let mut core_avail = vec![0u64; self.arch.cores.len()];
-        let mut core_busy = vec![0u64; self.arch.cores.len()];
-        let mut links = LinkSet::new(topo);
-        let mut weights: Vec<WeightTracker> =
-            self.arch.cores.iter().map(|c| WeightTracker::new(c.wgt_mem_bytes)).collect();
-        let mut evicted: Vec<LayerId> = Vec::new();
-
-        let mut sched: Vec<Option<ScheduledCn>> = vec![None; n];
-        let mut pending: Vec<usize> = (0..n)
-            .map(|i| self.graph.pred_count(CnId(i)) + self.gate_preds[i].len())
-            .collect();
-        let mut pool = CandidatePool::new(n, self.arch.cores.len());
-        for i in 0..n {
-            if pending[i] == 0 {
-                self.add_candidate(CnId(i), &sched, &weights, allocation, &mut pool);
-            }
-        }
-
-        let mut trace = MemTrace::new();
-        let mut comms: Vec<CommEvent> = Vec::new();
-        let mut drams: Vec<DramEvent> = Vec::new();
-        let mut breakdown = EnergyBreakdown::default();
-        let mut scheduled_order = Vec::with_capacity(n);
-
-        // Pooled activation occupancy in scheduling order, used for
-        // backpressure: producers are not scheduled arbitrarily far
-        // ahead of their consumers when the on-chip activation capacity
-        // would overflow (the pool's memory-full fallback then drains
-        // the deepest ready CNs first, like the memory-prioritized
-        // scheduler).
-        let act_cap: f64 = self.arch.cores.iter().map(|c| c.act_mem_bytes as f64).sum();
-        let mut act_occ = 0.0f64;
-
-
-        loop {
-            let picked = if heap_pool {
-                match priority {
-                    SchedulePriority::Latency => pool.pop_latency(act_occ, act_cap),
-                    SchedulePriority::Memory => pool.pop_memory(act_occ, act_cap),
-                }
-            } else {
-                pool.pop_linear(priority, act_occ, act_cap)
-            };
-            let Some(cn_id) = picked else { break };
-            let cn = self.graph.cns.node(cn_id);
-            let layer = self.workload.layer(cn.layer);
-            let core_id = allocation[cn.layer.0];
-            let core = self.arch.core(core_id);
-
-            // 1) incoming data: same-core preds gate by finish time;
-            //    cross-core preds need a routed communication node that
-            //    occupies every interconnect link between the two cores
-            let mut data_ready = 0u64;
-            for e in self.graph.pred_edges(cn_id) {
-                let p = sched[e.from.0].expect("pred scheduled");
-                match e.kind {
-                    EdgeKind::Order => data_ready = data_ready.max(p.end),
-                    EdgeKind::Data => {
-                        if p.core == core_id || e.bytes == 0 {
-                            data_ready = data_ready.max(p.end);
-                        } else {
-                            let route = topo.core_route(p.core, core_id);
-                            let (cs, ce) = links.transfer(route, p.end, e.bytes);
-                            comms.push(CommEvent {
-                                from_core: p.core,
-                                to_core: core_id,
-                                start: cs,
-                                end: ce,
-                                bytes: e.bytes,
-                                links: route.into(),
-                            });
-                            breakdown.noc_pj +=
-                                e.bytes as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
-                            // consumer-side copy allocated at comm start
-                            trace.push(cs, core_id, e.bytes as f64);
-                            act_occ += e.bytes as f64;
-                            // producer copy freed once the transfer ends
-                            let pf = self.fanout[p_layer(self.graph, e.from).0];
-                            trace.push(ce, p.core, -(e.bytes as f64) / pf);
-                            act_occ = (act_occ - e.bytes as f64 / pf).max(0.0);
-                            data_ready = data_ready.max(ce);
-                        }
-                    }
-                }
-            }
-
-            // 1b) buffer gates: wait for the gating consumer CNs
-            for g in &self.gate_preds[cn_id.0] {
-                data_ready = data_ready.max(sched[g.0].expect("gate scheduled").end);
-            }
-
-            // 2) weights: fetch through the nearest DRAM port if not
-            //    resident (channel + any NoC hops into the core)
-            let mut weights_ready = 0u64;
-            let wbytes = layer.weight_bytes();
-            if wbytes > 0 {
-                let fetch = weights[core_id.0].require_evicting(cn.layer, wbytes, &mut evicted);
-                if fetch > 0 {
-                    let route = topo.dram_load_route(core_id);
-                    let (ds, de) = links.transfer(route, 0, fetch);
-                    drams.push(DramEvent {
-                        core: core_id,
-                        start: ds,
-                        end: de,
-                        bytes: fetch,
-                        kind: DramKind::WeightFetch,
-                        links: route.into(),
-                    });
-                    breakdown.dram_pj += fetch as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
-                    breakdown.noc_pj += fetch as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
-                    if let CoreKind::Aimc { weight_load_pj, .. } = core.kind {
-                        breakdown.onchip_pj += fetch as f64 * 8.0 * weight_load_pj;
-                    }
-                    weights_ready = de;
-                    // residency on this core changed: the fetched layer's
-                    // remaining CNs lose their fetch penalty, the FIFO
-                    // victims' CNs gain one
-                    let fetched_layer = cn.layer;
-                    let evicted = &evicted;
-                    pool.rekey_core(core_id.0, |l| {
-                        if l == fetched_layer {
-                            Some(0)
-                        } else if evicted.contains(&l) {
-                            Some(self.wgt_fetch_cc[l.0])
-                        } else {
-                            None
-                        }
-                    });
-                }
-            }
-
-            // 3) first-layer input activations come from DRAM
-            let mut input_ready = 0u64;
-            let fresh = self.fresh_in_bytes[cn_id.0];
-            if fresh > 0 {
-                let route = topo.dram_load_route(core_id);
-                let (ds, de) = links.transfer(route, 0, fresh);
-                drams.push(DramEvent {
-                    core: core_id,
-                    start: ds,
-                    end: de,
-                    bytes: fresh,
-                    kind: DramKind::ActFetch,
-                    links: route.into(),
-                });
-                breakdown.dram_pj += fresh as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
-                breakdown.noc_pj += fresh as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
-                trace.push(ds, core_id, fresh as f64);
-                act_occ += fresh as f64;
-                input_ready = de;
-            }
-
-            // 4) execute
-            let cost = self.costs.cn_cost(cn, core_id);
-            let start = core_avail[core_id.0]
-                .max(data_ready)
-                .max(weights_ready)
-                .max(input_ready);
-            let end = start + cost.compute_cycles;
-            core_avail[core_id.0] = end;
-            core_busy[core_id.0] += cost.compute_cycles;
-            breakdown.mac_pj += cost.mac_energy_pj;
-            breakdown.onchip_pj += cost.energy_pj - cost.mac_energy_pj;
-
-            // 5) memory trace: outputs allocated at start
-            trace.push(start, core_id, cn.output_bytes as f64);
-            act_occ += cn.output_bytes as f64;
-
-            // discardable inputs freed at finish, per producer layer
-            if layer.predecessors.is_empty() {
-                trace.push(end, core_id, -(cn.discard_input_bytes as f64));
-                act_occ = (act_occ - cn.discard_input_bytes as f64).max(0.0);
-            } else {
-                for &p in &layer.predecessors {
-                    let share = match layer.op {
-                        OpType::Concat => {
-                            cn.discard_input_bytes as f64 * self.workload.layer(p).k as f64
-                                / layer.c as f64
-                        }
-                        _ => cn.discard_input_bytes as f64,
-                    };
-                    let p_core = allocation[p.0];
-                    if p_core == core_id {
-                        // shared physical buffer on the producer's core
-                        trace.push(end, core_id, -share / self.fanout[p.0]);
-                        act_occ = (act_occ - share / self.fanout[p.0]).max(0.0);
-                    } else {
-                        // our private copy from the communication
-                        trace.push(end, core_id, -share);
-                        act_occ = (act_occ - share).max(0.0);
-                    }
-                }
-            }
-
-            // 6) sink outputs stream to DRAM via the nearest port
-            if self.workload.successors(cn.layer).is_empty() {
-                let route = topo.dram_store_route(core_id);
-                let (ds, de) = links.transfer(route, end, cn.output_bytes);
-                drams.push(DramEvent {
-                    core: core_id,
-                    start: ds,
-                    end: de,
-                    bytes: cn.output_bytes,
-                    kind: DramKind::ActStore,
-                    links: route.into(),
-                });
-                breakdown.dram_pj +=
-                    cn.output_bytes as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
-                breakdown.noc_pj +=
-                    cn.output_bytes as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
-                trace.push(de, core_id, -(cn.output_bytes as f64));
-                act_occ = (act_occ - cn.output_bytes as f64).max(0.0);
-            }
-
-            let placed = ScheduledCn { cn: cn_id, core: core_id, start, end };
-            sched[cn_id.0] = Some(placed);
-            scheduled_order.push(placed);
-
-            // 7) release successors (data/order edges + buffer gates)
-            for e in self.graph.succ_edges(cn_id) {
-                pending[e.to.0] -= 1;
-                if pending[e.to.0] == 0 {
-                    self.add_candidate(e.to, &sched, &weights, allocation, &mut pool);
-                }
-            }
-            for &g in &self.gate_succs[cn_id.0] {
-                pending[g.0] -= 1;
-                if pending[g.0] == 0 {
-                    self.add_candidate(g, &sched, &weights, allocation, &mut pool);
-                }
-            }
-        }
-
-        debug_assert!(sched.iter().all(|s| s.is_some()), "all CNs scheduled");
-
-        let compute_end = scheduled_order.iter().map(|s| s.end).max().unwrap_or(0);
-        let io_end = drams
-            .iter()
-            .map(|d| d.end)
-            .chain(comms.iter().map(|c| c.end))
-            .max()
-            .unwrap_or(0);
-        let latency = compute_end.max(io_end);
-
-        let dense_busy: u64 = self
-            .arch
-            .cores
-            .iter()
-            .filter(|c| !c.is_simd())
-            .map(|c| core_busy[c.id.0])
-            .sum();
-        let dense_count = self.arch.cores.iter().filter(|c| !c.is_simd()).count() as f64;
-        let avg_core_util = if latency > 0 {
-            dense_busy as f64 / (latency as f64 * dense_count)
-        } else {
-            0.0
-        };
-
-        // --- Step 5.2b: peak memory + activation-spill accounting in a
-        // single time-ordered pass (post-scheduling, like the paper's
-        // memory-usage tracing).  Activation bytes that land above the
-        // pooled SRAM capacity must take a round trip through DRAM:
-        // charge store+reload energy and extend the makespan to the
-        // DRAM-port-bound floor.
-        let (peak, spill_bytes) = peak_and_spill(&trace, self.arch);
-        let mut latency = latency;
-        if spill_bytes > 0.5 {
-            // spill round trips pay the mean port energy and extend the
-            // makespan to the aggregate-off-chip-bandwidth floor
-            breakdown.dram_pj += 2.0 * spill_bytes * 8.0 * topo.spill_dram_pj_per_bit();
-            let extra_port = (2.0 * spill_bytes * 8.0 / topo.dram_bw_bits() as f64) as u64;
-            let dram_busy = topo
-                .dram_channel_links()
-                .map(|l| links.busy_cycles(l))
-                .max()
-                .unwrap_or(0);
-            latency = latency.max(dram_busy + extra_port);
-        }
-
-        let metrics = ScheduleMetrics {
-            latency_cc: latency,
-            energy_pj: breakdown.total(),
-            peak_mem_bytes: peak,
-            breakdown,
-            avg_core_util,
-        };
-
-        let link_stats = links
-            .stats()
-            .into_iter()
-            .map(|(busy_cycles, bytes_moved)| LinkStat { busy_cycles, bytes_moved })
-            .collect();
-
-        ScheduleResult {
-            cns: scheduled_order,
-            comms,
-            drams,
-            link_stats,
-            metrics,
-            memtrace: trace,
-        }
-    }
-
-    /// Register a CN whose predecessors (and buffer gates) are all
-    /// scheduled as a pool candidate.
-    ///
-    /// `ready` is the time the last predecessor finished; the
-    /// *effective* readiness additionally charges the layer's DRAM
-    /// weight-fetch time when the weights are not resident on its
-    /// allocated core — this keeps CNs of a resident layer running back
-    /// to back and avoids weight thrash when several layers share a
-    /// core.  CNs with a nonzero fetch are watched in the pool's
-    /// per-core bucket so residency changes re-key them.
-    fn add_candidate(
-        &self,
-        id: CnId,
-        sched: &[Option<ScheduledCn>],
-        weights: &[WeightTracker],
-        allocation: &[CoreId],
-        pool: &mut CandidatePool,
-    ) {
-        let ready = self
-            .graph
-            .pred_edges(id)
-            .map(|e| sched[e.from.0].expect("pred scheduled").end)
-            .chain(self.gate_preds[id.0].iter().map(|g| sched[g.0].expect("gate scheduled").end))
-            .max()
-            .unwrap_or(0);
-        let cn = self.graph.cns.node(id);
-        let core = allocation[cn.layer.0];
-        let fetch = self.wgt_fetch_cc[cn.layer.0];
-        let eff = if fetch == 0 || weights[core.0].is_resident(cn.layer) {
-            ready
-        } else {
-            ready + fetch
-        };
-        pool.insert(id, cn.layer, cn.idx, ready, eff, cn.output_bytes, core.0, fetch > 0);
     }
 }
 
-fn p_layer(graph: &CnGraph, cn: CnId) -> LayerId {
+/// Producer layer of a CN (used by the frozen legacy-bus reference).
+#[cfg(any(test, feature = "reference-engines"))]
+pub(super) fn p_layer(graph: &CnGraph, cn: CnId) -> crate::workload::LayerId {
     graph.cns.node(cn).layer
 }
 
@@ -835,7 +243,7 @@ fn p_layer(graph: &CnGraph, cn: CnId) -> LayerId {
 /// the fusion advantage of paper Figs. 14/15 in one number.  Capacity
 /// is pooled across cores, matching the paper's total-usage trace
 /// semantics (Fig. 7: "total memory usage of all three cores").
-pub(crate) fn peak_and_spill(trace: &MemTrace, arch: &Accelerator) -> (f64, f64) {
+pub(super) fn peak_and_spill(trace: &MemTrace, arch: &Accelerator) -> (f64, f64) {
     let cap: f64 = arch.cores.iter().map(|c| c.act_mem_bytes as f64).sum();
     let mut evs: Vec<(u64, f64)> =
         trace.events.iter().map(|e| (e.time, e.delta)).collect();
@@ -874,6 +282,7 @@ mod tests {
     use crate::arch::presets;
     use crate::cn::{CnGranularity, CnSet};
     use crate::depgraph::generate;
+    use crate::scheduler::DramKind;
     use crate::workload::models::{tiny_branchy, tiny_segment};
 
     fn setup(

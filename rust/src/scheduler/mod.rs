@@ -30,6 +30,16 @@
 //! prebuilt scheduler can serve any number of GA fitness workers
 //! concurrently.
 //!
+//! The event loop itself is the crate's **unified simulation core**
+//! (the internal `sim` module): [`Scheduler::run`] instantiates it
+//! with a single request lane released at t = 0, and the Step 6
+//! scenario engine ([`crate::scenario`]) instantiates the *same body*
+//! with one lane per request of every tenant, under an inter-request
+//! [`Arbitration`] policy.  One inner loop serves both paths; the
+//! degenerate case is pinned bit-for-bit against the frozen reference
+//! engines (`rust/tests/sim_core_fuzz.rs`,
+//! `rust/tests/topology_equivalence.rs`).
+//!
 //! Step 5.2: once start/end times are known, activation memory usage is
 //! traced from the CNs' discardable-input / generated-output attributes
 //! ([`memtrace`]).
@@ -37,11 +47,14 @@
 mod engine;
 pub mod memtrace;
 pub(crate) mod pool;
+#[cfg(any(test, feature = "reference-engines"))]
+mod reference;
 pub mod resources;
+pub(crate) mod sim;
 
-pub(crate) use engine::peak_and_spill;
 pub use engine::{schedule, ScheduledCn, Scheduler};
 pub use memtrace::{MemEvent, MemTrace};
+pub use sim::Arbitration;
 
 use crate::arch::{CoreId, LinkId};
 use crate::cost::ScheduleMetrics;

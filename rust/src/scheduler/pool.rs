@@ -124,7 +124,7 @@ impl CandidatePool {
     }
 
     /// Smallest *current* effective readiness among pooled candidates,
-    /// without removing anything — the scenario engine's inter-request
+    /// without removing anything — the unified core's inter-request
     /// arbitration signal.  Stale `lat` leftovers (taken CNs, superseded
     /// re-keys) are popped on the way; every live candidate always owns
     /// one entry carrying its current key, so the first valid top is the

@@ -1,0 +1,647 @@
+//! Frozen reference engines, compiled only for tests and under the
+//! `reference-engines` feature (the self dev-dependency enables it for
+//! every test/bench target, so release builds of the library carry no
+//! dead pinning code).
+//!
+//! - [`Scheduler::run_reference`] — the unified core driven by the
+//!   seed's O(n) linear candidate scan instead of the heaps;
+//! - [`Scheduler::run_legacy_routed`] — a verbatim copy of the
+//!   pre-unification routed single-request engine
+//!   (`Scheduler::run_impl` as of PR 3), the oracle that pins the
+//!   unified core's routed semantics: unlike `run_reference`, it
+//!   shares none of the **loop body** with `SimContext::simulate`, so
+//!   a regression in the core's event loop cannot cancel out of the
+//!   comparison (`rust/tests/sim_core_fuzz.rs`).  The shared
+//!   primitives (`CandidatePool`, `LinkSet`, `WeightTracker`,
+//!   `peak_and_spill`) are *not* covered by that independence — they
+//!   are pinned separately: the pool by its own linear-scan fuzz
+//!   oracle, links/trackers by `run_legacy_bus` on shared-bus
+//!   topologies;
+//! - [`Scheduler::run_legacy_bus`] — a verbatim copy of the
+//!   pre-topology scalar-bus engine, the anchor of
+//!   `rust/tests/topology_equivalence.rs`.
+
+use crate::arch::{CoreId, CoreKind, LinkId};
+use crate::cn::CnId;
+use crate::cost::{EnergyBreakdown, ScheduleMetrics};
+use crate::depgraph::EdgeKind;
+use crate::workload::{LayerId, OpType};
+
+use super::engine::{p_layer, peak_and_spill, ScheduledCn, Scheduler};
+use super::memtrace::MemTrace;
+use super::pool::CandidatePool;
+use super::resources::{FcfsLink, LinkSet, WeightTracker};
+use super::{
+    CommEvent, DramEvent, DramKind, LinkStat, SchedulePriority, ScheduleResult,
+};
+
+impl Scheduler<'_> {
+    /// The seed's O(n)-scan candidate selection — bit-identical results
+    /// to [`run`](Self::run), kept for equivalence tests and as the
+    /// `hotpath` bench baseline.
+    #[doc(hidden)]
+    pub fn run_reference(
+        &self,
+        allocation: &[CoreId],
+        priority: SchedulePriority,
+    ) -> ScheduleResult {
+        self.run_sim(allocation, priority, true)
+    }
+
+    /// The pre-unification routed single-request engine, verbatim
+    /// (`Scheduler::run_impl` with the heap pool, as of PR 3): the
+    /// frozen oracle for the unified core's routed semantics on *any*
+    /// topology.  Shares no **loop body** with `SimContext::simulate`,
+    /// so the bit-identity comparison in `rust/tests/sim_core_fuzz.rs`
+    /// is non-circular for the event loop itself (the shared
+    /// `pool`/`resources` primitives are pinned by their own oracles —
+    /// see the module docs).  Not part of the public API.
+    #[doc(hidden)]
+    pub fn run_legacy_routed(
+        &self,
+        allocation: &[CoreId],
+        priority: SchedulePriority,
+    ) -> ScheduleResult {
+        let n = self.graph.len();
+        assert_eq!(allocation.len(), self.workload.len(), "allocation per layer");
+
+        let topo = &self.arch.topology;
+        let mut core_avail = vec![0u64; self.arch.cores.len()];
+        let mut core_busy = vec![0u64; self.arch.cores.len()];
+        let mut links = LinkSet::new(topo);
+        let mut weights: Vec<WeightTracker> =
+            self.arch.cores.iter().map(|c| WeightTracker::new(c.wgt_mem_bytes)).collect();
+        let mut evicted: Vec<LayerId> = Vec::new();
+
+        let mut sched: Vec<Option<ScheduledCn>> = vec![None; n];
+        let mut pending: Vec<usize> = (0..n)
+            .map(|i| self.graph.pred_count(CnId(i)) + self.gate_preds[i].len())
+            .collect();
+        let mut pool = CandidatePool::new(n, self.arch.cores.len());
+        for i in 0..n {
+            if pending[i] == 0 {
+                self.add_candidate_legacy(CnId(i), &sched, &weights, allocation, &mut pool);
+            }
+        }
+
+        let mut trace = MemTrace::new();
+        let mut comms: Vec<CommEvent> = Vec::new();
+        let mut drams: Vec<DramEvent> = Vec::new();
+        let mut breakdown = EnergyBreakdown::default();
+        let mut scheduled_order = Vec::with_capacity(n);
+
+        let act_cap: f64 = self.arch.cores.iter().map(|c| c.act_mem_bytes as f64).sum();
+        let mut act_occ = 0.0f64;
+
+        loop {
+            let picked = match priority {
+                SchedulePriority::Latency => pool.pop_latency(act_occ, act_cap),
+                SchedulePriority::Memory => pool.pop_memory(act_occ, act_cap),
+            };
+            let Some(cn_id) = picked else { break };
+            let cn = self.graph.cns.node(cn_id);
+            let layer = self.workload.layer(cn.layer);
+            let core_id = allocation[cn.layer.0];
+            let core = self.arch.core(core_id);
+
+            // 1) incoming data: same-core preds gate by finish time;
+            //    cross-core preds need a routed communication node that
+            //    occupies every interconnect link between the two cores
+            let mut data_ready = 0u64;
+            for e in self.graph.pred_edges(cn_id) {
+                let p = sched[e.from.0].expect("pred scheduled");
+                match e.kind {
+                    EdgeKind::Order => data_ready = data_ready.max(p.end),
+                    EdgeKind::Data => {
+                        if p.core == core_id || e.bytes == 0 {
+                            data_ready = data_ready.max(p.end);
+                        } else {
+                            let route = topo.core_route(p.core, core_id);
+                            let (cs, ce) = links.transfer(route, p.end, e.bytes);
+                            comms.push(CommEvent {
+                                from_core: p.core,
+                                to_core: core_id,
+                                start: cs,
+                                end: ce,
+                                bytes: e.bytes,
+                                links: route.into(),
+                            });
+                            breakdown.noc_pj +=
+                                e.bytes as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
+                            trace.push(cs, core_id, e.bytes as f64);
+                            act_occ += e.bytes as f64;
+                            let pf = self.fanout[p_layer(self.graph, e.from).0];
+                            trace.push(ce, p.core, -(e.bytes as f64) / pf);
+                            act_occ = (act_occ - e.bytes as f64 / pf).max(0.0);
+                            data_ready = data_ready.max(ce);
+                        }
+                    }
+                }
+            }
+
+            // 1b) buffer gates: wait for the gating consumer CNs
+            for g in &self.gate_preds[cn_id.0] {
+                data_ready = data_ready.max(sched[g.0].expect("gate scheduled").end);
+            }
+
+            // 2) weights: fetch through the nearest DRAM port if not
+            //    resident (channel + any NoC hops into the core)
+            let mut weights_ready = 0u64;
+            let wbytes = layer.weight_bytes();
+            if wbytes > 0 {
+                let fetch = weights[core_id.0].require_evicting(cn.layer, wbytes, &mut evicted);
+                if fetch > 0 {
+                    let route = topo.dram_load_route(core_id);
+                    let (ds, de) = links.transfer(route, 0, fetch);
+                    drams.push(DramEvent {
+                        core: core_id,
+                        start: ds,
+                        end: de,
+                        bytes: fetch,
+                        kind: DramKind::WeightFetch,
+                        links: route.into(),
+                    });
+                    breakdown.dram_pj += fetch as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
+                    breakdown.noc_pj += fetch as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
+                    if let CoreKind::Aimc { weight_load_pj, .. } = core.kind {
+                        breakdown.onchip_pj += fetch as f64 * 8.0 * weight_load_pj;
+                    }
+                    weights_ready = de;
+                    let fetched_layer = cn.layer;
+                    let evicted = &evicted;
+                    pool.rekey_core(core_id.0, |l| {
+                        if l == fetched_layer {
+                            Some(0)
+                        } else if evicted.contains(&l) {
+                            Some(self.wgt_fetch_cc[l.0])
+                        } else {
+                            None
+                        }
+                    });
+                }
+            }
+
+            // 3) first-layer input activations come from DRAM
+            let mut input_ready = 0u64;
+            let fresh = self.fresh_in_bytes[cn_id.0];
+            if fresh > 0 {
+                let route = topo.dram_load_route(core_id);
+                let (ds, de) = links.transfer(route, 0, fresh);
+                drams.push(DramEvent {
+                    core: core_id,
+                    start: ds,
+                    end: de,
+                    bytes: fresh,
+                    kind: DramKind::ActFetch,
+                    links: route.into(),
+                });
+                breakdown.dram_pj += fresh as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
+                breakdown.noc_pj += fresh as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
+                trace.push(ds, core_id, fresh as f64);
+                act_occ += fresh as f64;
+                input_ready = de;
+            }
+
+            // 4) execute
+            let cost = self.costs.cn_cost(cn, core_id);
+            let start = core_avail[core_id.0]
+                .max(data_ready)
+                .max(weights_ready)
+                .max(input_ready);
+            let end = start + cost.compute_cycles;
+            core_avail[core_id.0] = end;
+            core_busy[core_id.0] += cost.compute_cycles;
+            breakdown.mac_pj += cost.mac_energy_pj;
+            breakdown.onchip_pj += cost.energy_pj - cost.mac_energy_pj;
+
+            // 5) memory trace: outputs allocated at start
+            trace.push(start, core_id, cn.output_bytes as f64);
+            act_occ += cn.output_bytes as f64;
+
+            if layer.predecessors.is_empty() {
+                trace.push(end, core_id, -(cn.discard_input_bytes as f64));
+                act_occ = (act_occ - cn.discard_input_bytes as f64).max(0.0);
+            } else {
+                for &p in &layer.predecessors {
+                    let share = match layer.op {
+                        OpType::Concat => {
+                            cn.discard_input_bytes as f64 * self.workload.layer(p).k as f64
+                                / layer.c as f64
+                        }
+                        _ => cn.discard_input_bytes as f64,
+                    };
+                    let p_core = allocation[p.0];
+                    if p_core == core_id {
+                        trace.push(end, core_id, -share / self.fanout[p.0]);
+                        act_occ = (act_occ - share / self.fanout[p.0]).max(0.0);
+                    } else {
+                        trace.push(end, core_id, -share);
+                        act_occ = (act_occ - share).max(0.0);
+                    }
+                }
+            }
+
+            // 6) sink outputs stream to DRAM via the nearest port
+            if self.workload.successors(cn.layer).is_empty() {
+                let route = topo.dram_store_route(core_id);
+                let (ds, de) = links.transfer(route, end, cn.output_bytes);
+                drams.push(DramEvent {
+                    core: core_id,
+                    start: ds,
+                    end: de,
+                    bytes: cn.output_bytes,
+                    kind: DramKind::ActStore,
+                    links: route.into(),
+                });
+                breakdown.dram_pj +=
+                    cn.output_bytes as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
+                breakdown.noc_pj +=
+                    cn.output_bytes as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
+                trace.push(de, core_id, -(cn.output_bytes as f64));
+                act_occ = (act_occ - cn.output_bytes as f64).max(0.0);
+            }
+
+            let placed = ScheduledCn { cn: cn_id, core: core_id, start, end };
+            sched[cn_id.0] = Some(placed);
+            scheduled_order.push(placed);
+
+            // 7) release successors (data/order edges + buffer gates)
+            for e in self.graph.succ_edges(cn_id) {
+                pending[e.to.0] -= 1;
+                if pending[e.to.0] == 0 {
+                    self.add_candidate_legacy(e.to, &sched, &weights, allocation, &mut pool);
+                }
+            }
+            for &g in &self.gate_succs[cn_id.0] {
+                pending[g.0] -= 1;
+                if pending[g.0] == 0 {
+                    self.add_candidate_legacy(g, &sched, &weights, allocation, &mut pool);
+                }
+            }
+        }
+
+        debug_assert!(sched.iter().all(|s| s.is_some()), "all CNs scheduled");
+
+        let compute_end = scheduled_order.iter().map(|s| s.end).max().unwrap_or(0);
+        let io_end = drams
+            .iter()
+            .map(|d| d.end)
+            .chain(comms.iter().map(|c| c.end))
+            .max()
+            .unwrap_or(0);
+        let latency = compute_end.max(io_end);
+
+        let dense_busy: u64 = self
+            .arch
+            .cores
+            .iter()
+            .filter(|c| !c.is_simd())
+            .map(|c| core_busy[c.id.0])
+            .sum();
+        let dense_count = self.arch.cores.iter().filter(|c| !c.is_simd()).count() as f64;
+        let avg_core_util = if latency > 0 {
+            dense_busy as f64 / (latency as f64 * dense_count)
+        } else {
+            0.0
+        };
+
+        let (peak, spill_bytes) = peak_and_spill(&trace, self.arch);
+        let mut latency = latency;
+        if spill_bytes > 0.5 {
+            breakdown.dram_pj += 2.0 * spill_bytes * 8.0 * topo.spill_dram_pj_per_bit();
+            let extra_port = (2.0 * spill_bytes * 8.0 / topo.dram_bw_bits() as f64) as u64;
+            let dram_busy = topo
+                .dram_channel_links()
+                .map(|l| links.busy_cycles(l))
+                .max()
+                .unwrap_or(0);
+            latency = latency.max(dram_busy + extra_port);
+        }
+
+        let metrics = ScheduleMetrics {
+            latency_cc: latency,
+            energy_pj: breakdown.total(),
+            peak_mem_bytes: peak,
+            breakdown,
+            avg_core_util,
+        };
+
+        let link_stats = links
+            .stats()
+            .into_iter()
+            .map(|(busy_cycles, bytes_moved)| LinkStat { busy_cycles, bytes_moved })
+            .collect();
+
+        ScheduleResult {
+            cns: scheduled_order,
+            comms,
+            drams,
+            link_stats,
+            metrics,
+            memtrace: trace,
+        }
+    }
+
+    /// The pre-topology scheduler, verbatim: one scalar FCFS bus and one
+    /// scalar FCFS DRAM port, no routing.  Only valid on a
+    /// [`shared_bus`](crate::arch::Topology::shared_bus) topology
+    /// (panics otherwise).  `rust/tests/topology_equivalence.rs` pins
+    /// the routed path against this bit-for-bit; it is not part of the
+    /// public API.
+    #[doc(hidden)]
+    pub fn run_legacy_bus(
+        &self,
+        allocation: &[CoreId],
+        priority: SchedulePriority,
+    ) -> ScheduleResult {
+        let (bus_bw, bus_pj, dram_bw, dram_pj) = self
+            .arch
+            .topology
+            .as_shared_bus()
+            .expect("run_legacy_bus requires a shared-bus topology");
+        // in the shared_bus constructor the bus is link 0, the DRAM
+        // channel link 1 — events carry them so results compare fully
+        let bus_link: Box<[LinkId]> = Box::new([LinkId(0)]);
+        let dram_link: Box<[LinkId]> = Box::new([LinkId(1)]);
+
+        let n = self.graph.len();
+        assert_eq!(allocation.len(), self.workload.len(), "allocation per layer");
+
+        let mut core_avail = vec![0u64; self.arch.cores.len()];
+        let mut core_busy = vec![0u64; self.arch.cores.len()];
+        let mut bus = FcfsLink::new(bus_bw);
+        let mut dram = FcfsLink::new(dram_bw);
+        let mut weights: Vec<WeightTracker> =
+            self.arch.cores.iter().map(|c| WeightTracker::new(c.wgt_mem_bytes)).collect();
+        let mut evicted: Vec<LayerId> = Vec::new();
+
+        let mut sched: Vec<Option<ScheduledCn>> = vec![None; n];
+        let mut pending: Vec<usize> = (0..n)
+            .map(|i| self.graph.pred_count(CnId(i)) + self.gate_preds[i].len())
+            .collect();
+        let mut pool = CandidatePool::new(n, self.arch.cores.len());
+        for i in 0..n {
+            if pending[i] == 0 {
+                self.add_candidate_legacy(CnId(i), &sched, &weights, allocation, &mut pool);
+            }
+        }
+
+        let mut trace = MemTrace::new();
+        let mut comms: Vec<CommEvent> = Vec::new();
+        let mut drams: Vec<DramEvent> = Vec::new();
+        let mut breakdown = EnergyBreakdown::default();
+        let mut scheduled_order = Vec::with_capacity(n);
+
+        let act_cap: f64 = self.arch.cores.iter().map(|c| c.act_mem_bytes as f64).sum();
+        let mut act_occ = 0.0f64;
+
+        loop {
+            let picked = match priority {
+                SchedulePriority::Latency => pool.pop_latency(act_occ, act_cap),
+                SchedulePriority::Memory => pool.pop_memory(act_occ, act_cap),
+            };
+            let Some(cn_id) = picked else { break };
+            let cn = self.graph.cns.node(cn_id);
+            let layer = self.workload.layer(cn.layer);
+            let core_id = allocation[cn.layer.0];
+            let core = self.arch.core(core_id);
+
+            let mut data_ready = 0u64;
+            for e in self.graph.pred_edges(cn_id) {
+                let p = sched[e.from.0].expect("pred scheduled");
+                match e.kind {
+                    EdgeKind::Order => data_ready = data_ready.max(p.end),
+                    EdgeKind::Data => {
+                        if p.core == core_id || e.bytes == 0 {
+                            data_ready = data_ready.max(p.end);
+                        } else {
+                            let (cs, ce) = bus.transfer(p.end, e.bytes);
+                            comms.push(CommEvent {
+                                from_core: p.core,
+                                to_core: core_id,
+                                start: cs,
+                                end: ce,
+                                bytes: e.bytes,
+                                links: bus_link.clone(),
+                            });
+                            breakdown.noc_pj += e.bytes as f64 * 8.0 * bus_pj;
+                            trace.push(cs, core_id, e.bytes as f64);
+                            act_occ += e.bytes as f64;
+                            let pf = self.fanout[p_layer(self.graph, e.from).0];
+                            trace.push(ce, p.core, -(e.bytes as f64) / pf);
+                            act_occ = (act_occ - e.bytes as f64 / pf).max(0.0);
+                            data_ready = data_ready.max(ce);
+                        }
+                    }
+                }
+            }
+
+            for g in &self.gate_preds[cn_id.0] {
+                data_ready = data_ready.max(sched[g.0].expect("gate scheduled").end);
+            }
+
+            let mut weights_ready = 0u64;
+            let wbytes = layer.weight_bytes();
+            if wbytes > 0 {
+                let fetch = weights[core_id.0].require_evicting(cn.layer, wbytes, &mut evicted);
+                if fetch > 0 {
+                    let (ds, de) = dram.transfer(0, fetch);
+                    drams.push(DramEvent {
+                        core: core_id,
+                        start: ds,
+                        end: de,
+                        bytes: fetch,
+                        kind: DramKind::WeightFetch,
+                        links: dram_link.clone(),
+                    });
+                    breakdown.dram_pj += fetch as f64 * 8.0 * dram_pj;
+                    if let CoreKind::Aimc { weight_load_pj, .. } = core.kind {
+                        breakdown.onchip_pj += fetch as f64 * 8.0 * weight_load_pj;
+                    }
+                    weights_ready = de;
+                    let fetched_layer = cn.layer;
+                    let evicted = &evicted;
+                    pool.rekey_core(core_id.0, |l| {
+                        if l == fetched_layer {
+                            Some(0)
+                        } else if evicted.contains(&l) {
+                            Some(self.wgt_fetch_cc[l.0])
+                        } else {
+                            None
+                        }
+                    });
+                }
+            }
+
+            let mut input_ready = 0u64;
+            let fresh = self.fresh_in_bytes[cn_id.0];
+            if fresh > 0 {
+                let (ds, de) = dram.transfer(0, fresh);
+                drams.push(DramEvent {
+                    core: core_id,
+                    start: ds,
+                    end: de,
+                    bytes: fresh,
+                    kind: DramKind::ActFetch,
+                    links: dram_link.clone(),
+                });
+                breakdown.dram_pj += fresh as f64 * 8.0 * dram_pj;
+                trace.push(ds, core_id, fresh as f64);
+                act_occ += fresh as f64;
+                input_ready = de;
+            }
+
+            let cost = self.costs.cn_cost(cn, core_id);
+            let start = core_avail[core_id.0]
+                .max(data_ready)
+                .max(weights_ready)
+                .max(input_ready);
+            let end = start + cost.compute_cycles;
+            core_avail[core_id.0] = end;
+            core_busy[core_id.0] += cost.compute_cycles;
+            breakdown.mac_pj += cost.mac_energy_pj;
+            breakdown.onchip_pj += cost.energy_pj - cost.mac_energy_pj;
+
+            trace.push(start, core_id, cn.output_bytes as f64);
+            act_occ += cn.output_bytes as f64;
+
+            if layer.predecessors.is_empty() {
+                trace.push(end, core_id, -(cn.discard_input_bytes as f64));
+                act_occ = (act_occ - cn.discard_input_bytes as f64).max(0.0);
+            } else {
+                for &p in &layer.predecessors {
+                    let share = match layer.op {
+                        OpType::Concat => {
+                            cn.discard_input_bytes as f64 * self.workload.layer(p).k as f64
+                                / layer.c as f64
+                        }
+                        _ => cn.discard_input_bytes as f64,
+                    };
+                    let p_core = allocation[p.0];
+                    if p_core == core_id {
+                        trace.push(end, core_id, -share / self.fanout[p.0]);
+                        act_occ = (act_occ - share / self.fanout[p.0]).max(0.0);
+                    } else {
+                        trace.push(end, core_id, -share);
+                        act_occ = (act_occ - share).max(0.0);
+                    }
+                }
+            }
+
+            if self.workload.successors(cn.layer).is_empty() {
+                let (ds, de) = dram.transfer(end, cn.output_bytes);
+                drams.push(DramEvent {
+                    core: core_id,
+                    start: ds,
+                    end: de,
+                    bytes: cn.output_bytes,
+                    kind: DramKind::ActStore,
+                    links: dram_link.clone(),
+                });
+                breakdown.dram_pj += cn.output_bytes as f64 * 8.0 * dram_pj;
+                trace.push(de, core_id, -(cn.output_bytes as f64));
+                act_occ = (act_occ - cn.output_bytes as f64).max(0.0);
+            }
+
+            let placed = ScheduledCn { cn: cn_id, core: core_id, start, end };
+            sched[cn_id.0] = Some(placed);
+            scheduled_order.push(placed);
+
+            for e in self.graph.succ_edges(cn_id) {
+                pending[e.to.0] -= 1;
+                if pending[e.to.0] == 0 {
+                    self.add_candidate_legacy(e.to, &sched, &weights, allocation, &mut pool);
+                }
+            }
+            for &g in &self.gate_succs[cn_id.0] {
+                pending[g.0] -= 1;
+                if pending[g.0] == 0 {
+                    self.add_candidate_legacy(g, &sched, &weights, allocation, &mut pool);
+                }
+            }
+        }
+
+        debug_assert!(sched.iter().all(|s| s.is_some()), "all CNs scheduled");
+
+        let compute_end = scheduled_order.iter().map(|s| s.end).max().unwrap_or(0);
+        let io_end = drams
+            .iter()
+            .map(|d| d.end)
+            .chain(comms.iter().map(|c| c.end))
+            .max()
+            .unwrap_or(0);
+        let latency = compute_end.max(io_end);
+
+        let dense_busy: u64 = self
+            .arch
+            .cores
+            .iter()
+            .filter(|c| !c.is_simd())
+            .map(|c| core_busy[c.id.0])
+            .sum();
+        let dense_count = self.arch.cores.iter().filter(|c| !c.is_simd()).count() as f64;
+        let avg_core_util = if latency > 0 {
+            dense_busy as f64 / (latency as f64 * dense_count)
+        } else {
+            0.0
+        };
+
+        let (peak, spill_bytes) = peak_and_spill(&trace, self.arch);
+        let mut latency = latency;
+        if spill_bytes > 0.5 {
+            breakdown.dram_pj += 2.0 * spill_bytes * 8.0 * dram_pj;
+            let extra_port = (2.0 * spill_bytes * 8.0 / dram_bw.max(1) as f64) as u64;
+            latency = latency.max(dram.busy_cycles + extra_port);
+        }
+
+        let metrics = ScheduleMetrics {
+            latency_cc: latency,
+            energy_pj: breakdown.total(),
+            peak_mem_bytes: peak,
+            breakdown,
+            avg_core_util,
+        };
+
+        let link_stats = vec![
+            LinkStat { busy_cycles: bus.busy_cycles, bytes_moved: bus.bytes_moved },
+            LinkStat { busy_cycles: dram.busy_cycles, bytes_moved: dram.bytes_moved },
+        ];
+
+        ScheduleResult {
+            cns: scheduled_order,
+            comms,
+            drams,
+            link_stats,
+            metrics,
+            memtrace: trace,
+        }
+    }
+
+    /// The legacy engine's candidate registration (local layer ids, no
+    /// release floor) — frozen alongside [`run_legacy_bus`](Self::run_legacy_bus).
+    fn add_candidate_legacy(
+        &self,
+        id: CnId,
+        sched: &[Option<ScheduledCn>],
+        weights: &[WeightTracker],
+        allocation: &[CoreId],
+        pool: &mut CandidatePool,
+    ) {
+        let ready = self
+            .graph
+            .pred_edges(id)
+            .map(|e| sched[e.from.0].expect("pred scheduled").end)
+            .chain(self.gate_preds[id.0].iter().map(|g| sched[g.0].expect("gate scheduled").end))
+            .max()
+            .unwrap_or(0);
+        let cn = self.graph.cns.node(id);
+        let core = allocation[cn.layer.0];
+        let fetch = self.wgt_fetch_cc[cn.layer.0];
+        let eff = if fetch == 0 || weights[core.0].is_resident(cn.layer) {
+            ready
+        } else {
+            ready + fetch
+        };
+        pool.insert(id, cn.layer, cn.idx, ready, eff, cn.output_bytes, core.0, fetch > 0);
+    }
+}

@@ -1,0 +1,658 @@
+//! The unified event-driven simulation core.
+//!
+//! Exactly **one** inner scheduling loop exists in the crate:
+//! [`SimContext::simulate`].  The one-shot scheduler
+//! ([`Scheduler::run`]) instantiates it with a single request lane
+//! released at t = 0, and the multi-DNN scenario engine
+//! (`crate::scenario::ScenarioSim`) instantiates it with one lane per
+//! request of every tenant.  Everything that differs between the two
+//! callers is captured by the context:
+//!
+//! - **release floor / admission clock** — a lane's candidates are
+//!   never ready before its request's release, and a causal virtual
+//!   admission clock gates deadline/priority preference to requests
+//!   that have actually arrived, so arbitration stays work-conserving;
+//! - **global `(tenant, layer)` weight ids** — each lane's layers map
+//!   into a shared weight-residency space at [`SimTenant::layer_off`],
+//!   so same-tenant requests reuse resident weights while distinct
+//!   tenants never alias (the one-shot path uses offset 0);
+//! - **inter-request arbitration** — [`Arbitration`] picks which lane
+//!   gets the next scheduling decision (fifo / priority / edf via the
+//!   pool's `peek_min_eff`); with a single lane it is vacuous;
+//! - **event tagging** — every CN, communication and DRAM event
+//!   carries its lane index ([`SimOutcome`]), which the scenario layer
+//!   turns into per-request serving statistics and the one-shot layer
+//!   discards.
+//!
+//! The degenerate single-lane instantiation is pinned **bit-for-bit**
+//! against the frozen reference engines: `rust/tests/sim_core_fuzz.rs`
+//! and the unit test `heap_pool_matches_reference_scan` pin it to the
+//! seed's O(n) linear scan (`Scheduler::run_reference`),
+//! `rust/tests/topology_equivalence.rs` pins it to the pre-topology
+//! scalar-bus engine, and `rust/tests/scenario_equivalence.rs` pins the
+//! scenario wrapper to the one-shot wrapper.
+
+use crate::arch::{Accelerator, CoreId, CoreKind};
+use crate::cn::CnId;
+use crate::cost::{EnergyBreakdown, ScheduleMetrics};
+use crate::depgraph::EdgeKind;
+use crate::workload::{LayerId, OpType};
+
+use super::engine::{peak_and_spill, ScheduledCn, Scheduler};
+use super::memtrace::MemTrace;
+use super::pool::CandidatePool;
+use super::resources::{LinkSet, WeightTracker};
+use super::{CommEvent, DramEvent, DramKind, LinkStat, SchedulePriority};
+
+/// How the engine decides *which request* gets the next scheduling
+/// decision (the per-CN pick within a request still follows the
+/// tenant's [`SchedulePriority`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Arbitration {
+    /// Requests share resources in readiness order; ties go to the
+    /// earlier arrival — fair FCFS processor sharing.
+    #[default]
+    Fifo,
+    /// Strictly serve the highest-
+    /// [`priority`](crate::scenario::Tenant::priority) tenant with work
+    /// available; readiness breaks ties.
+    Priority,
+    /// Earliest absolute deadline first; deadline-free requests rank
+    /// last, readiness breaks ties.
+    Edf,
+}
+
+impl Arbitration {
+    pub fn by_name(name: &str) -> Option<Arbitration> {
+        match name {
+            "fifo" => Some(Arbitration::Fifo),
+            "priority" => Some(Arbitration::Priority),
+            "edf" => Some(Arbitration::Edf),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Arbitration {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Arbitration::Fifo => write!(f, "fifo"),
+            Arbitration::Priority => write!(f, "priority"),
+            Arbitration::Edf => write!(f, "edf"),
+        }
+    }
+}
+
+/// One tenant lane of the unified core: a prebuilt [`Scheduler`] plus
+/// everything request-independent the core needs about that tenant.
+pub struct SimTenant<'a> {
+    pub sched: &'a Scheduler<'a>,
+    /// Core per layer of this tenant's workload.
+    pub alloc: &'a [CoreId],
+    /// Intra-request candidate-pool priority (paper Fig. 8).
+    pub pool_priority: SchedulePriority,
+    /// Arbitration rank under [`Arbitration::Priority`] (lower wins).
+    pub prio_rank: u64,
+    /// Global layer-id offset into the shared weight-residency space:
+    /// this tenant's layer `l` is weight-tracked as
+    /// `LayerId(layer_off + l)`.
+    pub layer_off: usize,
+}
+
+/// One request lane: an inference of [`tenant`](Self::tenant)'s model
+/// released at [`release`](Self::release).
+pub struct SimRequest {
+    /// Index into [`SimContext::tenants`].
+    pub tenant: usize,
+    pub release: u64,
+    /// Absolute deadline, if any (the [`Arbitration::Edf`] key; the
+    /// core itself never blocks on it).
+    pub deadline_abs: Option<u64>,
+}
+
+/// Everything that parameterizes one simulation.  See the
+/// [module docs](self).
+pub struct SimContext<'a> {
+    pub arch: &'a Accelerator,
+    pub tenants: &'a [SimTenant<'a>],
+    /// Request lanes, in arrival (seq) order; lane indices tag every
+    /// event of the outcome.
+    pub requests: &'a [SimRequest],
+    /// Global `(tenant, layer)`-indexed DRAM weight-fetch cycle table
+    /// ([`global_wgt_fetch`]); the one-shot path passes the tenant's
+    /// own per-layer table.
+    pub wgt_fetch_g: &'a [u64],
+    pub arbitration: Arbitration,
+    /// Use the seed's O(n) linear candidate scan instead of the heaps
+    /// (the `run_reference` pinning path).
+    pub linear_pool: bool,
+    /// Record per-event request tags ([`SimOutcome::cn_req`] and
+    /// friends).  The scenario wrapper needs them for its serving
+    /// statistics; the one-shot wrapper drops them, so its hot path
+    /// (one GA fitness evaluation per unseen genome) skips the
+    /// bookkeeping entirely and the tag vectors come back empty.
+    pub tag_events: bool,
+}
+
+/// What one simulation produced, request-tagged.  The one-shot wrapper
+/// drops the tags; the scenario wrapper aggregates them into serving
+/// statistics.
+pub struct SimOutcome {
+    /// Every scheduled CN, in scheduling order.
+    pub cns: Vec<ScheduledCn>,
+    /// Request lane per [`cns`](Self::cns) entry (index-aligned).
+    pub cn_req: Vec<usize>,
+    pub comms: Vec<CommEvent>,
+    /// Request lane per [`comms`](Self::comms) entry.
+    pub comm_req: Vec<usize>,
+    pub drams: Vec<DramEvent>,
+    /// Request lane per [`drams`](Self::drams) entry.
+    pub dram_req: Vec<usize>,
+    /// Per-link occupancy, in the topology's link order.
+    pub link_stats: Vec<LinkStat>,
+    pub metrics: ScheduleMetrics,
+    pub memtrace: MemTrace,
+    /// Busy cycles per core, by core id.
+    pub core_busy: Vec<u64>,
+    /// Per-request completion frontier (last CN end or off-chip store
+    /// end), in request order.
+    pub request_end: Vec<u64>,
+}
+
+/// Concatenate per-tenant DRAM weight-fetch tables into the global
+/// `(tenant, layer)`-indexed table the core consumes; tenant *t*'s
+/// layers start at the sum of the preceding tenants' layer counts
+/// (= [`SimTenant::layer_off`]).
+pub fn global_wgt_fetch(scheds: &[Scheduler]) -> Vec<u64> {
+    let mut g = Vec::new();
+    for s in scheds {
+        g.extend_from_slice(&s.wgt_fetch_cc);
+    }
+    g
+}
+
+/// Mutable state of one in-flight request lane.
+struct Lane {
+    tenant: usize,
+    release: u64,
+    sched: Vec<Option<ScheduledCn>>,
+    pending: Vec<usize>,
+    pool: CandidatePool,
+    /// Completion frontier: last CN end or off-chip store end.
+    last_end: u64,
+}
+
+impl SimContext<'_> {
+    /// Run the event-driven co-schedule over every lane.
+    pub fn simulate(&self) -> SimOutcome {
+        let topo = &self.arch.topology;
+        let n_cores = self.arch.cores.len();
+        let mut core_avail = vec![0u64; n_cores];
+        let mut core_busy = vec![0u64; n_cores];
+        let mut links = LinkSet::new(topo);
+        let mut weights: Vec<WeightTracker> =
+            self.arch.cores.iter().map(|c| WeightTracker::new(c.wgt_mem_bytes)).collect();
+        let mut evicted: Vec<LayerId> = Vec::new();
+
+        let mut lanes: Vec<Lane> = self
+            .requests
+            .iter()
+            .map(|r| {
+                let s = self.tenants[r.tenant].sched;
+                let n = s.graph.len();
+                Lane {
+                    tenant: r.tenant,
+                    release: r.release,
+                    sched: vec![None; n],
+                    pending: (0..n)
+                        .map(|i| s.graph.pred_count(CnId(i)) + s.gate_preds[i].len())
+                        .collect(),
+                    pool: CandidatePool::new(n, n_cores),
+                    last_end: r.release,
+                }
+            })
+            .collect();
+        let total_cns: usize = lanes.iter().map(|l| l.sched.len()).sum();
+        for lane in lanes.iter_mut() {
+            let t = &self.tenants[lane.tenant];
+            for i in 0..t.sched.graph.len() {
+                if lane.pending[i] == 0 {
+                    add_candidate(t, lane, CnId(i), &weights, self.wgt_fetch_g);
+                }
+            }
+        }
+
+        let mut trace = MemTrace::new();
+        let mut cns: Vec<ScheduledCn> = Vec::with_capacity(total_cns);
+        let mut cn_req: Vec<usize> =
+            Vec::with_capacity(if self.tag_events { total_cns } else { 0 });
+        let mut comms: Vec<CommEvent> = Vec::new();
+        let mut comm_req: Vec<usize> = Vec::new();
+        let mut drams: Vec<DramEvent> = Vec::new();
+        let mut dram_req: Vec<usize> = Vec::new();
+        let mut breakdown = EnergyBreakdown::default();
+
+        // Pooled activation occupancy in scheduling order, used for
+        // backpressure: producers are not scheduled arbitrarily far
+        // ahead of their consumers when the on-chip activation capacity
+        // would overflow (the pool's memory-full fallback then drains
+        // the deepest ready CNs first).
+        let act_cap: f64 = self.arch.cores.iter().map(|c| c.act_mem_bytes as f64).sum();
+        let mut act_occ = 0.0f64;
+
+        // Virtual admission clock: monotonically tracks the earliest
+        // time any schedulable candidate could start.  Deadline- and
+        // priority-preference only applies to requests *released* by
+        // `now`, so a future arrival can never pre-empt ready work and
+        // leave cores idle (causal, work-conserving arbitration).  The
+        // request achieving the global minimum readiness is always
+        // released (its readiness is >= its release), so an eligible
+        // request always exists.
+        let mut now = 0u64;
+        let mut cands: Vec<(usize, u64)> = Vec::new(); // (lane, min eff)
+        // With a single lane the arbitration below always picks lane 0,
+        // so the one-shot path (the GA's per-fitness hot loop) skips the
+        // heap peek and key construction entirely; the pool pop itself
+        // discards the stale heap entries the peek would have, so the
+        // picks are identical.
+        let single = lanes.len() == 1;
+
+        loop {
+            let ri = if single {
+                if lanes[0].pool.len() == 0 {
+                    break;
+                }
+                0
+            } else {
+                // --- inter-request arbitration ---------------------------
+                cands.clear();
+                let mut min_eff = u64::MAX;
+                for (ri, l) in lanes.iter_mut().enumerate() {
+                    if l.pool.len() == 0 {
+                        continue;
+                    }
+                    let eff = l.pool.peek_min_eff().expect("nonempty pool has a minimum");
+                    min_eff = min_eff.min(eff);
+                    cands.push((ri, eff));
+                }
+                if cands.is_empty() {
+                    break;
+                }
+                now = now.max(min_eff);
+
+                let mut best: Option<((u64, u64, u64), usize)> = None;
+                for &(ri, eff) in &cands {
+                    let l = &lanes[ri];
+                    if l.release > now {
+                        continue; // not yet arrived: ineligible for preference
+                    }
+                    let key = match self.arbitration {
+                        Arbitration::Fifo => (0, eff, ri as u64),
+                        Arbitration::Priority => {
+                            (self.tenants[l.tenant].prio_rank, eff, ri as u64)
+                        }
+                        Arbitration::Edf => {
+                            (self.requests[ri].deadline_abs.unwrap_or(u64::MAX), eff, ri as u64)
+                        }
+                    };
+                    let better = match best {
+                        None => true,
+                        Some((k, _)) => key < k,
+                    };
+                    if better {
+                        best = Some((key, ri));
+                    }
+                }
+                best.expect("a released request always exists").1
+            };
+
+            // --- one scheduling decision over the chosen lane's graph ---
+            let rekey = {
+                let lane = &mut lanes[ri];
+                let t = &self.tenants[lane.tenant];
+                let s = t.sched;
+                let alloc = t.alloc;
+                let cn_id = if self.linear_pool {
+                    lane.pool.pop_linear(t.pool_priority, act_occ, act_cap)
+                } else {
+                    match t.pool_priority {
+                        SchedulePriority::Latency => lane.pool.pop_latency(act_occ, act_cap),
+                        SchedulePriority::Memory => lane.pool.pop_memory(act_occ, act_cap),
+                    }
+                }
+                .expect("arbitration picked a nonempty pool");
+                let cn = s.graph.cns.node(cn_id);
+                let layer = s.workload.layer(cn.layer);
+                let core_id = alloc[cn.layer.0];
+                let core = self.arch.core(core_id);
+
+                // 1) incoming data: same-core preds gate by finish time;
+                //    cross-core preds need a routed communication node
+                //    occupying every interconnect link between the two
+                //    cores; a request starts no earlier than its release
+                let mut data_ready = lane.release;
+                for e in s.graph.pred_edges(cn_id) {
+                    let p = lane.sched[e.from.0].expect("pred scheduled");
+                    match e.kind {
+                        EdgeKind::Order => data_ready = data_ready.max(p.end),
+                        EdgeKind::Data => {
+                            if p.core == core_id || e.bytes == 0 {
+                                data_ready = data_ready.max(p.end);
+                            } else {
+                                let route = topo.core_route(p.core, core_id);
+                                let (cs, ce) = links.transfer(route, p.end, e.bytes);
+                                comms.push(CommEvent {
+                                    from_core: p.core,
+                                    to_core: core_id,
+                                    start: cs,
+                                    end: ce,
+                                    bytes: e.bytes,
+                                    links: route.into(),
+                                });
+                                if self.tag_events {
+                                    comm_req.push(ri);
+                                }
+                                breakdown.noc_pj +=
+                                    e.bytes as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
+                                // consumer-side copy allocated at comm start
+                                trace.push(cs, core_id, e.bytes as f64);
+                                act_occ += e.bytes as f64;
+                                // producer copy freed once the transfer ends
+                                let pf = s.fanout[s.graph.cns.node(e.from).layer.0];
+                                trace.push(ce, p.core, -(e.bytes as f64) / pf);
+                                act_occ = (act_occ - e.bytes as f64 / pf).max(0.0);
+                                data_ready = data_ready.max(ce);
+                            }
+                        }
+                    }
+                }
+
+                // 1b) bounded-buffer gates: wait for the gating consumers
+                for g in &s.gate_preds[cn_id.0] {
+                    data_ready = data_ready.max(lane.sched[g.0].expect("gate scheduled").end);
+                }
+
+                // 2) weights, keyed by the global (tenant, layer) id so
+                //    requests of the same tenant share residency; fetched
+                //    through the nearest DRAM port when not resident
+                let gl = LayerId(t.layer_off + cn.layer.0);
+                let mut weights_ready = 0u64;
+                let wbytes = layer.weight_bytes();
+                let mut rekey = None;
+                if wbytes > 0 {
+                    let fetch = weights[core_id.0].require_evicting(gl, wbytes, &mut evicted);
+                    if fetch > 0 {
+                        let route = topo.dram_load_route(core_id);
+                        let (ds, de) = links.transfer(route, lane.release, fetch);
+                        drams.push(DramEvent {
+                            core: core_id,
+                            start: ds,
+                            end: de,
+                            bytes: fetch,
+                            kind: DramKind::WeightFetch,
+                            links: route.into(),
+                        });
+                        if self.tag_events {
+                            dram_req.push(ri);
+                        }
+                        breakdown.dram_pj +=
+                            fetch as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
+                        breakdown.noc_pj +=
+                            fetch as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
+                        if let CoreKind::Aimc { weight_load_pj, .. } = core.kind {
+                            breakdown.onchip_pj += fetch as f64 * 8.0 * weight_load_pj;
+                        }
+                        weights_ready = de;
+                        // residency on this core changed for EVERY lane
+                        // watching it; re-keyed after this lane's borrow
+                        // is released
+                        rekey = Some((core_id.0, gl));
+                    }
+                }
+
+                // 3) first-layer input activations come from DRAM
+                let mut input_ready = 0u64;
+                let fresh = s.fresh_in_bytes[cn_id.0];
+                if fresh > 0 {
+                    let route = topo.dram_load_route(core_id);
+                    let (ds, de) = links.transfer(route, lane.release, fresh);
+                    drams.push(DramEvent {
+                        core: core_id,
+                        start: ds,
+                        end: de,
+                        bytes: fresh,
+                        kind: DramKind::ActFetch,
+                        links: route.into(),
+                    });
+                    if self.tag_events {
+                        dram_req.push(ri);
+                    }
+                    breakdown.dram_pj += fresh as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
+                    breakdown.noc_pj += fresh as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
+                    trace.push(ds, core_id, fresh as f64);
+                    act_occ += fresh as f64;
+                    input_ready = de;
+                }
+
+                // 4) execute
+                let cost = s.costs.cn_cost(cn, core_id);
+                let start = core_avail[core_id.0]
+                    .max(data_ready)
+                    .max(weights_ready)
+                    .max(input_ready);
+                let end = start + cost.compute_cycles;
+                core_avail[core_id.0] = end;
+                core_busy[core_id.0] += cost.compute_cycles;
+                breakdown.mac_pj += cost.mac_energy_pj;
+                breakdown.onchip_pj += cost.energy_pj - cost.mac_energy_pj;
+
+                // 5) memory trace: outputs allocated at start,
+                //    discardable inputs freed at finish per producer
+                trace.push(start, core_id, cn.output_bytes as f64);
+                act_occ += cn.output_bytes as f64;
+                if layer.predecessors.is_empty() {
+                    trace.push(end, core_id, -(cn.discard_input_bytes as f64));
+                    act_occ = (act_occ - cn.discard_input_bytes as f64).max(0.0);
+                } else {
+                    for &p in &layer.predecessors {
+                        let share = match layer.op {
+                            OpType::Concat => {
+                                cn.discard_input_bytes as f64 * s.workload.layer(p).k as f64
+                                    / layer.c as f64
+                            }
+                            _ => cn.discard_input_bytes as f64,
+                        };
+                        let p_core = alloc[p.0];
+                        if p_core == core_id {
+                            // shared physical buffer on the producer's core
+                            trace.push(end, core_id, -share / s.fanout[p.0]);
+                            act_occ = (act_occ - share / s.fanout[p.0]).max(0.0);
+                        } else {
+                            // our private copy from the communication
+                            trace.push(end, core_id, -share);
+                            act_occ = (act_occ - share).max(0.0);
+                        }
+                    }
+                }
+
+                // 6) sink outputs stream to DRAM via the nearest port
+                if s.workload.successors(cn.layer).is_empty() {
+                    let route = topo.dram_store_route(core_id);
+                    let (ds, de) = links.transfer(route, end, cn.output_bytes);
+                    drams.push(DramEvent {
+                        core: core_id,
+                        start: ds,
+                        end: de,
+                        bytes: cn.output_bytes,
+                        kind: DramKind::ActStore,
+                        links: route.into(),
+                    });
+                    if self.tag_events {
+                        dram_req.push(ri);
+                    }
+                    breakdown.dram_pj +=
+                        cn.output_bytes as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
+                    breakdown.noc_pj +=
+                        cn.output_bytes as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
+                    trace.push(de, core_id, -(cn.output_bytes as f64));
+                    act_occ = (act_occ - cn.output_bytes as f64).max(0.0);
+                    lane.last_end = lane.last_end.max(de);
+                }
+
+                let placed = ScheduledCn { cn: cn_id, core: core_id, start, end };
+                lane.sched[cn_id.0] = Some(placed);
+                lane.last_end = lane.last_end.max(end);
+                cns.push(placed);
+                if self.tag_events {
+                    cn_req.push(ri);
+                }
+
+                // 7) release successors within this lane (data/order
+                //    edges + buffer gates)
+                for e in s.graph.succ_edges(cn_id) {
+                    lane.pending[e.to.0] -= 1;
+                    if lane.pending[e.to.0] == 0 {
+                        add_candidate(t, lane, e.to, &weights, self.wgt_fetch_g);
+                    }
+                }
+                for &g in &s.gate_succs[cn_id.0] {
+                    lane.pending[g.0] -= 1;
+                    if lane.pending[g.0] == 0 {
+                        add_candidate(t, lane, g, &weights, self.wgt_fetch_g);
+                    }
+                }
+                rekey
+            };
+
+            // --- propagate a residency change to every lane's pool ------
+            if let Some((core, fetched)) = rekey {
+                let evicted = &evicted;
+                for l in lanes.iter_mut() {
+                    l.pool.rekey_core(core, |gl| {
+                        if gl == fetched {
+                            Some(0)
+                        } else if evicted.contains(&gl) {
+                            Some(self.wgt_fetch_g[gl.0])
+                        } else {
+                            None
+                        }
+                    });
+                }
+            }
+        }
+
+        debug_assert!(
+            lanes.iter().all(|l| l.sched.iter().all(|s| s.is_some())),
+            "all CNs of all requests scheduled"
+        );
+
+        // --- aggregate metrics ------------------------------------------
+        let compute_end = cns.iter().map(|s| s.end).max().unwrap_or(0);
+        let io_end = drams
+            .iter()
+            .map(|d| d.end)
+            .chain(comms.iter().map(|c| c.end))
+            .max()
+            .unwrap_or(0);
+        let latency = compute_end.max(io_end);
+
+        let dense_busy: u64 = self
+            .arch
+            .cores
+            .iter()
+            .filter(|c| !c.is_simd())
+            .map(|c| core_busy[c.id.0])
+            .sum();
+        let dense_count = self.arch.cores.iter().filter(|c| !c.is_simd()).count() as f64;
+        let avg_core_util = if latency > 0 {
+            dense_busy as f64 / (latency as f64 * dense_count)
+        } else {
+            0.0
+        };
+
+        // Peak memory + activation-spill accounting in a single
+        // time-ordered pass (post-scheduling, like the paper's
+        // memory-usage tracing).  Activation bytes that land above the
+        // pooled SRAM capacity must take a round trip through DRAM:
+        // charge store+reload energy and extend the makespan to the
+        // DRAM-port-bound floor.
+        let (peak, spill_bytes) = peak_and_spill(&trace, self.arch);
+        let mut latency = latency;
+        if spill_bytes > 0.5 {
+            breakdown.dram_pj += 2.0 * spill_bytes * 8.0 * topo.spill_dram_pj_per_bit();
+            let extra_port = (2.0 * spill_bytes * 8.0 / topo.dram_bw_bits() as f64) as u64;
+            let dram_busy = topo
+                .dram_channel_links()
+                .map(|l| links.busy_cycles(l))
+                .max()
+                .unwrap_or(0);
+            latency = latency.max(dram_busy + extra_port);
+        }
+
+        let metrics = ScheduleMetrics {
+            latency_cc: latency,
+            energy_pj: breakdown.total(),
+            peak_mem_bytes: peak,
+            breakdown,
+            avg_core_util,
+        };
+
+        let link_stats = links
+            .stats()
+            .into_iter()
+            .map(|(busy_cycles, bytes_moved)| LinkStat { busy_cycles, bytes_moved })
+            .collect();
+
+        SimOutcome {
+            cns,
+            cn_req,
+            comms,
+            comm_req,
+            drams,
+            dram_req,
+            link_stats,
+            metrics,
+            memtrace: trace,
+            core_busy,
+            request_end: lanes.iter().map(|l| l.last_end).collect(),
+        }
+    }
+}
+
+/// Register a CN whose predecessors (and buffer gates) are all
+/// scheduled as a candidate of its lane's pool.
+///
+/// `ready` is the time the last predecessor finished, floored at the
+/// lane's release; the *effective* readiness additionally charges the
+/// layer's DRAM weight-fetch time when the weights are not resident on
+/// its allocated core (under the global `(tenant, layer)` id) — this
+/// keeps CNs of a resident layer running back to back and avoids
+/// weight thrash when several layers share a core.  CNs with a nonzero
+/// fetch are watched in the pool's per-core bucket so residency
+/// changes re-key them.
+fn add_candidate(
+    t: &SimTenant,
+    lane: &mut Lane,
+    id: CnId,
+    weights: &[WeightTracker],
+    wgt_fetch_g: &[u64],
+) {
+    let s = t.sched;
+    let ready = s
+        .graph
+        .pred_edges(id)
+        .map(|e| lane.sched[e.from.0].expect("pred scheduled").end)
+        .chain(
+            s.gate_preds[id.0]
+                .iter()
+                .map(|g| lane.sched[g.0].expect("gate scheduled").end),
+        )
+        .max()
+        .unwrap_or(lane.release);
+    let cn = s.graph.cns.node(id);
+    let core = t.alloc[cn.layer.0];
+    let gl = LayerId(t.layer_off + cn.layer.0);
+    let fetch = wgt_fetch_g[gl.0];
+    let eff = if fetch == 0 || weights[core.0].is_resident(gl) { ready } else { ready + fetch };
+    lane.pool.insert(id, gl, cn.idx, ready, eff, cn.output_bytes, core.0, fetch > 0);
+}

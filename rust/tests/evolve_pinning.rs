@@ -1,0 +1,176 @@
+//! Pins for the shared evolutionary driver (`allocator::evolve`):
+//! after the refactor, `Ga` and `ScenarioGa` are thin `EvoProblem`
+//! instantiations of one loop, and these tests pin the guarantees the
+//! two hand-rolled loops used to provide on the Fig. 12 workloads —
+//! bit-determinism for a fixed seed, thread-count independence of the
+//! parallel fitness path, seed-genome domination and front validity,
+//! and agreement between a front member's reported objectives and a
+//! fresh simulation of its allocation.
+
+use stream::allocator::{
+    allocation_from_genome, dominates, Ga, GaParams, Objective,
+};
+use stream::arch::presets;
+use stream::cn::{CnGranularity, CnSet};
+use stream::depgraph::generate;
+use stream::mapping::CostModel;
+use stream::scenario::{Arbitration, Arrival, Scenario, ScenarioGa, ScenarioSim, Tenant};
+use stream::scheduler::{SchedulePriority, Scheduler};
+use stream::workload::models;
+
+struct Fixture {
+    w: stream::workload::WorkloadGraph,
+    arch: stream::arch::Accelerator,
+    g: stream::depgraph::CnGraph,
+    costs: CostModel,
+}
+
+fn fixture(model: &str, arch_name: &str) -> Fixture {
+    let w = models::by_name(model).unwrap();
+    let arch = presets::by_name(arch_name).unwrap();
+    let gran = CnGranularity::Lines(4).for_arch(&arch);
+    let cns = CnSet::build(&w, gran);
+    let costs = CostModel::build(&w, &cns, &arch);
+    let g = generate(&w, CnSet::build(&w, gran));
+    Fixture { w, arch, g, costs }
+}
+
+/// The Fig. 12 configuration (ResNet-18 on the heterogeneous preset):
+/// the driver-backed GA must stay bit-deterministic for a fixed seed,
+/// and its front must dominate the single-core seed allocations it
+/// starts from.
+#[test]
+fn ga_on_driver_is_deterministic_on_fig12_workload() {
+    let f = fixture("resnet18", "hetero");
+    let sched = Scheduler::new(&f.w, &f.g, &f.costs, &f.arch);
+    let params = GaParams { population: 8, generations: 3, seed: 42, ..Default::default() };
+
+    let run = || {
+        let mut ga = Ga::new(
+            &f.w,
+            &f.arch,
+            &sched,
+            SchedulePriority::Latency,
+            Objective::Edp,
+            params,
+        );
+        ga.run()
+    };
+    let a = run();
+    let b = run();
+    assert!(!a.is_empty());
+    assert_eq!(a.len(), b.len(), "front size must be reproducible");
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.genome, y.genome, "front genomes must be reproducible");
+        assert_eq!(x.metrics.latency_cc, y.metrics.latency_cc);
+        assert_eq!(x.metrics.energy_pj.to_bits(), y.metrics.energy_pj.to_bits());
+    }
+
+    // the seed population contains every each-core-solo genome, all of
+    // which the driver records, so the front's best EDP can never be
+    // worse than any solo allocation
+    let n_dense = f.w.dense_layers().len();
+    for core in 0..f.arch.dense_cores().len() {
+        let solo = vec![core as u16; n_dense];
+        let alloc = allocation_from_genome(&f.w, &f.arch, &solo);
+        let solo_m = sched.run(&alloc, SchedulePriority::Latency).metrics;
+        assert!(
+            a[0].metrics.edp() <= solo_m.edp(),
+            "front best {} must beat solo core {core} at {}",
+            a[0].metrics.edp(),
+            solo_m.edp()
+        );
+    }
+
+    // the front is sorted by EDP and non-dominated under the objective
+    for pair in a.windows(2) {
+        assert!(pair[0].metrics.edp() <= pair[1].metrics.edp());
+    }
+    for x in &a {
+        for y in &a {
+            let px = Objective::Edp.values(&x.metrics);
+            let py = Objective::Edp.values(&y.metrics);
+            assert!(!dominates(&px, &py) || px == py);
+        }
+    }
+}
+
+/// Thread-count independence survives the move onto the shared driver
+/// (the driver records genomes in batch order, not completion order).
+#[test]
+fn ga_on_driver_is_thread_count_independent() {
+    let f = fixture("tiny-segment", "hetero_quad");
+    let sched = Scheduler::new(&f.w, &f.g, &f.costs, &f.arch);
+    let run = |threads: usize| {
+        let params = GaParams {
+            population: 10,
+            generations: 5,
+            threads,
+            ..Default::default()
+        };
+        let mut ga = Ga::new(
+            &f.w,
+            &f.arch,
+            &sched,
+            SchedulePriority::Latency,
+            Objective::LatencyMemory,
+            params,
+        );
+        ga.run()
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.genome, b.genome);
+        assert_eq!(a.metrics.latency_cc, b.metrics.latency_cc);
+        assert_eq!(a.metrics.energy_pj.to_bits(), b.metrics.energy_pj.to_bits());
+        assert_eq!(a.metrics.peak_mem_bytes.to_bits(), b.metrics.peak_mem_bytes.to_bits());
+    }
+}
+
+/// The scenario GA's front members must report exactly what a fresh
+/// co-schedule of their allocations produces — the driver's record and
+/// the runner's fitness cannot drift apart.
+#[test]
+fn scenario_ga_front_objectives_match_fresh_simulation() {
+    let scenario = Scenario::new(
+        "pin",
+        vec![
+            Tenant::new("a", "tiny-segment", Arrival::OneShot { at_cc: 0 }).deadline(2_000_000),
+            Tenant::new("b", "tiny-branchy", Arrival::OneShot { at_cc: 0 }).deadline(2_000_000),
+        ],
+    );
+    let arch = presets::test_dual();
+    let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+    let params = GaParams { population: 6, generations: 3, seed: 11, ..Default::default() };
+
+    let mut ga = ScenarioGa::new(&sim, Arbitration::Edf, params);
+    let front = ga.run();
+    assert!(!front.is_empty());
+    // best-first ordering on (misses, worst p99)
+    for pair in front.windows(2) {
+        assert!(
+            (pair[0].misses, pair[0].worst_p99_cc) <= (pair[1].misses, pair[1].worst_p99_cc)
+        );
+    }
+    for member in &front {
+        let r = sim.run(&member.allocations, Arbitration::Edf);
+        assert_eq!(member.misses, r.total_misses(), "misses must reproduce");
+        assert_eq!(member.worst_p99_cc, r.worst_p99_cc(), "p99 must reproduce");
+        assert_eq!(
+            member.energy_pj.to_bits(),
+            r.metrics.energy_pj.to_bits(),
+            "energy must reproduce"
+        );
+    }
+
+    // determinism across full re-runs of the search
+    let mut ga2 = ScenarioGa::new(&sim, Arbitration::Edf, params);
+    let front2 = ga2.run();
+    assert_eq!(front.len(), front2.len());
+    for (x, y) in front.iter().zip(&front2) {
+        assert_eq!(x.genome, y.genome);
+        assert_eq!(x.energy_pj.to_bits(), y.energy_pj.to_bits());
+    }
+}

@@ -1,0 +1,385 @@
+//! Fuzz coverage for the unified simulation core (satellite of the
+//! request-context refactor):
+//!
+//! 1. **Degenerate bit-identity** — randomized (model, arch, topology,
+//!    allocation, pool priority, arbitration, deadline) points must
+//!    make the 1-tenant / 1-request scenario, `Scheduler::run` and the
+//!    seed's O(n)-scan `Scheduler::run_reference` agree **bit for
+//!    bit** with `Scheduler::run_legacy_routed` — the frozen verbatim
+//!    copy of the pre-unification routed engine, whose **loop body**
+//!    shares no code with the unified core: a regression inside
+//!    `SimContext::simulate`'s event loop changes every wrapper
+//!    identically but cannot change the oracle.  (The primitives both
+//!    engines share — pool, links, weight trackers, peak/spill — are
+//!    pinned by their own oracles: the pool's linear-scan fuzz and
+//!    `run_legacy_bus` on shared-bus topologies.)  Compared in full:
+//!    metrics, per-CN placements, comm/DRAM events, link counters.
+//! 2. **Multi-request invariants** — randomized multi-tenant request
+//!    streams driven through the core keep its structural guarantees:
+//!    every CN of every request scheduled, no same-core overlap,
+//!    per-core busy accounting exact, memory trace closed, event tags
+//!    aligned, and the whole co-schedule bit-deterministic across
+//!    repeat runs.
+
+use stream::arch::{presets, Accelerator, CoreId};
+use stream::cn::{CnGranularity, CnSet};
+use stream::depgraph::generate;
+use stream::mapping::CostModel;
+use stream::scenario::{Arbitration, Arrival, Scenario, ScenarioSim, Tenant};
+use stream::scheduler::{SchedulePriority, ScheduleResult, Scheduler};
+use stream::util::XorShift64;
+use stream::workload::models;
+
+const MODELS: [&str; 2] = ["tiny-segment", "tiny-branchy"];
+const ARCHS: [&str; 5] =
+    ["test-dual", "hetero", "hetero@ring", "hetero_quad@mesh", "hetero_quad@crossbar"];
+const ARBS: [Arbitration; 3] = [Arbitration::Fifo, Arbitration::Priority, Arbitration::Edf];
+const PRIOS: [SchedulePriority; 2] = [SchedulePriority::Latency, SchedulePriority::Memory];
+
+fn random_alloc(
+    w: &stream::workload::WorkloadGraph,
+    arch: &Accelerator,
+    rng: &mut XorShift64,
+) -> Vec<CoreId> {
+    let dense = arch.dense_cores();
+    let simd = arch.simd_core().unwrap_or(dense[0]);
+    w.layers()
+        .iter()
+        .map(|l| {
+            if l.op.is_dense() {
+                dense[rng.below(dense.len() as u64) as usize]
+            } else {
+                simd
+            }
+        })
+        .collect()
+}
+
+fn assert_results_identical(what: &str, a: &ScheduleResult, b: &ScheduleResult) {
+    assert_eq!(a.metrics.latency_cc, b.metrics.latency_cc, "{what}: latency");
+    assert_eq!(a.metrics.energy_pj.to_bits(), b.metrics.energy_pj.to_bits(), "{what}: energy");
+    assert_eq!(
+        a.metrics.peak_mem_bytes.to_bits(),
+        b.metrics.peak_mem_bytes.to_bits(),
+        "{what}: peak mem"
+    );
+    assert_eq!(a.cns.len(), b.cns.len(), "{what}: CN count");
+    for (x, y) in a.cns.iter().zip(&b.cns) {
+        assert_eq!(
+            (x.cn, x.core, x.start, x.end),
+            (y.cn, y.core, y.start, y.end),
+            "{what}: CN placement"
+        );
+    }
+    assert_eq!(a.comms.len(), b.comms.len(), "{what}: comm count");
+    for (x, y) in a.comms.iter().zip(&b.comms) {
+        assert_eq!(
+            (x.from_core, x.to_core, x.start, x.end, x.bytes),
+            (y.from_core, y.to_core, y.start, y.end, y.bytes),
+            "{what}: comm event"
+        );
+        assert_eq!(x.links, y.links, "{what}: comm route");
+    }
+    assert_eq!(a.drams.len(), b.drams.len(), "{what}: dram count");
+    for (x, y) in a.drams.iter().zip(&b.drams) {
+        assert_eq!(
+            (x.core, x.start, x.end, x.bytes, x.kind),
+            (y.core, y.start, y.end, y.bytes, y.kind),
+            "{what}: dram event"
+        );
+        assert_eq!(x.links, y.links, "{what}: dram route");
+    }
+    assert_eq!(a.link_stats, b.link_stats, "{what}: link stats");
+}
+
+/// Randomized degenerate scenarios: the unified core under the
+/// scenario wrapper, the one-shot wrapper and the seed's linear scan
+/// must reproduce the frozen pre-unification routed engine
+/// (`run_legacy_routed`, the independent oracle), bit for bit.
+#[test]
+fn degenerate_scenario_fuzz_matches_reference_engine() {
+    let mut rng = XorShift64::new(0xD15EA5E);
+    for round in 0..24 {
+        let model = MODELS[rng.below(MODELS.len() as u64) as usize];
+        let arch_name = ARCHS[rng.below(ARCHS.len() as u64) as usize];
+        let lines = if rng.unit() < 0.5 { 2 } else { 4 };
+        let priority = PRIOS[rng.below(2) as usize];
+        let arb = ARBS[rng.below(3) as usize];
+
+        let w = models::by_name(model).unwrap();
+        let arch = presets::by_name(arch_name).unwrap();
+        let gran = CnGranularity::Lines(lines).for_arch(&arch);
+        let cns = CnSet::build(&w, gran);
+        let costs = CostModel::build(&w, &cns, &arch);
+        let g = generate(&w, CnSet::build(&w, gran));
+        let sched = Scheduler::new(&w, &g, &costs, &arch);
+        let alloc = random_alloc(&w, &arch, &mut rng);
+        let what = format!("round {round}: {model} on {arch_name}, {priority:?}, {arb}");
+
+        // the independent oracle: a verbatim freeze of the pre-refactor
+        // routed engine, sharing no code with the unified core
+        let oracle = sched.run_legacy_routed(&alloc, priority);
+        let heap = sched.run(&alloc, priority);
+        let linear = sched.run_reference(&alloc, priority);
+        assert_results_identical(&format!("{what} (core vs oracle)"), &heap, &oracle);
+        assert_results_identical(&format!("{what} (linear vs oracle)"), &linear, &oracle);
+
+        // degenerate scenario; a deadline must not perturb the schedule
+        let mut tenant =
+            Tenant::new("solo", model, Arrival::OneShot { at_cc: 0 }).pool_priority(priority);
+        if rng.unit() < 0.5 {
+            tenant = tenant.deadline(1 + rng.below(1 << 22));
+        }
+        let mut scenario = Scenario::new("degenerate-fuzz", vec![tenant]);
+        scenario.granularity = CnGranularity::Lines(lines);
+        let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+        let r = sim.run(std::slice::from_ref(&alloc), arb);
+
+        assert_eq!(r.metrics.latency_cc, linear.metrics.latency_cc, "{what}: latency");
+        assert_eq!(
+            r.metrics.energy_pj.to_bits(),
+            linear.metrics.energy_pj.to_bits(),
+            "{what}: energy"
+        );
+        assert_eq!(
+            r.metrics.peak_mem_bytes.to_bits(),
+            linear.metrics.peak_mem_bytes.to_bits(),
+            "{what}: peak mem"
+        );
+        assert_eq!(
+            r.metrics.avg_core_util.to_bits(),
+            linear.metrics.avg_core_util.to_bits(),
+            "{what}: util"
+        );
+        assert_eq!(r.cns.len(), linear.cns.len(), "{what}: CN count");
+        for (x, y) in r.cns.iter().zip(&linear.cns) {
+            assert_eq!(x.request, 0, "{what}: request tag");
+            assert_eq!(
+                (x.placed.cn, x.placed.core, x.placed.start, x.placed.end),
+                (y.cn, y.core, y.start, y.end),
+                "{what}: CN placement"
+            );
+        }
+        assert_eq!(r.comms.len(), linear.comms.len(), "{what}: comm count");
+        for (x, y) in r.comms.iter().zip(&linear.comms) {
+            assert_eq!((x.start, x.end, x.bytes), (y.start, y.end, y.bytes), "{what}: comm");
+            assert_eq!(x.links, y.links, "{what}: comm route");
+        }
+        assert_eq!(r.drams.len(), linear.drams.len(), "{what}: dram count");
+        for (x, y) in r.drams.iter().zip(&linear.drams) {
+            assert_eq!(
+                (x.core, x.start, x.end, x.bytes, x.kind),
+                (y.core, y.start, y.end, y.bytes, y.kind),
+                "{what}: dram"
+            );
+        }
+        assert_eq!(r.link_stats, linear.link_stats, "{what}: link stats");
+    }
+}
+
+/// The general multi-lane arbitration prologue, pinned against the
+/// independent oracle.  `Scheduler::run` and the 1-request scenario
+/// both take the core's single-lane fast path, so this test releases a
+/// **second** request far after the first completes: every scheduling
+/// decision of the first request then flows through the full two-lane
+/// arbitration (admission clock, eligibility gate, key comparison),
+/// yet the first request's CNs, communications and DRAM events must
+/// stay bit-identical to the solo run of the frozen pre-unification
+/// engine — a regression in the prologue cannot hide behind the fast
+/// path.
+#[test]
+fn widely_spaced_second_request_pins_the_multi_lane_prologue() {
+    const FAR: u64 = 1_000_000_000; // >> any tiny-model makespan
+    let mut rng = XorShift64::new(0xAB1E);
+    for round in 0..12 {
+        let model = MODELS[rng.below(MODELS.len() as u64) as usize];
+        let arch_name = ARCHS[rng.below(ARCHS.len() as u64) as usize];
+        let lines = if rng.unit() < 0.5 { 2 } else { 4 };
+        let priority = PRIOS[rng.below(2) as usize];
+        let arb = ARBS[rng.below(3) as usize];
+
+        let w = models::by_name(model).unwrap();
+        let arch = presets::by_name(arch_name).unwrap();
+        let gran = CnGranularity::Lines(lines).for_arch(&arch);
+        let cns = CnSet::build(&w, gran);
+        let costs = CostModel::build(&w, &cns, &arch);
+        let g = generate(&w, CnSet::build(&w, gran));
+        let sched = Scheduler::new(&w, &g, &costs, &arch);
+        let alloc = random_alloc(&w, &arch, &mut rng);
+        let what = format!("round {round}: {model} on {arch_name}, {priority:?}, {arb}");
+
+        let oracle = sched.run_legacy_routed(&alloc, priority);
+
+        let mut scenario = Scenario::new(
+            "spaced",
+            vec![Tenant::new("t", model, Arrival::Burst { times_cc: vec![0, FAR] })
+                .pool_priority(priority)],
+        );
+        scenario.granularity = CnGranularity::Lines(lines);
+        let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+        let r = sim.run(std::slice::from_ref(&alloc), arb);
+        assert_eq!(r.cns.len(), 2 * oracle.cns.len(), "{what}: CN count");
+
+        let first: Vec<_> = r.cns.iter().filter(|c| c.request == 0).collect();
+        assert_eq!(first.len(), oracle.cns.len(), "{what}: first-request CNs");
+        for (x, y) in first.iter().zip(&oracle.cns) {
+            assert_eq!(
+                (x.placed.cn, x.placed.core, x.placed.start, x.placed.end),
+                (y.cn, y.core, y.start, y.end),
+                "{what}: first-request placement"
+            );
+        }
+        let comms0: Vec<_> = r
+            .comms
+            .iter()
+            .zip(&r.comm_req)
+            .filter(|&(_, &t)| t == 0)
+            .map(|(c, _)| c)
+            .collect();
+        assert_eq!(comms0.len(), oracle.comms.len(), "{what}: comm count");
+        for (x, y) in comms0.iter().zip(&oracle.comms) {
+            assert_eq!((x.start, x.end, x.bytes), (y.start, y.end, y.bytes), "{what}: comm");
+            assert_eq!(x.links, y.links, "{what}: comm route");
+        }
+        let drams0: Vec<_> = r
+            .drams
+            .iter()
+            .zip(&r.dram_req)
+            .filter(|&(_, &t)| t == 0)
+            .map(|(d, _)| d)
+            .collect();
+        assert_eq!(drams0.len(), oracle.drams.len(), "{what}: dram count");
+        for (x, y) in drams0.iter().zip(&oracle.drams) {
+            assert_eq!(
+                (x.core, x.start, x.end, x.bytes, x.kind),
+                (y.core, y.start, y.end, y.bytes, y.kind),
+                "{what}: dram"
+            );
+        }
+
+        // the far-future request still runs, after its release
+        for cn in r.cns.iter().filter(|c| c.request == 1) {
+            assert!(cn.placed.start >= FAR, "{what}: {:?}", cn.placed);
+        }
+    }
+}
+
+fn random_arrival(rng: &mut XorShift64) -> Arrival {
+    match rng.below(3) {
+        0 => Arrival::OneShot { at_cc: rng.below(200_000) },
+        1 => Arrival::Periodic {
+            every_cc: 50_000 + rng.below(300_000),
+            count: 2 + rng.below(2) as usize,
+            offset_cc: rng.below(100_000),
+        },
+        _ => {
+            let n = 2 + rng.below(2) as usize;
+            Arrival::Burst { times_cc: (0..n).map(|_| rng.below(150_000)).collect() }
+        }
+    }
+}
+
+/// Randomized multi-request scenarios: structural invariants and
+/// bit-determinism of the unified core.
+#[test]
+fn randomized_multi_request_scenarios_hold_invariants() {
+    let mut rng = XorShift64::new(0xFEED5);
+    for round in 0..16 {
+        let arch_name = ARCHS[rng.below(ARCHS.len() as u64) as usize];
+        let arch = presets::by_name(arch_name).unwrap();
+        let arb = ARBS[rng.below(3) as usize];
+        let n_tenants = 1 + rng.below(3) as usize;
+        let tenants: Vec<Tenant> = (0..n_tenants)
+            .map(|t| {
+                let model = MODELS[rng.below(MODELS.len() as u64) as usize];
+                let mut tenant =
+                    Tenant::new(&format!("t{t}"), model, random_arrival(&mut rng))
+                        .priority(rng.below(10) as u16)
+                        .pool_priority(PRIOS[rng.below(2) as usize]);
+                if rng.unit() < 0.5 {
+                    tenant = tenant.deadline(1 + rng.below(1 << 22));
+                }
+                tenant
+            })
+            .collect();
+        let mut scenario = Scenario::new("fuzz", tenants);
+        scenario.granularity = CnGranularity::Lines(if rng.unit() < 0.5 { 2 } else { 4 });
+        let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+        let allocs: Vec<Vec<CoreId>> = sim
+            .builds()
+            .iter()
+            .map(|b| random_alloc(&b.workload, &arch, &mut rng))
+            .collect();
+        let what = format!("round {round}: {arch_name}, {arb}, {n_tenants} tenants");
+
+        let runner = sim.runner();
+        let r = runner.run(&allocs, arb);
+
+        // every CN of every request scheduled, tags in range
+        let expect: usize = sim
+            .builds()
+            .iter()
+            .zip(&scenario.tenants)
+            .map(|(b, t)| b.graph.len() * t.arrival.releases().len())
+            .sum();
+        assert_eq!(r.cns.len(), expect, "{what}: CN count");
+        assert_eq!(r.outcomes.len(), scenario.n_requests(), "{what}: outcomes");
+        assert_eq!(r.comms.len(), r.comm_req.len(), "{what}: comm tags");
+        assert_eq!(r.drams.len(), r.dram_req.len(), "{what}: dram tags");
+        let n_req = scenario.n_requests();
+        assert!(r.cns.iter().all(|c| c.request < n_req), "{what}: cn tag range");
+        assert!(r.comm_req.iter().all(|&t| t < n_req), "{what}: comm tag range");
+        assert!(r.dram_req.iter().all(|&t| t < n_req), "{what}: dram tag range");
+
+        // releases respected, per-request completion consistent
+        for o in &r.outcomes {
+            assert!(o.completion_cc >= o.release_cc, "{what}: {o:?}");
+            let last = r
+                .cns
+                .iter()
+                .filter(|c| c.request == o.request)
+                .map(|c| c.placed.end)
+                .max()
+                .unwrap();
+            assert!(o.completion_cc >= last, "{what}: completion before last CN");
+        }
+        for cn in &r.cns {
+            let rel = r.outcomes[cn.request].release_cc;
+            assert!(cn.placed.start >= rel, "{what}: CN before release");
+        }
+
+        // no two CNs overlap on one core, and busy accounting is exact
+        let mut by_core: Vec<Vec<(u64, u64)>> = vec![Vec::new(); arch.cores.len()];
+        for cn in &r.cns {
+            by_core[cn.placed.core.0].push((cn.placed.start, cn.placed.end));
+        }
+        for (c, iv) in by_core.iter_mut().enumerate() {
+            iv.sort_unstable();
+            for pair in iv.windows(2) {
+                assert!(pair[0].1 <= pair[1].0, "{what}: overlap on core {c}");
+            }
+            let busy: u64 = iv.iter().map(|(s, e)| e - s).sum();
+            assert_eq!(busy, r.core_busy[c], "{what}: core {c} busy cycles");
+        }
+
+        // memory accounting closes
+        assert!(r.memtrace.residual().abs() < 1.0, "{what}: residual");
+
+        // bit-determinism across repeat runs of the same runner
+        let r2 = runner.run(&allocs, arb);
+        assert_eq!(r.metrics.latency_cc, r2.metrics.latency_cc, "{what}: determinism");
+        assert_eq!(
+            r.metrics.energy_pj.to_bits(),
+            r2.metrics.energy_pj.to_bits(),
+            "{what}: determinism"
+        );
+        assert_eq!(r.cns.len(), r2.cns.len(), "{what}: determinism");
+        for (x, y) in r.cns.iter().zip(&r2.cns) {
+            assert_eq!(
+                (x.request, x.placed.cn, x.placed.core, x.placed.start, x.placed.end),
+                (y.request, y.placed.cn, y.placed.core, y.placed.start, y.placed.end),
+                "{what}: determinism"
+            );
+        }
+    }
+}
