@@ -7,6 +7,15 @@
 //! scheduling and weight-locality overheads; coarse granularity loses
 //! parallelism and floods the activation memory.
 //!
+//! The second section sweeps a ViT-Base@384-class encoder stack fused
+//! vs layer-by-layer — the attention frontier, where a single MLP
+//! activation (1.18 MB) overflows the pooled SRAM — in two regimes:
+//! the stock 120 KB weight SRAMs (fine granularity pays weight-refetch
+//! thrash when projections time-share a core) and a weights-resident
+//! variant (32 MB weight SRAMs — the whole 14.2 MB weight set stays
+//! on-chip) that isolates fusion's activation-spill savings, where the
+//! fused stack moves strictly less DRAM traffic.
+//!
 //! ```bash
 //! cargo bench --bench ablation_granularity
 //! ```
@@ -50,4 +59,64 @@ fn main() {
         }
         println!();
     }
+
+    // --- transformer frontier: fused vs layer-by-layer ViT stack -------
+    println!("=== ablation: ViT-Base@384 stack, fused vs layer-by-layer ===\n");
+    let vit = models::vit_stack("vit-base-384-seg", 384, 768, 3072, 2);
+    let grans: Vec<(String, CnGranularity)> = [4usize, 16, 64]
+        .iter()
+        .map(|&l| (format!("Lines({l})"), CnGranularity::Lines(l)))
+        .chain(std::iter::once(("layer-by-layer".to_string(), CnGranularity::LayerByLayer)))
+        .collect();
+    println!(
+        "{:<18} {:>14} {:>12} {:>10} {:>10} {:>10}",
+        "regime", "granularity", "latency(cc)", "DRAM(uJ)", "NoC(uJ)", "peak(KB)"
+    );
+    let mut fused_dram = f64::NAN;
+    let mut lbl_dram = f64::NAN;
+    for (regime, wgt_mem) in [("stock-120KB-wgt", None), ("weights-resident", Some(32 << 20))] {
+        for (name, gran) in &grans {
+            let mut arch = presets::hetero_quad();
+            if let Some(wm) = wgt_mem {
+                for c in arch.cores.iter_mut().filter(|c| !c.is_simd()) {
+                    c.wgt_mem_bytes = wm;
+                }
+            }
+            let s = Stream::new(
+                vit.clone(),
+                arch,
+                StreamOpts { granularity: *gran, ga, ..Default::default() },
+            );
+            let r = s.run().unwrap();
+            let m = r.best_edp().unwrap().result.metrics;
+            println!(
+                "{:<18} {:>14} {:>12} {:>10.2} {:>10.2} {:>10.1}",
+                regime,
+                name,
+                m.latency_cc,
+                m.breakdown.dram_pj / 1e6,
+                m.breakdown.noc_pj / 1e6,
+                m.peak_mem_bytes / 1024.0
+            );
+            if regime == "weights-resident" {
+                match gran {
+                    CnGranularity::Lines(4) => fused_dram = m.breakdown.dram_pj,
+                    CnGranularity::LayerByLayer => lbl_dram = m.breakdown.dram_pj,
+                    _ => {}
+                }
+            }
+        }
+        println!();
+    }
+    println!(
+        "weights-resident fused (4 lines) DRAM {:.2} uJ vs layer-by-layer {:.2} uJ ({:+.0}%)",
+        fused_dram / 1e6,
+        lbl_dram / 1e6,
+        100.0 * (fused_dram - lbl_dram) / lbl_dram
+    );
+    assert!(
+        fused_dram < lbl_dram,
+        "fused ViT stack must move less DRAM traffic than layer-by-layer \
+         in the weights-resident regime"
+    );
 }

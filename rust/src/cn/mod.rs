@@ -9,7 +9,9 @@
 //! 1. **Layer topology awareness** — fully-connected layers have no
 //!    spatial locality, so their single CN encapsulates every loop
 //!    (automatically breaking the fused stack); spatially-local layers
-//!    (conv / dwconv / pool / add / concat) split along `OY`.
+//!    (conv / dwconv / pool / add / concat, and the transformer ops
+//!    matmul / layernorm / softmax / gelu whose `OY` rows are sequence
+//!    tokens) split along `OY`.
 //! 2. **HW dataflow awareness** — a CN must minimally encompass every
 //!    for-loop dimension that is spatially unrolled in *any* core of the
 //!    target architecture, so no core is forced below full spatial

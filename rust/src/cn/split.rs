@@ -47,11 +47,16 @@ pub fn split_layer(layer: &Layer, gran: CnGranularity) -> Vec<ComputationNode> {
 /// clipped to the valid (unpadded) input tensor.
 pub(crate) fn input_rect(layer: &Layer, o_lo: usize, o_hi: usize) -> Rect {
     match layer.op {
-        OpType::Add | OpType::Concat => {
-            // elementwise / copy: same rows as the output
+        OpType::Add | OpType::Concat | OpType::LayerNorm | OpType::Softmax | OpType::Gelu => {
+            // elementwise / copy / per-row reduction: same rows as the
+            // output
             Rect::chw(0..layer.c as i64, o_lo as i64..o_hi as i64, 0..layer.ox as i64)
         }
         OpType::Fc => Rect::chw(0..layer.c as i64, 0..1, 0..1),
+        // MatMul falls through to the generic window: with fy = fx =
+        // stride = 1 and pad = 0 that is exactly "operand-A rows map
+        // 1:1 to output rows" (operand B is not part of the input
+        // window; it rides the weight position of the dataflow).
         _ => {
             let s = layer.stride as i64;
             let pad = layer.pad as i64;
@@ -133,6 +138,45 @@ mod tests {
         l.id = LayerId(0);
         let cns = split_layer(&l, CnGranularity::Lines(1));
         assert_eq!(cns.len(), 1);
+    }
+
+    #[test]
+    fn matmul_splits_by_token_rows() {
+        // scores GEMM over 196 tokens: unlike FC, it splits fine-grain
+        let mut l = LayerBuilder::new("scores", OpType::MatMul)
+            .k(196)
+            .c(192)
+            .spatial(196, 1)
+            .build();
+        l.id = LayerId(0);
+        let cns = split_layer(&l, CnGranularity::Lines(4));
+        assert_eq!(cns.len(), 49);
+        let total: u64 = cns.iter().map(|c| c.macs).sum();
+        assert_eq!(total, l.macs());
+        // A-operand windows map 1:1 to output rows (no halo)
+        for cn in &cns {
+            assert_eq!(cn.in_rect.lo[1], cn.out_rect.lo[1]);
+            assert_eq!(cn.in_rect.hi[1], cn.out_rect.hi[1]);
+        }
+        // discardable inputs partition operand A exactly
+        let disc: u64 = cns.iter().map(|c| c.discard_input_bytes).sum();
+        assert_eq!(disc, l.input_bytes());
+    }
+
+    #[test]
+    fn softmax_splits_like_elementwise() {
+        let mut l = LayerBuilder::new("sm", OpType::Softmax)
+            .k(196)
+            .c(196)
+            .spatial(196, 1)
+            .build();
+        l.id = LayerId(0);
+        let cns = split_layer(&l, CnGranularity::Lines(8));
+        assert_eq!(cns.len(), 196usize.div_ceil(8));
+        for cn in &cns {
+            let rows = (cn.in_rect.lo[1], cn.in_rect.hi[1]);
+            assert_eq!(rows, (cn.out_rect.lo[1], cn.out_rect.hi[1]));
+        }
     }
 
     #[test]

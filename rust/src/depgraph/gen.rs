@@ -10,10 +10,15 @@ use crate::workload::{Layer, OpType, WorkloadGraph};
 /// the consumer's predecessors.
 ///
 /// - conv/pool: channels map 1:1, rows through stride/pad halo;
-/// - add: element-wise, rows map 1:1;
+/// - add (and layernorm/softmax/gelu): element-wise, rows map 1:1;
 /// - concat: the consumer's input channel range maps to the producer's
 ///   K range shifted by the channel offset of that predecessor;
-/// - fc: needs the producer's entire output (no spatial locality).
+/// - fc: needs the producer's entire output (no spatial locality);
+/// - matmul: operand A (pred 0) maps rows 1:1 like the element-wise
+///   ops, while operand B (pred 1) needs the producer's *entire*
+///   output for every CN — the shared `[C, K]` matrix.  The exclusive
+///   window attributes B's bytes to the first CN only, so the transfer
+///   is streamed in once and held for the whole layer.
 pub fn consumer_input_rect(
     consumer: &Layer,
     cn: &ComputationNode,
@@ -28,6 +33,8 @@ pub fn consumer_input_rect(
     );
     match consumer.op {
         OpType::Fc => prod_bounds,
+        // MatMul operand B: the whole [C, K] matrix, for every CN.
+        OpType::MatMul if pred_idx > 0 => prod_bounds,
         OpType::Concat => {
             // consumer channel range [chan_offset, chan_offset + prod.k)
             // comes from this producer; rows/cols map 1:1
@@ -258,6 +265,66 @@ mod tests {
         // restrict to a manageable CN count but still exercise concat
         let (a, b) = build(&w, 16);
         assert_eq!(edge_set(&a), edge_set(&b));
+    }
+
+    #[test]
+    fn matmul_b_operand_edges() {
+        use crate::workload::{LayerBuilder, LayerId, OpType};
+        // q/k sources over 16 tokens of dim 8 -> scores[16, 16]
+        let q = LayerBuilder::new("q", OpType::Conv).k(8).c(8).spatial(16, 1).build();
+        let k = LayerBuilder::new("k", OpType::Conv).k(8).c(8).spatial(16, 1).build();
+        let scores = LayerBuilder::new("scores", OpType::MatMul)
+            .k(16)
+            .c(8)
+            .spatial(16, 1)
+            .preds(&[LayerId(0), LayerId(1)])
+            .build();
+        let w = WorkloadGraph::new("attn", vec![q, k, scores]).unwrap();
+        w.validate_channels().unwrap();
+
+        // r-tree path must agree with the pairwise oracle on the new arm
+        let (a, b) = build(&w, 4);
+        assert_eq!(edge_set(&a), edge_set(&b));
+
+        let g = a;
+        let k_cns = g.cns.layer_cns(LayerId(1));
+        let s_cns = g.cns.layer_cns(LayerId(2));
+        assert_eq!(s_cns.len(), 4, "matmul splits by token rows");
+        // every scores CN depends on EVERY k-producer CN (full B)...
+        for scn in s_cns {
+            let b_preds = g
+                .pred_edges(scn.id)
+                .filter(|e| {
+                    e.kind == EdgeKind::Data
+                        && g.cns.node(e.from).layer == LayerId(1)
+                })
+                .count();
+            assert_eq!(b_preds, k_cns.len());
+        }
+        // ...but B's bytes are attributed to the first CN only, and sum
+        // to the k-producer's whole output (streamed in once, held)
+        let b_bytes_to = |cn: crate::cn::CnId| -> u64 {
+            g.pred_edges(cn)
+                .filter(|e| g.cns.node(e.from).layer == LayerId(1))
+                .map(|e| e.bytes)
+                .sum()
+        };
+        assert_eq!(b_bytes_to(s_cns[0].id), w.layer(LayerId(1)).output_bytes());
+        for scn in &s_cns[1..] {
+            assert_eq!(b_bytes_to(scn.id), 0);
+        }
+        // operand A maps rows 1:1: each scores CN takes bytes from
+        // exactly its own q rows
+        let a_bytes: u64 = s_cns
+            .iter()
+            .flat_map(|scn| {
+                g.pred_edges(scn.id)
+                    .filter(|e| g.cns.node(e.from).layer == LayerId(0))
+                    .map(|e| e.bytes)
+                    .collect::<Vec<_>>()
+            })
+            .sum();
+        assert_eq!(a_bytes, w.layer(LayerId(0)).output_bytes());
     }
 
     #[test]

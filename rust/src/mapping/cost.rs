@@ -115,8 +115,15 @@ fn dense_cost(layer: &Layer, cn: &ComputationNode, core: &Core) -> CnCost {
         OpType::Conv => (layer.k * layer.c * layer.fy * layer.fx) as u64,
         OpType::DwConv => (layer.k * layer.fy * layer.fx) as u64,
         OpType::Fc => (layer.k * layer.c) as u64,
+        // MatMul: the B operand occupies the weight position of the
+        // dataflow — same reuse structure as FC weights — but it is a
+        // *streamed activation* (read below at activation precision
+        // from the activation SRAM, not the weight SRAM).
+        OpType::MatMul => (layer.k * layer.c) as u64,
         _ => 0,
     };
+    let streamed_b = layer.op == OpType::MatMul;
+    let wgt_bits = (if streamed_b { layer.act_bits } else { layer.wgt_bits }) as u64;
 
     // refetch factors from the register-file reuse windows
     let k_slices = layer.k.div_ceil(df.unroll(Dim::K) * REG_K).max(1) as u64;
@@ -138,7 +145,12 @@ fn dense_cost(layer: &Layer, cn: &ComputationNode, core: &Core) -> CnCost {
     // energy
     let mac_e = macs as f64 * core.mac_pj();
     let act_e = act_reads as f64 * core.act_read_pj(layer.act_bits as u64);
-    let wgt_e = wgt_reads as f64 * core.wgt_read_pj(layer.wgt_bits as u64);
+    let wgt_e = wgt_reads as f64
+        * if streamed_b {
+            core.act_read_pj(layer.act_bits as u64)
+        } else {
+            core.wgt_read_pj(layer.wgt_bits as u64)
+        };
     let out_e = out_writes as f64 * core.act_write_pj(layer.act_bits as u64);
     let energy = mac_e + act_e + wgt_e + out_e;
 
@@ -153,7 +165,7 @@ fn dense_cost(layer: &Layer, cn: &ComputationNode, core: &Core) -> CnCost {
         _ => 1,
     };
     let traffic_bits = act_reads * layer.act_bits as u64
-        + wgt_reads * layer.wgt_bits as u64
+        + wgt_reads * wgt_bits
         + out_writes * layer.act_bits as u64;
     let ideal = (iters * bit_serial).max(1);
     let mem_cycles = traffic_bits.div_ceil(core.sram_bw_bits.max(1));
@@ -168,7 +180,9 @@ fn dense_cost(layer: &Layer, cn: &ComputationNode, core: &Core) -> CnCost {
 }
 
 fn simd_cost(layer: &Layer, cn: &ComputationNode, core: &Core, lanes: usize, op_pj: f64) -> CnCost {
-    // ops: window ops for pool, element ops for add, pure copy for concat
+    // ops: window ops for pool, element ops for add / gelu, two-pass
+    // element ops for layernorm / softmax (folded into cn.macs),
+    // pure copy for concat
     let ops = match layer.op {
         OpType::Concat => cn.out_rect.volume(), // copy traffic only
         _ => cn.macs.max(cn.out_rect.volume()),
@@ -293,6 +307,63 @@ mod tests {
         let c = m.cn_cost(pool_cn, simd);
         assert!(c.compute_cycles > 0);
         assert!(c.energy_pj > 0.0);
+    }
+
+    /// A sequence-length-1 MatMul must cost **bit-identically** to the
+    /// equivalent FC layer on a core whose activation and weight SRAMs
+    /// are the same size (test_dual: 128 KB each) at equal precisions:
+    /// same MACs, same operand-element counts, same refetch structure,
+    /// and the B operand's per-read energy equals the weight's because
+    /// `sram_read_pj` sees identical arguments.
+    #[test]
+    fn seq1_matmul_costs_equal_fc() {
+        let arch = presets::test_dual();
+        let mut fc = LayerBuilder::new("fc", crate::workload::OpType::Fc).k(64).c(32).build();
+        fc.id = LayerId(0);
+        let mut mm = LayerBuilder::new("mm", crate::workload::OpType::MatMul)
+            .k(64)
+            .c(32)
+            .spatial(1, 1)
+            .build();
+        mm.id = LayerId(0);
+        let fc_cns = crate::cn::split_layer(&fc, CnGranularity::Lines(1));
+        let mm_cns = crate::cn::split_layer(&mm, CnGranularity::Lines(1));
+        assert_eq!(fc_cns.len(), 1);
+        assert_eq!(mm_cns.len(), 1);
+        for core in arch.cores.iter().filter(|c| !c.is_simd()) {
+            let a = compute_cost(&fc, &fc_cns[0], core);
+            let b = compute_cost(&mm, &mm_cns[0], core);
+            assert_eq!(a.compute_cycles, b.compute_cycles, "{}", core.name);
+            assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits(), "{}", core.name);
+            assert_eq!(a.mac_energy_pj.to_bits(), b.mac_energy_pj.to_bits());
+            assert_eq!(a.spatial_util.to_bits(), b.spatial_util.to_bits());
+        }
+    }
+
+    #[test]
+    fn matmul_b_read_energy_prices_off_act_sram() {
+        // growing ONLY the weight SRAM changes FC cost (weight reads
+        // get pricier) but must leave MatMul cost untouched: its B
+        // operand is an activation and never touches the weight SRAM
+        let small = presets::test_dual().cores[0].clone();
+        let mut big = small.clone();
+        big.wgt_mem_bytes = 8 * 1024 * 1024;
+        let mut mm = LayerBuilder::new("mm", crate::workload::OpType::MatMul)
+            .k(64)
+            .c(64)
+            .spatial(8, 1)
+            .build();
+        mm.id = LayerId(0);
+        let mut fc = LayerBuilder::new("fc", crate::workload::OpType::Fc).k(64).c(64).build();
+        fc.id = LayerId(0);
+        let mm_cn = crate::cn::split_layer(&mm, CnGranularity::LayerByLayer);
+        let fc_cn = crate::cn::split_layer(&fc, CnGranularity::LayerByLayer);
+        let mm_small = compute_cost(&mm, &mm_cn[0], &small);
+        let mm_big = compute_cost(&mm, &mm_cn[0], &big);
+        assert_eq!(mm_small.energy_pj.to_bits(), mm_big.energy_pj.to_bits());
+        let fc_small = compute_cost(&fc, &fc_cn[0], &small);
+        let fc_big = compute_cost(&fc, &fc_cn[0], &big);
+        assert!(fc_big.energy_pj > fc_small.energy_pj);
     }
 
     #[test]

@@ -55,6 +55,6 @@ pub use result::{
     percentile_cc, RequestOutcome, ScenarioCn, ScenarioResult, TenantStats,
 };
 pub use spec::{
-    av_pipeline, by_name, duplicate_resnet_x4, edge_mix, tiny_mix, Arrival, Request, Scenario,
-    Tenant, SCENARIO_NAMES,
+    av_pipeline, by_name, duplicate_resnet_x4, edge_mix, llm_serving, tiny_mix, Arrival, Request,
+    Scenario, Tenant, SCENARIO_NAMES,
 };

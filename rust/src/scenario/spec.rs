@@ -225,6 +225,37 @@ pub fn duplicate_resnet_x4() -> Scenario {
     )
 }
 
+/// LLM serving: decode-step request streams over the `llm_decode`
+/// workload.  An interactive stream (tight per-token deadline, high
+/// priority — a chat user waiting on the next token) contends with a
+/// batch stream (loose deadline — offline summarization) for the same
+/// fabric; every request is one single-token decode step whose weight
+/// and KV-cache reads make it DRAM-bound, so arbitration and topology
+/// decide the tail latency.  Deadlines are sized to the ~4.4 Mcc
+/// weight-streaming floor of a cold step on the exploration DRAM port
+/// (35.3 MB x 8 / 64 bit/cc).
+pub fn llm_serving() -> Scenario {
+    Scenario::new(
+        "llm_serving",
+        vec![
+            Tenant::new(
+                "interactive",
+                "llm-decode",
+                Arrival::Periodic { every_cc: 6_000_000, count: 3, offset_cc: 0 },
+            )
+            .deadline(12_000_000)
+            .priority(2),
+            Tenant::new(
+                "batch",
+                "llm-decode",
+                Arrival::Burst { times_cc: vec![0, 2_000_000] },
+            )
+            .deadline(40_000_000)
+            .priority(1),
+        ],
+    )
+}
+
 /// Tiny two-tenant mix over the synthetic test networks — fast enough
 /// for unit tests and CI smoke runs.
 pub fn tiny_mix() -> Scenario {
@@ -250,13 +281,14 @@ pub fn by_name(name: &str) -> Option<Scenario> {
         "edge_mix" | "edge-mix" => Some(edge_mix()),
         "av_pipeline" | "av-pipeline" => Some(av_pipeline()),
         "duplicate_resnet_x4" | "duplicate-resnet-x4" => Some(duplicate_resnet_x4()),
+        "llm_serving" | "llm-serving" => Some(llm_serving()),
         "tiny_mix" | "tiny-mix" => Some(tiny_mix()),
         _ => None,
     }
 }
 
 pub const SCENARIO_NAMES: &[&str] =
-    &["edge_mix", "av_pipeline", "duplicate_resnet_x4", "tiny_mix"];
+    &["edge_mix", "av_pipeline", "duplicate_resnet_x4", "llm_serving", "tiny_mix"];
 
 #[cfg(test)]
 mod tests {
@@ -287,6 +319,22 @@ mod tests {
         }
         // deadlines are absolute
         assert_eq!(reqs[0].deadline_abs_cc, Some(reqs[0].release_cc + 200_000));
+    }
+
+    #[test]
+    fn llm_serving_is_decode_streams_with_deadlines() {
+        let s = llm_serving();
+        assert_eq!(s.tenants.len(), 2);
+        assert_eq!(s.n_requests(), 5);
+        for t in &s.tenants {
+            assert_eq!(t.model, "llm-decode");
+            assert!(t.deadline_cc.is_some(), "{}: serving SLO required", t.name);
+        }
+        assert!(s.tenants[0].priority > s.tenants[1].priority, "interactive wins arbitration");
+        // every expanded request carries an absolute deadline
+        for r in s.requests() {
+            assert!(r.deadline_abs_cc.is_some());
+        }
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::mapping::CostModel;
 use crate::scheduler::memtrace::MemTrace;
 use crate::scheduler::sim::{Arbitration, SimContext, SimRequest, SimTenant};
 use crate::scheduler::{SchedulePriority, ScheduleResult};
-use crate::workload::WorkloadGraph;
+use crate::workload::{OpType, WorkloadGraph};
 
 /// Placement and timing of one scheduled CN.
 #[derive(Debug, Clone, Copy)]
@@ -107,6 +107,17 @@ impl<'a> Scheduler<'a> {
                 continue; // whole output fits in the budget: no gating
             }
             for &cons_id in succs {
+                let cons = workload.layer(cons_id);
+                // A MatMul's B operand is broadcast: EVERY consumer CN
+                // depends on EVERY producer CN, so a gate from this
+                // producer back to any consumer CN would close a cycle
+                // with the B data edges (and backpressure is moot — the
+                // whole matrix must exist before the GEMM starts).
+                if cons.op == OpType::MatMul
+                    && cons.predecessors.iter().skip(1).any(|p| *p == layer.id)
+                {
+                    continue;
+                }
                 let ccns = graph.cns.layer_cns(cons_id);
                 if ccns.len() < 2 {
                     continue; // single-CN consumers (e.g. FC) gate nothing
@@ -131,11 +142,18 @@ impl<'a> Scheduler<'a> {
         // Heuristic readiness penalty for non-resident weights: the
         // fetch time at the topology's aggregate off-chip bandwidth
         // (allocation-independent, so it can be precomputed; the actual
-        // fetch is routed per core at schedule time).
+        // fetch is routed per core at schedule time).  A MatMul whose B
+        // operand streams from DRAM (LLM-decode KV read) pays the same
+        // penalty for its B bytes — and since it is never resident, the
+        // penalty never amortizes away.
         let wgt_fetch_cc = workload
             .layers()
             .iter()
-            .map(|l| (l.weight_bytes() * 8).div_ceil(arch.topology.dram_bw_bits()))
+            .map(|l| {
+                let bytes =
+                    if l.streams_b_from_dram() { l.matmul_b_bytes() } else { l.weight_bytes() };
+                (bytes * 8).div_ceil(arch.topology.dram_bw_bits())
+            })
             .collect();
 
         Scheduler {
@@ -529,6 +547,54 @@ mod tests {
             assert_eq!(a.cns.len(), g.len());
             assert_eq!(a.metrics.latency_cc, b.metrics.latency_cc);
         }
+    }
+
+    /// A MatMul's B producer must never be buffer-gated by the GEMM's
+    /// CNs: every GEMM CN data-depends on every B-producer CN, so a
+    /// gate edge would deadlock the schedule.  Starve the activation
+    /// memory (the regime that builds gates aggressively) and check
+    /// the attention chain still schedules to completion.
+    #[test]
+    fn matmul_b_producer_is_never_gated() {
+        use crate::workload::models::vit_stack;
+        let w = vit_stack("gate-stack", 32, 16, 32, 1);
+        let mut arch = presets::test_dual();
+        for c in &mut arch.cores {
+            c.act_mem_bytes = 512; // force gating everywhere possible
+        }
+        let gran = CnGranularity::Lines(2);
+        let cns = CnSet::build(&w, gran);
+        let costs = CostModel::build(&w, &cns, &arch);
+        let g = generate(&w, CnSet::build(&w, gran));
+        let s = Scheduler::new(&w, &g, &costs, &arch);
+
+        // no gate edge points from a B-producer CN back to its GEMM
+        for layer in w.layers() {
+            for &succ in w.successors(layer.id) {
+                let cons = w.layer(succ);
+                if cons.op != crate::workload::OpType::MatMul
+                    || !cons.predecessors.iter().skip(1).any(|p| *p == layer.id)
+                {
+                    continue;
+                }
+                for pcn in g.cns.layer_cns(layer.id) {
+                    for gate in &s.gate_preds[pcn.id.0] {
+                        assert_ne!(
+                            g.cns.node(*gate).layer,
+                            succ,
+                            "B producer {} gated by its GEMM {}",
+                            layer.name,
+                            cons.name
+                        );
+                    }
+                }
+            }
+        }
+
+        // and the starved schedule still completes
+        let alloc = simd_alloc(&w, &arch, CoreId(0));
+        let r = s.run(&alloc, SchedulePriority::Latency);
+        assert_eq!(r.cns.len(), g.len());
     }
 
     #[test]

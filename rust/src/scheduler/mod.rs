@@ -106,6 +106,10 @@ pub struct LinkStat {
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DramKind {
+    /// Weight-position operand load.  For weighted layers this happens
+    /// at most once per residency window; for a streamed-B `MatMul`
+    /// (LLM-decode KV read) it recurs on every CN — zero resident
+    /// weights are never amortized.
     WeightFetch,
     ActFetch,
     ActStore,

@@ -20,6 +20,11 @@
 //! - [`Scheduler::run_legacy_bus`] — a verbatim copy of the
 //!   pre-topology scalar-bus engine, the anchor of
 //!   `rust/tests/topology_equivalence.rs`.
+//!
+//! These engines are frozen **pre-transformer**: the legacy copies do
+//! not model the streamed-B `MatMul` DRAM fetch (the KV read), so
+//! pinning sweeps must keep using CNN fixtures only.  `run_reference`
+//! (which drives the live core) remains valid on every workload.
 
 use crate::arch::{CoreId, CoreKind, LinkId};
 use crate::cn::CnId;

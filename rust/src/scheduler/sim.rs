@@ -372,42 +372,60 @@ impl SimContext<'_> {
                     data_ready = data_ready.max(lane.sched[g.0].expect("gate scheduled").end);
                 }
 
-                // 2) weights, keyed by the global (tenant, layer) id so
-                //    requests of the same tenant share residency; fetched
-                //    through the nearest DRAM port when not resident
+                // 2) the weight-position operand, fetched through the
+                //    nearest DRAM port.  Resident weights go through the
+                //    per-core tracker keyed by the global (tenant, layer)
+                //    id (so requests of the same tenant share residency,
+                //    and a fetch rekeys every lane's pool); a MatMul
+                //    without an in-graph B producer instead streams its
+                //    B operand (the LLM-decode KV-cache read) on EVERY
+                //    CN — zero resident weights, so it bypasses the
+                //    tracker, never rekeys, never amortizes, and leaves
+                //    no memory-trace footprint (consumed on the fly).
                 let gl = LayerId(t.layer_off + cn.layer.0);
                 let mut weights_ready = 0u64;
-                let wbytes = layer.weight_bytes();
                 let mut rekey = None;
-                if wbytes > 0 {
-                    let fetch = weights[core_id.0].require_evicting(gl, wbytes, &mut evicted);
-                    if fetch > 0 {
-                        let route = topo.dram_load_route(core_id);
-                        let (ds, de) = links.transfer(route, lane.release, fetch);
-                        drams.push(DramEvent {
-                            core: core_id,
-                            start: ds,
-                            end: de,
-                            bytes: fetch,
-                            kind: DramKind::WeightFetch,
-                            links: route.into(),
-                        });
-                        if self.tag_events {
-                            dram_req.push(ri);
+                let fetch = if layer.streams_b_from_dram() {
+                    layer.matmul_b_bytes()
+                } else {
+                    let wbytes = layer.weight_bytes();
+                    if wbytes > 0 {
+                        let f = weights[core_id.0].require_evicting(gl, wbytes, &mut evicted);
+                        if f > 0 {
+                            // residency on this core changed for EVERY
+                            // lane watching it; re-keyed after this
+                            // lane's borrow is released
+                            rekey = Some((core_id.0, gl));
                         }
-                        breakdown.dram_pj +=
-                            fetch as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
-                        breakdown.noc_pj +=
-                            fetch as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
-                        if let CoreKind::Aimc { weight_load_pj, .. } = core.kind {
-                            breakdown.onchip_pj += fetch as f64 * 8.0 * weight_load_pj;
-                        }
-                        weights_ready = de;
-                        // residency on this core changed for EVERY lane
-                        // watching it; re-keyed after this lane's borrow
-                        // is released
-                        rekey = Some((core_id.0, gl));
+                        f
+                    } else {
+                        0
                     }
+                };
+                if fetch > 0 {
+                    let route = topo.dram_load_route(core_id);
+                    let (ds, de) = links.transfer(route, lane.release, fetch);
+                    drams.push(DramEvent {
+                        core: core_id,
+                        start: ds,
+                        end: de,
+                        bytes: fetch,
+                        kind: DramKind::WeightFetch,
+                        links: route.into(),
+                    });
+                    if self.tag_events {
+                        dram_req.push(ri);
+                    }
+                    breakdown.dram_pj +=
+                        fetch as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
+                    breakdown.noc_pj +=
+                        fetch as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
+                    if let CoreKind::Aimc { weight_load_pj, .. } = core.kind {
+                        // an analog array must (re)program the operand
+                        // before it can multiply by it
+                        breakdown.onchip_pj += fetch as f64 * 8.0 * weight_load_pj;
+                    }
+                    weights_ready = de;
                 }
 
                 // 3) first-layer input activations come from DRAM
@@ -454,11 +472,19 @@ impl SimContext<'_> {
                     trace.push(end, core_id, -(cn.discard_input_bytes as f64));
                     act_occ = (act_occ - cn.discard_input_bytes as f64).max(0.0);
                 } else {
-                    for &p in &layer.predecessors {
+                    for (pi, &p) in layer.predecessors.iter().enumerate() {
                         let share = match layer.op {
                             OpType::Concat => {
                                 cn.discard_input_bytes as f64 * s.workload.layer(p).k as f64
                                     / layer.c as f64
+                            }
+                            // MatMul operand B: streamed in once for
+                            // the whole layer (its bytes ride the first
+                            // CN's edges), held while the layer runs,
+                            // and released evenly across the CNs
+                            OpType::MatMul if pi > 0 => {
+                                s.workload.layer(p).output_bytes() as f64
+                                    / s.graph.cns.layer_cns(cn.layer).len() as f64
                             }
                             _ => cn.discard_input_bytes as f64,
                         };

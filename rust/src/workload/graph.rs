@@ -154,14 +154,40 @@ impl WorkloadGraph {
                         });
                     }
                 }
-                OpType::Add => {
-                    // all addends must share K == layer C == layer K
+                OpType::Add | OpType::LayerNorm | OpType::Softmax | OpType::Gelu => {
+                    // elementwise over the token tensor: every
+                    // predecessor must share K == layer C == layer K
                     for &p in &l.predecessors {
                         if self.layer(p).k != l.k {
                             return Err(GraphError::ChannelMismatch {
                                 layer: l.id,
                                 expect: l.k,
                                 got: self.layer(p).k,
+                            });
+                        }
+                    }
+                }
+                OpType::MatMul => {
+                    // operand A (first pred) is the token tensor: its K
+                    // must equal the reduction dim C; operand B (second
+                    // pred, when in-graph) must carry the full [C, K]
+                    // matrix, i.e. C*K elements.
+                    let a = self.layer(l.predecessors[0]);
+                    if l.c != a.k {
+                        return Err(GraphError::ChannelMismatch {
+                            layer: l.id,
+                            expect: a.k,
+                            got: l.c,
+                        });
+                    }
+                    if let Some(&bp) = l.predecessors.get(1) {
+                        let b = self.layer(bp);
+                        let b_elems = b.k * b.oy * b.ox;
+                        if b_elems != l.c * l.k {
+                            return Err(GraphError::ChannelMismatch {
+                                layer: l.id,
+                                expect: l.c * l.k,
+                                got: b_elems,
                             });
                         }
                     }
@@ -204,9 +230,13 @@ impl WorkloadGraph {
                 OpType::Conv => "conv",
                 OpType::DwConv => "dwconv",
                 OpType::Fc => "fc",
+                OpType::MatMul => "matmul",
                 OpType::Pool(_) => "pool",
                 OpType::Add => "add",
                 OpType::Concat => "concat",
+                OpType::LayerNorm => "layernorm",
+                OpType::Softmax => "softmax",
+                OpType::Gelu => "gelu",
             };
             *m.entry(key).or_insert(0) += 1;
         }
@@ -274,6 +304,65 @@ mod tests {
         assert_eq!(c["conv"], 1);
         assert_eq!(c["pool"], 1);
         assert_eq!(c["fc"], 1);
+    }
+
+    #[test]
+    fn matmul_channel_rules() {
+        // q[K=8, 4 tokens] and k[K=8, 4 tokens] -> scores[K=4, 4 rows]
+        let q = LayerBuilder::new("q", OpType::Conv).k(8).c(8).spatial(4, 1).build();
+        let k = LayerBuilder::new("k", OpType::Conv).k(8).c(8).spatial(4, 1).build();
+        let ok = LayerBuilder::new("scores", OpType::MatMul)
+            .k(4)
+            .c(8)
+            .spatial(4, 1)
+            .preds(&[LayerId(0), LayerId(1)])
+            .build();
+        // need a source for q/k channels: give them no preds (sources)
+        let g = WorkloadGraph::new("mm", vec![q.clone(), k.clone(), ok]).unwrap();
+        g.validate_channels().unwrap();
+
+        // wrong reduction dim: C != A.k
+        let bad_a = LayerBuilder::new("scores", OpType::MatMul)
+            .k(4)
+            .c(7)
+            .spatial(4, 1)
+            .preds(&[LayerId(0), LayerId(1)])
+            .build();
+        let g = WorkloadGraph::new("mm", vec![q.clone(), k.clone(), bad_a]).unwrap();
+        assert!(g.validate_channels().is_err());
+
+        // B operand element count must be C*K
+        let bad_b = LayerBuilder::new("scores", OpType::MatMul)
+            .k(5)
+            .c(8)
+            .spatial(4, 1)
+            .preds(&[LayerId(0), LayerId(1)])
+            .build();
+        let g = WorkloadGraph::new("mm", vec![q, k, bad_b]).unwrap();
+        assert!(g.validate_channels().is_err());
+    }
+
+    #[test]
+    fn elementwise_transformer_ops_validate_like_add() {
+        let x = LayerBuilder::new("x", OpType::Conv).k(8).c(3).spatial(4, 1).build();
+        let ln = LayerBuilder::new("ln", OpType::LayerNorm)
+            .k(8)
+            .c(8)
+            .spatial(4, 1)
+            .preds(&[LayerId(0)])
+            .build();
+        let g = WorkloadGraph::new("t", vec![x.clone(), ln]).unwrap();
+        g.validate_channels().unwrap();
+        assert_eq!(g.op_census()["layernorm"], 1);
+
+        let bad = LayerBuilder::new("sm", OpType::Softmax)
+            .k(9)
+            .c(9)
+            .spatial(4, 1)
+            .preds(&[LayerId(0)])
+            .build();
+        let g = WorkloadGraph::new("t", vec![x, bad]).unwrap();
+        assert!(g.validate_channels().is_err());
     }
 
     #[test]

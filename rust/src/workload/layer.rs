@@ -34,8 +34,15 @@ pub enum PoolKind {
     Average,
 }
 
-/// Operator type. Dense types (`Conv`, `DwConv`, `Fc`) run on dataflow
-/// cores; `Pool`/`Add`/`Concat` run on the SIMD core (paper Section V-B).
+/// Operator type. Dense types (`Conv`, `DwConv`, `Fc`, `MatMul`) run on
+/// dataflow cores; `Pool`/`Add`/`Concat`/`LayerNorm`/`Softmax`/`Gelu`
+/// run on the SIMD core (paper Section V-B).
+///
+/// Transformer layers use the token-tensor convention: a sequence of
+/// `s` tokens with embedding dimension `d` is the activation tensor
+/// `(K = d, OY = s, OX = 1)` — one output *row* per token, so the
+/// sequence dimension carries the spatial locality that line-granular
+/// CN splitting (and thus layer fusion) exploits.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OpType {
     /// Standard convolution (K, C, OY, OX, FY, FX all meaningful).
@@ -45,24 +52,44 @@ pub enum OpType {
     /// Fully connected / matrix-vector: no spatial locality, so the
     /// layer collapses into a single CN (paper Step 1, topology rule).
     Fc,
+    /// Dynamic matrix-matrix multiply `A[OY, C] x B[C, K] -> O[OY, K]`
+    /// (attention score / attention-value GEMMs): **both** operands are
+    /// activations, so the layer has *zero resident weights*.  Operand
+    /// A is the ordinary (first) data predecessor; operand B is the
+    /// second predecessor when present, and otherwise streams from DRAM
+    /// per CN (an LLM-decode KV-cache read).  Unlike `Fc`, every output
+    /// row only needs the matching A row, so MatMul keeps sequence-dim
+    /// (OY) spatial locality and splits into fine-grain CNs.
+    MatMul,
     /// Spatial pooling window.
     Pool(PoolKind),
     /// Elementwise residual addition.
     Add,
     /// Channel concatenation (SqueezeNet / Tiny-YOLO style).
     Concat,
+    /// Per-token normalization over the embedding (K) dimension —
+    /// two SIMD passes (statistics + normalize) per element.
+    LayerNorm,
+    /// Per-row softmax over the score (K) dimension — two SIMD passes
+    /// (max/sum + exp/scale) per element.
+    Softmax,
+    /// Elementwise GELU activation.
+    Gelu,
 }
 
 impl OpType {
     /// Does this op run on a dense dataflow core (true) or on the
     /// auxiliary SIMD core (false)?
     pub fn is_dense(&self) -> bool {
-        matches!(self, OpType::Conv | OpType::DwConv | OpType::Fc)
+        matches!(self, OpType::Conv | OpType::DwConv | OpType::Fc | OpType::MatMul)
     }
 
     /// Does the operator have spatial locality in OY (and can therefore
     /// be split into line-granular CNs)?  FC does not — its CN must
     /// encapsulate every loop (paper's "layer topology awareness").
+    /// MatMul *does*: each output row depends only on its own A row
+    /// (plus the shared B operand), so attention stacks fuse per token
+    /// block.
     pub fn has_spatial_locality(&self) -> bool {
         !matches!(self, OpType::Fc)
     }
@@ -101,7 +128,13 @@ impl Layer {
     /// `(oy-1) * stride + fy`.
     pub fn in_height(&self) -> usize {
         match self.op {
-            OpType::Add | OpType::Concat | OpType::Fc => self.oy,
+            OpType::Add
+            | OpType::Concat
+            | OpType::Fc
+            | OpType::MatMul
+            | OpType::LayerNorm
+            | OpType::Softmax
+            | OpType::Gelu => self.oy,
             _ if self.pad > 0 => self.oy * self.stride,
             _ => (self.oy - 1) * self.stride + self.fy,
         }
@@ -110,7 +143,13 @@ impl Layer {
     /// Input feature-map width (same derivation as [`Self::in_height`]).
     pub fn in_width(&self) -> usize {
         match self.op {
-            OpType::Add | OpType::Concat | OpType::Fc => self.ox,
+            OpType::Add
+            | OpType::Concat
+            | OpType::Fc
+            | OpType::MatMul
+            | OpType::LayerNorm
+            | OpType::Softmax
+            | OpType::Gelu => self.ox,
             _ if self.pad > 0 => self.ox * self.stride,
             _ => (self.ox - 1) * self.stride + self.fx,
         }
@@ -131,11 +170,17 @@ impl Layer {
             // Depthwise: one input channel per output channel.
             OpType::DwConv => k * oy * ox * fy * fx,
             OpType::Fc => k * c,
+            // A[OY, C] x B[C, K]: one MAC per (row, out-col, reduction).
+            OpType::MatMul => k * c * oy * ox,
             // SIMD ops: one "op" per output element (no MACs, but we
             // count vector ops for the SIMD-core latency model).
             OpType::Pool(_) => k * oy * ox * fy * fx,
             OpType::Add => k * oy * ox,
             OpType::Concat => 0,
+            // Two vector passes per element: statistics (mean/var or
+            // max/sum) then normalize (scale or exp/divide).
+            OpType::LayerNorm | OpType::Softmax => 2 * k * oy * ox,
+            OpType::Gelu => k * oy * ox,
         }
     }
 
@@ -155,7 +200,9 @@ impl Layer {
         }
     }
 
-    /// Total weight footprint in bytes.
+    /// Total weight footprint in bytes.  `MatMul` has **zero** resident
+    /// weights: its B operand is a streamed activation tensor, so the
+    /// weight tracker never holds anything for it.
     pub fn weight_bytes(&self) -> u64 {
         let elems: u64 = match self.op {
             OpType::Conv => (self.k * self.c * self.fy * self.fx) as u64,
@@ -164,6 +211,21 @@ impl Layer {
             _ => 0,
         };
         elems * self.wgt_bits as u64 / 8
+    }
+
+    /// Byte footprint of a `MatMul`'s B operand (the full `[C, K]`
+    /// matrix sitting in the dataflow's weight position), at activation
+    /// precision — it is an activation tensor, not weights.
+    pub fn matmul_b_bytes(&self) -> u64 {
+        (self.k * self.c) as u64 * self.act_bits as u64 / 8
+    }
+
+    /// A `MatMul` without an in-graph B producer (fewer than two
+    /// predecessors) streams its B operand from DRAM for every CN —
+    /// the model of an LLM-decode KV-cache read.  With two
+    /// predecessors, B arrives over ordinary data edges instead.
+    pub fn streams_b_from_dram(&self) -> bool {
+        self.op == OpType::MatMul && self.predecessors.len() < 2
     }
 
     /// Total output activation footprint in bytes.
@@ -331,6 +393,13 @@ mod tests {
     }
 
     #[test]
+    fn matmul_keeps_sequence_locality() {
+        // attention GEMMs split per token row, unlike FC
+        assert!(OpType::MatMul.has_spatial_locality());
+        assert!(OpType::MatMul.is_dense());
+    }
+
+    #[test]
     fn dense_classification() {
         assert!(OpType::Conv.is_dense());
         assert!(OpType::DwConv.is_dense());
@@ -338,6 +407,61 @@ mod tests {
         assert!(!OpType::Add.is_dense());
         assert!(!OpType::Pool(PoolKind::Max).is_dense());
         assert!(!OpType::Concat.is_dense());
+        assert!(!OpType::LayerNorm.is_dense());
+        assert!(!OpType::Softmax.is_dense());
+        assert!(!OpType::Gelu.is_dense());
+    }
+
+    fn scores_matmul(s: usize, d: usize) -> Layer {
+        // Q[s, d] x K^T[d, s] -> scores[s, s]
+        LayerBuilder::new("scores", OpType::MatMul)
+            .k(s)
+            .c(d)
+            .spatial(s, 1)
+            .build()
+    }
+
+    #[test]
+    fn matmul_macs_and_zero_weights() {
+        let l = scores_matmul(196, 192);
+        assert_eq!(l.macs(), 196 * 192 * 196);
+        // both operands dynamic: nothing resident in weight memory
+        assert_eq!(l.weight_bytes(), 0);
+        // B operand footprint at activation precision: C x K elements
+        assert_eq!(l.matmul_b_bytes(), 192 * 196);
+    }
+
+    #[test]
+    fn matmul_streams_b_without_second_pred() {
+        let mut l = scores_matmul(1, 64);
+        assert!(l.streams_b_from_dram(), "no preds: KV read streams");
+        l.predecessors = vec![LayerId(0)];
+        assert!(l.streams_b_from_dram(), "single pred: B still streams");
+        l.predecessors = vec![LayerId(0), LayerId(1)];
+        assert!(!l.streams_b_from_dram(), "in-graph B producer");
+    }
+
+    #[test]
+    fn matmul_geometry_is_token_rows() {
+        let l = scores_matmul(196, 192);
+        assert_eq!(l.in_height(), 196);
+        assert_eq!(l.in_width(), 1);
+        assert_eq!(l.input_bytes(), 192 * 196); // operand A only
+        assert_eq!(l.output_bytes(), 196 * 196);
+    }
+
+    #[test]
+    fn simd_transformer_op_counts() {
+        let ln = LayerBuilder::new("ln", OpType::LayerNorm).k(192).c(192).spatial(196, 1).build();
+        assert_eq!(ln.macs(), 2 * 192 * 196);
+        assert_eq!(ln.in_height(), 196);
+        let sm = LayerBuilder::new("sm", OpType::Softmax).k(196).c(196).spatial(196, 1).build();
+        assert_eq!(sm.macs(), 2 * 196 * 196);
+        let ge = LayerBuilder::new("ge", OpType::Gelu).k(768).c(768).spatial(196, 1).build();
+        assert_eq!(ge.macs(), 768 * 196);
+        for l in [&ln, &sm, &ge] {
+            assert_eq!(l.weight_bytes(), 0);
+        }
     }
 
     #[test]

@@ -3,7 +3,9 @@
 //! Exploration networks (Section V): ResNet-18, MobileNetV2, SqueezeNet,
 //! Tiny-YOLO, FSRCNN.  Validation workloads (Section IV): FSRCNN at
 //! 560x960 (DepFiN), ResNet-50 segment (Jia et al. 4x4 AiMC), ResNet-18
-//! first segment (DIANA).  Plus tiny synthetic networks for tests.
+//! first segment (DIANA).  Transformer frontier: [`vit_tiny`],
+//! [`bert_small`] and the [`llm_decode`] GPT-style decode step over
+//! the unified attention ops.  Plus tiny synthetic networks for tests.
 //!
 //! Layer dimensions follow the original papers at the canonical input
 //! resolutions (224x224 for the classification networks, 416x416 for
@@ -15,6 +17,7 @@ mod resnet;
 mod squeezenet;
 mod tiny;
 mod tinyyolo;
+mod transformer;
 
 pub use fsrcnn::fsrcnn;
 pub use mobilenetv2::mobilenetv2;
@@ -22,6 +25,7 @@ pub use resnet::{resnet18, resnet18_first_segment, resnet50_segment};
 pub use squeezenet::squeezenet;
 pub use tiny::{tiny_branchy, tiny_linear, tiny_segment};
 pub use tinyyolo::tiny_yolo;
+pub use transformer::{bert_small, llm_decode, vit_stack, vit_tiny};
 
 use super::{Layer, LayerBuilder, LayerId, OpType, PoolKind, WorkloadGraph};
 
@@ -44,6 +48,9 @@ pub fn by_name(name: &str) -> Option<WorkloadGraph> {
         "squeezenet" => Some(squeezenet()),
         "tinyyolo" | "tiny-yolo" => Some(tiny_yolo()),
         "fsrcnn" => Some(fsrcnn(560, 960)),
+        "vit-tiny" | "vit_tiny" => Some(vit_tiny()),
+        "bert-small" | "bert_small" => Some(bert_small()),
+        "llm-decode" | "llm_decode" => Some(llm_decode()),
         "resnet18-first-segment" => Some(resnet18_first_segment()),
         "resnet50-segment" => Some(resnet50_segment()),
         "tiny-linear" => Some(tiny_linear()),
@@ -59,6 +66,9 @@ pub const WORKLOAD_NAMES: &[&str] = &[
     "squeezenet",
     "tinyyolo",
     "fsrcnn",
+    "vit-tiny",
+    "bert-small",
+    "llm-decode",
     "resnet18-first-segment",
     "resnet50-segment",
     "tiny-linear",

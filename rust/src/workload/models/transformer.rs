@@ -1,0 +1,351 @@
+//! Transformer workloads: ViT-Tiny, BERT-Small and a GPT-style
+//! single-token decode step — the attention frontier of the zoo.
+//!
+//! All three use the token-tensor convention of
+//! [`OpType`](crate::workload::OpType): a sequence of `s` tokens with
+//! embedding dim `d` is the activation `(K = d, OY = s, OX = 1)`, so
+//! the sequence dimension is the spatial `OY` axis that line-granular
+//! CN splitting fuses over.  Multi-head attention is folded across
+//! heads: the per-head score GEMMs `h x (s x dh x s)` sum to exactly
+//! `s x d x s` MACs, so a single `MatMul` with `C = d` is MAC- and
+//! byte-exact for the whole head group (same for attention x V).
+//!
+//! The decode model represents its KV-cache reads as **streamed-B
+//! matmuls** (a `MatMul` with only the query operand in-graph): the
+//! `[C, K]` cache matrix streams from DRAM on every CN, and the
+//! per-step K/V projections are sink layers whose outputs store back
+//! to DRAM — the cache append.
+
+use super::*;
+
+/// 1x1 projection over token rows: `X[s, c] x W[c, k]` with resident
+/// weights, i.e. a pointwise conv on the `(K, OY=s, OX=1)` tensor.
+fn proj(name: &str, pred: LayerId, k: usize, c: usize, tokens: usize) -> Layer {
+    LayerBuilder::new(name, OpType::Conv)
+        .k(k)
+        .c(c)
+        .spatial(tokens, 1)
+        .preds(&[pred])
+        .build()
+}
+
+fn layernorm(name: &str, pred: Option<LayerId>, d: usize, tokens: usize) -> Layer {
+    let b = LayerBuilder::new(name, OpType::LayerNorm).k(d).c(d).spatial(tokens, 1);
+    match pred {
+        Some(p) => b.preds(&[p]).build(),
+        None => b.build(),
+    }
+}
+
+fn softmax(name: &str, pred: LayerId, scores_k: usize, tokens: usize) -> Layer {
+    LayerBuilder::new(name, OpType::Softmax)
+        .k(scores_k)
+        .c(scores_k)
+        .spatial(tokens, 1)
+        .preds(&[pred])
+        .build()
+}
+
+fn gelu(name: &str, pred: LayerId, d: usize, tokens: usize) -> Layer {
+    LayerBuilder::new(name, OpType::Gelu).k(d).c(d).spatial(tokens, 1).preds(&[pred]).build()
+}
+
+/// `A[tokens, c] x B[c, k]`, both operands produced in-graph.
+fn matmul2(name: &str, a: LayerId, b: LayerId, k: usize, c: usize, tokens: usize) -> Layer {
+    LayerBuilder::new(name, OpType::MatMul)
+        .k(k)
+        .c(c)
+        .spatial(tokens, 1)
+        .preds(&[a, b])
+        .build()
+}
+
+/// `A[tokens, c] x B[c, k]` with B streamed from DRAM (KV-cache read).
+fn matmul_kv(name: &str, a: LayerId, k: usize, c: usize, tokens: usize) -> Layer {
+    LayerBuilder::new(name, OpType::MatMul)
+        .k(k)
+        .c(c)
+        .spatial(tokens, 1)
+        .preds(&[a])
+        .build()
+}
+
+/// One encoder block over `tokens` rows of dim `d` with an `ff`-wide
+/// MLP.  `pre_ln` selects ViT/GPT-style pre-norm (LN before the
+/// sublayer) vs BERT-style post-norm (LN after the residual add).
+/// Returns the block's output layer id.
+fn encoder_block(
+    layers: &mut Vec<Layer>,
+    name: &str,
+    x: LayerId,
+    tokens: usize,
+    d: usize,
+    ff: usize,
+    pre_ln: bool,
+) -> LayerId {
+    fn push(l: Layer, layers: &mut Vec<Layer>) -> LayerId {
+        layers.push(l);
+        LayerId(layers.len() - 1)
+    }
+
+    // --- attention sublayer -------------------------------------------
+    let attn_in = if pre_ln {
+        push(layernorm(&format!("{name}.ln1"), Some(x), d, tokens), layers)
+    } else {
+        x
+    };
+    let q = push(proj(&format!("{name}.q"), attn_in, d, d, tokens), layers);
+    let k = push(proj(&format!("{name}.k"), attn_in, d, d, tokens), layers);
+    let v = push(proj(&format!("{name}.v"), attn_in, d, d, tokens), layers);
+    // scores[s, s] = Q[s, d] x K^T[d, s]  (all heads folded)
+    let scores = push(matmul2(&format!("{name}.scores"), q, k, tokens, d, tokens), layers);
+    let sm = push(softmax(&format!("{name}.softmax"), scores, tokens, tokens), layers);
+    // ctx[s, d] = softmax[s, s] x V[s, d]
+    let ctx = push(matmul2(&format!("{name}.attnv"), sm, v, d, tokens, tokens), layers);
+    let o = push(proj(&format!("{name}.oproj"), ctx, d, d, tokens), layers);
+    let add1 = push(add(&format!("{name}.add1"), o, x, d, tokens, 1), layers);
+    let attn_out = if pre_ln {
+        add1
+    } else {
+        push(layernorm(&format!("{name}.ln1"), Some(add1), d, tokens), layers)
+    };
+
+    // --- MLP sublayer -------------------------------------------------
+    let mlp_in = if pre_ln {
+        push(layernorm(&format!("{name}.ln2"), Some(attn_out), d, tokens), layers)
+    } else {
+        attn_out
+    };
+    let f1 = push(proj(&format!("{name}.fc1"), mlp_in, ff, d, tokens), layers);
+    let g = push(gelu(&format!("{name}.gelu"), f1, ff, tokens), layers);
+    let f2 = push(proj(&format!("{name}.fc2"), g, d, ff, tokens), layers);
+    let add2 = push(add(&format!("{name}.add2"), f2, attn_out, d, tokens, 1), layers);
+    if pre_ln {
+        add2
+    } else {
+        push(layernorm(&format!("{name}.ln2"), Some(add2), d, tokens), layers)
+    }
+}
+
+/// A bare pre-norm encoder stack over `tokens` rows of dim `d` (MLP
+/// width `ff`, `depth` blocks), fed by a source LayerNorm that streams
+/// the embedded sequence in from DRAM.  The fused-vs-layer-by-layer
+/// ablations use this at ViT-Base@384-class dims, where a single MLP
+/// activation (`tokens x ff`) overflows the exploration architectures'
+/// pooled SRAM and layer-by-layer execution must spill.
+pub fn vit_stack(name: &str, tokens: usize, d: usize, ff: usize, depth: usize) -> WorkloadGraph {
+    let mut layers = vec![layernorm("embed_ln", None, d, tokens)];
+    let mut x = LayerId(0);
+    for b in 0..depth {
+        x = encoder_block(&mut layers, &format!("blk{b}"), x, tokens, d, ff, true);
+    }
+    WorkloadGraph::new(name, layers).unwrap()
+}
+
+/// ViT-Tiny/16 at 224x224: 196 patch tokens (the class token is
+/// elided), d = 192, MLP 768, 12 pre-norm encoder blocks, mean-pool
+/// head — ~1.25 GMACs / ~5.6 M weights, matching the timm `vit_tiny`
+/// operating point.
+///
+/// The patch embedding is the 16x16/16 conv expressed directly in the
+/// unrolled token layout `(OY = 196, OX = 1)`: `in_height` is then
+/// 196 x 16 = 3136 rows of 16 pixels = exactly the 3 x 224 x 224
+/// image, and each token's CN reads its own disjoint patch rows.
+pub fn vit_tiny() -> WorkloadGraph {
+    let (tokens, d, ff, depth) = (196, 192, 768, 12);
+    let mut layers = Vec::new();
+    layers.push(
+        LayerBuilder::new("patch_embed", OpType::Conv)
+            .k(d)
+            .c(3)
+            .spatial(tokens, 1)
+            .filter(16, 16)
+            .stride(16)
+            .build(),
+    );
+    let mut x = LayerId(0);
+    for b in 0..depth {
+        x = encoder_block(&mut layers, &format!("blk{b}"), x, tokens, d, ff, true);
+    }
+    layers.push(layernorm("ln_final", Some(x), d, tokens));
+    let lnf = LayerId(layers.len() - 1);
+    // mean-pool over the token rows, then the classifier head
+    layers.push(
+        LayerBuilder::new("head_pool", OpType::Pool(PoolKind::Average))
+            .k(d)
+            .c(d)
+            .spatial(1, 1)
+            .filter(tokens, 1)
+            .preds(&[lnf])
+            .build(),
+    );
+    let p = LayerId(layers.len() - 1);
+    layers.push(fc("head", p, 1000, d));
+    WorkloadGraph::new("vit-tiny", layers).unwrap()
+}
+
+/// BERT-Small encoder (L = 4, H = 512, A = 8, FF = 2048) over a
+/// 128-token sequence, post-norm blocks — ~1.68 GMACs / ~12.6 M
+/// encoder weights.  The input embedding lookup is modeled as the
+/// source `embed_ln` layer: the embedded sequence streams in from DRAM
+/// and is normalized (BERT's post-embedding LayerNorm).
+pub fn bert_small() -> WorkloadGraph {
+    let (tokens, d, ff, depth) = (128, 512, 2048, 4);
+    let mut layers = vec![layernorm("embed_ln", None, d, tokens)];
+    let mut x = LayerId(0);
+    for b in 0..depth {
+        x = encoder_block(&mut layers, &format!("blk{b}"), x, tokens, d, ff, false);
+    }
+    WorkloadGraph::new("bert-small", layers).unwrap()
+}
+
+/// GPT-style single-token decode step: 6 pre-norm blocks at d = 512,
+/// FF = 2048, attending over a 256-token KV cache, with a 32000-way LM
+/// head — ~37 MMACs against ~35 MB of streamed weights + cache, the
+/// memory-bound regime that makes decode serving an interconnect/DRAM
+/// problem rather than a compute problem.
+///
+/// Cache reads are streamed-B matmuls (`scores` and `attnv` carry only
+/// their query-side predecessor; the `[C, K]` cache matrix streams
+/// from DRAM each step).  The per-step `k_new` / `v_new` projections
+/// are sinks: their outputs store straight back to DRAM — the cache
+/// append.
+pub fn llm_decode() -> WorkloadGraph {
+    let (d, ff, depth, context, vocab) = (512, 2048, 6, 256, 32000);
+    let mut layers = vec![layernorm("embed", None, d, 1)];
+    let mut x = LayerId(0);
+    for b in 0..depth {
+        let n = format!("blk{b}");
+        layers.push(layernorm(&format!("{n}.ln1"), Some(x), d, 1));
+        let ln1 = LayerId(layers.len() - 1);
+        layers.push(proj(&format!("{n}.q"), ln1, d, d, 1));
+        let q = LayerId(layers.len() - 1);
+        // cache-append projections: sinks, stored to DRAM
+        layers.push(proj(&format!("{n}.k_new"), ln1, d, d, 1));
+        layers.push(proj(&format!("{n}.v_new"), ln1, d, d, 1));
+        // scores[1, context] = q[1, d] x Kcache^T[d, context] (streamed)
+        layers.push(matmul_kv(&format!("{n}.scores"), q, context, d, 1));
+        let sc = LayerId(layers.len() - 1);
+        layers.push(softmax(&format!("{n}.softmax"), sc, context, 1));
+        let sm = LayerId(layers.len() - 1);
+        // ctx[1, d] = softmax[1, context] x Vcache[context, d] (streamed)
+        layers.push(matmul_kv(&format!("{n}.attnv"), sm, d, context, 1));
+        let ctx = LayerId(layers.len() - 1);
+        layers.push(proj(&format!("{n}.oproj"), ctx, d, d, 1));
+        let o = LayerId(layers.len() - 1);
+        layers.push(add(&format!("{n}.add1"), o, x, d, 1, 1));
+        let add1 = LayerId(layers.len() - 1);
+        layers.push(layernorm(&format!("{n}.ln2"), Some(add1), d, 1));
+        let ln2 = LayerId(layers.len() - 1);
+        layers.push(proj(&format!("{n}.fc1"), ln2, ff, d, 1));
+        let f1 = LayerId(layers.len() - 1);
+        layers.push(gelu(&format!("{n}.gelu"), f1, ff, 1));
+        let g = LayerId(layers.len() - 1);
+        layers.push(proj(&format!("{n}.fc2"), g, d, ff, 1));
+        let f2 = LayerId(layers.len() - 1);
+        layers.push(add(&format!("{n}.add2"), f2, add1, d, 1, 1));
+        x = LayerId(layers.len() - 1);
+    }
+    layers.push(layernorm("ln_final", Some(x), d, 1));
+    let lnf = LayerId(layers.len() - 1);
+    layers.push(fc("lm_head", lnf, vocab, d));
+    WorkloadGraph::new("llm-decode", layers).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::OpType;
+
+    #[test]
+    fn all_transformers_validate() {
+        for g in [vit_tiny(), bert_small(), llm_decode()] {
+            g.validate_channels().unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        }
+    }
+
+    #[test]
+    fn vit_tiny_shape() {
+        let g = vit_tiny();
+        // 1 patch + 12 x 14 block layers + final ln + pool + head
+        assert_eq!(g.len(), 1 + 12 * 14 + 3);
+        let c = g.op_census();
+        assert_eq!(c["matmul"], 24);
+        assert_eq!(c["softmax"], 12);
+        assert_eq!(c["layernorm"], 25);
+        assert_eq!(c["gelu"], 12);
+        assert_eq!(c["conv"], 73);
+        // patch embedding reads exactly the 3 x 224 x 224 image
+        let pe = g.layer(LayerId(0));
+        assert_eq!(pe.input_bytes(), 3 * 224 * 224);
+        // ~1.25 GMACs, like timm's vit_tiny_patch16_224
+        let m = g.total_macs();
+        assert!(m > 1_150_000_000 && m < 1_350_000_000, "{m}");
+    }
+
+    #[test]
+    fn bert_small_shape() {
+        let g = bert_small();
+        assert_eq!(g.len(), 1 + 4 * 14);
+        let c = g.op_census();
+        assert_eq!(c["matmul"], 8);
+        assert_eq!(c["layernorm"], 9);
+        // ~1.68 GMACs at seq 128
+        let m = g.total_macs();
+        assert!(m > 1_500_000_000 && m < 1_850_000_000, "{m}");
+        // encoder weights ~12.6 MB at int8
+        let w = g.total_weight_bytes();
+        assert!(w > 12_000_000 && w < 13_000_000, "{w}");
+    }
+
+    #[test]
+    fn llm_decode_streams_kv_and_appends_cache() {
+        let g = llm_decode();
+        assert_eq!(g.len(), 1 + 6 * 14 + 2);
+        let mut kv_reads = 0;
+        let mut cache_appends = 0;
+        for l in g.layers() {
+            if l.op == OpType::MatMul {
+                assert!(l.streams_b_from_dram(), "{}: decode matmuls stream B", l.name);
+                assert_eq!(l.oy, 1, "single-token step");
+                kv_reads += 1;
+            }
+            if l.name.ends_with("k_new") || l.name.ends_with("v_new") {
+                assert!(g.successors(l.id).is_empty(), "{}: cache append is a sink", l.name);
+            }
+            if g.successors(l.id).is_empty() && l.op == OpType::Conv {
+                cache_appends += 1;
+            }
+        }
+        assert_eq!(kv_reads, 12);
+        assert_eq!(cache_appends, 12);
+        // memory-bound: streamed bytes (weights + KV) dwarf the MACs
+        let streamed: u64 = g.total_weight_bytes()
+            + g.layers()
+                .iter()
+                .filter(|l| l.streams_b_from_dram())
+                .map(|l| l.matmul_b_bytes())
+                .sum::<u64>();
+        assert!(streamed as f64 > 0.9 * g.total_macs() as f64, "decode must be memory-bound");
+    }
+
+    #[test]
+    fn encoder_attention_wiring() {
+        let g = vit_tiny();
+        // every scores matmul has [q, k] preds and every attnv
+        // [softmax, v]; B operands are in-graph (not streamed)
+        for l in g.layers() {
+            if l.op == OpType::MatMul {
+                assert_eq!(l.predecessors.len(), 2, "{}", l.name);
+                assert!(!l.streams_b_from_dram());
+                if l.name.ends_with("scores") {
+                    assert_eq!(l.k, 196);
+                    assert_eq!(l.c, 192);
+                } else {
+                    assert_eq!(l.k, 192);
+                    assert_eq!(l.c, 196);
+                }
+            }
+        }
+    }
+}

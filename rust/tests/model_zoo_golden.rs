@@ -1,0 +1,224 @@
+//! Golden-model snapshot tests: every workload in the zoo is pinned on
+//! `op_census()`, `total_macs()` and `total_weight_bytes()`, so any
+//! silent layer-shape drift (a changed stride, a dropped block, a
+//! miscounted head) fails loudly instead of quietly skewing every
+//! downstream schedule/energy number.
+//!
+//! The transformer pins are cross-checked against hand-computed GEMM
+//! counts in the comments; the CNN pins were frozen from the builders
+//! (and sanity-checked against the published MAC counts the in-tree
+//! ballpark tests already assert).
+
+use std::collections::HashMap;
+
+use stream::workload::models;
+
+struct Golden {
+    name: &'static str,
+    layers: usize,
+    macs: u64,
+    weight_bytes: u64,
+    census: &'static [(&'static str, usize)],
+}
+
+const GOLDEN: &[Golden] = &[
+    Golden {
+        name: "resnet18",
+        layers: 31,
+        macs: 1_814_073_344,
+        weight_bytes: 11_678_912,
+        census: &[("add", 8), ("conv", 20), ("fc", 1), ("pool", 2)],
+    },
+    Golden {
+        name: "mobilenetv2",
+        layers: 64,
+        macs: 300_774_272,
+        weight_bytes: 3_469_760,
+        census: &[("add", 10), ("conv", 35), ("dwconv", 17), ("fc", 1), ("pool", 1)],
+    },
+    Golden {
+        name: "squeezenet",
+        layers: 38,
+        macs: 818_924_576,
+        weight_bytes: 1_244_448,
+        census: &[("concat", 8), ("conv", 26), ("pool", 4)],
+    },
+    Golden {
+        name: "tinyyolo",
+        layers: 16,
+        macs: 2_134_732_288,
+        weight_bytes: 7_862_704,
+        census: &[("conv", 10), ("pool", 6)],
+    },
+    Golden {
+        name: "fsrcnn",
+        layers: 8,
+        macs: 14_016_307_200,
+        weight_bytes: 26_072,
+        census: &[("conv", 8)],
+    },
+    // ViT-Tiny/16 @ 224 (196 tokens, d=192, ff=768, 12 blocks):
+    //   patch embed      192*3*256 * 196            =    28,901,376
+    //   q/k/v/oproj      4 * 192*192 * 196          =    28,901,376 /blk
+    //   fc1+fc2          2 * 192*768 * 196          =    57,802,752 /blk
+    //   scores + attnv   2 * 196*192 * 196          =    14,751,744 /blk
+    //   head             1000*192                   =       192,000
+    //   total = 28,901,376 + 12*101,455,872 + 192,000 = 1,246,563,840
+    // weights: 147,456 + 12*(4*36,864 + 2*147,456) + 192,000 = 5,647,872
+    Golden {
+        name: "vit-tiny",
+        layers: 172,
+        macs: 1_246_563_840,
+        weight_bytes: 5_647_872,
+        census: &[
+            ("add", 24),
+            ("conv", 73),
+            ("fc", 1),
+            ("gelu", 12),
+            ("layernorm", 25),
+            ("matmul", 24),
+            ("pool", 1),
+            ("softmax", 12),
+        ],
+    },
+    // BERT-Small (128 tokens, d=512, ff=2048, 4 blocks):
+    //   q/k/v/oproj      4 * 512*512 * 128          =   134,217,728 /blk
+    //   fc1+fc2          2 * 512*2048 * 128         =   268,435,456 /blk
+    //   scores + attnv   2 * 128*512 * 128          =    16,777,216 /blk
+    //   total = 4 * 419,430,400 = 1,677,721,600
+    // weights: 4 * (4*262,144 + 2*1,048,576) = 12,582,912
+    Golden {
+        name: "bert-small",
+        layers: 57,
+        macs: 1_677_721_600,
+        weight_bytes: 12_582_912,
+        census: &[
+            ("add", 8),
+            ("conv", 24),
+            ("gelu", 4),
+            ("layernorm", 9),
+            ("matmul", 8),
+            ("softmax", 4),
+        ],
+    },
+    // GPT-style decode step (1 token, d=512, ff=2048, 6 blocks,
+    // context 256, vocab 32,000):
+    //   q/k_new/v_new/oproj  4 * 512*512             =  1,048,576 /blk
+    //   fc1+fc2              2 * 512*2048            =  2,097,152 /blk
+    //   scores + attnv       2 * 256*512             =    262,144 /blk
+    //   lm head              32,000*512              = 16,384,000
+    //   total = 6*3,407,872 + 16,384,000 = 36,831,232
+    // weights: 6*3,145,728 + 16,384,000 = 35,258,368 — every weight
+    // byte is used exactly once per step, the memory-bound signature
+    // of decode (arithmetic intensity ~1).
+    Golden {
+        name: "llm-decode",
+        layers: 87,
+        macs: 36_831_232,
+        weight_bytes: 35_258_368,
+        census: &[
+            ("add", 12),
+            ("conv", 36),
+            ("fc", 1),
+            ("gelu", 6),
+            ("layernorm", 14),
+            ("matmul", 12),
+            ("softmax", 6),
+        ],
+    },
+    Golden {
+        name: "resnet18-first-segment",
+        layers: 5,
+        macs: 349_224_960,
+        weight_bytes: 83_136,
+        census: &[("add", 1), ("conv", 3), ("pool", 1)],
+    },
+    Golden {
+        name: "resnet50-segment",
+        layers: 9,
+        macs: 539_492_352,
+        weight_bytes: 688_128,
+        census: &[("add", 2), ("conv", 7)],
+    },
+    Golden {
+        name: "tiny-linear",
+        layers: 4,
+        macs: 360_448,
+        weight_bytes: 11_608,
+        census: &[("conv", 2), ("fc", 1), ("pool", 1)],
+    },
+    Golden {
+        name: "tiny-branchy",
+        layers: 5,
+        macs: 292_864,
+        weight_bytes: 1_144,
+        census: &[("add", 1), ("conv", 4)],
+    },
+    Golden {
+        name: "tiny-segment",
+        layers: 5,
+        macs: 87_306_240,
+        weight_bytes: 83_136,
+        census: &[("add", 1), ("conv", 3), ("pool", 1)],
+    },
+];
+
+#[test]
+fn golden_covers_the_whole_zoo() {
+    let pinned: Vec<&str> = GOLDEN.iter().map(|g| g.name).collect();
+    for name in models::WORKLOAD_NAMES {
+        assert!(pinned.contains(name), "{name} is in the zoo but has no golden pin");
+    }
+    assert_eq!(
+        pinned.len(),
+        models::WORKLOAD_NAMES.len(),
+        "stale golden entry for a model no longer in the zoo"
+    );
+}
+
+#[test]
+fn golden_layer_counts() {
+    for g in GOLDEN {
+        let w = models::by_name(g.name).unwrap();
+        assert_eq!(w.len(), g.layers, "{}: layer count drifted", g.name);
+    }
+}
+
+#[test]
+fn golden_op_census() {
+    for g in GOLDEN {
+        let w = models::by_name(g.name).unwrap();
+        let got = w.op_census();
+        let want: HashMap<&str, usize> = g.census.iter().copied().collect();
+        assert_eq!(got, want, "{}: op census drifted", g.name);
+    }
+}
+
+#[test]
+fn golden_total_macs() {
+    for g in GOLDEN {
+        let w = models::by_name(g.name).unwrap();
+        assert_eq!(w.total_macs(), g.macs, "{}: total MACs drifted", g.name);
+    }
+}
+
+#[test]
+fn golden_total_weight_bytes() {
+    for g in GOLDEN {
+        let w = models::by_name(g.name).unwrap();
+        assert_eq!(
+            w.total_weight_bytes(),
+            g.weight_bytes,
+            "{}: weight footprint drifted",
+            g.name
+        );
+    }
+}
+
+#[test]
+fn golden_models_validate() {
+    for g in GOLDEN {
+        let w = models::by_name(g.name).unwrap();
+        w.validate_channels().unwrap_or_else(|e| panic!("{}: {e}", g.name));
+    }
+}

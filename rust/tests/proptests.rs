@@ -16,6 +16,7 @@ use stream::depgraph::{edge_set, generate, generate_pairwise};
 use stream::mapping::CostModel;
 use stream::scheduler::{schedule, SchedulePriority};
 use stream::util::XorShift64;
+use stream::workload::models;
 use stream::workload::{LayerBuilder, LayerId, OpType, PoolKind, WorkloadGraph};
 
 /// Random layer chain with consistent channels/spatial dims, with
@@ -124,6 +125,18 @@ fn random_workload(rng: &mut XorShift64) -> WorkloadGraph {
     }
     let g = WorkloadGraph::new("random", layers).expect("valid random workload");
     g.validate_channels().expect("channels consistent");
+    g
+}
+
+/// Random pre-norm encoder stack over the new transformer ops
+/// (matmul / layernorm / softmax / gelu), small enough to fuzz.
+fn random_transformer(rng: &mut XorShift64) -> WorkloadGraph {
+    let tokens = 8 + 4 * rng.below(6) as usize; // 8..28
+    let d = 8 * (1 + rng.below(4) as usize); // 8..32
+    let ff = d * (1 + rng.below(3) as usize);
+    let depth = 1 + rng.below(2) as usize;
+    let g = models::vit_stack("random-transformer", tokens, d, ff, depth);
+    g.validate_channels().expect("transformer stack channels consistent");
     g
 }
 
@@ -243,6 +256,128 @@ fn prop_schedule_invariants() {
         let max_out =
             g.cns.nodes.iter().map(|c| c.output_bytes).max().unwrap_or(0) as f64;
         assert!(r.peak_mem() >= max_out, "seed {seed}");
+    }
+}
+
+/// Zoo-wide structural invariants: every model (CNNs and the new
+/// transformers) passes channel validation, and `topo_order` is a
+/// permutation of the layer ids consistent with `predecessors`.
+#[test]
+fn prop_zoo_validates_and_topo_order_is_consistent_permutation() {
+    for name in models::WORKLOAD_NAMES {
+        let w = models::by_name(name).unwrap();
+        w.validate_channels().unwrap_or_else(|e| panic!("{name}: {e}"));
+
+        let topo = w.topo_order();
+        assert_eq!(topo.len(), w.len(), "{name}");
+        let mut sorted: Vec<usize> = topo.iter().map(|l| l.0).collect();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..w.len()).collect::<Vec<_>>(), "{name}: not a permutation");
+
+        let pos: std::collections::HashMap<usize, usize> =
+            topo.iter().enumerate().map(|(i, l)| (l.0, i)).collect();
+        for l in w.layers() {
+            for p in w.predecessors(l.id) {
+                assert!(
+                    pos[&p.0] < pos[&l.id.0],
+                    "{name}: {p} must precede {} in topo order",
+                    l.id
+                );
+            }
+        }
+    }
+}
+
+/// Every MatMul CN split preserves the layer's total MACs, at every
+/// granularity, for random GEMM shapes — and splits into
+/// ceil(OY / lines) CNs (sequence locality, unlike FC).
+#[test]
+fn prop_matmul_cn_split_preserves_macs() {
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(7000 + seed);
+        let k = 1 + rng.below(300) as usize;
+        let c = 1 + rng.below(300) as usize;
+        let oy = 1 + rng.below(200) as usize;
+        let mut l = LayerBuilder::new("mm", OpType::MatMul).k(k).c(c).spatial(oy, 1).build();
+        l.id = LayerId(0);
+        for gran in [
+            CnGranularity::LayerByLayer,
+            CnGranularity::Lines(1),
+            CnGranularity::Lines(1 + rng.below(16) as usize),
+        ] {
+            let cns = stream::cn::split_layer(&l, gran);
+            let expect_n = match gran {
+                CnGranularity::LayerByLayer => 1,
+                CnGranularity::Lines(lines) => oy.div_ceil(lines.min(oy).max(1)),
+            };
+            assert_eq!(cns.len(), expect_n, "seed {seed} {gran:?}");
+            let total: u64 = cns.iter().map(|cn| cn.macs).sum();
+            assert_eq!(total, l.macs(), "seed {seed} {gran:?}: MACs not conserved");
+            let outs: u64 = cns.iter().map(|cn| cn.final_output_bytes).sum();
+            assert_eq!(outs, l.output_bytes(), "seed {seed}");
+        }
+    }
+}
+
+/// The R-tree dependency generator must agree with the pairwise oracle
+/// on transformer graphs too — in particular on the MatMul-B
+/// full-broadcast arm.
+#[test]
+fn prop_transformer_rtree_equals_pairwise() {
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(8000 + seed);
+        let w = random_transformer(&mut rng);
+        let gran = random_granularity(&mut rng);
+        let a = generate(&w, CnSet::build(&w, gran));
+        let b = generate_pairwise(&w, CnSet::build(&w, gran));
+        assert_eq!(edge_set(&a), edge_set(&b), "seed {seed}, gran {gran:?}");
+        assert!(a.check_acyclic(), "seed {seed}");
+    }
+}
+
+/// Full schedule invariants over random transformer stacks and random
+/// allocations: completeness, dependency order, no double-booking and
+/// a *closed* memory trace (the MatMul B-operand accounting frees
+/// exactly what the streamed-in matrix allocated).
+#[test]
+fn prop_transformer_schedule_invariants() {
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(9000 + seed);
+        let w = random_transformer(&mut rng);
+        let arch = if rng.below(2) == 0 { presets::test_dual() } else { presets::hetero_quad() };
+        let gran = random_granularity(&mut rng);
+        let cns = CnSet::build(&w, gran);
+        let costs = CostModel::build(&w, &cns, &arch);
+        let g = generate(&w, CnSet::build(&w, gran));
+        let alloc = random_alloc(&mut rng, &w, &arch);
+        let pr = if rng.below(2) == 0 {
+            SchedulePriority::Latency
+        } else {
+            SchedulePriority::Memory
+        };
+        let r = schedule(&w, &g, &costs, &arch, &alloc, pr);
+
+        assert_eq!(r.cns.len(), g.len(), "seed {seed}");
+        let time: std::collections::HashMap<usize, (u64, u64)> =
+            r.cns.iter().map(|s| (s.cn.0, (s.start, s.end))).collect();
+        for e in &g.edges {
+            assert!(time[&e.to.0].0 >= time[&e.from.0].1, "seed {seed} edge {e:?}");
+        }
+        let mut per_core: std::collections::HashMap<usize, Vec<(u64, u64)>> = Default::default();
+        for s in &r.cns {
+            per_core.entry(s.core.0).or_default().push((s.start, s.end));
+        }
+        for (_, mut spans) in per_core {
+            spans.sort();
+            for p in spans.windows(2) {
+                assert!(p[0].1 <= p[1].0, "seed {seed}");
+            }
+        }
+        assert!(
+            r.memtrace.residual().abs() < 1.0,
+            "seed {seed}: residual {}",
+            r.memtrace.residual()
+        );
     }
 }
 

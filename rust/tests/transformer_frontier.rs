@@ -1,0 +1,270 @@
+//! The transformer workload frontier, end to end:
+//!
+//! 1. **Degenerate anchor** — a sequence-length-1 `MatMul` costs
+//!    bit-identically to the equivalent `Fc` layer through
+//!    `mapping/cost.rs` *and* a full `Scheduler::run` (on cores whose
+//!    activation and weight SRAMs are the same size and at equal
+//!    precisions), pinning the new op to the already-pinned semantics:
+//!    the streamed-B DRAM fetch takes exactly the code path, byte
+//!    count and timing a one-shot weight fetch would.
+//! 2. **End-to-end scheduling** — `vit_tiny`, `bert_small` and
+//!    `llm_decode` schedule completely on `hetero_quad@mesh`, with a
+//!    closed memory trace and per-CN streamed KV reads for decode.
+//! 3. **Fusion payoff** — a ViT-Base@384-class encoder stack scheduled
+//!    fused (line-granular) moves less DRAM traffic and peaks lower
+//!    than layer-by-layer, the Figs. 14/15 claim on the attention
+//!    frontier.
+//! 4. **Serving** — the `llm_serving` scenario co-schedules its decode
+//!    streams under every arbitration policy.
+
+use stream::arch::{presets, Accelerator, CoreId};
+use stream::cn::{CnGranularity, CnSet};
+use stream::depgraph::generate;
+use stream::mapping::CostModel;
+use stream::scenario::{self, Arbitration, ScenarioSim};
+use stream::scheduler::{schedule, DramKind, SchedulePriority};
+use stream::workload::models::{self, vit_stack};
+use stream::workload::{LayerBuilder, OpType, WorkloadGraph};
+
+fn single_layer(op: OpType, k: usize, c: usize) -> WorkloadGraph {
+    let l = LayerBuilder::new("l", op).k(k).c(c).spatial(1, 1).build();
+    WorkloadGraph::new("single", vec![l]).unwrap()
+}
+
+fn simd_round_robin(w: &WorkloadGraph, arch: &Accelerator) -> Vec<CoreId> {
+    let dense = arch.dense_cores();
+    let simd = arch.simd_core().unwrap();
+    w.layers()
+        .iter()
+        .map(|l| if l.op.is_dense() { dense[l.id.0 % dense.len()] } else { simd })
+        .collect()
+}
+
+/// Satellite: seq-1 MatMul == Fc, bit for bit, through the whole
+/// scheduler.  test_dual's dense cores have act_mem == wgt_mem
+/// (128 KB each) and the layers use equal 8-bit act/wgt precision, so
+/// the B operand's per-read energy is bitwise the weight's.
+#[test]
+fn seq1_matmul_equals_fc_through_full_schedule() {
+    let arch = presets::test_dual();
+    let w_fc = single_layer(OpType::Fc, 64, 32);
+    let w_mm = single_layer(OpType::MatMul, 64, 32);
+
+    let run = |w: &WorkloadGraph, core: CoreId, pr: SchedulePriority| {
+        let cns = CnSet::build(w, CnGranularity::Lines(1));
+        let costs = CostModel::build(w, &cns, &arch);
+        let g = generate(w, CnSet::build(w, CnGranularity::Lines(1)));
+        schedule(w, &g, &costs, &arch, &[core], pr)
+    };
+
+    for core in [CoreId(0), CoreId(1)] {
+        for pr in [SchedulePriority::Latency, SchedulePriority::Memory] {
+            let a = run(&w_fc, core, pr);
+            let b = run(&w_mm, core, pr);
+            // placements and timings
+            assert_eq!(a.cns.len(), 1);
+            assert_eq!(b.cns.len(), 1);
+            assert_eq!(
+                (a.cns[0].core, a.cns[0].start, a.cns[0].end),
+                (b.cns[0].core, b.cns[0].start, b.cns[0].end)
+            );
+            // DRAM events: one act fetch + one weight-position fetch +
+            // one store, same bytes, same cycles, same kinds
+            assert_eq!(a.drams.len(), 3);
+            assert_eq!(a.drams.len(), b.drams.len());
+            for (x, y) in a.drams.iter().zip(&b.drams) {
+                assert_eq!((x.start, x.end, x.bytes, x.kind), (y.start, y.end, y.bytes, y.kind));
+            }
+            assert!(a.comms.is_empty() && b.comms.is_empty());
+            // metrics, bitwise
+            assert_eq!(a.metrics.latency_cc, b.metrics.latency_cc);
+            assert_eq!(a.metrics.energy_pj.to_bits(), b.metrics.energy_pj.to_bits());
+            assert_eq!(
+                a.metrics.peak_mem_bytes.to_bits(),
+                b.metrics.peak_mem_bytes.to_bits()
+            );
+            assert_eq!(
+                a.metrics.breakdown.dram_pj.to_bits(),
+                b.metrics.breakdown.dram_pj.to_bits()
+            );
+            assert_eq!(
+                a.metrics.breakdown.noc_pj.to_bits(),
+                b.metrics.breakdown.noc_pj.to_bits()
+            );
+        }
+    }
+}
+
+/// Acceptance: the three transformer models schedule end-to-end on the
+/// heterogeneous quad-core with a 2-D-mesh NoC — every CN placed,
+/// every dependency respected, memory trace closed.
+#[test]
+fn transformers_schedule_on_hetero_quad_mesh() {
+    let arch = presets::by_name("hetero_quad@mesh").unwrap();
+    for name in ["vit-tiny", "bert-small", "llm-decode"] {
+        let w = models::by_name(name).unwrap();
+        w.validate_channels().unwrap();
+        let gran = CnGranularity::Lines(4).for_arch(&arch);
+        let cns = CnSet::build(&w, gran);
+        let costs = CostModel::build(&w, &cns, &arch);
+        let g = generate(&w, CnSet::build(&w, gran));
+        let alloc = simd_round_robin(&w, &arch);
+        let r = schedule(&w, &g, &costs, &arch, &alloc, SchedulePriority::Latency);
+
+        assert_eq!(r.cns.len(), g.len(), "{name}: all CNs scheduled");
+        assert!(r.latency() > 0, "{name}");
+        let time: std::collections::HashMap<usize, (u64, u64)> =
+            r.cns.iter().map(|s| (s.cn.0, (s.start, s.end))).collect();
+        for e in &g.edges {
+            assert!(time[&e.to.0].0 >= time[&e.from.0].1, "{name}: edge {e:?}");
+        }
+        assert!(
+            r.memtrace.residual().abs() < 1.0,
+            "{name}: unclosed memory trace ({})",
+            r.memtrace.residual()
+        );
+    }
+}
+
+/// The decode step's KV reads stream from DRAM on every matmul CN:
+/// 12 weight-position fetches of exactly the cache footprint, on top
+/// of the 37 one-shot weight fetches of the 36 projections + LM head.
+#[test]
+fn llm_decode_streams_kv_per_cn() {
+    let arch = presets::hetero_quad();
+    let w = models::llm_decode();
+    let gran = CnGranularity::Lines(4).for_arch(&arch);
+    let cns = CnSet::build(&w, gran);
+    let costs = CostModel::build(&w, &cns, &arch);
+    let g = generate(&w, CnSet::build(&w, gran));
+    let alloc = simd_round_robin(&w, &arch);
+    let r = schedule(&w, &g, &costs, &arch, &alloc, SchedulePriority::Latency);
+
+    let wf: Vec<_> = r.drams.iter().filter(|d| d.kind == DramKind::WeightFetch).collect();
+    // single-token step: one CN per layer, so every weighted layer
+    // fetches exactly once and every streamed-B matmul exactly once
+    assert_eq!(wf.len(), 37 + 12, "weight-position fetch count");
+    // the twelve KV reads carry the full [C, K] cache: 256*512 bytes
+    let kv: Vec<_> = wf.iter().filter(|d| d.bytes == 256 * 512).collect();
+    assert_eq!(kv.len(), 12, "per-CN streamed KV reads");
+    // decode is memory-bound: DRAM energy dominates MAC energy
+    assert!(
+        r.metrics.breakdown.dram_pj > 10.0 * r.metrics.breakdown.mac_pj,
+        "dram {} vs mac {}",
+        r.metrics.breakdown.dram_pj,
+        r.metrics.breakdown.mac_pj
+    );
+}
+
+/// Acceptance: on a ViT-Base@384-class encoder stack (tokens 384,
+/// d 768, ff 3072 — a single MLP activation is 1.18 MB against 557 KB
+/// of pooled activation SRAM), the fused line-granular schedule moves
+/// less DRAM traffic and peaks far lower than layer-by-layer.
+///
+/// The comparison runs in the **weights-resident regime** (dense
+/// weight SRAMs grown so every projection stays on-chip after its one
+/// fetch): then the weight traffic of the two schedules is identical
+/// and the DRAM delta is purely the activation-spill savings of
+/// fusion — the paper's Figs. 14/15 effect, isolated.  (In the stock
+/// 120 KB-per-core regime a fused pipeline that time-shares one core
+/// between several projections refetches their oversized weight sets
+/// per row band — the weight-locality cost of fine granularity the
+/// `ablation_granularity` bench sweeps explicitly.)
+#[test]
+fn vit_stack_fused_beats_layer_by_layer_on_dram_traffic() {
+    let mut arch = presets::hetero_quad();
+    for c in arch.cores.iter_mut().filter(|c| !c.is_simd()) {
+        // 32 MB: the whole 14.2 MB weight set stays resident, so
+        // neither schedule refetches and the DRAM delta is pure
+        // activation spill
+        c.wgt_mem_bytes = 32 * 1024 * 1024;
+    }
+    let w = vit_stack("vit-base-384-seg", 384, 768, 3072, 2);
+    w.validate_channels().unwrap();
+    let simd = arch.simd_core().unwrap();
+    // everything dense on one C|K core: isolates granularity effects
+    let alloc: Vec<CoreId> = w
+        .layers()
+        .iter()
+        .map(|l| if l.op.is_dense() { CoreId(2) } else { simd })
+        .collect();
+    let run = |gran: CnGranularity| {
+        let gran = gran.for_arch(&arch);
+        let cns = CnSet::build(&w, gran);
+        let costs = CostModel::build(&w, &cns, &arch);
+        let g = generate(&w, CnSet::build(&w, gran));
+        schedule(&w, &g, &costs, &arch, &alloc, SchedulePriority::Latency)
+    };
+    let fused = run(CnGranularity::Lines(4));
+    let lbl = run(CnGranularity::LayerByLayer);
+    assert!(
+        fused.metrics.breakdown.dram_pj < 0.9 * lbl.metrics.breakdown.dram_pj,
+        "fused DRAM {} pJ vs LbL {} pJ",
+        fused.metrics.breakdown.dram_pj,
+        lbl.metrics.breakdown.dram_pj
+    );
+    assert!(
+        fused.peak_mem() < 0.5 * lbl.peak_mem(),
+        "fused peak {} vs LbL {}",
+        fused.peak_mem(),
+        lbl.peak_mem()
+    );
+}
+
+/// Fusion depth: with line-granular CNs the attention chain overlaps —
+/// softmax rows start while the scores GEMM is still producing later
+/// rows (sequence-dim locality enables the deep fused stack).
+#[test]
+fn attention_chain_overlaps_when_fused() {
+    let arch = presets::test_dual();
+    let w = vit_stack("vit-mini-seg", 64, 32, 64, 1);
+    let simd = arch.simd_core().unwrap();
+    let alloc: Vec<CoreId> = w
+        .layers()
+        .iter()
+        .map(|l| if l.op.is_dense() { CoreId(0) } else { simd })
+        .collect();
+    let gran = CnGranularity::Lines(4).for_arch(&arch);
+    let cns = CnSet::build(&w, gran);
+    let costs = CostModel::build(&w, &cns, &arch);
+    let g = generate(&w, CnSet::build(&w, gran));
+    let r = schedule(&w, &g, &costs, &arch, &alloc, SchedulePriority::Latency);
+
+    let scores = w.layers().iter().find(|l| l.name.ends_with("scores")).unwrap().id;
+    let softmax = w.layers().iter().find(|l| l.name.ends_with("softmax")).unwrap().id;
+    let layer_of = |cn: stream::cn::CnId| g.cns.node(cn).layer;
+    let scores_end = r.cns.iter().filter(|s| layer_of(s.cn) == scores).map(|s| s.end).max();
+    let softmax_start =
+        r.cns.iter().filter(|s| layer_of(s.cn) == softmax).map(|s| s.start).min();
+    assert!(
+        softmax_start.unwrap() < scores_end.unwrap(),
+        "softmax must start before the scores layer finishes: {softmax_start:?} vs {scores_end:?}"
+    );
+}
+
+/// Acceptance: the llm_serving scenario co-schedules its two decode
+/// request streams under every arbitration policy.
+#[test]
+fn llm_serving_scenario_runs_on_hetero_quad_mesh() {
+    let arch = presets::by_name("hetero_quad@mesh").unwrap();
+    let scen = scenario::by_name("llm_serving").unwrap();
+    let sim = ScenarioSim::new(&scen, &arch).unwrap();
+    let allocs = sim.greedy_allocations();
+    for arb in [Arbitration::Fifo, Arbitration::Priority, Arbitration::Edf] {
+        let r = sim.run(&allocs, arb);
+        assert_eq!(r.outcomes.len(), 5, "{arb}: 3 interactive + 2 batch requests");
+        assert_eq!(r.tenants.len(), 2);
+        assert!(r.makespan_cc() > 0);
+        for o in &r.outcomes {
+            assert!(o.completion_cc >= o.release_cc, "{arb}: causal completion");
+            assert!(o.deadline_abs_cc.is_some());
+        }
+        for t in &r.tenants {
+            assert!(t.throughput_rps > 0.0, "{arb}: {}", t.name);
+        }
+        // KV streams appear in the co-schedule: every request carries
+        // its twelve cache reads
+        let kv = r.drams.iter().filter(|d| d.bytes == 256 * 512).count();
+        assert_eq!(kv, 12 * 5, "{arb}");
+    }
+}
