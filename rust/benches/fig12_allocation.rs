@@ -22,6 +22,8 @@ fn main() {
         ga.population, ga.generations
     );
 
+    let total = std::time::Instant::now();
+
     // serial baseline (1 fitness worker, same seed): must produce the
     // exact same rows, only slower
     let t = std::time::Instant::now();
@@ -33,22 +35,40 @@ fn main() {
     let parallel_s = t.elapsed().as_secs_f64();
     println!("{}", format_rows(&rows));
 
-    for (a, b) in serial_rows.iter().zip(&rows) {
-        assert_eq!(
-            (a.latency_cc, a.peak_mem_kb.to_bits()),
-            (b.latency_cc, b.peak_mem_kb.to_bits()),
-            "serial and parallel rows must be bit-identical ({} {} {})",
-            a.arch,
-            a.method,
-            a.priority,
-        );
-    }
+    let assert_same = |other: &[stream::experiments::Fig12Row], label: &str| {
+        for (a, b) in other.iter().zip(&rows) {
+            assert_eq!(
+                (a.latency_cc, a.peak_mem_kb.to_bits()),
+                (b.latency_cc, b.peak_mem_kb.to_bits()),
+                "{label} rows must be bit-identical ({} {} {})",
+                a.arch,
+                a.method,
+                a.priority,
+            );
+        }
+    };
+    assert_same(&serial_rows, "serial and parallel");
     println!(
         "serial {:.1} s -> parallel+memoized {:.1} s on {} threads ({:.2}x), rows bit-identical",
         serial_s,
         parallel_s,
         stream::util::thread_count(0),
         serial_s / parallel_s
+    );
+
+    // incremental delta evaluation (the GaParams default, active in
+    // both runs above) vs full per-genome re-simulation: same rows,
+    // the speedup is pure genome-evals/sec
+    let t = std::time::Instant::now();
+    let full_rows = fig12(GaParams { incremental: false, ..ga });
+    let full_s = t.elapsed().as_secs_f64();
+    assert_same(&full_rows, "full and delta-evaluated");
+    println!(
+        "full re-simulation {:.1} s -> delta evaluation {:.1} s ({:.2}x evals/sec), \
+         rows bit-identical",
+        full_s,
+        parallel_s,
+        full_s / parallel_s
     );
 
     // the paper's headline: the GA memory leader trades latency for
@@ -67,5 +87,32 @@ fn main() {
         100.0 * ga_mem.latency_cc as f64 / ga_lat.latency_cc as f64,
     );
     println!("(paper: 44% of the memory at 154% of the latency)");
-    println!("\ntotal: {:.1} s", t.elapsed().as_secs_f64());
+
+    // machine-readable summary for the committed BENCH_fig12.json
+    let mut j = std::collections::BTreeMap::new();
+    let num = stream::util::Json::Num;
+    j.insert("status".to_string(), stream::util::Json::Str("measured".to_string()));
+    j.insert("population".to_string(), num(ga.population as f64));
+    j.insert("generations".to_string(), num(ga.generations as f64));
+    j.insert("threads".to_string(), num(stream::util::thread_count(0) as f64));
+    j.insert("serial_seconds".to_string(), num(serial_s));
+    j.insert("parallel_seconds".to_string(), num(parallel_s));
+    j.insert("full_resim_seconds".to_string(), num(full_s));
+    j.insert("parallel_speedup".to_string(), num(serial_s / parallel_s));
+    j.insert("incremental_speedup".to_string(), num(full_s / parallel_s));
+    j.insert(
+        "hetero_mem_leader_memory_pct".to_string(),
+        num(100.0 * ga_mem.peak_mem_kb / ga_lat.peak_mem_kb),
+    );
+    j.insert(
+        "hetero_mem_leader_latency_pct".to_string(),
+        num(100.0 * ga_mem.latency_cc as f64 / ga_lat.latency_cc as f64),
+    );
+    let out = stream::util::Json::Obj(j).to_string_compact() + "\n";
+    match std::fs::write("BENCH_fig12.json", &out) {
+        Ok(()) => println!("wrote BENCH_fig12.json"),
+        Err(e) => println!("could not write BENCH_fig12.json: {e}"),
+    }
+
+    println!("\ntotal: {:.1} s", total.elapsed().as_secs_f64());
 }

@@ -65,7 +65,8 @@ fn main() {
         std::hint::black_box(sched.run_reference(&alloc, SchedulePriority::Latency));
     });
     println!("{s}");
-    println!("  -> heap pool speedup vs linear scan: {:.2}x\n", s.median_ms / heap_lat);
+    let linear_ms = s.median_ms;
+    println!("  -> heap pool speedup vs linear scan: {:.2}x\n", linear_ms / heap_lat);
 
     // heavyweight case: FSRCNN at line granularity (4480 CNs)
     {
@@ -127,9 +128,10 @@ fn main() {
         std::hint::black_box(run_edp(0, None));
     });
     println!("{s}");
+    let parallel_ms = s.median_ms;
     println!(
         "  -> parallel fitness speedup on {threads} threads: {:.2}x",
-        serial_ms / s.median_ms
+        serial_ms / parallel_ms
     );
 
     let cache = stream::cost::ScheduleCache::new();
@@ -145,4 +147,56 @@ fn main() {
     let serial = run_edp(1, None);
     assert_eq!(serial.to_bits(), cold.to_bits(), "serial vs parallel EDP must be bit-equal");
     println!("  -> serial / parallel / memoized EDP bit-identical OK");
+
+    // --- incremental delta evaluation vs full re-simulation ---
+    // same seed, same trajectory: the delta path replays each child
+    // genome from its parent's cached segments instead of simulating
+    // from scratch, so the distinct-genome count is identical and the
+    // speedup is pure evals/sec.
+    let run_timed = |incremental: bool, lb_prune: bool| {
+        let mut ga = Ga::new(
+            &w,
+            &arch,
+            &sched,
+            SchedulePriority::Latency,
+            Objective::Edp,
+            GaParams { incremental, lb_prune, ..ga_params },
+        );
+        let t = std::time::Instant::now();
+        let front = ga.run();
+        let secs = t.elapsed().as_secs_f64();
+        let (_, evals, _) = ga.cache().stats();
+        (front[0].metrics.edp(), secs, evals, ga.pruned_count())
+    };
+    let (edp_full, full_s, evals_full, _) = run_timed(false, false);
+    let (edp_inc, inc_s, evals_inc, _) = run_timed(true, false);
+    assert_eq!(edp_full.to_bits(), edp_inc.to_bits(), "delta evaluation must not change EDP");
+    assert_eq!(evals_full, evals_inc, "delta evaluation must not change the eval count");
+    let (eps_full, eps_inc) = (evals_full as f64 / full_s, evals_inc as f64 / inc_s);
+    println!("\nga_24pop_6gen full re-simulation: {full_s:.2} s ({eps_full:.1} evals/s)");
+    println!("ga_24pop_6gen delta evaluation:   {inc_s:.2} s ({eps_inc:.1} evals/s)");
+    println!("  -> incremental speedup: {:.2}x (bit-identical front)", full_s / inc_s);
+    let (_, prune_s, evals_prune, pruned) = run_timed(true, true);
+    println!(
+        "ga_24pop_6gen delta + lb-prune:   {prune_s:.2} s \
+         ({evals_prune} simulated, {pruned} pruned by floors)"
+    );
+
+    // machine-readable summary for the committed BENCH_hotpath.json
+    let mut j = std::collections::BTreeMap::new();
+    let num = stream::util::Json::Num;
+    j.insert("status".to_string(), stream::util::Json::Str("measured".to_string()));
+    j.insert("threads".to_string(), num(threads as f64));
+    j.insert("heap_vs_linear_speedup".to_string(), num(linear_ms / heap_lat));
+    j.insert("parallel_speedup".to_string(), num(serial_ms / parallel_ms));
+    j.insert("full_evals_per_sec".to_string(), num(eps_full));
+    j.insert("incremental_evals_per_sec".to_string(), num(eps_inc));
+    j.insert("incremental_speedup".to_string(), num(full_s / inc_s));
+    j.insert("lb_prune_seconds".to_string(), num(prune_s));
+    j.insert("lb_pruned_genomes".to_string(), num(pruned as f64));
+    let out = stream::util::Json::Obj(j).to_string_compact() + "\n";
+    match std::fs::write("BENCH_hotpath.json", &out) {
+        Ok(()) => println!("\nwrote BENCH_hotpath.json"),
+        Err(e) => println!("\ncould not write BENCH_hotpath.json: {e}"),
+    }
 }

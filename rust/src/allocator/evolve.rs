@@ -71,6 +71,25 @@ pub trait EvoProblem {
     }
     /// Objective vectors (all minimized) of `genomes`, order-preserving.
     fn evaluate(&mut self, genomes: &[Vec<u16>]) -> Vec<Vec<f64>>;
+    /// Like [`evaluate`](Self::evaluate), but with the driver's
+    /// lineage hints: `parents[i]` is the index *within this batch* of
+    /// the primary (gene-order) parent genome `i` was derived from, or
+    /// `None` for genomes with no in-batch parent (the surviving
+    /// population, seeds).  An implementation with an incremental
+    /// fitness path (the single-model GA's delta evaluation) uses the
+    /// hint to re-simulate only from where child and parent diverge;
+    /// the result must be identical to [`evaluate`](Self::evaluate) —
+    /// the hints are an optimization channel, never a semantic one.
+    /// Defaults to ignoring the hints.
+    fn evaluate_with_parents(
+        &mut self,
+        genomes: &[Vec<u16>],
+        parents: &[Option<usize>],
+    ) -> Vec<Vec<f64>> {
+        debug_assert_eq!(genomes.len(), parents.len());
+        let _ = parents;
+        self.evaluate(genomes)
+    }
     /// Scalarization used only by the patience-based early-stopping
     /// check (default: product of the objectives).
     fn scalarize(&self, point: &[f64]) -> f64 {
@@ -152,9 +171,15 @@ pub fn evolve<P: EvoProblem + ?Sized>(problem: &mut P, params: &GaParams) -> Evo
 
     for _gen in 0..params.generations {
         // --- variation: offspring from the current population ---
+        // Each offspring remembers its primary (gene-order) parent `a`;
+        // since the evaluation pool is population ++ offspring, `a`'s
+        // population index doubles as its pool index for the lineage
+        // hints handed to `evaluate_with_parents`.
         let mut offspring = Vec::with_capacity(pop_size);
+        let mut parents: Vec<Option<usize>> = vec![None; pop_size];
         for _ in 0..pop_size {
-            let a = &population[rng.below(population.len() as u64) as usize];
+            let ai = rng.below(population.len() as u64) as usize;
+            let a = &population[ai];
             let b = &population[rng.below(population.len() as u64) as usize];
             let mut child = if rng.unit() < params.crossover_p {
                 crossover(a, b, &mut rng)
@@ -165,12 +190,13 @@ pub fn evolve<P: EvoProblem + ?Sized>(problem: &mut P, params: &GaParams) -> Evo
                 mutate(&mut child, problem.n_cores(), &mut rng);
             }
             offspring.push(child);
+            parents.push(Some(ai));
         }
 
         // --- fitness over parents+children, recorded first-seen ---
         let mut pool: Vec<Vec<u16>> = population.clone();
         pool.extend(offspring);
-        let points = problem.evaluate(&pool);
+        let points = problem.evaluate_with_parents(&pool, &parents);
         debug_assert_eq!(points.len(), pool.len(), "one objective vector per genome");
         for (g, p) in pool.iter().zip(&points) {
             // check before cloning: surviving parents resurface every
@@ -320,6 +346,54 @@ mod tests {
             assert_eq!(c.len(), a.len());
             assert!(c.iter().all(|&v| v < 3), "{c:?}");
         }
+    }
+
+    /// The lineage hints handed to `evaluate_with_parents`: the
+    /// surviving population leads the batch with no parent, every
+    /// offspring points at an in-batch population index, and (modulo
+    /// variation) the child actually derives from that genome.
+    struct HintCheck {
+        inner: SumMin,
+        batches: usize,
+    }
+
+    impl EvoProblem for HintCheck {
+        fn genome_len(&self) -> usize {
+            self.inner.genome_len()
+        }
+        fn n_cores(&self) -> usize {
+            self.inner.n_cores()
+        }
+        fn evaluate(&mut self, genomes: &[Vec<u16>]) -> Vec<Vec<f64>> {
+            self.inner.evaluate(genomes)
+        }
+        fn evaluate_with_parents(
+            &mut self,
+            genomes: &[Vec<u16>],
+            parents: &[Option<usize>],
+        ) -> Vec<Vec<f64>> {
+            self.batches += 1;
+            assert_eq!(genomes.len(), parents.len());
+            let pop = genomes.len() / 2;
+            for (i, p) in parents.iter().enumerate() {
+                match p {
+                    None => assert!(i < pop, "only the population rides hint-free"),
+                    Some(a) => {
+                        assert!(i >= pop, "offspring only in the back half");
+                        assert!(*a < pop, "parent must be an in-batch population index");
+                    }
+                }
+            }
+            self.evaluate(genomes)
+        }
+    }
+
+    #[test]
+    fn lineage_hints_point_into_the_population() {
+        let mut p = HintCheck { inner: SumMin { len: 5, cores: 3, calls: 0 }, batches: 0 };
+        let out = evolve(&mut p, &params(11));
+        assert!(p.batches > 0, "the driver must route through evaluate_with_parents");
+        assert!(!out.front.is_empty());
     }
 
     #[test]

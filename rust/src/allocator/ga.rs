@@ -1,18 +1,42 @@
 //! The genetic algorithm driving the layer–core allocation search.
 //!
 //! Fitness evaluation is the hot path: each unseen genome costs one
-//! full event-driven schedule simulation.  Two mechanisms keep it fast:
+//! full event-driven schedule simulation.  Four mechanisms keep it
+//! fast:
 //!
 //! - **data parallelism** — unseen genomes of a generation are
 //!   evaluated concurrently on [`GaParams::threads`] workers (0 = the
 //!   `STREAM_THREADS` environment variable, else all cores).  Workers
 //!   share only immutable state (the prebuilt [`Scheduler`]) plus the
-//!   thread-safe memo cache, so serial (`threads: 1`) and parallel runs
+//!   thread-safe caches, so serial (`threads: 1`) and parallel runs
 //!   produce **bit-identical** results for a fixed seed;
 //! - **memoization** — schedule metrics are cached in a
 //!   [`ScheduleCache`] keyed by the expanded core allocation, so
 //!   genomes resurfacing across generations (or across GA runs sharing
-//!   a cache via [`Ga::with_cache`]) cost a hash lookup.
+//!   a cache via [`Ga::with_cache`]) cost a hash lookup;
+//! - **delta evaluation** ([`GaParams::incremental`], default on) —
+//!   every simulated genome is traced ([`Scheduler::run_traced`]) and
+//!   its resumable segments kept in a bounded [`DeltaCache`]; a child
+//!   genome then replays its parent's schedule prefix and re-simulates
+//!   only from the first decision that could observe a changed layer
+//!   ([`Scheduler::run_resumed_traced`]).  The replay is bit-identical
+//!   to a cold run, so the GA trajectory and the final front do not
+//!   depend on the knob, the cache's hit pattern, or the thread count
+//!   (pinned by `rust/tests/delta_equivalence.rs`);
+//! - **lower-bound early-abort** ([`GaParams::lb_prune`], default
+//!   *off*) — before dispatch, each unseen genome's admissible
+//!   objective floors ([`Scheduler::lower_bounds`]) are checked
+//!   against the points already evaluated; a genome whose floors are
+//!   strictly dominated cannot reach the Pareto front and is recorded
+//!   with its floor vector instead of being simulated.  Pruning is
+//!   decided serially pre-dispatch, so it is deterministic for a
+//!   fixed seed — but unlike delta evaluation it *does* change which
+//!   genomes get exact metrics, hence the separate opt-in knob.
+//!
+//! The `STREAM_INCREMENTAL` environment variable overrides both knobs
+//! at [`Ga::new`] time: `0`/`off` disables delta evaluation,
+//! `1`/`delta` enables it alone (the default), `2`/`prune` adds the
+//! lower-bound early-abort.
 
 use std::collections::{HashMap, HashSet};
 
@@ -20,8 +44,9 @@ use crate::util::{parallel_map_with, thread_count};
 
 use super::allocation_from_genome;
 use super::evolve::{evolve, EvoProblem};
+use super::nsga2::dominates;
 use crate::arch::{Accelerator, CoreId};
-use crate::cost::{ScheduleCache, ScheduleMetrics};
+use crate::cost::{DeltaCache, ScheduleCache, ScheduleMetrics};
 use crate::scheduler::{SchedulePriority, Scheduler};
 use crate::workload::WorkloadGraph;
 
@@ -68,6 +93,18 @@ pub struct GaParams {
     /// env var, else all available cores); 1 = fully serial.  Results
     /// are bit-identical for any value.
     pub threads: usize,
+    /// Delta evaluation: re-simulate child genomes from their parent's
+    /// cached schedule segments instead of from scratch.  Results are
+    /// bit-identical either way (the knob only trades memory for
+    /// speed).  Overridable via `STREAM_INCREMENTAL`.
+    pub incremental: bool,
+    /// Lower-bound early-abort: skip simulating genomes whose
+    /// admissible objective floors are already strictly dominated by
+    /// an evaluated point.  Never removes a would-be front member, but
+    /// dominated genomes are recorded with floor values instead of
+    /// exact metrics — off by default.  Overridable via
+    /// `STREAM_INCREMENTAL=2`.
+    pub lb_prune: bool,
 }
 
 impl Default for GaParams {
@@ -80,6 +117,8 @@ impl Default for GaParams {
             seed: 42,
             patience: 8,
             threads: 0,
+            incremental: true,
+            lb_prune: false,
         }
     }
 }
@@ -137,6 +176,14 @@ pub struct Ga<'a> {
     pub params: GaParams,
     /// Schedule-metrics memo, possibly shared across GA runs.
     cache: CacheRef<'a>,
+    /// Segmented parent schedules for delta evaluation
+    /// (`Some` iff [`GaParams::incremental`]).
+    delta: Option<DeltaCache>,
+    /// Genomes skipped by the lower-bound early-abort; their
+    /// `evaluated_metrics` entries hold admissible *floors*, not exact
+    /// metrics, and they are excluded from the prune archive (floors
+    /// must only ever be compared against exactly evaluated points).
+    pruned: HashSet<Vec<u16>>,
     /// Metrics per genome this run evaluated (the shared driver keeps
     /// the deterministic first-seen record; this map only resolves the
     /// front's genomes back to their [`ScheduleMetrics`]).
@@ -152,6 +199,21 @@ impl<'a> Ga<'a> {
         objective: Objective,
         params: GaParams,
     ) -> Ga<'a> {
+        let mut params = params;
+        if let Ok(v) = std::env::var("STREAM_INCREMENTAL") {
+            match v.as_str() {
+                "0" | "off" => (params.incremental, params.lb_prune) = (false, false),
+                "1" | "delta" => (params.incremental, params.lb_prune) = (true, false),
+                "2" | "prune" => (params.incremental, params.lb_prune) = (true, true),
+                _ => {}
+            }
+        }
+        // hold at least one full generation of parents+offspring so a
+        // survivor's segments are never evicted before its children
+        // look them up next generation
+        let delta = params
+            .incremental
+            .then(|| DeltaCache::new((2 * params.population).max(64)));
         Ga {
             workload,
             arch,
@@ -160,6 +222,8 @@ impl<'a> Ga<'a> {
             objective,
             params,
             cache: CacheRef::Owned(Box::new(ScheduleCache::new())),
+            delta,
+            pruned: HashSet::new(),
             evaluated_metrics: HashMap::new(),
         }
     }
@@ -183,24 +247,83 @@ impl<'a> Ga<'a> {
         }
     }
 
-    /// Fitness of every genome in `genomes` (order-preserving).
+    /// The delta-evaluation segment cache, when
+    /// [`GaParams::incremental`] is on (diagnostics: its
+    /// [`stats`](DeltaCache::stats) count warm resumes vs cold runs).
+    pub fn delta_cache(&self) -> Option<&DeltaCache> {
+        self.delta.as_ref()
+    }
+
+    /// Genomes skipped by the lower-bound early-abort so far.
+    pub fn pruned_count(&self) -> usize {
+        self.pruned.len()
+    }
+
+    /// Fitness of every genome in `genomes` (order-preserving), with
+    /// the driver's lineage hints (`parents[i]` = in-batch index of
+    /// genome `i`'s primary parent, if any).
     ///
-    /// Distinct genomes not yet in this run's record are dispatched to
-    /// [`GaParams::threads`] workers in first-seen order; each worker
-    /// consults the [`ScheduleCache`] and only simulates on a miss.
-    /// The workers share only `&Scheduler` and the cache,
-    /// `parallel_map_with` preserves order, and — crucially — the
-    /// record order is the same whether a genome hits or misses the
-    /// cache, so neither the thread count nor a pre-warmed shared
-    /// cache can perturb the GA trajectory or the final front's
-    /// tie-breaking.
-    fn eval_metrics(&mut self, genomes: &[Vec<u16>]) -> Vec<ScheduleMetrics> {
-        let mut jobs: Vec<Vec<u16>> = Vec::new();
+    /// Serial pre-pass, in first-seen order: duplicates and
+    /// already-recorded genomes are dropped; with
+    /// [`GaParams::lb_prune`], a genome whose admissible floors
+    /// ([`Scheduler::lower_bounds`]) are strictly dominated by an
+    /// already-evaluated point is recorded with its floor vector and
+    /// never dispatched (it provably cannot reach the front — floors
+    /// are compared only against *exactly* evaluated points, so prune
+    /// decisions can never chain through other floors).
+    ///
+    /// Survivors are dispatched to [`GaParams::threads`] workers in
+    /// first-seen order.  Each worker consults the [`ScheduleCache`]
+    /// first; on a miss, with [`GaParams::incremental`], it resumes
+    /// from the parent's cached segments at the divergence decision
+    /// ([`Scheduler::run_resumed_traced`]) — bit-identical to a cold
+    /// run — falling back to a traced cold run
+    /// ([`Scheduler::run_traced`]) when the parent is unknown or
+    /// diverges too early, and caches the new segments either way.
+    /// The workers share only `&Scheduler` and the thread-safe caches,
+    /// `parallel_map_with` preserves order, and the record order is
+    /// the same whether a genome hits or misses either cache, so
+    /// neither the thread count, a pre-warmed shared cache, nor the
+    /// delta cache's eviction timing can perturb the GA trajectory or
+    /// the final front's tie-breaking.
+    fn eval_metrics(
+        &mut self,
+        genomes: &[Vec<u16>],
+        parents: &[Option<usize>],
+    ) -> Vec<ScheduleMetrics> {
+        // exact objective points already established (floors excluded):
+        // the only archive prune decisions may compare against
+        let archive: Vec<Vec<f64>> = if self.params.lb_prune {
+            self.evaluated_metrics
+                .iter()
+                .filter(|(g, _)| !self.pruned.contains(g.as_slice()))
+                .map(|(_, m)| self.objective.values(m))
+                .collect()
+        } else {
+            Vec::new()
+        };
+
+        let mut jobs: Vec<(Vec<u16>, Option<Vec<u16>>)> = Vec::new();
         let mut seen: HashSet<&[u16]> = HashSet::new();
-        for g in genomes {
-            if !self.evaluated_metrics.contains_key(g) && seen.insert(g.as_slice()) {
-                jobs.push(g.clone());
+        for (i, g) in genomes.iter().enumerate() {
+            if self.evaluated_metrics.contains_key(g) || !seen.insert(g.as_slice()) {
+                continue;
             }
+            if self.params.lb_prune {
+                let alloc = allocation_from_genome(self.workload, self.arch, g);
+                let lb = self.scheduler.lower_bounds(&alloc);
+                let lbv = self.objective.values(&lb);
+                if archive.iter().any(|a| dominates(a, &lbv)) {
+                    // dominated even in the best case: record the
+                    // floors (themselves dominated, so they can never
+                    // displace a legitimate front member) and skip
+                    self.pruned.insert(g.clone());
+                    self.evaluated_metrics.insert(g.clone(), lb);
+                    continue;
+                }
+            }
+            let parent = parents.get(i).copied().flatten().map(|a| genomes[a].clone());
+            jobs.push((g.clone(), parent));
         }
 
         let (workload, arch, scheduler, priority) =
@@ -209,15 +332,36 @@ impl<'a> Ga<'a> {
             CacheRef::Owned(c) => c.as_ref(),
             CacheRef::Shared(c) => c,
         };
+        let delta = self.delta.as_ref();
+        let every = scheduler.snap_interval();
         let threads = thread_count(self.params.threads);
         let topo_fp = arch.topology.fingerprint();
         let results: Vec<(Vec<u16>, ScheduleMetrics)> = parallel_map_with(
             jobs,
-            |g| {
+            |(g, parent)| {
                 let alloc = allocation_from_genome(workload, arch, &g);
-                let m = cache.get_or_compute(&alloc, priority, topo_fp, || {
-                    scheduler.run(&alloc, priority).metrics
-                });
+                let m = match (cache.get(&alloc, priority, topo_fp), delta) {
+                    (Some(m), _) => m,
+                    (None, None) => {
+                        let m = scheduler.run(&alloc, priority).metrics;
+                        cache.insert(&alloc, priority, topo_fp, m);
+                        m
+                    }
+                    (None, Some(dc)) => {
+                        let warm = parent.as_ref().and_then(|pg| {
+                            let pa = allocation_from_genome(workload, arch, pg);
+                            let e = dc.get(&pa, priority, topo_fp)?;
+                            let d = e.segments.divergence(&e.allocation, &alloc);
+                            scheduler.run_resumed_traced(&alloc, priority, &e.segments, d, every)
+                        });
+                        let (res, segs) = warm.unwrap_or_else(|| {
+                            scheduler.run_traced(&alloc, priority, every)
+                        });
+                        dc.insert(&alloc, priority, topo_fp, res.metrics, segs);
+                        cache.insert(&alloc, priority, topo_fp, res.metrics);
+                        res.metrics
+                    }
+                };
                 (g, m)
             },
             threads,
@@ -304,7 +448,18 @@ impl EvoProblem for Ga<'_> {
     }
 
     fn evaluate(&mut self, genomes: &[Vec<u16>]) -> Vec<Vec<f64>> {
-        let metrics = self.eval_metrics(genomes);
+        self.evaluate_with_parents(genomes, &vec![None; genomes.len()])
+    }
+
+    /// The driver's lineage hints feed the delta-evaluation path
+    /// (`Ga::eval_metrics`); results are identical with or without
+    /// them.
+    fn evaluate_with_parents(
+        &mut self,
+        genomes: &[Vec<u16>],
+        parents: &[Option<usize>],
+    ) -> Vec<Vec<f64>> {
+        let metrics = self.eval_metrics(genomes, parents);
         metrics.iter().map(|m| self.objective.values(m)).collect()
     }
 
@@ -494,6 +649,76 @@ mod tests {
         assert_eq!(alloc[0], CoreId(0));
         assert_eq!(alloc[2], CoreId(1));
         assert_eq!(alloc[3], CoreId(2));
+    }
+
+    /// Tentpole pin (GA level): the delta-evaluation path must change
+    /// nothing observable — same genomes, same bit-exact metrics, same
+    /// front order — while actually resuming children from parent
+    /// segments (the crate-level fig12 pin lives in
+    /// `rust/tests/delta_equivalence.rs`).
+    #[test]
+    fn incremental_and_full_runs_are_bit_identical() {
+        let f = fixture();
+        let sched = Scheduler::new(&f.w, &f.g, &f.costs, &f.arch);
+        let run = |incremental: bool| {
+            let params = GaParams {
+                population: 10,
+                generations: 6,
+                incremental,
+                ..Default::default()
+            };
+            let mut ga = Ga::new(&f.w, &f.arch, &sched, SchedulePriority::Latency,
+                                 Objective::LatencyMemory, params);
+            let front = ga.run();
+            if incremental {
+                let dc = ga.delta_cache().expect("incremental GA owns a delta cache");
+                assert!(dc.stats().0 > 0, "delta path must actually resume children");
+            } else {
+                assert!(ga.delta_cache().is_none());
+            }
+            front
+        };
+        let full = run(false);
+        let inc = run(true);
+        assert_eq!(full.len(), inc.len());
+        for (a, b) in full.iter().zip(&inc) {
+            assert_eq!(a.genome, b.genome);
+            assert_eq!(a.metrics.latency_cc, b.metrics.latency_cc);
+            assert_eq!(a.metrics.energy_pj.to_bits(), b.metrics.energy_pj.to_bits());
+            assert_eq!(a.metrics.peak_mem_bytes.to_bits(), b.metrics.peak_mem_bytes.to_bits());
+        }
+    }
+
+    /// The early-abort still yields a valid, non-dominated front of
+    /// exactly-evaluated points (the admissibility sweep lives in
+    /// `rust/tests/delta_equivalence.rs`).
+    #[test]
+    fn lb_prune_front_is_exact_and_nondominated() {
+        let f = fixture();
+        let sched = Scheduler::new(&f.w, &f.g, &f.costs, &f.arch);
+        let params = GaParams {
+            population: 10,
+            generations: 6,
+            lb_prune: true,
+            ..Default::default()
+        };
+        let mut ga = Ga::new(&f.w, &f.arch, &sched, SchedulePriority::Latency,
+                             Objective::LatencyMemory, params);
+        let front = ga.run();
+        assert!(!front.is_empty());
+        for r in &front {
+            // front members carry exact simulated metrics, never floors
+            let exact = sched.run(&r.allocation, SchedulePriority::Latency).metrics;
+            assert_eq!(r.metrics.latency_cc, exact.latency_cc);
+            assert_eq!(r.metrics.energy_pj.to_bits(), exact.energy_pj.to_bits());
+        }
+        for a in &front {
+            for b in &front {
+                let pa = Objective::LatencyMemory.values(&a.metrics);
+                let pb = Objective::LatencyMemory.values(&b.metrics);
+                assert!(!super::super::nsga2::dominates(&pa, &pb) || pa == pb);
+            }
+        }
     }
 
     /// The driver's variation operators produce genomes the expansion

@@ -1,0 +1,177 @@
+//! Segmented schedule entries for the GA's delta-evaluation path.
+//!
+//! Where [`super::memo::ScheduleCache`] memoizes *finished* metrics
+//! (exact-hit reuse), the [`DeltaCache`] keeps, per recently simulated
+//! allocation, the [`ScheduleSegments`] a traced run produced —
+//! per-layer first-observation indices plus resumable mid-run
+//! snapshots.  A child genome differing from a cached parent only in
+//! layers first observed *after* one of those snapshots replays the
+//! shared prefix for free and re-simulates just the divergent suffix
+//! (`Scheduler::run_resumed_traced`), bit-identical to a cold run.
+//!
+//! Entries are keyed by the same FNV-1a fingerprint as the metrics
+//! memo ([`super::memo::fingerprint`]) and verified against the full
+//! allocation on lookup, so a fingerprint collision degrades to a miss
+//! rather than a wrong resume.  The cache is bounded (LRU by insertion
+//! stamp): snapshots hold whole simulation states, so only the most
+//! recent generation's worth of parents is kept — exactly the set
+//! child genomes diverge from.
+//!
+//! Concurrency: lookups and inserts take a single mutex, but the GA's
+//! correctness never depends on hit/miss timing — a miss only costs a
+//! cold simulation whose result is bit-identical to the delta-resumed
+//! one (pinned by `rust/tests/delta_equivalence.rs`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::arch::CoreId;
+use crate::scheduler::{SchedulePriority, ScheduleSegments};
+
+use super::memo::fingerprint;
+use super::ScheduleMetrics;
+
+/// One cached parent: its exact allocation (collision guard), final
+/// metrics, and the resumable segments of its traced run.
+pub struct DeltaEntry {
+    pub allocation: Box<[CoreId]>,
+    pub metrics: ScheduleMetrics,
+    pub segments: ScheduleSegments,
+}
+
+/// Bounded cache of segmented parent schedules (see the
+/// [module docs](self)).
+pub struct DeltaCache {
+    entries: Mutex<HashMap<u64, (u64, Arc<DeltaEntry>)>>,
+    capacity: usize,
+    stamp: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl DeltaCache {
+    /// `capacity` is the number of segmented parents kept (LRU).
+    pub fn new(capacity: usize) -> DeltaCache {
+        DeltaCache {
+            entries: Mutex::new(HashMap::new()),
+            capacity: capacity.max(1),
+            stamp: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up the segmented entry for an exact (allocation, priority)
+    /// pair; refreshes its LRU stamp on hit.
+    pub fn get(
+        &self,
+        allocation: &[CoreId],
+        priority: SchedulePriority,
+        topology_fp: u64,
+    ) -> Option<Arc<DeltaEntry>> {
+        let fp = fingerprint(allocation, priority, topology_fp);
+        let mut map = self.entries.lock().unwrap();
+        match map.get_mut(&fp) {
+            Some((stamp, e)) if *e.allocation == *allocation => {
+                *stamp = self.stamp.fetch_add(1, Ordering::Relaxed);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(e))
+            }
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly traced parent, evicting the least recently
+    /// used entry when full.
+    pub fn insert(
+        &self,
+        allocation: &[CoreId],
+        priority: SchedulePriority,
+        topology_fp: u64,
+        metrics: ScheduleMetrics,
+        segments: ScheduleSegments,
+    ) {
+        let fp = fingerprint(allocation, priority, topology_fp);
+        let entry = Arc::new(DeltaEntry { allocation: allocation.into(), metrics, segments });
+        let mut map = self.entries.lock().unwrap();
+        let stamp = self.stamp.fetch_add(1, Ordering::Relaxed);
+        map.insert(fp, (stamp, entry));
+        while map.len() > self.capacity {
+            let oldest = map
+                .iter()
+                .min_by_key(|(_, (s, _))| *s)
+                .map(|(k, _)| *k)
+                .expect("nonempty map has a minimum");
+            map.remove(&oldest);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `(hits, misses)` since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc as StdArc;
+
+    fn segs() -> ScheduleSegments {
+        ScheduleSegments { touch: vec![0, 1, 2], snaps: Vec::new() }
+    }
+
+    fn alloc(v: &[u16]) -> Vec<CoreId> {
+        v.iter().map(|&c| CoreId(c as usize)).collect()
+    }
+
+    #[test]
+    fn hit_requires_exact_allocation() {
+        let c = DeltaCache::new(4);
+        let a = alloc(&[0, 1, 0]);
+        c.insert(&a, SchedulePriority::Latency, 7, ScheduleMetrics::default(), segs());
+        assert!(c.get(&a, SchedulePriority::Latency, 7).is_some());
+        // different priority, topology, or allocation: miss
+        assert!(c.get(&a, SchedulePriority::Memory, 7).is_none());
+        assert!(c.get(&a, SchedulePriority::Latency, 8).is_none());
+        assert!(c.get(&alloc(&[1, 1, 0]), SchedulePriority::Latency, 7).is_none());
+        assert_eq!(c.stats(), (1, 3));
+    }
+
+    #[test]
+    fn lru_evicts_oldest_untouched_entry() {
+        let c = DeltaCache::new(2);
+        let (a, b, d) = (alloc(&[0, 0]), alloc(&[0, 1]), alloc(&[1, 1]));
+        c.insert(&a, SchedulePriority::Latency, 0, ScheduleMetrics::default(), segs());
+        c.insert(&b, SchedulePriority::Latency, 0, ScheduleMetrics::default(), segs());
+        // touch `a` so `b` becomes the LRU victim
+        assert!(c.get(&a, SchedulePriority::Latency, 0).is_some());
+        c.insert(&d, SchedulePriority::Latency, 0, ScheduleMetrics::default(), segs());
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&a, SchedulePriority::Latency, 0).is_some());
+        assert!(c.get(&b, SchedulePriority::Latency, 0).is_none());
+        assert!(c.get(&d, SchedulePriority::Latency, 0).is_some());
+    }
+
+    #[test]
+    fn entries_are_shared_not_copied() {
+        let c = DeltaCache::new(2);
+        let a = alloc(&[2, 3]);
+        c.insert(&a, SchedulePriority::Memory, 1, ScheduleMetrics::default(), segs());
+        let e1 = c.get(&a, SchedulePriority::Memory, 1).unwrap();
+        let e2 = c.get(&a, SchedulePriority::Memory, 1).unwrap();
+        assert!(StdArc::ptr_eq(&e1, &e2));
+    }
+}

@@ -10,6 +10,9 @@
 //! - [`ScheduleCache`] ([`memo`]) — the thread-safe memo from
 //!   (core-allocation, priority, interconnect topology) to metrics that
 //!   lets the GA skip re-simulating duplicate genomes;
+//! - [`DeltaCache`] ([`delta`]) — the bounded cache of *segmented*
+//!   parent schedules (resumable snapshots + divergence indices) behind
+//!   the GA's incremental delta-evaluation path;
 //! - formatting helpers ([`fmt_cycles`], [`fmt_energy`], [`fmt_bytes`],
 //!   [`geomean`]) shared by the CLI and the benches.
 //!
@@ -23,8 +26,10 @@
 //! assert_eq!(stream::cost::fmt_cycles(1_500_000), "1.50 Mcc");
 //! ```
 
+pub mod delta;
 pub mod memo;
 
+pub use delta::{DeltaCache, DeltaEntry};
 pub use memo::ScheduleCache;
 
 /// Energy split by destination (paper Fig. 15's stacked bars).

@@ -8,12 +8,18 @@
 //! precomputation ([`Scheduler::new`]) and the one-shot result
 //! assembly.
 
-use crate::arch::{Accelerator, CoreId};
+use std::sync::Arc;
+
+use crate::arch::{Accelerator, CoreId, LinkId};
 use crate::cn::CnId;
-use crate::depgraph::CnGraph;
+use crate::cost::ScheduleMetrics;
+use crate::depgraph::{CnGraph, EdgeKind};
 use crate::mapping::CostModel;
 use crate::scheduler::memtrace::MemTrace;
-use crate::scheduler::sim::{Arbitration, SimContext, SimRequest, SimTenant};
+use crate::scheduler::sim::{
+    Arbitration, NoRecord, ScheduleSegments, SimContext, SimOutcome, SimRequest, SimSnapshot,
+    SimTenant, TouchTracer,
+};
 use crate::scheduler::{SchedulePriority, ScheduleResult};
 use crate::workload::{OpType, WorkloadGraph};
 
@@ -218,6 +224,19 @@ impl<'a> Scheduler<'a> {
         priority: SchedulePriority,
         linear_pool: bool,
     ) -> ScheduleResult {
+        self.with_ctx(allocation, priority, linear_pool, |ctx| Self::assemble(ctx.simulate()))
+    }
+
+    /// Build the one-shot [`SimContext`] (single lane at t = 0, layer
+    /// offset 0, FIFO, tags off) and hand it to `f`.  The tenant and
+    /// request arrays borrow from this frame, hence the closure shape.
+    fn with_ctx<T>(
+        &self,
+        allocation: &[CoreId],
+        priority: SchedulePriority,
+        linear_pool: bool,
+        f: impl FnOnce(&SimContext) -> T,
+    ) -> T {
         assert_eq!(allocation.len(), self.workload.len(), "allocation per layer");
         let tenants = [SimTenant {
             sched: self,
@@ -236,7 +255,11 @@ impl<'a> Scheduler<'a> {
             linear_pool,
             tag_events: false,
         };
-        let out = ctx.simulate();
+        f(&ctx)
+    }
+
+    /// Drop the (empty) request tags of a one-shot outcome.
+    fn assemble(out: SimOutcome) -> ScheduleResult {
         ScheduleResult {
             cns: out.cns,
             comms: out.comms,
@@ -244,6 +267,224 @@ impl<'a> Scheduler<'a> {
             link_stats: out.link_stats,
             metrics: out.metrics,
             memtrace: out.memtrace,
+        }
+    }
+
+    /// Default decision-count spacing between resumable snapshots of a
+    /// traced run: ~8 segments per schedule, floored so tiny graphs
+    /// don't snapshot every step.
+    pub fn snap_interval(&self) -> usize {
+        (self.graph.len() / 8).max(8)
+    }
+
+    /// Like [`Scheduler::run`], but also return the divergence-tracking
+    /// [`ScheduleSegments`] — per-layer first-observation indices plus
+    /// resumable [`SimSnapshot`]s every `every` scheduling decisions
+    /// (and one of the pristine initial state).  The result is
+    /// bit-identical to `run`; the segments feed
+    /// [`Scheduler::run_resumed_traced`] for genomes derived from this
+    /// allocation.
+    pub fn run_traced(
+        &self,
+        allocation: &[CoreId],
+        priority: SchedulePriority,
+        every: usize,
+    ) -> (ScheduleResult, ScheduleSegments) {
+        assert!(every >= 1, "snapshot interval must be positive");
+        self.with_ctx(allocation, priority, false, |ctx| {
+            let mut rec = TouchTracer::new(self.workload.len());
+            let mut st = ctx.init(&mut rec);
+            let mut snaps = vec![Arc::new(SimSnapshot { state: st.clone() })];
+            while st.has_work() {
+                ctx.step(&mut st, &mut rec);
+                if st.has_work() && st.decisions() % every == 0 {
+                    snaps.push(Arc::new(SimSnapshot { state: st.clone() }));
+                }
+            }
+            let result = Self::assemble(ctx.finish(st));
+            (result, ScheduleSegments { touch: rec.touch, snaps })
+        })
+    }
+
+    /// Resume a checkpointed simulation to completion under
+    /// `allocation`.  Bit-identical to the uninterrupted run when the
+    /// snapshot was taken under the same allocation (pinned by the
+    /// fuzz sweep in `rust/tests/sim_core_fuzz.rs`), or under one whose
+    /// changed layers all have first-observation indices beyond the
+    /// snapshot's decision count (the delta-evaluation contract —
+    /// pinned by `rust/tests/delta_equivalence.rs`).
+    pub fn run_resumed(
+        &self,
+        allocation: &[CoreId],
+        priority: SchedulePriority,
+        snap: &SimSnapshot,
+    ) -> ScheduleResult {
+        self.with_ctx(allocation, priority, false, |ctx| {
+            let mut rec = NoRecord;
+            let mut st = snap.state.clone();
+            while st.has_work() {
+                ctx.step(&mut st, &mut rec);
+            }
+            Self::assemble(ctx.finish(st))
+        })
+    }
+
+    /// The delta-evaluation hot path: re-simulate `allocation` from the
+    /// deepest of the parent's snapshots strictly before `divergence`
+    /// (see [`ScheduleSegments::resume_point`]), producing both the
+    /// (bit-identical-to-cold) result and the child's own
+    /// [`ScheduleSegments`] so it can in turn serve as a parent.
+    /// Returns `None` when no snapshot precedes the divergence — the
+    /// caller falls back to [`Scheduler::run_traced`].
+    pub fn run_resumed_traced(
+        &self,
+        allocation: &[CoreId],
+        priority: SchedulePriority,
+        parent: &ScheduleSegments,
+        divergence: usize,
+        every: usize,
+    ) -> Option<(ScheduleResult, ScheduleSegments)> {
+        assert!(every >= 1, "snapshot interval must be positive");
+        let snap = parent.resume_point(divergence)?;
+        let s = snap.decisions();
+        Some(self.with_ctx(allocation, priority, false, |ctx| {
+            let mut rec = TouchTracer::new(self.workload.len());
+            let mut st = snap.state.clone();
+            // Inherit the shared prefix: snapshots at or before the
+            // resume point are bit-identical states of the child's own
+            // cold run (every candidate they hold has visibility <= s
+            // < divergence, hence belongs to an unchanged layer).
+            let mut snaps: Vec<Arc<SimSnapshot>> = parent
+                .snaps
+                .iter()
+                .filter(|p| p.decisions() <= s)
+                .cloned()
+                .collect();
+            while st.has_work() {
+                ctx.step(&mut st, &mut rec);
+                if st.has_work() && st.decisions() % every == 0 && st.decisions() > s {
+                    snaps.push(Arc::new(SimSnapshot { state: st.clone() }));
+                }
+            }
+            let result = Self::assemble(ctx.finish(st));
+            // The replayed suffix recorded insertions with visibility
+            // > s; prefix insertions (visibility <= s) are identical to
+            // the parent's, so merge them in.
+            let mut touch = rec.touch;
+            for (l, t) in touch.iter_mut().enumerate() {
+                if parent.touch[l] <= s {
+                    *t = (*t).min(parent.touch[l]);
+                }
+            }
+            (result, ScheduleSegments { touch, snaps })
+        }))
+    }
+
+    /// Cheap admissible floors on the three objective metrics of *any*
+    /// schedule of `allocation`, priority-independent:
+    ///
+    /// - **latency**: the busiest core's summed compute cycles, or the
+    ///   busiest link's summed mandatory-transfer cycles (per-link
+    ///   `ceil(bits / bw)` floors — each actual transfer occupies every
+    ///   route link at the *bottleneck* bandwidth for at least that
+    ///   long, and FCFS busy intervals are disjoint), whichever is
+    ///   larger;
+    /// - **energy**: exact per-CN compute energy plus the wire energy
+    ///   of the mandatory traffic (source-layer fetches, one weight
+    ///   fetch per weighted layer, per-CN streamed-B reads, sink
+    ///   stores, cross-core data edges) — scaled by `1 - 1e-9` so
+    ///   float-summation ordering can never push the floor above the
+    ///   simulated value;
+    /// - **peak memory**: the largest single CN output (its buffer is
+    ///   live the moment the CN starts), with a small absolute margin
+    ///   for the trace's fractional-share rounding.
+    ///
+    /// Used by the GA's early-abort: a genome whose floors are already
+    /// dominated by an evaluated point cannot reach the Pareto front
+    /// (admissibility pinned by `rust/tests/delta_equivalence.rs`).
+    /// Only the three objective fields are meaningful; the energy
+    /// breakdown and utilization of the returned metrics stay zero.
+    pub fn lower_bounds(&self, allocation: &[CoreId]) -> ScheduleMetrics {
+        assert_eq!(allocation.len(), self.workload.len(), "allocation per layer");
+        let topo = &self.arch.topology;
+        let mut core_cc = vec![0u64; self.arch.cores.len()];
+        let mut link_cc = vec![0u64; topo.n_links()];
+        let mut energy = 0.0f64;
+        let mut max_out = 0u64;
+
+        // floor-charge one transfer: per-link cycles + wire energy
+        let charge = |route: &[LinkId], bytes: u64, link_cc: &mut [u64]| -> f64 {
+            for l in route {
+                let bw = topo.link(*l).bw_bits.max(1);
+                link_cc[l.0] += (bytes * 8).div_ceil(bw);
+            }
+            bytes as f64
+                * 8.0
+                * (topo.route_dram_pj_per_bit(route) + topo.route_noc_pj_per_bit(route))
+        };
+
+        for layer in self.workload.layers() {
+            let core_id = allocation[layer.id.0];
+            let core = self.arch.core(core_id);
+            let cns = self.graph.cns.layer_cns(layer.id);
+            let sink = self.workload.successors(layer.id).is_empty();
+            for cn in cns {
+                let cost = self.costs.cn_cost(cn, core_id);
+                core_cc[core_id.0] += cost.compute_cycles;
+                energy += cost.energy_pj;
+                max_out = max_out.max(cn.output_bytes);
+                let fresh = self.fresh_in_bytes[cn.id.0];
+                if fresh > 0 {
+                    energy += charge(topo.dram_load_route(core_id), fresh, &mut link_cc);
+                }
+                if sink {
+                    energy +=
+                        charge(topo.dram_store_route(core_id), cn.output_bytes, &mut link_cc);
+                }
+            }
+            // weight traffic: a streamed B operand is re-read per CN
+            // and never resident; resident weights are fetched at least
+            // once (the layer's first CN always misses)
+            let wfetches = if layer.streams_b_from_dram() {
+                Some((layer.matmul_b_bytes(), cns.len() as u64))
+            } else if layer.weight_bytes() > 0 {
+                Some((layer.weight_bytes(), 1))
+            } else {
+                None
+            };
+            if let Some((bytes, times)) = wfetches {
+                for _ in 0..times {
+                    energy += charge(topo.dram_load_route(core_id), bytes, &mut link_cc);
+                    if let crate::arch::CoreKind::Aimc { weight_load_pj, .. } = core.kind {
+                        energy += bytes as f64 * 8.0 * weight_load_pj;
+                    }
+                }
+            }
+        }
+
+        // every cross-core data edge must cross the interconnect
+        for e in &self.graph.edges {
+            if e.kind != EdgeKind::Data || e.bytes == 0 {
+                continue;
+            }
+            let from = allocation[self.graph.cns.node(e.from).layer.0];
+            let to = allocation[self.graph.cns.node(e.to).layer.0];
+            if from != to {
+                energy += charge(topo.core_route(from, to), e.bytes, &mut link_cc);
+            }
+        }
+
+        let latency_cc = core_cc
+            .iter()
+            .chain(link_cc.iter())
+            .copied()
+            .max()
+            .unwrap_or(0);
+        ScheduleMetrics {
+            latency_cc,
+            energy_pj: energy * (1.0 - 1e-9),
+            peak_mem_bytes: ((max_out as f64) - 2.0).max(0.0) * (1.0 - 1e-6),
+            ..ScheduleMetrics::default()
         }
     }
 }
@@ -707,6 +948,125 @@ mod tests {
             let r = schedule(&w, &g, &costs, &arch, &alloc, pr);
             assert_eq!(r.cns.len(), g.len());
             assert!(r.latency() > 0);
+        }
+    }
+
+    /// Every observable of two results, bit-for-bit.
+    fn assert_identical(a: &ScheduleResult, b: &ScheduleResult) {
+        assert_eq!(a.metrics.latency_cc, b.metrics.latency_cc);
+        assert_eq!(a.metrics.energy_pj.to_bits(), b.metrics.energy_pj.to_bits());
+        assert_eq!(a.metrics.peak_mem_bytes.to_bits(), b.metrics.peak_mem_bytes.to_bits());
+        assert_eq!(a.metrics.avg_core_util.to_bits(), b.metrics.avg_core_util.to_bits());
+        assert_eq!(a.cns.len(), b.cns.len());
+        for (x, y) in a.cns.iter().zip(&b.cns) {
+            assert_eq!((x.cn, x.core, x.start, x.end), (y.cn, y.core, y.start, y.end));
+        }
+        assert_eq!(a.comms.len(), b.comms.len());
+        for (x, y) in a.comms.iter().zip(&b.comms) {
+            assert_eq!(
+                (x.from_core, x.to_core, x.start, x.end, x.bytes),
+                (y.from_core, y.to_core, y.start, y.end, y.bytes)
+            );
+            assert_eq!(x.links, y.links);
+        }
+        assert_eq!(a.drams.len(), b.drams.len());
+        for (x, y) in a.drams.iter().zip(&b.drams) {
+            assert_eq!(
+                (x.core, x.start, x.end, x.bytes, x.kind),
+                (y.core, y.start, y.end, y.bytes, y.kind)
+            );
+            assert_eq!(x.links, y.links);
+        }
+        assert_eq!(a.link_stats, b.link_stats);
+        assert_eq!(a.memtrace.events.len(), b.memtrace.events.len());
+    }
+
+    /// Tentpole pin: traced-run snapshots replay bit-identically —
+    /// resumed under the same allocation from every snapshot, resumed
+    /// under a child allocation from the divergence point, and resumed
+    /// again from the child's own (partly inherited) segments.
+    #[test]
+    fn delta_resume_is_bit_identical() {
+        let (w, g, costs, arch) = setup(CnGranularity::Lines(2));
+        let simd = arch.simd_core().unwrap();
+        let s = Scheduler::new(&w, &g, &costs, &arch);
+        let parent = simd_alloc(&w, &arch, CoreId(0));
+        // children: each dense layer moved alone, plus an alternating mix
+        let mut children: Vec<Vec<CoreId>> = Vec::new();
+        for l in w.layers().iter().filter(|l| l.op.is_dense()) {
+            let mut c = parent.clone();
+            c[l.id.0] = CoreId(1);
+            children.push(c);
+        }
+        children.push(
+            w.layers()
+                .iter()
+                .map(|l| if l.op.is_dense() { CoreId(l.id.0 % 2) } else { simd })
+                .collect(),
+        );
+
+        for pr in [SchedulePriority::Latency, SchedulePriority::Memory] {
+            for every in [1usize, 3, s.snap_interval()] {
+                let (base, segs) = s.run_traced(&parent, pr, every);
+                let cold = s.run(&parent, pr);
+                assert_identical(&base, &cold);
+                assert!(segs.snapshots().len() > 1, "interval {every} snapshotted nothing");
+                for snap in segs.snapshots() {
+                    assert_identical(&s.run_resumed(&parent, pr, snap), &cold);
+                }
+                let mut resumed = 0;
+                for c in &children {
+                    let d = segs.divergence(&parent, c);
+                    assert!(d > 0, "no dense layer is visible before the first decision");
+                    let cold_c = s.run(c, pr);
+                    if let Some((warm, child_segs)) = s.run_resumed_traced(c, pr, &segs, d, every)
+                    {
+                        resumed += 1;
+                        assert_identical(&warm, &cold_c);
+                        // the child's segments must serve as a parent too
+                        let d2 = child_segs.divergence(c, &parent);
+                        if let Some((back, _)) =
+                            s.run_resumed_traced(&parent, pr, &child_segs, d2, every)
+                        {
+                            assert_identical(&back, &cold);
+                        }
+                    }
+                }
+                if every == 1 {
+                    assert_eq!(resumed, children.len(), "every=1 must always find a snapshot");
+                }
+            }
+        }
+    }
+
+    /// The early-abort floors must never exceed what simulation reports
+    /// (spot admissibility; the randomized sweep lives in
+    /// `rust/tests/delta_equivalence.rs`).
+    #[test]
+    fn lower_bounds_never_exceed_simulation() {
+        for gran in [CnGranularity::LayerByLayer, CnGranularity::Lines(2)] {
+            let (w, g, costs, arch) = setup(gran);
+            let simd = arch.simd_core().unwrap();
+            let s = Scheduler::new(&w, &g, &costs, &arch);
+            let allocs: Vec<Vec<CoreId>> = vec![
+                simd_alloc(&w, &arch, CoreId(0)),
+                simd_alloc(&w, &arch, CoreId(1)),
+                w.layers()
+                    .iter()
+                    .map(|l| if l.op.is_dense() { CoreId(l.id.0 % 2) } else { simd })
+                    .collect(),
+            ];
+            for alloc in &allocs {
+                let lb = s.lower_bounds(alloc);
+                assert!(lb.latency_cc > 0, "floors must be nontrivial");
+                assert!(lb.energy_pj > 0.0);
+                for pr in [SchedulePriority::Latency, SchedulePriority::Memory] {
+                    let r = s.run(alloc, pr);
+                    assert!(lb.latency_cc <= r.metrics.latency_cc);
+                    assert!(lb.energy_pj <= r.metrics.energy_pj);
+                    assert!(lb.peak_mem_bytes <= r.metrics.peak_mem_bytes);
+                }
+            }
         }
     }
 }

@@ -26,7 +26,7 @@ pub struct MemEvent {
 }
 
 /// Collected trace with peak computation.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct MemTrace {
     pub events: Vec<MemEvent>,
 }

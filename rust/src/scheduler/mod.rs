@@ -40,6 +40,16 @@
 //! engines (`rust/tests/sim_core_fuzz.rs`,
 //! `rust/tests/topology_equivalence.rs`).
 //!
+//! For the GA's incremental fitness path ("delta evaluation"),
+//! [`Scheduler::run_traced`] additionally freezes resumable
+//! checkpoints of the in-flight state ([`SimSnapshot`]) and records
+//! per-layer first-observation indices ([`ScheduleSegments`]);
+//! [`Scheduler::run_resumed_traced`] then replays a mutated child
+//! allocation from the deepest checkpoint preceding its divergence
+//! point, bit-identical to a cold run, and
+//! [`Scheduler::lower_bounds`] supplies admissible objective floors
+//! for the search's early-abort.
+//!
 //! Step 5.2: once start/end times are known, activation memory usage is
 //! traced from the CNs' discardable-input / generated-output attributes
 //! ([`memtrace`]).
@@ -54,7 +64,7 @@ pub(crate) mod sim;
 
 pub use engine::{schedule, ScheduledCn, Scheduler};
 pub use memtrace::{MemEvent, MemTrace};
-pub use sim::Arbitration;
+pub use sim::{Arbitration, ScheduleSegments, SimSnapshot};
 
 use crate::arch::{CoreId, LinkId};
 use crate::cost::ScheduleMetrics;

@@ -70,6 +70,13 @@ const EMPTY_SLOT: Slot =
     Slot { ready: 0, eff: 0, out_bytes: 0, layer: 0, idx: 0, state: State::Out };
 
 /// See the [module docs](self).
+///
+/// `Clone` is part of the contract: the delta-evaluation snapshots
+/// (`super::sim::SimSnapshot`) clone in-flight pools, and
+/// `BinaryHeap`'s `Clone` preserves the backing vector verbatim, so a
+/// cloned pool pops in exactly the same order as the original
+/// (`clone_pops_identically` below pins this).
+#[derive(Debug, Clone)]
 pub(crate) struct CandidatePool {
     lat: BinaryHeap<Reverse<(u64, usize, usize, usize)>>, // (eff, layer, idx, cn)
     depth: BinaryHeap<(usize, Reverse<usize>, usize)>,    // (layer, -idx, cn)
@@ -380,6 +387,64 @@ mod tests {
         assert_eq!(p.peek_min_eff(), Some(55));
         assert_eq!(p.pop_latency(0.0, 1e9).unwrap().0, 0);
         assert_eq!(p.peek_min_eff(), None);
+    }
+
+    /// A cloned pool must pop identically to the original — the
+    /// snapshot/resume path of the delta evaluator clones pools
+    /// mid-flight, so `BinaryHeap`'s vector-preserving `Clone` is a
+    /// correctness dependency, not a convenience.
+    #[test]
+    fn clone_pops_identically() {
+        let mut rng = XorShift64::new(0xBEEF);
+        for round in 0..50 {
+            let n = 3 + (rng.below(20) as usize);
+            let mut p = CandidatePool::new(n, 2);
+            let mut idx_in_layer = [0usize; 4];
+            for i in 0..n {
+                let layer = rng.below(4) as usize;
+                let idx = idx_in_layer[layer];
+                idx_in_layer[layer] += 1;
+                let ready = rng.below(80);
+                let fetch = if rng.unit() < 0.5 { rng.below(30) + 1 } else { 0 };
+                p.insert(
+                    CnId(i),
+                    LayerId(layer),
+                    idx,
+                    ready,
+                    ready + fetch,
+                    rng.below(40) + 1,
+                    i % 2,
+                    fetch > 0,
+                );
+            }
+            // pop a prefix, re-key a core, then clone mid-flight
+            for _ in 0..rng.below(n as u64 / 2 + 1) {
+                p.pop_latency(0.0, 1e9);
+            }
+            let extra = rng.below(60);
+            p.rekey_core(0, |l| if l == LayerId(1) { Some(extra) } else { None });
+            let mut q = p.clone();
+            assert_eq!(p.len(), q.len());
+            for pr in [SchedulePriority::Latency, SchedulePriority::Memory] {
+                let mut a = p.clone();
+                let mut b = q.clone();
+                loop {
+                    assert_eq!(a.peek_min_eff(), b.peek_min_eff(), "round {round}");
+                    let (x, y) = match pr {
+                        SchedulePriority::Latency => {
+                            (a.pop_latency(10.0, 35.0), b.pop_latency(10.0, 35.0))
+                        }
+                        SchedulePriority::Memory => {
+                            (a.pop_memory(10.0, 35.0), b.pop_memory(10.0, 35.0))
+                        }
+                    };
+                    assert_eq!(x, y, "round {round}");
+                    if x.is_none() {
+                        break;
+                    }
+                }
+            }
+        }
     }
 
     /// The load-bearing test: the heap path and the seed's linear scan

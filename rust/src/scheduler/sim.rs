@@ -1,6 +1,7 @@
 //! The unified event-driven simulation core.
 //!
 //! Exactly **one** inner scheduling loop exists in the crate:
+//! [`SimContext::step`], driven to completion by
 //! [`SimContext::simulate`].  The one-shot scheduler
 //! ([`Scheduler::run`]) instantiates it with a single request lane
 //! released at t = 0, and the multi-DNN scenario engine
@@ -24,6 +25,34 @@
 //!   turns into per-request serving statistics and the one-shot layer
 //!   discards.
 //!
+//! # Checkpoint / resume (delta evaluation)
+//!
+//! All mutable simulation state lives in one [`SimState`], which is
+//! `Clone`: freezing a copy between two scheduling decisions yields a
+//! [`SimSnapshot`] from which the run can be resumed — under the *same*
+//! context it replays the remaining decisions bit-for-bit (pinned by
+//! the snapshot/resume sweep in `rust/tests/sim_core_fuzz.rs`), and
+//! under a context whose core allocation differs only in layers the
+//! prefix never observed it reproduces that allocation's cold run
+//! bit-for-bit (the GA's incremental fitness path, pinned by
+//! `rust/tests/delta_equivalence.rs`).
+//!
+//! "Never observed" is made precise by insertion visibility: a
+//! candidate inserted during decision `j` can first influence decision
+//! `j + 1` (init-time insertions are visible from decision 0).  A
+//! [`SimRecorder`] threads through the loop — [`NoRecord`] keeps the
+//! normal path zero-cost, [`TouchTracer`] records per layer the minimum
+//! visibility index of its candidates.  Every read of a layer's core
+//! assignment happens either when one of its CNs is inserted or
+//! scheduled (at a decision index `>=` its visibility) or when a
+//! consumer CN is scheduled (whose own visibility is strictly later),
+//! so decisions before `min(touch(changed layers))` are independent of
+//! the change — [`ScheduleSegments::divergence`] computes exactly that
+//! bound, and [`ScheduleSegments::resume_point`] picks the deepest
+//! snapshot strictly before it (strict, because a candidate of a
+//! changed layer inserted *at* the divergence decision would bake the
+//! old core's readiness into the snapshot's pool).
+//!
 //! The degenerate single-lane instantiation is pinned **bit-for-bit**
 //! against the frozen reference engines: `rust/tests/sim_core_fuzz.rs`
 //! and the unit test `heap_pool_matches_reference_scan` pin it to the
@@ -31,6 +60,8 @@
 //! `rust/tests/topology_equivalence.rs` pins it to the pre-topology
 //! scalar-bus engine, and `rust/tests/scenario_equivalence.rs` pins the
 //! scenario wrapper to the one-shot wrapper.
+
+use std::sync::Arc;
 
 use crate::arch::{Accelerator, CoreId, CoreKind};
 use crate::cn::CnId;
@@ -171,7 +202,49 @@ pub fn global_wgt_fetch(scheds: &[Scheduler]) -> Vec<u64> {
     g
 }
 
+/// Observes candidate-pool insertions during a simulation.  The
+/// recorder is a monomorphized type parameter of the loop, so the
+/// no-op [`NoRecord`] keeps the normal (non-traced) path free of any
+/// bookkeeping cost.
+pub(crate) trait SimRecorder {
+    /// A CN of global layer `gl` entered a candidate pool; the first
+    /// scheduling decision that can observe it has index
+    /// `visible_from`.
+    fn inserted(&mut self, gl: LayerId, visible_from: usize);
+}
+
+/// The zero-cost recorder of the normal path.
+pub(crate) struct NoRecord;
+
+impl SimRecorder for NoRecord {
+    #[inline(always)]
+    fn inserted(&mut self, _gl: LayerId, _visible_from: usize) {}
+}
+
+/// Records, per global layer, the minimum insertion-visibility index of
+/// its candidates — the earliest scheduling decision that could depend
+/// on that layer's core assignment.
+pub(crate) struct TouchTracer {
+    pub touch: Vec<usize>,
+}
+
+impl TouchTracer {
+    pub fn new(n_layers: usize) -> TouchTracer {
+        TouchTracer { touch: vec![usize::MAX; n_layers] }
+    }
+}
+
+impl SimRecorder for TouchTracer {
+    #[inline]
+    fn inserted(&mut self, gl: LayerId, visible_from: usize) {
+        if visible_from < self.touch[gl.0] {
+            self.touch[gl.0] = visible_from;
+        }
+    }
+}
+
 /// Mutable state of one in-flight request lane.
+#[derive(Clone)]
 struct Lane {
     tenant: usize,
     release: u64,
@@ -182,17 +255,133 @@ struct Lane {
     last_end: u64,
 }
 
+/// The complete mutable state of one in-flight simulation: every
+/// resource clock, event log, candidate pool and counter the loop
+/// touches.  `Clone` freezes it into a resumable checkpoint
+/// ([`SimSnapshot`]); nothing outside this struct (and the immutable
+/// [`SimContext`]) influences a decision, so a clone resumes
+/// bit-identically.
+#[derive(Clone)]
+pub(crate) struct SimState {
+    core_avail: Vec<u64>,
+    core_busy: Vec<u64>,
+    links: LinkSet,
+    weights: Vec<WeightTracker>,
+    evicted: Vec<LayerId>,
+    lanes: Vec<Lane>,
+    trace: MemTrace,
+    cns: Vec<ScheduledCn>,
+    cn_req: Vec<usize>,
+    comms: Vec<CommEvent>,
+    comm_req: Vec<usize>,
+    drams: Vec<DramEvent>,
+    dram_req: Vec<usize>,
+    breakdown: EnergyBreakdown,
+    act_cap: f64,
+    act_occ: f64,
+    /// Virtual admission clock (see [`SimContext::step`]).
+    now: u64,
+    /// Scratch for the arbitration scan; contents are dead between
+    /// steps.
+    cands: Vec<(usize, u64)>,
+    /// Scheduling decisions executed so far.
+    decisions: usize,
+}
+
+impl SimState {
+    /// Any lane still has schedulable candidates.
+    pub(crate) fn has_work(&self) -> bool {
+        self.lanes.iter().any(|l| l.pool.len() > 0)
+    }
+
+    pub(crate) fn decisions(&self) -> usize {
+        self.decisions
+    }
+}
+
+/// An opaque resumable checkpoint of one in-flight simulation, frozen
+/// between two scheduling decisions.  The module docs of
+/// `scheduler::sim` spell out when a snapshot taken under one core
+/// allocation may be resumed under another.
+#[derive(Clone)]
+pub struct SimSnapshot {
+    pub(crate) state: SimState,
+}
+
+impl SimSnapshot {
+    /// Number of scheduling decisions already executed in this state.
+    pub fn decisions(&self) -> usize {
+        self.state.decisions
+    }
+}
+
+/// The divergence-tracking byproduct of a traced run
+/// (`Scheduler::run_traced`): per-layer first-observation indices plus
+/// a grid of resumable snapshots.  This is what the GA's delta cache
+/// stores per simulated parent genome.
+#[derive(Clone)]
+pub struct ScheduleSegments {
+    /// Per (global) layer: index of the first scheduling decision that
+    /// could observe a candidate of that layer (`usize::MAX` if none
+    /// ever pooled — impossible for complete runs, but kept total).
+    pub(crate) touch: Vec<usize>,
+    /// Snapshots in increasing decision order, `Arc`-shared so a child
+    /// run inherits its parent's prefix without copying.
+    pub(crate) snaps: Vec<Arc<SimSnapshot>>,
+}
+
+impl ScheduleSegments {
+    /// Index of the first scheduling decision that could depend on any
+    /// layer whose core differs between allocations `a` and `b` —
+    /// decisions before it are bit-identical under either allocation.
+    /// `usize::MAX` when the allocations are effectively identical.
+    pub fn divergence(&self, a: &[CoreId], b: &[CoreId]) -> usize {
+        assert_eq!(a.len(), b.len(), "allocations over the same layers");
+        assert_eq!(a.len(), self.touch.len(), "one touch index per layer");
+        let mut d = usize::MAX;
+        for (l, (x, y)) in a.iter().zip(b).enumerate() {
+            if x != y {
+                d = d.min(self.touch[l]);
+            }
+        }
+        d
+    }
+
+    /// The deepest snapshot whose decision count is **strictly** below
+    /// `divergence` (strict: a candidate of a changed layer inserted at
+    /// the divergence decision itself would bake the old core's
+    /// readiness into the pool).  `None` when no snapshot qualifies —
+    /// the caller falls back to a cold run.
+    pub fn resume_point(&self, divergence: usize) -> Option<&Arc<SimSnapshot>> {
+        self.snaps
+            .iter()
+            .filter(|s| s.decisions() < divergence)
+            .max_by_key(|s| s.decisions())
+    }
+
+    /// All snapshots, in increasing decision order.
+    pub fn snapshots(&self) -> &[Arc<SimSnapshot>] {
+        &self.snaps
+    }
+}
+
 impl SimContext<'_> {
     /// Run the event-driven co-schedule over every lane.
     pub fn simulate(&self) -> SimOutcome {
-        let topo = &self.arch.topology;
+        let mut rec = NoRecord;
+        let mut st = self.init(&mut rec);
+        while st.has_work() {
+            self.step(&mut st, &mut rec);
+        }
+        self.finish(st)
+    }
+
+    /// Build the initial [`SimState`]: fresh resource clocks and every
+    /// zero-predecessor CN pooled (insertion visibility 0).
+    pub(crate) fn init<R: SimRecorder>(&self, rec: &mut R) -> SimState {
         let n_cores = self.arch.cores.len();
-        let mut core_avail = vec![0u64; n_cores];
-        let mut core_busy = vec![0u64; n_cores];
-        let mut links = LinkSet::new(topo);
-        let mut weights: Vec<WeightTracker> =
+        let weights: Vec<WeightTracker> =
             self.arch.cores.iter().map(|c| WeightTracker::new(c.wgt_mem_bytes)).collect();
-        let mut evicted: Vec<LayerId> = Vec::new();
 
         let mut lanes: Vec<Lane> = self
             .requests
@@ -217,20 +406,10 @@ impl SimContext<'_> {
             let t = &self.tenants[lane.tenant];
             for i in 0..t.sched.graph.len() {
                 if lane.pending[i] == 0 {
-                    add_candidate(t, lane, CnId(i), &weights, self.wgt_fetch_g);
+                    add_candidate(t, lane, CnId(i), &weights, self.wgt_fetch_g, rec, 0);
                 }
             }
         }
-
-        let mut trace = MemTrace::new();
-        let mut cns: Vec<ScheduledCn> = Vec::with_capacity(total_cns);
-        let mut cn_req: Vec<usize> =
-            Vec::with_capacity(if self.tag_events { total_cns } else { 0 });
-        let mut comms: Vec<CommEvent> = Vec::new();
-        let mut comm_req: Vec<usize> = Vec::new();
-        let mut drams: Vec<DramEvent> = Vec::new();
-        let mut dram_req: Vec<usize> = Vec::new();
-        let mut breakdown = EnergyBreakdown::default();
 
         // Pooled activation occupancy in scheduling order, used for
         // backpressure: producers are not scheduled arbitrarily far
@@ -238,334 +417,394 @@ impl SimContext<'_> {
         // would overflow (the pool's memory-full fallback then drains
         // the deepest ready CNs first).
         let act_cap: f64 = self.arch.cores.iter().map(|c| c.act_mem_bytes as f64).sum();
-        let mut act_occ = 0.0f64;
 
-        // Virtual admission clock: monotonically tracks the earliest
-        // time any schedulable candidate could start.  Deadline- and
-        // priority-preference only applies to requests *released* by
-        // `now`, so a future arrival can never pre-empt ready work and
-        // leave cores idle (causal, work-conserving arbitration).  The
-        // request achieving the global minimum readiness is always
-        // released (its readiness is >= its release), so an eligible
-        // request always exists.
-        let mut now = 0u64;
-        let mut cands: Vec<(usize, u64)> = Vec::new(); // (lane, min eff)
+        SimState {
+            core_avail: vec![0u64; n_cores],
+            core_busy: vec![0u64; n_cores],
+            links: LinkSet::new(&self.arch.topology),
+            weights,
+            evicted: Vec::new(),
+            lanes,
+            trace: MemTrace::new(),
+            cns: Vec::with_capacity(total_cns),
+            cn_req: Vec::with_capacity(if self.tag_events { total_cns } else { 0 }),
+            comms: Vec::new(),
+            comm_req: Vec::new(),
+            drams: Vec::new(),
+            dram_req: Vec::new(),
+            breakdown: EnergyBreakdown::default(),
+            act_cap,
+            act_occ: 0.0,
+            now: 0,
+            cands: Vec::new(),
+            decisions: 0,
+        }
+    }
+
+    /// Execute one scheduling decision.  The caller guarantees
+    /// [`SimState::has_work`]; candidates inserted here become visible
+    /// from decision `st.decisions + 1`.
+    pub(crate) fn step<R: SimRecorder>(&self, st: &mut SimState, rec: &mut R) {
+        let topo = &self.arch.topology;
+        let SimState {
+            core_avail,
+            core_busy,
+            links,
+            weights,
+            evicted,
+            lanes,
+            trace,
+            cns,
+            cn_req,
+            comms,
+            comm_req,
+            drams,
+            dram_req,
+            breakdown,
+            act_cap,
+            act_occ,
+            now,
+            cands,
+            decisions,
+        } = st;
+        let act_cap = *act_cap;
+        // candidates inserted during this decision first influence the
+        // next one
+        let vis = *decisions + 1;
+
         // With a single lane the arbitration below always picks lane 0,
         // so the one-shot path (the GA's per-fitness hot loop) skips the
         // heap peek and key construction entirely; the pool pop itself
         // discards the stale heap entries the peek would have, so the
         // picks are identical.
-        let single = lanes.len() == 1;
+        let ri = if lanes.len() == 1 {
+            0
+        } else {
+            // --- inter-request arbitration ---------------------------
+            cands.clear();
+            let mut min_eff = u64::MAX;
+            for (ri, l) in lanes.iter_mut().enumerate() {
+                if l.pool.len() == 0 {
+                    continue;
+                }
+                let eff = l.pool.peek_min_eff().expect("nonempty pool has a minimum");
+                min_eff = min_eff.min(eff);
+                cands.push((ri, eff));
+            }
+            debug_assert!(!cands.is_empty(), "step called with work available");
+            // Virtual admission clock: monotonically tracks the
+            // earliest time any schedulable candidate could start.
+            // Deadline- and priority-preference only applies to
+            // requests *released* by `now`, so a future arrival can
+            // never pre-empt ready work and leave cores idle (causal,
+            // work-conserving arbitration).  The request achieving the
+            // global minimum readiness is always released (its
+            // readiness is >= its release), so an eligible request
+            // always exists.
+            *now = (*now).max(min_eff);
 
-        loop {
-            let ri = if single {
-                if lanes[0].pool.len() == 0 {
-                    break;
+            let mut best: Option<((u64, u64, u64), usize)> = None;
+            for &(ri, eff) in cands.iter() {
+                let l = &lanes[ri];
+                if l.release > *now {
+                    continue; // not yet arrived: ineligible for preference
                 }
-                0
-            } else {
-                // --- inter-request arbitration ---------------------------
-                cands.clear();
-                let mut min_eff = u64::MAX;
-                for (ri, l) in lanes.iter_mut().enumerate() {
-                    if l.pool.len() == 0 {
-                        continue;
-                    }
-                    let eff = l.pool.peek_min_eff().expect("nonempty pool has a minimum");
-                    min_eff = min_eff.min(eff);
-                    cands.push((ri, eff));
-                }
-                if cands.is_empty() {
-                    break;
-                }
-                now = now.max(min_eff);
-
-                let mut best: Option<((u64, u64, u64), usize)> = None;
-                for &(ri, eff) in &cands {
-                    let l = &lanes[ri];
-                    if l.release > now {
-                        continue; // not yet arrived: ineligible for preference
-                    }
-                    let key = match self.arbitration {
-                        Arbitration::Fifo => (0, eff, ri as u64),
-                        Arbitration::Priority => {
-                            (self.tenants[l.tenant].prio_rank, eff, ri as u64)
-                        }
-                        Arbitration::Edf => {
-                            (self.requests[ri].deadline_abs.unwrap_or(u64::MAX), eff, ri as u64)
-                        }
-                    };
-                    let better = match best {
-                        None => true,
-                        Some((k, _)) => key < k,
-                    };
-                    if better {
-                        best = Some((key, ri));
-                    }
-                }
-                best.expect("a released request always exists").1
-            };
-
-            // --- one scheduling decision over the chosen lane's graph ---
-            let rekey = {
-                let lane = &mut lanes[ri];
-                let t = &self.tenants[lane.tenant];
-                let s = t.sched;
-                let alloc = t.alloc;
-                let cn_id = if self.linear_pool {
-                    lane.pool.pop_linear(t.pool_priority, act_occ, act_cap)
-                } else {
-                    match t.pool_priority {
-                        SchedulePriority::Latency => lane.pool.pop_latency(act_occ, act_cap),
-                        SchedulePriority::Memory => lane.pool.pop_memory(act_occ, act_cap),
-                    }
-                }
-                .expect("arbitration picked a nonempty pool");
-                let cn = s.graph.cns.node(cn_id);
-                let layer = s.workload.layer(cn.layer);
-                let core_id = alloc[cn.layer.0];
-                let core = self.arch.core(core_id);
-
-                // 1) incoming data: same-core preds gate by finish time;
-                //    cross-core preds need a routed communication node
-                //    occupying every interconnect link between the two
-                //    cores; a request starts no earlier than its release
-                let mut data_ready = lane.release;
-                for e in s.graph.pred_edges(cn_id) {
-                    let p = lane.sched[e.from.0].expect("pred scheduled");
-                    match e.kind {
-                        EdgeKind::Order => data_ready = data_ready.max(p.end),
-                        EdgeKind::Data => {
-                            if p.core == core_id || e.bytes == 0 {
-                                data_ready = data_ready.max(p.end);
-                            } else {
-                                let route = topo.core_route(p.core, core_id);
-                                let (cs, ce) = links.transfer(route, p.end, e.bytes);
-                                comms.push(CommEvent {
-                                    from_core: p.core,
-                                    to_core: core_id,
-                                    start: cs,
-                                    end: ce,
-                                    bytes: e.bytes,
-                                    links: route.into(),
-                                });
-                                if self.tag_events {
-                                    comm_req.push(ri);
-                                }
-                                breakdown.noc_pj +=
-                                    e.bytes as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
-                                // consumer-side copy allocated at comm start
-                                trace.push(cs, core_id, e.bytes as f64);
-                                act_occ += e.bytes as f64;
-                                // producer copy freed once the transfer ends
-                                let pf = s.fanout[s.graph.cns.node(e.from).layer.0];
-                                trace.push(ce, p.core, -(e.bytes as f64) / pf);
-                                act_occ = (act_occ - e.bytes as f64 / pf).max(0.0);
-                                data_ready = data_ready.max(ce);
-                            }
-                        }
-                    }
-                }
-
-                // 1b) bounded-buffer gates: wait for the gating consumers
-                for g in &s.gate_preds[cn_id.0] {
-                    data_ready = data_ready.max(lane.sched[g.0].expect("gate scheduled").end);
-                }
-
-                // 2) the weight-position operand, fetched through the
-                //    nearest DRAM port.  Resident weights go through the
-                //    per-core tracker keyed by the global (tenant, layer)
-                //    id (so requests of the same tenant share residency,
-                //    and a fetch rekeys every lane's pool); a MatMul
-                //    without an in-graph B producer instead streams its
-                //    B operand (the LLM-decode KV-cache read) on EVERY
-                //    CN — zero resident weights, so it bypasses the
-                //    tracker, never rekeys, never amortizes, and leaves
-                //    no memory-trace footprint (consumed on the fly).
-                let gl = LayerId(t.layer_off + cn.layer.0);
-                let mut weights_ready = 0u64;
-                let mut rekey = None;
-                let fetch = if layer.streams_b_from_dram() {
-                    layer.matmul_b_bytes()
-                } else {
-                    let wbytes = layer.weight_bytes();
-                    if wbytes > 0 {
-                        let f = weights[core_id.0].require_evicting(gl, wbytes, &mut evicted);
-                        if f > 0 {
-                            // residency on this core changed for EVERY
-                            // lane watching it; re-keyed after this
-                            // lane's borrow is released
-                            rekey = Some((core_id.0, gl));
-                        }
-                        f
-                    } else {
-                        0
+                let key = match self.arbitration {
+                    Arbitration::Fifo => (0, eff, ri as u64),
+                    Arbitration::Priority => (self.tenants[l.tenant].prio_rank, eff, ri as u64),
+                    Arbitration::Edf => {
+                        (self.requests[ri].deadline_abs.unwrap_or(u64::MAX), eff, ri as u64)
                     }
                 };
-                if fetch > 0 {
-                    let route = topo.dram_load_route(core_id);
-                    let (ds, de) = links.transfer(route, lane.release, fetch);
-                    drams.push(DramEvent {
-                        core: core_id,
-                        start: ds,
-                        end: de,
-                        bytes: fetch,
-                        kind: DramKind::WeightFetch,
-                        links: route.into(),
-                    });
-                    if self.tag_events {
-                        dram_req.push(ri);
-                    }
-                    breakdown.dram_pj +=
-                        fetch as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
-                    breakdown.noc_pj +=
-                        fetch as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
-                    if let CoreKind::Aimc { weight_load_pj, .. } = core.kind {
-                        // an analog array must (re)program the operand
-                        // before it can multiply by it
-                        breakdown.onchip_pj += fetch as f64 * 8.0 * weight_load_pj;
-                    }
-                    weights_ready = de;
-                }
-
-                // 3) first-layer input activations come from DRAM
-                let mut input_ready = 0u64;
-                let fresh = s.fresh_in_bytes[cn_id.0];
-                if fresh > 0 {
-                    let route = topo.dram_load_route(core_id);
-                    let (ds, de) = links.transfer(route, lane.release, fresh);
-                    drams.push(DramEvent {
-                        core: core_id,
-                        start: ds,
-                        end: de,
-                        bytes: fresh,
-                        kind: DramKind::ActFetch,
-                        links: route.into(),
-                    });
-                    if self.tag_events {
-                        dram_req.push(ri);
-                    }
-                    breakdown.dram_pj += fresh as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
-                    breakdown.noc_pj += fresh as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
-                    trace.push(ds, core_id, fresh as f64);
-                    act_occ += fresh as f64;
-                    input_ready = de;
-                }
-
-                // 4) execute
-                let cost = s.costs.cn_cost(cn, core_id);
-                let start = core_avail[core_id.0]
-                    .max(data_ready)
-                    .max(weights_ready)
-                    .max(input_ready);
-                let end = start + cost.compute_cycles;
-                core_avail[core_id.0] = end;
-                core_busy[core_id.0] += cost.compute_cycles;
-                breakdown.mac_pj += cost.mac_energy_pj;
-                breakdown.onchip_pj += cost.energy_pj - cost.mac_energy_pj;
-
-                // 5) memory trace: outputs allocated at start,
-                //    discardable inputs freed at finish per producer
-                trace.push(start, core_id, cn.output_bytes as f64);
-                act_occ += cn.output_bytes as f64;
-                if layer.predecessors.is_empty() {
-                    trace.push(end, core_id, -(cn.discard_input_bytes as f64));
-                    act_occ = (act_occ - cn.discard_input_bytes as f64).max(0.0);
-                } else {
-                    for (pi, &p) in layer.predecessors.iter().enumerate() {
-                        let share = match layer.op {
-                            OpType::Concat => {
-                                cn.discard_input_bytes as f64 * s.workload.layer(p).k as f64
-                                    / layer.c as f64
-                            }
-                            // MatMul operand B: streamed in once for
-                            // the whole layer (its bytes ride the first
-                            // CN's edges), held while the layer runs,
-                            // and released evenly across the CNs
-                            OpType::MatMul if pi > 0 => {
-                                s.workload.layer(p).output_bytes() as f64
-                                    / s.graph.cns.layer_cns(cn.layer).len() as f64
-                            }
-                            _ => cn.discard_input_bytes as f64,
-                        };
-                        let p_core = alloc[p.0];
-                        if p_core == core_id {
-                            // shared physical buffer on the producer's core
-                            trace.push(end, core_id, -share / s.fanout[p.0]);
-                            act_occ = (act_occ - share / s.fanout[p.0]).max(0.0);
-                        } else {
-                            // our private copy from the communication
-                            trace.push(end, core_id, -share);
-                            act_occ = (act_occ - share).max(0.0);
-                        }
-                    }
-                }
-
-                // 6) sink outputs stream to DRAM via the nearest port
-                if s.workload.successors(cn.layer).is_empty() {
-                    let route = topo.dram_store_route(core_id);
-                    let (ds, de) = links.transfer(route, end, cn.output_bytes);
-                    drams.push(DramEvent {
-                        core: core_id,
-                        start: ds,
-                        end: de,
-                        bytes: cn.output_bytes,
-                        kind: DramKind::ActStore,
-                        links: route.into(),
-                    });
-                    if self.tag_events {
-                        dram_req.push(ri);
-                    }
-                    breakdown.dram_pj +=
-                        cn.output_bytes as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
-                    breakdown.noc_pj +=
-                        cn.output_bytes as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
-                    trace.push(de, core_id, -(cn.output_bytes as f64));
-                    act_occ = (act_occ - cn.output_bytes as f64).max(0.0);
-                    lane.last_end = lane.last_end.max(de);
-                }
-
-                let placed = ScheduledCn { cn: cn_id, core: core_id, start, end };
-                lane.sched[cn_id.0] = Some(placed);
-                lane.last_end = lane.last_end.max(end);
-                cns.push(placed);
-                if self.tag_events {
-                    cn_req.push(ri);
-                }
-
-                // 7) release successors within this lane (data/order
-                //    edges + buffer gates)
-                for e in s.graph.succ_edges(cn_id) {
-                    lane.pending[e.to.0] -= 1;
-                    if lane.pending[e.to.0] == 0 {
-                        add_candidate(t, lane, e.to, &weights, self.wgt_fetch_g);
-                    }
-                }
-                for &g in &s.gate_succs[cn_id.0] {
-                    lane.pending[g.0] -= 1;
-                    if lane.pending[g.0] == 0 {
-                        add_candidate(t, lane, g, &weights, self.wgt_fetch_g);
-                    }
-                }
-                rekey
-            };
-
-            // --- propagate a residency change to every lane's pool ------
-            if let Some((core, fetched)) = rekey {
-                let evicted = &evicted;
-                for l in lanes.iter_mut() {
-                    l.pool.rekey_core(core, |gl| {
-                        if gl == fetched {
-                            Some(0)
-                        } else if evicted.contains(&gl) {
-                            Some(self.wgt_fetch_g[gl.0])
-                        } else {
-                            None
-                        }
-                    });
+                let better = match best {
+                    None => true,
+                    Some((k, _)) => key < k,
+                };
+                if better {
+                    best = Some((key, ri));
                 }
             }
+            best.expect("a released request always exists").1
+        };
+
+        // --- one scheduling decision over the chosen lane's graph ---
+        let rekey = {
+            let lane = &mut lanes[ri];
+            let t = &self.tenants[lane.tenant];
+            let s = t.sched;
+            let alloc = t.alloc;
+            let cn_id = if self.linear_pool {
+                lane.pool.pop_linear(t.pool_priority, *act_occ, act_cap)
+            } else {
+                match t.pool_priority {
+                    SchedulePriority::Latency => lane.pool.pop_latency(*act_occ, act_cap),
+                    SchedulePriority::Memory => lane.pool.pop_memory(*act_occ, act_cap),
+                }
+            }
+            .expect("arbitration picked a nonempty pool");
+            let cn = s.graph.cns.node(cn_id);
+            let layer = s.workload.layer(cn.layer);
+            let core_id = alloc[cn.layer.0];
+            let core = self.arch.core(core_id);
+
+            // 1) incoming data: same-core preds gate by finish time;
+            //    cross-core preds need a routed communication node
+            //    occupying every interconnect link between the two
+            //    cores; a request starts no earlier than its release
+            let mut data_ready = lane.release;
+            for e in s.graph.pred_edges(cn_id) {
+                let p = lane.sched[e.from.0].expect("pred scheduled");
+                match e.kind {
+                    EdgeKind::Order => data_ready = data_ready.max(p.end),
+                    EdgeKind::Data => {
+                        if p.core == core_id || e.bytes == 0 {
+                            data_ready = data_ready.max(p.end);
+                        } else {
+                            let route = topo.core_route(p.core, core_id);
+                            let (cs, ce) = links.transfer(route, p.end, e.bytes);
+                            comms.push(CommEvent {
+                                from_core: p.core,
+                                to_core: core_id,
+                                start: cs,
+                                end: ce,
+                                bytes: e.bytes,
+                                links: route.into(),
+                            });
+                            if self.tag_events {
+                                comm_req.push(ri);
+                            }
+                            breakdown.noc_pj +=
+                                e.bytes as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
+                            // consumer-side copy allocated at comm start
+                            trace.push(cs, core_id, e.bytes as f64);
+                            *act_occ += e.bytes as f64;
+                            // producer copy freed once the transfer ends
+                            let pf = s.fanout[s.graph.cns.node(e.from).layer.0];
+                            trace.push(ce, p.core, -(e.bytes as f64) / pf);
+                            *act_occ = (*act_occ - e.bytes as f64 / pf).max(0.0);
+                            data_ready = data_ready.max(ce);
+                        }
+                    }
+                }
+            }
+
+            // 1b) bounded-buffer gates: wait for the gating consumers
+            for g in &s.gate_preds[cn_id.0] {
+                data_ready = data_ready.max(lane.sched[g.0].expect("gate scheduled").end);
+            }
+
+            // 2) the weight-position operand, fetched through the
+            //    nearest DRAM port.  Resident weights go through the
+            //    per-core tracker keyed by the global (tenant, layer)
+            //    id (so requests of the same tenant share residency,
+            //    and a fetch rekeys every lane's pool); a MatMul
+            //    without an in-graph B producer instead streams its
+            //    B operand (the LLM-decode KV-cache read) on EVERY
+            //    CN — zero resident weights, so it bypasses the
+            //    tracker, never rekeys, never amortizes, and leaves
+            //    no memory-trace footprint (consumed on the fly).
+            let gl = LayerId(t.layer_off + cn.layer.0);
+            let mut weights_ready = 0u64;
+            let mut rekey = None;
+            let fetch = if layer.streams_b_from_dram() {
+                layer.matmul_b_bytes()
+            } else {
+                let wbytes = layer.weight_bytes();
+                if wbytes > 0 {
+                    let f = weights[core_id.0].require_evicting(gl, wbytes, evicted);
+                    if f > 0 {
+                        // residency on this core changed for EVERY
+                        // lane watching it; re-keyed after this
+                        // lane's borrow is released
+                        rekey = Some((core_id.0, gl));
+                    }
+                    f
+                } else {
+                    0
+                }
+            };
+            if fetch > 0 {
+                let route = topo.dram_load_route(core_id);
+                let (ds, de) = links.transfer(route, lane.release, fetch);
+                drams.push(DramEvent {
+                    core: core_id,
+                    start: ds,
+                    end: de,
+                    bytes: fetch,
+                    kind: DramKind::WeightFetch,
+                    links: route.into(),
+                });
+                if self.tag_events {
+                    dram_req.push(ri);
+                }
+                breakdown.dram_pj += fetch as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
+                breakdown.noc_pj += fetch as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
+                if let CoreKind::Aimc { weight_load_pj, .. } = core.kind {
+                    // an analog array must (re)program the operand
+                    // before it can multiply by it
+                    breakdown.onchip_pj += fetch as f64 * 8.0 * weight_load_pj;
+                }
+                weights_ready = de;
+            }
+
+            // 3) first-layer input activations come from DRAM
+            let mut input_ready = 0u64;
+            let fresh = s.fresh_in_bytes[cn_id.0];
+            if fresh > 0 {
+                let route = topo.dram_load_route(core_id);
+                let (ds, de) = links.transfer(route, lane.release, fresh);
+                drams.push(DramEvent {
+                    core: core_id,
+                    start: ds,
+                    end: de,
+                    bytes: fresh,
+                    kind: DramKind::ActFetch,
+                    links: route.into(),
+                });
+                if self.tag_events {
+                    dram_req.push(ri);
+                }
+                breakdown.dram_pj += fresh as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
+                breakdown.noc_pj += fresh as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
+                trace.push(ds, core_id, fresh as f64);
+                *act_occ += fresh as f64;
+                input_ready = de;
+            }
+
+            // 4) execute
+            let cost = s.costs.cn_cost(cn, core_id);
+            let start = core_avail[core_id.0]
+                .max(data_ready)
+                .max(weights_ready)
+                .max(input_ready);
+            let end = start + cost.compute_cycles;
+            core_avail[core_id.0] = end;
+            core_busy[core_id.0] += cost.compute_cycles;
+            breakdown.mac_pj += cost.mac_energy_pj;
+            breakdown.onchip_pj += cost.energy_pj - cost.mac_energy_pj;
+
+            // 5) memory trace: outputs allocated at start,
+            //    discardable inputs freed at finish per producer
+            trace.push(start, core_id, cn.output_bytes as f64);
+            *act_occ += cn.output_bytes as f64;
+            if layer.predecessors.is_empty() {
+                trace.push(end, core_id, -(cn.discard_input_bytes as f64));
+                *act_occ = (*act_occ - cn.discard_input_bytes as f64).max(0.0);
+            } else {
+                for (pi, &p) in layer.predecessors.iter().enumerate() {
+                    let share = match layer.op {
+                        OpType::Concat => {
+                            cn.discard_input_bytes as f64 * s.workload.layer(p).k as f64
+                                / layer.c as f64
+                        }
+                        // MatMul operand B: streamed in once for
+                        // the whole layer (its bytes ride the first
+                        // CN's edges), held while the layer runs,
+                        // and released evenly across the CNs
+                        OpType::MatMul if pi > 0 => {
+                            s.workload.layer(p).output_bytes() as f64
+                                / s.graph.cns.layer_cns(cn.layer).len() as f64
+                        }
+                        _ => cn.discard_input_bytes as f64,
+                    };
+                    let p_core = alloc[p.0];
+                    if p_core == core_id {
+                        // shared physical buffer on the producer's core
+                        trace.push(end, core_id, -share / s.fanout[p.0]);
+                        *act_occ = (*act_occ - share / s.fanout[p.0]).max(0.0);
+                    } else {
+                        // our private copy from the communication
+                        trace.push(end, core_id, -share);
+                        *act_occ = (*act_occ - share).max(0.0);
+                    }
+                }
+            }
+
+            // 6) sink outputs stream to DRAM via the nearest port
+            if s.workload.successors(cn.layer).is_empty() {
+                let route = topo.dram_store_route(core_id);
+                let (ds, de) = links.transfer(route, end, cn.output_bytes);
+                drams.push(DramEvent {
+                    core: core_id,
+                    start: ds,
+                    end: de,
+                    bytes: cn.output_bytes,
+                    kind: DramKind::ActStore,
+                    links: route.into(),
+                });
+                if self.tag_events {
+                    dram_req.push(ri);
+                }
+                breakdown.dram_pj +=
+                    cn.output_bytes as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
+                breakdown.noc_pj +=
+                    cn.output_bytes as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
+                trace.push(de, core_id, -(cn.output_bytes as f64));
+                *act_occ = (*act_occ - cn.output_bytes as f64).max(0.0);
+                lane.last_end = lane.last_end.max(de);
+            }
+
+            let placed = ScheduledCn { cn: cn_id, core: core_id, start, end };
+            lane.sched[cn_id.0] = Some(placed);
+            lane.last_end = lane.last_end.max(end);
+            cns.push(placed);
+            if self.tag_events {
+                cn_req.push(ri);
+            }
+
+            // 7) release successors within this lane (data/order
+            //    edges + buffer gates)
+            for e in s.graph.succ_edges(cn_id) {
+                lane.pending[e.to.0] -= 1;
+                if lane.pending[e.to.0] == 0 {
+                    add_candidate(t, lane, e.to, weights, self.wgt_fetch_g, rec, vis);
+                }
+            }
+            for &g in &s.gate_succs[cn_id.0] {
+                lane.pending[g.0] -= 1;
+                if lane.pending[g.0] == 0 {
+                    add_candidate(t, lane, g, weights, self.wgt_fetch_g, rec, vis);
+                }
+            }
+            rekey
+        };
+
+        // --- propagate a residency change to every lane's pool ------
+        if let Some((core, fetched)) = rekey {
+            let evicted = &*evicted;
+            for l in lanes.iter_mut() {
+                l.pool.rekey_core(core, |gl| {
+                    if gl == fetched {
+                        Some(0)
+                    } else if evicted.contains(&gl) {
+                        Some(self.wgt_fetch_g[gl.0])
+                    } else {
+                        None
+                    }
+                });
+            }
         }
+
+        *decisions += 1;
+    }
+
+    /// Aggregate a drained [`SimState`] into the outcome.
+    pub(crate) fn finish(&self, st: SimState) -> SimOutcome {
+        let topo = &self.arch.topology;
+        let SimState {
+            core_busy,
+            links,
+            lanes,
+            trace,
+            cns,
+            cn_req,
+            comms,
+            comm_req,
+            drams,
+            dram_req,
+            mut breakdown,
+            ..
+        } = st;
 
         debug_assert!(
             lanes.iter().all(|l| l.sched.iter().all(|s| s.is_some())),
@@ -655,13 +894,16 @@ impl SimContext<'_> {
 /// keeps CNs of a resident layer running back to back and avoids
 /// weight thrash when several layers share a core.  CNs with a nonzero
 /// fetch are watched in the pool's per-core bucket so residency
-/// changes re-key them.
-fn add_candidate(
+/// changes re-key them.  `vis` is the insertion-visibility index
+/// reported to the recorder (see [`SimRecorder`]).
+fn add_candidate<R: SimRecorder>(
     t: &SimTenant,
     lane: &mut Lane,
     id: CnId,
     weights: &[WeightTracker],
     wgt_fetch_g: &[u64],
+    rec: &mut R,
+    vis: usize,
 ) {
     let s = t.sched;
     let ready = s
@@ -681,4 +923,5 @@ fn add_candidate(
     let fetch = wgt_fetch_g[gl.0];
     let eff = if fetch == 0 || weights[core.0].is_resident(gl) { ready } else { ready + fetch };
     lane.pool.insert(id, gl, cn.idx, ready, eff, cn.output_bytes, core.0, fetch > 0);
+    rec.inserted(gl, vis);
 }

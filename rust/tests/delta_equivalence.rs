@@ -1,0 +1,371 @@
+//! Equivalence net for the GA's incremental delta re-simulation path:
+//!
+//! 1. **Front bit-identity** — the NSGA-II front of a GA run with
+//!    delta evaluation on must equal the front of the same run with it
+//!    off, genome for genome and metric bit for metric bit.  The
+//!    incremental path is a pure speedup; any divergence is a bug.
+//! 2. **Resume fuzz** — randomized parent/child/grandchild allocation
+//!    chains resumed through `Scheduler::run_resumed_traced` must
+//!    reproduce the cold run of each child, bit for bit, at every
+//!    snapshot spacing.
+//! 3. **Admissibility** — `Scheduler::lower_bounds` must never exceed
+//!    the simulated metrics of any schedule of that allocation, under
+//!    either pool priority (the floors are priority-independent).
+//! 4. **Prune safety** — a genome whose floors are dominated by some
+//!    exactly evaluated point can never sit on the exact Pareto front
+//!    of the evaluated set: the early-abort may only ever discard
+//!    provably dominated genomes.
+//!
+//! One deliberate asymmetry: under `Objective::LatencyMemory` the
+//! peak-memory floor (largest single CN output, allocation-independent
+//! minus a safety margin) sits strictly below every achievable peak,
+//! so no exact point can dominate any floor vector and pruning is
+//! structurally vacuous — the prune tests therefore run the latency
+//! and latency+energy objectives, where floors really bite.
+
+use stream::allocator::{allocation_from_genome, dominates, Ga, GaParams, Objective};
+use stream::arch::{presets, Accelerator, CoreId};
+use stream::cn::{CnGranularity, CnSet};
+use stream::cost::ScheduleMetrics;
+use stream::depgraph::{generate, CnGraph};
+use stream::mapping::CostModel;
+use stream::scheduler::{SchedulePriority, ScheduleResult, Scheduler};
+use stream::util::XorShift64;
+use stream::workload::{models, WorkloadGraph};
+
+const MODELS: [&str; 2] = ["tiny-segment", "tiny-branchy"];
+const ARCHS: [&str; 4] = ["test-dual", "hetero", "hetero_quad", "hetero_quad@mesh"];
+const PRIOS: [SchedulePriority; 2] = [SchedulePriority::Latency, SchedulePriority::Memory];
+
+/// Steps 1-3 artifacts of one (model, arch, granularity) point.
+struct Fixture {
+    workload: WorkloadGraph,
+    arch: Accelerator,
+    costs: CostModel,
+    graph: CnGraph,
+}
+
+impl Fixture {
+    fn new(model: &str, arch_name: &str, lines: u64) -> Fixture {
+        let workload = models::by_name(model).unwrap();
+        let arch = presets::by_name(arch_name).unwrap();
+        let gran = CnGranularity::Lines(lines).for_arch(&arch);
+        let cns = CnSet::build(&workload, gran);
+        let costs = CostModel::build(&workload, &cns, &arch);
+        let graph = generate(&workload, CnSet::build(&workload, gran));
+        Fixture { workload, arch, costs, graph }
+    }
+
+    fn scheduler(&self) -> Scheduler<'_> {
+        Scheduler::new(&self.workload, &self.graph, &self.costs, &self.arch)
+    }
+
+    fn n_genes(&self) -> usize {
+        self.workload.dense_layers().len()
+    }
+
+    fn n_cores(&self) -> usize {
+        self.arch.dense_cores().len()
+    }
+
+    fn random_genome(&self, rng: &mut XorShift64) -> Vec<u16> {
+        (0..self.n_genes()).map(|_| rng.below(self.n_cores() as u64) as u16).collect()
+    }
+
+    fn alloc(&self, genome: &[u16]) -> Vec<CoreId> {
+        allocation_from_genome(&self.workload, &self.arch, genome)
+    }
+}
+
+fn assert_metrics_identical(what: &str, a: &ScheduleMetrics, b: &ScheduleMetrics) {
+    assert_eq!(a.latency_cc, b.latency_cc, "{what}: latency");
+    assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits(), "{what}: energy");
+    assert_eq!(a.peak_mem_bytes.to_bits(), b.peak_mem_bytes.to_bits(), "{what}: peak mem");
+    assert_eq!(a.avg_core_util.to_bits(), b.avg_core_util.to_bits(), "{what}: util");
+}
+
+fn assert_results_identical(what: &str, a: &ScheduleResult, b: &ScheduleResult) {
+    assert_metrics_identical(what, &a.metrics, &b.metrics);
+    assert_eq!(a.cns.len(), b.cns.len(), "{what}: CN count");
+    for (x, y) in a.cns.iter().zip(&b.cns) {
+        assert_eq!(
+            (x.cn, x.core, x.start, x.end),
+            (y.cn, y.core, y.start, y.end),
+            "{what}: CN placement"
+        );
+    }
+    assert_eq!(a.comms.len(), b.comms.len(), "{what}: comm count");
+    for (x, y) in a.comms.iter().zip(&b.comms) {
+        assert_eq!(
+            (x.from_core, x.to_core, x.start, x.end, x.bytes),
+            (y.from_core, y.to_core, y.start, y.end, y.bytes),
+            "{what}: comm event"
+        );
+        assert_eq!(x.links, y.links, "{what}: comm route");
+    }
+    assert_eq!(a.drams.len(), b.drams.len(), "{what}: dram count");
+    for (x, y) in a.drams.iter().zip(&b.drams) {
+        assert_eq!(
+            (x.core, x.start, x.end, x.bytes, x.kind),
+            (y.core, y.start, y.end, y.bytes, y.kind),
+            "{what}: dram event"
+        );
+        assert_eq!(x.links, y.links, "{what}: dram route");
+    }
+    assert_eq!(a.link_stats, b.link_stats, "{what}: link stats");
+    assert_eq!(a.memtrace.events.len(), b.memtrace.events.len(), "{what}: memtrace");
+}
+
+/// 1. The search outcome is invariant under the incremental knob:
+/// same seed, same hyper-parameters, delta evaluation on vs off, the
+/// final Pareto fronts agree genome for genome with bit-identical
+/// metrics — across models, architectures and pool priorities.
+#[test]
+fn incremental_front_is_bit_identical_to_full() {
+    for model in MODELS {
+        for arch_name in ["hetero", "hetero_quad@mesh"] {
+            for priority in PRIOS {
+                let fx = Fixture::new(model, arch_name, 4);
+                let sched = fx.scheduler();
+                let what = format!("{model} on {arch_name}, {priority:?}");
+
+                let run = |incremental: bool| {
+                    let params = GaParams {
+                        population: 12,
+                        generations: 6,
+                        seed: 0xF16,
+                        incremental,
+                        lb_prune: false,
+                        ..GaParams::default()
+                    };
+                    let mut ga = Ga::new(
+                        &fx.workload,
+                        &fx.arch,
+                        &sched,
+                        priority,
+                        Objective::LatencyMemory,
+                        params,
+                    );
+                    let front = ga.run();
+                    let warm_hits = ga.delta_cache().map(|dc| dc.stats().0).unwrap_or(0);
+                    (front, warm_hits)
+                };
+                let (full, _) = run(false);
+                let (inc, warm_hits) = run(true);
+
+                assert!(warm_hits > 0, "{what}: the delta path never warmed up");
+                assert_eq!(full.len(), inc.len(), "{what}: front size");
+                for (f, i) in full.iter().zip(&inc) {
+                    assert_eq!(f.genome, i.genome, "{what}: front genome");
+                    assert_eq!(f.allocation, i.allocation, "{what}: front allocation");
+                    assert_metrics_identical(&what, &f.metrics, &i.metrics);
+                }
+            }
+        }
+    }
+}
+
+/// 2. Randomized parent → child → grandchild mutation chains: each
+/// link of the chain is resumed from the previous run's segments and
+/// must be bit-identical to its own cold run — placements, events,
+/// link counters and all.
+#[test]
+fn random_mutation_chains_resume_bit_identically() {
+    let mut rng = XorShift64::new(0xDE17A);
+    for round in 0..10 {
+        let model = MODELS[rng.below(MODELS.len() as u64) as usize];
+        let arch_name = ARCHS[rng.below(ARCHS.len() as u64) as usize];
+        let priority = PRIOS[rng.below(2) as usize];
+        let lines = if rng.unit() < 0.5 { 2 } else { 4 };
+        let every = [1, 3, 8][rng.below(3) as usize];
+
+        let fx = Fixture::new(model, arch_name, lines);
+        let sched = fx.scheduler();
+        let what = format!("round {round}: {model} on {arch_name}, {priority:?}, every {every}");
+
+        let mut genome = fx.random_genome(&mut rng);
+        let mut alloc = fx.alloc(&genome);
+        let (parent_res, mut segs) = sched.run_traced(&alloc, priority, every);
+        assert_results_identical(
+            &format!("{what} (traced vs run)"),
+            &parent_res,
+            &sched.run(&alloc, priority),
+        );
+
+        for link in 0..3 {
+            // mutate 1-3 genes into a child genome
+            let child = {
+                let mut g = genome.clone();
+                for _ in 0..1 + rng.below(3) {
+                    let i = rng.below(fx.n_genes() as u64) as usize;
+                    g[i] = rng.below(fx.n_cores() as u64) as u16;
+                }
+                g
+            };
+            let child_alloc = fx.alloc(&child);
+            let cold = sched.run(&child_alloc, priority);
+            let d = segs.divergence(&alloc, &child_alloc);
+            match sched.run_resumed_traced(&child_alloc, priority, &segs, d, every) {
+                Some((warm, child_segs)) => {
+                    assert_results_identical(&format!("{what} (link {link})"), &warm, &cold);
+                    segs = child_segs;
+                }
+                None => {
+                    // no snapshot strictly precedes the divergence —
+                    // only possible when the child changed a layer
+                    // observable from the very first decision
+                    assert_eq!(d, 0, "{what} (link {link}): refusal needs divergence 0");
+                    let (cold_traced, child_segs) =
+                        sched.run_traced(&child_alloc, priority, every);
+                    assert_results_identical(
+                        &format!("{what} (link {link} cold)"),
+                        &cold_traced,
+                        &cold,
+                    );
+                    segs = child_segs;
+                }
+            }
+            genome = child;
+            alloc = child_alloc;
+        }
+    }
+}
+
+/// 3. The early-abort floors are admissible: on random allocations
+/// they never exceed the simulated latency, energy or peak memory,
+/// under either pool priority.
+#[test]
+fn lower_bounds_are_admissible_on_random_allocations() {
+    let mut rng = XorShift64::new(0xF100D);
+    for round in 0..24 {
+        let model = MODELS[rng.below(MODELS.len() as u64) as usize];
+        let arch_name = ARCHS[rng.below(ARCHS.len() as u64) as usize];
+        let lines = if rng.unit() < 0.5 { 2 } else { 4 };
+
+        let fx = Fixture::new(model, arch_name, lines);
+        let sched = fx.scheduler();
+        let genome = fx.random_genome(&mut rng);
+        let alloc = fx.alloc(&genome);
+        let what = format!("round {round}: {model} on {arch_name}, lines {lines}");
+
+        let lb = sched.lower_bounds(&alloc);
+        assert!(lb.latency_cc > 0, "{what}: vacuous latency floor");
+        assert!(lb.energy_pj > 0.0, "{what}: vacuous energy floor");
+        for priority in PRIOS {
+            let m = sched.run(&alloc, priority).metrics;
+            assert!(
+                lb.latency_cc <= m.latency_cc,
+                "{what} {priority:?}: latency floor {} > {}",
+                lb.latency_cc,
+                m.latency_cc
+            );
+            assert!(
+                lb.energy_pj <= m.energy_pj,
+                "{what} {priority:?}: energy floor {} > {}",
+                lb.energy_pj,
+                m.energy_pj
+            );
+            assert!(
+                lb.peak_mem_bytes <= m.peak_mem_bytes,
+                "{what} {priority:?}: mem floor {} > {}",
+                lb.peak_mem_bytes,
+                m.peak_mem_bytes
+            );
+        }
+    }
+}
+
+/// 4. Prune safety: over a random evaluated population, any genome
+/// whose floor vector is dominated by some *exact* point cannot be on
+/// the exact Pareto front — so skipping its simulation can never lose
+/// a front member.  This is the set-level property the GA's
+/// early-abort relies on (it only ever compares floors against
+/// exactly evaluated archive points).  The population deliberately
+/// includes the degenerate everything-on-one-core genomes so the
+/// batch spans the full quality range.
+#[test]
+fn dominated_floors_never_belong_to_the_exact_front() {
+    let mut rng = XorShift64::new(0xABACAB);
+    let objectives = [Objective::Latency, Objective::LatencyEnergy];
+    let mut pruned_under_latency = 0usize;
+    for (model, arch_name) in [("tiny-branchy", "hetero_quad"), ("tiny-segment", "hetero")] {
+        let fx = Fixture::new(model, arch_name, 4);
+        let sched = fx.scheduler();
+
+        for priority in PRIOS {
+            let mut genomes: Vec<Vec<u16>> =
+                (0..fx.n_cores()).map(|c| vec![c as u16; fx.n_genes()]).collect();
+            genomes.extend((0..16).map(|_| fx.random_genome(&mut rng)));
+            let allocs: Vec<Vec<CoreId>> = genomes.iter().map(|g| fx.alloc(g)).collect();
+            let metrics: Vec<ScheduleMetrics> =
+                allocs.iter().map(|a| sched.run(a, priority).metrics).collect();
+            let floors: Vec<ScheduleMetrics> =
+                allocs.iter().map(|a| sched.lower_bounds(a)).collect();
+
+            for objective in objectives {
+                let exact: Vec<Vec<f64>> =
+                    metrics.iter().map(|m| objective.values(m)).collect();
+                let on_front = |i: usize| !exact.iter().any(|o| dominates(o, &exact[i]));
+                for (i, lb) in floors.iter().enumerate() {
+                    let lbv = objective.values(lb);
+                    if exact.iter().any(|o| dominates(o, &lbv)) {
+                        if objective == Objective::Latency {
+                            pruned_under_latency += 1;
+                        }
+                        assert!(
+                            !on_front(i),
+                            "{model} on {arch_name}, {priority:?}, {objective:?}: genome {i} \
+                             pruned off the front (floors {lbv:?}, exact {:?})",
+                            exact[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+    // the property must not hold vacuously: under the pure-latency
+    // objective the floors are tight enough to prune bad genomes
+    assert!(pruned_under_latency > 0, "floors never pruned anything under Latency");
+}
+
+/// The GA's lb_prune mode composes with the above: the front it
+/// reports holds exactly simulated, mutually non-dominated points.
+#[test]
+fn lb_prune_ga_front_is_exact() {
+    let fx = Fixture::new("tiny-branchy", "hetero_quad@mesh", 4);
+    let sched = fx.scheduler();
+    let objective = Objective::LatencyEnergy;
+    let params = GaParams {
+        population: 12,
+        generations: 6,
+        seed: 7,
+        incremental: true,
+        lb_prune: true,
+        ..GaParams::default()
+    };
+    let mut ga = Ga::new(
+        &fx.workload,
+        &fx.arch,
+        &sched,
+        SchedulePriority::Latency,
+        objective,
+        params,
+    );
+    let front = ga.run();
+    assert!(!front.is_empty());
+    for r in &front {
+        // exact, not a floor: re-simulating reproduces it bit for bit
+        let fresh = sched.run(&r.allocation, SchedulePriority::Latency).metrics;
+        assert_metrics_identical("lb_prune front member", &r.metrics, &fresh);
+    }
+    for (i, a) in front.iter().enumerate() {
+        for (j, b) in front.iter().enumerate() {
+            if i != j {
+                assert!(
+                    !dominates(&objective.values(&a.metrics), &objective.values(&b.metrics)),
+                    "front members must be mutually non-dominated"
+                );
+            }
+        }
+    }
+}

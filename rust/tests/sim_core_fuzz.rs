@@ -264,6 +264,54 @@ fn widely_spaced_second_request_pins_the_multi_lane_prologue() {
     }
 }
 
+/// Snapshot/resume sweep (delta-evaluation satellite): a traced run
+/// checkpointed at **every** allocation boundary must (a) itself stay
+/// bit-identical to the frozen pre-unification oracle, and (b) resume
+/// from *each* of its snapshots — decision 0 through the last — back
+/// to that same oracle result, bit for bit.  This pins the resumable
+/// [`SimSnapshot`](stream::scheduler::SimSnapshot) path (state clone,
+/// pool clone order, link/weight-tracker freeze) against an engine
+/// that shares no loop body with it.
+#[test]
+fn snapshot_resume_sweep_matches_reference_engines() {
+    let mut rng = XorShift64::new(0x5EC0DE);
+    for round in 0..8 {
+        let model = MODELS[rng.below(MODELS.len() as u64) as usize];
+        let arch_name = ARCHS[rng.below(ARCHS.len() as u64) as usize];
+        let lines = if rng.unit() < 0.5 { 2 } else { 4 };
+        let priority = PRIOS[rng.below(2) as usize];
+
+        let w = models::by_name(model).unwrap();
+        let arch = presets::by_name(arch_name).unwrap();
+        let gran = CnGranularity::Lines(lines).for_arch(&arch);
+        let cns = CnSet::build(&w, gran);
+        let costs = CostModel::build(&w, &cns, &arch);
+        let g = generate(&w, CnSet::build(&w, gran));
+        let sched = Scheduler::new(&w, &g, &costs, &arch);
+        let alloc = random_alloc(&w, &arch, &mut rng);
+        let what = format!("round {round}: {model} on {arch_name}, {priority:?}");
+
+        let oracle = sched.run_legacy_routed(&alloc, priority);
+        let linear = sched.run_reference(&alloc, priority);
+        assert_results_identical(&format!("{what} (linear vs oracle)"), &linear, &oracle);
+
+        // every=1: a checkpoint at every allocation-boundary decision
+        let (traced, segs) = sched.run_traced(&alloc, priority, 1);
+        assert_results_identical(&format!("{what} (traced vs oracle)"), &traced, &oracle);
+        // decision 0 plus one snapshot per remaining decision
+        assert_eq!(segs.snapshots().len(), g.len(), "{what}: snapshot count");
+
+        for snap in segs.snapshots() {
+            let resumed = sched.run_resumed(&alloc, priority, snap);
+            assert_results_identical(
+                &format!("{what} (resume@{} vs oracle)", snap.decisions()),
+                &resumed,
+                &oracle,
+            );
+        }
+    }
+}
+
 fn random_arrival(rng: &mut XorShift64) -> Arrival {
     match rng.below(3) {
         0 => Arrival::OneShot { at_cc: rng.below(200_000) },
