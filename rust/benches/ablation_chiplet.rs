@@ -1,0 +1,128 @@
+//! Ablation: chiplet-scale fan-out — the chip-partitioned parallel
+//! simulation core (`STREAM_SIM_THREADS`) on the hierarchical packages.
+//!
+//! Co-schedules one chip-pure ResNet-18 tenant per chip (a burst of
+//! two simultaneous requests each — the multi-tenant serving shape the
+//! partitioner targets) and sweeps the simulation worker count on each
+//! chiplet package.  Results are bit-identical at every thread count
+//! (asserted here, pinned exhaustively by
+//! `rust/tests/parallel_sim_equivalence.rs`); the interesting number is
+//! the scaling curve cores x threads -> co-schedules/sec, written to
+//! `BENCH_chiplet.json`.
+//!
+//! Target: >= 3x single-schedule speedup at 4 threads on `chiplet_8x8`
+//! (4 chips -> 4 partitions, so 4x is the ceiling).
+//!
+//! ```bash
+//! cargo bench --bench ablation_chiplet
+//! STREAM_BENCH_SCALE=paper cargo bench --bench ablation_chiplet   # + chiplet_16x16
+//! ```
+
+use stream::allocator::allocation_from_genome;
+use stream::arch::{presets, Accelerator, CoreId};
+use stream::scenario::{Arbitration, Arrival, Scenario, ScenarioSim, Tenant};
+use stream::util::bench::{bench, paper_scale};
+use stream::util::Json;
+
+/// One chip-pure tenant per chip: tenant `c`'s dense layers spread over
+/// chip `c`'s dense cores round-robin (chip-major core ids, so gene
+/// `c*P + i` is dense core `i` of chip `c`).
+fn per_chip_scenario(arch: &Accelerator, dense_per_chip: usize) -> (Scenario, Vec<Vec<u16>>) {
+    let n_chips = arch.topology.n_chips();
+    let tenants: Vec<Tenant> = (0..n_chips)
+        .map(|c| {
+            Tenant::new(&format!("chip{c}"), "resnet18", Arrival::Burst { times_cc: vec![0, 0] })
+        })
+        .collect();
+    let scenario = Scenario::new(&format!("per-chip {}", arch.name), tenants);
+    let n_genes = stream::workload::models::by_name("resnet18").unwrap().dense_layers().len();
+    let genomes = (0..n_chips)
+        .map(|c| (0..n_genes).map(|i| (c * dense_per_chip + i % dense_per_chip) as u16).collect())
+        .collect();
+    (scenario, genomes)
+}
+
+fn main() {
+    println!("=== ablation: chiplet fan-out (per-chip ResNet-18 burst) ===\n");
+    let host_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("host parallelism: {host_threads}\n");
+
+    let mut packages = vec![(presets::chiplet_4x4(), 4usize), (presets::chiplet_8x8(), 16)];
+    if paper_scale() {
+        packages.push((presets::chiplet_16x16(), 16));
+    }
+
+    let mut j = std::collections::BTreeMap::new();
+    j.insert("status".to_string(), Json::Str("measured".to_string()));
+    j.insert("host_threads".to_string(), Json::Num(host_threads as f64));
+    let mut speedup_8x8_t4 = 0.0f64;
+
+    for (arch, dense_per_chip) in &packages {
+        let (scenario, genomes) = per_chip_scenario(arch, *dense_per_chip);
+        let sim = ScenarioSim::new(&scenario, arch).expect("scenario builds");
+        let allocs: Vec<Vec<CoreId>> = sim
+            .builds()
+            .iter()
+            .zip(&genomes)
+            .map(|(b, g)| allocation_from_genome(&b.workload, arch, g))
+            .collect();
+        let runner = sim.runner();
+        let n_chips = arch.topology.n_chips();
+        println!(
+            "--- {} ({} cores, {n_chips} chips, {} requests) ---",
+            arch.name,
+            arch.cores.len(),
+            scenario.n_requests()
+        );
+
+        let seq = runner.run_with_threads(&allocs, Arbitration::Fifo, 1);
+        let mut seq_ms = 0.0f64;
+        for threads in [1usize, 2, 4, 8] {
+            let r = runner.run_with_threads(&allocs, Arbitration::Fifo, threads);
+            assert_eq!(
+                r.metrics.latency_cc, seq.metrics.latency_cc,
+                "x{threads}: latency must be bit-identical"
+            );
+            assert_eq!(
+                r.metrics.energy_pj.to_bits(),
+                seq.metrics.energy_pj.to_bits(),
+                "x{threads}: energy must be bit-identical"
+            );
+            if threads > 1 {
+                assert_eq!(r.partitions, n_chips, "x{threads}: the parallel core must engage");
+            }
+
+            let s = bench(&format!("{} x{threads}", arch.name), 1, 7, || {
+                std::hint::black_box(runner.run_with_threads(&allocs, Arbitration::Fifo, threads));
+            });
+            if threads == 1 {
+                seq_ms = s.median_ms;
+            }
+            let speedup = seq_ms / s.median_ms;
+            println!("{s}  | {:>6.1} sched/s | speedup {:.2}x", 1e3 / s.median_ms, speedup);
+            let key = format!("{}_t{threads}_ms", arch.name);
+            j.insert(key, Json::Num(s.median_ms));
+            if arch.name == "chiplet_8x8" && threads == 4 {
+                speedup_8x8_t4 = speedup;
+            }
+        }
+        println!();
+    }
+
+    println!("chiplet_8x8 @ 4 threads: {speedup_8x8_t4:.2}x (target >= 3x, ceiling 4x)");
+    j.insert("speedup_8x8_t4".to_string(), Json::Num(speedup_8x8_t4));
+    if host_threads >= 4 {
+        assert!(
+            speedup_8x8_t4 >= 3.0,
+            "chiplet_8x8 must reach >= 3x at 4 simulation threads, got {speedup_8x8_t4:.2}x"
+        );
+    } else {
+        println!("(host has < 4 threads — skipping the 3x assertion)");
+    }
+
+    let out = Json::Obj(j).to_string_compact() + "\n";
+    match std::fs::write("BENCH_chiplet.json", &out) {
+        Ok(()) => println!("\nwrote BENCH_chiplet.json"),
+        Err(e) => println!("\ncould not write BENCH_chiplet.json: {e}"),
+    }
+}

@@ -36,6 +36,13 @@ use crate::workload::WorkloadGraph;
 /// (pool/add/concat layers pinned to the SIMD core, or to the first
 /// dense core if the architecture has none).
 ///
+/// Architectures with **several** SIMD cores (one per chip in the
+/// chiplet presets) pin each non-dense layer to the SIMD core on the
+/// chip of the nearest *preceding* dense layer's core — the producer's
+/// chip — so pooling never forces an inter-chip crossing and a
+/// chip-pure genome stays chip-pure.  Single-SIMD architectures keep
+/// the exact historical behavior.
+///
 /// # Examples
 ///
 /// ```
@@ -56,8 +63,23 @@ pub fn allocation_from_genome(
     genome: &[u16],
 ) -> Vec<CoreId> {
     let dense_cores = arch.dense_cores();
+    let simd_cores = arch.simd_cores();
     let simd = arch.simd_core().unwrap_or(dense_cores[0]);
+    // chip -> its SIMD core (first one, if a chip carries several)
+    let simd_of_chip: Vec<Option<CoreId>> = if simd_cores.len() > 1 {
+        let mut v = vec![None; arch.topology.n_chips()];
+        for &s in &simd_cores {
+            let chip = arch.topology.chip_of_core(s);
+            if v[chip].is_none() {
+                v[chip] = Some(s);
+            }
+        }
+        v
+    } else {
+        Vec::new()
+    };
     let mut gi = 0;
+    let mut last_dense: Option<CoreId> = None;
     workload
         .layers()
         .iter()
@@ -65,7 +87,13 @@ pub fn allocation_from_genome(
             if l.op.is_dense() {
                 let c = dense_cores[genome[gi] as usize % dense_cores.len()];
                 gi += 1;
+                last_dense = Some(c);
                 c
+            } else if simd_cores.len() > 1 {
+                let chip = last_dense
+                    .map(|c| arch.topology.chip_of_core(c))
+                    .unwrap_or_else(|| arch.topology.chip_of_core(simd_cores[0]));
+                simd_of_chip[chip].unwrap_or(simd)
             } else {
                 simd
             }
@@ -149,6 +177,21 @@ mod tests {
         assert_eq!(alloc[0], CoreId(0));
         assert_eq!(alloc[2], CoreId(1));
         assert_eq!(alloc[3], CoreId(2));
+    }
+
+    #[test]
+    fn multi_simd_pins_non_dense_to_producer_chip() {
+        let w = tiny_segment();
+        let arch = presets::chiplet_4x4(); // 4 chips x (4 dense + 1 SIMD)
+        // genes 4..7 index chip 1's dense cores (ids 5..9, SIMD id 9)
+        let alloc = allocation_from_genome(&w, &arch, &[4, 5, 6]);
+        assert_eq!(alloc[0], CoreId(5));
+        assert_eq!(alloc[1], CoreId(9), "maxpool follows its producer's chip");
+        assert_eq!(alloc[4], CoreId(9), "add follows its producer's chip");
+        // chip-pure allocations stay chip-pure
+        for c in &alloc {
+            assert_eq!(arch.topology.chip_of_core(*c), 1);
+        }
     }
 
     #[test]

@@ -163,9 +163,18 @@ impl Accelerator {
         self.cores.iter().filter(|c| !c.is_simd()).map(|c| c.id).collect()
     }
 
-    /// Id of the SIMD core (pool / add layers), if present.
+    /// Id of the SIMD core (pool / add layers), if present.  Multi-chip
+    /// packages carry one per chip; this returns the first (see
+    /// [`Accelerator::simd_cores`]).
     pub fn simd_core(&self) -> Option<CoreId> {
         self.cores.iter().find(|c| c.is_simd()).map(|c| c.id)
+    }
+
+    /// Ids of every SIMD core (one per chip in the chiplet presets; the
+    /// allocator pins non-dense layers to the SIMD core of the chip
+    /// their producer runs on).
+    pub fn simd_cores(&self) -> Vec<CoreId> {
+        self.cores.iter().filter(|c| c.is_simd()).map(|c| c.id).collect()
     }
 
     /// Total on-chip memory in bytes (area-parity bookkeeping).

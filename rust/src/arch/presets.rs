@@ -11,6 +11,14 @@
 //! `sc-tpu@crossbar`, …) that swaps the default shared bus for the
 //! matching routed fabric via [`with_noc`], keeping the cores — and so
 //! the iso-area invariants — untouched.
+//!
+//! Beyond the single-package presets, the **chiplet family**
+//! ([`chiplet_4x4`]/[`chiplet_8x8`]/[`chiplet_16x16`], 16/64/256 dense
+//! cores) builds hierarchical multi-chip packages: per chip an XY mesh
+//! of TPU-like cores plus one SIMD core and a private DRAM port, chips
+//! joined by slow SerDes-class inter-chip links
+//! ([`Topology::hierarchical`]).  These are the scale targets of the
+//! partition-parallel simulation core (`STREAM_SIM_THREADS`).
 
 use super::{Accelerator, Core, CoreId, CoreKind, Dataflow, Topology};
 use crate::cacti;
@@ -26,6 +34,9 @@ const BUS_BW: u64 = 128;
 const DRAM_BW: u64 = 64;
 /// Local SRAM port width per core, bits per cycle.
 const SRAM_BW: u64 = 512;
+/// Inter-chip (die-to-die) link bandwidth, bits per clock cycle — a
+/// quarter of the on-chip fabric width, like real SerDes channels.
+const INTER_CHIP_BW: u64 = 32;
 
 fn digital_core(id: usize, name: &str, df: &[(Dim, usize)], act: u64, wgt: u64) -> Core {
     Core {
@@ -162,6 +173,75 @@ pub fn exploration_archs() -> Vec<Accelerator> {
     vec![sc_tpu(), sc_eye(), sc_env(), hom_tpu(), hom_eye(), hom_env(), hetero_quad()]
 }
 
+// ---------------------------------------------------------------------------
+// Chiplet packages (hierarchical topologies, `scheduler/parsim.rs` scale)
+// ---------------------------------------------------------------------------
+
+/// Build an `n_chips`-chip package: each chip is `dense_per_chip`
+/// TPU-like `C 16 | K 16` cores plus one SIMD core on an XY mesh with
+/// its **own** DRAM port, chips joined by slow directed SerDes links
+/// ([`INTER_CHIP_BW`] bits/cc, [`cacti::SERDES_PJ_PER_BIT`]).  Core ids
+/// are chip-major: chip *k* owns `k*(dense_per_chip+1) ..` with its
+/// SIMD core last, so every chip can run pooling/residual layers
+/// without crossing the package.
+fn chiplet(name: &str, package_cols: usize, n_chips: usize, dense_per_chip: usize) -> Accelerator {
+    let per = dense_per_chip + 1;
+    let (act, wgt) = (64 * 1024, 64 * 1024);
+    let mut cores = Vec::with_capacity(n_chips * per);
+    let mut chips = Vec::with_capacity(n_chips);
+    for chip in 0..n_chips {
+        for i in 0..dense_per_chip {
+            cores.push(digital_core(
+                chip * per + i,
+                &format!("c{chip}t{i}"),
+                &[(Dim::C, 16), (Dim::K, 16)],
+                act,
+                wgt,
+            ));
+        }
+        cores.push(simd_core(chip * per + dense_per_chip, SIMD_BUF));
+        let cols = (per as f64).sqrt().ceil() as usize;
+        chips.push(Topology::mesh2d(
+            per,
+            cols,
+            BUS_BW,
+            cacti::NOC_HOP_PJ_PER_BIT,
+            DRAM_BW,
+            cacti::DRAM_PJ_PER_BIT,
+            1,
+        ));
+    }
+    let topology = Topology::hierarchical(
+        name,
+        package_cols,
+        chips,
+        INTER_CHIP_BW,
+        cacti::SERDES_PJ_PER_BIT,
+    );
+    Accelerator { name: name.to_string(), cores, topology }
+}
+
+/// 16 dense cores: a 2x2 package of 4-dense-core chips.
+pub fn chiplet_4x4() -> Accelerator {
+    chiplet("chiplet_4x4", 2, 4, 4)
+}
+
+/// 64 dense cores: a 2x2 package of 16-dense-core chips.
+pub fn chiplet_8x8() -> Accelerator {
+    chiplet("chiplet_8x8", 2, 4, 16)
+}
+
+/// 256 dense cores: a 4x4 package of 16-dense-core chips.
+pub fn chiplet_16x16() -> Accelerator {
+    chiplet("chiplet_16x16", 4, 16, 16)
+}
+
+/// The chiplet package family, smallest to largest — the hierarchical
+/// counterpart of [`exploration_archs`].
+pub fn chiplet_archs() -> Vec<Accelerator> {
+    vec![chiplet_4x4(), chiplet_8x8(), chiplet_16x16()]
+}
+
 /// Look an architecture up by CLI name.  An optional `@<topology>`
 /// suffix ([`TOPOLOGY_NAMES`]) swaps the interconnect: `hetero@mesh`,
 /// `hom-tpu@ring`, `sc-tpu@crossbar`, `diana@bus`, ….
@@ -185,6 +265,9 @@ pub fn by_name(name: &str) -> Option<Accelerator> {
         "depfin" => Some(depfin()),
         "aimc-4x4" => Some(aimc_4x4()),
         "diana" => Some(diana()),
+        "chiplet_4x4" | "chiplet-4x4" => Some(chiplet_4x4()),
+        "chiplet_8x8" | "chiplet-8x8" => Some(chiplet_8x8()),
+        "chiplet_16x16" | "chiplet-16x16" => Some(chiplet_16x16()),
         _ => None,
     }
 }
@@ -192,6 +275,7 @@ pub fn by_name(name: &str) -> Option<Accelerator> {
 pub const ARCH_NAMES: &[&str] = &[
     "sc-tpu", "sc-eye", "sc-env", "hom-tpu", "hom-eye", "hom-env", "hetero",
     "depfin", "aimc-4x4", "diana",
+    "chiplet_4x4", "chiplet_8x8", "chiplet_16x16",
 ];
 
 /// Interconnect suffixes accepted by [`by_name`]'s `arch@topology` form
@@ -407,6 +491,44 @@ mod tests {
         // the identity swap reproduces the default topology exactly
         let rebus = with_noc(hetero_quad(), "bus").unwrap();
         assert_eq!(bus.topology.fingerprint(), rebus.topology.fingerprint());
+    }
+
+    #[test]
+    fn chiplet_family_scales_dense_cores() {
+        let expect = [(16usize, 4usize), (64, 4), (256, 16)];
+        for (arch, (dense, n_chips)) in chiplet_archs().into_iter().zip(expect) {
+            assert_eq!(arch.dense_cores().len(), dense, "{}", arch.name);
+            assert_eq!(arch.topology.n_chips(), n_chips, "{}", arch.name);
+            assert_eq!(arch.topology.n_cores(), arch.cores.len(), "{}", arch.name);
+            // one SIMD core and one DRAM port per chip
+            let simd = arch.cores.iter().filter(|c| c.is_simd()).count();
+            assert_eq!(simd, n_chips, "{}", arch.name);
+            assert_eq!(arch.topology.n_dram_ports(), n_chips, "{}", arch.name);
+            assert!(arch.topology.inter_chip_links().count() > 0, "{}", arch.name);
+        }
+    }
+
+    #[test]
+    fn chiplet_names_resolve_and_fingerprints_differ() {
+        let a = by_name("chiplet_4x4").unwrap();
+        let b = by_name("chiplet-4x4").unwrap();
+        assert_eq!(a.topology.fingerprint(), b.topology.fingerprint());
+        let fps: std::collections::HashSet<u64> =
+            chiplet_archs().iter().map(|a| a.topology.fingerprint()).collect();
+        assert_eq!(fps.len(), 3, "chip counts must never alias in caches");
+    }
+
+    #[test]
+    fn chiplet_cores_sit_on_their_own_chip() {
+        let arch = chiplet_4x4();
+        let per = arch.cores.len() / arch.topology.n_chips();
+        for c in &arch.cores {
+            assert_eq!(arch.topology.chip_of_core(c.id), c.id.0 / per);
+        }
+        // each chip's last core is its SIMD core
+        for chip in 0..arch.topology.n_chips() {
+            assert!(arch.cores[chip * per + per - 1].is_simd());
+        }
     }
 
     #[test]

@@ -43,6 +43,11 @@ pub const BUS_PJ_PER_BIT: f64 = 0.15;
 /// pay once per hop).
 pub const NOC_HOP_PJ_PER_BIT: f64 = 0.06;
 
+/// Inter-chip (die-to-die) link energy in pJ/bit: SerDes lanes or a
+/// silicon-interposer channel — an order of magnitude above an on-chip
+/// NoC hop, still well below going all the way out to DRAM.
+pub const SERDES_PJ_PER_BIT: f64 = 0.8;
+
 /// Digital MAC energy at 8-bit precision, pJ (28 nm class).
 pub const MAC_PJ_DIGITAL_8B: f64 = 0.1;
 

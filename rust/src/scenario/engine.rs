@@ -163,6 +163,21 @@ impl ScenarioRunner<'_> {
     /// and fold the request-tagged outcome into per-tenant serving
     /// statistics.
     pub fn run(&self, allocs: &[Vec<CoreId>], arbitration: Arbitration) -> ScenarioResult {
+        self.run_with_threads(allocs, arbitration, 0)
+    }
+
+    /// Like [`run`](Self::run) with an explicit simulation-core worker
+    /// count: 0 resolves `STREAM_SIM_THREADS` from the environment, 1
+    /// forces the sequential loop, higher values permit the
+    /// chip-partitioned parallel core.  Bit-identical results for every
+    /// value (pinned by `rust/tests/parallel_sim_equivalence.rs`);
+    /// [`ScenarioResult::partitions`] reports what actually ran.
+    pub fn run_with_threads(
+        &self,
+        allocs: &[Vec<CoreId>],
+        arbitration: Arbitration,
+        sim_threads: usize,
+    ) -> ScenarioResult {
         assert_eq!(allocs.len(), self.sim.builds.len(), "one allocation per tenant");
         for (b, a) in self.sim.builds.iter().zip(allocs) {
             assert_eq!(a.len(), b.workload.len(), "allocation per layer");
@@ -200,6 +215,7 @@ impl ScenarioRunner<'_> {
             arbitration,
             linear_pool: false,
             tag_events: true,
+            sim_threads,
         }
         .simulate();
 
@@ -274,6 +290,7 @@ impl ScenarioRunner<'_> {
             memtrace: out.memtrace,
             outcomes,
             tenants,
+            partitions: out.partitions,
         }
     }
 }

@@ -66,6 +66,10 @@ pub struct ScenarioResult {
     pub memtrace: MemTrace,
     pub outcomes: Vec<RequestOutcome>,
     pub tenants: Vec<TenantStats>,
+    /// How many chip partitions the simulation core ran concurrently
+    /// (1 = sequential; see `STREAM_SIM_THREADS`).  Observational only
+    /// — results are bit-identical for every value.
+    pub partitions: usize,
 }
 
 impl ScenarioResult {

@@ -254,6 +254,9 @@ impl<'a> Scheduler<'a> {
             arbitration: Arbitration::Fifo,
             linear_pool,
             tag_events: false,
+            // single-lane runs have nothing to partition; keep the
+            // one-shot GA hot path out of the env lookup entirely
+            sim_threads: 1,
         };
         f(&ctx)
     }

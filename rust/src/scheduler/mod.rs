@@ -56,6 +56,7 @@
 
 mod engine;
 pub mod memtrace;
+pub(crate) mod parsim;
 pub(crate) mod pool;
 #[cfg(any(test, feature = "reference-engines"))]
 mod reference;

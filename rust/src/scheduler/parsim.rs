@@ -1,0 +1,410 @@
+//! The partition-parallel simulation core: run one chip's lanes per
+//! worker thread, then merge the recorded decision streams into the
+//! exact sequential outcome.
+//!
+//! # Why lane-granular chip partitioning
+//!
+//! On a hierarchical (multi-chip) [`Topology`], a request lane whose
+//! entire allocation sits on one chip touches only that chip's
+//! resources: its cores' availability clocks, its weight trackers, its
+//! intra-chip links and its DRAM port (hierarchical topologies restrict
+//! the nearest-port search to same-chip ports).  Lanes on different
+//! chips therefore interact through exactly two global couplings:
+//!
+//! 1. **arbitration** — the virtual admission clock `now` and the pick
+//!    of which lane gets the next decision, and
+//! 2. **pooled activation occupancy** (`act_occ`) — the memory-full
+//!    fallback of the candidate pools.
+//!
+//! Both are handled *exactly*, not approximately:
+//!
+//! - Each chip's sub-simulation reuses the sequential
+//!   [`SimContext::step`] unchanged over a state whose foreign lanes
+//!   have permanently empty pools, and records per decision the
+//!   arbitration *fronts* (each own lane's `peek_min_eff`), the picked
+//!   lane and the event-log watermarks.  The merge then **replays the
+//!   sequential arbitration** over the recorded fronts — same admission
+//!   clock, same eligibility rule, same key — and verifies that every
+//!   global pick equals the owning chip's recorded local pick.  Any
+//!   mismatch aborts to the sequential loop.
+//! - After the chip runs, a **headroom check** proves the occupancy
+//!   coupling inert: if the sum of the chips' clamped occupancy peaks
+//!   plus the largest single CN output fits the pooled activation
+//!   capacity, then every pool pop in *both* the per-chip runs and the
+//!   sequential interleaving sees `fits() == true` (the global clamped
+//!   occupancy never exceeds the sum of the local ones), so every pop
+//!   is pure key-order and the decision bodies coincide.  If the check
+//!   fails, the parallel result is discarded and the sequential loop
+//!   runs.
+//!
+//! Every fallback trigger is a deterministic function of the recorded
+//! per-chip data — never of thread timing — so the outcome is
+//! **bit-identical for every `STREAM_SIM_THREADS` value** (pinned by
+//! `rust/tests/parallel_sim_equivalence.rs`).  The merged energy
+//! breakdown is re-derived by replaying the per-decision event slices
+//! in global order, reproducing the sequential float-summation order
+//! exactly.
+//!
+//! [`Topology`]: crate::arch::Topology
+
+use crate::arch::{CoreId, CoreKind, LinkId, Topology};
+use crate::cn::CnId;
+use crate::cost::EnergyBreakdown;
+use crate::scheduler::memtrace::{MemEvent, MemTrace};
+use crate::util::parallel_map_with;
+
+use super::resources::{LinkSet, WeightTracker};
+use super::sim::{NoRecord, SimContext, SimOutcome, SimState};
+use super::DramKind;
+
+/// One recorded scheduling decision of a chip's sub-simulation.
+struct StepRec {
+    /// `(lane, peek_min_eff)` of every own nonempty lane *before* the
+    /// decision — the chip's contribution to the arbitration front.
+    fronts: Vec<(usize, u64)>,
+    /// The lane the local arbitration picked.
+    picked: usize,
+    /// Event-log watermarks *after* the decision (cumulative lengths;
+    /// the CN log grows by exactly one per decision, so its watermark
+    /// is the decision index).
+    comms_len: usize,
+    drams_len: usize,
+    trace_len: usize,
+}
+
+/// A completed chip sub-simulation: final state + decision recording.
+struct ChipRun {
+    state: SimState,
+    steps: Vec<StepRec>,
+}
+
+/// Attempt the chip-partitioned parallel simulation.  Returns `None`
+/// whenever exactness cannot be established — not chip-partitionable,
+/// fewer than two busy chips, activation headroom exceeded, or an
+/// arbitration-replay mismatch — and the caller runs the sequential
+/// loop instead.
+pub(crate) fn try_parallel(ctx: &SimContext, threads: usize) -> Option<SimOutcome> {
+    let topo = &ctx.arch.topology;
+    if threads < 2
+        || topo.n_chips() < 2
+        || ctx.requests.len() < 2
+        || ctx.linear_pool
+        || !ctx.tag_events
+    {
+        return None;
+    }
+
+    // --- partition lanes by the chip of their allocation -------------
+    let chip_of_tenant: Vec<Option<usize>> =
+        ctx.tenants.iter().map(|t| chip_of_alloc(topo, t.alloc)).collect();
+    let mut chip_of_lane = Vec::with_capacity(ctx.requests.len());
+    for r in ctx.requests {
+        chip_of_lane.push(chip_of_tenant[r.tenant]?);
+    }
+    // busy chips in first-appearance (lane) order; slot = run index
+    let mut chip_slot: Vec<Option<usize>> = vec![None; topo.n_chips()];
+    let mut busy: Vec<usize> = Vec::new();
+    for &c in &chip_of_lane {
+        if chip_slot[c].is_none() {
+            chip_slot[c] = Some(busy.len());
+            busy.push(c);
+        }
+    }
+    if busy.len() < 2 {
+        return None;
+    }
+    let run_of_lane: Vec<usize> =
+        chip_of_lane.iter().map(|&c| chip_slot[c].expect("busy chip")).collect();
+
+    // --- run each chip's sub-simulation on its own worker ------------
+    let masks: Vec<Vec<bool>> = busy
+        .iter()
+        .map(|&chip| chip_of_lane.iter().map(|&c| c == chip).collect())
+        .collect();
+    let runs: Vec<ChipRun> =
+        parallel_map_with(masks, |owned| run_chip(ctx, &owned), threads.min(busy.len()));
+
+    // --- headroom: the occupancy coupling must be provably inert -----
+    let act_cap: f64 = ctx.arch.cores.iter().map(|c| c.act_mem_bytes as f64).sum();
+    let mut max_out = 0u64;
+    let mut seen = vec![false; ctx.tenants.len()];
+    for r in ctx.requests {
+        if std::mem::replace(&mut seen[r.tenant], true) {
+            continue;
+        }
+        let g = ctx.tenants[r.tenant].sched.graph;
+        for i in 0..g.len() {
+            max_out = max_out.max(g.cns.node(CnId(i)).output_bytes);
+        }
+    }
+    let peaks: f64 = runs.iter().map(|r| clamped_peak(&r.state.trace.events)).sum();
+    if peaks + max_out as f64 > act_cap {
+        return None;
+    }
+
+    // --- deterministic merge: replay the sequential arbitration ------
+    let total: usize = runs.iter().map(|r| r.steps.len()).sum();
+    let mut ptr = vec![0usize; runs.len()];
+    let mut consumed = vec![(0usize, 0usize, 0usize); runs.len()];
+    let mut now = 0u64;
+    let mut act_occ = 0.0f64;
+    let mut bd = EnergyBreakdown::default();
+    let mut cns = Vec::with_capacity(total);
+    let mut cn_req = Vec::with_capacity(total);
+    let mut comms = Vec::new();
+    let mut comm_req = Vec::new();
+    let mut drams = Vec::new();
+    let mut dram_req = Vec::new();
+    let mut events: Vec<MemEvent> = Vec::new();
+
+    for _ in 0..total {
+        // the union of the chips' current fronts is exactly the
+        // sequential arbitration scan's candidate list (a chip's front
+        // is constant between its own decisions: only a chip's own
+        // decisions mutate its lanes' pools)
+        let mut min_eff = u64::MAX;
+        let mut best: Option<((u64, u64, u64), usize)> = None;
+        for (j, run) in runs.iter().enumerate() {
+            if ptr[j] < run.steps.len() {
+                for &(_, eff) in &run.steps[ptr[j]].fronts {
+                    min_eff = min_eff.min(eff);
+                }
+            }
+        }
+        now = now.max(min_eff);
+        for (j, run) in runs.iter().enumerate() {
+            if ptr[j] >= run.steps.len() {
+                continue;
+            }
+            for &(ri, eff) in &run.steps[ptr[j]].fronts {
+                if ctx.requests[ri].release > now {
+                    continue; // not yet arrived: ineligible for preference
+                }
+                let key = match ctx.arbitration {
+                    super::Arbitration::Fifo => (0, eff, ri as u64),
+                    super::Arbitration::Priority => {
+                        (ctx.tenants[ctx.requests[ri].tenant].prio_rank, eff, ri as u64)
+                    }
+                    super::Arbitration::Edf => {
+                        (ctx.requests[ri].deadline_abs.unwrap_or(u64::MAX), eff, ri as u64)
+                    }
+                };
+                let better = match best {
+                    None => true,
+                    Some((k, _)) => key < k,
+                };
+                if better {
+                    best = Some((key, ri));
+                }
+            }
+        }
+        let ri = best?.1;
+        let j = run_of_lane[ri];
+        let run = &runs[j];
+        let rec = &run.steps[ptr[j]];
+        if rec.picked != ri {
+            // a lane was globally eligible earlier than its chip knew
+            // (cross-chip admission-clock advance): the local stream
+            // diverges from the sequential one — abort to sequential
+            return None;
+        }
+
+        // consume this decision's event slices in sequential order,
+        // re-deriving the energy breakdown with the sequential
+        // float-summation order (per field: comm NoC adds, then DRAM
+        // adds in push order, then the execute adds)
+        let placed = run.state.cns[ptr[j]];
+        let (c0, d0, t0) = consumed[j];
+        for c in &run.state.comms[c0..rec.comms_len] {
+            bd.noc_pj += c.bytes as f64 * 8.0 * topo.route_noc_pj_per_bit(&c.links);
+            comms.push(c.clone());
+            comm_req.push(ri);
+        }
+        for d in &run.state.drams[d0..rec.drams_len] {
+            bd.dram_pj += d.bytes as f64 * 8.0 * topo.route_dram_pj_per_bit(&d.links);
+            bd.noc_pj += d.bytes as f64 * 8.0 * topo.route_noc_pj_per_bit(&d.links);
+            if d.kind == DramKind::WeightFetch {
+                if let CoreKind::Aimc { weight_load_pj, .. } = ctx.arch.core(d.core).kind {
+                    bd.onchip_pj += d.bytes as f64 * 8.0 * weight_load_pj;
+                }
+            }
+            drams.push(d.clone());
+            dram_req.push(ri);
+        }
+        let t = &ctx.tenants[ctx.requests[ri].tenant];
+        let cost = t.sched.costs.cn_cost(t.sched.graph.cns.node(placed.cn), placed.core);
+        bd.mac_pj += cost.mac_energy_pj;
+        bd.onchip_pj += cost.energy_pj - cost.mac_energy_pj;
+        for e in &run.state.trace.events[t0..rec.trace_len] {
+            if e.delta > 0.0 {
+                act_occ += e.delta;
+            } else {
+                act_occ = (act_occ + e.delta).max(0.0);
+            }
+            events.push(*e);
+        }
+        cns.push(placed);
+        cn_req.push(ri);
+        consumed[j] = (rec.comms_len, rec.drams_len, rec.trace_len);
+        ptr[j] += 1;
+    }
+    debug_assert!(
+        ptr.iter().zip(&runs).all(|(&p, r)| p == r.steps.len()),
+        "merge consumed every chip's decisions"
+    );
+
+    // --- reassemble the global end state and finish as usual ---------
+    let n_cores = ctx.arch.cores.len();
+    let mut core_avail = vec![0u64; n_cores];
+    let mut core_busy = vec![0u64; n_cores];
+    for c in 0..n_cores {
+        if let Some(j) = chip_slot[topo.chip_of_core(CoreId(c))] {
+            core_avail[c] = runs[j].state.core_avail[c];
+            core_busy[c] = runs[j].state.core_busy[c];
+        }
+    }
+    let mut links = LinkSet::new(topo);
+    for l in 0..topo.n_links() {
+        // inter-chip links (owner None) are never crossed by chip-pure
+        // lanes — in the sequential run either — and keep fresh state
+        if let Some(j) = topo.chip_of_link(LinkId(l)).and_then(|chip| chip_slot[chip]) {
+            links.adopt_link(&runs[j].state.links, LinkId(l));
+        }
+    }
+    let lanes = (0..ctx.requests.len())
+        .map(|ri| runs[run_of_lane[ri]].state.lanes[ri].clone())
+        .collect();
+    let weights: Vec<WeightTracker> =
+        ctx.arch.cores.iter().map(|c| WeightTracker::new(c.wgt_mem_bytes)).collect();
+    let merged = SimState {
+        core_avail,
+        core_busy,
+        links,
+        weights,
+        evicted: Vec::new(),
+        lanes,
+        trace: MemTrace { events },
+        cns,
+        cn_req,
+        comms,
+        comm_req,
+        drams,
+        dram_req,
+        breakdown: bd,
+        act_cap,
+        act_occ,
+        now,
+        cands: Vec::new(),
+        decisions: total,
+    };
+    let mut out = ctx.finish(merged);
+    out.partitions = runs.len();
+    Some(out)
+}
+
+/// Drive one chip's sub-simulation with the unchanged sequential
+/// [`SimContext::step`], recording the arbitration front before and the
+/// pick + event watermarks after every decision.
+fn run_chip(ctx: &SimContext, owned: &[bool]) -> ChipRun {
+    let mut rec = NoRecord;
+    let mut st = ctx.init_owned(&mut rec, Some(owned));
+    let mut steps = Vec::new();
+    while st.has_work() {
+        let mut fronts = Vec::new();
+        for (ri, l) in st.lanes.iter_mut().enumerate() {
+            if l.pool.len() > 0 {
+                fronts.push((ri, l.pool.peek_min_eff().expect("nonempty pool has a minimum")));
+            }
+        }
+        ctx.step(&mut st, &mut rec);
+        let picked = *st.cn_req.last().expect("tag_events records the picked lane");
+        steps.push(StepRec {
+            fronts,
+            picked,
+            comms_len: st.comms.len(),
+            drams_len: st.drams.len(),
+            trace_len: st.trace.events.len(),
+        });
+    }
+    ChipRun { state: st, steps }
+}
+
+/// The single chip hosting an allocation's every core — with every
+/// route the simulation can take (core→core, core→DRAM) verified to
+/// stay on that chip — or `None` when the allocation spans chips (or
+/// a custom chip map routes off-chip).
+fn chip_of_alloc(topo: &Topology, alloc: &[CoreId]) -> Option<usize> {
+    let mut cores: Vec<CoreId> = alloc.to_vec();
+    cores.sort_unstable();
+    cores.dedup();
+    let chip = topo.chip_of_core(*cores.first()?);
+    if cores.iter().any(|&c| topo.chip_of_core(c) != chip) {
+        return None;
+    }
+    let on_chip =
+        |route: &[LinkId]| route.iter().all(|l| topo.chip_of_link(*l) == Some(chip));
+    for &c in &cores {
+        if !on_chip(topo.dram_load_route(c)) || !on_chip(topo.dram_store_route(c)) {
+            return None;
+        }
+        for &d in &cores {
+            if c != d && !on_chip(topo.core_route(c, d)) {
+                return None;
+            }
+        }
+    }
+    Some(chip)
+}
+
+/// Peak of the clamped occupancy replay over a chip's memory-trace
+/// events in **push order** — exactly the `act_occ` trajectory the
+/// sequential loop maintains (additions unclamped, subtractions clamped
+/// at zero; zero deltas never reach the trace and are no-ops on the
+/// occupancy either).
+fn clamped_peak(events: &[MemEvent]) -> f64 {
+    let mut occ = 0.0f64;
+    let mut peak = 0.0f64;
+    for e in events {
+        if e.delta > 0.0 {
+            occ += e.delta;
+        } else {
+            occ = (occ + e.delta).max(0.0);
+        }
+        peak = peak.max(occ);
+    }
+    peak
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn chip_of_alloc_requires_purity() {
+        let arch = presets::chiplet_4x4();
+        let topo = &arch.topology;
+        // chip 1's dense cores + its SIMD core
+        let pure = [CoreId(5), CoreId(6), CoreId(9)];
+        assert_eq!(chip_of_alloc(topo, &pure), Some(1));
+        // one core from chip 0 breaks purity
+        let mixed = [CoreId(0), CoreId(6), CoreId(9)];
+        assert_eq!(chip_of_alloc(topo, &mixed), None);
+        // single-chip (flat) topologies are trivially chip 0
+        let flat = presets::hetero_quad();
+        let all: Vec<CoreId> = flat.cores.iter().map(|c| c.id).collect();
+        assert_eq!(chip_of_alloc(&flat.topology, &all), Some(0));
+    }
+
+    #[test]
+    fn clamped_peak_replays_the_occupancy() {
+        use crate::arch::CoreId;
+        let mk = |deltas: &[f64]| -> Vec<MemEvent> {
+            deltas.iter().map(|&d| MemEvent { time: 0, core: CoreId(0), delta: d }).collect()
+        };
+        assert_eq!(clamped_peak(&mk(&[100.0, -40.0, 30.0])), 100.0);
+        // clamping: the over-free is swallowed, later allocs rebuild
+        assert_eq!(clamped_peak(&mk(&[50.0, -80.0, 60.0])), 60.0);
+        assert_eq!(clamped_peak(&[]), 0.0);
+    }
+}

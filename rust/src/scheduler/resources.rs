@@ -109,6 +109,15 @@ impl LinkSet {
     pub fn stats(&self) -> Vec<(u64, u64)> {
         self.links.iter().map(|l| (l.busy_cycles, l.bytes_moved)).collect()
     }
+
+    /// Copy one link's complete state (clock + counters) from another
+    /// set.  The partition-parallel merge reassembles a global
+    /// [`LinkSet`] by adopting each link from the chip partition that
+    /// owns it (links of idle chips and untouched inter-chip links keep
+    /// their fresh state).
+    pub(crate) fn adopt_link(&mut self, other: &LinkSet, l: LinkId) {
+        self.links[l.0] = other.links[l.0].clone();
+    }
 }
 
 /// Per-core on-chip weight-memory tracker (paper Section III-E2).

@@ -163,6 +163,14 @@ pub struct SimContext<'a> {
     /// (one GA fitness evaluation per unseen genome) skips the
     /// bookkeeping entirely and the tag vectors come back empty.
     pub tag_events: bool,
+    /// Worker threads for the partition-parallel simulation core
+    /// (`super::parsim`): 0 resolves `STREAM_SIM_THREADS` from the
+    /// environment at [`simulate`](Self::simulate) time (default 1 =
+    /// sequential).  Values above 1 *permit* chip-partitioned parallel
+    /// execution; the result is bit-identical to the sequential loop
+    /// for every value (the parallel core falls back to sequential
+    /// whenever its exactness conditions fail).
+    pub sim_threads: usize,
 }
 
 /// What one simulation produced, request-tagged.  The one-shot wrapper
@@ -188,6 +196,12 @@ pub struct SimOutcome {
     /// Per-request completion frontier (last CN end or off-chip store
     /// end), in request order.
     pub request_end: Vec<u64>,
+    /// How many chip partitions ran concurrently to produce this
+    /// outcome: 1 for the sequential loop (including parallel-core
+    /// fallbacks), the busy-chip count when the partition-parallel core
+    /// engaged.  Purely observational — outcomes are bit-identical
+    /// either way.
+    pub partitions: usize,
 }
 
 /// Concatenate per-tenant DRAM weight-fetch tables into the global
@@ -245,14 +259,14 @@ impl SimRecorder for TouchTracer {
 
 /// Mutable state of one in-flight request lane.
 #[derive(Clone)]
-struct Lane {
-    tenant: usize,
-    release: u64,
-    sched: Vec<Option<ScheduledCn>>,
-    pending: Vec<usize>,
-    pool: CandidatePool,
+pub(crate) struct Lane {
+    pub(crate) tenant: usize,
+    pub(crate) release: u64,
+    pub(crate) sched: Vec<Option<ScheduledCn>>,
+    pub(crate) pending: Vec<usize>,
+    pub(crate) pool: CandidatePool,
     /// Completion frontier: last CN end or off-chip store end.
-    last_end: u64,
+    pub(crate) last_end: u64,
 }
 
 /// The complete mutable state of one in-flight simulation: every
@@ -263,29 +277,29 @@ struct Lane {
 /// bit-identically.
 #[derive(Clone)]
 pub(crate) struct SimState {
-    core_avail: Vec<u64>,
-    core_busy: Vec<u64>,
-    links: LinkSet,
-    weights: Vec<WeightTracker>,
-    evicted: Vec<LayerId>,
-    lanes: Vec<Lane>,
-    trace: MemTrace,
-    cns: Vec<ScheduledCn>,
-    cn_req: Vec<usize>,
-    comms: Vec<CommEvent>,
-    comm_req: Vec<usize>,
-    drams: Vec<DramEvent>,
-    dram_req: Vec<usize>,
-    breakdown: EnergyBreakdown,
-    act_cap: f64,
-    act_occ: f64,
+    pub(crate) core_avail: Vec<u64>,
+    pub(crate) core_busy: Vec<u64>,
+    pub(crate) links: LinkSet,
+    pub(crate) weights: Vec<WeightTracker>,
+    pub(crate) evicted: Vec<LayerId>,
+    pub(crate) lanes: Vec<Lane>,
+    pub(crate) trace: MemTrace,
+    pub(crate) cns: Vec<ScheduledCn>,
+    pub(crate) cn_req: Vec<usize>,
+    pub(crate) comms: Vec<CommEvent>,
+    pub(crate) comm_req: Vec<usize>,
+    pub(crate) drams: Vec<DramEvent>,
+    pub(crate) dram_req: Vec<usize>,
+    pub(crate) breakdown: EnergyBreakdown,
+    pub(crate) act_cap: f64,
+    pub(crate) act_occ: f64,
     /// Virtual admission clock (see [`SimContext::step`]).
-    now: u64,
+    pub(crate) now: u64,
     /// Scratch for the arbitration scan; contents are dead between
     /// steps.
-    cands: Vec<(usize, u64)>,
+    pub(crate) cands: Vec<(usize, u64)>,
     /// Scheduling decisions executed so far.
-    decisions: usize,
+    pub(crate) decisions: usize,
 }
 
 impl SimState {
@@ -367,7 +381,28 @@ impl ScheduleSegments {
 
 impl SimContext<'_> {
     /// Run the event-driven co-schedule over every lane.
+    ///
+    /// With an effective [`sim_threads`](Self::sim_threads) above 1 the
+    /// partition-parallel core (`super::parsim`) is tried first: lanes
+    /// are partitioned by the chip of their allocation, each chip's
+    /// sub-simulation runs on its own worker thread, and the
+    /// per-partition outcomes are merged by replaying the sequential
+    /// arbitration over the recorded decision streams.  Whenever the
+    /// parallel core cannot prove the merge exact it returns `None` and
+    /// the sequential loop below runs instead, so the outcome is
+    /// **bit-identical** for every thread count (pinned by
+    /// `rust/tests/parallel_sim_equivalence.rs`).
     pub fn simulate(&self) -> SimOutcome {
+        let threads = if self.sim_threads > 0 {
+            self.sim_threads
+        } else {
+            crate::util::sim_thread_count()
+        };
+        if threads > 1 {
+            if let Some(out) = super::parsim::try_parallel(self, threads) {
+                return out;
+            }
+        }
         let mut rec = NoRecord;
         let mut st = self.init(&mut rec);
         while st.has_work() {
@@ -379,6 +414,22 @@ impl SimContext<'_> {
     /// Build the initial [`SimState`]: fresh resource clocks and every
     /// zero-predecessor CN pooled (insertion visibility 0).
     pub(crate) fn init<R: SimRecorder>(&self, rec: &mut R) -> SimState {
+        self.init_owned(rec, None)
+    }
+
+    /// Like [`init`](Self::init), but when `owned` is given, only the
+    /// lanes it marks get their zero-predecessor CNs pooled — the
+    /// others exist with permanently empty pools, so [`has_work`] and
+    /// the arbitration scan skip them.  This is how the
+    /// partition-parallel core (`super::parsim`) builds one sub-state
+    /// per chip over the *same* lane indexing as the sequential run.
+    ///
+    /// [`has_work`]: SimState::has_work
+    pub(crate) fn init_owned<R: SimRecorder>(
+        &self,
+        rec: &mut R,
+        owned: Option<&[bool]>,
+    ) -> SimState {
         let n_cores = self.arch.cores.len();
         let weights: Vec<WeightTracker> =
             self.arch.cores.iter().map(|c| WeightTracker::new(c.wgt_mem_bytes)).collect();
@@ -402,7 +453,10 @@ impl SimContext<'_> {
             })
             .collect();
         let total_cns: usize = lanes.iter().map(|l| l.sched.len()).sum();
-        for lane in lanes.iter_mut() {
+        for (ri, lane) in lanes.iter_mut().enumerate() {
+            if owned.is_some_and(|o| !o[ri]) {
+                continue;
+            }
             let t = &self.tenants[lane.tenant];
             for i in 0..t.sched.graph.len() {
                 if lane.pending[i] == 0 {
@@ -880,6 +934,7 @@ impl SimContext<'_> {
             memtrace: trace,
             core_busy,
             request_end: lanes.iter().map(|l| l.last_end).collect(),
+            partitions: 1,
         }
     }
 }

@@ -9,7 +9,7 @@ pub mod par;
 
 pub use bench::{bench, BenchStats};
 pub use json::Json;
-pub use par::{parallel_map, parallel_map_with, thread_count};
+pub use par::{parallel_map, parallel_map_with, sim_thread_count, thread_count};
 
 /// Deterministic xorshift64* RNG for tests/benches that must not depend
 /// on the `rand` crate's version-specific streams.

@@ -35,6 +35,30 @@ pub fn thread_count(requested: usize) -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+/// Worker count for the partition-parallel *simulation* core (distinct
+/// from the GA-level `STREAM_THREADS` fan-out): the
+/// `STREAM_SIM_THREADS` environment variable when set to a positive
+/// integer, else 1 (sequential).  Deliberately opt-in — the parallel
+/// core only pays off when a single co-schedule spans several chips,
+/// and nesting it under an already-saturated GA worker pool would
+/// oversubscribe the machine.
+///
+/// # Examples
+///
+/// ```
+/// assert!(stream::util::sim_thread_count() >= 1);
+/// ```
+pub fn sim_thread_count() -> usize {
+    if let Ok(v) = std::env::var("STREAM_SIM_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    1
+}
+
 /// Map `f` over `items` on up to [`thread_count`]`(0)` worker threads,
 /// preserving order.  Falls back to sequential for tiny inputs.
 pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>

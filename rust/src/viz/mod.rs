@@ -7,14 +7,31 @@
 
 use std::fmt::Write as _;
 
-use crate::arch::Accelerator;
+use crate::arch::{Accelerator, LinkId};
 use crate::scenario::ScenarioResult;
 use crate::scheduler::{CommEvent, DramEvent, ScheduleResult};
 use crate::workload::WorkloadGraph;
 
+/// Whether Gantt lanes should be aggregated per chip: multi-chip
+/// packages with more cores than fit a readable per-core/per-link
+/// chart.  Every single-chip preset (and anything with <= 8 cores)
+/// keeps the exact historical byte-for-byte output.
+fn aggregate_chips(arch: &Accelerator) -> bool {
+    arch.cores.len() > 8 && arch.topology.n_chips() > 1
+}
+
+fn fill(lane: &mut [u8], from: usize, to: usize, ch: u8) {
+    for c in lane.iter_mut().take(to + 1).skip(from) {
+        *c = ch;
+    }
+}
+
 /// One Gantt lane per interconnect link, occupied by every comm / DRAM
 /// event whose route crosses it (shared by [`gantt`] and
-/// [`scenario_gantt`]).
+/// [`scenario_gantt`]).  At chiplet scale ([`aggregate_chips`]) each
+/// chip's intra-chip fabric collapses into one `chipN.noc` lane —
+/// `chiplet_16x16`'s 800+ mesh hops are unreadable one-per-lane — while
+/// the scarce inter-chip SerDes links keep their individual lanes.
 fn link_lanes(
     out: &mut String,
     arch: &Accelerator,
@@ -23,26 +40,80 @@ fn link_lanes(
     width: usize,
     scale: &dyn Fn(u64) -> usize,
 ) {
-    for (i, link) in arch.topology.links().iter().enumerate() {
-        let id = crate::arch::LinkId(i);
-        let mut lane = vec![b'.'; width];
-        let spans = comms
+    let topo = &arch.topology;
+    let spans_where = |pred: &dyn Fn(&[LinkId]) -> bool| {
+        let mut spans: Vec<(u64, u64)> = comms
             .iter()
-            .filter(|c| c.links.contains(&id))
+            .filter(|c| pred(&c.links))
             .map(|c| (c.start, c.end))
-            .chain(
-                drams
-                    .iter()
-                    .filter(|d| d.links.contains(&id))
-                    .map(|d| (d.start, d.end)),
-            );
-        for (s, e) in spans {
-            for ch in lane.iter_mut().take(scale(e) + 1).skip(scale(s)) {
-                *ch = b'#';
+            .chain(drams.iter().filter(|d| pred(&d.links)).map(|d| (d.start, d.end)))
+            .collect();
+        spans.sort_unstable();
+        spans
+    };
+    if aggregate_chips(arch) {
+        for chip in 0..topo.n_chips() {
+            let mut lane = vec![b'.'; width];
+            let on_chip =
+                |links: &[LinkId]| links.iter().any(|&l| topo.chip_of_link(l) == Some(chip));
+            for (s, e) in spans_where(&on_chip) {
+                fill(&mut lane, scale(s), scale(e), b'#');
             }
+            let name = format!("chip{chip}.noc");
+            let _ = writeln!(out, "{name:>8} |{}|", String::from_utf8_lossy(&lane));
+        }
+        for id in topo.inter_chip_links() {
+            let mut lane = vec![b'.'; width];
+            for (s, e) in spans_where(&|links: &[LinkId]| links.contains(&id)) {
+                fill(&mut lane, scale(s), scale(e), b'#');
+            }
+            let name = &topo.links()[id.0].name;
+            let _ = writeln!(out, "{name:>8} |{}|", String::from_utf8_lossy(&lane));
+        }
+        return;
+    }
+    for (i, link) in topo.links().iter().enumerate() {
+        let id = LinkId(i);
+        let mut lane = vec![b'.'; width];
+        for (s, e) in spans_where(&|links: &[LinkId]| links.contains(&id)) {
+            fill(&mut lane, scale(s), scale(e), b'#');
         }
         let _ = writeln!(out, "{:>8} |{}|", link.name, String::from_utf8_lossy(&lane));
     }
+}
+
+/// Core lanes collapse per chip once the package outgrows a readable
+/// per-core chart (> 32 cores): the chip is the placement granularity
+/// the chiplet GA pins to, so one `chipN` lane per chip is the honest
+/// summary.  Returns the lane count emitted.
+fn core_lanes(
+    out: &mut String,
+    arch: &Accelerator,
+    width: usize,
+    scale: &dyn Fn(u64) -> usize,
+    placements: &mut dyn Iterator<Item = (crate::arch::CoreId, u64, u64, u8)>,
+) -> usize {
+    if aggregate_chips(arch) && arch.cores.len() > 32 {
+        let n_chips = arch.topology.n_chips();
+        let mut lanes = vec![vec![b'.'; width]; n_chips];
+        for (core, start, end, glyph) in placements {
+            let chip = arch.topology.chip_of_core(core);
+            fill(&mut lanes[chip], scale(start), scale(end).max(scale(start)), glyph);
+        }
+        for (chip, lane) in lanes.iter().enumerate() {
+            let name = format!("chip{chip}");
+            let _ = writeln!(out, "{name:>8} |{}|", String::from_utf8_lossy(lane));
+        }
+        return n_chips;
+    }
+    let mut lanes = vec![vec![b'.'; width]; arch.cores.len()];
+    for (core, start, end, glyph) in placements {
+        fill(&mut lanes[core.0], scale(start), scale(end).max(scale(start)), glyph);
+    }
+    for (core, lane) in arch.cores.iter().zip(&lanes) {
+        let _ = writeln!(out, "{:>8} |{}|", core.name, String::from_utf8_lossy(lane));
+    }
+    arch.cores.len()
 }
 
 /// Render a proportional ASCII Gantt chart of the schedule: one lane
@@ -61,17 +132,16 @@ pub fn gantt(
     let width = width.max(20);
     let scale = |t: u64| ((t as f64 / span) * (width - 1) as f64) as usize;
 
-    for core in &arch.cores {
-        let mut lane = vec![b'.'; width];
-        for s in result.cns.iter().filter(|s| s.core == core.id) {
-            let (a, b) = (scale(s.start), scale(s.end).max(scale(s.start)));
-            let layer = result_layer_digit(workload, result, s.cn.0);
-            for c in lane.iter_mut().take(b + 1).skip(a) {
-                *c = layer;
-            }
-        }
-        let _ = writeln!(out, "{:>8} |{}|", core.name, String::from_utf8_lossy(&lane));
-    }
+    core_lanes(
+        &mut out,
+        arch,
+        width,
+        &scale,
+        &mut result
+            .cns
+            .iter()
+            .map(|s| (s.core, s.start, s.end, result_layer_digit(workload, result, s.cn.0))),
+    );
 
     link_lanes(&mut out, arch, &result.comms, &result.drams, width, &scale);
 
@@ -120,17 +190,16 @@ pub fn scenario_gantt(result: &ScenarioResult, arch: &Accelerator, width: usize)
         (((t as f64 / span) * (width - 1) as f64) as usize).min(width - 1)
     };
 
-    for core in &arch.cores {
-        let mut lane = vec![b'.'; width];
-        for s in result.cns.iter().filter(|s| s.placed.core == core.id) {
-            let (a, b) = (scale(s.placed.start), scale(s.placed.end).max(scale(s.placed.start)));
-            let g = glyph(s.request);
-            for c in lane.iter_mut().take(b + 1).skip(a) {
-                *c = g;
-            }
-        }
-        let _ = writeln!(out, "{:>8} |{}|", core.name, String::from_utf8_lossy(&lane));
-    }
+    core_lanes(
+        &mut out,
+        arch,
+        width,
+        &scale,
+        &mut result
+            .cns
+            .iter()
+            .map(|s| (s.placed.core, s.placed.start, s.placed.end, glyph(s.request))),
+    );
 
     link_lanes(&mut out, arch, &result.comms, &result.drams, width, &scale);
 
@@ -349,6 +418,67 @@ mod tests {
         let g = scenario_gantt(&r, &arch, 60);
         assert!(g.contains('!'), "deadline lane must mark misses");
         assert!(g.contains("MISS"), "legend must call out missed requests");
+    }
+
+    #[test]
+    fn chiplet_gantt_collapses_intra_chip_links() {
+        use crate::scenario::{Arbitration, Arrival, Scenario, ScenarioSim, Tenant};
+        // chiplet_4x4: 20 cores over 4 chips -> per-core lanes stay
+        // (<= 32 cores) but the chips' mesh hops collapse to one
+        // chipN.noc lane each; inter-chip SerDes links stay individual
+        let arch = presets::chiplet_4x4();
+        let scenario = Scenario::new(
+            "viz",
+            vec![
+                Tenant::new("a", "tiny-segment", Arrival::OneShot { at_cc: 0 }),
+                Tenant::new("b", "tiny-branchy", Arrival::OneShot { at_cc: 0 }),
+            ],
+        );
+        let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+        let r = sim.run(&sim.greedy_allocations(), Arbitration::Fifo);
+        let g = scenario_gantt(&r, &arch, 60);
+        assert!(g.contains("chip0.noc"), "aggregated chip fabric lane missing:\n{g}");
+        let framed = g.lines().filter(|l| l.ends_with('|')).count();
+        let expect = arch.cores.len()
+            + arch.topology.n_chips()
+            + arch.topology.inter_chip_links().count()
+            + 1; // deadline lane
+        assert_eq!(framed, expect);
+        assert!(
+            arch.topology.n_chips() + arch.topology.inter_chip_links().count()
+                < arch.topology.n_links(),
+            "aggregation must actually shrink the link section"
+        );
+    }
+
+    #[test]
+    fn chiplet_gantt_collapses_core_lanes_past_32_cores() {
+        use crate::scenario::{Arbitration, Arrival, Scenario, ScenarioSim, Tenant};
+        // chiplet_8x8: 68 cores -> one core lane per chip
+        let arch = presets::chiplet_8x8();
+        let scenario = Scenario::new(
+            "viz8",
+            vec![Tenant::new("a", "tiny-segment", Arrival::OneShot { at_cc: 0 })],
+        );
+        let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+        let r = sim.run(&sim.greedy_allocations(), Arbitration::Fifo);
+        let g = scenario_gantt(&r, &arch, 60);
+        let framed = g.lines().filter(|l| l.ends_with('|')).count();
+        let chips = arch.topology.n_chips();
+        let expect = chips + chips + arch.topology.inter_chip_links().count() + 1;
+        assert_eq!(framed, expect, "core + link lanes must both collapse per chip:\n{g}");
+        assert!(g.contains("   chip0 |"), "aggregated core lane missing:\n{g}");
+    }
+
+    #[test]
+    fn small_arch_gantt_keeps_per_link_lanes() {
+        // the aggregation gate must leave every <= 8-core preset alone
+        let (r, w, arch) = result();
+        let g = gantt(&r, &w, &arch, 60);
+        for link in arch.topology.links() {
+            assert!(g.contains(&link.name), "per-link lane {} missing", link.name);
+        }
+        assert!(!g.contains(".noc |"), "small archs must not aggregate");
     }
 
     #[test]

@@ -1,0 +1,460 @@
+//! Equivalence net for the chip-partitioned parallel simulation core
+//! (`scheduler/parsim.rs`):
+//!
+//! 1. **Bit-identity** — a scenario co-schedule run with
+//!    `sim_threads > 1` must reproduce the sequential run bit for bit:
+//!    every metric, every placed CN, every communication / DRAM event,
+//!    every link counter, every memory-trace sample, every request
+//!    outcome.  The parallel core is a pure speedup; any divergence is
+//!    a bug, and the fallback path makes divergence structurally
+//!    impossible — these tests pin that the fallback logic itself is
+//!    sound.
+//! 2. **Engagement** — on chip-pure burst scenarios the parallel core
+//!    must actually partition ([`ScenarioResult::partitions`] > 1),
+//!    otherwise the `ablation_chiplet` speedup claim is vacuous.
+//! 3. **Guards** — mixed-chip allocations and single-request scenarios
+//!    must fall back to the sequential loop (`partitions == 1`).
+//! 4. **Fuzz** — randomized tenant mixes x chiplet packages x thread
+//!    counts, chip-pure and chip-mixed, staggered and simultaneous
+//!    releases, all three arbitration policies.
+//! 5. **GA-front independence** — `STREAM_SIM_THREADS` must not change
+//!    a GA front (the delta-evaluation path is sequential by design,
+//!    so the env var composes trivially with `DeltaCache`).
+//! 6. **Cache keys** — chiplet package variants (different inter-chip
+//!    fabrics over identical cores) must never alias in the
+//!    [`ScheduleCache`], which keys on the topology fingerprint.
+//!
+//! Every scenario run in this file pins its worker count explicitly
+//! through `run_with_threads` (never the env-resolving `run`), so the
+//! one env-mutating test below cannot race the rest of the suite.
+
+use stream::allocator::{allocation_from_genome, Ga, GaParams, Objective};
+use stream::arch::{presets, Accelerator, Topology};
+use stream::cn::{CnGranularity, CnSet};
+use stream::cost::{memo, ScheduleCache};
+use stream::depgraph::generate;
+use stream::mapping::CostModel;
+use stream::scenario::{Arbitration, Arrival, Scenario, ScenarioResult, ScenarioSim, Tenant};
+use stream::scheduler::{SchedulePriority, Scheduler};
+use stream::util::XorShift64;
+
+const MODELS: [&str; 2] = ["tiny-segment", "tiny-branchy"];
+
+/// A genome whose genes all index dense cores of `chip` — with the
+/// chiplet presets' chip-major core ids and the multi-SIMD pinning of
+/// `allocation_from_genome`, the expanded allocation is chip-pure.
+fn chip_pure_genome(chip: usize, dense_per_chip: usize, n: usize, rng: &mut XorShift64) -> Vec<u16> {
+    (0..n)
+        .map(|_| (chip * dense_per_chip) as u16 + rng.below(dense_per_chip as u64) as u16)
+        .collect()
+}
+
+/// Expand per-tenant genomes into per-tenant allocations.
+fn allocs_of(sim: &ScenarioSim, arch: &Accelerator, genomes: &[Vec<u16>]) -> Vec<Vec<stream::arch::CoreId>> {
+    sim.builds()
+        .iter()
+        .zip(genomes)
+        .map(|(b, g)| allocation_from_genome(&b.workload, arch, g))
+        .collect()
+}
+
+fn assert_identical(what: &str, a: &ScenarioResult, b: &ScenarioResult) {
+    assert_eq!(a.metrics.latency_cc, b.metrics.latency_cc, "{what}: latency");
+    assert_eq!(a.metrics.energy_pj.to_bits(), b.metrics.energy_pj.to_bits(), "{what}: energy");
+    assert_eq!(
+        a.metrics.peak_mem_bytes.to_bits(),
+        b.metrics.peak_mem_bytes.to_bits(),
+        "{what}: peak mem"
+    );
+    assert_eq!(
+        a.metrics.avg_core_util.to_bits(),
+        b.metrics.avg_core_util.to_bits(),
+        "{what}: util"
+    );
+    for (f, (x, y)) in [
+        ("mac", (a.metrics.breakdown.mac_pj, b.metrics.breakdown.mac_pj)),
+        ("onchip", (a.metrics.breakdown.onchip_pj, b.metrics.breakdown.onchip_pj)),
+        ("noc", (a.metrics.breakdown.noc_pj, b.metrics.breakdown.noc_pj)),
+        ("dram", (a.metrics.breakdown.dram_pj, b.metrics.breakdown.dram_pj)),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: breakdown {f}");
+    }
+
+    assert_eq!(a.cns.len(), b.cns.len(), "{what}: CN count");
+    for (i, (x, y)) in a.cns.iter().zip(&b.cns).enumerate() {
+        assert_eq!(x.request, y.request, "{what}: cn[{i}] request tag");
+        assert_eq!(x.placed.cn, y.placed.cn, "{what}: cn[{i}] id");
+        assert_eq!(x.placed.core, y.placed.core, "{what}: cn[{i}] core");
+        assert_eq!(x.placed.start, y.placed.start, "{what}: cn[{i}] start");
+        assert_eq!(x.placed.end, y.placed.end, "{what}: cn[{i}] end");
+    }
+
+    assert_eq!(a.comms.len(), b.comms.len(), "{what}: comm count");
+    assert_eq!(a.comm_req, b.comm_req, "{what}: comm tags");
+    for (i, (x, y)) in a.comms.iter().zip(&b.comms).enumerate() {
+        assert_eq!(
+            (x.from_core, x.to_core, x.start, x.end, x.bytes),
+            (y.from_core, y.to_core, y.start, y.end, y.bytes),
+            "{what}: comm[{i}]"
+        );
+        assert_eq!(x.links, y.links, "{what}: comm[{i}] route");
+    }
+
+    assert_eq!(a.drams.len(), b.drams.len(), "{what}: dram count");
+    assert_eq!(a.dram_req, b.dram_req, "{what}: dram tags");
+    for (i, (x, y)) in a.drams.iter().zip(&b.drams).enumerate() {
+        assert_eq!(
+            (x.core, x.start, x.end, x.bytes, x.kind),
+            (y.core, y.start, y.end, y.bytes, y.kind),
+            "{what}: dram[{i}]"
+        );
+        assert_eq!(x.links, y.links, "{what}: dram[{i}] route");
+    }
+
+    assert_eq!(a.link_stats, b.link_stats, "{what}: link stats");
+    assert_eq!(a.core_busy, b.core_busy, "{what}: core busy");
+
+    assert_eq!(a.memtrace.events.len(), b.memtrace.events.len(), "{what}: memtrace len");
+    for (i, (x, y)) in a.memtrace.events.iter().zip(&b.memtrace.events).enumerate() {
+        assert_eq!(x.time, y.time, "{what}: memtrace[{i}] time");
+        assert_eq!(x.core, y.core, "{what}: memtrace[{i}] core");
+        assert_eq!(x.delta.to_bits(), y.delta.to_bits(), "{what}: memtrace[{i}] delta");
+    }
+
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{what}: outcome count");
+    for (i, (x, y)) in a.outcomes.iter().zip(&b.outcomes).enumerate() {
+        assert_eq!(
+            (x.request, x.tenant, x.release_cc, x.completion_cc, x.latency_cc, x.missed),
+            (y.request, y.tenant, y.release_cc, y.completion_cc, y.latency_cc, y.missed),
+            "{what}: outcome[{i}]"
+        );
+    }
+}
+
+/// One chip-pure tenant per chip, two simultaneous requests each — the
+/// ideal-fan-out shape the `ablation_chiplet` bench measures.
+fn per_chip_burst(arch: &Accelerator, dense_per_chip: usize, chips: &[usize]) -> (Scenario, Vec<Vec<u16>>) {
+    let tenants = chips
+        .iter()
+        .enumerate()
+        .map(|(i, chip)| {
+            Tenant::new(
+                &format!("t{chip}"),
+                MODELS[i % MODELS.len()],
+                Arrival::Burst { times_cc: vec![0, 0] },
+            )
+        })
+        .collect();
+    let scenario = Scenario::new(&format!("per-chip-{}", arch.name), tenants);
+    let mut rng = XorShift64::new(0x5EED ^ arch.cores.len() as u64);
+    let sim = ScenarioSim::new(&scenario, arch).unwrap();
+    let genomes: Vec<Vec<u16>> = sim
+        .builds()
+        .iter()
+        .zip(chips)
+        .map(|(b, &chip)| {
+            chip_pure_genome(chip, dense_per_chip, b.workload.dense_layers().len(), &mut rng)
+        })
+        .collect();
+    (scenario, genomes)
+}
+
+#[test]
+fn burst_coschedule_bit_identical_across_thread_counts() {
+    let arch = presets::chiplet_4x4();
+    let (scenario, genomes) = per_chip_burst(&arch, 4, &[0, 1, 2, 3]);
+    let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+    let allocs = allocs_of(&sim, &arch, &genomes);
+    let runner = sim.runner();
+
+    let seq = runner.run_with_threads(&allocs, Arbitration::Fifo, 1);
+    assert_eq!(seq.partitions, 1, "sequential run must not partition");
+    for threads in [2, 4, 8] {
+        let par = runner.run_with_threads(&allocs, Arbitration::Fifo, threads);
+        assert_identical(&format!("chiplet_4x4 x{threads}"), &seq, &par);
+        // 4 chip-pure tenants on 4 distinct chips: the partition count
+        // is the busy-chip count, independent of the worker count
+        assert_eq!(par.partitions, 4, "x{threads}: parallel core must engage");
+    }
+}
+
+#[test]
+fn tenants_sharing_a_chip_still_partition() {
+    let arch = presets::chiplet_8x8();
+    // four tenants on two of the four chips (two lanes -> one partition
+    // runs several tenants' pools; the merge still interleaves exactly)
+    let (scenario, genomes) = per_chip_burst(&arch, 16, &[0, 0, 2, 2]);
+    let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+    let allocs = allocs_of(&sim, &arch, &genomes);
+    let runner = sim.runner();
+
+    let seq = runner.run_with_threads(&allocs, Arbitration::Fifo, 1);
+    let par = runner.run_with_threads(&allocs, Arbitration::Fifo, 4);
+    assert_identical("chiplet_8x8 shared chips", &seq, &par);
+    assert_eq!(par.partitions, 2, "two busy chips -> two partitions");
+}
+
+#[test]
+fn all_arbitration_policies_agree_with_sequential() {
+    let arch = presets::chiplet_4x4();
+    let mut tenants: Vec<Tenant> = (0..4)
+        .map(|chip| {
+            Tenant::new(
+                &format!("t{chip}"),
+                MODELS[chip % 2],
+                Arrival::Burst { times_cc: vec![0, 0] },
+            )
+            .priority(chip as u16)
+            .deadline(500_000 + 100_000 * chip as u64)
+        })
+        .collect();
+    tenants[2].pool_priority = SchedulePriority::Memory;
+    let scenario = Scenario::new("arb-mix", tenants);
+    let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+    let mut rng = XorShift64::new(0xA2B);
+    let genomes: Vec<Vec<u16>> = sim
+        .builds()
+        .iter()
+        .enumerate()
+        .map(|(chip, b)| chip_pure_genome(chip, 4, b.workload.dense_layers().len(), &mut rng))
+        .collect();
+    let allocs = allocs_of(&sim, &arch, &genomes);
+    let runner = sim.runner();
+
+    for arb in [Arbitration::Fifo, Arbitration::Priority, Arbitration::Edf] {
+        let seq = runner.run_with_threads(&allocs, arb, 1);
+        let par = runner.run_with_threads(&allocs, arb, 4);
+        assert_identical(&format!("{arb}"), &seq, &par);
+        assert_eq!(par.partitions, 4, "{arb}: release-0 chip-pure must engage");
+    }
+}
+
+#[test]
+fn staggered_releases_stay_bit_identical() {
+    // non-zero releases exercise the admission clock; the parallel core
+    // may or may not fall back here, but the results must not move
+    let arch = presets::chiplet_4x4();
+    let tenants = vec![
+        Tenant::new("early", "tiny-segment", Arrival::Periodic { every_cc: 20_000, count: 3, offset_cc: 0 }),
+        Tenant::new("late", "tiny-branchy", Arrival::Burst { times_cc: vec![5_000, 40_000] }),
+        Tenant::new("later", "tiny-segment", Arrival::OneShot { at_cc: 60_000 }),
+    ];
+    let scenario = Scenario::new("staggered", tenants);
+    let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+    let mut rng = XorShift64::new(0x57A6);
+    let genomes: Vec<Vec<u16>> = sim
+        .builds()
+        .iter()
+        .enumerate()
+        .map(|(chip, b)| chip_pure_genome(chip, 4, b.workload.dense_layers().len(), &mut rng))
+        .collect();
+    let allocs = allocs_of(&sim, &arch, &genomes);
+    let runner = sim.runner();
+    for arb in [Arbitration::Fifo, Arbitration::Edf] {
+        let seq = runner.run_with_threads(&allocs, arb, 1);
+        let par = runner.run_with_threads(&allocs, arb, 4);
+        assert_identical(&format!("staggered {arb}"), &seq, &par);
+    }
+}
+
+#[test]
+fn mixed_chip_allocation_falls_back() {
+    let arch = presets::chiplet_4x4();
+    let scenario = Scenario::new(
+        "mixed",
+        vec![
+            Tenant::new("pure", "tiny-segment", Arrival::Burst { times_cc: vec![0, 0] }),
+            Tenant::new("straddler", "tiny-segment", Arrival::Burst { times_cc: vec![0, 0] }),
+        ],
+    );
+    let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+    // tenant 1 straddles chips 1 and 2 (genes 4 and 8)
+    let genomes = vec![vec![0u16, 1, 2], vec![4u16, 8, 4]];
+    let allocs = allocs_of(&sim, &arch, &genomes);
+    let runner = sim.runner();
+    let seq = runner.run_with_threads(&allocs, Arbitration::Fifo, 1);
+    let par = runner.run_with_threads(&allocs, Arbitration::Fifo, 4);
+    assert_identical("mixed-chip", &seq, &par);
+    assert_eq!(par.partitions, 1, "a chip-straddling tenant must force the sequential loop");
+}
+
+#[test]
+fn single_request_scenarios_stay_sequential() {
+    let arch = presets::chiplet_4x4();
+    let scenario = Scenario::new(
+        "solo",
+        vec![Tenant::new("only", "tiny-segment", Arrival::OneShot { at_cc: 0 })],
+    );
+    let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+    let allocs = allocs_of(&sim, &arch, &[vec![0u16, 1, 2]]);
+    let runner = sim.runner();
+    let par = runner.run_with_threads(&allocs, Arbitration::Fifo, 8);
+    assert_eq!(par.partitions, 1, "one lane has nothing to partition");
+    let seq = runner.run_with_threads(&allocs, Arbitration::Fifo, 1);
+    assert_identical("solo", &seq, &par);
+}
+
+#[test]
+fn fuzz_random_chiplet_scenarios() {
+    let mut rng = XorShift64::new(0xF0CC_ACC1A);
+    let arbs = [Arbitration::Fifo, Arbitration::Priority, Arbitration::Edf];
+    for iter in 0..8 {
+        let (arch, dense_per_chip) = if rng.below(2) == 0 {
+            (presets::chiplet_4x4(), 4)
+        } else {
+            (presets::chiplet_8x8(), 16)
+        };
+        let n_chips = arch.topology.n_chips();
+        let n_tenants = 2 + rng.below(3) as usize;
+        let tenants: Vec<Tenant> = (0..n_tenants)
+            .map(|t| {
+                let arrival = match rng.below(3) {
+                    0 => Arrival::Burst { times_cc: vec![0, 0] },
+                    1 => Arrival::Burst { times_cc: vec![0, rng.below(50_000)] },
+                    _ => Arrival::Periodic {
+                        every_cc: 10_000 + rng.below(40_000),
+                        count: 2,
+                        offset_cc: rng.below(10_000),
+                    },
+                };
+                let mut tenant =
+                    Tenant::new(&format!("f{t}"), MODELS[rng.below(2) as usize], arrival)
+                        .priority(rng.below(4) as u16);
+                if rng.below(2) == 0 {
+                    tenant = tenant.deadline(300_000 + rng.below(300_000));
+                }
+                tenant
+            })
+            .collect();
+        let scenario = Scenario::new(&format!("fuzz{iter}"), tenants);
+        let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+        let genomes: Vec<Vec<u16>> = sim
+            .builds()
+            .iter()
+            .map(|b| {
+                let n = b.workload.dense_layers().len();
+                if rng.below(5) == 0 {
+                    // chip-mixed tenant: exercises the fallback guard
+                    (0..n).map(|_| rng.below((n_chips * dense_per_chip) as u64) as u16).collect()
+                } else {
+                    chip_pure_genome(rng.below(n_chips as u64) as usize, dense_per_chip, n, &mut rng)
+                }
+            })
+            .collect();
+        let allocs = allocs_of(&sim, &arch, &genomes);
+        let runner = sim.runner();
+        let arb = arbs[rng.below(3) as usize];
+        let seq = runner.run_with_threads(&allocs, arb, 1);
+        for threads in [2, 4] {
+            let par = runner.run_with_threads(&allocs, arb, threads);
+            assert_identical(&format!("fuzz iter {iter} ({}) x{threads}", arch.name), &seq, &par);
+        }
+    }
+}
+
+#[test]
+fn chiplet_16x16_smoke_bit_identity() {
+    // one pass over the largest package: 16 chips, 272 cores, lazy
+    // route tables — the shapes where a partition-merge bug would hide
+    let arch = presets::chiplet_16x16();
+    let (scenario, genomes) = per_chip_burst(&arch, 16, &[0, 3, 7, 12, 15]);
+    let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+    let allocs = allocs_of(&sim, &arch, &genomes);
+    let runner = sim.runner();
+    let seq = runner.run_with_threads(&allocs, Arbitration::Fifo, 1);
+    let par = runner.run_with_threads(&allocs, Arbitration::Fifo, 8);
+    assert_identical("chiplet_16x16", &seq, &par);
+    assert_eq!(par.partitions, 5, "five busy chips -> five partitions");
+}
+
+/// `STREAM_SIM_THREADS` must leave a GA run untouched: the GA's
+/// fitness path (including delta re-simulation) is single-lane and
+/// therefore sequential by construction, so the front is bit-identical
+/// whatever the env says.  This is the only test in the suite that
+/// mutates the environment; every other run pins an explicit count.
+#[test]
+fn ga_front_independent_of_sim_threads_env() {
+    let workload = stream::workload::models::by_name("tiny-segment").unwrap();
+    let arch = presets::chiplet_4x4();
+    let gran = CnGranularity::Lines(4).for_arch(&arch);
+    let cns = CnSet::build(&workload, gran);
+    let costs = CostModel::build(&workload, &cns, &arch);
+    let graph = generate(&workload, CnSet::build(&workload, gran));
+    let scheduler = Scheduler::new(&workload, &graph, &costs, &arch);
+    let params = GaParams {
+        population: 8,
+        generations: 4,
+        threads: 1,
+        incremental: true,
+        ..GaParams::default()
+    };
+    let front = |label: &str| {
+        let mut ga = Ga::new(
+            &workload,
+            &arch,
+            &scheduler,
+            SchedulePriority::Latency,
+            Objective::LatencyEnergy,
+            params,
+        );
+        let mut results = ga.run();
+        results.sort_by(|a, b| a.genome.cmp(&b.genome));
+        assert!(!results.is_empty(), "{label}: empty front");
+        results
+    };
+
+    let base = front("base");
+    std::env::set_var("STREAM_SIM_THREADS", "4");
+    let enved = front("STREAM_SIM_THREADS=4");
+    std::env::remove_var("STREAM_SIM_THREADS");
+
+    assert_eq!(base.len(), enved.len(), "front size");
+    for (a, b) in base.iter().zip(&enved) {
+        assert_eq!(a.genome, b.genome, "front genome");
+        assert_eq!(a.metrics.latency_cc, b.metrics.latency_cc, "front latency");
+        assert_eq!(a.metrics.energy_pj.to_bits(), b.metrics.energy_pj.to_bits(), "front energy");
+    }
+}
+
+#[test]
+fn schedule_cache_separates_chiplet_package_variants() {
+    // two packages over *identical cores* differing only in the
+    // inter-chip fabric must produce different cache keys — the memo
+    // keys on the topology fingerprint, which covers the chip partition
+    // and every link parameter
+    let chip = || Topology::mesh2d(5, 3, 128, 0.05, 64, 3.7, 1);
+    let pkg = |bw: u64| {
+        Topology::hierarchical("pkg", 2, vec![chip(), chip(), chip(), chip()], bw, 0.8)
+    };
+    let fast = pkg(32);
+    let slow = pkg(16);
+    let again = pkg(32);
+    assert_eq!(fast.fingerprint(), again.fingerprint(), "structural determinism");
+    assert_ne!(fast.fingerprint(), slow.fingerprint(), "inter-chip bw must separate");
+
+    let arch = presets::chiplet_4x4();
+    let workload = stream::workload::models::by_name("tiny-segment").unwrap();
+    let alloc = allocation_from_genome(&workload, &arch, &[0, 1, 2]);
+    let k_fast = memo::fingerprint(&alloc, SchedulePriority::Latency, fast.fingerprint());
+    let k_slow = memo::fingerprint(&alloc, SchedulePriority::Latency, slow.fingerprint());
+    assert_ne!(k_fast, k_slow, "memo fingerprint must separate the variants");
+
+    let cache = ScheduleCache::new();
+    cache.insert(
+        &alloc,
+        SchedulePriority::Latency,
+        fast.fingerprint(),
+        stream::cost::ScheduleMetrics { latency_cc: 1, ..Default::default() },
+    );
+    assert!(
+        cache.get(&alloc, SchedulePriority::Latency, slow.fingerprint()).is_none(),
+        "a cached fast-package schedule must never serve the slow package"
+    );
+    assert_eq!(
+        cache
+            .get(&alloc, SchedulePriority::Latency, fast.fingerprint())
+            .unwrap()
+            .latency_cc,
+        1
+    );
+}
