@@ -68,6 +68,48 @@ fn main() {
     let linear_ms = s.median_ms;
     println!("  -> heap pool speedup vs linear scan: {:.2}x\n", linear_ms / heap_lat);
 
+    // --- flight-recorder overhead gate ---
+    // The recorder (src/obs) is always compiled in; disabled, its only
+    // hot-path cost is one relaxed atomic load per count()/span site
+    // (the pool push/pop counters are the only per-CN sites).  Measure
+    // that per-site cost directly, bound the per-run site volume, and
+    // require the product to stay under 2% of a scheduler run — an
+    // analytical gate that is robust to machine noise.  CI exports
+    // OBS_GATE=1 to make the bound fatal; locally it just prints.
+    let (obs_ns_per_site, obs_enabled_x);
+    {
+        assert!(!stream::obs::enabled(), "recorder must start disabled");
+        let loops: u64 = 10_000_000;
+        let t = std::time::Instant::now();
+        for _ in 0..loops {
+            stream::obs::count(std::hint::black_box(stream::obs::Counter::PoolPushes), 1);
+        }
+        obs_ns_per_site = t.elapsed().as_secs_f64() * 1e9 / loops as f64;
+        // per run: one push + one pop per CN, plus the run-constant
+        // sites (simulate span, finish() aggregation) — bounded by 32
+        let sites_per_run = 2 * graph.len() + 32;
+        let overhead_ms = obs_ns_per_site * sites_per_run as f64 / 1e6;
+        let pct = 100.0 * overhead_ms / heap_lat;
+        println!(
+            "obs disabled: {obs_ns_per_site:.2} ns/site x {sites_per_run} sites/run \
+             -> {pct:.3}% of scheduler_run"
+        );
+        if std::env::var("OBS_GATE").as_deref() == Ok("1") {
+            assert!(pct < 2.0, "disabled recorder exceeds the 2% hot-path budget ({pct:.3}%)");
+        }
+
+        // enabled cost, for the record (spans + counters + report)
+        stream::obs::set_enabled(true);
+        let s = bench("scheduler_run (recorder enabled)", 3, 20, || {
+            std::hint::black_box(sched.run(&alloc, SchedulePriority::Latency));
+        });
+        stream::obs::set_enabled(false);
+        stream::obs::reset();
+        println!("{s}");
+        obs_enabled_x = s.median_ms / heap_lat;
+        println!("  -> recorder-enabled overhead: {obs_enabled_x:.2}x\n");
+    }
+
     // heavyweight case: FSRCNN at line granularity (4480 CNs)
     {
         use stream::workload::models::fsrcnn;
@@ -194,6 +236,8 @@ fn main() {
     j.insert("incremental_speedup".to_string(), num(full_s / inc_s));
     j.insert("lb_prune_seconds".to_string(), num(prune_s));
     j.insert("lb_pruned_genomes".to_string(), num(pruned as f64));
+    j.insert("obs_disabled_ns_per_site".to_string(), num(obs_ns_per_site));
+    j.insert("obs_enabled_overhead_x".to_string(), num(obs_enabled_x));
     let out = stream::util::Json::Obj(j).to_string_compact() + "\n";
     match std::fs::write("BENCH_hotpath.json", &out) {
         Ok(()) => println!("\nwrote BENCH_hotpath.json"),

@@ -170,6 +170,7 @@ pub fn evolve<P: EvoProblem + ?Sized>(problem: &mut P, params: &GaParams) -> Evo
     let mut stale = 0usize;
 
     for _gen in 0..params.generations {
+        let _gen_span = crate::obs::span_here("ga", "generation");
         // --- variation: offspring from the current population ---
         // Each offspring remembers its primary (gene-order) parent `a`;
         // since the evaluation pool is population ++ offspring, `a`'s
@@ -210,6 +211,13 @@ pub fn evolve<P: EvoProblem + ?Sized>(problem: &mut P, params: &GaParams) -> Evo
         // --- NSGA-II environmental selection ---
         let survivors = select_survivors(&points, pop_size);
         population = survivors.iter().map(|&i| pool[i].clone()).collect();
+
+        if crate::obs::enabled() {
+            crate::obs::count(crate::obs::Counter::GaGenerations, 1);
+            let front_size =
+                fast_non_dominated_sort(&points).first().map_or(0, |f| f.len());
+            crate::obs::hist(crate::obs::Hist::GaFrontSize, front_size as u64);
+        }
 
         // --- saturation check on the best scalarized objective ---
         let gen_best = points

@@ -319,6 +319,7 @@ impl<'a> Ga<'a> {
                     // displace a legitimate front member) and skip
                     self.pruned.insert(g.clone());
                     self.evaluated_metrics.insert(g.clone(), lb);
+                    crate::obs::count(crate::obs::Counter::GaPruned, 1);
                     continue;
                 }
             }
@@ -336,6 +337,7 @@ impl<'a> Ga<'a> {
         let every = scheduler.snap_interval();
         let threads = thread_count(self.params.threads);
         let topo_fp = arch.topology.fingerprint();
+        crate::obs::count(crate::obs::Counter::GaEvals, jobs.len() as u64);
         let results: Vec<(Vec<u16>, ScheduleMetrics)> = parallel_map_with(
             jobs,
             |(g, parent)| {

@@ -76,10 +76,12 @@ impl DeltaCache {
             Some((stamp, e)) if *e.allocation == *allocation => {
                 *stamp = self.stamp.fetch_add(1, Ordering::Relaxed);
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                crate::obs::count(crate::obs::Counter::DeltaCacheHits, 1);
                 Some(Arc::clone(e))
             }
             _ => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
+                crate::obs::count(crate::obs::Counter::DeltaCacheMisses, 1);
                 None
             }
         }

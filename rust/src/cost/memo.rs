@@ -168,8 +168,14 @@ impl ScheduleCache {
         let key = Self::key(allocation, priority, topology_fp);
         let got = self.shard(key.fingerprint).lock().unwrap().get(&key).copied();
         match got {
-            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
-            None => self.misses.fetch_add(1, Ordering::Relaxed),
+            Some(_) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                crate::obs::count(crate::obs::Counter::SchedCacheHits, 1);
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                crate::obs::count(crate::obs::Counter::SchedCacheMisses, 1);
+            }
         };
         got
     }

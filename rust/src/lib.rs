@@ -64,6 +64,7 @@ pub mod cn;
 pub mod cost;
 pub mod depgraph;
 pub mod mapping;
+pub mod obs;
 pub mod pipeline;
 pub mod rtree;
 pub mod runtime;

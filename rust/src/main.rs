@@ -31,13 +31,14 @@ USAGE:
   stream list
   stream schedule -w <workload> -a <arch[@topology]> [--lines N] [--layer-by-layer]
                   [--priority latency|memory] [--population N]
-                  [--generations N] [--gantt] [--json <path>]
+                  [--generations N] [--gantt] [--json <path>] [--report]
   stream scenario -a <arch[@topology]> -s <scenario> [--arbitration fifo|priority|edf]
-                  [--optimize] [--population N] [--generations N] [--gantt]
+                  [--optimize] [--population N] [--generations N] [--gantt] [--report]
   stream explore  [-w w1,w2,...] [-a a1,a2,...] [--population N] [--generations N]
   stream validate
   stream allocation [--population N] [--generations N]
   stream execute  [--artifacts <dir>]
+  stream trace-check <trace.json>
 
 Any architecture accepts an @topology suffix (bus|ring|mesh|crossbar)
 selecting its interconnect, e.g. hetero@mesh or hom-tpu@ring.
@@ -45,6 +46,12 @@ selecting its interconnect, e.g. hetero@mesh or hom-tpu@ring.
 `stream list` for canned scenarios); --optimize runs the scenario-level
 NSGA-II search over the (tenant, layer) -> core partitioning instead of
 the default per-tenant GA.
+
+Observability: STREAM_TRACE=1 enables the in-process flight recorder
+(counters + spans); STREAM_TRACE=<path.json> additionally writes a
+Chrome/Perfetto trace of the run there (open in https://ui.perfetto.dev).
+--report enables the recorder and prints the per-run counter summary;
+`stream trace-check` validates a written trace file.
 ";
 
 /// Tiny flag parser: `--key value` / `--flag` / `-w value`.
@@ -87,6 +94,7 @@ fn parse_priority(s: &str) -> Result<SchedulePriority> {
 }
 
 fn main() -> Result<()> {
+    stream::obs::init_from_env();
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
         print!("{USAGE}");
@@ -94,6 +102,9 @@ fn main() -> Result<()> {
     }
     let cmd = argv.remove(0);
     let args = Args::new(argv);
+    if args.flag("--report") {
+        stream::obs::set_enabled(true);
+    }
 
     match cmd.as_str() {
         "list" => cmd_list(),
@@ -103,11 +114,38 @@ fn main() -> Result<()> {
         "validate" => cmd_validate(),
         "allocation" => cmd_allocation(&args),
         "execute" => cmd_execute(&args),
+        "trace-check" => cmd_trace_check(&args),
         other => {
             print!("{USAGE}");
             bail!("unknown command {other}")
         }
     }
+}
+
+/// Write the Chrome trace collected over this process to the
+/// `STREAM_TRACE=<path>` destination, if one was given.
+fn write_trace(build: impl FnOnce(&[stream::obs::TraceEvent]) -> String) -> Result<()> {
+    if let Some(path) = stream::obs::trace_path() {
+        let events = stream::obs::take_events();
+        std::fs::write(&path, build(&events))?;
+        println!("chrome trace written to {path} (open in https://ui.perfetto.dev)");
+    }
+    Ok(())
+}
+
+fn cmd_trace_check(args: &Args) -> Result<()> {
+    let path = args
+        .args
+        .first()
+        .filter(|a| !a.starts_with('-'))
+        .ok_or_else(|| anyhow!("usage: stream trace-check <trace.json>"))?;
+    let text = std::fs::read_to_string(path)?;
+    let s = stream::obs::chrome::validate_trace(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    println!(
+        "{path}: OK — {} events ({} spans) across {} lanes",
+        s.events, s.spans, s.lanes
+    );
+    Ok(())
 }
 
 fn cmd_list() -> Result<()> {
@@ -235,9 +273,27 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             fmt_bytes(r.link_stats[*i].bytes_moved as f64),
         );
     }
+    match r.fallback {
+        None => println!("sim partitions: {} (chip-parallel)", r.partitions),
+        Some(reason) => println!("sim partitions: {} (sequential: {reason})", r.partitions),
+    }
+    if let Some(rep) = &r.report {
+        for (pair, label) in [
+            (("cache.sched.hits", "cache.sched.misses"), "schedule cache"),
+            (("cache.delta.hits", "cache.delta.misses"), "delta cache"),
+        ] {
+            if let Some(rate) = rep.hit_rate(pair.0, pair.1) {
+                println!("{label} hit rate: {:.1}%", 100.0 * rate);
+            }
+        }
+        if args.flag("--report") {
+            print!("{rep}");
+        }
+    }
     if args.flag("--gantt") {
         println!("{}", stream::viz::scenario_gantt(&r, &arch, 100));
     }
+    write_trace(|ev| stream::obs::chrome::scenario_trace(&r, &arch, ev))?;
     Ok(())
 }
 
@@ -295,6 +351,12 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         std::fs::write(&path, stream::viz::to_json(&best.result))?;
         println!("schedule written to {path}");
     }
+    if args.flag("--report") {
+        if let Some(rep) = &best.result.report {
+            print!("{rep}");
+        }
+    }
+    write_trace(|ev| stream::obs::chrome::schedule_trace(&best.result, &a, ev))?;
     Ok(())
 }
 

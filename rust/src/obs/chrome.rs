@@ -1,0 +1,383 @@
+//! Chrome/Perfetto `trace_event` JSON export and validation.
+//!
+//! A run is rendered as one JSON object `{"traceEvents": [...]}` that
+//! opens directly in `chrome://tracing` or <https://ui.perfetto.dev>:
+//!
+//! - **pid 0** — the *runtime* process: wall-clock spans and instants
+//!   recorded by the [`Recorder`](super) facade (GA generations,
+//!   parsim worker/merge phases, simulate calls), timestamps in real
+//!   microseconds since the recorder epoch;
+//! - **pid c+1** — chip `c` of the package: simulated-time spans,
+//!   timestamps in *cycles rendered as microseconds* (the trace_event
+//!   format has no unit field; 1 µs ≡ 1 cycle);
+//!   - **tid = core id** — one lane per core, `'X'` span per CN;
+//!   - **tid = 1000 + link id** — one lane per interconnect link,
+//!     `'X'` span per transfer window the link was reserved for
+//!     (comms and DRAM traffic).  Inter-chip links live on pid 0.
+//!
+//! Lanes are sound by construction: cores execute CNs serially
+//! (`core_avail` is monotone) and `FcfsLink` reserves disjoint windows
+//! per link, so every simulated lane holds disjoint-or-touching spans
+//! — which is exactly what [`validate_trace`] checks (and what the CI
+//! smoke job runs over real traces via `stream trace-check`).
+
+use std::collections::BTreeMap;
+
+use crate::arch::Accelerator;
+use crate::scenario::ScenarioResult;
+use crate::scheduler::{CommEvent, DramEvent, DramKind, ScheduleResult};
+use crate::util::Json;
+
+use super::TraceEvent;
+
+/// Link lanes are offset so they never collide with core ids.
+const LINK_TID_BASE: u64 = 1000;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn xev(name: String, cat: &str, ts: f64, dur: f64, pid: u64, tid: u64) -> Json {
+    obj(vec![
+        ("name", Json::Str(name)),
+        ("cat", Json::Str(cat.to_string())),
+        ("ph", Json::Str("X".to_string())),
+        ("ts", Json::Num(ts)),
+        ("dur", Json::Num(dur)),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+    ])
+}
+
+fn meta(pid: u64, tid: Option<u64>, what: &str, name: &str) -> Json {
+    let mut pairs = vec![
+        ("name", Json::Str(what.to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("args", obj(vec![("name", Json::Str(name.to_string()))])),
+    ];
+    if let Some(t) = tid {
+        pairs.push(("tid", Json::Num(t as f64)));
+    }
+    obj(pairs)
+}
+
+/// pid of the chip a core lives on (chip `c` renders as pid `c + 1`).
+fn core_pid(arch: &Accelerator, core: usize) -> u64 {
+    arch.topology.chip_of_core(crate::arch::CoreId(core)) as u64 + 1
+}
+
+/// pid of the chip a link lives on; inter-chip links render on pid 0.
+fn link_pid(arch: &Accelerator, link: usize) -> u64 {
+    arch.topology.chip_of_link(crate::arch::LinkId(link)).map(|c| c as u64 + 1).unwrap_or(0)
+}
+
+/// Process/thread naming metadata for every chip, core and link lane.
+fn meta_events(arch: &Accelerator) -> Vec<Json> {
+    let mut out = vec![meta(0, None, "process_name", "runtime")];
+    for c in 0..arch.topology.n_chips() {
+        out.push(meta(c as u64 + 1, None, "process_name", &format!("chip{c}")));
+    }
+    for core in &arch.cores {
+        out.push(meta(
+            core_pid(arch, core.id.0),
+            Some(core.id.0 as u64),
+            "thread_name",
+            &core.name,
+        ));
+    }
+    for (l, link) in arch.topology.links().iter().enumerate() {
+        out.push(meta(
+            link_pid(arch, l),
+            Some(LINK_TID_BASE + l as u64),
+            "thread_name",
+            &link.name,
+        ));
+    }
+    out
+}
+
+fn comm_events(arch: &Accelerator, comms: &[CommEvent], req: Option<&[usize]>, out: &mut Vec<Json>) {
+    for (i, ev) in comms.iter().enumerate() {
+        let name = match req.and_then(|r| r.get(i)) {
+            Some(r) => format!("r{} comm {}B", r, ev.bytes),
+            None => format!("comm {}B", ev.bytes),
+        };
+        for l in ev.links.iter() {
+            out.push(xev(
+                name.clone(),
+                "comm",
+                ev.start as f64,
+                (ev.end - ev.start) as f64,
+                link_pid(arch, l.0),
+                LINK_TID_BASE + l.0 as u64,
+            ));
+        }
+    }
+}
+
+fn dram_events(arch: &Accelerator, drams: &[DramEvent], req: Option<&[usize]>, out: &mut Vec<Json>) {
+    for (i, ev) in drams.iter().enumerate() {
+        let kind = match ev.kind {
+            DramKind::WeightFetch => "wgt",
+            DramKind::ActFetch => "act-in",
+            DramKind::ActStore => "act-out",
+        };
+        let name = match req.and_then(|r| r.get(i)) {
+            Some(r) => format!("r{} {} {}B", r, kind, ev.bytes),
+            None => format!("{} {}B", kind, ev.bytes),
+        };
+        for l in ev.links.iter() {
+            out.push(xev(
+                name.clone(),
+                "dram",
+                ev.start as f64,
+                (ev.end - ev.start) as f64,
+                link_pid(arch, l.0),
+                LINK_TID_BASE + l.0 as u64,
+            ));
+        }
+    }
+}
+
+/// The recorder's wall-clock events as trace_event objects (pid 0).
+pub fn runtime_events(events: &[TraceEvent]) -> Vec<Json> {
+    events
+        .iter()
+        .map(|e| {
+            let mut pairs = vec![
+                ("name", Json::Str(e.name.clone())),
+                ("cat", Json::Str(e.cat.to_string())),
+                ("ph", Json::Str(e.ph.to_string())),
+                ("ts", Json::Num(e.ts_us)),
+                ("pid", Json::Num(e.pid as f64)),
+                ("tid", Json::Num(e.tid as f64)),
+            ];
+            if e.ph == 'X' {
+                pairs.push(("dur", Json::Num(e.dur_us)));
+            }
+            if e.ph == 'i' {
+                pairs.push(("s", Json::Str("g".to_string())));
+            }
+            obj(pairs)
+        })
+        .collect()
+}
+
+fn wrap(events: Vec<Json>) -> String {
+    let mut top = BTreeMap::new();
+    top.insert("traceEvents".to_string(), Json::Arr(events));
+    top.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    Json::Obj(top).to_string_compact()
+}
+
+/// Render a one-shot schedule as Chrome trace JSON.  `runtime` is the
+/// recorder's drained wall-clock event buffer
+/// ([`take_events`](super::take_events)); pass `&[]` for a pure
+/// simulated-time trace.
+pub fn schedule_trace(res: &ScheduleResult, arch: &Accelerator, runtime: &[TraceEvent]) -> String {
+    let mut events = meta_events(arch);
+    for cn in &res.cns {
+        events.push(xev(
+            format!("cn{}", cn.cn.0),
+            "cn",
+            cn.start as f64,
+            (cn.end - cn.start) as f64,
+            core_pid(arch, cn.core.0),
+            cn.core.0 as u64,
+        ));
+    }
+    comm_events(arch, &res.comms, None, &mut events);
+    dram_events(arch, &res.drams, None, &mut events);
+    events.extend(runtime_events(runtime));
+    wrap(events)
+}
+
+/// Render a multi-tenant scenario as Chrome trace JSON; CN and
+/// transfer spans carry their request tag in the name.
+pub fn scenario_trace(res: &ScenarioResult, arch: &Accelerator, runtime: &[TraceEvent]) -> String {
+    let mut events = meta_events(arch);
+    for cn in &res.cns {
+        events.push(xev(
+            format!("r{} cn{}", cn.request, cn.placed.cn.0),
+            "cn",
+            cn.placed.start as f64,
+            (cn.placed.end - cn.placed.start) as f64,
+            core_pid(arch, cn.placed.core.0),
+            cn.placed.core.0 as u64,
+        ));
+    }
+    comm_events(arch, &res.comms, Some(&res.comm_req), &mut events);
+    dram_events(arch, &res.drams, Some(&res.dram_req), &mut events);
+    events.extend(runtime_events(runtime));
+    wrap(events)
+}
+
+/// Summary of a validated trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceSummary {
+    /// Total trace events of any phase.
+    pub events: usize,
+    /// `'X'` complete spans.
+    pub spans: usize,
+    /// Distinct `(pid, tid)` lanes carrying at least one span.
+    pub lanes: usize,
+}
+
+/// Float-rounding slack for wall-clock lanes (µs); simulated lanes
+/// carry exact integers.
+const EPS: f64 = 0.5;
+
+/// Parse a Chrome trace and check its structure: `traceEvents` is
+/// present, every `'X'` span carries numeric `ts`/`dur`/`pid`/`tid`
+/// and a name, metadata events carry `args.name`, and the spans of
+/// every `(pid, tid)` lane are disjoint or properly nested.  Used by
+/// the golden-schema test and the `stream trace-check` CLI.
+pub fn validate_trace(text: &str) -> Result<TraceSummary, String> {
+    let json = Json::parse(text).map_err(|e| e.to_string())?;
+    let events = json
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or("missing traceEvents array")?;
+    let mut lanes: BTreeMap<(u64, u64), Vec<(f64, f64)>> = BTreeMap::new();
+    let mut spans = 0usize;
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .ok_or_else(|| format!("event {i}: missing ph"))?;
+        match ph {
+            "M" => {
+                ev.get("args")
+                    .and_then(|a| a.get("name"))
+                    .and_then(|n| n.as_str())
+                    .ok_or_else(|| format!("event {i}: metadata without args.name"))?;
+            }
+            "X" => {
+                ev.get("name")
+                    .and_then(|n| n.as_str())
+                    .ok_or_else(|| format!("event {i}: span without name"))?;
+                let num = |k: &str| {
+                    ev.get(k)
+                        .and_then(|v| v.as_f64())
+                        .ok_or_else(|| format!("event {i}: span without numeric {k}"))
+                };
+                let (ts, dur) = (num("ts")?, num("dur")?);
+                if !(ts >= 0.0 && dur >= 0.0) {
+                    return Err(format!("event {i}: negative ts/dur"));
+                }
+                let (pid, tid) = (num("pid")? as u64, num("tid")? as u64);
+                lanes.entry((pid, tid)).or_default().push((ts, dur));
+                spans += 1;
+            }
+            "i" | "I" | "C" => {
+                ev.get("ts")
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| format!("event {i}: missing ts"))?;
+            }
+            other => return Err(format!("event {i}: unsupported phase {other:?}")),
+        }
+    }
+    // span nesting per lane: sorted by (start asc, duration desc), a
+    // span must either start after every open span ended, or end
+    // within the innermost still-open one
+    for ((pid, tid), lane) in lanes.iter_mut() {
+        lane.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap()
+                .then(b.1.partial_cmp(&a.1).unwrap())
+        });
+        let mut open: Vec<f64> = Vec::new(); // end times, outermost first
+        for &(ts, dur) in lane.iter() {
+            while matches!(open.last(), Some(&end) if end <= ts + EPS) {
+                open.pop();
+            }
+            if let Some(&end) = open.last() {
+                if ts + dur > end + EPS {
+                    return Err(format!(
+                        "lane pid {pid} tid {tid}: span [{ts}, {}) overlaps one ending at {end}",
+                        ts + dur
+                    ));
+                }
+            }
+            open.push(ts + dur);
+        }
+    }
+    Ok(TraceSummary { events: events.len(), spans, lanes: lanes.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span_json(ts: f64, dur: f64, tid: u64) -> String {
+        format!(
+            r#"{{"name":"s","ph":"X","ts":{ts},"dur":{dur},"pid":1,"tid":{tid}}}"#
+        )
+    }
+
+    #[test]
+    fn validator_accepts_disjoint_and_nested() {
+        let t = format!(
+            r#"{{"traceEvents":[{},{},{},{}]}}"#,
+            span_json(0.0, 100.0, 1),
+            span_json(10.0, 20.0, 1),  // nested
+            span_json(100.0, 50.0, 1), // touching
+            span_json(0.0, 10.0, 2),   // other lane
+        );
+        let s = validate_trace(&t).unwrap();
+        assert_eq!(s.spans, 4);
+        assert_eq!(s.lanes, 2);
+    }
+
+    #[test]
+    fn validator_rejects_overlap() {
+        let t = format!(
+            r#"{{"traceEvents":[{},{}]}}"#,
+            span_json(0.0, 100.0, 1),
+            span_json(50.0, 100.0, 1), // straddles the first's end
+        );
+        let err = validate_trace(&t).unwrap_err();
+        assert!(err.contains("overlaps"), "{err}");
+    }
+
+    #[test]
+    fn validator_requires_schema_fields() {
+        assert!(validate_trace("{}").is_err());
+        assert!(validate_trace(r#"{"traceEvents":[{"ph":"X"}]}"#).is_err());
+        assert!(validate_trace(r#"{"traceEvents":[{"ph":"M","pid":0}]}"#).is_err());
+        assert!(validate_trace("not json").is_err());
+        // empty trace is structurally fine
+        let s = validate_trace(r#"{"traceEvents":[]}"#).unwrap();
+        assert_eq!(s.events, 0);
+    }
+
+    #[test]
+    fn runtime_events_render_phases() {
+        let evs = vec![
+            TraceEvent {
+                name: "gen".into(),
+                cat: "ga",
+                ph: 'X',
+                ts_us: 1.0,
+                dur_us: 2.0,
+                pid: 0,
+                tid: 7,
+            },
+            TraceEvent {
+                name: "mark".into(),
+                cat: "sim",
+                ph: 'i',
+                ts_us: 3.0,
+                dur_us: 0.0,
+                pid: 0,
+                tid: 0,
+            },
+        ];
+        let rendered = runtime_events(&evs);
+        let text = wrap(rendered);
+        let s = validate_trace(&text).unwrap();
+        assert_eq!(s.events, 2);
+        assert_eq!(s.spans, 1);
+    }
+}

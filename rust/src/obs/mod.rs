@@ -1,0 +1,593 @@
+//! Flight-recorder observability: spans, counters, histograms and
+//! Chrome-trace export for the simulation core, the GA and the
+//! scenario engine.
+//!
+//! The subsystem is an in-tree, zero-dependency facade with three
+//! pillars:
+//!
+//! 1. **spans & events** — wall-clock RAII spans ([`span`]) and
+//!    instants ([`instant`]) recorded into a thread-local buffer that
+//!    drains into a global registry (one mutex acquisition per
+//!    [`FLUSH_EVERY`] events or per thread exit, so parallel GA
+//!    workers and parsim chips never contend per event);
+//! 2. **counters & histograms** — fixed enum-indexed atomics
+//!    ([`Counter`], [`Hist`]) incremented from the engines' seams
+//!    (cache get/insert, pool push/pop, snapshot/resume boundaries,
+//!    GA generations) and *aggregated* — not sampled per step — from
+//!    the simulation outcome when a run finishes;
+//! 3. **export** — [`chrome`] renders a run as Chrome/Perfetto
+//!    `trace_event` JSON, and [`report::RunReport`] snapshots the
+//!    counters into a per-run summary attached to
+//!    `ScheduleResult`/`ScenarioResult` and printed by the CLI.
+//!
+//! # Zero cost when off
+//!
+//! The recorder is **disabled by default**.  Every entry point first
+//! checks [`enabled`] — a single relaxed atomic load — and returns
+//! immediately when the recorder is off; no allocation, no mutex, no
+//! time syscall.  The hot simulation loop (`SimContext::step`) carries
+//! **no instrumentation at all**: per-run totals (decisions, transfer
+//! counts, evictions, link occupancy) are derived once in
+//! `SimContext::finish` from state the engine already maintains, so a
+//! disabled recorder adds only the per-CN pool-push/pop check.  More
+//! importantly, tracing can never perturb *results*: the recorder
+//! observes the engines and is never read back by them, so enabled and
+//! disabled runs are bit-identical by construction (pinned by
+//! `rust/tests/obs_equivalence.rs`).
+//!
+//! # Enabling
+//!
+//! Programmatic: [`set_enabled`].  From the CLI / environment:
+//! `STREAM_TRACE=0` (or unset) — off; `STREAM_TRACE=1` — record
+//! counters and events in memory (the CLI `--report` path);
+//! `STREAM_TRACE=path.json` — additionally write a Chrome trace to
+//! `path.json` at command exit ([`init_from_env`] + [`trace_path`]).
+//!
+//! The registry is global (process-wide), matching its use as a
+//! flight recorder: tests that assert on counter values serialize via
+//! their own mutex and call [`reset`] around the section under test.
+
+pub mod chrome;
+pub mod report;
+
+pub use report::{LinkLoad, RunReport};
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Monotonic event counters, one atomic cell each.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Counter {
+    /// Completed `SimContext::simulate` runs (any path).
+    SimRuns = 0,
+    /// Scheduling decisions across all runs (== CNs placed).
+    SimDecisions,
+    /// Decisions taken in multi-lane runs, i.e. inter-request
+    /// arbitration picks.
+    ArbitrationPicks,
+    /// Inter-core communication transfers.
+    CommTransfers,
+    /// DRAM transfers (weight/act fetches, output stores).
+    DramTransfers,
+    /// Weight-SRAM DRAM fetches.
+    WeightFetches,
+    /// FIFO weight evictions.
+    WeightEvictions,
+    /// Candidate-pool insertions.
+    PoolPushes,
+    /// Candidate-pool pops (scheduling picks).
+    PoolPops,
+    /// `ScheduleCache` exact-hit lookups.
+    SchedCacheHits,
+    /// `ScheduleCache` misses (including fingerprint collisions).
+    SchedCacheMisses,
+    /// `DeltaCache` segmented-parent hits.
+    DeltaCacheHits,
+    /// `DeltaCache` misses.
+    DeltaCacheMisses,
+    /// Child genomes resumed from a parent snapshot.
+    DeltaResumes,
+    /// Traced cold runs (no usable parent snapshot).
+    DeltaColdRuns,
+    /// Resumable snapshots frozen by traced runs.
+    SnapshotsTaken,
+    /// Parallel (chip-partitioned) simulations that engaged.
+    ParsimEngaged,
+    /// Parallel simulations that fell back to sequential.
+    ParsimFallbacks,
+    /// NSGA-II generations completed.
+    GaGenerations,
+    /// Genomes actually simulated (cache misses dispatched).
+    GaEvals,
+    /// Genomes killed by the lower-bound early-abort.
+    GaPruned,
+    /// Completed scenario-engine runs.
+    ScenarioRuns,
+}
+
+impl Counter {
+    pub const COUNT: usize = 22;
+
+    pub const ALL: [Counter; Counter::COUNT] = [
+        Counter::SimRuns,
+        Counter::SimDecisions,
+        Counter::ArbitrationPicks,
+        Counter::CommTransfers,
+        Counter::DramTransfers,
+        Counter::WeightFetches,
+        Counter::WeightEvictions,
+        Counter::PoolPushes,
+        Counter::PoolPops,
+        Counter::SchedCacheHits,
+        Counter::SchedCacheMisses,
+        Counter::DeltaCacheHits,
+        Counter::DeltaCacheMisses,
+        Counter::DeltaResumes,
+        Counter::DeltaColdRuns,
+        Counter::SnapshotsTaken,
+        Counter::ParsimEngaged,
+        Counter::ParsimFallbacks,
+        Counter::GaGenerations,
+        Counter::GaEvals,
+        Counter::GaPruned,
+        Counter::ScenarioRuns,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::SimRuns => "sim.runs",
+            Counter::SimDecisions => "sim.decisions",
+            Counter::ArbitrationPicks => "sim.arbitration_picks",
+            Counter::CommTransfers => "sim.comm_transfers",
+            Counter::DramTransfers => "sim.dram_transfers",
+            Counter::WeightFetches => "weights.fetches",
+            Counter::WeightEvictions => "weights.evictions",
+            Counter::PoolPushes => "pool.pushes",
+            Counter::PoolPops => "pool.pops",
+            Counter::SchedCacheHits => "cache.sched.hits",
+            Counter::SchedCacheMisses => "cache.sched.misses",
+            Counter::DeltaCacheHits => "cache.delta.hits",
+            Counter::DeltaCacheMisses => "cache.delta.misses",
+            Counter::DeltaResumes => "delta.resumes",
+            Counter::DeltaColdRuns => "delta.cold_runs",
+            Counter::SnapshotsTaken => "delta.snapshots_taken",
+            Counter::ParsimEngaged => "parsim.engaged",
+            Counter::ParsimFallbacks => "parsim.fallbacks",
+            Counter::GaGenerations => "ga.generations",
+            Counter::GaEvals => "ga.evals",
+            Counter::GaPruned => "ga.pruned",
+            Counter::ScenarioRuns => "scenario.runs",
+        }
+    }
+}
+
+/// Number of buckets every histogram carries.
+pub const HIST_BUCKETS: usize = 16;
+
+/// Fixed-bucket histograms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Hist {
+    /// Decisions inherited for free per delta resume (log2 buckets).
+    ResumeDepth = 0,
+    /// Per-link busy occupancy as a percentage of the run makespan
+    /// (10-point linear buckets, 0–100).
+    LinkBusyPct,
+    /// Pareto-front size per GA generation (log2 buckets).
+    GaFrontSize,
+}
+
+impl Hist {
+    pub const COUNT: usize = 3;
+
+    pub const ALL: [Hist; Hist::COUNT] =
+        [Hist::ResumeDepth, Hist::LinkBusyPct, Hist::GaFrontSize];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Hist::ResumeDepth => "delta.resume_depth",
+            Hist::LinkBusyPct => "links.busy_pct",
+            Hist::GaFrontSize => "ga.front_size",
+        }
+    }
+
+    /// Bucket index for a sample (always in `0..HIST_BUCKETS`).
+    pub fn bucket(self, v: u64) -> usize {
+        match self {
+            // 0-9 → 0, 10-19 → 1, …, 100+ → 10
+            Hist::LinkBusyPct => ((v / 10) as usize).min(10),
+            // log2: 0 → 0, 1 → 1, 2-3 → 2, 4-7 → 3, …
+            _ => {
+                if v == 0 {
+                    0
+                } else {
+                    ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+                }
+            }
+        }
+    }
+
+    /// Human-readable lower bound of a bucket.
+    pub fn bucket_label(self, i: usize) -> String {
+        match self {
+            Hist::LinkBusyPct => format!("{}%", i * 10),
+            _ => {
+                if i == 0 {
+                    "0".to_string()
+                } else {
+                    format!(">={}", 1u64 << (i - 1))
+                }
+            }
+        }
+    }
+}
+
+/// One recorded trace event (wall-clock, microseconds since the
+/// recorder's epoch).  `ph` follows the Chrome `trace_event` phases:
+/// `'X'` complete span, `'i'` instant.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: String,
+    pub cat: &'static str,
+    pub ph: char,
+    pub ts_us: f64,
+    pub dur_us: f64,
+    pub pid: u64,
+    pub tid: u64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+#[allow(clippy::declare_interior_mutable_const)]
+const ZROW: [AtomicU64; HIST_BUCKETS] = [ZERO; HIST_BUCKETS];
+
+static COUNTERS: [AtomicU64; Counter::COUNT] = [ZERO; Counter::COUNT];
+static HISTS: [[AtomicU64; HIST_BUCKETS]; Hist::COUNT] = [ZROW; Hist::COUNT];
+static EVENTS: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+static TRACE_PATH: Mutex<Option<String>> = Mutex::new(None);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Thread-local event buffer; drained into [`EVENTS`] every
+/// [`FLUSH_EVERY`] events and on thread exit.
+const FLUSH_EVERY: usize = 64;
+
+struct TlBuf(Vec<TraceEvent>);
+
+impl Drop for TlBuf {
+    fn drop(&mut self) {
+        if !self.0.is_empty() {
+            if let Ok(mut g) = EVENTS.lock() {
+                g.append(&mut self.0);
+            }
+        }
+    }
+}
+
+thread_local! {
+    static TL_EVENTS: RefCell<TlBuf> = RefCell::new(TlBuf(Vec::new()));
+}
+
+/// Is the recorder on?  The single relaxed load every instrumentation
+/// site pays when tracing is disabled.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the recorder on/off (process-wide).
+pub fn set_enabled(on: bool) {
+    if on {
+        // pin the epoch before any span can start
+        let _ = EPOCH.get_or_init(Instant::now);
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Configure from `STREAM_TRACE`: unset/`0`/empty — off; `1` — on,
+/// in-memory only; anything else — on, and [`trace_path`] returns the
+/// value as the Chrome-trace output path (written by the CLI).
+pub fn init_from_env() {
+    match std::env::var("STREAM_TRACE") {
+        Err(_) => {}
+        Ok(v) if v.is_empty() || v == "0" => {}
+        Ok(v) if v == "1" => set_enabled(true),
+        Ok(path) => {
+            set_enabled(true);
+            *TRACE_PATH.lock().unwrap() = Some(path);
+        }
+    }
+}
+
+/// The `STREAM_TRACE` output path, when one was configured.
+pub fn trace_path() -> Option<String> {
+    TRACE_PATH.lock().unwrap().clone()
+}
+
+/// Bump a counter by `n` (no-op when disabled).
+#[inline]
+pub fn count(c: Counter, n: u64) {
+    if enabled() {
+        COUNTERS[c as usize].fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Current value of a counter.
+pub fn counter(c: Counter) -> u64 {
+    COUNTERS[c as usize].load(Ordering::Relaxed)
+}
+
+/// Record one histogram sample (no-op when disabled).
+#[inline]
+pub fn hist(h: Hist, v: u64) {
+    if enabled() {
+        HISTS[h as usize][h.bucket(v)].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Bucket counts of a histogram.
+pub fn hist_counts(h: Hist) -> [u64; HIST_BUCKETS] {
+    let mut out = [0u64; HIST_BUCKETS];
+    for (o, c) in out.iter_mut().zip(&HISTS[h as usize]) {
+        *o = c.load(Ordering::Relaxed);
+    }
+    out
+}
+
+/// All nonzero counters, in declaration order.
+pub fn snapshot_counters() -> Vec<(&'static str, u64)> {
+    Counter::ALL
+        .iter()
+        .map(|&c| (c.name(), counter(c)))
+        .filter(|&(_, v)| v > 0)
+        .collect()
+}
+
+/// All histograms with at least one sample, as
+/// `(name, [(bucket_label, count)])` with empty buckets dropped.
+pub fn snapshot_hists() -> Vec<(&'static str, Vec<(String, u64)>)> {
+    Hist::ALL
+        .iter()
+        .filter_map(|&h| {
+            let counts = hist_counts(h);
+            let buckets: Vec<(String, u64)> = counts
+                .iter()
+                .enumerate()
+                .filter(|&(_, &c)| c > 0)
+                .map(|(i, &c)| (h.bucket_label(i), c))
+                .collect();
+            (!buckets.is_empty()).then(|| (h.name(), buckets))
+        })
+        .collect()
+}
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn buffer_event(ev: TraceEvent) {
+    TL_EVENTS.with(|b| {
+        let mut b = b.borrow_mut();
+        b.0.push(ev);
+        if b.0.len() >= FLUSH_EVERY {
+            if let Ok(mut g) = EVENTS.lock() {
+                g.append(&mut b.0);
+            }
+        }
+    });
+}
+
+/// Append an already-built event (no-op when disabled).
+pub fn push_event(ev: TraceEvent) {
+    if enabled() {
+        buffer_event(ev);
+    }
+}
+
+/// Flush the calling thread's buffered events into the global
+/// registry.
+pub fn flush() {
+    TL_EVENTS.with(|b| {
+        let mut b = b.borrow_mut();
+        if !b.0.is_empty() {
+            if let Ok(mut g) = EVENTS.lock() {
+                g.append(&mut b.0);
+            }
+        }
+    });
+}
+
+/// Drain all recorded events (flushes the calling thread first;
+/// events still buffered on *other* live threads are not included
+/// until those threads flush or exit).
+pub fn take_events() -> Vec<TraceEvent> {
+    flush();
+    std::mem::take(&mut *EVENTS.lock().unwrap())
+}
+
+/// Zero every counter and histogram and drop all recorded events.
+/// Leaves the enabled flag untouched — tests bracket their section
+/// with `reset()` … asserts … `reset()`.
+pub fn reset() {
+    for c in &COUNTERS {
+        c.store(0, Ordering::Relaxed);
+    }
+    for row in &HISTS {
+        for c in row {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+    flush();
+    EVENTS.lock().unwrap().clear();
+}
+
+/// RAII wall-clock span: records an `'X'` event from construction to
+/// drop under pid 0 ("runtime").  Cost when disabled: one relaxed
+/// load, no timestamp.
+pub struct SpanGuard {
+    name: &'static str,
+    cat: &'static str,
+    start: Option<Instant>,
+    tid: u64,
+}
+
+impl SpanGuard {
+    /// Stop timing without recording (e.g. abandoned phases).
+    pub fn cancel(mut self) {
+        self.start = None;
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            let ep = epoch();
+            let ts_us = start.duration_since(ep).as_secs_f64() * 1e6;
+            let dur_us = start.elapsed().as_secs_f64() * 1e6;
+            buffer_event(TraceEvent {
+                name: self.name.to_string(),
+                cat: self.cat,
+                ph: 'X',
+                ts_us,
+                dur_us,
+                pid: 0,
+                tid: self.tid,
+            });
+        }
+    }
+}
+
+/// Open a wall-clock span on runtime lane 0.
+pub fn span(cat: &'static str, name: &'static str) -> SpanGuard {
+    span_tid(cat, name, 0)
+}
+
+/// Open a wall-clock span on a specific runtime lane (e.g. one per
+/// parsim worker).
+pub fn span_tid(cat: &'static str, name: &'static str, tid: u64) -> SpanGuard {
+    let start = if enabled() {
+        let _ = epoch();
+        Some(Instant::now())
+    } else {
+        None
+    };
+    SpanGuard { name, cat, start, tid }
+}
+
+/// Open a wall-clock span on a per-thread runtime lane: a stable hash
+/// of the current thread id, offset past the explicit worker lanes.
+/// Use this for code that runs concurrently on pool threads (GA
+/// fitness workers, parsim chip workers) so spans from different
+/// threads land on different lanes and never appear to overlap.
+pub fn span_here(cat: &'static str, name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { name, cat, start: None, tid: 0 };
+    }
+    span_tid(cat, name, thread_lane())
+}
+
+/// Stable per-thread lane id: hashed `ThreadId`, masked to 32 bits
+/// (exactly representable as an f64 timeline tid) and offset by 2^16
+/// to stay clear of the fixed lanes (0 = main, small ids = workers).
+pub fn thread_lane() -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    std::thread::current().id().hash(&mut h);
+    (1 << 16) + (h.finish() & 0xffff_ffff)
+}
+
+/// Record an instant event on the runtime lane (no-op when disabled).
+pub fn instant(cat: &'static str, name: &str) {
+    if enabled() {
+        let ts_us = epoch().elapsed().as_secs_f64() * 1e6;
+        buffer_event(TraceEvent {
+            name: name.to_string(),
+            cat,
+            ph: 'i',
+            ts_us,
+            dur_us: 0.0,
+            pid: 0,
+            tid: 0,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex as StdMutex;
+
+    // the registry is process-global; serialize the tests that touch it
+    static LOCK: StdMutex<()> = StdMutex::new(());
+
+    #[test]
+    fn disabled_recorder_ignores_everything() {
+        let _g = LOCK.lock().unwrap();
+        set_enabled(false);
+        reset();
+        count(Counter::SimRuns, 3);
+        hist(Hist::ResumeDepth, 5);
+        instant("t", "x");
+        drop(span("t", "s"));
+        assert_eq!(counter(Counter::SimRuns), 0);
+        assert_eq!(hist_counts(Hist::ResumeDepth), [0; HIST_BUCKETS]);
+        assert!(take_events().is_empty());
+    }
+
+    #[test]
+    fn counters_and_hists_accumulate_when_enabled() {
+        let _g = LOCK.lock().unwrap();
+        set_enabled(true);
+        reset();
+        count(Counter::GaEvals, 2);
+        count(Counter::GaEvals, 3);
+        hist(Hist::GaFrontSize, 0);
+        hist(Hist::GaFrontSize, 1);
+        hist(Hist::GaFrontSize, 6);
+        assert_eq!(counter(Counter::GaEvals), 5);
+        let h = hist_counts(Hist::GaFrontSize);
+        assert_eq!(h[0], 1);
+        assert_eq!(h[1], 1);
+        assert_eq!(h[3], 1); // 6 → bucket [4,8)
+        let snap = snapshot_counters();
+        assert!(snap.contains(&("ga.evals", 5)));
+        set_enabled(false);
+        reset();
+    }
+
+    #[test]
+    fn spans_record_nonnegative_windows() {
+        let _g = LOCK.lock().unwrap();
+        set_enabled(true);
+        reset();
+        {
+            let _outer = span("test", "outer");
+            instant("test", "mark");
+        }
+        let evs = take_events();
+        assert_eq!(evs.len(), 2);
+        for e in &evs {
+            assert!(e.ts_us >= 0.0 && e.dur_us >= 0.0);
+        }
+        assert!(evs.iter().any(|e| e.ph == 'X' && e.name == "outer"));
+        assert!(evs.iter().any(|e| e.ph == 'i' && e.name == "mark"));
+        set_enabled(false);
+        reset();
+    }
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(Hist::ResumeDepth.bucket(0), 0);
+        assert_eq!(Hist::ResumeDepth.bucket(1), 1);
+        assert_eq!(Hist::ResumeDepth.bucket(2), 2);
+        assert_eq!(Hist::ResumeDepth.bucket(3), 2);
+        assert_eq!(Hist::ResumeDepth.bucket(u64::MAX), HIST_BUCKETS - 1);
+        assert_eq!(Hist::LinkBusyPct.bucket(0), 0);
+        assert_eq!(Hist::LinkBusyPct.bucket(99), 9);
+        assert_eq!(Hist::LinkBusyPct.bucket(100), 10);
+    }
+}

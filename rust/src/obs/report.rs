@@ -1,0 +1,150 @@
+//! Per-run observability summary ([`RunReport`]): engine totals
+//! derived from the simulation outcome plus a snapshot of the global
+//! counters/histograms, attached to
+//! [`ScheduleResult`](crate::scheduler::ScheduleResult) /
+//! [`ScenarioResult`](crate::scenario::ScenarioResult) when the
+//! recorder is enabled and printed by the CLI under `--report`.
+
+use std::fmt;
+
+use crate::scheduler::FallbackReason;
+
+/// Occupancy of one interconnect link over a run.
+#[derive(Debug, Clone, Default)]
+pub struct LinkLoad {
+    pub name: String,
+    pub busy_cc: u64,
+    pub bytes: u64,
+    /// Busy cycles over the run makespan, in [0, 1].
+    pub util: f64,
+}
+
+/// Snapshot of what one engine run did, attached to its result when
+/// the recorder is enabled ([`crate::obs::enabled`]); always `None`
+/// when disabled, so result structs stay bit-identical to the
+/// untraced path.
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    /// Scheduling decisions (== CNs placed across all lanes).
+    pub decisions: u64,
+    /// Inter-core transfers performed.
+    pub comm_transfers: u64,
+    /// DRAM transfers performed (all kinds).
+    pub dram_transfers: u64,
+    /// Weight fetches from DRAM.
+    pub weight_fetches: u64,
+    /// FIFO weight evictions.
+    pub weight_evictions: u64,
+    /// Chip partitions the simulation ran under (1 = sequential).
+    pub partitions: usize,
+    /// Why the parallel sim core did not engage, when it didn't.
+    pub fallback: Option<FallbackReason>,
+    /// Run makespan in cycles.
+    pub makespan_cc: u64,
+    /// Busiest links first (top 8), with utilization over the
+    /// makespan.
+    pub links: Vec<LinkLoad>,
+    /// Global counter snapshot (nonzero only) at report time.
+    pub counters: Vec<(&'static str, u64)>,
+    /// Global histogram snapshot (non-empty only) at report time.
+    pub hists: Vec<(&'static str, Vec<(String, u64)>)>,
+}
+
+impl RunReport {
+    /// Fill [`RunReport::counters`] / [`RunReport::hists`] from the
+    /// global recorder.
+    pub fn capture_globals(&mut self) {
+        self.counters = super::snapshot_counters();
+        self.hists = super::snapshot_hists();
+    }
+
+    /// Hit rate of a `(hits, misses)` counter pair from the captured
+    /// snapshot, when both were recorded.
+    pub fn hit_rate(&self, hits_name: &str, misses_name: &str) -> Option<f64> {
+        let get = |n: &str| {
+            self.counters.iter().find(|(k, _)| *k == n).map(|&(_, v)| v)
+        };
+        let h = get(hits_name).unwrap_or(0);
+        let m = get(misses_name).unwrap_or(0);
+        (h + m > 0).then(|| h as f64 / (h + m) as f64)
+    }
+}
+
+impl fmt::Display for RunReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "run report")?;
+        writeln!(f, "  decisions          {}", self.decisions)?;
+        writeln!(f, "  comm transfers     {}", self.comm_transfers)?;
+        writeln!(f, "  dram transfers     {}", self.dram_transfers)?;
+        writeln!(f, "  weight fetches     {}", self.weight_fetches)?;
+        writeln!(f, "  weight evictions   {}", self.weight_evictions)?;
+        writeln!(f, "  makespan           {} cc", self.makespan_cc)?;
+        match self.fallback {
+            None => writeln!(f, "  partitions         {} (parallel)", self.partitions)?,
+            Some(r) => {
+                writeln!(f, "  partitions         {} (sequential: {})", self.partitions, r)?
+            }
+        }
+        if !self.links.is_empty() {
+            writeln!(f, "  busiest links:")?;
+            for l in &self.links {
+                writeln!(
+                    f,
+                    "    {:<20} {:>12} cc  {:>12} B  {:5.1}%",
+                    l.name,
+                    l.busy_cc,
+                    l.bytes,
+                    l.util * 100.0
+                )?;
+            }
+        }
+        if !self.counters.is_empty() {
+            writeln!(f, "  counters:")?;
+            for (k, v) in &self.counters {
+                writeln!(f, "    {k:<24} {v}")?;
+            }
+        }
+        for (name, buckets) in &self.hists {
+            writeln!(f, "  hist {name}:")?;
+            for (label, c) in buckets {
+                writeln!(f, "    {label:<10} {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_fallback_and_links() {
+        let mut r = RunReport {
+            decisions: 10,
+            partitions: 1,
+            fallback: Some(FallbackReason::SingleRequest),
+            makespan_cc: 1000,
+            ..Default::default()
+        };
+        r.links.push(LinkLoad {
+            name: "bus".into(),
+            busy_cc: 500,
+            bytes: 4096,
+            util: 0.5,
+        });
+        let s = r.to_string();
+        assert!(s.contains("single request"));
+        assert!(s.contains("bus"));
+        assert!(s.contains("50.0%"));
+    }
+
+    #[test]
+    fn hit_rate_reads_captured_counters() {
+        let mut r = RunReport::default();
+        r.counters = vec![("cache.sched.hits", 3), ("cache.sched.misses", 1)];
+        let rate = r.hit_rate("cache.sched.hits", "cache.sched.misses").unwrap();
+        assert!((rate - 0.75).abs() < 1e-12);
+        assert!(r.hit_rate("cache.delta.hits", "cache.delta.misses").is_none());
+    }
+}

@@ -207,6 +207,7 @@ impl ScenarioRunner<'_> {
             })
             .collect();
 
+        crate::obs::count(crate::obs::Counter::ScenarioRuns, 1);
         let out = SimContext {
             arch: self.sim.arch,
             tenants: &tenants,
@@ -218,6 +219,7 @@ impl ScenarioRunner<'_> {
             sim_threads,
         }
         .simulate();
+        let report = crate::obs::enabled().then(|| Box::new(out.report(self.sim.arch)));
 
         // --- per-request / per-tenant serving statistics -----------------
         let cns: Vec<ScenarioCn> = out
@@ -291,6 +293,8 @@ impl ScenarioRunner<'_> {
             outcomes,
             tenants,
             partitions: out.partitions,
+            fallback: out.fallback,
+            report,
         }
     }
 }

@@ -48,7 +48,7 @@ mod opt;
 mod result;
 mod spec;
 
-pub use crate::scheduler::Arbitration;
+pub use crate::scheduler::{Arbitration, FallbackReason};
 pub use engine::{ScenarioError, ScenarioRunner, ScenarioSim, TenantBuild};
 pub use opt::{per_tenant_ga, ScenarioGa, ScenarioGaResult};
 pub use result::{

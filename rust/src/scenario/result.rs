@@ -70,6 +70,13 @@ pub struct ScenarioResult {
     /// (1 = sequential; see `STREAM_SIM_THREADS`).  Observational only
     /// — results are bit-identical for every value.
     pub partitions: usize,
+    /// Why the simulation ran sequentially; `None` when the
+    /// chip-partitioned parallel core engaged.  Deterministic for a
+    /// given scenario + thread count, like [`partitions`](Self::partitions).
+    pub fallback: Option<crate::scheduler::FallbackReason>,
+    /// Flight-recorder summary, attached only when the recorder is
+    /// enabled ([`crate::obs::enabled`]); `None` otherwise.
+    pub report: Option<Box<crate::obs::RunReport>>,
 }
 
 impl ScenarioResult {

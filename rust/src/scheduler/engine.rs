@@ -224,7 +224,7 @@ impl<'a> Scheduler<'a> {
         priority: SchedulePriority,
         linear_pool: bool,
     ) -> ScheduleResult {
-        self.with_ctx(allocation, priority, linear_pool, |ctx| Self::assemble(ctx.simulate()))
+        self.with_ctx(allocation, priority, linear_pool, |ctx| self.assemble(ctx.simulate()))
     }
 
     /// Build the one-shot [`SimContext`] (single lane at t = 0, layer
@@ -261,8 +261,10 @@ impl<'a> Scheduler<'a> {
         f(&ctx)
     }
 
-    /// Drop the (empty) request tags of a one-shot outcome.
-    fn assemble(out: SimOutcome) -> ScheduleResult {
+    /// Drop the (empty) request tags of a one-shot outcome, attaching
+    /// the flight-recorder report when the recorder is enabled.
+    fn assemble(&self, out: SimOutcome) -> ScheduleResult {
+        let report = crate::obs::enabled().then(|| Box::new(out.report(self.arch)));
         ScheduleResult {
             cns: out.cns,
             comms: out.comms,
@@ -270,6 +272,7 @@ impl<'a> Scheduler<'a> {
             link_stats: out.link_stats,
             metrics: out.metrics,
             memtrace: out.memtrace,
+            report,
         }
     }
 
@@ -295,6 +298,8 @@ impl<'a> Scheduler<'a> {
     ) -> (ScheduleResult, ScheduleSegments) {
         assert!(every >= 1, "snapshot interval must be positive");
         self.with_ctx(allocation, priority, false, |ctx| {
+            let _span = crate::obs::span_here("sim", "run_traced");
+            crate::obs::count(crate::obs::Counter::DeltaColdRuns, 1);
             let mut rec = TouchTracer::new(self.workload.len());
             let mut st = ctx.init(&mut rec);
             let mut snaps = vec![Arc::new(SimSnapshot { state: st.clone() })];
@@ -304,7 +309,8 @@ impl<'a> Scheduler<'a> {
                     snaps.push(Arc::new(SimSnapshot { state: st.clone() }));
                 }
             }
-            let result = Self::assemble(ctx.finish(st));
+            crate::obs::count(crate::obs::Counter::SnapshotsTaken, snaps.len() as u64);
+            let result = self.assemble(ctx.finish(st));
             (result, ScheduleSegments { touch: rec.touch, snaps })
         })
     }
@@ -323,12 +329,13 @@ impl<'a> Scheduler<'a> {
         snap: &SimSnapshot,
     ) -> ScheduleResult {
         self.with_ctx(allocation, priority, false, |ctx| {
+            let _span = crate::obs::span_here("sim", "run_resumed");
             let mut rec = NoRecord;
             let mut st = snap.state.clone();
             while st.has_work() {
                 ctx.step(&mut st, &mut rec);
             }
-            Self::assemble(ctx.finish(st))
+            self.assemble(ctx.finish(st))
         })
     }
 
@@ -351,6 +358,9 @@ impl<'a> Scheduler<'a> {
         let snap = parent.resume_point(divergence)?;
         let s = snap.decisions();
         Some(self.with_ctx(allocation, priority, false, |ctx| {
+            let _span = crate::obs::span_here("sim", "run_resumed_traced");
+            crate::obs::count(crate::obs::Counter::DeltaResumes, 1);
+            crate::obs::hist(crate::obs::Hist::ResumeDepth, s as u64);
             let mut rec = TouchTracer::new(self.workload.len());
             let mut st = snap.state.clone();
             // Inherit the shared prefix: snapshots at or before the
@@ -363,13 +373,18 @@ impl<'a> Scheduler<'a> {
                 .filter(|p| p.decisions() <= s)
                 .cloned()
                 .collect();
+            let inherited = snaps.len();
             while st.has_work() {
                 ctx.step(&mut st, &mut rec);
                 if st.has_work() && st.decisions() % every == 0 && st.decisions() > s {
                     snaps.push(Arc::new(SimSnapshot { state: st.clone() }));
                 }
             }
-            let result = Self::assemble(ctx.finish(st));
+            crate::obs::count(
+                crate::obs::Counter::SnapshotsTaken,
+                (snaps.len() - inherited) as u64,
+            );
+            let result = self.assemble(ctx.finish(st));
             // The replayed suffix recorded insertions with visibility
             // > s; prefix insertions (visibility <= s) are identical to
             // the parent's, so merge them in.

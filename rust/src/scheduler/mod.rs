@@ -65,7 +65,7 @@ pub(crate) mod sim;
 
 pub use engine::{schedule, ScheduledCn, Scheduler};
 pub use memtrace::{MemEvent, MemTrace};
-pub use sim::{Arbitration, ScheduleSegments, SimSnapshot};
+pub use sim::{Arbitration, FallbackReason, ScheduleSegments, SimSnapshot};
 
 use crate::arch::{CoreId, LinkId};
 use crate::cost::ScheduleMetrics;
@@ -137,6 +137,10 @@ pub struct ScheduleResult {
     pub link_stats: Vec<LinkStat>,
     pub metrics: ScheduleMetrics,
     pub memtrace: MemTrace,
+    /// Flight-recorder summary, attached only when the recorder is
+    /// enabled ([`crate::obs::enabled`]); `None` otherwise, keeping the
+    /// untraced result bit-identical.
+    pub report: Option<Box<crate::obs::RunReport>>,
 }
 
 impl ScheduleResult {

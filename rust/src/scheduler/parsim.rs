@@ -54,7 +54,7 @@ use crate::scheduler::memtrace::{MemEvent, MemTrace};
 use crate::util::parallel_map_with;
 
 use super::resources::{LinkSet, WeightTracker};
-use super::sim::{NoRecord, SimContext, SimOutcome, SimState};
+use super::sim::{FallbackReason, NoRecord, SimContext, SimOutcome, SimState};
 use super::DramKind;
 
 /// One recorded scheduling decision of a chip's sub-simulation.
@@ -78,20 +78,27 @@ struct ChipRun {
     steps: Vec<StepRec>,
 }
 
-/// Attempt the chip-partitioned parallel simulation.  Returns `None`
-/// whenever exactness cannot be established — not chip-partitionable,
-/// fewer than two busy chips, activation headroom exceeded, or an
-/// arbitration-replay mismatch — and the caller runs the sequential
-/// loop instead.
-pub(crate) fn try_parallel(ctx: &SimContext, threads: usize) -> Option<SimOutcome> {
+/// Attempt the chip-partitioned parallel simulation.  Returns a typed
+/// [`FallbackReason`] whenever exactness cannot be established — not
+/// chip-partitionable, fewer than two busy chips, activation headroom
+/// exceeded, or an arbitration-replay mismatch — and the caller runs
+/// the sequential loop instead.
+pub(crate) fn try_parallel(
+    ctx: &SimContext,
+    threads: usize,
+) -> Result<SimOutcome, FallbackReason> {
     let topo = &ctx.arch.topology;
-    if threads < 2
-        || topo.n_chips() < 2
-        || ctx.requests.len() < 2
-        || ctx.linear_pool
-        || !ctx.tag_events
-    {
-        return None;
+    if threads < 2 {
+        return Err(FallbackReason::SequentialConfig);
+    }
+    if topo.n_chips() < 2 {
+        return Err(FallbackReason::SingleChip);
+    }
+    if ctx.requests.len() < 2 {
+        return Err(FallbackReason::SingleRequest);
+    }
+    if ctx.linear_pool || !ctx.tag_events {
+        return Err(FallbackReason::UntracedEvents);
     }
 
     // --- partition lanes by the chip of their allocation -------------
@@ -99,7 +106,8 @@ pub(crate) fn try_parallel(ctx: &SimContext, threads: usize) -> Option<SimOutcom
         ctx.tenants.iter().map(|t| chip_of_alloc(topo, t.alloc)).collect();
     let mut chip_of_lane = Vec::with_capacity(ctx.requests.len());
     for r in ctx.requests {
-        chip_of_lane.push(chip_of_tenant[r.tenant]?);
+        chip_of_lane
+            .push(chip_of_tenant[r.tenant].ok_or(FallbackReason::StraddlingAllocation)?);
     }
     // busy chips in first-appearance (lane) order; slot = run index
     let mut chip_slot: Vec<Option<usize>> = vec![None; topo.n_chips()];
@@ -111,7 +119,7 @@ pub(crate) fn try_parallel(ctx: &SimContext, threads: usize) -> Option<SimOutcom
         }
     }
     if busy.len() < 2 {
-        return None;
+        return Err(FallbackReason::FewActiveChips);
     }
     let run_of_lane: Vec<usize> =
         chip_of_lane.iter().map(|&c| chip_slot[c].expect("busy chip")).collect();
@@ -139,10 +147,11 @@ pub(crate) fn try_parallel(ctx: &SimContext, threads: usize) -> Option<SimOutcom
     }
     let peaks: f64 = runs.iter().map(|r| clamped_peak(&r.state.trace.events)).sum();
     if peaks + max_out as f64 > act_cap {
-        return None;
+        return Err(FallbackReason::HeadroomViolated);
     }
 
     // --- deterministic merge: replay the sequential arbitration ------
+    let _merge_span = crate::obs::span_here("parsim", "merge");
     let total: usize = runs.iter().map(|r| r.steps.len()).sum();
     let mut ptr = vec![0usize; runs.len()];
     let mut consumed = vec![(0usize, 0usize, 0usize); runs.len()];
@@ -198,7 +207,7 @@ pub(crate) fn try_parallel(ctx: &SimContext, threads: usize) -> Option<SimOutcom
                 }
             }
         }
-        let ri = best?.1;
+        let ri = best.ok_or(FallbackReason::MergeMismatch)?.1;
         let j = run_of_lane[ri];
         let run = &runs[j];
         let rec = &run.steps[ptr[j]];
@@ -206,7 +215,7 @@ pub(crate) fn try_parallel(ctx: &SimContext, threads: usize) -> Option<SimOutcom
             // a lane was globally eligible earlier than its chip knew
             // (cross-chip admission-clock advance): the local stream
             // diverges from the sequential one — abort to sequential
-            return None;
+            return Err(FallbackReason::MergeMismatch);
         }
 
         // consume this decision's event slices in sequential order,
@@ -274,14 +283,30 @@ pub(crate) fn try_parallel(ctx: &SimContext, threads: usize) -> Option<SimOutcom
     let lanes = (0..ctx.requests.len())
         .map(|ri| runs[run_of_lane[ri]].state.lanes[ri].clone())
         .collect();
-    let weights: Vec<WeightTracker> =
-        ctx.arch.cores.iter().map(|c| WeightTracker::new(c.wgt_mem_bytes)).collect();
+    // Each core belongs to exactly one chip and chip-pure lanes never
+    // touch foreign cores, so a core's sequential weight-tracker end
+    // state is exactly its owning chip's — adopt it (counters
+    // included); cores of idle chips keep a fresh tracker, as in the
+    // sequential run.  The global eviction *order* interleaves chips
+    // and is not reconstructed; the merged state is terminal, so only
+    // per-tracker contents and totals matter.
+    let weights: Vec<WeightTracker> = ctx
+        .arch
+        .cores
+        .iter()
+        .enumerate()
+        .map(|(c, core)| match chip_slot[topo.chip_of_core(CoreId(c))] {
+            Some(j) => runs[j].state.weights[c].clone(),
+            None => WeightTracker::new(core.wgt_mem_bytes),
+        })
+        .collect();
+    let evicted = runs.iter().flat_map(|r| r.state.evicted.iter().copied()).collect();
     let merged = SimState {
         core_avail,
         core_busy,
         links,
         weights,
-        evicted: Vec::new(),
+        evicted,
         lanes,
         trace: MemTrace { events },
         cns,
@@ -299,13 +324,14 @@ pub(crate) fn try_parallel(ctx: &SimContext, threads: usize) -> Option<SimOutcom
     };
     let mut out = ctx.finish(merged);
     out.partitions = runs.len();
-    Some(out)
+    Ok(out)
 }
 
 /// Drive one chip's sub-simulation with the unchanged sequential
 /// [`SimContext::step`], recording the arbitration front before and the
 /// pick + event watermarks after every decision.
 fn run_chip(ctx: &SimContext, owned: &[bool]) -> ChipRun {
+    let _span = crate::obs::span_here("parsim", "chip");
     let mut rec = NoRecord;
     let mut st = ctx.init_owned(&mut rec, Some(owned));
     let mut steps = Vec::new();

@@ -128,6 +128,7 @@ impl CandidatePool {
             self.by_core[core].push(i);
         }
         self.len += 1;
+        crate::obs::count(crate::obs::Counter::PoolPushes, 1);
     }
 
     /// Smallest *current* effective readiness among pooled candidates,
@@ -165,6 +166,7 @@ impl CandidatePool {
     fn take(&mut self, cn: usize) -> CnId {
         self.slots[cn].state = State::Done;
         self.len -= 1;
+        crate::obs::count(crate::obs::Counter::PoolPops, 1);
         CnId(cn)
     }
 

@@ -344,6 +344,7 @@ impl Scheduler<'_> {
             link_stats,
             metrics,
             memtrace: trace,
+            report: None,
         }
     }
 
@@ -619,6 +620,7 @@ impl Scheduler<'_> {
             link_stats,
             metrics,
             memtrace: trace,
+            report: None,
         }
     }
 

@@ -114,6 +114,54 @@ impl std::fmt::Display for Arbitration {
     }
 }
 
+/// Why [`SimContext::simulate`] ran its sequential loop instead of the
+/// chip-partitioned parallel core (`super::parsim`).  Returned in
+/// [`SimOutcome::fallback`] (`None` means the parallel core engaged),
+/// so callers and tests can assert on the *reason* instead of
+/// inferring it from partition counts.  The reason is a deterministic
+/// function of the context and the recorded per-chip data — never of
+/// thread timing — matching the parallel core's exactness contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FallbackReason {
+    /// The effective worker count was 1 (including every
+    /// single-threaded caller that never attempts the parallel core).
+    SequentialConfig,
+    /// The topology has a single chip — nothing to partition.
+    SingleChip,
+    /// Fewer than two request lanes.
+    SingleRequest,
+    /// The context cannot be replayed: linear-scan pool or event
+    /// tagging off (the merge needs per-decision lane tags).
+    UntracedEvents,
+    /// Some lane's allocation spans chips (or routes off-chip).
+    StraddlingAllocation,
+    /// All lanes landed on one chip.
+    FewActiveChips,
+    /// The activation-headroom certificate failed: the summed per-chip
+    /// occupancy peaks plus the largest CN output exceed the pooled
+    /// capacity, so the memory-full coupling cannot be proven inert.
+    HeadroomViolated,
+    /// Replaying the sequential arbitration over the recorded decision
+    /// streams diverged from a chip's local pick.
+    MergeMismatch,
+}
+
+impl std::fmt::Display for FallbackReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            FallbackReason::SequentialConfig => "sequential config",
+            FallbackReason::SingleChip => "single chip",
+            FallbackReason::SingleRequest => "single request",
+            FallbackReason::UntracedEvents => "untraced events",
+            FallbackReason::StraddlingAllocation => "straddling allocation",
+            FallbackReason::FewActiveChips => "fewer than two active chips",
+            FallbackReason::HeadroomViolated => "headroom certificate violated",
+            FallbackReason::MergeMismatch => "merge pick mismatch",
+        };
+        write!(f, "{s}")
+    }
+}
+
 /// One tenant lane of the unified core: a prebuilt [`Scheduler`] plus
 /// everything request-independent the core needs about that tenant.
 pub struct SimTenant<'a> {
@@ -202,6 +250,61 @@ pub struct SimOutcome {
     /// engaged.  Purely observational — outcomes are bit-identical
     /// either way.
     pub partitions: usize,
+    /// DRAM weight fetches performed (per-core trackers summed);
+    /// identical for the sequential and parallel paths.
+    pub weight_fetches: u64,
+    /// FIFO weight evictions performed; identical for the sequential
+    /// and parallel paths.
+    pub weight_evictions: u64,
+    /// Why the simulation ran sequentially; `None` when the
+    /// chip-partitioned parallel core engaged.
+    pub fallback: Option<FallbackReason>,
+}
+
+impl SimOutcome {
+    /// Build the flight-recorder [`RunReport`](crate::obs::RunReport)
+    /// for this outcome: engine totals, the busiest links (top 8, named
+    /// from the topology), and a snapshot of the global
+    /// counters/histograms at report time.
+    pub(crate) fn report(&self, arch: &Accelerator) -> crate::obs::RunReport {
+        let makespan = self.metrics.latency_cc;
+        let mut idx: Vec<usize> = (0..self.link_stats.len()).collect();
+        idx.sort_by_key(|&i| std::cmp::Reverse(self.link_stats[i].busy_cycles));
+        let links = idx
+            .into_iter()
+            .take(8)
+            .filter(|&i| self.link_stats[i].busy_cycles > 0)
+            .map(|i| crate::obs::LinkLoad {
+                name: arch.topology.links()[i].name.clone(),
+                busy_cc: self.link_stats[i].busy_cycles,
+                bytes: self.link_stats[i].bytes_moved,
+                util: if makespan > 0 {
+                    self.link_stats[i].busy_cycles as f64 / makespan as f64
+                } else {
+                    0.0
+                },
+            })
+            .collect();
+        let mut r = crate::obs::RunReport {
+            decisions: self.cns.len() as u64,
+            comm_transfers: self.comms.len() as u64,
+            dram_transfers: self.drams.len() as u64,
+            weight_fetches: self.weight_fetches,
+            weight_evictions: self.weight_evictions,
+            partitions: self.partitions,
+            // a one-shot / inline sequential loop leaves `fallback`
+            // unset; in a report, partitions == 1 always means the
+            // sequential loop ran
+            fallback: self
+                .fallback
+                .or((self.partitions <= 1).then_some(FallbackReason::SequentialConfig)),
+            makespan_cc: makespan,
+            links,
+            ..Default::default()
+        };
+        r.capture_globals();
+        r
+    }
 }
 
 /// Concatenate per-tenant DRAM weight-fetch tables into the global
@@ -388,27 +491,39 @@ impl SimContext<'_> {
     /// sub-simulation runs on its own worker thread, and the
     /// per-partition outcomes are merged by replaying the sequential
     /// arbitration over the recorded decision streams.  Whenever the
-    /// parallel core cannot prove the merge exact it returns `None` and
-    /// the sequential loop below runs instead, so the outcome is
-    /// **bit-identical** for every thread count (pinned by
-    /// `rust/tests/parallel_sim_equivalence.rs`).
+    /// parallel core cannot prove the merge exact it reports a typed
+    /// [`FallbackReason`] and the sequential loop below runs instead,
+    /// so the outcome is **bit-identical** for every thread count
+    /// (pinned by `rust/tests/parallel_sim_equivalence.rs`).
     pub fn simulate(&self) -> SimOutcome {
         let threads = if self.sim_threads > 0 {
             self.sim_threads
         } else {
             crate::util::sim_thread_count()
         };
-        if threads > 1 {
-            if let Some(out) = super::parsim::try_parallel(self, threads) {
-                return out;
+        let fallback = if threads > 1 {
+            match super::parsim::try_parallel(self, threads) {
+                Ok(out) => {
+                    crate::obs::count(crate::obs::Counter::ParsimEngaged, 1);
+                    return out;
+                }
+                Err(reason) => {
+                    crate::obs::count(crate::obs::Counter::ParsimFallbacks, 1);
+                    reason
+                }
             }
-        }
+        } else {
+            FallbackReason::SequentialConfig
+        };
+        let _span = crate::obs::span_here("sim", "simulate");
         let mut rec = NoRecord;
         let mut st = self.init(&mut rec);
         while st.has_work() {
             self.step(&mut st, &mut rec);
         }
-        self.finish(st)
+        let mut out = self.finish(st);
+        out.fallback = Some(fallback);
+        out
     }
 
     /// Build the initial [`SimState`]: fresh resource clocks and every
@@ -857,6 +972,8 @@ impl SimContext<'_> {
             drams,
             dram_req,
             mut breakdown,
+            weights,
+            decisions,
             ..
         } = st;
 
@@ -916,11 +1033,35 @@ impl SimContext<'_> {
             avg_core_util,
         };
 
-        let link_stats = links
+        let link_stats: Vec<LinkStat> = links
             .stats()
             .into_iter()
             .map(|(busy_cycles, bytes_moved)| LinkStat { busy_cycles, bytes_moved })
             .collect();
+
+        let weight_fetches: u64 = weights.iter().map(|w| w.fetches).sum();
+        let weight_evictions: u64 = weights.iter().map(|w| w.evictions).sum();
+
+        // Flight-recorder aggregation: one block per *run*, never per
+        // step, so the engine hot loop carries no instrumentation.
+        if crate::obs::enabled() {
+            use crate::obs::Counter as C;
+            crate::obs::count(C::SimRuns, 1);
+            crate::obs::count(C::SimDecisions, decisions as u64);
+            if lanes.len() > 1 {
+                crate::obs::count(C::ArbitrationPicks, decisions as u64);
+            }
+            crate::obs::count(C::CommTransfers, comms.len() as u64);
+            crate::obs::count(C::DramTransfers, drams.len() as u64);
+            crate::obs::count(C::WeightFetches, weight_fetches);
+            crate::obs::count(C::WeightEvictions, weight_evictions);
+            if latency > 0 {
+                for s in &link_stats {
+                    let pct = s.busy_cycles.saturating_mul(100) / latency;
+                    crate::obs::hist(crate::obs::Hist::LinkBusyPct, pct);
+                }
+            }
+        }
 
         SimOutcome {
             cns,
@@ -935,6 +1076,9 @@ impl SimContext<'_> {
             core_busy,
             request_end: lanes.iter().map(|l| l.last_end).collect(),
             partitions: 1,
+            weight_fetches,
+            weight_evictions,
+            fallback: None,
         }
     }
 }

@@ -4,6 +4,14 @@
 //! [`scenario_gantt`] renders multi-DNN co-schedules: one glyph per
 //! request, a legend mapping glyphs to tenants/releases/deadlines, and
 //! a deadline lane marking met (`|`) and missed (`!`) deadlines.
+//!
+//! The third visual artifact — Chrome/Perfetto `trace_event` JSON of a
+//! run (`STREAM_TRACE=trace.json`, open in <https://ui.perfetto.dev>) —
+//! lives in [`obs::chrome`](crate::obs::chrome) next to the recorder
+//! that feeds it, and is re-exported here so all schedule visualizers
+//! share one front door.
+
+pub use crate::obs::chrome::{schedule_trace, scenario_trace, validate_trace, TraceSummary};
 
 use std::fmt::Write as _;
 

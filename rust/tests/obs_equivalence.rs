@@ -1,0 +1,389 @@
+//! Observability net for the flight recorder (`src/obs/`):
+//!
+//! 1. **Bit-identity** — with the recorder *enabled* every engine
+//!    output must be bit-identical to the untraced run: metrics (float
+//!    bits), CN placements, comm/DRAM events, link counters, memory
+//!    trace.  Tracing is read-only by construction (counters and spans
+//!    only, never a decision input); these tests pin that.
+//! 2. **Golden schema** — a Chrome trace written from a schedule or
+//!    scenario run must parse, carry well-formed events, and keep the
+//!    spans of every `(pid, tid)` lane disjoint-or-nested
+//!    ([`validate_trace`](stream::obs::chrome::validate_trace)).
+//! 3. **Non-vacuity** — a GA run under the recorder must actually tick
+//!    the cache/delta/pool/snapshot counters, and a run's
+//!    [`RunReport`](stream::obs::RunReport) must carry engine totals,
+//!    so the counters can never silently rot into no-ops.
+//!
+//! The recorder is process-global, so every test here serializes on
+//! one mutex and leaves the recorder *disabled* on exit.
+
+use std::sync::Mutex;
+
+use stream::allocator::{allocation_from_genome, Ga, GaParams, Objective};
+use stream::arch::{presets, Accelerator};
+use stream::cn::{CnGranularity, CnSet};
+use stream::cost::{DeltaCache, ScheduleCache};
+use stream::depgraph::generate;
+use stream::mapping::CostModel;
+use stream::obs::{self, chrome, Counter};
+use stream::scenario::{
+    Arbitration, Arrival, FallbackReason, Scenario, ScenarioResult, ScenarioSim, Tenant,
+};
+use stream::scheduler::{SchedulePriority, ScheduleResult, Scheduler};
+use stream::util::XorShift64;
+use stream::workload::{models, WorkloadGraph};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with the recorder in state `on`, restoring *disabled* after.
+fn with_recorder<T>(on: bool, f: impl FnOnce() -> T) -> T {
+    obs::set_enabled(on);
+    obs::reset();
+    let out = f();
+    obs::flush();
+    obs::set_enabled(false);
+    out
+}
+
+fn assert_schedules_identical(what: &str, a: &ScheduleResult, b: &ScheduleResult) {
+    assert_eq!(a.metrics.latency_cc, b.metrics.latency_cc, "{what}: latency");
+    assert_eq!(a.metrics.energy_pj.to_bits(), b.metrics.energy_pj.to_bits(), "{what}: energy");
+    assert_eq!(
+        a.metrics.peak_mem_bytes.to_bits(),
+        b.metrics.peak_mem_bytes.to_bits(),
+        "{what}: peak mem"
+    );
+    assert_eq!(
+        a.metrics.avg_core_util.to_bits(),
+        b.metrics.avg_core_util.to_bits(),
+        "{what}: util"
+    );
+    assert_eq!(a.cns.len(), b.cns.len(), "{what}: CN count");
+    for (i, (x, y)) in a.cns.iter().zip(&b.cns).enumerate() {
+        assert_eq!(
+            (x.cn, x.core, x.start, x.end),
+            (y.cn, y.core, y.start, y.end),
+            "{what}: cn[{i}]"
+        );
+    }
+    assert_eq!(a.comms.len(), b.comms.len(), "{what}: comm count");
+    for (i, (x, y)) in a.comms.iter().zip(&b.comms).enumerate() {
+        assert_eq!(
+            (x.from_core, x.to_core, x.start, x.end, x.bytes),
+            (y.from_core, y.to_core, y.start, y.end, y.bytes),
+            "{what}: comm[{i}]"
+        );
+    }
+    assert_eq!(a.drams.len(), b.drams.len(), "{what}: dram count");
+    for (i, (x, y)) in a.drams.iter().zip(&b.drams).enumerate() {
+        assert_eq!(
+            (x.core, x.start, x.end, x.bytes, x.kind),
+            (y.core, y.start, y.end, y.bytes, y.kind),
+            "{what}: dram[{i}]"
+        );
+    }
+    assert_eq!(a.link_stats, b.link_stats, "{what}: link stats");
+    assert_eq!(a.memtrace.events.len(), b.memtrace.events.len(), "{what}: memtrace len");
+    for (i, (x, y)) in a.memtrace.events.iter().zip(&b.memtrace.events).enumerate() {
+        assert_eq!(
+            (x.time, x.core, x.delta.to_bits()),
+            (y.time, y.core, y.delta.to_bits()),
+            "{what}: memtrace[{i}]"
+        );
+    }
+}
+
+fn assert_scenarios_identical(what: &str, a: &ScenarioResult, b: &ScenarioResult) {
+    assert_eq!(a.metrics.latency_cc, b.metrics.latency_cc, "{what}: latency");
+    assert_eq!(a.metrics.energy_pj.to_bits(), b.metrics.energy_pj.to_bits(), "{what}: energy");
+    assert_eq!(
+        a.metrics.peak_mem_bytes.to_bits(),
+        b.metrics.peak_mem_bytes.to_bits(),
+        "{what}: peak mem"
+    );
+    assert_eq!(a.cns.len(), b.cns.len(), "{what}: CN count");
+    for (i, (x, y)) in a.cns.iter().zip(&b.cns).enumerate() {
+        assert_eq!(
+            (x.request, x.placed.cn, x.placed.core, x.placed.start, x.placed.end),
+            (y.request, y.placed.cn, y.placed.core, y.placed.start, y.placed.end),
+            "{what}: cn[{i}]"
+        );
+    }
+    assert_eq!(a.comm_req, b.comm_req, "{what}: comm tags");
+    assert_eq!(a.dram_req, b.dram_req, "{what}: dram tags");
+    assert_eq!(a.link_stats, b.link_stats, "{what}: link stats");
+    assert_eq!(a.core_busy, b.core_busy, "{what}: core busy");
+    assert_eq!(a.memtrace.events.len(), b.memtrace.events.len(), "{what}: memtrace len");
+    for (i, (x, y)) in a.memtrace.events.iter().zip(&b.memtrace.events).enumerate() {
+        assert_eq!(x.delta.to_bits(), y.delta.to_bits(), "{what}: memtrace[{i}] delta");
+    }
+    assert_eq!(a.partitions, b.partitions, "{what}: partitions");
+    assert_eq!(a.fallback, b.fallback, "{what}: fallback reason");
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{what}: outcome count");
+    for (i, (x, y)) in a.outcomes.iter().zip(&b.outcomes).enumerate() {
+        assert_eq!(
+            (x.completion_cc, x.latency_cc, x.missed),
+            (y.completion_cc, y.latency_cc, y.missed),
+            "{what}: outcome[{i}]"
+        );
+    }
+}
+
+fn build_parts(
+    workload: &WorkloadGraph,
+    arch: &Accelerator,
+) -> (stream::depgraph::CnGraph, CostModel) {
+    let gran = CnGranularity::Lines(4).for_arch(arch);
+    let cns = CnSet::build(workload, gran);
+    let costs = CostModel::build(workload, &cns, arch);
+    let graph = generate(workload, CnSet::build(workload, gran));
+    (graph, costs)
+}
+
+/// One chip-pure tenant per chip of `chiplet_4x4`, two simultaneous
+/// requests each — the shape where the parallel sim core engages.
+fn chiplet_burst() -> (Scenario, Accelerator, Vec<Vec<u16>>) {
+    let arch = presets::chiplet_4x4();
+    let tenants: Vec<Tenant> = (0..4)
+        .map(|chip| {
+            Tenant::new(
+                &format!("t{chip}"),
+                if chip % 2 == 0 { "tiny-segment" } else { "tiny-branchy" },
+                Arrival::Burst { times_cc: vec![0, 0] },
+            )
+        })
+        .collect();
+    let scenario = Scenario::new("obs-burst", tenants);
+    let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+    let mut rng = XorShift64::new(0x0B5);
+    let genomes: Vec<Vec<u16>> = sim
+        .builds()
+        .iter()
+        .enumerate()
+        .map(|(chip, b)| {
+            (0..b.workload.dense_layers().len())
+                .map(|_| (chip * 4) as u16 + rng.below(4) as u16)
+                .collect()
+        })
+        .collect();
+    (scenario, arch, genomes)
+}
+
+#[test]
+fn traced_schedule_runs_are_bit_identical() {
+    let _g = LOCK.lock().unwrap();
+    for arch in [presets::hetero_quad(), presets::chiplet_4x4()] {
+        let workload = models::by_name("tiny-segment").unwrap();
+        let (graph, costs) = build_parts(&workload, &arch);
+        let scheduler = Scheduler::new(&workload, &graph, &costs, &arch);
+        let alloc = allocation_from_genome(&workload, &arch, &[0, 1, 2]);
+        for priority in [SchedulePriority::Latency, SchedulePriority::Memory] {
+            let cold = with_recorder(false, || scheduler.run(&alloc, priority));
+            assert!(cold.report.is_none(), "untraced run must not attach a report");
+            let hot = with_recorder(true, || scheduler.run(&alloc, priority));
+            let rep = hot.report.as_ref().expect("traced run attaches a report");
+            assert_schedules_identical(
+                &format!("{} {priority:?}", arch.name),
+                &cold,
+                &hot,
+            );
+            // the report mirrors the engine totals exactly
+            assert_eq!(rep.decisions, hot.cns.len() as u64);
+            assert_eq!(rep.comm_transfers, hot.comms.len() as u64);
+            assert_eq!(rep.dram_transfers, hot.drams.len() as u64);
+            assert_eq!(rep.makespan_cc, hot.metrics.latency_cc);
+            assert_eq!(rep.partitions, 1, "one-shot runs are single-lane");
+            assert_eq!(rep.fallback, Some(FallbackReason::SequentialConfig));
+            assert!(rep.weight_fetches > 0, "weighted layers must fetch at least once");
+        }
+    }
+}
+
+#[test]
+fn traced_scenario_runs_are_bit_identical_across_threads() {
+    let _g = LOCK.lock().unwrap();
+    let (scenario, arch, genomes) = chiplet_burst();
+    let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+    let allocs: Vec<Vec<stream::arch::CoreId>> = sim
+        .builds()
+        .iter()
+        .zip(&genomes)
+        .map(|(b, g)| allocation_from_genome(&b.workload, &arch, g))
+        .collect();
+    let runner = sim.runner();
+
+    let mut reports = Vec::new();
+    for arb in [Arbitration::Fifo, Arbitration::Priority, Arbitration::Edf] {
+        for threads in [1usize, 4] {
+            let cold = with_recorder(false, || runner.run_with_threads(&allocs, arb, threads));
+            assert!(cold.report.is_none(), "untraced scenario must not attach a report");
+            let hot = with_recorder(true, || runner.run_with_threads(&allocs, arb, threads));
+            let rep = hot.report.clone().expect("traced scenario attaches a report");
+            assert_scenarios_identical(&format!("{arb} x{threads}"), &cold, &hot);
+            if threads > 1 {
+                assert_eq!(hot.partitions, 4, "{arb}: chip-pure burst must partition");
+                assert_eq!(hot.fallback, None);
+            } else {
+                assert_eq!(hot.fallback, Some(FallbackReason::SequentialConfig));
+            }
+            reports.push((format!("{arb}"), threads, rep));
+        }
+    }
+    // the engine totals in the report are thread-count-invariant —
+    // this pins the parallel core's weight-tracker adoption (fetch and
+    // eviction totals come from the merged per-core trackers)
+    for pair in reports.chunks(2) {
+        let (arb, seq, par) = (&pair[0].0, &pair[0].2, &pair[1].2);
+        assert_eq!(seq.decisions, par.decisions, "{arb}: decisions");
+        assert_eq!(seq.comm_transfers, par.comm_transfers, "{arb}: comm transfers");
+        assert_eq!(seq.dram_transfers, par.dram_transfers, "{arb}: dram transfers");
+        assert_eq!(seq.weight_fetches, par.weight_fetches, "{arb}: weight fetches");
+        assert_eq!(seq.weight_evictions, par.weight_evictions, "{arb}: weight evictions");
+        assert_eq!(seq.makespan_cc, par.makespan_cc, "{arb}: makespan");
+    }
+}
+
+#[test]
+fn chrome_schedule_trace_matches_golden_schema() {
+    let _g = LOCK.lock().unwrap();
+    let arch = presets::hetero_quad();
+    let workload = models::by_name("tiny-segment").unwrap();
+    let (graph, costs) = build_parts(&workload, &arch);
+    let scheduler = Scheduler::new(&workload, &graph, &costs, &arch);
+    let alloc = allocation_from_genome(&workload, &arch, &[0, 1, 2]);
+    let (res, events) = with_recorder(true, || {
+        let res = scheduler.run(&alloc, SchedulePriority::Latency);
+        (res, obs::take_events())
+    });
+    assert!(!events.is_empty(), "an enabled run must record at least one span");
+    let text = chrome::schedule_trace(&res, &arch, &events);
+    let summary = chrome::validate_trace(&text).expect("schedule trace validates");
+    assert!(summary.spans >= res.cns.len(), "every CN becomes a span");
+    assert!(summary.lanes > 1, "CNs on several cores → several lanes");
+}
+
+#[test]
+fn chrome_scenario_trace_matches_golden_schema() {
+    let _g = LOCK.lock().unwrap();
+    let (scenario, arch, genomes) = chiplet_burst();
+    let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+    let allocs: Vec<Vec<stream::arch::CoreId>> = sim
+        .builds()
+        .iter()
+        .zip(&genomes)
+        .map(|(b, g)| allocation_from_genome(&b.workload, &arch, g))
+        .collect();
+    let runner = sim.runner();
+    let (res, events) = with_recorder(true, || {
+        let res = runner.run_with_threads(&allocs, Arbitration::Edf, 4);
+        (res, obs::take_events())
+    });
+    assert_eq!(res.partitions, 4, "trace must cover an engaged parallel run");
+    // the parsim chip workers and the merge all record runtime spans
+    assert!(
+        events.iter().filter(|e| e.cat == "parsim").count() >= 5,
+        "4 chip spans + 1 merge span expected, got {:?}",
+        events.iter().map(|e| (e.cat, e.name.clone())).collect::<Vec<_>>()
+    );
+    let text = chrome::scenario_trace(&res, &arch, &events);
+    let summary = chrome::validate_trace(&text).expect("scenario trace validates");
+    assert!(summary.spans >= res.cns.len(), "every scenario CN becomes a span");
+    assert!(summary.lanes > 4, "cores across 4 chips plus runtime lanes");
+}
+
+#[test]
+fn ga_run_ticks_the_counters_non_vacuously() {
+    let _g = LOCK.lock().unwrap();
+    let workload = models::by_name("tiny-segment").unwrap();
+    let arch = presets::hetero_quad();
+    let (graph, costs) = build_parts(&workload, &arch);
+    let scheduler = Scheduler::new(&workload, &graph, &costs, &arch);
+    with_recorder(true, || {
+        let mut ga = Ga::new(
+            &workload,
+            &arch,
+            &scheduler,
+            SchedulePriority::Latency,
+            Objective::LatencyEnergy,
+            GaParams {
+                population: 8,
+                generations: 4,
+                threads: 1,
+                incremental: true,
+                ..GaParams::default()
+            },
+        );
+        let front = ga.run();
+        assert!(!front.is_empty());
+        for c in [
+            Counter::SimRuns,
+            Counter::SimDecisions,
+            Counter::PoolPushes,
+            Counter::PoolPops,
+            Counter::GaGenerations,
+            Counter::GaEvals,
+            Counter::SchedCacheMisses,
+            Counter::DeltaColdRuns,
+            Counter::SnapshotsTaken,
+            Counter::WeightFetches,
+        ] {
+            assert!(obs::counter(c) > 0, "counter {} must tick during a GA run", c.name());
+        }
+        let snap = obs::snapshot_counters();
+        assert!(snap.iter().any(|&(k, _)| k == "ga.evals"), "snapshot carries dotted names");
+    });
+}
+
+#[test]
+fn cache_counters_mirror_the_memo_stats() {
+    let _g = LOCK.lock().unwrap();
+    let workload = models::by_name("tiny-segment").unwrap();
+    let arch = presets::hetero_quad();
+    let (graph, costs) = build_parts(&workload, &arch);
+    let scheduler = Scheduler::new(&workload, &graph, &costs, &arch);
+    let alloc = allocation_from_genome(&workload, &arch, &[0, 1, 2]);
+    let fp = arch.topology.fingerprint();
+    with_recorder(true, || {
+        let cache = ScheduleCache::new();
+        assert!(cache.get(&alloc, SchedulePriority::Latency, fp).is_none());
+        let res = scheduler.run(&alloc, SchedulePriority::Latency);
+        cache.insert(&alloc, SchedulePriority::Latency, fp, res.metrics);
+        assert!(cache.get(&alloc, SchedulePriority::Latency, fp).is_some());
+        assert_eq!(obs::counter(Counter::SchedCacheHits), 1);
+        assert_eq!(obs::counter(Counter::SchedCacheMisses), 1);
+
+        let dc = DeltaCache::new(4);
+        assert!(dc.get(&alloc, SchedulePriority::Latency, fp).is_none());
+        let (traced, segs) =
+            scheduler.run_traced(&alloc, SchedulePriority::Latency, scheduler.snap_interval());
+        dc.insert(&alloc, SchedulePriority::Latency, fp, traced.metrics, segs);
+        assert!(dc.get(&alloc, SchedulePriority::Latency, fp).is_some());
+        assert_eq!(obs::counter(Counter::DeltaCacheHits), 1);
+        assert_eq!(obs::counter(Counter::DeltaCacheMisses), 1);
+
+        // the report snapshot was taken right after the cold miss and
+        // before any hit, so its hit-rate helper must read 0/1
+        let rep = res.report.expect("traced run attaches a report");
+        assert_eq!(rep.hit_rate("cache.sched.hits", "cache.sched.misses"), Some(0.0));
+        assert_eq!(rep.hit_rate("no.such", "counters.either"), None, "absent counters stay None");
+    });
+}
+
+#[test]
+fn disabled_recorder_attaches_nothing_anywhere() {
+    let _g = LOCK.lock().unwrap();
+    let (scenario, arch, genomes) = chiplet_burst();
+    let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+    let allocs: Vec<Vec<stream::arch::CoreId>> = sim
+        .builds()
+        .iter()
+        .zip(&genomes)
+        .map(|(b, g)| allocation_from_genome(&b.workload, &arch, g))
+        .collect();
+    with_recorder(false, || {
+        let r = sim.runner().run_with_threads(&allocs, Arbitration::Fifo, 4);
+        assert!(r.report.is_none());
+        assert!(obs::take_events().is_empty(), "no spans recorded while disabled");
+        assert_eq!(obs::counter(Counter::SimRuns), 0, "no counters ticked while disabled");
+    });
+}

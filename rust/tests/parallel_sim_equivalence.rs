@@ -13,7 +13,9 @@
 //!    must actually partition ([`ScenarioResult::partitions`] > 1),
 //!    otherwise the `ablation_chiplet` speedup claim is vacuous.
 //! 3. **Guards** — mixed-chip allocations and single-request scenarios
-//!    must fall back to the sequential loop (`partitions == 1`).
+//!    must fall back to the sequential loop (`partitions == 1`), and
+//!    must report the *typed* [`FallbackReason`] for it — the reason,
+//!    not just the partition count, is part of the contract.
 //! 4. **Fuzz** — randomized tenant mixes x chiplet packages x thread
 //!    counts, chip-pure and chip-mixed, staggered and simultaneous
 //!    releases, all three arbitration policies.
@@ -34,7 +36,9 @@ use stream::cn::{CnGranularity, CnSet};
 use stream::cost::{memo, ScheduleCache};
 use stream::depgraph::generate;
 use stream::mapping::CostModel;
-use stream::scenario::{Arbitration, Arrival, Scenario, ScenarioResult, ScenarioSim, Tenant};
+use stream::scenario::{
+    Arbitration, Arrival, FallbackReason, Scenario, ScenarioResult, ScenarioSim, Tenant,
+};
 use stream::scheduler::{SchedulePriority, Scheduler};
 use stream::util::XorShift64;
 
@@ -169,12 +173,18 @@ fn burst_coschedule_bit_identical_across_thread_counts() {
 
     let seq = runner.run_with_threads(&allocs, Arbitration::Fifo, 1);
     assert_eq!(seq.partitions, 1, "sequential run must not partition");
+    assert_eq!(
+        seq.fallback,
+        Some(FallbackReason::SequentialConfig),
+        "one worker is a sequential config by definition"
+    );
     for threads in [2, 4, 8] {
         let par = runner.run_with_threads(&allocs, Arbitration::Fifo, threads);
         assert_identical(&format!("chiplet_4x4 x{threads}"), &seq, &par);
         // 4 chip-pure tenants on 4 distinct chips: the partition count
         // is the busy-chip count, independent of the worker count
         assert_eq!(par.partitions, 4, "x{threads}: parallel core must engage");
+        assert_eq!(par.fallback, None, "x{threads}: engagement reports no fallback");
     }
 }
 
@@ -192,6 +202,7 @@ fn tenants_sharing_a_chip_still_partition() {
     let par = runner.run_with_threads(&allocs, Arbitration::Fifo, 4);
     assert_identical("chiplet_8x8 shared chips", &seq, &par);
     assert_eq!(par.partitions, 2, "two busy chips -> two partitions");
+    assert_eq!(par.fallback, None, "shared-chip engagement reports no fallback");
 }
 
 #[test]
@@ -226,6 +237,7 @@ fn all_arbitration_policies_agree_with_sequential() {
         let par = runner.run_with_threads(&allocs, arb, 4);
         assert_identical(&format!("{arb}"), &seq, &par);
         assert_eq!(par.partitions, 4, "{arb}: release-0 chip-pure must engage");
+        assert_eq!(par.fallback, None, "{arb}: engagement reports no fallback");
     }
 }
 
@@ -276,6 +288,11 @@ fn mixed_chip_allocation_falls_back() {
     let par = runner.run_with_threads(&allocs, Arbitration::Fifo, 4);
     assert_identical("mixed-chip", &seq, &par);
     assert_eq!(par.partitions, 1, "a chip-straddling tenant must force the sequential loop");
+    assert_eq!(
+        par.fallback,
+        Some(FallbackReason::StraddlingAllocation),
+        "the fallback must name the straddling allocation, not just count 1 partition"
+    );
 }
 
 #[test]
@@ -290,6 +307,11 @@ fn single_request_scenarios_stay_sequential() {
     let runner = sim.runner();
     let par = runner.run_with_threads(&allocs, Arbitration::Fifo, 8);
     assert_eq!(par.partitions, 1, "one lane has nothing to partition");
+    assert_eq!(
+        par.fallback,
+        Some(FallbackReason::SingleRequest),
+        "the fallback must name the single request"
+    );
     let seq = runner.run_with_threads(&allocs, Arbitration::Fifo, 1);
     assert_identical("solo", &seq, &par);
 }
@@ -365,6 +387,7 @@ fn chiplet_16x16_smoke_bit_identity() {
     let par = runner.run_with_threads(&allocs, Arbitration::Fifo, 8);
     assert_identical("chiplet_16x16", &seq, &par);
     assert_eq!(par.partitions, 5, "five busy chips -> five partitions");
+    assert_eq!(par.fallback, None, "16-chip engagement reports no fallback");
 }
 
 /// `STREAM_SIM_THREADS` must leave a GA run untouched: the GA's
