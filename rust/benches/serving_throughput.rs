@@ -1,0 +1,128 @@
+//! Serving throughput: the bounded-memory streaming engine on long
+//! request traces (`ScenarioRunner::run_streamed`).
+//!
+//! Two measurements on `llm_serving` / `chiplet_8x8`:
+//!
+//! 1. **Saturation sweep** — arbitration x rate-scale over a
+//!    fixed-duration trace: wall-clock requests/sec simulated, steady
+//!    p99 and miss rate as the offered load pushes the fabric toward
+//!    saturation (the rate-scale axis of the CLI `--rate-scale` flag).
+//! 2. **Headline long trace** — `llm_serving` extended to >= 100k
+//!    requests (1M under `STREAM_BENCH_SCALE=paper`), streamed in
+//!    untraced bounded mode.  The interesting numbers are simulated
+//!    requests/sec and the peak-live-vs-total ratio: live state is
+//!    O(admission window + in-flight), never O(trace length), which is
+//!    what makes million-request traces tractable at all.
+//!
+//! Results land in `BENCH_serving.json`.
+//!
+//! ```bash
+//! cargo bench --bench serving_throughput
+//! STREAM_BENCH_SCALE=paper cargo bench --bench serving_throughput   # 1M-request headline
+//! ```
+
+use std::time::Instant;
+
+use stream::arch::presets;
+use stream::scenario::{llm_serving, Arbitration, ScenarioResult, ScenarioSim, StreamingOpts};
+use stream::util::bench::paper_scale;
+use stream::util::Json;
+
+/// One streamed bounded-mode run; returns the result and wall seconds.
+fn run_streamed(
+    sim: &ScenarioSim<'_>,
+    arb: Arbitration,
+    duration_cc: u64,
+) -> (ScenarioResult, f64) {
+    let allocs = sim.greedy_allocations();
+    let opts = StreamingOpts {
+        window: 64,
+        retain_events: false,
+        window_cc: (duration_cc / 64).max(1),
+        max_windows: 64,
+        warmup_cc: duration_cc / 10,
+    };
+    let t0 = Instant::now();
+    let r = sim.runner().run_streamed(&allocs, arb, &opts);
+    (r, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    println!("=== serving throughput: streamed llm_serving on chiplet_8x8 ===\n");
+    let arch = presets::chiplet_8x8();
+    let mut j = std::collections::BTreeMap::new();
+    j.insert("status".to_string(), Json::Str("measured".to_string()));
+
+    // --- saturation sweep: arbitration x offered load ---------------
+    const SWEEP_DUR: u64 = 6_000_000_000;
+    println!("--- sweep: {SWEEP_DUR} cc trace, rate scales x1 / x2 / x4 ---");
+    for arb in [Arbitration::Fifo, Arbitration::Priority, Arbitration::Edf] {
+        for scale in [1.0f64, 2.0, 4.0] {
+            let scenario = llm_serving().scale_rate(scale).extend_to(SWEEP_DUR);
+            let n = scenario.n_requests();
+            let sim = ScenarioSim::new(&scenario, &arch).expect("scenario builds");
+            let (r, wall_s) = run_streamed(&sim, arb, SWEEP_DUR);
+            let s = r.streaming.as_ref().expect("streamed run attaches stats");
+            assert_eq!(s.retired, n as u64, "{arb} x{scale}: every request retires");
+            let wall_rps = n as f64 / wall_s.max(1e-9);
+            let p99 = s.steady_p99_cc();
+            let misses: u64 = s.steady_misses.iter().sum();
+            let miss_rate = misses as f64 / s.steady.count().max(1) as f64;
+            println!(
+                "{arb:<8} x{scale:<3} {n:>7} req | {wall_rps:>9.0} req/s wall | p99 {p99:>9} cc \
+                 | miss {:>5.1}% | live peak {}",
+                miss_rate * 100.0,
+                s.live_peak
+            );
+            let key = format!("{arb}_x{scale}");
+            j.insert(format!("{key}_requests"), Json::Num(n as f64));
+            j.insert(format!("{key}_wall_rps"), Json::Num(wall_rps));
+            j.insert(format!("{key}_p99_cc"), Json::Num(p99 as f64));
+            j.insert(format!("{key}_miss_rate"), Json::Num(miss_rate));
+            j.insert(format!("{key}_live_peak"), Json::Num(s.live_peak as f64));
+        }
+    }
+
+    // --- headline: the long trace ------------------------------------
+    let headline_dur: u64 = if paper_scale() { 1_500_000_000_000 } else { 150_000_000_000 };
+    let scenario = llm_serving().extend_to(headline_dur);
+    let n = scenario.n_requests();
+    println!("\n--- headline: {headline_dur} cc trace, {n} requests, EDF ---");
+    assert!(n >= 100_000, "headline trace must hold >= 100k requests, got {n}");
+    let sim = ScenarioSim::new(&scenario, &arch).expect("scenario builds");
+    let (r, wall_s) = run_streamed(&sim, Arbitration::Edf, headline_dur);
+    let s = r.streaming.as_ref().unwrap();
+    assert_eq!(s.admitted, n as u64);
+    assert_eq!(s.retired, n as u64);
+    let live_ratio = s.live_peak as f64 / n as f64;
+    // the bounded-memory claim, asserted: live state never approaches
+    // trace length (window 64 + in-flight vs >= 100k requests)
+    assert!(
+        s.live_peak <= 64 + s.inflight_peak,
+        "live peak {} must stay within window + in-flight {}",
+        s.live_peak,
+        s.inflight_peak
+    );
+    let wall_rps = n as f64 / wall_s.max(1e-9);
+    println!(
+        "{n} requests in {:.2}s wall = {wall_rps:.0} req/s simulated | live peak {} \
+         ({:.4}% of trace) | steady p99 {} cc",
+        wall_s,
+        s.live_peak,
+        live_ratio * 100.0,
+        s.steady_p99_cc()
+    );
+    j.insert("headline_requests".to_string(), Json::Num(n as f64));
+    j.insert("headline_wall_s".to_string(), Json::Num(wall_s));
+    j.insert("headline_wall_rps".to_string(), Json::Num(wall_rps));
+    j.insert("headline_live_peak".to_string(), Json::Num(s.live_peak as f64));
+    j.insert("headline_inflight_peak".to_string(), Json::Num(s.inflight_peak as f64));
+    j.insert("headline_live_ratio".to_string(), Json::Num(live_ratio));
+    j.insert("headline_p99_cc".to_string(), Json::Num(s.steady_p99_cc() as f64));
+
+    let out = Json::Obj(j).to_string_compact() + "\n";
+    match std::fs::write("BENCH_serving.json", &out) {
+        Ok(()) => println!("\nwrote BENCH_serving.json"),
+        Err(e) => println!("\ncould not write BENCH_serving.json: {e}"),
+    }
+}

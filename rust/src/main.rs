@@ -34,6 +34,7 @@ USAGE:
                   [--generations N] [--gantt] [--json <path>] [--report]
   stream scenario -a <arch[@topology]> -s <scenario> [--arbitration fifo|priority|edf]
                   [--optimize] [--population N] [--generations N] [--gantt] [--report]
+                  [--duration CC] [--rate-scale F] [--seed N] [--windows N]
   stream explore  [-w w1,w2,...] [-a a1,a2,...] [--population N] [--generations N]
   stream validate
   stream allocation [--population N] [--generations N]
@@ -46,6 +47,14 @@ selecting its interconnect, e.g. hetero@mesh or hom-tpu@ring.
 `stream list` for canned scenarios); --optimize runs the scenario-level
 NSGA-II search over the (tenant, layer) -> core partitioning instead of
 the default per-tenant GA.
+
+Long traces: --duration CC extends every tenant's arrival pattern to
+cover CC cycles and switches to the bounded-memory streaming engine
+(requests are admitted lazily and retired as they complete; latency
+percentiles and miss rates come from --windows N completion-time
+windows, with the first 10% of the trace as warm-up).  --rate-scale F
+compresses (>1) or stretches (<1) every inter-arrival gap; --seed N
+seeds the per-tenant burst jitter.
 
 Observability: STREAM_TRACE=1 enables the in-process flight recorder
 (counters + spans); STREAM_TRACE=<path.json> additionally writes a
@@ -78,6 +87,20 @@ impl Args {
     }
 
     fn usize_opt(&self, names: &[&str], default: usize) -> Result<usize> {
+        match self.opt(names) {
+            Some(v) => v.parse().map_err(|_| anyhow!("bad number for {names:?}: {v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn u64_opt(&self, names: &[&str], default: u64) -> Result<u64> {
+        match self.opt(names) {
+            Some(v) => v.parse().map_err(|_| anyhow!("bad number for {names:?}: {v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn f64_opt(&self, names: &[&str], default: f64) -> Result<f64> {
         match self.opt(names) {
             Some(v) => v.parse().map_err(|_| anyhow!("bad number for {names:?}: {v}")),
             None => Ok(default),
@@ -188,7 +211,7 @@ fn cmd_list() -> Result<()> {
 }
 
 fn cmd_scenario(args: &Args) -> Result<()> {
-    use stream::scenario::{Arbitration, ScenarioGa, ScenarioSim};
+    use stream::scenario::{Arbitration, ScenarioGa, ScenarioSim, StreamingOpts};
 
     let arch_name =
         args.opt(&["-a", "--arch"]).ok_or_else(|| anyhow!("missing -a <arch>"))?;
@@ -196,7 +219,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         args.opt(&["-s", "--scenario"]).ok_or_else(|| anyhow!("missing -s <scenario>"))?;
     let arch = presets::by_name(&arch_name)
         .ok_or_else(|| anyhow!("unknown arch {arch_name}"))?;
-    let scenario = stream::scenario::by_name(&scen_name)
+    let mut scenario = stream::scenario::by_name(&scen_name)
         .ok_or_else(|| anyhow!("unknown scenario {scen_name}"))?;
     let arb_name = args.opt(&["--arbitration"]).unwrap_or_else(|| "edf".into());
     let arbitration = Arbitration::by_name(&arb_name)
@@ -206,6 +229,27 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         generations: args.usize_opt(&["--generations"], 4)?,
         ..Default::default()
     };
+    let seed = args.u64_opt(&["--seed"], 0)?;
+    if seed != 0 {
+        scenario = scenario.seed(seed);
+    }
+    let rate_scale = args.f64_opt(&["--rate-scale"], 1.0)?;
+    if rate_scale <= 0.0 {
+        bail!("--rate-scale must be positive, got {rate_scale}");
+    }
+    if rate_scale != 1.0 {
+        scenario = scenario.scale_rate(rate_scale);
+    }
+    let duration = match args.opt(&["--duration"]) {
+        Some(v) => {
+            Some(v.parse::<u64>().map_err(|_| anyhow!("bad number for --duration: {v}"))?)
+        }
+        None => None,
+    };
+    if let Some(d) = duration {
+        scenario = scenario.extend_to(d);
+    }
+    let n_windows = args.usize_opt(&["--windows"], 64)?.max(1);
 
     let t = stream::util::ScopeTimer::start();
     let sim = ScenarioSim::new(&scenario, &arch).map_err(|e| anyhow!("{e}"))?;
@@ -224,11 +268,26 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     } else {
         stream::scenario::per_tenant_ga(&sim, ga)
     };
-    let r = sim.run(&allocs, arbitration);
+    let r = match duration {
+        // long traces take the bounded-memory streaming engine
+        Some(d) => {
+            let opts = StreamingOpts {
+                window_cc: (d / n_windows as u64).max(1),
+                max_windows: n_windows,
+                warmup_cc: d / 10,
+                ..Default::default()
+            };
+            sim.runner().run_streamed(&allocs, arbitration, &opts)
+        }
+        None => sim.run(&allocs, arbitration),
+    };
 
+    let n_requests = match &r.streaming {
+        Some(s) => s.retired as usize,
+        None => r.outcomes.len(),
+    };
     println!(
-        "{scen_name} on {arch_name} [{arbitration}]: {} requests, makespan {}, {:.1} ms runtime",
-        r.outcomes.len(),
+        "{scen_name} on {arch_name} [{arbitration}]: {n_requests} requests, makespan {}, {:.1} ms runtime",
         fmt_cycles(r.makespan_cc()),
         t.elapsed_ms()
     );
@@ -253,6 +312,30 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             100.0 * t.miss_rate,
             t.throughput_rps,
         );
+    }
+    if let Some(s) = &r.streaming {
+        println!(
+            "streaming: admitted {} retired {} | live peak {} lanes (in-flight {}) | steady p99 {} | {:.1} req/s",
+            s.admitted,
+            s.retired,
+            s.live_peak,
+            s.inflight_peak,
+            fmt_cycles(s.steady_p99_cc()),
+            s.steady_throughput_rps(r.makespan_cc()),
+        );
+        let windows: Vec<_> = s.windows().collect();
+        let tail = windows.len().saturating_sub(8);
+        for w in &windows[tail..] {
+            println!(
+                "  window @{:<12} {:>6} done  p50 {:>10} p99 {:>10} miss {:>4.0}%  {:>8.1} req/s",
+                fmt_cycles(w.start_cc),
+                w.completed,
+                fmt_cycles(w.hist.percentile_cc(50.0)),
+                fmt_cycles(w.hist.percentile_cc(99.0)),
+                100.0 * w.miss_rate(),
+                w.throughput_rps(s.window_cc, s.clock_ghz),
+            );
+        }
     }
     for core in &arch.cores {
         println!("  {:<10} util {:>5.1}%", core.name, 100.0 * r.core_util(core.id));

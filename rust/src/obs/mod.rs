@@ -50,7 +50,7 @@
 pub mod chrome;
 pub mod report;
 
-pub use report::{LinkLoad, RunReport};
+pub use report::{LinkLoad, RunReport, ServingSummary};
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -106,10 +106,18 @@ pub enum Counter {
     GaPruned,
     /// Completed scenario-engine runs.
     ScenarioRuns,
+    /// Requests admitted (injected as lanes) by the streaming serving
+    /// driver.
+    ServingAdmitted,
+    /// Requests retired (completed + freed) by the streaming driver.
+    ServingRetired,
+    /// High-water mark of the streaming driver's live lane set
+    /// (max-merged across runs, not summed).
+    ServingLivePeak,
 }
 
 impl Counter {
-    pub const COUNT: usize = 22;
+    pub const COUNT: usize = 25;
 
     pub const ALL: [Counter; Counter::COUNT] = [
         Counter::SimRuns,
@@ -134,6 +142,9 @@ impl Counter {
         Counter::GaEvals,
         Counter::GaPruned,
         Counter::ScenarioRuns,
+        Counter::ServingAdmitted,
+        Counter::ServingRetired,
+        Counter::ServingLivePeak,
     ];
 
     pub fn name(self) -> &'static str {
@@ -160,6 +171,9 @@ impl Counter {
             Counter::GaEvals => "ga.evals",
             Counter::GaPruned => "ga.pruned",
             Counter::ScenarioRuns => "scenario.runs",
+            Counter::ServingAdmitted => "serving.admitted",
+            Counter::ServingRetired => "serving.retired",
+            Counter::ServingLivePeak => "serving.live_peak",
         }
     }
 }
@@ -313,6 +327,16 @@ pub fn trace_path() -> Option<String> {
 pub fn count(c: Counter, n: u64) {
     if enabled() {
         COUNTERS[c as usize].fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Raise a counter to at least `v` (no-op when disabled) — for
+/// high-water-mark counters like [`Counter::ServingLivePeak`], which
+/// max-merge across runs instead of summing.
+#[inline]
+pub fn count_max(c: Counter, v: u64) {
+    if enabled() {
+        COUNTERS[c as usize].fetch_max(v, Ordering::Relaxed);
     }
 }
 

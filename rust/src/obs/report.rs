@@ -48,6 +48,28 @@ pub struct RunReport {
     pub counters: Vec<(&'static str, u64)>,
     /// Global histogram snapshot (non-empty only) at report time.
     pub hists: Vec<(&'static str, Vec<(String, u64)>)>,
+    /// Streamed-serving summary, attached only by the streaming
+    /// serving path.
+    pub serving: Option<ServingSummary>,
+}
+
+/// Live-set accounting and per-window tail latency of one streamed
+/// serving run ([`ScenarioRunner::run_streamed`]).
+///
+/// [`ScenarioRunner::run_streamed`]: crate::scenario::ScenarioRunner::run_streamed
+#[derive(Debug, Clone, Default)]
+pub struct ServingSummary {
+    /// Requests admitted into the live set.
+    pub admitted: u64,
+    /// Requests retired (completed and freed).
+    pub retired: u64,
+    /// High-water mark of the live lane set.
+    pub live_peak: usize,
+    /// High-water mark of the arrived (truly in-flight) subset.
+    pub inflight_peak: usize,
+    /// `(window start cc, completed, p99 cc)` per retained completion
+    /// window, oldest first.
+    pub window_p99: Vec<(u64, u64, u64)>,
 }
 
 impl RunReport {
@@ -98,6 +120,22 @@ impl fmt::Display for RunReport {
                 )?;
             }
         }
+        if let Some(s) = &self.serving {
+            writeln!(
+                f,
+                "  serving            admitted {}  retired {}  live peak {} (in-flight {})",
+                s.admitted, s.retired, s.live_peak, s.inflight_peak
+            )?;
+            if !s.window_p99.is_empty() {
+                writeln!(f, "  window p99:")?;
+                for &(start, completed, p99) in &s.window_p99 {
+                    writeln!(
+                        f,
+                        "    @{start:<14} {completed:>8} done  p99 {p99} cc"
+                    )?;
+                }
+            }
+        }
         if !self.counters.is_empty() {
             writeln!(f, "  counters:")?;
             for (k, v) in &self.counters {
@@ -137,6 +175,22 @@ mod tests {
         assert!(s.contains("single request"));
         assert!(s.contains("bus"));
         assert!(s.contains("50.0%"));
+    }
+
+    #[test]
+    fn display_includes_serving_summary() {
+        let mut r = RunReport { makespan_cc: 10, partitions: 1, ..Default::default() };
+        r.serving = Some(ServingSummary {
+            admitted: 100,
+            retired: 100,
+            live_peak: 7,
+            inflight_peak: 3,
+            window_p99: vec![(0, 40, 1200), (1_000, 60, 900)],
+        });
+        let s = r.to_string();
+        assert!(s.contains("admitted 100"));
+        assert!(s.contains("live peak 7"));
+        assert!(s.contains("p99 1200 cc"));
     }
 
     #[test]

@@ -29,10 +29,13 @@ use crate::cn::CnSet;
 use crate::depgraph::{generate, CnGraph};
 use crate::mapping::CostModel;
 use crate::scheduler::sim::{global_wgt_fetch, SimContext, SimRequest, SimTenant};
-use crate::scheduler::{Arbitration, Scheduler};
+use crate::scheduler::streaming::{simulate_stream, StreamConfig, StreamRequest};
+use crate::scheduler::{Arbitration, MemTrace, Scheduler};
 use crate::workload::WorkloadGraph;
 
-use super::result::{percentile_cc, RequestOutcome, ScenarioCn, ScenarioResult, TenantStats};
+use super::result::{
+    percentile_cc, RequestOutcome, ScenarioCn, ScenarioResult, StreamingStats, TenantStats,
+};
 use super::spec::Scenario;
 
 /// Errors from scenario construction.
@@ -145,6 +148,41 @@ impl<'a> ScenarioSim<'a> {
     }
 }
 
+/// Knobs of the streamed serving path
+/// ([`ScenarioRunner::run_streamed`]).
+#[derive(Debug, Clone, Copy)]
+pub struct StreamingOpts {
+    /// Eager admission window: how many lanes beyond the mandatory
+    /// (exactness-required) set to keep live.  Any value produces the
+    /// identical schedule — it trades peak memory against
+    /// admission-scan frequency.
+    pub window: usize,
+    /// Completion-window length in cycles for the windowed statistics.
+    pub window_cc: u64,
+    /// How many completion windows to retain (oldest evicted first).
+    pub max_windows: usize,
+    /// Completions before this cycle are excluded from the steady-state
+    /// aggregates (warm-up cutoff).
+    pub warmup_cc: u64,
+    /// Keep full event logs and per-request outcomes — bit-identical to
+    /// the eager path, O(total requests) memory.  When false, events
+    /// fold into bounded aggregates as requests retire and the result
+    /// carries metrics + windowed stats only.
+    pub retain_events: bool,
+}
+
+impl Default for StreamingOpts {
+    fn default() -> StreamingOpts {
+        StreamingOpts {
+            window: 64,
+            window_cc: 1_000_000,
+            max_windows: 64,
+            warmup_cc: 0,
+            retain_events: false,
+        }
+    }
+}
+
 /// A prepared co-scheduler over one [`ScenarioSim`]: per-tenant
 /// [`Scheduler`]s plus the global weight-fetch and priority tables,
 /// built once and reused across any number of
@@ -243,14 +281,174 @@ impl ScenarioRunner<'_> {
             })
             .collect();
 
-        let latency = out.metrics.latency_cc;
+        let tenants = self.tenant_stats(&outcomes, out.metrics.latency_cc);
+
+        ScenarioResult {
+            metrics: out.metrics,
+            cns,
+            comms: out.comms,
+            comm_req: out.comm_req,
+            drams: out.drams,
+            dram_req: out.dram_req,
+            link_stats: out.link_stats,
+            core_busy: out.core_busy,
+            memtrace: out.memtrace,
+            outcomes,
+            tenants,
+            partitions: out.partitions,
+            fallback: out.fallback,
+            report,
+            streaming: None,
+        }
+    }
+
+    /// Streamed serving path: pull requests lazily from the scenario's
+    /// [`RequestStream`](super::RequestStream), admit them into the
+    /// simulation core only as the virtual clock approaches their
+    /// release, and retire each request the moment its last CN
+    /// completes — live state is O(admission window + in-flight
+    /// requests), however long the trace.  With
+    /// [`StreamingOpts::retain_events`] the result is **bit-identical**
+    /// to [`run`](Self::run) (pinned by
+    /// `rust/tests/streaming_equivalence.rs`); without it, events fold
+    /// into bounded aggregates and the per-request `outcomes` / event
+    /// logs come back empty, with the windowed statistics in
+    /// [`ScenarioResult::streaming`] taking their place.
+    pub fn run_streamed(
+        &self,
+        allocs: &[Vec<CoreId>],
+        arbitration: Arbitration,
+        opts: &StreamingOpts,
+    ) -> ScenarioResult {
+        assert_eq!(allocs.len(), self.sim.builds.len(), "one allocation per tenant");
+        for (b, a) in self.sim.builds.iter().zip(allocs) {
+            assert_eq!(a.len(), b.workload.len(), "allocation per layer");
+        }
+
+        let tenants: Vec<SimTenant> = self
+            .scheds
+            .iter()
+            .enumerate()
+            .map(|(t, s)| SimTenant {
+                sched: s,
+                alloc: &allocs[t],
+                pool_priority: self.sim.scenario.tenants[t].pool_priority,
+                prio_rank: self.prio_rank[t],
+                layer_off: self.sim.layer_off[t],
+            })
+            .collect();
+
+        crate::obs::count(crate::obs::Counter::ScenarioRuns, 1);
+        let ctx = SimContext {
+            arch: self.sim.arch,
+            tenants: &tenants,
+            requests: &[],
+            wgt_fetch_g: &self.wgt_fetch_g,
+            arbitration,
+            linear_pool: false,
+            tag_events: opts.retain_events,
+            sim_threads: 1,
+        };
+        let cfg = StreamConfig { window: opts.window, retain_events: opts.retain_events };
+        let mut stats = StreamingStats::new(
+            opts.window_cc,
+            opts.warmup_cc,
+            opts.max_windows,
+            self.sim.scenario.tenants.len(),
+            self.sim.scenario.clock_ghz,
+        );
+        // retained mode keeps per-request rows for the outcome table;
+        // bounded mode folds everything into `stats` as requests retire
+        let mut retired = Vec::new();
+        let stream = self.sim.scenario.request_stream().map(|r| StreamRequest {
+            seq: r.seq,
+            tenant: r.tenant,
+            release: r.release_cc,
+            deadline_abs: r.deadline_abs_cc,
+        });
+        let (out, live) = simulate_stream(&ctx, stream, &cfg, |r| {
+            let latency = r.completion.saturating_sub(r.release);
+            let missed = r.deadline_abs.is_some_and(|d| r.completion > d);
+            stats.record(r.tenant, r.completion, latency, missed);
+            if opts.retain_events {
+                retired.push(r);
+            }
+        });
+        stats.admitted = live.admitted;
+        stats.retired = live.retired;
+        stats.live_peak = live.live_peak;
+        stats.inflight_peak = live.inflight_peak;
+        let report = crate::obs::enabled().then(|| {
+            let mut rep = Box::new(out.report(self.sim.arch));
+            rep.serving = Some(crate::obs::ServingSummary {
+                admitted: stats.admitted,
+                retired: stats.retired,
+                live_peak: stats.live_peak,
+                inflight_peak: stats.inflight_peak,
+                window_p99: stats
+                    .windows()
+                    .map(|w| (w.start_cc, w.completed, w.hist.percentile_cc(99.0)))
+                    .collect(),
+            });
+            rep
+        });
+
+        let (cns, outcomes, tenants, memtrace) = if opts.retain_events {
+            let cns: Vec<ScenarioCn> = out
+                .cns
+                .iter()
+                .zip(&out.cn_req)
+                .map(|(p, &r)| ScenarioCn { request: r, placed: *p })
+                .collect();
+            retired.sort_unstable_by_key(|r| r.seq);
+            let outcomes: Vec<RequestOutcome> = retired
+                .iter()
+                .map(|r| RequestOutcome {
+                    request: r.seq,
+                    tenant: r.tenant,
+                    release_cc: r.release,
+                    completion_cc: r.completion,
+                    latency_cc: r.completion.saturating_sub(r.release),
+                    deadline_abs_cc: r.deadline_abs,
+                    missed: r.deadline_abs.is_some_and(|d| r.completion > d),
+                })
+                .collect();
+            let tenants = self.tenant_stats(&outcomes, out.metrics.latency_cc);
+            (cns, outcomes, tenants, out.memtrace)
+        } else {
+            let tenants = self.tenant_stats_from_hists(&stats, out.metrics.latency_cc);
+            (Vec::new(), Vec::new(), tenants, MemTrace::new())
+        };
+
+        ScenarioResult {
+            metrics: out.metrics,
+            cns,
+            comms: out.comms,
+            comm_req: out.comm_req,
+            drams: out.drams,
+            dram_req: out.dram_req,
+            link_stats: out.link_stats,
+            core_busy: out.core_busy,
+            memtrace,
+            outcomes,
+            tenants,
+            partitions: out.partitions,
+            fallback: out.fallback,
+            report,
+            streaming: Some(stats),
+        }
+    }
+
+    /// Exact per-tenant serving statistics from retained per-request
+    /// outcome rows (shared by the eager path and the retained streamed
+    /// path, so their results agree trivially).
+    fn tenant_stats(&self, outcomes: &[RequestOutcome], latency: u64) -> Vec<TenantStats> {
         let seconds = if self.sim.scenario.clock_ghz > 0.0 && latency > 0 {
             latency as f64 / (self.sim.scenario.clock_ghz * 1e9)
         } else {
             0.0
         };
-        let tenants: Vec<TenantStats> = self
-            .sim
+        self.sim
             .scenario
             .tenants
             .iter()
@@ -278,24 +476,44 @@ impl ScenarioRunner<'_> {
                     throughput_rps: if seconds > 0.0 { n as f64 / seconds } else { 0.0 },
                 }
             })
-            .collect();
+            .collect()
+    }
 
-        ScenarioResult {
-            metrics: out.metrics,
-            cns,
-            comms: out.comms,
-            comm_req: out.comm_req,
-            drams: out.drams,
-            dram_req: out.dram_req,
-            link_stats: out.link_stats,
-            core_busy: out.core_busy,
-            memtrace: out.memtrace,
-            outcomes,
-            tenants,
-            partitions: out.partitions,
-            fallback: out.fallback,
-            report,
-        }
+    /// Per-tenant serving statistics from the bounded streaming
+    /// histograms: post-warm-up samples only, percentiles resolved to
+    /// histogram buckets
+    /// ([`LatencyHist`](super::LatencyHist) docs spell out the error
+    /// bound).  With a zero warm-up cutoff the request counts, means,
+    /// misses and throughput match the exact path; only p50/p99 are
+    /// bucket-quantized.
+    fn tenant_stats_from_hists(&self, stats: &StreamingStats, latency: u64) -> Vec<TenantStats> {
+        let span = latency.saturating_sub(stats.warmup_cc);
+        let seconds = if self.sim.scenario.clock_ghz > 0.0 && span > 0 {
+            span as f64 / (self.sim.scenario.clock_ghz * 1e9)
+        } else {
+            0.0
+        };
+        self.sim
+            .scenario
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(t, tenant)| {
+                let h = &stats.steady_per_tenant[t];
+                let n = h.count() as usize;
+                let misses = stats.steady_misses[t] as usize;
+                TenantStats {
+                    name: tenant.name.clone(),
+                    requests: n,
+                    p50_cc: h.percentile_cc(50.0),
+                    p99_cc: h.percentile_cc(99.0),
+                    mean_cc: h.mean_cc(),
+                    misses,
+                    miss_rate: if n > 0 { misses as f64 / n as f64 } else { 0.0 },
+                    throughput_rps: if seconds > 0.0 { n as f64 / seconds } else { 0.0 },
+                }
+            })
+            .collect()
     }
 }
 
@@ -437,6 +655,75 @@ mod tests {
             done(&prio, 1),
             done(&fifo, 1)
         );
+    }
+
+    #[test]
+    fn streamed_retained_matches_eager_run() {
+        let scenario = spec::tiny_mix();
+        let arch = presets::test_dual();
+        let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+        let allocs = sim.greedy_allocations();
+        let runner = sim.runner();
+        for arb in [Arbitration::Fifo, Arbitration::Priority, Arbitration::Edf] {
+            let eager = runner.run_with_threads(&allocs, arb, 1);
+            let opts = StreamingOpts { window: 2, retain_events: true, ..Default::default() };
+            let streamed = runner.run_streamed(&allocs, arb, &opts);
+            assert_eq!(eager.metrics.latency_cc, streamed.metrics.latency_cc, "{arb}");
+            assert_eq!(
+                eager.metrics.energy_pj.to_bits(),
+                streamed.metrics.energy_pj.to_bits(),
+                "{arb}"
+            );
+            assert_eq!(eager.cns.len(), streamed.cns.len(), "{arb}");
+            for (a, b) in eager.outcomes.iter().zip(&streamed.outcomes) {
+                assert_eq!(a.request, b.request, "{arb}");
+                assert_eq!(a.completion_cc, b.completion_cc, "{arb}");
+                assert_eq!(a.missed, b.missed, "{arb}");
+            }
+            let s = streamed.streaming.as_ref().unwrap();
+            assert_eq!(s.retired, scenario.n_requests() as u64, "{arb}");
+            assert_eq!(s.admitted, s.retired, "{arb}");
+        }
+    }
+
+    #[test]
+    fn streamed_bounded_mode_matches_aggregate_metrics() {
+        let scenario = spec::tiny_mix();
+        let arch = presets::test_dual();
+        let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+        let allocs = sim.greedy_allocations();
+        let runner = sim.runner();
+        let eager = runner.run_with_threads(&allocs, Arbitration::Edf, 1);
+        let opts = StreamingOpts {
+            window: 2,
+            window_cc: 50_000,
+            retain_events: false,
+            ..Default::default()
+        };
+        let streamed = runner.run_streamed(&allocs, Arbitration::Edf, &opts);
+        // the bounded fold reproduces the aggregate metrics bit-for-bit
+        assert_eq!(eager.metrics.latency_cc, streamed.metrics.latency_cc);
+        assert_eq!(eager.metrics.energy_pj.to_bits(), streamed.metrics.energy_pj.to_bits());
+        assert_eq!(
+            eager.metrics.peak_mem_bytes.to_bits(),
+            streamed.metrics.peak_mem_bytes.to_bits()
+        );
+        assert_eq!(eager.link_stats, streamed.link_stats);
+        // event logs are folded away
+        assert!(streamed.cns.is_empty() && streamed.outcomes.is_empty());
+        assert!(streamed.memtrace.events.is_empty());
+        // every completion landed in the windowed stats
+        let s = streamed.streaming.as_ref().unwrap();
+        let windowed: u64 = s.windows().map(|w| w.completed).sum();
+        assert_eq!(windowed + s.late, scenario.n_requests() as u64);
+        assert_eq!(s.steady.count(), scenario.n_requests() as u64);
+        // per-tenant counts/misses match the exact path
+        for (a, b) in eager.tenants.iter().zip(&streamed.tenants) {
+            assert_eq!(a.requests, b.requests);
+            assert_eq!(a.misses, b.misses);
+            // bucket-resolved percentiles bracket the exact values
+            assert!(b.p99_cc >= a.p99_cc && b.p99_cc <= a.p99_cc.saturating_mul(2).max(1));
+        }
     }
 
     #[test]

@@ -49,12 +49,13 @@ mod result;
 mod spec;
 
 pub use crate::scheduler::{Arbitration, FallbackReason};
-pub use engine::{ScenarioError, ScenarioRunner, ScenarioSim, TenantBuild};
+pub use engine::{ScenarioError, ScenarioRunner, ScenarioSim, StreamingOpts, TenantBuild};
 pub use opt::{per_tenant_ga, ScenarioGa, ScenarioGaResult};
 pub use result::{
-    percentile_cc, RequestOutcome, ScenarioCn, ScenarioResult, TenantStats,
+    percentile_cc, LatencyHist, RequestOutcome, ScenarioCn, ScenarioResult, StreamingStats,
+    TenantStats, WindowStats,
 };
 pub use spec::{
-    av_pipeline, by_name, duplicate_resnet_x4, edge_mix, llm_serving, tiny_mix, Arrival, Request,
-    Scenario, Tenant, SCENARIO_NAMES,
+    av_pipeline, by_name, duplicate_resnet_x4, edge_mix, llm_serving, tiny_mix, Arrival,
+    ArrivalStream, Request, RequestStream, Scenario, Tenant, SCENARIO_NAMES,
 };

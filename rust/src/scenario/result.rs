@@ -77,6 +77,12 @@ pub struct ScenarioResult {
     /// Flight-recorder summary, attached only when the recorder is
     /// enabled ([`crate::obs::enabled`]); `None` otherwise.
     pub report: Option<Box<crate::obs::RunReport>>,
+    /// Windowed streaming statistics, attached only by the streamed
+    /// serving path ([`ScenarioRunner::run_streamed`]); `None` for the
+    /// eager path.
+    ///
+    /// [`ScenarioRunner::run_streamed`]: super::ScenarioRunner::run_streamed
+    pub streaming: Option<StreamingStats>,
 }
 
 impl ScenarioResult {
@@ -117,6 +123,274 @@ impl ScenarioResult {
     }
 }
 
+/// Fixed-footprint log2 latency histogram — the streaming path's
+/// replacement for whole-run latency collection.  Same bucketing idea
+/// as the flight recorder's [`crate::obs::Hist`] (one bucket per
+/// leading-zero count), widened to the full `u64` range so
+/// million-cycle serving latencies resolve: bucket `b >= 1` holds
+/// values in `[2^(b-1), 2^b)`, bucket 0 holds exactly `{0}`.
+/// Percentiles resolve to the containing bucket's upper edge (at most
+/// a 2x overestimate), clamped to the exact observed maximum.
+#[derive(Debug, Clone)]
+pub struct LatencyHist {
+    counts: [u64; Self::BUCKETS],
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl LatencyHist {
+    pub const BUCKETS: usize = 64;
+
+    pub fn new() -> LatencyHist {
+        LatencyHist { counts: [0; Self::BUCKETS], count: 0, sum: 0, max: 0 }
+    }
+
+    fn bucket(v: u64) -> usize {
+        ((64 - v.leading_zeros()) as usize).min(Self::BUCKETS - 1)
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sample mean (0 for an empty histogram).
+    pub fn mean_cc(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Exact observed maximum.
+    pub fn max_cc(&self) -> u64 {
+        self.max
+    }
+
+    /// Nearest-rank percentile (`p` in [0, 100]), resolved to the
+    /// containing bucket's upper edge and clamped to the observed
+    /// maximum; 0 for an empty histogram.
+    pub fn percentile_cc(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = (((p / 100.0) * self.count as f64).ceil().max(1.0)) as u64;
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if c > 0 && seen >= rank {
+                let edge = if b == 0 {
+                    0
+                } else if b >= Self::BUCKETS - 1 {
+                    u64::MAX
+                } else {
+                    (1u64 << b) - 1
+                };
+                return edge.min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram in (used to aggregate windows).
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+}
+
+impl Default for LatencyHist {
+    fn default() -> LatencyHist {
+        LatencyHist::new()
+    }
+}
+
+/// One completion-time window of a streamed run.
+#[derive(Debug, Clone, Default)]
+pub struct WindowStats {
+    /// Window start (inclusive), in cycles; spans
+    /// [`start_cc`](Self::start_cc)` .. start_cc + window_cc`.
+    pub start_cc: u64,
+    /// Requests whose completion fell inside the window.
+    pub completed: u64,
+    /// Deadline misses among them.
+    pub missed: u64,
+    /// Latency histogram of the window's completions.
+    pub hist: LatencyHist,
+}
+
+impl WindowStats {
+    /// `missed / completed` (0 for an empty window).
+    pub fn miss_rate(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.missed as f64 / self.completed as f64
+        }
+    }
+
+    /// Completions per second over the window at the modeled clock.
+    pub fn throughput_rps(&self, window_cc: u64, clock_ghz: f64) -> f64 {
+        if window_cc == 0 {
+            return 0.0;
+        }
+        let secs = window_cc as f64 / (clock_ghz * 1e9);
+        self.completed as f64 / secs
+    }
+}
+
+/// Windowed streaming statistics: a bounded ring of completion-time
+/// windows (each with its own latency histogram and miss counts) plus
+/// post-warm-up steady-state aggregates — O(windows + tenants), however
+/// long the trace.  Completions arrive in scheduling order, not time
+/// order, so the ring tolerates out-of-order recording; only windows
+/// evicted off the ring's tail refuse late samples (counted in
+/// [`late`](Self::late)).
+#[derive(Debug, Clone)]
+pub struct StreamingStats {
+    /// Window length in cycles.
+    pub window_cc: u64,
+    /// Completions before this cutoff are excluded from the
+    /// steady-state aggregates (they still land in their window).
+    pub warmup_cc: u64,
+    /// Modeled clock, for throughput conversions.
+    pub clock_ghz: f64,
+    /// Index of `windows[0]` (window i spans
+    /// `i * window_cc .. (i + 1) * window_cc`).
+    base_idx: u64,
+    /// The retained ring, oldest first; capacity
+    /// [`max_windows`](Self::max_windows).
+    windows: std::collections::VecDeque<WindowStats>,
+    max_windows: usize,
+    /// Windows evicted off the ring (their completions remain in the
+    /// steady-state aggregates).
+    pub dropped_windows: u64,
+    /// Completions that landed in an already-evicted window.
+    pub late: u64,
+    /// Post-warm-up latency histogram over all tenants.
+    pub steady: LatencyHist,
+    /// Post-warm-up per-tenant latency histograms.
+    pub steady_per_tenant: Vec<LatencyHist>,
+    /// Post-warm-up deadline misses per tenant.
+    pub steady_misses: Vec<u64>,
+    /// Live-set accounting from the streaming driver.
+    pub admitted: u64,
+    pub retired: u64,
+    pub live_peak: usize,
+    pub inflight_peak: usize,
+}
+
+impl StreamingStats {
+    pub fn new(
+        window_cc: u64,
+        warmup_cc: u64,
+        max_windows: usize,
+        n_tenants: usize,
+        clock_ghz: f64,
+    ) -> StreamingStats {
+        StreamingStats {
+            window_cc: window_cc.max(1),
+            warmup_cc,
+            clock_ghz,
+            base_idx: 0,
+            windows: std::collections::VecDeque::new(),
+            max_windows: max_windows.max(1),
+            dropped_windows: 0,
+            late: 0,
+            steady: LatencyHist::new(),
+            steady_per_tenant: vec![LatencyHist::new(); n_tenants],
+            steady_misses: vec![0; n_tenants],
+            admitted: 0,
+            retired: 0,
+            live_peak: 0,
+            inflight_peak: 0,
+        }
+    }
+
+    /// Fold one completion in.
+    pub fn record(&mut self, tenant: usize, completion_cc: u64, latency_cc: u64, missed: bool) {
+        let idx = completion_cc / self.window_cc;
+        if self.windows.is_empty() {
+            self.base_idx = idx;
+            self.windows.push_back(WindowStats {
+                start_cc: idx * self.window_cc,
+                ..WindowStats::default()
+            });
+        }
+        // completions arrive in scheduling order, not time order: a
+        // completion before the ring's base extends the ring backward
+        // while capacity allows (only possible before any eviction)
+        while idx < self.base_idx
+            && self.windows.len() < self.max_windows
+            && self.dropped_windows == 0
+        {
+            self.base_idx -= 1;
+            self.windows.push_front(WindowStats {
+                start_cc: self.base_idx * self.window_cc,
+                ..WindowStats::default()
+            });
+        }
+        if idx < self.base_idx {
+            self.late += 1;
+        } else {
+            while idx >= self.base_idx + self.windows.len() as u64 {
+                let next = self.base_idx + self.windows.len() as u64;
+                self.windows.push_back(WindowStats {
+                    start_cc: next * self.window_cc,
+                    ..WindowStats::default()
+                });
+                if self.windows.len() > self.max_windows {
+                    self.windows.pop_front();
+                    self.base_idx += 1;
+                    self.dropped_windows += 1;
+                }
+            }
+            let w = &mut self.windows[(idx - self.base_idx) as usize];
+            w.completed += 1;
+            w.missed += u64::from(missed);
+            w.hist.record(latency_cc);
+        }
+        if completion_cc >= self.warmup_cc {
+            self.steady.record(latency_cc);
+            self.steady_per_tenant[tenant].record(latency_cc);
+            self.steady_misses[tenant] += u64::from(missed);
+        }
+    }
+
+    /// The retained windows, oldest first.
+    pub fn windows(&self) -> impl Iterator<Item = &WindowStats> {
+        self.windows.iter()
+    }
+
+    /// Post-warm-up p99 over all tenants (bucket-resolved).
+    pub fn steady_p99_cc(&self) -> u64 {
+        self.steady.percentile_cc(99.0)
+    }
+
+    /// Post-warm-up throughput in requests per second, measured from
+    /// the warm-up cutoff to the last retained window's end.
+    pub fn steady_throughput_rps(&self, makespan_cc: u64) -> f64 {
+        let span = makespan_cc.saturating_sub(self.warmup_cc);
+        if span == 0 {
+            return 0.0;
+        }
+        self.steady.count() as f64 / (span as f64 / (self.clock_ghz * 1e9))
+    }
+}
+
 /// Nearest-rank percentile (`p` in [0, 100]) of an unsorted latency
 /// sample; 0 for an empty sample.
 pub fn percentile_cc(latencies: &[u64], p: f64) -> u64 {
@@ -142,5 +416,84 @@ mod tests {
         assert_eq!(percentile_cc(&l, 0.0), 10);
         assert_eq!(percentile_cc(&[42], 99.0), 42);
         assert_eq!(percentile_cc(&[], 50.0), 0);
+    }
+
+    #[test]
+    fn latency_hist_percentiles_bracket_exact_values() {
+        let mut h = LatencyHist::new();
+        for v in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.max_cc(), 100);
+        assert!((h.mean_cc() - 55.0).abs() < 1e-9);
+        // bucket-resolved: upper edge of the containing power-of-two
+        // bucket, so within 2x above the exact nearest-rank value
+        let p50 = h.percentile_cc(50.0);
+        assert!((50..=100).contains(&p50), "p50 {p50}");
+        let p99 = h.percentile_cc(99.0);
+        assert!((100..=127).contains(&p99), "p99 {p99}");
+        // clamped to the observed max
+        assert!(p99 <= h.max_cc().max(p50));
+        assert_eq!(LatencyHist::new().percentile_cc(99.0), 0);
+    }
+
+    #[test]
+    fn latency_hist_merge_matches_combined_recording() {
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        let mut both = LatencyHist::new();
+        for v in [1u64, 5, 9, 1_000] {
+            a.record(v);
+            both.record(v);
+        }
+        for v in [2u64, 7_000_000, 42] {
+            b.record(v);
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.max_cc(), both.max_cc());
+        assert_eq!(a.percentile_cc(50.0), both.percentile_cc(50.0));
+        assert_eq!(a.percentile_cc(99.0), both.percentile_cc(99.0));
+    }
+
+    #[test]
+    fn streaming_stats_windows_and_warmup() {
+        let mut s = StreamingStats::new(1_000, 2_000, 4, 2, 1.0);
+        // warm-up completions land in windows but not steady stats
+        s.record(0, 500, 400, false);
+        s.record(1, 1_500, 300, true);
+        assert_eq!(s.steady.count(), 0);
+        // steady completions, out of order across windows
+        s.record(0, 3_500, 700, false);
+        s.record(0, 2_500, 600, true);
+        s.record(1, 3_900, 800, false);
+        assert_eq!(s.steady.count(), 3);
+        assert_eq!(s.steady_per_tenant[0].count(), 2);
+        assert_eq!(s.steady_misses[0], 1);
+        let w: Vec<_> = s.windows().collect();
+        assert_eq!(w.len(), 4);
+        assert_eq!(w[0].start_cc, 0);
+        assert_eq!(w[0].completed, 1);
+        assert_eq!(w[1].missed, 1);
+        assert_eq!(w[2].completed, 1); // the 2_500 completion
+        assert_eq!(w[3].completed, 2);
+        assert!(w[3].throughput_rps(1_000, 1.0) > 0.0);
+    }
+
+    #[test]
+    fn streaming_stats_ring_evicts_old_windows() {
+        let mut s = StreamingStats::new(100, 0, 3, 1, 1.0);
+        for i in 0..10u64 {
+            s.record(0, i * 100 + 50, 10, false);
+        }
+        assert_eq!(s.windows().count(), 3);
+        assert_eq!(s.dropped_windows, 7);
+        // a completion for an evicted window is counted, not folded
+        s.record(0, 50, 10, false);
+        assert_eq!(s.late, 1);
+        // steady stats still saw everything
+        assert_eq!(s.steady.count(), 11);
     }
 }

@@ -46,6 +46,12 @@ pub struct Tenant {
     /// Workload name resolved through [`models::by_name`].
     pub model: String,
     pub arrival: Arrival,
+    /// Per-release jitter bound for [`Arrival::Burst`] times: each burst
+    /// release is shifted by a deterministic pseudo-random offset in
+    /// `[0, jitter_cc]` drawn from the scenario seed, so long streamed
+    /// traces are reproducible yet sweepable.  `0` (the default) leaves
+    /// the burst times exactly as written.
+    pub jitter_cc: u64,
     /// Per-request deadline relative to its release, in cycles.
     pub deadline_cc: Option<u64>,
     /// Arbitration priority (higher wins under
@@ -62,6 +68,7 @@ impl Tenant {
             name: name.to_string(),
             model: model.to_string(),
             arrival,
+            jitter_cc: 0,
             deadline_cc: None,
             priority: 0,
             pool_priority: SchedulePriority::Latency,
@@ -83,9 +90,35 @@ impl Tenant {
         self
     }
 
+    pub fn jitter(mut self, cc: u64) -> Tenant {
+        self.jitter_cc = cc;
+        self
+    }
+
     /// Resolve the tenant's workload graph.
     pub fn workload(&self) -> Option<WorkloadGraph> {
         models::by_name(&self.model)
+    }
+
+    /// The tenant's release times with burst jitter applied — the
+    /// *canonical* sequence used by both [`Scenario::requests`] and the
+    /// lazy [`ArrivalStream`], so eager and streamed paths agree
+    /// bit-for-bit.  With `jitter_cc == 0` this is exactly
+    /// [`Arrival::releases`].
+    pub fn releases_seeded(&self, tenant_idx: usize, seed: u64) -> Vec<u64> {
+        let mut times = self.arrival.releases();
+        if self.jitter_cc > 0 {
+            if let Arrival::Burst { .. } = self.arrival {
+                let mut rng = crate::util::XorShift64::new(
+                    seed ^ (tenant_idx as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                );
+                for t in &mut times {
+                    *t += rng.below(self.jitter_cc + 1);
+                }
+                times.sort_unstable();
+            }
+        }
+        times
     }
 }
 
@@ -101,6 +134,9 @@ pub struct Scenario {
     /// Modeled clock in GHz, used only to convert cycle counts into
     /// requests-per-second throughput.
     pub clock_ghz: f64,
+    /// Seed for deterministic burst jitter (see [`Tenant::jitter_cc`]).
+    /// Two runs with the same seed replay the identical trace.
+    pub seed: u64,
 }
 
 impl Scenario {
@@ -110,7 +146,13 @@ impl Scenario {
             tenants,
             granularity: CnGranularity::Lines(4),
             clock_ghz: 1.0,
+            seed: 0,
         }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Scenario {
+        self.seed = seed;
+        self
     }
 
     /// Total request count across tenants.
@@ -121,10 +163,14 @@ impl Scenario {
     /// Expand the tenants' arrival patterns into the request list the
     /// engine schedules: sorted by (release, tenant order), so `seq`
     /// is the FIFO arbitration order.
+    ///
+    /// This is the *eager* form — O(total requests) memory.  Long
+    /// traces should use [`Scenario::request_stream`], which yields the
+    /// identical sequence lazily.
     pub fn requests(&self) -> Vec<Request> {
         let mut reqs = Vec::new();
         for (t, tenant) in self.tenants.iter().enumerate() {
-            for release_cc in tenant.arrival.releases() {
+            for release_cc in tenant.releases_seeded(t, self.seed) {
                 reqs.push(Request {
                     seq: 0,
                     tenant: t,
@@ -138,6 +184,227 @@ impl Scenario {
             r.seq = i;
         }
         reqs
+    }
+
+    /// Pull-based request generator: yields exactly the same requests as
+    /// [`Scenario::requests`], in the same `(release, tenant)` order
+    /// with the same `seq` numbering, without materializing the trace.
+    pub fn request_stream(&self) -> RequestStream {
+        RequestStream::new(self)
+    }
+
+    /// Grow every tenant's arrival pattern to cover `[0, duration_cc]`:
+    /// periodic streams extend their count, burst traces tile their
+    /// pattern forward in time, one-shots are left alone.  Used by the
+    /// CLI `--duration` flag to turn the canned scenarios into
+    /// arbitrarily long serving traces.
+    pub fn extend_to(mut self, duration_cc: u64) -> Scenario {
+        for t in &mut self.tenants {
+            match &mut t.arrival {
+                Arrival::OneShot { .. } => {}
+                Arrival::Periodic { every_cc, count, offset_cc } => {
+                    if duration_cc >= *offset_cc {
+                        let step = (*every_cc).max(1);
+                        let fit = ((duration_cc - *offset_cc) / step) as usize + 1;
+                        *count = (*count).max(fit);
+                    }
+                }
+                Arrival::Burst { times_cc } => {
+                    let mut base = times_cc.clone();
+                    base.sort_unstable();
+                    if base.is_empty() || *base.last().unwrap() >= duration_cc {
+                        continue;
+                    }
+                    // Tile the burst pattern with a stride of its span
+                    // plus its mean inter-arrival gap (min 1), so the
+                    // tiled trace keeps the original arrival rate.
+                    let span = base.last().unwrap() - base[0];
+                    let gap = if base.len() > 1 { (span / (base.len() as u64 - 1)).max(1) } else { 1 };
+                    let stride = (span + gap).max(1);
+                    let mut out = base.clone();
+                    let mut shift = stride;
+                    'tile: loop {
+                        for &b in &base {
+                            let t = b + shift;
+                            if t > duration_cc {
+                                break 'tile;
+                            }
+                            out.push(t);
+                        }
+                        shift += stride;
+                    }
+                    *times_cc = out;
+                }
+            }
+        }
+        self
+    }
+
+    /// Scale every tenant's arrival *rate* by `factor` (release times
+    /// divide by it): `2.0` doubles the request rate, `0.5` halves it.
+    /// Used by the CLI `--rate-scale` flag to push a scenario toward
+    /// saturation without editing the spec.
+    pub fn scale_rate(mut self, factor: f64) -> Scenario {
+        assert!(factor > 0.0, "rate-scale must be positive");
+        let scale = |cc: u64| -> u64 { (cc as f64 / factor).round() as u64 };
+        for t in &mut self.tenants {
+            match &mut t.arrival {
+                Arrival::OneShot { at_cc } => *at_cc = scale(*at_cc),
+                Arrival::Periodic { every_cc, offset_cc, .. } => {
+                    *every_cc = scale(*every_cc).max(1);
+                    *offset_cc = scale(*offset_cc);
+                }
+                Arrival::Burst { times_cc } => {
+                    for c in times_cc {
+                        *c = scale(*c);
+                    }
+                }
+            }
+            t.jitter_cc = scale(t.jitter_cc);
+        }
+        self
+    }
+}
+
+/// Lazy release-time generator for one tenant: yields the times of
+/// [`Tenant::releases_seeded`] in ascending order without materializing
+/// periodic streams (burst traces are explicit vectors already).
+#[derive(Debug, Clone)]
+pub struct ArrivalStream {
+    kind: StreamKind,
+}
+
+#[derive(Debug, Clone)]
+enum StreamKind {
+    Done,
+    OneShot { at: u64 },
+    Periodic { next: u64, step: u64, remaining: usize },
+    Burst { times: Vec<u64>, idx: usize },
+}
+
+impl ArrivalStream {
+    /// Build the stream for tenant `tenant_idx` of a scenario seeded
+    /// with `seed` (the jitter inputs of [`Tenant::releases_seeded`]).
+    pub fn new(tenant: &Tenant, tenant_idx: usize, seed: u64) -> ArrivalStream {
+        let kind = match &tenant.arrival {
+            Arrival::OneShot { at_cc } => StreamKind::OneShot { at: *at_cc },
+            Arrival::Periodic { every_cc, count, offset_cc } => {
+                if *count == 0 {
+                    StreamKind::Done
+                } else {
+                    StreamKind::Periodic {
+                        next: *offset_cc,
+                        step: (*every_cc).max(1),
+                        remaining: *count,
+                    }
+                }
+            }
+            Arrival::Burst { .. } => {
+                // Jittered-and-resorted burst times must match the eager
+                // expansion exactly, so reuse the canonical sequence.
+                StreamKind::Burst { times: tenant.releases_seeded(tenant_idx, seed), idx: 0 }
+            }
+        };
+        ArrivalStream { kind }
+    }
+
+    /// Next release time without consuming it.
+    pub fn peek(&self) -> Option<u64> {
+        match &self.kind {
+            StreamKind::Done => None,
+            StreamKind::OneShot { at } => Some(*at),
+            StreamKind::Periodic { next, .. } => Some(*next),
+            StreamKind::Burst { times, idx } => times.get(*idx).copied(),
+        }
+    }
+}
+
+impl Iterator for ArrivalStream {
+    type Item = u64;
+
+    fn next(&mut self) -> Option<u64> {
+        match &mut self.kind {
+            StreamKind::Done => None,
+            StreamKind::OneShot { at } => {
+                let t = *at;
+                self.kind = StreamKind::Done;
+                Some(t)
+            }
+            StreamKind::Periodic { next, step, remaining } => {
+                let t = *next;
+                *remaining -= 1;
+                if *remaining == 0 {
+                    self.kind = StreamKind::Done;
+                } else {
+                    *next = t + *step;
+                }
+                Some(t)
+            }
+            StreamKind::Burst { times, idx } => {
+                let t = times.get(*idx).copied();
+                if t.is_some() {
+                    *idx += 1;
+                } else {
+                    self.kind = StreamKind::Done;
+                }
+                t
+            }
+        }
+    }
+}
+
+/// K-way merge of all tenants' [`ArrivalStream`]s in `(release, tenant)`
+/// order with `seq` assigned in pop order — bit-identical to iterating
+/// [`Scenario::requests`], in O(tenants) state.
+#[derive(Debug, Clone)]
+pub struct RequestStream {
+    lanes: Vec<(ArrivalStream, Option<u64>)>,
+    next_seq: usize,
+}
+
+impl RequestStream {
+    pub fn new(scenario: &Scenario) -> RequestStream {
+        RequestStream {
+            lanes: scenario
+                .tenants
+                .iter()
+                .enumerate()
+                .map(|(i, t)| (ArrivalStream::new(t, i, scenario.seed), t.deadline_cc))
+                .collect(),
+            next_seq: 0,
+        }
+    }
+
+    /// `(release_cc, tenant)` of the next request without consuming it.
+    pub fn peek(&self) -> Option<(u64, usize)> {
+        self.lanes
+            .iter()
+            .enumerate()
+            .filter_map(|(t, (s, _))| s.peek().map(|cc| (cc, t)))
+            .min()
+    }
+
+    /// Requests yielded so far.
+    pub fn emitted(&self) -> usize {
+        self.next_seq
+    }
+}
+
+impl Iterator for RequestStream {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        let (release_cc, tenant) = self.peek()?;
+        self.lanes[tenant].0.next();
+        let deadline = self.lanes[tenant].1;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        Some(Request {
+            seq,
+            tenant,
+            release_cc,
+            deadline_abs_cc: deadline.map(|d| release_cc + d),
+        })
     }
 }
 
@@ -375,6 +642,107 @@ mod tests {
             // alone is ~2 Mcc), so the deadlines leave little slack
             assert!(t.p50_cc >= 2_000_000, "{}: p50 {} cc", t.name, t.p50_cc);
         }
+    }
+
+    #[test]
+    fn request_stream_matches_eager_expansion() {
+        for name in SCENARIO_NAMES {
+            let s = by_name(name).unwrap();
+            let eager = s.requests();
+            let streamed: Vec<Request> = s.request_stream().collect();
+            assert_eq!(eager, streamed, "{name}");
+        }
+        // ... including with burst jitter engaged
+        let mut s = tiny_mix().seed(42);
+        s.tenants[1].jitter_cc = 7_000;
+        let eager = s.requests();
+        let streamed: Vec<Request> = s.request_stream().collect();
+        assert_eq!(eager, streamed, "jittered tiny_mix");
+    }
+
+    #[test]
+    fn arrival_stream_peek_is_consistent() {
+        let s = edge_mix();
+        let mut rs = s.request_stream();
+        let mut n = 0;
+        while let Some((cc, t)) = rs.peek() {
+            let r = rs.next().unwrap();
+            assert_eq!((r.release_cc, r.tenant), (cc, t));
+            assert_eq!(r.seq, n);
+            n += 1;
+        }
+        assert_eq!(n, s.n_requests());
+        assert_eq!(rs.emitted(), n);
+        assert!(rs.next().is_none());
+    }
+
+    #[test]
+    fn burst_jitter_is_seeded_and_deterministic() {
+        let raw = || {
+            let mut s = tiny_mix();
+            s.tenants[1].jitter_cc = 10_000;
+            s
+        };
+        let a = raw().seed(1).requests();
+        let b = raw().seed(1).requests();
+        assert_eq!(a, b, "same seed must replay the identical trace");
+        let c = raw().seed(2).requests();
+        assert_ne!(
+            a.iter().map(|r| r.release_cc).collect::<Vec<_>>(),
+            c.iter().map(|r| r.release_cc).collect::<Vec<_>>(),
+            "different seeds must move the burst times"
+        );
+        // jitter 0 leaves the spec's times untouched regardless of seed
+        let d = tiny_mix().seed(99).requests();
+        assert_eq!(d, tiny_mix().requests());
+        // jitter only ever delays a release, by at most the bound
+        let base = tiny_mix().tenants[1].arrival.releases();
+        let jit = {
+            let mut t = tiny_mix().tenants[1].clone();
+            t.jitter_cc = 10_000;
+            t.releases_seeded(1, 1)
+        };
+        assert_eq!(jit.len(), base.len());
+        for (b, j) in base.iter().zip(&jit) {
+            // both sides are sorted, so element-wise bounds hold
+            assert!(*j >= *b && *j <= *b + 10_000, "{b} -> {j}");
+        }
+    }
+
+    #[test]
+    fn extend_to_grows_periodic_and_tiles_bursts() {
+        let s = tiny_mix().extend_to(200_000);
+        // periodic: (200_000 - 0) / 20_000 + 1 = 11 releases
+        assert_eq!(s.tenants[0].arrival.releases().len(), 11);
+        assert_eq!(*s.tenants[0].arrival.releases().last().unwrap(), 200_000);
+        // burst [0, 30_000]: span 30k, gap 30k -> stride 60k, tiled to 200k
+        let burst = s.tenants[1].arrival.releases();
+        assert!(burst.len() > 2, "burst must tile: {burst:?}");
+        assert!(*burst.last().unwrap() <= 200_000);
+        for w in burst.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        // extending to a shorter horizon than the spec is a no-op
+        let s2 = tiny_mix().extend_to(1);
+        assert_eq!(s2.n_requests(), tiny_mix().n_requests());
+    }
+
+    #[test]
+    fn scale_rate_compresses_the_trace() {
+        let s = tiny_mix().scale_rate(2.0);
+        assert_eq!(
+            s.tenants[0].arrival,
+            Arrival::Periodic { every_cc: 10_000, count: 3, offset_cc: 0 }
+        );
+        assert_eq!(s.tenants[1].arrival, Arrival::Burst { times_cc: vec![0, 15_000] });
+        // deadline SLOs are untouched — only arrivals compress
+        assert_eq!(s.tenants[0].deadline_cc, tiny_mix().tenants[0].deadline_cc);
+        // scaling down stretches
+        let s = tiny_mix().scale_rate(0.5);
+        assert_eq!(
+            s.tenants[0].arrival,
+            Arrival::Periodic { every_cc: 40_000, count: 3, offset_cc: 0 }
+        );
     }
 
     #[test]

@@ -62,10 +62,12 @@ pub(crate) mod pool;
 mod reference;
 pub mod resources;
 pub(crate) mod sim;
+pub(crate) mod streaming;
 
 pub use engine::{schedule, ScheduledCn, Scheduler};
 pub use memtrace::{MemEvent, MemTrace};
 pub use sim::{Arbitration, FallbackReason, ScheduleSegments, SimSnapshot};
+pub use streaming::{LiveStats, RetiredRequest, StreamConfig, StreamRequest};
 
 use crate::arch::{CoreId, LinkId};
 use crate::cost::ScheduleMetrics;

@@ -342,8 +342,7 @@ fn run_chip(ctx: &SimContext, owned: &[bool]) -> ChipRun {
                 fronts.push((ri, l.pool.peek_min_eff().expect("nonempty pool has a minimum")));
             }
         }
-        ctx.step(&mut st, &mut rec);
-        let picked = *st.cn_req.last().expect("tag_events records the picked lane");
+        let picked = ctx.step(&mut st, &mut rec);
         steps.push(StepRec {
             fronts,
             picked,

@@ -364,7 +364,15 @@ impl SimRecorder for TouchTracer {
 #[derive(Clone)]
 pub(crate) struct Lane {
     pub(crate) tenant: usize,
+    /// Arrival sequence number of the request this lane serves.  On the
+    /// eager path it equals the lane's position in `SimState::lanes`;
+    /// the streaming driver (`super::streaming`) retires lanes by
+    /// `swap_remove`, so every arbitration key and event tag reads this
+    /// carried value instead of the (unstable) vector position.
+    pub(crate) seq: usize,
     pub(crate) release: u64,
+    /// Absolute deadline carried from the request (the EDF key).
+    pub(crate) deadline_abs: Option<u64>,
     pub(crate) sched: Vec<Option<ScheduledCn>>,
     pub(crate) pending: Vec<usize>,
     pub(crate) pool: CandidatePool,
@@ -552,12 +560,15 @@ impl SimContext<'_> {
         let mut lanes: Vec<Lane> = self
             .requests
             .iter()
-            .map(|r| {
+            .enumerate()
+            .map(|(seq, r)| {
                 let s = self.tenants[r.tenant].sched;
                 let n = s.graph.len();
                 Lane {
                     tenant: r.tenant,
+                    seq,
                     release: r.release,
+                    deadline_abs: r.deadline_abs,
                     sched: vec![None; n],
                     pending: (0..n)
                         .map(|i| s.graph.pred_count(CnId(i)) + s.gate_preds[i].len())
@@ -610,10 +621,11 @@ impl SimContext<'_> {
         }
     }
 
-    /// Execute one scheduling decision.  The caller guarantees
+    /// Execute one scheduling decision, returning the position (in
+    /// `st.lanes`) of the lane that received it.  The caller guarantees
     /// [`SimState::has_work`]; candidates inserted here become visible
     /// from decision `st.decisions + 1`.
-    pub(crate) fn step<R: SimRecorder>(&self, st: &mut SimState, rec: &mut R) {
+    pub(crate) fn step<R: SimRecorder>(&self, st: &mut SimState, rec: &mut R) -> usize {
         let topo = &self.arch.topology;
         let SimState {
             core_avail,
@@ -678,12 +690,16 @@ impl SimContext<'_> {
                 if l.release > *now {
                     continue; // not yet arrived: ineligible for preference
                 }
+                // Keys read the lane-carried seq/deadline (not the
+                // vector position), so the streaming driver's lane
+                // retirement cannot perturb arbitration.  On the eager
+                // path seq == position, so nothing changes there.
                 let key = match self.arbitration {
-                    Arbitration::Fifo => (0, eff, ri as u64),
-                    Arbitration::Priority => (self.tenants[l.tenant].prio_rank, eff, ri as u64),
-                    Arbitration::Edf => {
-                        (self.requests[ri].deadline_abs.unwrap_or(u64::MAX), eff, ri as u64)
+                    Arbitration::Fifo => (0, eff, l.seq as u64),
+                    Arbitration::Priority => {
+                        (self.tenants[l.tenant].prio_rank, eff, l.seq as u64)
                     }
+                    Arbitration::Edf => (l.deadline_abs.unwrap_or(u64::MAX), eff, l.seq as u64),
                 };
                 let better = match best {
                     None => true,
@@ -699,6 +715,9 @@ impl SimContext<'_> {
         // --- one scheduling decision over the chosen lane's graph ---
         let rekey = {
             let lane = &mut lanes[ri];
+            // event tags carry the request's seq (== position on the
+            // eager path) so streamed retained runs tag identically
+            let seq = lane.seq;
             let t = &self.tenants[lane.tenant];
             let s = t.sched;
             let alloc = t.alloc;
@@ -740,7 +759,7 @@ impl SimContext<'_> {
                                 links: route.into(),
                             });
                             if self.tag_events {
-                                comm_req.push(ri);
+                                comm_req.push(seq);
                             }
                             breakdown.noc_pj +=
                                 e.bytes as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
@@ -804,7 +823,7 @@ impl SimContext<'_> {
                     links: route.into(),
                 });
                 if self.tag_events {
-                    dram_req.push(ri);
+                    dram_req.push(seq);
                 }
                 breakdown.dram_pj += fetch as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
                 breakdown.noc_pj += fetch as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
@@ -831,7 +850,7 @@ impl SimContext<'_> {
                     links: route.into(),
                 });
                 if self.tag_events {
-                    dram_req.push(ri);
+                    dram_req.push(seq);
                 }
                 breakdown.dram_pj += fresh as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
                 breakdown.noc_pj += fresh as f64 * 8.0 * topo.route_noc_pj_per_bit(route);
@@ -902,7 +921,7 @@ impl SimContext<'_> {
                     links: route.into(),
                 });
                 if self.tag_events {
-                    dram_req.push(ri);
+                    dram_req.push(seq);
                 }
                 breakdown.dram_pj +=
                     cn.output_bytes as f64 * 8.0 * topo.route_dram_pj_per_bit(route);
@@ -918,7 +937,7 @@ impl SimContext<'_> {
             lane.last_end = lane.last_end.max(end);
             cns.push(placed);
             if self.tag_events {
-                cn_req.push(ri);
+                cn_req.push(seq);
             }
 
             // 7) release successors within this lane (data/order
@@ -955,15 +974,36 @@ impl SimContext<'_> {
         }
 
         *decisions += 1;
+        ri
     }
 
     /// Aggregate a drained [`SimState`] into the outcome.
     pub(crate) fn finish(&self, st: SimState) -> SimOutcome {
-        let topo = &self.arch.topology;
+        debug_assert!(
+            st.lanes.iter().all(|l| l.sched.iter().all(|s| s.is_some())),
+            "all CNs of all requests scheduled"
+        );
+        let request_end = st.lanes.iter().map(|l| l.last_end).collect();
+        let multi_lane = st.lanes.len() > 1;
+        self.assemble_outcome(st, request_end, multi_lane)
+    }
+
+    /// Shared back half of [`finish`](Self::finish): aggregate metrics
+    /// over a drained state whose per-request completion frontier is
+    /// supplied by the caller.  The streaming driver
+    /// (`super::streaming`) retires lanes as their requests complete, so
+    /// it collects `request_end` at retirement time (in seq order) and
+    /// passes `multi_lane` for the whole run rather than for the final
+    /// (possibly shrunken) live set.
+    pub(crate) fn assemble_outcome(
+        &self,
+        st: SimState,
+        request_end: Vec<u64>,
+        multi_lane: bool,
+    ) -> SimOutcome {
         let SimState {
             core_busy,
             links,
-            lanes,
             trace,
             cns,
             cn_req,
@@ -977,11 +1017,6 @@ impl SimContext<'_> {
             ..
         } = st;
 
-        debug_assert!(
-            lanes.iter().all(|l| l.sched.iter().all(|s| s.is_some())),
-            "all CNs of all requests scheduled"
-        );
-
         // --- aggregate metrics ------------------------------------------
         let compute_end = cns.iter().map(|s| s.end).max().unwrap_or(0);
         let io_end = drams
@@ -991,20 +1026,7 @@ impl SimContext<'_> {
             .max()
             .unwrap_or(0);
         let latency = compute_end.max(io_end);
-
-        let dense_busy: u64 = self
-            .arch
-            .cores
-            .iter()
-            .filter(|c| !c.is_simd())
-            .map(|c| core_busy[c.id.0])
-            .sum();
-        let dense_count = self.arch.cores.iter().filter(|c| !c.is_simd()).count() as f64;
-        let avg_core_util = if latency > 0 {
-            dense_busy as f64 / (latency as f64 * dense_count)
-        } else {
-            0.0
-        };
+        let avg_core_util = self.core_utilization(&core_busy, latency);
 
         // Peak memory + activation-spill accounting in a single
         // time-ordered pass (post-scheduling, like the paper's
@@ -1013,17 +1035,7 @@ impl SimContext<'_> {
         // charge store+reload energy and extend the makespan to the
         // DRAM-port-bound floor.
         let (peak, spill_bytes) = peak_and_spill(&trace, self.arch);
-        let mut latency = latency;
-        if spill_bytes > 0.5 {
-            breakdown.dram_pj += 2.0 * spill_bytes * 8.0 * topo.spill_dram_pj_per_bit();
-            let extra_port = (2.0 * spill_bytes * 8.0 / topo.dram_bw_bits() as f64) as u64;
-            let dram_busy = topo
-                .dram_channel_links()
-                .map(|l| links.busy_cycles(l))
-                .max()
-                .unwrap_or(0);
-            latency = latency.max(dram_busy + extra_port);
-        }
+        let latency = self.apply_spill(&links, &mut breakdown, latency, spill_bytes);
 
         let metrics = ScheduleMetrics {
             latency_cc: latency,
@@ -1042,26 +1054,16 @@ impl SimContext<'_> {
         let weight_fetches: u64 = weights.iter().map(|w| w.fetches).sum();
         let weight_evictions: u64 = weights.iter().map(|w| w.evictions).sum();
 
-        // Flight-recorder aggregation: one block per *run*, never per
-        // step, so the engine hot loop carries no instrumentation.
-        if crate::obs::enabled() {
-            use crate::obs::Counter as C;
-            crate::obs::count(C::SimRuns, 1);
-            crate::obs::count(C::SimDecisions, decisions as u64);
-            if lanes.len() > 1 {
-                crate::obs::count(C::ArbitrationPicks, decisions as u64);
-            }
-            crate::obs::count(C::CommTransfers, comms.len() as u64);
-            crate::obs::count(C::DramTransfers, drams.len() as u64);
-            crate::obs::count(C::WeightFetches, weight_fetches);
-            crate::obs::count(C::WeightEvictions, weight_evictions);
-            if latency > 0 {
-                for s in &link_stats {
-                    let pct = s.busy_cycles.saturating_mul(100) / latency;
-                    crate::obs::hist(crate::obs::Hist::LinkBusyPct, pct);
-                }
-            }
-        }
+        self.count_run_obs(
+            decisions,
+            multi_lane,
+            comms.len() as u64,
+            drams.len() as u64,
+            weight_fetches,
+            weight_evictions,
+            latency,
+            &link_stats,
+        );
 
         SimOutcome {
             cns,
@@ -1074,11 +1076,90 @@ impl SimContext<'_> {
             metrics,
             memtrace: trace,
             core_busy,
-            request_end: lanes.iter().map(|l| l.last_end).collect(),
+            request_end,
             partitions: 1,
             weight_fetches,
             weight_evictions,
             fallback: None,
+        }
+    }
+
+    /// Dense-core utilization over a makespan (shared by the eager and
+    /// streaming aggregation paths).
+    pub(crate) fn core_utilization(&self, core_busy: &[u64], latency: u64) -> f64 {
+        let dense_busy: u64 = self
+            .arch
+            .cores
+            .iter()
+            .filter(|c| !c.is_simd())
+            .map(|c| core_busy[c.id.0])
+            .sum();
+        let dense_count = self.arch.cores.iter().filter(|c| !c.is_simd()).count() as f64;
+        if latency > 0 {
+            dense_busy as f64 / (latency as f64 * dense_count)
+        } else {
+            0.0
+        }
+    }
+
+    /// Charge the DRAM round trip for activation bytes spilled above
+    /// the pooled SRAM capacity and extend the makespan to the
+    /// DRAM-port-bound floor.  Identical formula for the eager and
+    /// streaming paths (the streaming driver folds its memory trace
+    /// incrementally but reaches the same `spill_bytes`).
+    pub(crate) fn apply_spill(
+        &self,
+        links: &LinkSet,
+        breakdown: &mut EnergyBreakdown,
+        latency: u64,
+        spill_bytes: f64,
+    ) -> u64 {
+        let topo = &self.arch.topology;
+        let mut latency = latency;
+        if spill_bytes > 0.5 {
+            breakdown.dram_pj += 2.0 * spill_bytes * 8.0 * topo.spill_dram_pj_per_bit();
+            let extra_port = (2.0 * spill_bytes * 8.0 / topo.dram_bw_bits() as f64) as u64;
+            let dram_busy = topo
+                .dram_channel_links()
+                .map(|l| links.busy_cycles(l))
+                .max()
+                .unwrap_or(0);
+            latency = latency.max(dram_busy + extra_port);
+        }
+        latency
+    }
+
+    /// Flight-recorder aggregation: one block per *run*, never per
+    /// step, so the engine hot loop carries no instrumentation.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn count_run_obs(
+        &self,
+        decisions: usize,
+        multi_lane: bool,
+        comms: u64,
+        drams: u64,
+        weight_fetches: u64,
+        weight_evictions: u64,
+        latency: u64,
+        link_stats: &[LinkStat],
+    ) {
+        if crate::obs::enabled() {
+            use crate::obs::Counter as C;
+            crate::obs::count(C::SimRuns, 1);
+            crate::obs::count(C::SimDecisions, decisions as u64);
+            if multi_lane {
+                crate::obs::count(C::ArbitrationPicks, decisions as u64);
+            }
+            crate::obs::count(C::CommTransfers, comms);
+            crate::obs::count(C::DramTransfers, drams);
+            crate::obs::count(C::WeightFetches, weight_fetches);
+            crate::obs::count(C::WeightEvictions, weight_evictions);
+            if latency > 0 {
+                for s in link_stats {
+                    let pct = s.busy_cycles.saturating_mul(100) / latency;
+                    crate::obs::hist(crate::obs::Hist::LinkBusyPct, pct);
+                }
+            }
         }
     }
 }
@@ -1095,7 +1176,7 @@ impl SimContext<'_> {
 /// fetch are watched in the pool's per-core bucket so residency
 /// changes re-key them.  `vis` is the insertion-visibility index
 /// reported to the recorder (see [`SimRecorder`]).
-fn add_candidate<R: SimRecorder>(
+pub(super) fn add_candidate<R: SimRecorder>(
     t: &SimTenant,
     lane: &mut Lane,
     id: CnId,

@@ -1,0 +1,435 @@
+//! Bounded-memory streaming serving driver.
+//!
+//! The eager scenario path expands every request of a run into a lane
+//! up front ([`SimContext::init`]) and keeps every completed request's
+//! events alive until [`SimContext::finish`] — O(total requests) live
+//! state, which caps how long a serving trace can be simulated.  This
+//! module drives the *same* [`SimContext::step`] loop over a lazily
+//! admitted live set instead:
+//!
+//! - **admission** — requests are pulled from an arrival stream (in
+//!   `(release, seq)` order) and injected as lanes only once the
+//!   simulation actually needs them.  Injection is *mandatory* for
+//!   every pending request with `release <= H`, where
+//!   `H = max(now, m)` and `m` is the minimum effective readiness over
+//!   the live pools: any lane still un-injected has
+//!   `eff >= release > H >= m`, so it can neither lower the step's
+//!   `min_eff` (the virtual-clock update) nor be eligible for
+//!   preference (`release > now`) nor win a pick — the eager run would
+//!   make the identical decision without it.  On top of the mandatory
+//!   set, lanes are admitted early while the live set is smaller than
+//!   the configured window (early admission is always exact: the eager
+//!   path holds every lane from t = 0);
+//! - **retirement** — a lane whose pool empties has scheduled its last
+//!   CN (an incomplete lane always holds a ready candidate: the
+//!   topologically first unscheduled CN has all predecessors scheduled,
+//!   so it was pooled when its last predecessor completed).  The lane is
+//!   `swap_remove`d, its completion folded through a caller callback,
+//!   and its pool/schedule/event buffers freed — live state is
+//!   O(live lanes x model size).  Arbitration keys and event tags read
+//!   the lane-carried `seq`, so positions may shuffle freely;
+//! - **event folding** (untraced mode) — completed CN/comm/DRAM events
+//!   reduce to running end-time maxima and counts, and the memory
+//!   trace is folded through an incremental [`peak_and_spill`]
+//!   accumulator for every event older than the *frontier*
+//!   `F = min(live releases, next arrival)`: every future event is
+//!   pushed while scheduling a lane released at or after `F`, so the
+//!   chunk of events below `F` is final.  Chunk-wise stable sorting +
+//!   accumulation reproduces the eager path's single global pass
+//!   bit-for-bit (strict time partition between chunks).
+//!
+//! With an unbounded window over a finite trace the driver injects
+//! everything up front in seq order and replays the eager path's
+//! decisions exactly — pinned by `rust/tests/streaming_equivalence.rs`
+//! across every canned scenario and arbitration.
+//!
+//! One subtlety: [`SimContext::step`] skips the virtual-clock update on
+//! its single-lane fast path.  The eager multi-request run never has a
+//! single lane (lanes are never removed), but the streamed live set can
+//! shrink to one — the driver re-applies `now = max(now, min_eff)`
+//! before such steps so the clock evolves identically.
+//!
+//! [`peak_and_spill`]: super::engine::peak_and_spill
+
+use crate::cn::CnId;
+
+use super::memtrace::MemTrace;
+use super::pool::CandidatePool;
+use super::sim::{add_candidate, FallbackReason, Lane, NoRecord, SimContext, SimOutcome, SimState};
+use super::LinkStat;
+use crate::cost::ScheduleMetrics;
+
+/// One request pulled from the arrival stream, in `(release, seq)`
+/// order (the order [`Scenario::requests`] materializes).
+///
+/// [`Scenario::requests`]: crate::scenario::Scenario::requests
+#[derive(Debug, Clone, Copy)]
+pub struct StreamRequest {
+    pub seq: usize,
+    pub tenant: usize,
+    pub release: u64,
+    pub deadline_abs: Option<u64>,
+}
+
+/// A retired request's folded outcome, delivered to the caller the
+/// moment its last CN completes.
+#[derive(Debug, Clone, Copy)]
+pub struct RetiredRequest {
+    pub seq: usize,
+    pub tenant: usize,
+    pub release: u64,
+    pub deadline_abs: Option<u64>,
+    /// Completion frontier: last CN end or off-chip store end.
+    pub completion: u64,
+}
+
+/// Streaming-driver knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamConfig {
+    /// Eager admission window: target size of the live set beyond the
+    /// mandatory injections.  `0` admits only when the exactness rule
+    /// demands it; `usize::MAX` reproduces the eager path's
+    /// inject-everything-up-front behavior.  Every value yields the
+    /// identical schedule — the window trades peak memory against
+    /// admission-scan frequency.
+    pub window: usize,
+    /// Keep full event logs (CNs, comms, DRAMs, tags, memory trace) for
+    /// a complete [`SimOutcome`] — O(total requests) memory, used by
+    /// the equivalence tests and event-consuming reports.  When false,
+    /// events fold into running aggregates and the outcome carries
+    /// metrics/link stats only.
+    pub retain_events: bool,
+}
+
+impl Default for StreamConfig {
+    fn default() -> StreamConfig {
+        StreamConfig { window: 64, retain_events: false }
+    }
+}
+
+/// Live-set accounting of one streamed run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LiveStats {
+    /// Requests injected as lanes.
+    pub admitted: u64,
+    /// Requests retired (equals `admitted` after a complete run).
+    pub retired: u64,
+    /// High-water mark of the live lane set — the memory bound: peak
+    /// live state is `live_peak` x model size, independent of trace
+    /// length.
+    pub live_peak: usize,
+    /// High-water mark of the *arrived* live subset (release within the
+    /// admission horizon) — the genuinely in-flight requests; the
+    /// remainder of `live_peak` is eager admission, bounded by the
+    /// window.
+    pub inflight_peak: usize,
+}
+
+/// Fold decisions between admission scans in untraced mode: the scan is
+/// O(live set), so batching keeps the amortized driver overhead small,
+/// while event buffers stay bounded by the work a batch can generate.
+const FOLD_EVERY: usize = 4096;
+
+/// Drive a full streamed simulation: `stream` yields requests in
+/// `(release, seq)` order, `on_retire` observes every completion.
+/// `ctx.requests` must be empty (lanes come from the stream); with
+/// `retain_events` the returned outcome is bit-identical to the eager
+/// path's [`SimContext::simulate`] over the expanded request list.
+pub(crate) fn simulate_stream<I, F>(
+    ctx: &SimContext,
+    stream: I,
+    cfg: &StreamConfig,
+    mut on_retire: F,
+) -> (SimOutcome, LiveStats)
+where
+    I: Iterator<Item = StreamRequest>,
+    F: FnMut(RetiredRequest),
+{
+    assert!(ctx.requests.is_empty(), "streamed lanes come from the stream");
+    let _span = crate::obs::span_here("sim", "simulate_stream");
+    let mut rec = NoRecord;
+    let mut st = ctx.init(&mut rec);
+    let mut stream = stream.peekable();
+    let mut stats = LiveStats::default();
+    let mut fold = FoldAcc::new(ctx);
+    // retained mode: per-request completion frontier, collected at
+    // retirement and re-sorted into seq order for the outcome
+    let mut ends: Vec<(usize, u64)> = Vec::new();
+    let mut multi = false;
+
+    loop {
+        // --- admission ------------------------------------------------
+        while let Some(next) = stream.peek().copied() {
+            let m = live_min_eff(&mut st);
+            let mandatory = match m {
+                // empty live set: forced, else no progress is possible
+                None => true,
+                Some(m) => next.release <= st.now.max(m),
+            };
+            if !mandatory {
+                if st.lanes.len() >= cfg.window {
+                    break;
+                }
+                // eager admissions never grow the live set past the
+                // window; only mandatory (truly in-flight) ones can
+                debug_assert!(st.lanes.len() < cfg.window);
+            }
+            stream.next();
+            inject(ctx, &mut st, next, &mut rec);
+            stats.admitted += 1;
+        }
+        stats.live_peak = stats.live_peak.max(st.lanes.len());
+        if st.lanes.is_empty() {
+            debug_assert!(stream.peek().is_none(), "admission always makes progress");
+            break;
+        }
+        multi = multi || stats.admitted > 1 || stream.peek().is_some();
+
+        // --- one decision ----------------------------------------------
+        // The eager multi-request run always has >= 2 lanes, so step's
+        // single-lane fast path never fires there; re-apply the
+        // virtual-clock update it would skip when our live set is 1.
+        if multi && st.lanes.len() == 1 {
+            if let Some(eff) = st.lanes[0].pool.peek_min_eff() {
+                st.now = st.now.max(eff);
+            }
+        }
+        let arrived = st.lanes.iter().filter(|l| l.release <= st.now).count();
+        stats.inflight_peak = stats.inflight_peak.max(arrived);
+        let picked = ctx.step(&mut st, &mut rec);
+
+        // --- retirement ------------------------------------------------
+        if st.lanes[picked].pool.len() == 0 {
+            let lane = st.lanes.swap_remove(picked);
+            debug_assert!(
+                lane.sched.iter().all(|s| s.is_some()),
+                "empty pool implies a completed request"
+            );
+            stats.retired += 1;
+            if cfg.retain_events {
+                ends.push((lane.seq, lane.last_end));
+            }
+            on_retire(RetiredRequest {
+                seq: lane.seq,
+                tenant: lane.tenant,
+                release: lane.release,
+                deadline_abs: lane.deadline_abs,
+                completion: lane.last_end,
+            });
+        }
+
+        // --- bounded event folding -------------------------------------
+        if !cfg.retain_events && st.decisions() % FOLD_EVERY == 0 {
+            let frontier = fold_frontier(&st, stream.peek());
+            fold.fold(&mut st, frontier);
+        }
+    }
+
+    if crate::obs::enabled() {
+        use crate::obs::Counter as C;
+        crate::obs::count(C::ServingAdmitted, stats.admitted);
+        crate::obs::count(C::ServingRetired, stats.retired);
+        crate::obs::count_max(C::ServingLivePeak, stats.live_peak as u64);
+    }
+
+    let mut out = if cfg.retain_events {
+        ends.sort_unstable();
+        debug_assert!(ends.iter().enumerate().all(|(i, &(s, _))| i == s), "one end per seq");
+        let request_end = ends.into_iter().map(|(_, e)| e).collect();
+        ctx.assemble_outcome(st, request_end, multi)
+    } else {
+        fold.fold(&mut st, u64::MAX);
+        assemble_folded(ctx, st, &fold, multi)
+    };
+    // The streaming driver is sequential by construction; stamp the
+    // same fallback reason the eager path reports for `sim_threads ==
+    // 1` so retained-mode outcomes stay field-for-field identical.
+    out.fallback = Some(FallbackReason::SequentialConfig);
+    (out, stats)
+}
+
+/// Minimum effective readiness over the live pools (the `m` of the
+/// admission rule); `None` when the live set is empty.
+fn live_min_eff(st: &mut SimState) -> Option<u64> {
+    st.lanes
+        .iter_mut()
+        .filter_map(|l| l.pool.peek_min_eff())
+        .min()
+}
+
+/// Inject one request as a fresh lane: identical construction to
+/// [`SimContext::init`], but against the *current* weight residency —
+/// which is exactly what the eager path's insert-then-rekey history
+/// produces for this lane's candidates at this point in the run.
+fn inject(ctx: &SimContext, st: &mut SimState, r: StreamRequest, rec: &mut NoRecord) {
+    let t = &ctx.tenants[r.tenant];
+    let s = t.sched;
+    let n = s.graph.len();
+    let mut lane = Lane {
+        tenant: r.tenant,
+        seq: r.seq,
+        release: r.release,
+        deadline_abs: r.deadline_abs,
+        sched: vec![None; n],
+        pending: (0..n)
+            .map(|i| s.graph.pred_count(CnId(i)) + s.gate_preds[i].len())
+            .collect(),
+        pool: CandidatePool::new(n, ctx.arch.cores.len()),
+        last_end: r.release,
+    };
+    let vis = st.decisions();
+    for i in 0..n {
+        if lane.pending[i] == 0 {
+            add_candidate(t, &mut lane, CnId(i), &st.weights, ctx.wgt_fetch_g, rec, vis);
+        }
+    }
+    st.lanes.push(lane);
+}
+
+/// Every future event's timestamp is at least the release of the lane
+/// whose scheduling pushes it, so events strictly below the minimum
+/// release over the live set and the next pending arrival are final.
+fn fold_frontier(st: &SimState, next: Option<&StreamRequest>) -> u64 {
+    st.lanes
+        .iter()
+        .map(|l| l.release)
+        .chain(next.map(|r| r.release))
+        .min()
+        .unwrap_or(u64::MAX)
+}
+
+/// Running aggregates replacing the retained event logs in untraced
+/// mode — everything [`SimContext::assemble_outcome`] derives from the
+/// full vectors, accumulated incrementally.
+struct FoldAcc {
+    compute_end: u64,
+    io_end: u64,
+    n_comms: u64,
+    n_drams: u64,
+    /// Pooled activation capacity (the `cap` of `peak_and_spill`).
+    cap: f64,
+    occ: f64,
+    peak: f64,
+    spilled: f64,
+}
+
+impl FoldAcc {
+    fn new(ctx: &SimContext) -> FoldAcc {
+        FoldAcc {
+            compute_end: 0,
+            io_end: 0,
+            n_comms: 0,
+            n_drams: 0,
+            cap: ctx.arch.cores.iter().map(|c| c.act_mem_bytes as f64).sum(),
+            occ: 0.0,
+            peak: 0.0,
+            spilled: 0.0,
+        }
+    }
+
+    /// Drain the state's event buffers into the aggregates.  CN, comm
+    /// and DRAM events only contribute end-time maxima and counts, so
+    /// they drain completely; memory-trace events participate in a
+    /// time-ordered accumulation, so only the final chunk strictly
+    /// below `frontier` folds (see the module docs for why chunk-wise
+    /// folding is bit-exact).
+    fn fold(&mut self, st: &mut SimState, frontier: u64) {
+        for c in st.cns.drain(..) {
+            self.compute_end = self.compute_end.max(c.end);
+        }
+        for c in st.comms.drain(..) {
+            self.io_end = self.io_end.max(c.end);
+            self.n_comms += 1;
+        }
+        for d in st.drams.drain(..) {
+            self.io_end = self.io_end.max(d.end);
+            self.n_drams += 1;
+        }
+        self.fold_trace(&mut st.trace, frontier);
+    }
+
+    /// Fold the memory-trace chunk strictly below `frontier`, exactly
+    /// mirroring `peak_and_spill`'s stable `(time, delta)` sort and
+    /// accumulation order.
+    fn fold_trace(&mut self, trace: &mut MemTrace, frontier: u64) {
+        let events = std::mem::take(&mut trace.events);
+        let mut chunk: Vec<(u64, f64)> = Vec::new();
+        for e in events {
+            if e.time < frontier {
+                chunk.push((e.time, e.delta));
+            } else {
+                trace.events.push(e);
+            }
+        }
+        chunk.sort_by(|a, b| {
+            a.0.cmp(&b.0).then(a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
+        });
+        for &(_, d) in &chunk {
+            if d > 0.0 {
+                let over = (self.occ + d - self.cap).max(0.0) - (self.occ - self.cap).max(0.0);
+                self.spilled += over;
+            }
+            self.occ += d;
+            self.peak = self.peak.max(self.occ);
+        }
+    }
+}
+
+/// The untraced-mode counterpart of [`SimContext::assemble_outcome`]:
+/// metrics from the folded aggregates, empty event logs.
+fn assemble_folded(
+    ctx: &SimContext,
+    st: SimState,
+    fold: &FoldAcc,
+    multi_lane: bool,
+) -> SimOutcome {
+    let SimState { core_busy, links, mut breakdown, weights, decisions, .. } = st;
+
+    let latency = fold.compute_end.max(fold.io_end);
+    let avg_core_util = ctx.core_utilization(&core_busy, latency);
+    let latency = ctx.apply_spill(&links, &mut breakdown, latency, fold.spilled);
+
+    let metrics = ScheduleMetrics {
+        latency_cc: latency,
+        energy_pj: breakdown.total(),
+        peak_mem_bytes: fold.peak,
+        breakdown,
+        avg_core_util,
+    };
+    let link_stats: Vec<LinkStat> = links
+        .stats()
+        .into_iter()
+        .map(|(busy_cycles, bytes_moved)| LinkStat { busy_cycles, bytes_moved })
+        .collect();
+    let weight_fetches: u64 = weights.iter().map(|w| w.fetches).sum();
+    let weight_evictions: u64 = weights.iter().map(|w| w.evictions).sum();
+
+    ctx.count_run_obs(
+        decisions,
+        multi_lane,
+        fold.n_comms,
+        fold.n_drams,
+        weight_fetches,
+        weight_evictions,
+        latency,
+        &link_stats,
+    );
+
+    SimOutcome {
+        cns: Vec::new(),
+        cn_req: Vec::new(),
+        comms: Vec::new(),
+        comm_req: Vec::new(),
+        drams: Vec::new(),
+        dram_req: Vec::new(),
+        link_stats,
+        metrics,
+        memtrace: MemTrace::new(),
+        core_busy,
+        request_end: Vec::new(),
+        partitions: 1,
+        weight_fetches,
+        weight_evictions,
+        fallback: None,
+    }
+}

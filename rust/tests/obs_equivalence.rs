@@ -27,7 +27,8 @@ use stream::depgraph::generate;
 use stream::mapping::CostModel;
 use stream::obs::{self, chrome, Counter};
 use stream::scenario::{
-    Arbitration, Arrival, FallbackReason, Scenario, ScenarioResult, ScenarioSim, Tenant,
+    Arbitration, Arrival, FallbackReason, Scenario, ScenarioResult, ScenarioSim, StreamingOpts,
+    Tenant,
 };
 use stream::scheduler::{SchedulePriority, ScheduleResult, Scheduler};
 use stream::util::XorShift64;
@@ -241,6 +242,41 @@ fn traced_scenario_runs_are_bit_identical_across_threads() {
         assert_eq!(seq.weight_evictions, par.weight_evictions, "{arb}: weight evictions");
         assert_eq!(seq.makespan_cc, par.makespan_cc, "{arb}: makespan");
     }
+}
+
+#[test]
+fn traced_streamed_runs_are_bit_identical_and_tick_serving_counters() {
+    let _g = LOCK.lock().unwrap();
+    let (scenario, arch, genomes) = chiplet_burst();
+    let sim = ScenarioSim::new(&scenario, &arch).unwrap();
+    let allocs: Vec<Vec<stream::arch::CoreId>> = sim
+        .builds()
+        .iter()
+        .zip(&genomes)
+        .map(|(b, g)| allocation_from_genome(&b.workload, &arch, g))
+        .collect();
+    let runner = sim.runner();
+    let opts = StreamingOpts { window: 2, retain_events: true, ..Default::default() };
+
+    let cold = with_recorder(false, || runner.run_streamed(&allocs, Arbitration::Edf, &opts));
+    assert!(cold.report.is_none(), "untraced streamed run must not attach a report");
+    let hot = with_recorder(true, || runner.run_streamed(&allocs, Arbitration::Edf, &opts));
+    assert_scenarios_identical("streamed traced", &cold, &hot);
+
+    let rep = hot.report.as_ref().expect("traced streamed run attaches a report");
+    let s = rep.serving.as_ref().expect("streamed report carries a serving summary");
+    let n = scenario.n_requests() as u64;
+    assert_eq!(s.admitted, n);
+    assert_eq!(s.retired, n);
+    assert!(s.live_peak >= 1 && s.live_peak as u64 <= n, "live peak {}", s.live_peak);
+    // the serving counters ticked and survived into the snapshot
+    assert_eq!(obs::counter(Counter::ServingAdmitted), n);
+    assert_eq!(obs::counter(Counter::ServingRetired), n);
+    assert_eq!(obs::counter(Counter::ServingLivePeak), s.live_peak as u64);
+    assert!(
+        rep.counters.iter().any(|&(k, v)| k == "serving.admitted" && v == n),
+        "report counter snapshot carries serving.admitted"
+    );
 }
 
 #[test]
