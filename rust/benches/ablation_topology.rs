@@ -28,13 +28,7 @@ fn best_edp(arch: &Accelerator, gran: CnGranularity, ga: GaParams) -> ScheduleRe
     );
     let mut r = s.run().unwrap();
     let best = (0..r.points.len())
-        .min_by(|&a, &b| {
-            r.points[a]
-                .result
-                .edp()
-                .partial_cmp(&r.points[b].result.edp())
-                .unwrap_or(std::cmp::Ordering::Equal)
-        })
+        .min_by(|&a, &b| r.points[a].result.edp().total_cmp(&r.points[b].result.edp()))
         .expect("nonempty front");
     r.points.swap_remove(best).result
 }

@@ -1,0 +1,664 @@
+//! Fuse/cut decisions as a genome axis: co-search of fusion
+//! granularity and core allocation.
+//!
+//! The classic Step 4 GA ([`Ga`](super::Ga)) searches core allocations
+//! under ONE fixed CN graph — the fusion regime (all-fuse `Lines(k)` or
+//! all-cut `LayerByLayer`) is picked up front and never revisited.
+//! [`FusionGa`] widens the genome with one **fuse gene per workload
+//! edge** (decoded by [`FusePattern`]): the same (μ+λ) NSGA-II driver
+//! ([`evolve`](fn@super::evolve)) now explores mixed patterns where
+//! some boundaries stream line-by-line and others fully materialize,
+//! jointly with the per-layer core assignment.
+//!
+//! Genome layout: `[n_dense core genes][n_edges fuse genes]`.  The
+//! core prefix expands exactly like the classic genome
+//! ([`allocation_from_genome`]); the fuse suffix decodes per
+//! [`FusePattern::decode`].  In **pinned** mode
+//! ([`FusionGa::pinned`]) the suffix is fixed and the genome carries
+//! only the core prefix — a pinned all-fuse (or all-cut) `FusionGa`
+//! consumes the RNG exactly like a plain [`Ga`](super::Ga) over the
+//! corresponding uniform graph, so the regime searches inside
+//! [`Stream::run_fuse_search`](crate::pipeline::Stream::run_fuse_search)
+//! reproduce the classic trajectories bit-for-bit
+//! (`rust/tests/fusion_axis_equivalence.rs`).
+//!
+//! Every distinct decoded pattern needs its own Step 1–3
+//! precomputation (CN split, dependency graph, cost model); a
+//! [`PatternCache`] memoizes those behind
+//! [`FusePattern::fingerprint`], shared across the regime and
+//! co-search phases.  Schedule metrics stay in the ordinary
+//! [`ScheduleCache`] / [`DeltaCache`], keyed with
+//! [`compose_fp`]`(topology_fp, pattern_fp)` in place of the raw
+//! topology fingerprint — identical allocations under different
+//! patterns can never alias, and delta resumes are restricted to
+//! same-pattern parents.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+
+use super::allocation_from_genome;
+use super::evolve::{evolve, EvoProblem};
+use super::ga::{GaParams, Objective};
+use super::nsga2::dominates;
+use crate::arch::{Accelerator, CoreId};
+use crate::cn::fuse::{n_fuse_genes, FusePattern};
+use crate::cost::{compose_fp, DeltaCache, ScheduleCache, ScheduleMetrics};
+use crate::depgraph::{generate_fused, CnGraph};
+use crate::mapping::CostModel;
+use crate::scheduler::{SchedulePriority, Scheduler};
+use crate::util::{parallel_map_with, thread_count};
+use crate::workload::WorkloadGraph;
+
+/// Options of the fusion co-search (carried on
+/// [`StreamOpts::fuse`](crate::pipeline::StreamOpts)).
+#[derive(Debug, Clone)]
+pub struct FuseSearchOpts {
+    /// Candidate line granularities for fused segments.  A fuse gene
+    /// value `m > 0` fuses its edge at `menu[m - 1]` lines; a 1-entry
+    /// menu degenerates to one fuse/cut bit per edge.
+    pub menu: Vec<usize>,
+}
+
+impl Default for FuseSearchOpts {
+    fn default() -> Self {
+        FuseSearchOpts { menu: vec![4] }
+    }
+}
+
+/// The Step 1–3 precomputation of one decoded fuse pattern: the
+/// mixed-granularity CN graph and its cost model.  Schedulers borrow
+/// from this, so it is shared behind an [`Arc`] via [`PatternCache`].
+pub struct PatternCtx {
+    pub pattern: FusePattern,
+    pub graph: CnGraph,
+    pub costs: CostModel,
+}
+
+impl PatternCtx {
+    /// Run Steps 1–3 under `pattern` (split → fused dependency graph →
+    /// cost model), in the exact order of the classic pipeline.
+    pub fn build(
+        workload: &WorkloadGraph,
+        arch: &Accelerator,
+        pattern: FusePattern,
+    ) -> PatternCtx {
+        let cns = pattern.build_cns(workload);
+        let graph = generate_fused(workload, cns, &pattern);
+        let costs = CostModel::build(workload, &graph.cns, arch);
+        PatternCtx { pattern, graph, costs }
+    }
+}
+
+/// Thread-safe memo of [`PatternCtx`]s keyed by
+/// [`FusePattern::fingerprint`] — gene vectors decoding to the same
+/// pattern share one precomputed context.  Two workers racing on the
+/// same missing fingerprint may both build it; the build is
+/// deterministic, so whichever insert lands first wins and the race is
+/// benign (the loser's context is dropped).
+#[derive(Default)]
+pub struct PatternCache {
+    map: Mutex<HashMap<u64, Arc<PatternCtx>>>,
+}
+
+impl PatternCache {
+    pub fn new() -> PatternCache {
+        PatternCache::default()
+    }
+
+    /// The context for `pattern`, building it (outside the lock) on
+    /// first sight.
+    pub fn get_or_build(
+        &self,
+        workload: &WorkloadGraph,
+        arch: &Accelerator,
+        pattern: FusePattern,
+    ) -> Arc<PatternCtx> {
+        let fp = pattern.fingerprint();
+        if let Some(ctx) = self.map.lock().unwrap().get(&fp) {
+            return Arc::clone(ctx);
+        }
+        let built = Arc::new(PatternCtx::build(workload, arch, pattern));
+        let mut map = self.map.lock().unwrap();
+        Arc::clone(map.entry(fp).or_insert(built))
+    }
+
+    /// Number of distinct patterns precomputed so far.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One Pareto-front member of the co-search.
+#[derive(Debug, Clone)]
+pub struct FusionResult {
+    /// The full genome (`[core genes][fuse genes]`; pinned mode: core
+    /// genes only).
+    pub genome: Vec<u16>,
+    pub core_genes: Vec<u16>,
+    pub fuse_genes: Vec<u16>,
+    pub allocation: Vec<CoreId>,
+    pub metrics: ScheduleMetrics,
+    /// Fingerprint of the decoded pattern (the [`PatternCache`] /
+    /// schedule-cache key component).
+    pub pattern_fp: u64,
+    pub n_cut: usize,
+    pub n_fused: usize,
+}
+
+/// The co-search engine: the classic GA's evaluation machinery
+/// (dedup, memoization, delta evaluation, optional lower-bound prune,
+/// parallel dispatch) generalized to genomes that select their own CN
+/// graph.  See the [module docs](self).
+pub struct FusionGa<'a> {
+    pub workload: &'a WorkloadGraph,
+    pub arch: &'a Accelerator,
+    pub priority: SchedulePriority,
+    pub objective: Objective,
+    pub params: GaParams,
+    /// Line-granularity menu for fused segments.
+    pub menu: Vec<usize>,
+    /// `Some(fuse_genes)`: regime mode — the fuse suffix is fixed and
+    /// the genome carries only the core prefix.
+    pinned: Option<Vec<u16>>,
+    /// Extra seed genomes tried before the heuristics (free mode only;
+    /// `run_fuse_search` injects the regime winners here, which is what
+    /// makes the co-search front weakly dominate both regimes by
+    /// construction).
+    extra_seeds: Vec<Vec<u16>>,
+    patterns: &'a PatternCache,
+    cache: &'a ScheduleCache,
+    delta: Option<DeltaCache>,
+    pruned: HashSet<Vec<u16>>,
+    evaluated_metrics: HashMap<Vec<u16>, ScheduleMetrics>,
+}
+
+impl<'a> FusionGa<'a> {
+    /// A free co-search over `[core genes][fuse genes]` genomes.  Both
+    /// caches are caller-owned so the regime and co-search phases of
+    /// one `run_fuse_search` share every precomputation; the same
+    /// `STREAM_INCREMENTAL` override as [`Ga::new`](super::Ga::new)
+    /// applies.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        workload: &'a WorkloadGraph,
+        arch: &'a Accelerator,
+        priority: SchedulePriority,
+        objective: Objective,
+        params: GaParams,
+        menu: Vec<usize>,
+        patterns: &'a PatternCache,
+        cache: &'a ScheduleCache,
+    ) -> FusionGa<'a> {
+        assert!(!menu.is_empty(), "fuse menu must list at least one line granularity");
+        let mut params = params;
+        if let Ok(v) = std::env::var("STREAM_INCREMENTAL") {
+            match v.as_str() {
+                "0" | "off" => (params.incremental, params.lb_prune) = (false, false),
+                "1" | "delta" => (params.incremental, params.lb_prune) = (true, false),
+                "2" | "prune" => (params.incremental, params.lb_prune) = (true, true),
+                _ => {}
+            }
+        }
+        let delta = params
+            .incremental
+            .then(|| DeltaCache::new((2 * params.population).max(64)));
+        FusionGa {
+            workload,
+            arch,
+            priority,
+            objective,
+            params,
+            menu,
+            pinned: None,
+            extra_seeds: Vec::new(),
+            patterns,
+            cache,
+            delta,
+            pruned: HashSet::new(),
+            evaluated_metrics: HashMap::new(),
+        }
+    }
+
+    /// Pin the fuse suffix: the genome degenerates to the core prefix
+    /// and the search explores allocations under one fixed pattern —
+    /// genome shape, seed heuristics and RNG consumption all match the
+    /// plain [`Ga`](super::Ga), so a pinned regime run reproduces the
+    /// classic trajectory.
+    pub fn pinned(mut self, fuse_genes: Vec<u16>) -> FusionGa<'a> {
+        assert_eq!(
+            fuse_genes.len(),
+            n_fuse_genes(self.workload),
+            "one pinned fuse gene per workload edge"
+        );
+        self.pinned = Some(fuse_genes);
+        self
+    }
+
+    /// Seed genomes tried before the built-in heuristics (free mode).
+    pub fn with_extra_seeds(mut self, seeds: Vec<Vec<u16>>) -> FusionGa<'a> {
+        self.extra_seeds = seeds;
+        self
+    }
+
+    pub fn delta_cache(&self) -> Option<&DeltaCache> {
+        self.delta.as_ref()
+    }
+
+    pub fn pruned_count(&self) -> usize {
+        self.pruned.len()
+    }
+
+    fn n_dense(&self) -> usize {
+        self.workload.dense_layers().len()
+    }
+
+    /// Decode the fuse suffix of a genome (or the pinned suffix).
+    fn pattern_of(&self, genome: &[u16]) -> FusePattern {
+        let fuse = match &self.pinned {
+            Some(p) => p.as_slice(),
+            None => &genome[self.n_dense()..],
+        };
+        FusePattern::decode(self.workload, self.arch, &self.menu, fuse)
+    }
+
+    /// The classic heuristic core seeds (ping-pong, each core alone,
+    /// per-layer greedy minimum-EDP), with the greedy pass costed
+    /// under `greedy_ctx` — gene for gene what
+    /// [`Ga::seed_genomes`](super::Ga) produces over the same graph.
+    fn core_seed_genomes(&self, greedy_ctx: &PatternCtx) -> Vec<Vec<u16>> {
+        let n = self.n_dense();
+        let dense_cores = self.arch.dense_cores();
+        let k = dense_cores.len();
+        let mut seeds: Vec<Vec<u16>> = Vec::new();
+        seeds.push((0..n).map(|i| (i % k) as u16).collect());
+        for c in 0..k {
+            seeds.push(vec![c as u16; n]);
+        }
+        let mut greedy = Vec::with_capacity(n);
+        for lid in self.workload.dense_layers() {
+            let cn = &greedy_ctx.graph.cns.layer_cns(lid)[0];
+            let best = (0..k)
+                .min_by(|&a, &b| {
+                    let ca = greedy_ctx.costs.cn_cost(cn, dense_cores[a]).edp();
+                    let cb = greedy_ctx.costs.cn_cost(cn, dense_cores[b]).edp();
+                    ca.total_cmp(&cb)
+                })
+                .unwrap_or(0);
+            greedy.push(best as u16);
+        }
+        seeds.push(greedy);
+        seeds
+    }
+
+    /// Fitness of every genome (order-preserving), mirroring
+    /// `Ga::eval_metrics` phase for phase; the only structural
+    /// difference is that each job resolves its own [`PatternCtx`] and
+    /// keys the caches with the composed fingerprint.
+    fn eval_metrics(
+        &mut self,
+        genomes: &[Vec<u16>],
+        parents: &[Option<usize>],
+    ) -> Vec<ScheduleMetrics> {
+        let n_dense = self.n_dense();
+        let archive: Vec<Vec<f64>> = if self.params.lb_prune {
+            self.evaluated_metrics
+                .iter()
+                .filter(|(g, _)| !self.pruned.contains(g.as_slice()))
+                .map(|(_, m)| self.objective.values(m))
+                .collect()
+        } else {
+            Vec::new()
+        };
+
+        // serial pre-pass: dedup + pattern-context resolution, in
+        // first-seen order (the PatternCache build order is therefore
+        // deterministic); lineage hints are dropped unless parent and
+        // child decode to the SAME pattern — a cross-pattern resume
+        // would replay a schedule of a different CN graph
+        let mut ctxs: Vec<Arc<PatternCtx>> = Vec::new();
+        let mut ctx_of_fp: HashMap<u64, usize> = HashMap::new();
+        let mut candidates: Vec<(Vec<u16>, usize, Option<Vec<u16>>)> = Vec::new();
+        let mut seen: HashSet<&[u16]> = HashSet::new();
+        for (i, g) in genomes.iter().enumerate() {
+            if self.evaluated_metrics.contains_key(g) || !seen.insert(g.as_slice()) {
+                continue;
+            }
+            let pattern = self.pattern_of(g);
+            let fp = pattern.fingerprint();
+            let ci = *ctx_of_fp.entry(fp).or_insert_with(|| {
+                ctxs.push(self.patterns.get_or_build(self.workload, self.arch, pattern));
+                ctxs.len() - 1
+            });
+            let parent = parents.get(i).copied().flatten().and_then(|a| {
+                let pg = &genomes[a];
+                if self.pinned.is_none() && self.pattern_of(pg).fingerprint() != fp {
+                    return None;
+                }
+                Some(pg[..n_dense.min(pg.len())].to_vec())
+            });
+            candidates.push((g.clone(), ci, parent));
+        }
+
+        let scheds: Vec<Scheduler> = ctxs
+            .iter()
+            .map(|c| Scheduler::new(self.workload, &c.graph, &c.costs, self.arch))
+            .collect();
+        let topo_fp = self.arch.topology.fingerprint();
+        let comp_fps: Vec<u64> =
+            ctxs.iter().map(|c| compose_fp(topo_fp, c.pattern.fingerprint())).collect();
+        let everies: Vec<usize> = scheds.iter().map(|s| s.snap_interval()).collect();
+
+        // serial lower-bound prune against the pre-batch archive of
+        // exactly evaluated points (same semantics as the classic GA)
+        let jobs: Vec<(Vec<u16>, usize, Option<Vec<u16>>)> = if self.params.lb_prune {
+            let mut jobs = Vec::with_capacity(candidates.len());
+            for (g, ci, parent) in candidates {
+                let alloc = allocation_from_genome(self.workload, self.arch, &g[..n_dense]);
+                let lb = scheds[ci].lower_bounds(&alloc);
+                let lbv = self.objective.values(&lb);
+                if archive.iter().any(|a| dominates(a, &lbv)) {
+                    self.pruned.insert(g.clone());
+                    self.evaluated_metrics.insert(g, lb);
+                    crate::obs::count(crate::obs::Counter::GaPruned, 1);
+                    continue;
+                }
+                jobs.push((g, ci, parent));
+            }
+            jobs
+        } else {
+            candidates
+        };
+
+        let (workload, arch, priority) = (self.workload, self.arch, self.priority);
+        let cache = self.cache;
+        let delta = self.delta.as_ref();
+        let threads = thread_count(self.params.threads);
+        crate::obs::count(crate::obs::Counter::GaEvals, jobs.len() as u64);
+        let results: Vec<(Vec<u16>, ScheduleMetrics)> = parallel_map_with(
+            jobs,
+            |(g, ci, parent)| {
+                let sched = &scheds[ci];
+                let fp = comp_fps[ci];
+                let alloc = allocation_from_genome(workload, arch, &g[..n_dense]);
+                let m = match (cache.get(&alloc, priority, fp), delta) {
+                    (Some(m), _) => m,
+                    (None, None) => {
+                        let m = sched.run(&alloc, priority).metrics;
+                        cache.insert(&alloc, priority, fp, m);
+                        m
+                    }
+                    (None, Some(dc)) => {
+                        let warm = parent.as_ref().and_then(|pc| {
+                            let pa = allocation_from_genome(workload, arch, pc);
+                            let e = dc.get(&pa, priority, fp)?;
+                            let d = e.segments.divergence(&e.allocation, &alloc);
+                            sched.run_resumed_traced(&alloc, priority, &e.segments, d, everies[ci])
+                        });
+                        let (res, segs) = warm.unwrap_or_else(|| {
+                            sched.run_traced(&alloc, priority, everies[ci])
+                        });
+                        dc.insert(&alloc, priority, fp, res.metrics, segs);
+                        cache.insert(&alloc, priority, fp, res.metrics);
+                        res.metrics
+                    }
+                };
+                (g, m)
+            },
+            threads,
+        );
+        for (g, m) in results {
+            self.evaluated_metrics.entry(g).or_insert(m);
+        }
+        genomes.iter().map(|g| self.evaluated_metrics[g]).collect()
+    }
+
+    fn result_for(&self, genome: Vec<u16>, metrics: ScheduleMetrics) -> FusionResult {
+        let n_dense = self.n_dense();
+        let core_genes = genome[..n_dense].to_vec();
+        let fuse_genes = match &self.pinned {
+            Some(p) => p.clone(),
+            None => genome[n_dense..].to_vec(),
+        };
+        let pattern = FusePattern::decode(self.workload, self.arch, &self.menu, &fuse_genes);
+        FusionResult {
+            allocation: allocation_from_genome(self.workload, self.arch, &core_genes),
+            pattern_fp: pattern.fingerprint(),
+            n_cut: pattern.n_cut(),
+            n_fused: pattern.n_fused(),
+            genome,
+            core_genes,
+            fuse_genes,
+            metrics,
+        }
+    }
+
+    /// Run the co-search on the shared evolutionary driver; returns the
+    /// final Pareto front (deduplicated), best EDP first.
+    pub fn run(&mut self) -> Vec<FusionResult> {
+        let params = self.params;
+        let outcome = evolve(self, &params);
+        let mut results: Vec<FusionResult> = outcome
+            .front
+            .iter()
+            .map(|&i| {
+                let genome = outcome.evaluated[i].0.clone();
+                let metrics = self.evaluated_metrics[&genome];
+                self.result_for(genome, metrics)
+            })
+            .collect();
+        results.sort_by(|a, b| a.metrics.edp().total_cmp(&b.metrics.edp()));
+        results
+    }
+}
+
+impl EvoProblem for FusionGa<'_> {
+    fn genome_len(&self) -> usize {
+        match self.pinned {
+            Some(_) => self.n_dense(),
+            None => self.n_dense() + n_fuse_genes(self.workload),
+        }
+    }
+
+    /// Exclusive gene bound.  Pinned mode matches the plain GA exactly
+    /// (RNG equivalence); free mode widens it so random fuse genes span
+    /// every cut/fuse choice — both gene kinds decode modulo their own
+    /// range, so any value stays valid.
+    fn n_cores(&self) -> usize {
+        let k = self.arch.dense_cores().len();
+        match self.pinned {
+            Some(_) => k,
+            None => k.max(self.menu.len() + 1),
+        }
+    }
+
+    /// Pinned mode: exactly the classic heuristics (costed under the
+    /// pinned pattern).  Free mode: the caller's extra seeds first —
+    /// `run_fuse_search` injects both regime winners here — then each
+    /// heuristic core prefix paired with the all-fuse and the all-cut
+    /// suffix, so both regimes are reachable from generation zero.
+    fn seed_genomes(&self) -> Vec<Vec<u16>> {
+        match &self.pinned {
+            Some(genes) => {
+                let ctx = self.patterns.get_or_build(
+                    self.workload,
+                    self.arch,
+                    FusePattern::decode(self.workload, self.arch, &self.menu, genes),
+                );
+                self.core_seed_genomes(&ctx)
+            }
+            None => {
+                let all_fuse = FusePattern::genes_all_fuse(self.workload);
+                let all_cut = FusePattern::genes_all_cut(self.workload);
+                let ctx = self.patterns.get_or_build(
+                    self.workload,
+                    self.arch,
+                    FusePattern::decode(self.workload, self.arch, &self.menu, &all_fuse),
+                );
+                let mut seeds = self.extra_seeds.clone();
+                for core in self.core_seed_genomes(&ctx) {
+                    for suffix in [&all_fuse, &all_cut] {
+                        let mut g = core.clone();
+                        g.extend_from_slice(suffix);
+                        seeds.push(g);
+                    }
+                }
+                seeds
+            }
+        }
+    }
+
+    fn evaluate(&mut self, genomes: &[Vec<u16>]) -> Vec<Vec<f64>> {
+        self.evaluate_with_parents(genomes, &vec![None; genomes.len()])
+    }
+
+    fn evaluate_with_parents(
+        &mut self,
+        genomes: &[Vec<u16>],
+        parents: &[Option<usize>],
+    ) -> Vec<Vec<f64>> {
+        let metrics = self.eval_metrics(genomes, parents);
+        metrics.iter().map(|m| self.objective.values(m)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::workload::models::{tiny_branchy, tiny_segment};
+
+    fn small_params() -> GaParams {
+        GaParams { population: 8, generations: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn pattern_cache_shares_contexts() {
+        let w = tiny_segment();
+        let arch = presets::hetero_quad();
+        let cache = PatternCache::new();
+        let p1 = FusePattern::decode(&w, &arch, &[4], &FusePattern::genes_all_fuse(&w));
+        let p2 = FusePattern::decode(&w, &arch, &[4], &FusePattern::genes_all_fuse(&w));
+        let c1 = cache.get_or_build(&w, &arch, p1);
+        let c2 = cache.get_or_build(&w, &arch, p2);
+        assert!(Arc::ptr_eq(&c1, &c2), "same pattern must share one context");
+        assert_eq!(cache.len(), 1);
+        let cut = FusePattern::decode(&w, &arch, &[4], &FusePattern::genes_all_cut(&w));
+        let c3 = cache.get_or_build(&w, &arch, cut);
+        assert!(!Arc::ptr_eq(&c1, &c3));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn co_search_runs_and_reports_patterns() {
+        let w = tiny_branchy();
+        let arch = presets::hetero_quad();
+        let patterns = PatternCache::new();
+        let cache = ScheduleCache::new();
+        let mut ga = FusionGa::new(
+            &w,
+            &arch,
+            SchedulePriority::Latency,
+            Objective::Edp,
+            small_params(),
+            vec![4],
+            &patterns,
+            &cache,
+        );
+        let front = ga.run();
+        assert!(!front.is_empty());
+        let n_edges = n_fuse_genes(&w);
+        for r in &front {
+            assert_eq!(r.core_genes.len(), w.dense_layers().len());
+            assert_eq!(r.fuse_genes.len(), n_edges);
+            assert_eq!(r.n_cut + r.n_fused, n_edges);
+            assert_eq!(r.allocation.len(), w.len());
+        }
+        assert!(patterns.len() >= 2, "seeds alone visit both regimes");
+    }
+
+    #[test]
+    fn co_search_deterministic_for_seed() {
+        let w = tiny_branchy();
+        let arch = presets::hetero_quad();
+        let run = || {
+            let patterns = PatternCache::new();
+            let cache = ScheduleCache::new();
+            let mut ga = FusionGa::new(
+                &w,
+                &arch,
+                SchedulePriority::Latency,
+                Objective::Edp,
+                small_params(),
+                vec![4],
+                &patterns,
+                &cache,
+            );
+            ga.run()
+                .iter()
+                .map(|r| (r.genome.clone(), r.metrics.edp().to_bits()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn pinned_mode_searches_core_genes_only() {
+        let w = tiny_segment();
+        let arch = presets::hetero_quad();
+        let patterns = PatternCache::new();
+        let cache = ScheduleCache::new();
+        let mut ga = FusionGa::new(
+            &w,
+            &arch,
+            SchedulePriority::Latency,
+            Objective::Edp,
+            small_params(),
+            vec![4],
+            &patterns,
+            &cache,
+        )
+        .pinned(FusePattern::genes_all_cut(&w));
+        let front = ga.run();
+        assert!(!front.is_empty());
+        for r in &front {
+            assert_eq!(r.genome.len(), w.dense_layers().len());
+            assert_eq!(r.fuse_genes, FusePattern::genes_all_cut(&w));
+            assert_eq!(r.n_fused, 0);
+        }
+    }
+
+    #[test]
+    fn extra_seeds_are_recoverable_from_the_record() {
+        // inject a specific genome as a seed; it must be evaluated and
+        // resolvable in the run's record with exact metrics
+        let w = tiny_segment();
+        let arch = presets::hetero_quad();
+        let patterns = PatternCache::new();
+        let cache = ScheduleCache::new();
+        let n_edges = n_fuse_genes(&w);
+        let seed: Vec<u16> = vec![0u16; w.dense_layers().len()]
+            .into_iter()
+            .chain(vec![1u16; n_edges])
+            .collect();
+        let mut ga = FusionGa::new(
+            &w,
+            &arch,
+            SchedulePriority::Latency,
+            Objective::Edp,
+            small_params(),
+            vec![4],
+            &patterns,
+            &cache,
+        )
+        .with_extra_seeds(vec![seed.clone()]);
+        ga.run();
+        assert!(
+            ga.evaluated_metrics.contains_key(&seed),
+            "injected seed must be evaluated in generation zero"
+        );
+    }
+}

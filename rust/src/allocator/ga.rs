@@ -393,12 +393,9 @@ impl<'a> Ga<'a> {
                 }
             })
             .collect();
-        results.sort_by(|a, b| {
-            a.metrics
-                .edp()
-                .partial_cmp(&b.metrics.edp())
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
+        // total_cmp: a NaN EDP would make the partial_cmp-or-Equal
+        // comparator inconsistent and the sort order arbitrary
+        results.sort_by(|a, b| a.metrics.edp().total_cmp(&b.metrics.edp()));
         results
     }
 }
@@ -440,7 +437,7 @@ impl EvoProblem for Ga<'_> {
                 .min_by(|&a, &b| {
                     let ca = self.scheduler.costs.cn_cost(cn, dense_cores[a]).edp();
                     let cb = self.scheduler.costs.cn_cost(cn, dense_cores[b]).edp();
-                    ca.partial_cmp(&cb).unwrap_or(std::cmp::Ordering::Equal)
+                    ca.total_cmp(&cb)
                 })
                 .unwrap_or(0);
             greedy.push(best as u16);
@@ -497,7 +494,7 @@ pub fn manual_allocation(
                     .max_by(|&&a, &&b| {
                         let ua = costs.cn_cost(cn, a).spatial_util;
                         let ub = costs.cn_cost(cn, b).spatial_util;
-                        ua.partial_cmp(&ub).unwrap_or(std::cmp::Ordering::Equal)
+                        ua.total_cmp(&ub)
                     })
                     .unwrap()
             } else {

@@ -17,15 +17,21 @@
 //!
 //! The evolutionary loop itself — population seeding, variation,
 //! NSGA-II survival, early stopping, final front extraction — lives
-//! once in [`evolve`](fn@evolve): [`Ga`] and the scenario-level
-//! [`ScenarioGa`](crate::scenario::ScenarioGa) are both thin
-//! [`EvoProblem`] instantiations of that shared driver.
+//! once in [`evolve`](fn@evolve): [`Ga`], the scenario-level
+//! [`ScenarioGa`](crate::scenario::ScenarioGa) and the fusion
+//! co-search [`FusionGa`] are all thin [`EvoProblem`] instantiations
+//! of that shared driver.  [`FusionGa`] extends the genome with one
+//! fuse/cut gene per workload edge (`[core genes][fuse genes]`),
+//! co-optimizing fusion granularity with the allocation; with its
+//! fuse genes pinned it reproduces the plain [`Ga`] bit for bit.
 
 mod evolve;
+mod fusion;
 mod ga;
 mod nsga2;
 
 pub use evolve::{evolve, EvoProblem, EvolveOutcome};
+pub use fusion::{FuseSearchOpts, FusionGa, FusionResult, PatternCache, PatternCtx};
 pub use ga::{manual_allocation, Ga, GaParams, GaResult, Objective};
 pub use nsga2::{crowding_distance, dominates, fast_non_dominated_sort, select_survivors};
 

@@ -66,9 +66,10 @@ pub fn select_survivors(points: &[Vec<f64>], pop_size: usize) -> Vec<usize> {
         } else {
             let d = crowding_distance(front, points);
             let mut order: Vec<usize> = (0..front.len()).collect();
-            order.sort_by(|&x, &y| {
-                d[y].partial_cmp(&d[x]).unwrap_or(std::cmp::Ordering::Equal)
-            });
+            // total_cmp keeps the comparator a total order even if a
+            // distance were NaN (partial_cmp-or-Equal is inconsistent
+            // there, which is UB-adjacent for sort_by)
+            order.sort_by(|&x, &y| d[y].total_cmp(&d[x]));
             for &w in order.iter().take(pop_size - survivors.len()) {
                 survivors.push(front[w]);
             }
@@ -92,11 +93,7 @@ pub fn crowding_distance(front: &[usize], points: &[Vec<f64>]) -> Vec<f64> {
     let n_obj = points[front[0]].len();
     for obj in 0..n_obj {
         let mut order: Vec<usize> = (0..m).collect();
-        order.sort_by(|&a, &b| {
-            points[front[a]][obj]
-                .partial_cmp(&points[front[b]][obj])
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
+        order.sort_by(|&a, &b| points[front[a]][obj].total_cmp(&points[front[b]][obj]));
         let lo = points[front[order[0]]][obj];
         let hi = points[front[order[m - 1]]][obj];
         dist[order[0]] = f64::INFINITY;

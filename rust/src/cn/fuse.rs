@@ -1,0 +1,394 @@
+//! Fuse/cut patterns: per-edge fusion decisions as a search axis.
+//!
+//! The classic pipeline picks ONE [`CnGranularity`] for the whole
+//! workload — every boundary is either fused (line-granular CNs
+//! streaming into each other) or cut (layer-by-layer materialization).
+//! A [`FusePattern`] makes that decision **per workload edge**: each
+//! producer→consumer edge carries a gene that either fuses the boundary
+//! at a line granularity drawn from a small menu, or cuts it, forcing
+//! the producer's output to fully materialize before the consumer
+//! starts (the LayerByLayer dependency shape on exactly that boundary).
+//!
+//! Decoding is where the mixed-granularity CN split comes from:
+//!
+//! - fused edges connect layers into **segments** (connected components
+//!   over the fused edges); every layer of a segment splits at
+//!   `Lines(k)` where `k` is the minimum menu granularity among the
+//!   segment's fused edges (the finest streaming consumer wins),
+//!   clamped by [`CnGranularity::for_arch`];
+//! - a layer none of whose incident edges fuse stays a single CN
+//!   (`LayerByLayer`) — its inputs and outputs all materialize;
+//! - a layer with no workload edges at all splits at the base menu
+//!   granularity, so the **all-fuse** gene vector decodes to exactly
+//!   the uniform `Lines(menu[0])` pipeline for *every* workload, and
+//!   the **all-cut** vector to the uniform `LayerByLayer` pipeline for
+//!   every workload whose layers each touch at least one edge (all zoo
+//!   models) — the two bit-identity anchors of
+//!   `rust/tests/fusion_axis_equivalence.rs`.
+//!
+//! The gene encoding is `v % (menu.len() + 1)`: 0 cuts the edge,
+//! `m > 0` fuses it at `menu[m - 1]` lines.  With the default
+//! single-entry menu that degenerates to one fuse/cut bit per edge; a
+//! longer menu adds the per-segment line-granularity axis on the same
+//! genes.
+//!
+//! [`FusePattern::fingerprint`] hashes the decoded decisions (not the
+//! raw genes), so gene vectors that decode to the same pattern share
+//! one precomputed graph/cost/scheduler context — and distinct
+//! patterns can never alias a [`ScheduleCache`](crate::cost::ScheduleCache)
+//! slot once the fingerprint is mixed into the cache key
+//! ([`crate::cost::compose_fp`]).
+
+use super::{split_workload_mixed, CnGranularity, CnSet};
+use crate::arch::Accelerator;
+use crate::workload::{LayerId, WorkloadGraph};
+
+/// One workload edge in canonical order: consumers in `LayerId` order,
+/// each consumer's predecessors in declaration order.  The fuse-gene
+/// vector is indexed in exactly this order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FuseEdge {
+    pub producer: LayerId,
+    pub consumer: LayerId,
+    /// Index of `producer` within `consumer.predecessors`.
+    pub pred_idx: usize,
+}
+
+/// The workload's edges in canonical (consumer, pred_idx) order.
+pub fn workload_edges(workload: &WorkloadGraph) -> Vec<FuseEdge> {
+    let mut edges = Vec::new();
+    for consumer in workload.layers() {
+        for (pred_idx, &producer) in consumer.predecessors.iter().enumerate() {
+            edges.push(FuseEdge { producer, consumer: consumer.id, pred_idx });
+        }
+    }
+    edges
+}
+
+/// Number of fuse genes a co-search genome carries for this workload
+/// (one per workload edge).
+pub fn n_fuse_genes(workload: &WorkloadGraph) -> usize {
+    workload.layers().iter().map(|l| l.predecessors.len()).sum()
+}
+
+/// A decoded fuse/cut pattern: per-edge decisions plus the per-layer
+/// granularities they imply.  Construct via [`FusePattern::decode`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FusePattern {
+    /// The workload's edges, canonical order (see [`workload_edges`]).
+    pub edges: Vec<FuseEdge>,
+    /// Per-edge decision, parallel to `edges`: `Some(lines)` = fused at
+    /// that (pre-clamp) granularity, `None` = cut.
+    pub decisions: Vec<Option<usize>>,
+    /// Decoded per-layer CN granularity (arch-clamped), indexed by
+    /// `LayerId`.
+    pub per_layer: Vec<CnGranularity>,
+    /// First edge index of each consumer layer (edge index =
+    /// `edge_offset[consumer] + pred_idx`).
+    edge_offset: Vec<usize>,
+}
+
+impl FusePattern {
+    /// Decode a fuse-gene vector (one gene per workload edge, canonical
+    /// order) into a pattern.  `menu` lists the candidate line
+    /// granularities for fused segments; gene value `v` means cut when
+    /// `v % (menu.len() + 1) == 0`, else fuse at
+    /// `menu[v % (menu.len() + 1) - 1]` lines.
+    ///
+    /// # Panics
+    ///
+    /// If `menu` is empty or contains a zero, or `genes` has the wrong
+    /// length.
+    pub fn decode(
+        workload: &WorkloadGraph,
+        arch: &Accelerator,
+        menu: &[usize],
+        genes: &[u16],
+    ) -> FusePattern {
+        assert!(!menu.is_empty(), "fuse menu must list at least one line granularity");
+        assert!(menu.iter().all(|&l| l > 0), "fuse menu granularities must be positive");
+        let edges = workload_edges(workload);
+        assert_eq!(
+            genes.len(),
+            edges.len(),
+            "one fuse gene per workload edge ({} edges)",
+            edges.len()
+        );
+        let n_choices = menu.len() as u16 + 1;
+        let decisions: Vec<Option<usize>> = genes
+            .iter()
+            .map(|&v| {
+                let d = (v % n_choices) as usize;
+                if d == 0 {
+                    None
+                } else {
+                    Some(menu[d - 1])
+                }
+            })
+            .collect();
+
+        // Segments: connected components of layers over the fused
+        // edges (union-find), carrying the minimum fused granularity.
+        let n = workload.len();
+        let mut parent: Vec<usize> = (0..n).collect();
+        fn find(parent: &mut [usize], mut x: usize) -> usize {
+            while parent[x] != x {
+                parent[x] = parent[parent[x]];
+                x = parent[x];
+            }
+            x
+        }
+        for (e, d) in edges.iter().zip(&decisions) {
+            if d.is_some() {
+                let (a, b) = (find(&mut parent, e.producer.0), find(&mut parent, e.consumer.0));
+                if a != b {
+                    parent[a.max(b)] = a.min(b);
+                }
+            }
+        }
+        let mut seg_lines: Vec<Option<usize>> = vec![None; n];
+        for (e, d) in edges.iter().zip(&decisions) {
+            if let Some(lines) = d {
+                let root = find(&mut parent, e.producer.0);
+                let cur = seg_lines[root].get_or_insert(*lines);
+                *cur = (*cur).min(*lines);
+            }
+        }
+
+        // Whether a layer touches any workload edge at all.
+        let mut has_edge = vec![false; n];
+        for e in &edges {
+            has_edge[e.producer.0] = true;
+            has_edge[e.consumer.0] = true;
+        }
+
+        let per_layer: Vec<CnGranularity> = (0..n)
+            .map(|l| {
+                let root = find(&mut parent, l);
+                match seg_lines[root] {
+                    Some(lines) => CnGranularity::Lines(lines).for_arch(arch),
+                    // isolated layers (no edges) take the base menu
+                    // granularity so all-fuse stays exactly the uniform
+                    // Lines(menu[0]) pipeline; layers whose every
+                    // incident edge is cut materialize fully
+                    None if !has_edge[l] => CnGranularity::Lines(menu[0]).for_arch(arch),
+                    None => CnGranularity::LayerByLayer,
+                }
+            })
+            .collect();
+
+        let mut edge_offset = Vec::with_capacity(n);
+        let mut acc = 0usize;
+        for layer in workload.layers() {
+            edge_offset.push(acc);
+            acc += layer.predecessors.len();
+        }
+
+        FusePattern { edges, decisions, per_layer, edge_offset }
+    }
+
+    /// The gene vector that fuses every edge at the base menu
+    /// granularity (decodes to the uniform `Lines(menu[0])` pipeline).
+    pub fn genes_all_fuse(workload: &WorkloadGraph) -> Vec<u16> {
+        vec![1; n_fuse_genes(workload)]
+    }
+
+    /// The gene vector that cuts every edge (decodes to the uniform
+    /// `LayerByLayer` pipeline when every layer touches an edge).
+    pub fn genes_all_cut(workload: &WorkloadGraph) -> Vec<u16> {
+        vec![0; n_fuse_genes(workload)]
+    }
+
+    /// Fused line granularity of the (consumer, pred_idx) edge, or
+    /// `None` if that boundary is cut.
+    pub fn fused_lines(&self, consumer: LayerId, pred_idx: usize) -> Option<usize> {
+        self.decisions[self.edge_offset[consumer.0] + pred_idx]
+    }
+
+    /// Whether the (consumer, pred_idx) boundary is cut (producer
+    /// output fully materializes).
+    pub fn is_cut(&self, consumer: LayerId, pred_idx: usize) -> bool {
+        self.fused_lines(consumer, pred_idx).is_none()
+    }
+
+    /// Decoded granularity of one layer.
+    pub fn layer_granularity(&self, layer: LayerId) -> CnGranularity {
+        self.per_layer[layer.0]
+    }
+
+    /// Number of cut edges.
+    pub fn n_cut(&self) -> usize {
+        self.decisions.iter().filter(|d| d.is_none()).count()
+    }
+
+    /// Number of fused edges.
+    pub fn n_fused(&self) -> usize {
+        self.decisions.len() - self.n_cut()
+    }
+
+    /// Whether any edge is fused and any is cut (a genuinely mixed
+    /// pattern, neither regime).
+    pub fn is_mixed(&self) -> bool {
+        self.n_cut() > 0 && self.n_fused() > 0
+    }
+
+    /// 64-bit FNV-1a over the *decoded* pattern (per-layer
+    /// granularities + per-edge decisions).  Gene vectors decoding to
+    /// the same pattern share a fingerprint; distinct patterns get
+    /// distinct cache keys once this is mixed into the schedule-cache
+    /// key via [`crate::cost::compose_fp`].
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        for g in &self.per_layer {
+            eat(match g {
+                CnGranularity::LayerByLayer => 0,
+                CnGranularity::Lines(l) => *l as u64,
+            });
+        }
+        for d in &self.decisions {
+            eat(match d {
+                None => 0,
+                Some(l) => *l as u64,
+            });
+        }
+        h
+    }
+
+    /// Step 1 under this pattern: the mixed-granularity CN set.
+    pub fn build_cns(&self, workload: &WorkloadGraph) -> CnSet {
+        split_workload_mixed(workload, &self.per_layer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::cn::split_workload;
+    use crate::workload::models::{tiny_branchy, tiny_segment};
+
+    #[test]
+    fn edge_order_is_consumer_then_pred() {
+        let w = tiny_branchy();
+        let edges = workload_edges(&w);
+        assert_eq!(edges.len(), n_fuse_genes(&w));
+        // consumers appear in LayerId order, pred_idx resets per consumer
+        for pair in edges.windows(2) {
+            assert!(
+                pair[0].consumer < pair[1].consumer
+                    || (pair[0].consumer == pair[1].consumer
+                        && pair[0].pred_idx + 1 == pair[1].pred_idx)
+            );
+        }
+    }
+
+    #[test]
+    fn all_fuse_decodes_to_uniform_lines() {
+        let w = tiny_segment();
+        let arch = presets::hetero_quad();
+        let p = FusePattern::decode(&w, &arch, &[4], &FusePattern::genes_all_fuse(&w));
+        let want = CnGranularity::Lines(4).for_arch(&arch);
+        for l in w.layers() {
+            assert_eq!(p.layer_granularity(l.id), want);
+        }
+        assert_eq!(p.n_cut(), 0);
+        assert!(!p.is_mixed());
+        // the CN set is the uniform split, node for node
+        let mixed = p.build_cns(&w);
+        let uniform = split_workload(&w, CnGranularity::Lines(4).for_arch(&arch));
+        assert_eq!(mixed.len(), uniform.len());
+        for (a, b) in mixed.nodes.iter().zip(&uniform.nodes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.out_rect, b.out_rect);
+            assert_eq!(a.macs, b.macs);
+        }
+    }
+
+    #[test]
+    fn all_cut_decodes_to_layer_by_layer() {
+        let w = tiny_branchy();
+        let arch = presets::hetero_quad();
+        let p = FusePattern::decode(&w, &arch, &[4], &FusePattern::genes_all_cut(&w));
+        for l in w.layers() {
+            assert_eq!(p.layer_granularity(l.id), CnGranularity::LayerByLayer);
+        }
+        assert_eq!(p.n_fused(), 0);
+        let cns = p.build_cns(&w);
+        assert_eq!(cns.len(), w.len(), "one CN per layer");
+    }
+
+    #[test]
+    fn mixed_pattern_splits_only_fused_segments() {
+        // tiny_segment is a chain (+ one residual add): cut the first
+        // edge, fuse the rest -> layer 0 materializes alone, the tail
+        // segment splits at Lines
+        let w = tiny_segment();
+        let arch = presets::hetero_quad();
+        let mut genes = FusePattern::genes_all_fuse(&w);
+        genes[0] = 0; // cut the first canonical edge
+        let p = FusePattern::decode(&w, &arch, &[4], &genes);
+        assert!(p.is_mixed());
+        let first_consumer = p.edges[0].consumer;
+        let first_producer = p.edges[0].producer;
+        assert!(p.is_cut(first_consumer, p.edges[0].pred_idx));
+        // the producer of the cut edge has no other fused edge in this
+        // chain start, so it materializes
+        assert_eq!(p.layer_granularity(first_producer), CnGranularity::LayerByLayer);
+        // downstream layers still stream
+        let want = CnGranularity::Lines(4).for_arch(&arch);
+        assert_eq!(p.layer_granularity(first_consumer), want);
+    }
+
+    #[test]
+    fn segment_granularity_is_min_over_menu_choices() {
+        let w = tiny_segment();
+        let arch = presets::test_dual();
+        let menu = [4usize, 8];
+        // gene 1 -> menu[0] = 4, gene 2 -> menu[1] = 8: a segment mixing
+        // both fuses at the finer 4
+        let genes: Vec<u16> =
+            (0..n_fuse_genes(&w)).map(|i| if i % 2 == 0 { 1 } else { 2 }).collect();
+        let p = FusePattern::decode(&w, &arch, &menu, &genes);
+        let want = CnGranularity::Lines(4).for_arch(&arch);
+        for l in w.layers() {
+            assert_eq!(p.layer_granularity(l.id), want);
+        }
+    }
+
+    #[test]
+    fn gene_values_wrap_modulo_choices() {
+        let w = tiny_segment();
+        let arch = presets::hetero_quad();
+        let n = n_fuse_genes(&w);
+        // with a 1-entry menu, even genes cut and odd genes fuse
+        let a = FusePattern::decode(&w, &arch, &[4], &vec![2u16; n]);
+        let b = FusePattern::decode(&w, &arch, &[4], &vec![0u16; n]);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let c = FusePattern::decode(&w, &arch, &[4], &vec![3u16; n]);
+        let d = FusePattern::decode(&w, &arch, &[4], &vec![1u16; n]);
+        assert_eq!(c.fingerprint(), d.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_separates_patterns() {
+        let w = tiny_branchy();
+        let arch = presets::hetero_quad();
+        let all_fuse =
+            FusePattern::decode(&w, &arch, &[4], &FusePattern::genes_all_fuse(&w));
+        let all_cut = FusePattern::decode(&w, &arch, &[4], &FusePattern::genes_all_cut(&w));
+        assert_ne!(all_fuse.fingerprint(), all_cut.fingerprint());
+        // flipping a single edge changes the fingerprint
+        let mut genes = FusePattern::genes_all_fuse(&w);
+        genes[1] = 0;
+        let mixed = FusePattern::decode(&w, &arch, &[4], &genes);
+        assert_ne!(mixed.fingerprint(), all_fuse.fingerprint());
+        assert_ne!(mixed.fingerprint(), all_cut.fingerprint());
+    }
+}

@@ -22,10 +22,12 @@
 //! and the number of **newly generated final outputs**.
 
 mod attrs;
+pub mod fuse;
 mod split;
 
 pub use attrs::extract_attributes;
-pub use split::{split_layer, split_workload};
+pub use fuse::{n_fuse_genes, FusePattern};
+pub use split::{split_layer, split_workload, split_workload_mixed};
 
 use crate::arch::Accelerator;
 use crate::rtree::Rect;

@@ -18,6 +18,15 @@ pub fn split_layer(layer: &Layer, gran: CnGranularity) -> Vec<ComputationNode> {
     };
 
     let n_cns = layer.oy.div_ceil(lines);
+    // Exact MAC apportionment: prefix-difference of the floor shares,
+    // `macs(rows) = floor(total * rows / oy)`, so per-CN MACs telescope
+    // to exactly `layer.macs()` even when `oy` does not divide it (the
+    // remainder lands on the CNs where the fractional share crosses an
+    // integer).  When `oy | total` every share is exact and this equals
+    // the plain proportional split.
+    let total_macs = layer.macs();
+    let macs_before =
+        |rows: usize| -> u64 { (total_macs as u128 * rows as u128 / layer.oy as u128) as u64 };
     let mut cns = Vec::with_capacity(n_cns);
     for idx in 0..n_cns {
         let o_lo = idx * lines;
@@ -25,7 +34,7 @@ pub fn split_layer(layer: &Layer, gran: CnGranularity) -> Vec<ComputationNode> {
         let out_rect = Rect::chw(0..layer.k as i64, o_lo as i64..o_hi as i64, 0..layer.ox as i64);
         let in_rect = input_rect(layer, o_lo, o_hi);
 
-        let macs = layer.macs() * (o_hi - o_lo) as u64 / layer.oy as u64;
+        let macs = macs_before(o_hi) - macs_before(o_lo);
         cns.push(ComputationNode {
             id: CnId(usize::MAX), // assigned by split_workload
             layer: layer.id,
@@ -72,11 +81,22 @@ pub(crate) fn input_rect(layer: &Layer, o_lo: usize, o_hi: usize) -> Rect {
 
 /// Split every layer of the workload and extract the Fig. 5 attributes.
 pub fn split_workload(workload: &WorkloadGraph, gran: CnGranularity) -> CnSet {
+    split_workload_mixed(workload, &vec![gran; workload.len()])
+}
+
+/// Mixed-granularity split: one [`CnGranularity`] per layer (indexed by
+/// `LayerId`).  This is Step 1 under a decoded fuse/cut pattern
+/// ([`crate::cn::fuse::FusePattern`]): layers inside a fused segment
+/// split at their segment's line granularity, layers on fully cut
+/// boundaries stay single-CN.  A uniform granularity vector reproduces
+/// [`split_workload`] node for node.
+pub fn split_workload_mixed(workload: &WorkloadGraph, grans: &[CnGranularity]) -> CnSet {
+    assert_eq!(grans.len(), workload.len(), "one granularity per layer");
     let mut nodes = Vec::new();
     let mut per_layer = Vec::with_capacity(workload.len());
     for layer in workload.layers() {
         let first = nodes.len();
-        let mut cns = split_layer(layer, gran);
+        let mut cns = split_layer(layer, grans[layer.id.0]);
         // assign global ids in order
         for (i, cn) in cns.iter_mut().enumerate() {
             cn.id = CnId(first + i);
@@ -208,6 +228,83 @@ mod tests {
         assert_eq!(set.len(), 14 + 7 + 7 + 7 + 7);
         assert_eq!(set.layer_cns(LayerId(0)).len(), 14);
         assert_eq!(set.layer_cns(LayerId(4)).len(), 7);
+    }
+
+    #[test]
+    fn mac_apportionment_exact_for_every_op() {
+        use crate::workload::PoolKind;
+        // every op type, several (oy, lines) combinations incl. uneven
+        // splits: per-CN MACs must sum exactly to the layer total (the
+        // prefix-difference split never truncates a remainder away)
+        let ops = [
+            OpType::Conv,
+            OpType::DwConv,
+            OpType::Fc,
+            OpType::MatMul,
+            OpType::Pool(PoolKind::Max),
+            OpType::Add,
+            OpType::Concat,
+            OpType::LayerNorm,
+            OpType::Softmax,
+            OpType::Gelu,
+        ];
+        for op in ops {
+            for oy in [1usize, 7, 30, 56] {
+                let mut b = LayerBuilder::new("x", op).k(24).c(24).spatial(oy, 5);
+                if matches!(op, OpType::Conv | OpType::DwConv | OpType::Pool(_)) {
+                    b = b.filter(3, 3).pad(1);
+                }
+                let mut l = b.build();
+                l.id = LayerId(0);
+                for lines in [1usize, 2, 3, 4, 7, oy] {
+                    let grans = [
+                        CnGranularity::Lines(lines),
+                        CnGranularity::LayerByLayer,
+                    ];
+                    for gran in grans {
+                        let cns = split_layer(&l, gran);
+                        let total: u64 = cns.iter().map(|c| c.macs).sum();
+                        assert_eq!(
+                            total,
+                            l.macs(),
+                            "{op:?} oy={oy} lines={lines} gran={gran:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_split_uniform_matches_split_workload() {
+        let w = tiny_segment();
+        let uniform = split_workload(&w, CnGranularity::Lines(4));
+        let mixed = split_workload_mixed(&w, &vec![CnGranularity::Lines(4); w.len()]);
+        assert_eq!(uniform.len(), mixed.len());
+        for (a, b) in uniform.nodes.iter().zip(&mixed.nodes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.layer, b.layer);
+            assert_eq!(a.out_rect, b.out_rect);
+            assert_eq!(a.in_rect, b.in_rect);
+            assert_eq!(a.macs, b.macs);
+            assert_eq!(a.discard_input_bytes, b.discard_input_bytes);
+            assert_eq!(a.final_output_bytes, b.final_output_bytes);
+        }
+        assert_eq!(uniform.per_layer, mixed.per_layer);
+    }
+
+    #[test]
+    fn mixed_split_honors_per_layer_granularity() {
+        let w = tiny_segment();
+        let mut grans = vec![CnGranularity::Lines(4); w.len()];
+        grans[0] = CnGranularity::LayerByLayer; // conv7x7 materializes
+        let set = split_workload_mixed(&w, &grans);
+        assert_eq!(set.layer_cns(LayerId(0)).len(), 1);
+        assert_eq!(set.layer_cns(LayerId(1)).len(), 7); // pool 28 rows / 4
+        // ids stay globally contiguous across the mixed boundary
+        for (i, cn) in set.nodes.iter().enumerate() {
+            assert_eq!(cn.id.0, i);
+        }
     }
 
     #[test]

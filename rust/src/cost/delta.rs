@@ -12,7 +12,11 @@
 //! Entries are keyed by the same FNV-1a fingerprint as the metrics
 //! memo ([`super::memo::fingerprint`]) and verified against the full
 //! allocation on lookup, so a fingerprint collision degrades to a miss
-//! rather than a wrong resume.  The cache is bounded (LRU by insertion
+//! rather than a wrong resume.  Callers evaluating under multiple CN
+//! graphs (the fusion co-search) pass a *composed* fingerprint
+//! ([`super::memo::compose_fp`]) in place of the raw topology
+//! fingerprint, so segments snapshotted under one fuse pattern can
+//! never seed a resume under another.  The cache is bounded (LRU by insertion
 //! stamp): snapshots hold whole simulation states, so only the most
 //! recent generation's worth of parents is kept — exactly the set
 //! child genomes diverge from.

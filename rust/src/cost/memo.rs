@@ -116,6 +116,26 @@ pub fn fingerprint(
     h
 }
 
+/// Compose the interconnect-topology fingerprint with a fuse-pattern
+/// fingerprint ([`FusePattern::fingerprint`](crate::cn::FusePattern::fingerprint))
+/// into one 64-bit key component.
+///
+/// The fusion co-search evaluates the *same* per-layer allocation under
+/// *different* CN graphs (one per fuse pattern); metrics computed under
+/// one pattern must never be served for another.  Rather than widening
+/// the cache key, callers pass `compose_fp(topo_fp, pattern_fp)` where
+/// the plain pipeline passes `topo_fp` — FNV-1a over both halves, so
+/// distinct (topology, pattern) pairs land on distinct key components
+/// and the existing exact-allocation collision guard does the rest.
+pub fn compose_fp(topology_fp: u64, pattern_fp: u64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in topology_fp.to_le_bytes().into_iter().chain(pattern_fp.to_le_bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// Thread-safe memo of schedule metrics keyed by (allocation, priority,
 /// topology fingerprint).
 ///
@@ -312,6 +332,40 @@ mod tests {
         assert_eq!(computed.get(), 1);
         assert_eq!(c.hits(), 2);
         assert_eq!(c.misses(), 1);
+    }
+
+    #[test]
+    fn compose_fp_separates_patterns_and_topologies() {
+        // distinct (topology, pattern) pairs must produce distinct key
+        // components, and composing must never collide with the raw
+        // topology fingerprint of either half
+        let fps = [
+            compose_fp(T0, 1),
+            compose_fp(T0, 2),
+            compose_fp(T1, 1),
+            compose_fp(T1, 2),
+            T0,
+            T1,
+        ];
+        for i in 0..fps.len() {
+            for j in i + 1..fps.len() {
+                assert_ne!(fps[i], fps[j], "fp[{i}] == fp[{j}]");
+            }
+        }
+        // and the cache keyed on composed fingerprints keeps the
+        // patterns apart even for identical allocations
+        let c = ScheduleCache::new();
+        let a = [CoreId(0), CoreId(1)];
+        c.insert(&a, SchedulePriority::Latency, compose_fp(T0, 1), m(1));
+        c.insert(&a, SchedulePriority::Latency, compose_fp(T0, 2), m(2));
+        assert_eq!(
+            c.get(&a, SchedulePriority::Latency, compose_fp(T0, 1)).unwrap().latency_cc,
+            1
+        );
+        assert_eq!(
+            c.get(&a, SchedulePriority::Latency, compose_fp(T0, 2)).unwrap().latency_cc,
+            2
+        );
     }
 
     #[test]

@@ -30,7 +30,7 @@ pub mod delta;
 pub mod memo;
 
 pub use delta::{DeltaCache, DeltaEntry};
-pub use memo::ScheduleCache;
+pub use memo::{compose_fp, ScheduleCache};
 
 /// Energy split by destination (paper Fig. 15's stacked bars).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]

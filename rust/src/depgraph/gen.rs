@@ -1,6 +1,7 @@
 //! Dependency edge generation (R-tree fast path + pairwise oracle).
 
 use super::graph::{CnEdge, CnGraph, EdgeKind};
+use crate::cn::fuse::FusePattern;
 use crate::cn::{CnSet, ComputationNode};
 use crate::rtree::{RTree, Rect};
 use crate::workload::{Layer, OpType, WorkloadGraph};
@@ -102,6 +103,23 @@ fn chan_offsets(workload: &WorkloadGraph, consumer: &Layer) -> Vec<i64> {
 /// Generate all edges (intra-layer ordering + inter-layer data) with the
 /// R-tree algorithm and assemble the [`CnGraph`].
 pub fn generate(workload: &WorkloadGraph, cns: CnSet) -> CnGraph {
+    generate_inner(workload, cns, None)
+}
+
+/// Like [`generate`], but honoring a decoded fuse/cut pattern: fused
+/// boundaries keep the streaming R-tree edges, cut boundaries degrade
+/// to full-layer materialization ([`materialized_edges`] semantics).
+/// With a pattern that cuts nothing this is [`generate`], edge for
+/// edge.
+pub fn generate_fused(workload: &WorkloadGraph, cns: CnSet, pattern: &FusePattern) -> CnGraph {
+    generate_inner(workload, cns, Some(pattern))
+}
+
+fn generate_inner(
+    workload: &WorkloadGraph,
+    cns: CnSet,
+    pattern: Option<&FusePattern>,
+) -> CnGraph {
     let mut edges = Vec::new();
 
     // --- intra-layer ordering edges (outer-CN loop order) ---
@@ -118,18 +136,64 @@ pub fn generate(workload: &WorkloadGraph, cns: CnSet) -> CnGraph {
     }
 
     // --- inter-layer data edges, one producer-consumer layer pair at a
-    //     time (paper Fig. 6) ---
+    //     time (paper Fig. 6); cut boundaries materialize instead ---
     for consumer in workload.layers() {
         let offsets = chan_offsets(workload, consumer);
         for (pi, &prod_id) in consumer.predecessors.iter().enumerate() {
             let producer = workload.layer(prod_id);
-            inter_layer_edges_rtree(
-                workload, &cns, producer, consumer, pi, offsets[pi], &mut edges,
-            );
+            if pattern.is_some_and(|p| p.is_cut(consumer.id, pi)) {
+                materialized_edges(&cns, producer, consumer, pi, offsets[pi], &mut edges);
+            } else {
+                inter_layer_edges_rtree(
+                    workload, &cns, producer, consumer, pi, offsets[pi], &mut edges,
+                );
+            }
         }
     }
 
     CnGraph::new(cns, edges)
+}
+
+/// Edges across a **cut** fusion boundary: the producer's whole output
+/// materializes before the consumer may start, so every consumer CN
+/// depends on the producer's *last* CN (whose end time — through the
+/// intra-layer order chain — is the materialization time).  Transfer
+/// bytes still use the exclusive input windows, taken against the full
+/// producer output, so the boundary traffic partitions the producer's
+/// output exactly as on a fused boundary.  When both layers are
+/// single-CN (the all-cut pattern) this emits the identical edge the
+/// R-tree path would.
+fn materialized_edges(
+    cns: &CnSet,
+    producer: &Layer,
+    consumer: &Layer,
+    pred_idx: usize,
+    chan_offset: i64,
+    edges: &mut Vec<CnEdge>,
+) {
+    let cons_cns = cns.layer_cns(consumer.id);
+    let Some(last) = cns.layer_cns(producer.id).last() else {
+        return;
+    };
+    let prod_bounds = Rect::chw(
+        0..producer.k as i64,
+        0..producer.oy as i64,
+        0..producer.ox as i64,
+    );
+    let act_bits = producer.act_bits as u64;
+    for (ci, ccn) in cons_cns.iter().enumerate() {
+        let r = consumer_input_rect(consumer, ccn, producer, pred_idx, chan_offset);
+        if r.is_empty() {
+            continue;
+        }
+        let ex = exclusive_input_rect(consumer, cons_cns, ci, producer, pred_idx, chan_offset);
+        edges.push(CnEdge {
+            from: last.id,
+            to: ccn.id,
+            bytes: prod_bounds.intersection_volume(&ex) * act_bits / 8,
+            kind: EdgeKind::Data,
+        });
+    }
 }
 
 fn inter_layer_edges_rtree(

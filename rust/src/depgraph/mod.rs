@@ -14,5 +14,5 @@
 mod gen;
 mod graph;
 
-pub use gen::{consumer_input_rect, edge_set, generate, generate_pairwise};
+pub use gen::{consumer_input_rect, edge_set, generate, generate_fused, generate_pairwise};
 pub use graph::{CnEdge, CnGraph, EdgeKind};

@@ -63,12 +63,7 @@ fn run_arch(arch: Accelerator, heterogeneous: bool, ga_params: GaParams) -> Vec<
                 .expect("front nonempty"),
             SchedulePriority::Memory => front
                 .iter()
-                .min_by(|a, b| {
-                    a.metrics
-                        .peak_mem_bytes
-                        .partial_cmp(&b.metrics.peak_mem_bytes)
-                        .unwrap()
-                })
+                .min_by(|a, b| a.metrics.peak_mem_bytes.total_cmp(&b.metrics.peak_mem_bytes))
                 .expect("front nonempty"),
         };
         let m = cache

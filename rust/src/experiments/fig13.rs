@@ -82,6 +82,7 @@ fn best_edp(
             objective: Objective::Edp,
             ga,
             allocation: None,
+            fuse: None,
         },
     );
     let r = s.run().expect("pipeline");
@@ -104,7 +105,7 @@ pub fn exploration_sweep(cfg: &SweepConfig) -> Vec<ExplorationCell> {
             .lines
             .iter()
             .map(|&l| best_edp(&w, &a, CnGranularity::Lines(l), cfg.ga))
-            .min_by(|x, y| x.edp().partial_cmp(&y.edp()).unwrap_or(std::cmp::Ordering::Equal))
+            .min_by(|x, y| x.edp().total_cmp(&y.edp()))
             .expect("at least one granularity");
         ExplorationCell { workload: wname, arch: aname, lbl, fused }
     })

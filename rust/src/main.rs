@@ -30,7 +30,7 @@ stream — DSE of layer-fused DNNs on heterogeneous multi-core accelerators
 USAGE:
   stream list
   stream schedule -w <workload> -a <arch[@topology]> [--lines N] [--layer-by-layer]
-                  [--priority latency|memory] [--population N]
+                  [--fuse-search] [--priority latency|memory] [--population N]
                   [--generations N] [--gantt] [--json <path>] [--report]
   stream scenario -a <arch[@topology]> -s <scenario> [--arbitration fifo|priority|edf]
                   [--optimize] [--population N] [--generations N] [--gantt] [--report]
@@ -43,6 +43,11 @@ USAGE:
 
 Any architecture accepts an @topology suffix (bus|ring|mesh|crossbar)
 selecting its interconnect, e.g. hetero@mesh or hom-tpu@ring.
+`stream schedule --fuse-search` co-searches per-edge fuse/cut decisions
+alongside the core allocation (one fuse gene per workload edge; cut
+edges materialize the producer before the consumer starts, fused edges
+stream at --lines N granularity).  Without it, --lines /
+--layer-by-layer fix one uniform granularity for the whole network.
 `stream scenario` co-schedules a multi-DNN request stream (see
 `stream list` for canned scenarios); --optimize runs the scenario-level
 NSGA-II search over the (tenant, layer) -> core partitioning instead of
@@ -387,11 +392,15 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     let w = models::by_name(&workload).ok_or_else(|| anyhow!("unknown workload {workload}"))?;
     let a = presets::by_name(&arch).ok_or_else(|| anyhow!("unknown arch {arch}"))?;
 
+    let lines = args.usize_opt(&["--lines"], 4)?;
     let granularity = if args.flag("--layer-by-layer") {
         CnGranularity::LayerByLayer
     } else {
-        CnGranularity::Lines(args.usize_opt(&["--lines"], 4)?)
+        CnGranularity::Lines(lines)
     };
+    let fuse = args
+        .flag("--fuse-search")
+        .then(|| stream::pipeline::FuseSearchOpts { menu: vec![lines.max(1)] });
     let opts = StreamOpts {
         granularity,
         priority: parse_priority(
@@ -402,6 +411,7 @@ fn cmd_schedule(args: &Args) -> Result<()> {
             generations: args.usize_opt(&["--generations"], 24)?,
             ..Default::default()
         },
+        fuse,
         ..Default::default()
     };
 
@@ -427,6 +437,12 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         "allocation: {:?}",
         best.allocation.iter().map(|c| c.0).collect::<Vec<_>>()
     );
+    if let Some(f) = &best.fuse {
+        println!(
+            "fusion: {} fused edges, {} cut edges (pattern {:#018x})",
+            f.n_fused, f.n_cut, f.pattern_fp
+        );
+    }
     if args.flag("--gantt") {
         println!("{}", stream::viz::gantt(&best.result, &w, &a, 100));
     }

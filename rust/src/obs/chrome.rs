@@ -282,11 +282,7 @@ pub fn validate_trace(text: &str) -> Result<TraceSummary, String> {
     // span must either start after every open span ended, or end
     // within the innermost still-open one
     for ((pid, tid), lane) in lanes.iter_mut() {
-        lane.sort_by(|a, b| {
-            a.0.partial_cmp(&b.0)
-                .unwrap()
-                .then(b.1.partial_cmp(&a.1).unwrap())
-        });
+        lane.sort_by(|a, b| a.0.total_cmp(&b.0).then(b.1.total_cmp(&a.1)));
         let mut open: Vec<f64> = Vec::new(); // end times, outermost first
         for &(ts, dur) in lane.iter() {
             while matches!(open.last(), Some(&end) if end <= ts + EPS) {

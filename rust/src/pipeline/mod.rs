@@ -16,15 +16,18 @@
 //! ).run().unwrap();
 //! ```
 
-use crate::allocator::{allocation_from_genome, Ga, GaParams, Objective};
+use crate::allocator::{
+    allocation_from_genome, FusionGa, Ga, GaParams, Objective, PatternCache,
+};
 use crate::arch::{Accelerator, CoreId};
-use crate::cn::{CnGranularity, CnSet};
+use crate::cn::{CnGranularity, CnSet, FusePattern};
+use crate::cost::ScheduleCache;
 use crate::depgraph::{generate, CnGraph};
 use crate::mapping::CostModel;
 use crate::scheduler::{ScheduleResult, Scheduler};
 use crate::workload::WorkloadGraph;
 
-pub use crate::allocator::GaResult;
+pub use crate::allocator::{FuseSearchOpts, FusionResult, GaResult};
 pub use crate::scheduler::SchedulePriority;
 
 /// Pipeline options.
@@ -40,6 +43,11 @@ pub struct StreamOpts {
     /// Fixed per-layer allocation: skips the GA when set (used by the
     /// validation experiments, which pin the measured mapping).
     pub allocation: Option<Vec<CoreId>>,
+    /// Fusion co-search: when set (and no fixed allocation is given),
+    /// [`Stream::run`] searches per-edge fuse/cut decisions jointly
+    /// with the core allocation ([`Stream::run_fuse_search`]) instead
+    /// of scheduling under the single fixed [`granularity`](Self::granularity).
+    pub fuse: Option<FuseSearchOpts>,
 }
 
 impl Default for StreamOpts {
@@ -50,6 +58,7 @@ impl Default for StreamOpts {
             objective: Objective::Edp,
             ga: GaParams::default(),
             allocation: None,
+            fuse: None,
         }
     }
 }
@@ -58,6 +67,11 @@ impl StreamOpts {
     /// Layer-by-layer baseline options (the Section V comparison point).
     pub fn layer_by_layer() -> StreamOpts {
         StreamOpts { granularity: CnGranularity::LayerByLayer, ..Default::default() }
+    }
+
+    /// Fusion co-search options with the default single-entry menu.
+    pub fn fuse_search() -> StreamOpts {
+        StreamOpts { fuse: Some(FuseSearchOpts::default()), ..Default::default() }
     }
 }
 
@@ -79,10 +93,24 @@ impl std::fmt::Display for StreamError {
 
 impl std::error::Error for StreamError {}
 
+/// The fuse pattern a co-search point was scheduled under.
+#[derive(Debug, Clone)]
+pub struct FuseChoice {
+    /// The decoded fuse genes (one per workload edge).
+    pub genes: Vec<u16>,
+    /// [`FusePattern::fingerprint`] of the decoded pattern.
+    pub pattern_fp: u64,
+    pub n_cut: usize,
+    pub n_fused: usize,
+}
+
 /// One fully-scheduled allocation in the result set.
 pub struct ScheduledPoint {
     pub allocation: Vec<CoreId>,
     pub result: ScheduleResult,
+    /// The fuse pattern this point was scheduled under (`None` on the
+    /// classic fixed-granularity path).
+    pub fuse: Option<FuseChoice>,
 }
 
 /// The pipeline output: the Pareto set of scheduled allocations.
@@ -97,12 +125,12 @@ pub struct StreamResult {
 impl StreamResult {
     /// The minimum-EDP point.
     pub fn best_edp(&self) -> Option<&ScheduledPoint> {
-        self.points.iter().min_by(|a, b| {
-            a.result
-                .edp()
-                .partial_cmp(&b.result.edp())
-                .unwrap_or(std::cmp::Ordering::Equal)
-        })
+        // total_cmp, not partial_cmp-or-Equal: a NaN objective (which
+        // would make min_by's comparator inconsistent and the winner
+        // arbitrary) sorts deterministically after every real value
+        self.points
+            .iter()
+            .min_by(|a, b| a.result.edp().total_cmp(&b.result.edp()))
     }
 
     /// The minimum-latency point.
@@ -112,12 +140,9 @@ impl StreamResult {
 
     /// The minimum-peak-memory point.
     pub fn best_memory(&self) -> Option<&ScheduledPoint> {
-        self.points.iter().min_by(|a, b| {
-            a.result
-                .peak_mem()
-                .partial_cmp(&b.result.peak_mem())
-                .unwrap_or(std::cmp::Ordering::Equal)
-        })
+        self.points
+            .iter()
+            .min_by(|a, b| a.result.peak_mem().total_cmp(&b.result.peak_mem()))
     }
 }
 
@@ -151,10 +176,16 @@ impl Stream {
         CostModel::build(&self.workload, &graph.cns, &self.arch)
     }
 
-    /// Run the full pipeline (Steps 1–5).
+    /// Run the full pipeline (Steps 1–5).  With
+    /// [`StreamOpts::fuse`] set (and no fixed allocation), Steps 1–2
+    /// become part of the search space: the run delegates to
+    /// [`Stream::run_fuse_search`].
     pub fn run(&self) -> Result<StreamResult, StreamError> {
         if self.workload.is_empty() {
             return Err(StreamError::EmptyWorkload);
+        }
+        if self.opts.fuse.is_some() && self.opts.allocation.is_none() {
+            return self.run_fuse_search();
         }
         let graph = self.build_graph();
         let costs = self.build_costs(&graph);
@@ -194,11 +225,132 @@ impl Stream {
             .into_iter()
             .map(|allocation| {
                 let result = scheduler.run(&allocation, self.opts.priority);
-                ScheduledPoint { allocation, result }
+                ScheduledPoint { allocation, result, fuse: None }
             })
             .collect();
 
         Ok(StreamResult { points, n_cns: graph.len(), n_edges: graph.edges.len() })
+    }
+
+    /// Co-search fuse/cut decisions and core allocation (the fusion
+    /// axis; see `docs/ARCHITECTURE.md`).
+    ///
+    /// Three phases over shared caches (one [`PatternCache`] of Step
+    /// 1–3 precomputations, one [`ScheduleCache`] of metrics keyed by
+    /// composed (topology, pattern) fingerprints):
+    ///
+    /// 1. **Regimes** — two pinned [`FusionGa`] runs reproduce the
+    ///    classic all-fuse and all-cut searches bit-for-bit (same
+    ///    genome shape, seeds and RNG stream as the plain GA);
+    /// 2. **Co-search** — a free run over `[core][fuse]` genomes,
+    ///    seeded with both regimes' front genomes (interleaved, best
+    ///    first) plus every heuristic prefix under both uniform
+    ///    suffixes.  Re-evaluating a regime winner is an exact cache
+    ///    hit, and the final front is computed over every genome the
+    ///    run saw — so the co-search front weakly dominates both
+    ///    regimes *by construction*;
+    /// 3. **Scheduling** — each front point is re-scheduled under its
+    ///    own pattern's context and reported with its [`FuseChoice`].
+    pub fn run_fuse_search(&self) -> Result<StreamResult, StreamError> {
+        if self.workload.is_empty() {
+            return Err(StreamError::EmptyWorkload);
+        }
+        let menu = self.opts.fuse.clone().unwrap_or_default().menu;
+        let patterns = PatternCache::new();
+        let cache = ScheduleCache::new();
+        let new_ga = || {
+            FusionGa::new(
+                &self.workload,
+                &self.arch,
+                self.opts.priority,
+                self.opts.objective,
+                self.opts.ga,
+                menu.clone(),
+                &patterns,
+                &cache,
+            )
+        };
+
+        // phase 1: the two classic regimes as pinned searches
+        let all_fuse = FusePattern::genes_all_fuse(&self.workload);
+        let all_cut = FusePattern::genes_all_cut(&self.workload);
+        let mut per_regime: Vec<Vec<Vec<u16>>> = Vec::new();
+        for suffix in [&all_fuse, &all_cut] {
+            let regime_front = new_ga().pinned(suffix.clone()).run();
+            per_regime.push(
+                regime_front
+                    .into_iter()
+                    .map(|r| {
+                        let mut g = r.core_genes;
+                        g.extend_from_slice(suffix);
+                        g
+                    })
+                    .collect(),
+            );
+        }
+        // interleave (best-EDP first per regime) so both regime bests
+        // survive any seed truncation to the population size
+        let mut regime_seeds = Vec::new();
+        let longest = per_regime.iter().map(|v| v.len()).max().unwrap_or(0);
+        for i in 0..longest {
+            for regime in &per_regime {
+                if let Some(g) = regime.get(i) {
+                    regime_seeds.push(g.clone());
+                }
+            }
+        }
+
+        // phase 2: the free co-search
+        let front = new_ga().with_extra_seeds(regime_seeds).run();
+
+        // phase 3: schedule each front point under its own pattern
+        let mut points = Vec::new();
+        let (mut n_cns, mut n_edges) = (0usize, 0usize);
+        let fallback: Vec<FusionResult>;
+        let front = if front.is_empty() {
+            // degenerate (no genes at all): the default allocation
+            // under the all-fuse pattern
+            let pattern =
+                FusePattern::decode(&self.workload, &self.arch, &menu, &all_fuse);
+            fallback = vec![FusionResult {
+                genome: Vec::new(),
+                core_genes: Vec::new(),
+                fuse_genes: all_fuse.clone(),
+                allocation: allocation_from_genome(&self.workload, &self.arch, &[]),
+                metrics: Default::default(),
+                pattern_fp: pattern.fingerprint(),
+                n_cut: pattern.n_cut(),
+                n_fused: pattern.n_fused(),
+            }];
+            &fallback
+        } else {
+            &front
+        };
+        for r in front {
+            let pattern =
+                FusePattern::decode(&self.workload, &self.arch, &menu, &r.fuse_genes);
+            let ctx = patterns.get_or_build(&self.workload, &self.arch, pattern);
+            if points.is_empty() {
+                // diagnostics reflect the best point's graph
+                n_cns = ctx.graph.len();
+                n_edges = ctx.graph.edges.len();
+            }
+            let scheduler =
+                Scheduler::new(&self.workload, &ctx.graph, &ctx.costs, &self.arch);
+            let result = scheduler.run(&r.allocation, self.opts.priority);
+            points.push(ScheduledPoint {
+                allocation: r.allocation.clone(),
+                result,
+                fuse: Some(FuseChoice {
+                    genes: r.fuse_genes.clone(),
+                    pattern_fp: r.pattern_fp,
+                    n_cut: r.n_cut,
+                    n_fused: r.n_fused,
+                }),
+            });
+        }
+
+        Ok(StreamResult { points, n_cns, n_edges })
     }
 }
 
@@ -268,5 +420,40 @@ mod tests {
         let fused = run(StreamOpts { ga: small_ga(), ..Default::default() });
         let lbl = run(StreamOpts { ga: small_ga(), ..StreamOpts::layer_by_layer() });
         assert!(fused < lbl, "fused {fused} vs lbl {lbl}");
+    }
+
+    #[test]
+    fn fuse_search_weakly_dominates_both_regimes() {
+        let run = |opts: StreamOpts| {
+            Stream::new(tiny_branchy(), presets::hetero_quad(), opts)
+                .run()
+                .unwrap()
+                .best_edp()
+                .unwrap()
+                .edp()
+        };
+        let co = run(StreamOpts { ga: small_ga(), ..StreamOpts::fuse_search() });
+        let fused = run(StreamOpts { ga: small_ga(), ..Default::default() });
+        let lbl = run(StreamOpts { ga: small_ga(), ..StreamOpts::layer_by_layer() });
+        // the regime winners are seeded into the co-search, so its
+        // best EDP can never be worse than either regime's
+        assert!(co <= fused.min(lbl), "co {co} vs fused {fused} / lbl {lbl}");
+    }
+
+    #[test]
+    fn fuse_search_points_carry_their_pattern() {
+        let s = Stream::new(
+            tiny_segment(),
+            presets::hetero_quad(),
+            StreamOpts { ga: small_ga(), ..StreamOpts::fuse_search() },
+        );
+        let r = s.run().unwrap();
+        assert!(!r.points.is_empty());
+        let n_edges = crate::cn::n_fuse_genes(&tiny_segment());
+        for p in &r.points {
+            let f = p.fuse.as_ref().expect("co-search points carry a FuseChoice");
+            assert_eq!(f.genes.len(), n_edges);
+            assert_eq!(f.n_cut + f.n_fused, n_edges);
+        }
     }
 }

@@ -111,7 +111,7 @@ impl<'a> ScenarioGa<'a> {
         results.sort_by(|a, b| {
             (a.misses, a.worst_p99_cc)
                 .cmp(&(b.misses, b.worst_p99_cc))
-                .then(a.energy_pj.partial_cmp(&b.energy_pj).unwrap_or(std::cmp::Ordering::Equal))
+                .then(a.energy_pj.total_cmp(&b.energy_pj))
         });
         results
     }

@@ -128,6 +128,38 @@ impl<'a> Scheduler<'a> {
                 if ccns.len() < 2 {
                     continue; // single-CN consumers (e.g. FC) gate nothing
                 }
+                // A materialized (cut) fuse boundary behaves like the
+                // MatMul B operand above: every consumer CN data-depends
+                // on the producer's LAST CN, so a gate from any producer
+                // CN back to a consumer CN would close a cycle — and
+                // backpressure is moot, the full tensor is spilled
+                // anyway.  Detect it from the graph: >=2 producer CNs
+                // whose data edges into this consumer all leave the last
+                // producer CN.
+                if pcns.len() >= 2 {
+                    let last = pcns.last().map(|c| c.id);
+                    let mut any_edge = false;
+                    let mut all_from_last = true;
+                    for pcn in pcns {
+                        for e in graph.succ_edges(pcn.id) {
+                            if e.kind != EdgeKind::Data
+                                || graph.cns.node(e.to).layer != cons_id
+                            {
+                                continue;
+                            }
+                            any_edge = true;
+                            if Some(pcn.id) != last {
+                                all_from_last = false;
+                            }
+                        }
+                        if !all_from_last {
+                            break;
+                        }
+                    }
+                    if any_edge && all_from_last {
+                        continue;
+                    }
+                }
                 for pcn in pcns {
                     let gate_row = pcn.out_rect.lo[1] - buf_rows;
                     if gate_row <= 0 {

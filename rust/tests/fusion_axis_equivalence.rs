@@ -1,0 +1,359 @@
+//! Equivalence net for the fusion-axis co-search (fuse/cut decisions
+//! as genome genes, searched jointly with the core allocation):
+//!
+//! 1. **Regime graph identity** — the all-fuse pattern must rebuild the
+//!    uniform `Lines(k)` CN graph and the all-cut pattern the
+//!    `LayerByLayer` graph, edge for edge, and schedules run on them
+//!    must be bit-identical to the classic pipeline's.
+//! 2. **Pinned search identity** — a [`FusionGa`] pinned to a uniform
+//!    regime must reproduce the plain [`Ga`]'s Pareto front genome for
+//!    genome and metric bit for metric bit (same genome shape, seeds
+//!    and RNG stream), across models, architectures and priorities.
+//! 3. **Cache-key separation** — identical allocations evaluated under
+//!    different fuse patterns must never alias a [`ScheduleCache`] or
+//!    [`DeltaCache`] slot once the pattern fingerprint is composed into
+//!    the key ([`compose_fp`]).
+//! 4. **Determinism** — the full three-phase co-search
+//!    ([`Stream::run_fuse_search`]) is a pure function of its seed.
+//! 5. **Dominance** — the co-search front weakly dominates both
+//!    uniform regimes by construction (regime winners are re-seeded
+//!    into the free search and re-evaluated as exact cache hits).
+
+use stream::allocator::{allocation_from_genome, Ga, GaParams, Objective};
+use stream::arch::{presets, Accelerator};
+use stream::cn::{
+    n_fuse_genes, CnGranularity, CnSet, FusePattern,
+};
+use stream::cost::{compose_fp, DeltaCache, ScheduleCache, ScheduleMetrics};
+use stream::depgraph::{edge_set, generate, generate_fused};
+use stream::mapping::CostModel;
+use stream::pipeline::{Stream, StreamOpts};
+use stream::scheduler::{SchedulePriority, Scheduler};
+use stream::workload::{models, WorkloadGraph};
+
+use stream::allocator::{FusionGa, PatternCache};
+
+const MODELS: [&str; 2] = ["tiny-segment", "tiny-branchy"];
+const ARCHS: [&str; 3] = ["test-dual", "hetero", "hetero_quad@mesh"];
+const PRIOS: [SchedulePriority; 2] = [SchedulePriority::Latency, SchedulePriority::Memory];
+
+fn assert_metrics_identical(what: &str, a: &ScheduleMetrics, b: &ScheduleMetrics) {
+    assert_eq!(a.latency_cc, b.latency_cc, "{what}: latency");
+    assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits(), "{what}: energy");
+    assert_eq!(a.peak_mem_bytes.to_bits(), b.peak_mem_bytes.to_bits(), "{what}: peak mem");
+    assert_eq!(a.avg_core_util.to_bits(), b.avg_core_util.to_bits(), "{what}: util");
+}
+
+/// The classic Steps 1–3 under one uniform granularity.
+fn classic_graph(
+    w: &WorkloadGraph,
+    arch: &Accelerator,
+    gran: CnGranularity,
+) -> (stream::depgraph::CnGraph, CostModel) {
+    let gran = gran.for_arch(arch);
+    let cns = CnSet::build(w, gran);
+    let costs = CostModel::build(w, &cns, arch);
+    let graph = generate(w, CnSet::build(w, gran));
+    (graph, costs)
+}
+
+/// Steps 1–3 via the fuse-pattern decoder for the same regime.
+fn pattern_graph(
+    w: &WorkloadGraph,
+    arch: &Accelerator,
+    genes: &[u16],
+) -> (stream::depgraph::CnGraph, CostModel) {
+    let pattern = FusePattern::decode(w, arch, &[4], genes);
+    let cns = pattern.build_cns(w);
+    let graph = generate_fused(w, cns, &pattern);
+    let costs = CostModel::build(w, &graph.cns, arch);
+    (graph, costs)
+}
+
+/// A deterministic non-trivial allocation: dense layers ping-pong over
+/// the dense cores, the rest defaulted by `allocation_from_genome`.
+fn ping_pong(w: &WorkloadGraph, arch: &Accelerator) -> Vec<stream::arch::CoreId> {
+    let k = arch.dense_cores().len();
+    let genome: Vec<u16> =
+        (0..w.dense_layers().len()).map(|i| (i % k) as u16).collect();
+    allocation_from_genome(w, arch, &genome)
+}
+
+/// 1a. All-fuse regime: the decoded pattern rebuilds the uniform
+/// `Lines(4)` graph edge for edge, and a schedule on it is bit-identical.
+#[test]
+fn all_fuse_pattern_rebuilds_the_uniform_fused_graph() {
+    for model in MODELS {
+        for arch_name in ARCHS {
+            let w = models::by_name(model).unwrap();
+            let arch = presets::by_name(arch_name).unwrap();
+            let what = format!("{model} on {arch_name}");
+
+            let (cg, cc) = classic_graph(&w, &arch, CnGranularity::Lines(4));
+            let (pg, pc) = pattern_graph(&w, &arch, &FusePattern::genes_all_fuse(&w));
+
+            assert_eq!(cg.len(), pg.len(), "{what}: CN count");
+            assert_eq!(edge_set(&cg), edge_set(&pg), "{what}: edge multiset");
+
+            let alloc = ping_pong(&w, &arch);
+            let cs = Scheduler::new(&w, &cg, &cc, &arch);
+            let ps = Scheduler::new(&w, &pg, &pc, &arch);
+            for priority in PRIOS {
+                assert_metrics_identical(
+                    &format!("{what} {priority:?}"),
+                    &cs.run(&alloc, priority).metrics,
+                    &ps.run(&alloc, priority).metrics,
+                );
+            }
+        }
+    }
+}
+
+/// 1b. All-cut regime: the decoded pattern rebuilds the `LayerByLayer`
+/// graph and schedules bit-identically.
+#[test]
+fn all_cut_pattern_rebuilds_the_layer_by_layer_graph() {
+    for model in MODELS {
+        for arch_name in ARCHS {
+            let w = models::by_name(model).unwrap();
+            let arch = presets::by_name(arch_name).unwrap();
+            let what = format!("{model} on {arch_name}");
+
+            let (cg, cc) = classic_graph(&w, &arch, CnGranularity::LayerByLayer);
+            let (pg, pc) = pattern_graph(&w, &arch, &FusePattern::genes_all_cut(&w));
+
+            assert_eq!(cg.len(), pg.len(), "{what}: CN count");
+            assert_eq!(pg.len(), w.len(), "{what}: one CN per layer");
+            assert_eq!(edge_set(&cg), edge_set(&pg), "{what}: edge multiset");
+
+            let alloc = ping_pong(&w, &arch);
+            let cs = Scheduler::new(&w, &cg, &cc, &arch);
+            let ps = Scheduler::new(&w, &pg, &pc, &arch);
+            for priority in PRIOS {
+                assert_metrics_identical(
+                    &format!("{what} {priority:?}"),
+                    &cs.run(&alloc, priority).metrics,
+                    &ps.run(&alloc, priority).metrics,
+                );
+            }
+        }
+    }
+}
+
+/// 2. A pinned-regime [`FusionGa`] is the plain [`Ga`] in disguise:
+/// same genome shape, same seed heuristics, same RNG stream — the
+/// final fronts must agree genome for genome with bit-identical
+/// metrics.  This is what lets `run_fuse_search`'s phase 1 stand in
+/// for the classic searches.
+#[test]
+fn pinned_fusion_ga_matches_the_plain_ga_bit_for_bit() {
+    let params = GaParams { population: 10, generations: 5, seed: 0xF5E, ..Default::default() };
+    for model in MODELS {
+        for arch_name in ["hetero", "hetero_quad@mesh"] {
+            for priority in PRIOS {
+                for (gran, genes) in [
+                    (CnGranularity::Lines(4), FusePattern::genes_all_fuse(&models::by_name(model).unwrap())),
+                    (CnGranularity::LayerByLayer, FusePattern::genes_all_cut(&models::by_name(model).unwrap())),
+                ] {
+                    let w = models::by_name(model).unwrap();
+                    let arch = presets::by_name(arch_name).unwrap();
+                    let what =
+                        format!("{model} on {arch_name}, {priority:?}, {gran:?}");
+
+                    let (graph, costs) = classic_graph(&w, &arch, gran);
+                    let sched = Scheduler::new(&w, &graph, &costs, &arch);
+                    let mut ga =
+                        Ga::new(&w, &arch, &sched, priority, Objective::Edp, params);
+                    let classic = ga.run();
+
+                    let patterns = PatternCache::new();
+                    let cache = ScheduleCache::new();
+                    let mut fga = FusionGa::new(
+                        &w,
+                        &arch,
+                        priority,
+                        Objective::Edp,
+                        params,
+                        vec![4],
+                        &patterns,
+                        &cache,
+                    )
+                    .pinned(genes);
+                    let pinned = fga.run();
+
+                    assert_eq!(classic.len(), pinned.len(), "{what}: front size");
+                    for (c, p) in classic.iter().zip(&pinned) {
+                        assert_eq!(c.genome, p.genome, "{what}: front genome");
+                        assert_eq!(c.allocation, p.allocation, "{what}: allocation");
+                        assert_metrics_identical(&what, &c.metrics, &p.metrics);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// 3a. [`ScheduleCache`]: identical allocations under different fuse
+/// patterns resolve to different composed keys and never alias.
+#[test]
+fn schedule_cache_separates_fuse_patterns() {
+    let w = models::by_name("tiny-branchy").unwrap();
+    let arch = presets::hetero_quad();
+    let topo_fp = arch.topology.fingerprint();
+    let fp_of = |genes: &[u16]| {
+        compose_fp(topo_fp, FusePattern::decode(&w, &arch, &[4], genes).fingerprint())
+    };
+    let fused_fp = fp_of(&FusePattern::genes_all_fuse(&w));
+    let cut_fp = fp_of(&FusePattern::genes_all_cut(&w));
+    assert_ne!(fused_fp, cut_fp, "composed keys must differ across patterns");
+    assert_ne!(fused_fp, topo_fp, "composition must not collapse to the topology key");
+
+    let alloc = ping_pong(&w, &arch);
+    let (fg, fc) = pattern_graph(&w, &arch, &FusePattern::genes_all_fuse(&w));
+    let (lg, lc) = pattern_graph(&w, &arch, &FusePattern::genes_all_cut(&w));
+    let m_fused =
+        Scheduler::new(&w, &fg, &fc, &arch).run(&alloc, SchedulePriority::Latency).metrics;
+    let m_cut =
+        Scheduler::new(&w, &lg, &lc, &arch).run(&alloc, SchedulePriority::Latency).metrics;
+    assert_ne!(
+        m_fused.latency_cc, m_cut.latency_cc,
+        "regimes must actually produce different schedules here"
+    );
+
+    let cache = ScheduleCache::new();
+    cache.insert(&alloc, SchedulePriority::Latency, fused_fp, m_fused);
+    cache.insert(&alloc, SchedulePriority::Latency, cut_fp, m_cut);
+    let back_fused = cache.get(&alloc, SchedulePriority::Latency, fused_fp).unwrap();
+    let back_cut = cache.get(&alloc, SchedulePriority::Latency, cut_fp).unwrap();
+    assert_metrics_identical("fused slot", &back_fused, &m_fused);
+    assert_metrics_identical("cut slot", &back_cut, &m_cut);
+}
+
+/// 3b. [`DeltaCache`]: a parent schedule recorded under one pattern is
+/// invisible under another pattern's composed key, so delta resumes can
+/// never replay a different CN graph's segments.
+#[test]
+fn delta_cache_separates_fuse_patterns() {
+    let w = models::by_name("tiny-segment").unwrap();
+    let arch = presets::hetero_quad();
+    let topo_fp = arch.topology.fingerprint();
+    let fused_fp = compose_fp(
+        topo_fp,
+        FusePattern::decode(&w, &arch, &[4], &FusePattern::genes_all_fuse(&w)).fingerprint(),
+    );
+    let cut_fp = compose_fp(
+        topo_fp,
+        FusePattern::decode(&w, &arch, &[4], &FusePattern::genes_all_cut(&w)).fingerprint(),
+    );
+
+    let alloc = ping_pong(&w, &arch);
+    let (fg, fc) = pattern_graph(&w, &arch, &FusePattern::genes_all_fuse(&w));
+    let sched = Scheduler::new(&w, &fg, &fc, &arch);
+    let (res, segs) =
+        sched.run_traced(&alloc, SchedulePriority::Latency, sched.snap_interval());
+
+    let dc = DeltaCache::new(8);
+    dc.insert(&alloc, SchedulePriority::Latency, fused_fp, res.metrics, segs);
+    assert!(
+        dc.get(&alloc, SchedulePriority::Latency, fused_fp).is_some(),
+        "same pattern must hit"
+    );
+    assert!(
+        dc.get(&alloc, SchedulePriority::Latency, cut_fp).is_none(),
+        "a different pattern's key must miss: resuming its segments would \
+         replay the wrong CN graph"
+    );
+}
+
+/// 4. The full co-search pipeline is deterministic: identical options
+/// produce identical points — fuse genes, allocations and metric bits.
+#[test]
+fn fuse_search_pipeline_is_deterministic() {
+    let run = || {
+        let r = Stream::new(
+            models::by_name("tiny-branchy").unwrap(),
+            presets::hetero_quad(),
+            StreamOpts {
+                ga: GaParams { population: 8, generations: 4, ..Default::default() },
+                ..StreamOpts::fuse_search()
+            },
+        )
+        .run()
+        .unwrap();
+        r.points
+            .iter()
+            .map(|p| {
+                let f = p.fuse.as_ref().unwrap();
+                (
+                    f.genes.clone(),
+                    f.pattern_fp,
+                    p.allocation.clone(),
+                    p.result.metrics.latency_cc,
+                    p.result.metrics.energy_pj.to_bits(),
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+    let a = run();
+    assert!(!a.is_empty());
+    assert_eq!(a, run());
+}
+
+/// 5. Weak dominance by construction: both regime winners are seeded
+/// into the free co-search and re-evaluated as exact cache hits, so the
+/// co-search's best EDP can never be worse than either uniform regime's
+/// — across models and architectures.
+#[test]
+fn fuse_search_weakly_dominates_both_regimes() {
+    for (model, arch_name) in [("tiny-branchy", "hetero_quad"), ("tiny-segment", "hetero")] {
+        let ga = GaParams { population: 8, generations: 4, ..Default::default() };
+        let run = |opts: StreamOpts| {
+            Stream::new(
+                models::by_name(model).unwrap(),
+                presets::by_name(arch_name).unwrap(),
+                StreamOpts { ga, ..opts },
+            )
+            .run()
+            .unwrap()
+            .best_edp()
+            .unwrap()
+            .edp()
+        };
+        let co = run(StreamOpts::fuse_search());
+        let fused = run(StreamOpts::default());
+        let lbl = run(StreamOpts::layer_by_layer());
+        assert!(
+            co <= fused.min(lbl),
+            "{model} on {arch_name}: co {co} vs fused {fused} / lbl {lbl}"
+        );
+    }
+}
+
+/// The transformer anchor: the co-search handles attention workloads
+/// (MatMul operand-B edges, layernorm/softmax SIMD layers) end to end,
+/// and still weakly dominates the uniform fused regime.
+#[test]
+fn fuse_search_handles_transformers() {
+    let w = models::vit_tiny();
+    let arch = presets::hetero_quad();
+    let ga = GaParams { population: 6, generations: 2, ..Default::default() };
+    let run = |opts: StreamOpts| {
+        Stream::new(w.clone(), arch.clone(), StreamOpts { ga, ..opts }).run().unwrap()
+    };
+    let co = run(StreamOpts::fuse_search());
+    assert!(!co.points.is_empty());
+    let n_edges = n_fuse_genes(&w);
+    for p in &co.points {
+        let f = p.fuse.as_ref().expect("co-search points carry a FuseChoice");
+        assert_eq!(f.genes.len(), n_edges);
+        assert_eq!(f.n_cut + f.n_fused, n_edges);
+        assert!(p.result.metrics.latency_cc > 0);
+    }
+    let fused = run(StreamOpts::default());
+    let co_best = co.best_edp().unwrap().edp();
+    let fused_best = fused.best_edp().unwrap().edp();
+    assert!(
+        co_best <= fused_best,
+        "vit-tiny: co {co_best} vs uniform fused {fused_best}"
+    );
+}

@@ -319,6 +319,76 @@ fn prop_matmul_cn_split_preserves_macs() {
     }
 }
 
+/// Every OpType's CN split preserves the layer's MACs, output bytes
+/// and discard-input bytes exactly, at every granularity — including
+/// granularities that do not divide OY, where the exact apportionment
+/// (`macs_before(hi) - macs_before(lo)`) distributes the remainder
+/// instead of rounding it away.
+#[test]
+fn prop_cn_split_preserves_macs_every_op() {
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(7500 + seed);
+        let k = 1 + rng.below(64) as usize;
+        let oy = 1 + rng.below(96) as usize;
+        let ox = 1 + rng.below(32) as usize;
+        let c = 1 + rng.below(64) as usize;
+        let layers: Vec<stream::workload::Layer> = vec![
+            LayerBuilder::new("conv", OpType::Conv)
+                .k(k)
+                .c(c)
+                .spatial(oy, ox)
+                .filter(3, 3)
+                .pad(1)
+                .build(),
+            LayerBuilder::new("dw", OpType::DwConv)
+                .k(c)
+                .c(c)
+                .spatial(oy, ox)
+                .filter(3, 3)
+                .pad(1)
+                .build(),
+            LayerBuilder::new("fc", OpType::Fc).k(k).c(c).spatial(1, 1).build(),
+            LayerBuilder::new("mm", OpType::MatMul).k(k).c(c).spatial(oy, 1).build(),
+            LayerBuilder::new("maxpool", OpType::Pool(PoolKind::Max))
+                .k(c)
+                .c(c)
+                .spatial(oy, ox)
+                .filter(2, 2)
+                .stride(2)
+                .build(),
+            LayerBuilder::new("avgpool", OpType::Pool(PoolKind::Average))
+                .k(c)
+                .c(c)
+                .spatial(oy, ox)
+                .filter(2, 2)
+                .stride(2)
+                .build(),
+            LayerBuilder::new("add", OpType::Add).k(c).c(c).spatial(oy, ox).build(),
+            LayerBuilder::new("concat", OpType::Concat).k(2 * c).c(2 * c).spatial(oy, ox).build(),
+            LayerBuilder::new("ln", OpType::LayerNorm).k(k).c(k).spatial(oy, 1).build(),
+            LayerBuilder::new("sm", OpType::Softmax).k(k).c(k).spatial(oy, 1).build(),
+            LayerBuilder::new("gelu", OpType::Gelu).k(k).c(k).spatial(oy, 1).build(),
+        ];
+        for mut l in layers {
+            l.id = LayerId(0);
+            for gran in [
+                CnGranularity::LayerByLayer,
+                CnGranularity::Lines(1),
+                CnGranularity::Lines(2 + rng.below(7) as usize), // often not | OY
+            ] {
+                let cns = stream::cn::split_layer(&l, gran);
+                assert!(!cns.is_empty(), "seed {seed} {} {gran:?}", l.name);
+                let macs: u64 = cns.iter().map(|cn| cn.macs).sum();
+                assert_eq!(macs, l.macs(), "seed {seed} {} {gran:?}: MACs", l.name);
+                let outs: u64 = cns.iter().map(|cn| cn.final_output_bytes).sum();
+                assert_eq!(outs, l.output_bytes(), "seed {seed} {} {gran:?}: out", l.name);
+                let disc: u64 = cns.iter().map(|cn| cn.discard_input_bytes).sum();
+                assert_eq!(disc, l.input_bytes(), "seed {seed} {} {gran:?}: disc", l.name);
+            }
+        }
+    }
+}
+
 /// The R-tree dependency generator must agree with the pairwise oracle
 /// on transformer graphs too — in particular on the MatMul-B
 /// full-broadcast arm.
